@@ -1,0 +1,19 @@
+//! `cargo bench --bench fig3_cls_options` — regenerates Figure 3:
+//! star-stencil coefficient-line options (parallel/orthogonal/hybrid)
+//! across orders, panels (a)–(d). Reports simulated cycles/point
+//! (deterministic) plus host wall-clock for the simulation itself.
+
+use stencil_matrix::bench_harness::fig3;
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::bench::{fmt_secs, time_it};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let (best, _) = time_it(1, || {
+        for r in fig3::run_all(&cfg).expect("fig3") {
+            r.emit().expect("emit");
+        }
+    });
+    eprintln!("fig3 harness wall-clock: {}", fmt_secs(best));
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig4_unroll_sched` — regenerates Figure 4:
+//! naive vs +unroll vs +unroll+scheduling for every stencil, panels
+//! (a)–(d).
+
+use stencil_matrix::bench_harness::fig4;
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::bench::{fmt_secs, time_it};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let (best, _) = time_it(1, || {
+        for r in fig4::run_all(&cfg).expect("fig4") {
+            r.emit().expect("emit");
+        }
+    });
+    eprintln!("fig4 harness wall-clock: {}", fmt_secs(best));
+    Ok(())
+}

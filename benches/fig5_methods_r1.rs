@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig5_methods_r1` — regenerates Figure 5:
+//! autovec / DLT / TV / ours for r = 1 stencils across four sizes each.
+
+use stencil_matrix::bench_harness::fig5;
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::bench::{fmt_secs, time_it};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let (best, _) = time_it(1, || {
+        for r in fig5::run_all(&cfg).expect("fig5") {
+            r.emit().expect("emit");
+        }
+    });
+    eprintln!("fig5 harness wall-clock: {}", fmt_secs(best));
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! `cargo bench --bench simulator_hotpath` — the §Perf L3 profile: how
+//! fast the simulator itself executes instructions (host side), plus the
+//! per-method simulated-instruction throughput on a large workload. This
+//! is the bench the EXPERIMENTS.md §Perf before/after numbers come from.
+
+use stencil_matrix::codegen::{run_method, Method, OuterParams};
+use stencil_matrix::stencil::StencilSpec;
+use stencil_matrix::sim::{Instr, Machine, SimConfig, VReg};
+use stencil_matrix::util::bench::{fmt_secs, time_it};
+
+fn raw_exec_throughput() {
+    // microbenchmark: a tight ld/fma/st loop through the full machine
+    // (functional + timing + cache), ~1M instructions per pass
+    let cfg = SimConfig::default();
+    let mut m = Machine::new(cfg);
+    let a = m.alloc(8 * 1024);
+    let total = 1_000_000usize;
+    let (best, _) = time_it(3, || {
+        for i in 0..total / 3 {
+            let addr = a + (i * 8) % (8 * 1024 - 8);
+            m.exec(&Instr::LdVec { dst: VReg((i % 8) as u8), addr });
+            m.exec(&Instr::VFma {
+                acc: VReg(8 + (i % 8) as u8),
+                a: VReg((i % 8) as u8),
+                b: VReg(16),
+            });
+            m.exec(&Instr::StVec { src: VReg(8 + (i % 8) as u8), addr });
+        }
+        m.finish();
+    });
+    println!(
+        "raw machine exec: {:.1} M simulated instrs/s ({} per pass)",
+        total as f64 / best / 1e6,
+        fmt_secs(best)
+    );
+}
+
+fn end_to_end(label: &str, spec: StencilSpec, n: usize, method: Method) {
+    let cfg = SimConfig::default();
+    let mut instrs = 0u64;
+    let (best, _) = time_it(2, || {
+        let res = run_method(&cfg, spec, n, method, true).expect("run");
+        assert!(res.verified());
+        instrs = res.stats.instructions;
+    });
+    println!(
+        "{label:24} {spec} N={n}: {} ({:.1} M simulated instrs/s incl. generation+verify)",
+        fmt_secs(best),
+        // two generation passes (warm + measured) per timed run
+        2.0 * instrs as f64 / best / 1e6
+    );
+}
+
+fn main() {
+    raw_exec_throughput();
+    let box2d = StencilSpec::box2d(1);
+    end_to_end("outer (paper best)", box2d, 512, Method::Outer(OuterParams::paper_best(box2d)));
+    end_to_end("autovec", box2d, 512, Method::AutoVec);
+    let box3d = StencilSpec::box3d(1);
+    end_to_end("outer 3D", box3d, 64, Method::Outer(OuterParams::paper_best(box3d)));
+    end_to_end("tv 2D", box2d, 512, Method::Tv);
+}

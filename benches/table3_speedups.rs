@@ -1,0 +1,21 @@
+//! `cargo bench --bench table3_speedups` — regenerates Table 3: speedups
+//! over auto-vectorization for the full 2D/3D stencil × size matrix, with
+//! the best option label per cell, plus the extra ablations.
+
+use stencil_matrix::bench_harness::{ablation, table3};
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::bench::{fmt_secs, time_it};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+    let (best, _) = time_it(1, || {
+        for r in table3::run_all(&cfg).expect("table3") {
+            r.emit().expect("emit");
+        }
+        for r in ablation::run_all(&cfg).expect("ablation") {
+            r.emit().expect("emit");
+        }
+    });
+    eprintln!("table3 + ablations wall-clock: {}", fmt_secs(best));
+    Ok(())
+}

@@ -1,0 +1,36 @@
+use stencil_matrix::codegen::*;
+use stencil_matrix::codegen::common::OuterParams;
+use stencil_matrix::stencil::*;
+use stencil_matrix::sim::*;
+
+fn main() {
+    let cfg = SimConfig::default();
+    let cases = [
+        (StencilSpec::box2d(1), 64usize, 2.92),
+        (StencilSpec::box2d(2), 64, 4.58),
+        (StencilSpec::box2d(3), 64, 4.71),
+        (StencilSpec::star2d(1), 64, 1.59),
+        (StencilSpec::star2d(2), 64, 1.48),
+        (StencilSpec::box2d(1), 512, 1.17),
+        (StencilSpec::box2d(2), 512, 2.17),
+        (StencilSpec::star2d(2), 512, 1.19),
+        (StencilSpec::box3d(1), 16, 3.85),
+        (StencilSpec::box3d(2), 16, 3.44),
+        (StencilSpec::star3d(1), 16, 1.64),
+        (StencilSpec::star3d(2), 16, 3.37),
+    ];
+    for (spec, n, paper) in cases {
+        let base = run_method(&cfg, spec, n, Method::AutoVec, true).unwrap();
+        let p = OuterParams::paper_best(spec);
+        let ours = run_method(&cfg, spec, n, Method::Outer(p), true).unwrap();
+        let d = run_method(&cfg, spec, n, Method::Dlt, true).unwrap();
+        let t = run_method(&cfg, spec, n, Method::Tv, true).unwrap();
+        assert!(base.verified() && ours.verified() && d.verified() && t.verified());
+        println!("{:16} N={:4}  ours {:.2}x (paper {:.2})  dlt {:.2}x  tv {:.2}x  [cpp base {:.2} ours {:.2}]",
+            spec.name(), n,
+            verify::speedup(&base, &ours), paper,
+            verify::speedup(&base, &d),
+            verify::speedup(&base, &t),
+            base.cycles_per_point(), ours.cycles_per_point());
+    }
+}

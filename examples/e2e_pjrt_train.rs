@@ -1,0 +1,99 @@
+//! End-to-end driver (DESIGN.md §Per-experiment index, EXPERIMENTS.md
+//! §E2E): proves all layers compose on a real workload.
+//!
+//! Pipeline: JAX/Pallas (L1 kernel) → lax.scan evolution (L2) → AOT HLO
+//! text (`make artifacts`) → Rust PJRT runtime (L3) → batched evolution
+//! service. Python is *not* running during this program.
+//!
+//! Workload: 256×256 heat diffusion (2D5P), 100 executions of the 4-step
+//! scan artifact = 400 time steps (26 M point-updates). Reports
+//! throughput, a convergence curve (the "loss curve" of a PDE solver:
+//! interior energy settling toward the frozen-boundary equilibrium), and
+//! verifies the final field against the scalar oracle.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pjrt_train
+//! ```
+
+use stencil_matrix::coordinator::EvolutionService;
+use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid};
+use std::path::Path;
+use std::time::Instant;
+
+fn energy(g: &DenseGrid, halo: usize) -> f64 {
+    // mean squared field over the interior
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    let mut idx = vec![0usize; g.shape.len()];
+    for lin in 0..g.len() {
+        g.unravel(lin, &mut idx);
+        if idx.iter().zip(&g.shape).all(|(&i, &n)| i >= halo && i + halo < n) {
+            sum += g.data[lin] * g.data[lin];
+            count += 1;
+        }
+    }
+    sum / count as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifact = "evolve_2d5p_n256_t4";
+    let executions = 100usize;
+
+    let mut svc = EvolutionService::new(Path::new("artifacts"))?;
+    println!("platform : {}", svc.platform());
+    println!("artifacts: {:?}", svc.artifacts());
+    let engine = svc.engine(artifact)?;
+    let meta = engine.meta().clone();
+    println!(
+        "artifact : {} — {} N={} ({} steps per execution)\n",
+        meta.name, meta.spec, meta.n, meta.steps
+    );
+
+    // initial condition: hot blob + noise
+    let ext = meta.storage_extent;
+    let mut grid = DenseGrid::verification_input(&[ext, ext], 2026);
+    for i in ext / 3..2 * ext / 3 {
+        for j in ext / 3..2 * ext / 3 {
+            *grid.at_mut(&mut [i, j]) += 50.0;
+        }
+    }
+
+    // evolution with a convergence curve every 10 executions
+    let t0 = Instant::now();
+    let mut cur = grid.clone();
+    let mut curve = Vec::new();
+    for chunk in 0..executions / 10 {
+        let (next, _) = engine.evolve(&cur, 10, false)?;
+        cur = next;
+        let e = energy(&cur, meta.spec.order);
+        curve.push(e);
+        println!(
+            "  after {:>4} steps: interior energy {:>12.4}",
+            (chunk + 1) * 10 * meta.steps,
+            e
+        );
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let steps = executions * meta.steps;
+    let updates = (meta.n * meta.n) as f64 * steps as f64;
+    println!(
+        "\nthroughput: {steps} steps over {}² in {secs:.2}s = {:.2} Mpoint-updates/s",
+        meta.n,
+        updates / secs / 1e6
+    );
+
+    // energy must decay monotonically toward equilibrium (diffusion)
+    for w in curve.windows(2) {
+        anyhow::ensure!(w[1] <= w[0] * (1.0 + 1e-9), "energy increased: {w:?}");
+    }
+
+    // verify the full 400-step evolution against the scalar oracle
+    print!("verifying against the scalar oracle ({steps} reference steps)... ");
+    let coeffs = CoeffTensor::paper_default(meta.spec);
+    let want = reference::evolve(&coeffs, &grid, steps);
+    let err = cur.max_abs_diff_interior(&want, meta.spec.order);
+    println!("max err {err:.2e}");
+    anyhow::ensure!(err < 1e-8, "PJRT evolution diverged from the oracle");
+    println!("e2e OK: JAX/Pallas → HLO text → Rust PJRT → verified.");
+    Ok(())
+}

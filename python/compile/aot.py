@@ -1,0 +1,95 @@
+"""AOT lowering: JAX → HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (not ``MLIR``/serialized proto) is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.ref import Spec  # noqa: E402
+from .model import make_evolve_fn, make_step_fn  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jitted+lowered function to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# (name, spec, N, steps): steps == 1 emits the single-step function,
+# steps > 1 the lax.scan evolution.
+VARIANTS = [
+    ("step_2d5p_n64", Spec(2, 1, "star"), 64, 1),
+    ("step_2d9p_n64", Spec(2, 1, "box"), 64, 1),
+    ("step_3d7p_n16", Spec(3, 1, "star"), 16, 1),
+    ("evolve_2d5p_n64_t8", Spec(2, 1, "star"), 64, 8),
+    ("evolve_2d5p_n256_t4", Spec(2, 1, "star"), 256, 4),
+]
+
+
+def lower_variant(name: str, spec: Spec, n: int, steps: int) -> tuple[str, dict]:
+    ext = n + 2 * spec.order
+    shape = (ext,) * spec.dims
+    arg = jax.ShapeDtypeStruct(shape, jnp.float64)
+    fn = (
+        make_step_fn(spec, bn=min(128, n))
+        if steps == 1
+        else make_evolve_fn(spec, steps, bn=min(128, n))
+    )
+    lowered = jax.jit(fn).lower(arg)
+    text = to_hlo_text(lowered)
+    meta = {
+        "name": name,
+        "spec": {"dims": spec.dims, "order": spec.order, "kind": spec.kind},
+        "n": n,
+        "storage_extent": ext,
+        "steps": steps,
+        "dtype": "f64",
+        "file": f"{name}.hlo.txt",
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single variant by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, spec, n, steps in VARIANTS:
+        if args.only and name != args.only:
+            continue
+        text, meta = lower_variant(name, spec, n, steps)
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} ({len(manifest)} variants)")
+
+
+if __name__ == "__main__":
+    main()

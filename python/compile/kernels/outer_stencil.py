@@ -1,0 +1,170 @@
+"""Layer 1 — the paper's outer-product stencil as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets an
+SME-like vector outer-product unit with explicit 8×8 matrix accumulators.
+On TPU/Pallas the analogue is a VMEM accumulator tile updated by rank-1
+products:
+
+- the matrix-register tile      →  a ``(bm, bn)`` accumulator held in
+  registers/VMEM for the whole inner loop of one grid step;
+- ``FMOPA cv ⊗ av``             →  ``acc += cv[:, None] * av[None, :]``,
+  which Mosaic maps onto the VPU/MXU;
+- SME's EXT-based input-vector assembly →  static slices of the halo'ed
+  input block (free at trace time: the shifted vectors of Eq. (12) are
+  just different slices of the same VMEM-resident rows);
+- multi-dimensional unrolling   →  the Pallas grid + block shape.
+
+The kernel is expanded from the same coefficient-line machinery as the
+Rust generator: a *parallel* cover (lines along the first non-unit-stride
+dimension), one shifted coefficient vector per input position (Eq. (12)),
+with statically-zero coefficient vectors skipped at trace time (what makes
+star/diagonal shapes cheaper than box, §3.3).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO that any backend — and in
+particular the Rust PJRT runtime — executes with identical numerics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import Spec
+
+
+def parallel_cover_lines(spec: Spec, coeffs: np.ndarray):
+    """The parallel coefficient-line cover (§4.1, Table 1/2 row 1).
+
+    Returns a list of ``(fixed_offsets, weights)`` where ``weights`` is the
+    gather-orientation line (length ``2r+1``) and ``fixed_offsets`` the
+    offsets in the non-line dimensions. Lines: 2D along dim 0, 3D along
+    dim 1 — the choices with contiguous input vectors.
+    """
+    r = spec.order
+    side = spec.side
+    c = coeffs.reshape((side,) * spec.dims)
+    lines = []
+    if spec.dims == 2:
+        for oj in range(-r, r + 1):
+            w = c[:, oj + r]
+            if np.any(w != 0.0):
+                lines.append(((oj,), np.asarray(w, dtype=np.float64)))
+    else:
+        for oi in range(-r, r + 1):
+            for ok in range(-r, r + 1):
+                w = c[oi + r, :, ok + r]
+                if np.any(w != 0.0):
+                    lines.append(((oi, ok), np.asarray(w, dtype=np.float64)))
+    return lines
+
+
+def coeff_vector(weights: np.ndarray, p: int, bm: int) -> np.ndarray:
+    """Eq. (12): ``cv[k] = w[(p - k) + r]`` when ``|p - k| <= r`` else 0."""
+    r = (len(weights) - 1) // 2
+    cv = np.zeros(bm, dtype=np.float64)
+    for k in range(bm):
+        d = p - k
+        if -r <= d <= r:
+            cv[k] = weights[d + r]
+    return cv
+
+
+def outer_stencil(
+    spec: Spec,
+    coeffs: np.ndarray,
+    a: jnp.ndarray,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One stencil step on a storage-shape array via the outer-product
+    formulation; returns the storage-shape result (frozen halo).
+
+    ``bm`` plays the role of the matrix-register extent (8 on SME),
+    ``bn`` the lane tile along the unit-stride dimension (wider on TPU,
+    where the VPU register is 8×128).
+    """
+    r = spec.order
+    n = a.shape[0] - 2 * r
+    assert all(s == n + 2 * r for s in a.shape), "cubic storage shape"
+    bn = min(bn, n)
+    bm_eff = min(bm, n)
+    assert n % bm_eff == 0 and n % bn == 0, f"block {bm_eff}x{bn} must tile N={n}"
+    lines = parallel_cover_lines(spec, coeffs)
+    # cv table input: (line, p+r) -> (bm,) vector. Statically-zero vectors
+    # are skipped at trace time via the host-side copy `cvs`.
+    cvs = {
+        (li, p): coeff_vector(w, p, bm_eff)
+        for li, (_, w) in enumerate(lines)
+        for p in range(-r, bm_eff + r)
+    }
+    cv_table = np.zeros((len(lines), bm_eff + 2 * r, bm_eff), dtype=np.float64)
+    for (li, p), cv in cvs.items():
+        cv_table[li, p + r] = cv
+    cv_table = jnp.asarray(cv_table, dtype=a.dtype)
+
+    if spec.dims == 2:
+        grid = (n // bm_eff, n // bn)
+
+        def kernel(a_ref, cv_ref, o_ref):
+            ti = pl.program_id(0)
+            tj = pl.program_id(1)
+            acc = jnp.zeros((bm_eff, bn), dtype=a_ref.dtype)
+            for li, ((oj,), _w) in enumerate(lines):
+                for p in range(-r, bm_eff + r):
+                    if not np.any(cvs[(li, p)] != 0.0):
+                        continue  # statically zero (Eq. 12 skip)
+                    cv = cv_ref[li, p + r]
+                    row = a_ref[ti * bm_eff + p + r, pl.dslice(tj * bn + oj + r, bn)]
+                    acc = acc + cv[:, None] * row[None, :]
+            o_ref[...] = acc
+
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(a.shape, lambda i, j: (0, 0)),
+                pl.BlockSpec(cv_table.shape, lambda i, j: (0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm_eff, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+            interpret=interpret,
+        )(a, cv_table)
+        return a.at[r : r + n, r : r + n].set(out)
+
+    grid = (n, n // bm_eff, n // bn)
+
+    def kernel3(a_ref, cv_ref, o_ref):
+        i = pl.program_id(0)
+        tj = pl.program_id(1)
+        tk = pl.program_id(2)
+        acc = jnp.zeros((bm_eff, bn), dtype=a_ref.dtype)
+        for li, ((oi, ok), _w) in enumerate(lines):
+            for p in range(-r, bm_eff + r):
+                if not np.any(cvs[(li, p)] != 0.0):
+                    continue
+                cv = cv_ref[li, p + r]
+                row = a_ref[
+                    i + oi + r,
+                    tj * bm_eff + p + r,
+                    pl.dslice(tk * bn + ok + r, bn),
+                ]
+                acc = acc + cv[:, None] * row[None, :]
+        o_ref[0, ...] = acc
+
+    out = pl.pallas_call(
+        kernel3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a.shape, lambda i, j, k: (0, 0, 0)),
+            pl.BlockSpec(cv_table.shape, lambda i, j, k: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_eff, bn), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((n, n, n), a.dtype),
+        interpret=interpret,
+    )(a, cv_table)
+    return a.at[r : r + n, r : r + n, r : r + n].set(out)

@@ -1,0 +1,101 @@
+"""Pure-jnp gather-mode stencil oracle (Layer 1's correctness reference).
+
+Replicates, bit-for-bit, the conventions of the Rust side
+(``rust/src/stencil``):
+
+- coefficient formula ``paper_default``: dense footprint index ``lin`` gets
+  weight ``(3*lin + 5) % 11 + 1`` where the shape mask is non-zero, then
+  the tensor is normalized by its *sequential* sum (matching Rust's
+  ``iter().sum()`` fold order — pairwise summation would differ in the
+  last ulp);
+- grids carry an ``r``-deep frozen halo: arrays have storage shape
+  ``(N + 2r)^d``, outputs are computed on the ``N^d`` interior, and the
+  halo is copied from the input (Dirichlet-style frozen boundary).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    """Stencil specification: dimension, shape kind, order."""
+
+    dims: int
+    order: int
+    kind: str  # "box" | "star" | "diag"
+
+    def __post_init__(self):
+        assert self.dims in (2, 3)
+        assert self.order >= 1
+        assert self.kind in ("box", "star", "diag")
+        assert not (self.kind == "diag" and self.dims != 2)
+
+    @property
+    def side(self) -> int:
+        return 2 * self.order + 1
+
+    def mask(self, off: tuple[int, ...]) -> bool:
+        """Whether the dense footprint offset carries a non-zero weight."""
+        if self.kind == "box":
+            return True
+        if self.kind == "star":
+            return sum(1 for o in off if o != 0) <= 1
+        return off[0] == off[1] or off[0] == -off[1]
+
+    def dense_offsets(self) -> list[tuple[int, ...]]:
+        r = self.order
+        return list(itertools.product(range(-r, r + 1), repeat=self.dims))
+
+    def name(self) -> str:
+        nz = sum(1 for off in self.dense_offsets() if self.mask(off))
+        return f"{self.dims}d{nz}p-{self.kind}-r{self.order}"
+
+
+def paper_default_coeffs(spec: Spec) -> np.ndarray:
+    """The repo-wide deterministic coefficient tensor (gather view)."""
+    offs = spec.dense_offsets()
+    data = np.zeros(len(offs), dtype=np.float64)
+    for lin, off in enumerate(offs):
+        if spec.mask(off):
+            data[lin] = float((3 * lin + 5) % 11 + 1)
+    # sequential sum to match Rust's fold exactly
+    total = 0.0
+    for v in data:
+        total += float(v)
+    data /= total
+    return data.reshape((spec.side,) * spec.dims)
+
+
+def apply(spec: Spec, coeffs: np.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """One gather-mode step on a storage-shape array (halo included).
+
+    Interior points get Eq. (1); the halo stays frozen (copied from `a`).
+    """
+    r = spec.order
+    n = a.shape[0] - 2 * r
+    assert all(s == n + 2 * r for s in a.shape)
+    acc = jnp.zeros((n,) * spec.dims, dtype=a.dtype)
+    for off in spec.dense_offsets():
+        lin = 0
+        for o in off:
+            lin = lin * spec.side + (o + r)
+        c = float(coeffs.reshape(-1)[lin])
+        if c == 0.0:
+            continue
+        sl = tuple(slice(r + o, r + o + n) for o in off)
+        acc = acc + c * a[sl]
+    interior = tuple(slice(r, r + n) for _ in range(spec.dims))
+    return a.at[interior].set(acc)
+
+
+def evolve(spec: Spec, coeffs: np.ndarray, a: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """`steps` gather-mode steps (ping-pong semantics, §2.2)."""
+    for _ in range(steps):
+        a = apply(spec, coeffs, a)
+    return a

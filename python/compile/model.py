@@ -1,0 +1,103 @@
+"""Layer 2 — the JAX compute graph around the Pallas kernel.
+
+Build-time only: this module is lowered once by ``aot.py`` to HLO text and
+never imported at runtime. The Rust coordinator executes the lowered
+artifacts over PJRT.
+
+The "model" of a stencil paper is the time evolution itself: a single
+stencil step (the L1 kernel plus the frozen-halo update) and a
+``lax.scan`` multi-step evolution so one artifact execution advances many
+steps without host round-trips (the L3 hot path amortizes dispatch
+overhead across the scanned steps).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.outer_stencil import outer_stencil
+from .kernels.ref import Spec, paper_default_coeffs
+
+
+def stencil_step(
+    spec: Spec,
+    coeffs: np.ndarray,
+    a: jnp.ndarray,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One time step on a storage-shape array (halo stays frozen)."""
+    if use_pallas:
+        return outer_stencil(spec, coeffs, a, bm=bm, bn=bn, interpret=interpret)
+    from .kernels import ref
+
+    return ref.apply(spec, coeffs, a)
+
+
+def evolve(
+    spec: Spec,
+    coeffs: np.ndarray,
+    a: jnp.ndarray,
+    steps: int,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """``steps`` time steps.
+
+    ``unroll=False`` uses ``lax.scan`` (one kernel trace — what you want
+    under ``jax.jit`` in Python). ``unroll=True`` emits the steps inline:
+    required for the AOT path, because xla_extension 0.5.1's HLO *text*
+    parser mis-rounds-trips the ``while`` loops a scan lowers to (the
+    re-assigned instruction ids break the nested loop computations), while
+    straight-line HLO round-trips exactly.
+    """
+    if unroll:
+        for _ in range(steps):
+            a = stencil_step(
+                spec, coeffs, a, bm=bm, bn=bn, use_pallas=use_pallas, interpret=interpret
+            )
+        return a
+
+    def body(carry, _):
+        nxt = stencil_step(
+            spec, coeffs, carry, bm=bm, bn=bn, use_pallas=use_pallas, interpret=interpret
+        )
+        return nxt, ()
+
+    out, _ = jax.lax.scan(body, a, None, length=steps)
+    return out
+
+
+def make_step_fn(spec: Spec, *, bm: int = 8, bn: int = 128, use_pallas: bool = True):
+    """A unary function ``a -> (b,)`` with the repo-default coefficients
+    baked in as constants (what the AOT artifacts export)."""
+    coeffs = paper_default_coeffs(spec)
+
+    def fn(a):
+        return (stencil_step(spec, coeffs, a, bm=bm, bn=bn, use_pallas=use_pallas),)
+
+    return fn
+
+
+def make_evolve_fn(
+    spec: Spec, steps: int, *, bm: int = 8, bn: int = 128, use_pallas: bool = True
+):
+    """A unary function ``a -> (b,)`` advancing ``steps`` steps (unrolled —
+    see `evolve` for why the AOT artifacts cannot use lax.scan)."""
+    coeffs = paper_default_coeffs(spec)
+
+    def fn(a):
+        return (
+            evolve(spec, coeffs, a, steps, bm=bm, bn=bn, use_pallas=use_pallas, unroll=True),
+        )
+
+    return fn

@@ -1,0 +1,148 @@
+"""L1 correctness: the Pallas outer-product kernel vs the pure-jnp oracle.
+
+The CORE correctness signal of the Python layer: hypothesis sweeps the
+(spec, size, block, seed) space and asserts elementwise agreement.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.outer_stencil import (
+    coeff_vector,
+    outer_stencil,
+    parallel_cover_lines,
+)
+from compile.kernels.ref import Spec, paper_default_coeffs
+
+
+def grid_for(spec: Spec, n: int, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    shape = (n + 2 * spec.order,) * spec.dims
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape))
+
+
+SPECS_2D = [
+    Spec(2, 1, "box"),
+    Spec(2, 2, "box"),
+    Spec(2, 3, "box"),
+    Spec(2, 1, "star"),
+    Spec(2, 2, "star"),
+    Spec(2, 3, "star"),
+    Spec(2, 1, "diag"),
+    Spec(2, 2, "diag"),
+]
+SPECS_3D = [
+    Spec(3, 1, "box"),
+    Spec(3, 2, "box"),
+    Spec(3, 1, "star"),
+    Spec(3, 2, "star"),
+    Spec(3, 3, "star"),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS_2D, ids=lambda s: s.name())
+def test_kernel_matches_ref_2d(spec):
+    coeffs = paper_default_coeffs(spec)
+    a = grid_for(spec, 16, 42)
+    got = outer_stencil(spec, coeffs, a, bm=4, bn=8)
+    want = ref.apply(spec, coeffs, a)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-13)
+
+
+@pytest.mark.parametrize("spec", SPECS_3D, ids=lambda s: s.name())
+def test_kernel_matches_ref_3d(spec):
+    coeffs = paper_default_coeffs(spec)
+    a = grid_for(spec, 8, 7)
+    got = outer_stencil(spec, coeffs, a, bm=4, bn=8)
+    want = ref.apply(spec, coeffs, a)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-13)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.sampled_from([2, 3]),
+    order=st.integers(1, 3),
+    kind=st.sampled_from(["box", "star"]),
+    nblocks=st.integers(1, 3),
+    bm=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(dims, order, kind, nblocks, bm, seed):
+    spec = Spec(dims, order, kind)
+    n = bm * nblocks
+    if dims == 3 and n > 16:
+        n = 16 if 16 % bm == 0 else bm * 2
+    coeffs = paper_default_coeffs(spec)
+    a = grid_for(spec, n, seed)
+    got = outer_stencil(spec, coeffs, a, bm=bm, bn=n)
+    want = ref.apply(spec, coeffs, a)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-13)
+
+
+def test_halo_is_frozen():
+    spec = Spec(2, 1, "star")
+    coeffs = paper_default_coeffs(spec)
+    a = grid_for(spec, 16, 3)
+    got = outer_stencil(spec, coeffs, a, bm=8, bn=16)
+    np.testing.assert_array_equal(got[0, :], a[0, :])
+    np.testing.assert_array_equal(got[-1, :], a[-1, :])
+    np.testing.assert_array_equal(got[:, 0], a[:, 0])
+    np.testing.assert_array_equal(got[:, -1], a[:, -1])
+
+
+def test_coeffs_normalized_and_masked():
+    for spec in SPECS_2D + SPECS_3D:
+        c = paper_default_coeffs(spec)
+        assert abs(c.sum() - 1.0) < 1e-12
+        nz = int(np.count_nonzero(c))
+        if spec.kind == "box":
+            assert nz == spec.side ** spec.dims
+        elif spec.kind == "star":
+            assert nz == 2 * spec.order * spec.dims + 1
+        else:
+            assert nz == 4 * spec.order + 1
+
+
+def test_constant_field_is_fixed_point():
+    spec = Spec(2, 2, "box")
+    coeffs = paper_default_coeffs(spec)
+    a = jnp.full((20, 20), 3.25, dtype=jnp.float64)
+    got = outer_stencil(spec, coeffs, a, bm=8, bn=16)
+    np.testing.assert_allclose(got, a, atol=1e-12)
+
+
+def test_parallel_cover_counts():
+    # Table 1 / Table 2 line counts
+    assert len(parallel_cover_lines(Spec(2, 1, "box"), paper_default_coeffs(Spec(2, 1, "box")))) == 3
+    assert len(parallel_cover_lines(Spec(2, 2, "star"), paper_default_coeffs(Spec(2, 2, "star")))) == 5
+    assert len(parallel_cover_lines(Spec(3, 1, "box"), paper_default_coeffs(Spec(3, 1, "box")))) == 9
+    assert len(parallel_cover_lines(Spec(3, 1, "star"), paper_default_coeffs(Spec(3, 1, "star")))) == 5
+
+
+def test_coeff_vector_eq12():
+    w = np.array([1.0, 2.0, 3.0])  # r = 1, gather orientation
+    # p = 0: k=0 -> w[0-0+1]=2 ; k=1 -> w[0-1+1]=1
+    np.testing.assert_array_equal(coeff_vector(w, 0, 4), [2.0, 1.0, 0.0, 0.0])
+    # p = -1: only k=0 gets w[-1-0+1]=w[0]=1
+    np.testing.assert_array_equal(coeff_vector(w, -1, 4), [1.0, 0.0, 0.0, 0.0])
+    # p = 4 (= bm-1+r): only k=3 gets w[4-3+1]=w[2]=3
+    np.testing.assert_array_equal(coeff_vector(w, 4, 4), [0.0, 0.0, 0.0, 3.0])
+
+
+def test_matches_rust_coefficients():
+    # The dense-index formula must match rust's paper_default exactly:
+    # ((3*lin + 5) % 11 + 1) masked, sequentially normalized.
+    spec = Spec(2, 1, "box")
+    c = paper_default_coeffs(spec).reshape(-1)
+    raw = np.array([(3 * i + 5) % 11 + 1 for i in range(9)], dtype=np.float64)
+    total = 0.0
+    for v in raw:
+        total += v
+    np.testing.assert_array_equal(c, raw / total)

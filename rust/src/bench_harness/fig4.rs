@@ -1,0 +1,113 @@
+//! Figure 4 — improvement from multi-dimensional unrolling (§4.2) and
+//! outer-product scheduling (§4.3).
+//!
+//! Three variants per stencil: *naive* (no unrolling, per-tile reloads),
+//! *+unroll* (the paper's unroll factors, still per-tile generation) and
+//! *+unroll+sched* (shared input/coefficient vectors — the full method).
+//! Paper shape: unrolling alone has limited effect ("the unrolling seems
+//! to have limited effects in all cases"); scheduling on top is where the
+//! gain is.
+
+use super::report::Report;
+use crate::codegen::{run_method, Method, OuterParams};
+use crate::stencil::{StencilKind, StencilSpec};
+use crate::sim::SimConfig;
+use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+/// Panels: (id, dims, N).
+pub const PANELS: &[(&str, usize, usize)] = &[
+    ("fig4a", 2, 64),
+    ("fig4b", 2, 512),
+    ("fig4c", 3, 16),
+    ("fig4d", 3, 64),
+];
+
+/// Stencils per panel: box and star, orders 1..=3 (2D) / box 1..=2 +
+/// star 1..=3 (3D), with the best coefficient-line option of Fig. 3.
+fn specs(dims: usize) -> Vec<StencilSpec> {
+    let mut v = Vec::new();
+    let box_orders: &[usize] = if dims == 2 { &[1, 2, 3] } else { &[1, 2] };
+    for &r in box_orders {
+        v.push(StencilSpec { dims, order: r, kind: StencilKind::Box });
+    }
+    for r in 1..=3usize {
+        v.push(StencilSpec { dims, order: r, kind: StencilKind::Star });
+    }
+    v
+}
+
+/// The three Fig. 4 variants of the paper's method for `spec`.
+pub fn variants(spec: StencilSpec) -> [(&'static str, OuterParams); 3] {
+    let best = OuterParams::paper_best(spec);
+    [
+        ("naive", OuterParams { ui: 1, uk: 1, scheduled: false, ..best }),
+        ("unroll", OuterParams { scheduled: false, ..best }),
+        ("unroll+sched", best),
+    ]
+}
+
+/// Run one panel.
+pub fn run_panel(cfg: &SimConfig, panel: &str, dims: usize, n: usize) -> anyhow::Result<Report> {
+    let mut table = Table::new(&[
+        "stencil",
+        "naive (cyc/pt)",
+        "unroll (cyc/pt)",
+        "unroll+sched (cyc/pt)",
+        "sched gain",
+    ]);
+    let mut points = Vec::new();
+    for spec in specs(dims) {
+        let mut cpp = Vec::new();
+        for (vname, params) in variants(spec) {
+            let res = run_method(cfg, spec, n, Method::Outer(params), true)?;
+            anyhow::ensure!(res.verified(), "{spec} {vname}: err {}", res.max_err);
+            cpp.push(res.cycles_per_point());
+            points.push(obj(vec![
+                ("panel", Json::Str(panel.into())),
+                ("stencil", Json::Str(spec.name())),
+                ("variant", Json::Str(vname.into())),
+                ("cycles_per_point", Json::Num(res.cycles_per_point())),
+            ]));
+        }
+        table.row(vec![
+            spec.name(),
+            format!("{:.3}", cpp[0]),
+            format!("{:.3}", cpp[1]),
+            format!("{:.3}", cpp[2]),
+            format!("{:.2}x", cpp[0] / cpp[2]),
+        ]);
+    }
+    Ok(Report {
+        name: panel.to_string(),
+        title: format!("{dims}D N={n}: unrolling + scheduling ablation"),
+        table,
+        json: Json::Arr(points),
+    })
+}
+
+/// Run all four panels.
+pub fn run_all(cfg: &SimConfig) -> anyhow::Result<Vec<Report>> {
+    PANELS.iter().map(|&(p, d, n)| run_panel(cfg, p, d, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduling_improves_over_naive() {
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let [naive, _unroll, sched] = variants(spec);
+        let a = run_method(&cfg, spec, 64, Method::Outer(naive.1), true).unwrap();
+        let b = run_method(&cfg, spec, 64, Method::Outer(sched.1), true).unwrap();
+        assert!(a.verified() && b.verified());
+        assert!(
+            b.cycles_per_point() < a.cycles_per_point(),
+            "sched {:.3} should beat naive {:.3}",
+            b.cycles_per_point(),
+            a.cycles_per_point()
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Figure 5 — comparison with existing vectorization methods for r = 1
+//! stencils: compiler auto-vectorization (baseline), DLT [20], temporal
+//! vectorization [57], and the paper's method.
+//!
+//! Paper shapes to reproduce: ours best on in-cache sizes with box
+//! stencils gaining more than stars; TV relatively strongest on
+//! out-of-cache 2D sizes; DLT a modest constant factor.
+
+use super::report::Report;
+use crate::codegen::{run_method, verify::speedup, Method, MethodResult, OuterParams};
+use crate::stencil::{StencilKind, StencilSpec};
+use crate::sim::SimConfig;
+use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+/// (stencil kind, dims) panels × the paper's four sizes each.
+pub fn sizes(dims: usize) -> &'static [usize] {
+    if dims == 2 {
+        &[64, 128, 256, 512]
+    } else {
+        &[8, 16, 32, 64]
+    }
+}
+
+/// The figure's method set for one stencil spec.
+pub fn methods(spec: StencilSpec) -> Vec<(&'static str, Method)> {
+    vec![
+        ("autovec", Method::AutoVec),
+        ("dlt", Method::Dlt),
+        ("tv", Method::Tv),
+        ("ours", Method::Outer(OuterParams::paper_best(spec))),
+    ]
+}
+
+/// Run the full figure: 2D/3D × box/star, r = 1, four sizes each.
+pub fn run_all(cfg: &SimConfig) -> anyhow::Result<Vec<Report>> {
+    let mut reports = Vec::new();
+    for dims in [2usize, 3] {
+        for kind in [StencilKind::Box, StencilKind::Star] {
+            let spec = StencilSpec { dims, order: 1, kind };
+            let mut table =
+                Table::new(&["N", "autovec", "dlt", "tv", "ours", "(speedups over autovec)"]);
+            let mut points = Vec::new();
+            for &n in sizes(dims) {
+                let mut results: Vec<(&str, MethodResult)> = Vec::new();
+                for (name, m) in methods(spec) {
+                    let res = run_method(cfg, spec, n, m, true)?;
+                    anyhow::ensure!(res.verified(), "{spec} {name} N={n}: {}", res.max_err);
+                    results.push((name, res));
+                }
+                let base = results[0].1.clone();
+                let mut row = vec![n.to_string()];
+                for (name, res) in &results {
+                    let s = speedup(&base, res);
+                    row.push(format!("{s:.2}x"));
+                    points.push(obj(vec![
+                        ("stencil", Json::Str(spec.name())),
+                        ("n", Json::Num(n as f64)),
+                        ("method", Json::Str(name.to_string())),
+                        ("speedup", Json::Num(s)),
+                        ("cycles_per_point", Json::Num(res.cycles_per_point())),
+                    ]));
+                }
+                row.push(String::new());
+                table.row(row);
+            }
+            reports.push(Report {
+                name: format!("fig5-{}", spec.name()),
+                title: format!("{} r=1: methods vs size (speedup over autovec)", spec.name()),
+                table,
+                json: Json::Arr(points),
+            });
+        }
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ours_beats_baselines_in_cache_box2d() {
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let base = run_method(&cfg, spec, 64, Method::AutoVec, true).unwrap();
+        let ours = run_method(
+            &cfg,
+            spec,
+            64,
+            Method::Outer(OuterParams::paper_best(spec)),
+            true,
+        )
+        .unwrap();
+        let dlt = run_method(&cfg, spec, 64, Method::Dlt, true).unwrap();
+        let s_ours = speedup(&base, &ours);
+        let s_dlt = speedup(&base, &dlt);
+        assert!(s_ours > 1.8, "ours {s_ours:.2}");
+        assert!(s_ours > s_dlt, "ours {s_ours:.2} vs dlt {s_dlt:.2}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Regenerates every figure and table of the paper's evaluation (§5).
+//!
+//! | Module | Paper artifact |
+//! |---|---|
+//! | [`fig3`] | Fig. 3 — star-stencil coefficient-line options vs order |
+//! | [`fig4`] | Fig. 4 — multi-dimensional unrolling + scheduling ablation |
+//! | [`fig5`] | Fig. 5 — autovec / DLT / TV / ours on r = 1 stencils |
+//! | [`table3`] | Table 3 — speedups over auto-vectorization, full matrix |
+//! | [`ablation`] | extra ablations DESIGN.md calls out |
+//!
+//! Absolute cycle counts come from our simulator, not the paper's
+//! proprietary one, so the comparison target is the *shape* of each
+//! result (who wins, growth with order, in- vs out-of-cache behaviour);
+//! EXPERIMENTS.md records paper-vs-measured side by side.
+//!
+//! Every number is produced by [`crate::codegen::run_method`], which
+//! verifies the simulated program's output against the scalar oracle
+//! before reporting — a result from an incorrect program is impossible.
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod report;
+pub mod table3;
+
+pub use report::Report;

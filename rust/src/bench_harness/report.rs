@@ -1,0 +1,45 @@
+//! Report plumbing: markdown + JSON outputs for each regenerated
+//! figure/table, written under `target/bench-reports/`.
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// A named report: one regenerated paper artifact.
+pub struct Report {
+    /// Identifier, e.g. `fig3a`.
+    pub name: String,
+    /// Human title.
+    pub title: String,
+    /// The rendered table.
+    pub table: Table,
+    /// Raw datapoints for machine consumption.
+    pub json: Json,
+}
+
+impl Report {
+    /// Output directory (created on demand).
+    pub fn dir() -> PathBuf {
+        let d = PathBuf::from("target/bench-reports");
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    /// Write `<name>.md` and `<name>.json`; returns the markdown.
+    pub fn save(&self) -> anyhow::Result<String> {
+        let md = format!("# {} — {}\n\n{}", self.name, self.title, self.table.to_markdown());
+        std::fs::write(Self::dir().join(format!("{}.md", self.name)), &md)?;
+        std::fs::write(
+            Self::dir().join(format!("{}.json", self.name)),
+            self.json.to_string_compact(),
+        )?;
+        Ok(md)
+    }
+
+    /// Print to stdout and save.
+    pub fn emit(&self) -> anyhow::Result<()> {
+        let md = self.save()?;
+        println!("{md}");
+        Ok(())
+    }
+}

@@ -1,0 +1,349 @@
+//! Shared code-generation infrastructure: grid layouts in simulator
+//! memory, coefficient tables, and generator parameters.
+
+use crate::scatter::CoverOption;
+use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
+use crate::sim::Machine;
+
+/// Placement of the `A` and `B` grids in simulator memory.
+///
+/// Grids are stored with an `r`-deep halo on every side (storage extent
+/// `N + 2r` per dimension); *domain* coordinates run `0..N` and map to
+/// storage coordinates `+r`. All paper problem sizes are multiples of the
+/// vector length, so the domain tiles exactly — no ragged edges.
+///
+/// Rows are padded to a multiple of the vector length and the base is
+/// shifted so that **domain column 0 of every row is 64-byte aligned** —
+/// the standard leading-dimension padding of real stencil codes, and what
+/// lets the generators' block loads be genuinely aligned.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    /// The stencil (fixes the halo depth `r`).
+    pub spec: StencilSpec,
+    /// Domain extent `N` per dimension.
+    pub n: usize,
+    /// Logical storage extent `N + 2r` (without padding).
+    pub ext: usize,
+    /// Padded row stride in elements (multiple of the vector length).
+    pub stride_row: usize,
+    /// Base element address of `A` (shifted for alignment).
+    pub a_base: usize,
+    /// Base element address of `B`.
+    pub b_base: usize,
+    vlen: usize,
+}
+
+impl Layout {
+    /// Allocate `A` and `B` (with halos) in machine memory and fill them:
+    /// `A` from `grid` (storage shape `(N+2r)^d`), `B` as a copy of `A`
+    /// (frozen boundary convention).
+    pub fn alloc(machine: &mut Machine, spec: StencilSpec, grid: &DenseGrid) -> Layout {
+        let vlen = machine.cfg.vlen;
+        let r = spec.order;
+        let n = grid.shape[0] - 2 * r;
+        assert!(grid.shape.iter().all(|&s| s == n + 2 * r), "cubic grids only");
+        let ext = n + 2 * r;
+        let stride_row = ext.div_ceil(vlen) * vlen + vlen; // pad + slack for shift
+        let rows: usize = if spec.dims == 2 { ext } else { ext * ext };
+        let total = rows * stride_row + vlen;
+        let raw_a = machine.alloc(total);
+        let raw_b = machine.alloc(total);
+        // shift so (base + r) % vlen == 0: domain col 0 lands 64B-aligned
+        let shift = |raw: usize| raw + (vlen - (raw + r) % vlen) % vlen;
+        let layout = Layout {
+            spec,
+            n,
+            ext,
+            stride_row,
+            a_base: shift(raw_a),
+            b_base: shift(raw_b),
+            vlen,
+        };
+        layout.write_grid(machine, layout.a_base, grid);
+        layout.write_grid(machine, layout.b_base, grid);
+        layout
+    }
+
+    fn write_grid(&self, machine: &mut Machine, base: usize, grid: &DenseGrid) {
+        let rows = if self.spec.dims == 2 { self.ext } else { self.ext * self.ext };
+        for row in 0..rows {
+            let src = &grid.data[row * self.ext..(row + 1) * self.ext];
+            machine.write_mem(base + row * self.stride_row, src);
+        }
+    }
+
+    fn read_grid(&self, machine: &Machine, base: usize) -> DenseGrid {
+        let shape = vec![self.ext; self.spec.dims];
+        let rows = if self.spec.dims == 2 { self.ext } else { self.ext * self.ext };
+        let mut data = Vec::with_capacity(rows * self.ext);
+        for row in 0..rows {
+            data.extend_from_slice(machine.read_mem(base + row * self.stride_row, self.ext));
+        }
+        DenseGrid { shape, data }
+    }
+
+    /// Storage row stride in elements (distance between consecutive rows
+    /// along the second-to-last dimension).
+    pub fn row_stride(&self) -> usize {
+        self.stride_row
+    }
+
+    /// Storage plane stride (3D).
+    pub fn plane_stride(&self) -> usize {
+        self.ext * self.stride_row
+    }
+
+    /// Element address of `A` at *domain* coordinates (components may lie
+    /// in the halo, `-r .. n+r`).
+    pub fn a_addr(&self, idx: &[isize]) -> usize {
+        self.addr(self.a_base, idx)
+    }
+
+    /// Element address of `B` at domain coordinates.
+    pub fn b_addr(&self, idx: &[isize]) -> usize {
+        self.addr(self.b_base, idx)
+    }
+
+    fn addr(&self, base: usize, idx: &[isize]) -> usize {
+        debug_assert_eq!(idx.len(), self.spec.dims);
+        let r = self.spec.order as isize;
+        let d = self.spec.dims;
+        for &i in &idx[..d - 1] {
+            debug_assert!(
+                i >= -r && i < (self.n + self.spec.order) as isize,
+                "domain index {i} out of halo range"
+            );
+        }
+        // the unit-stride dimension may reach one vector beyond the halo:
+        // EXT-based assembly loads a whole aligned block of which only the
+        // in-halo lanes are consumed (the guard bands keep this mapped).
+        let v = self.vlen as isize;
+        debug_assert!(
+            idx[d - 1] >= -r - v && idx[d - 1] < (self.n + self.spec.order) as isize + v,
+            "unit-stride index {} out of guard range",
+            idx[d - 1]
+        );
+        let mut lin = idx[d - 1] + r;
+        lin += (idx[d - 2] + r) * self.stride_row as isize;
+        if d == 3 {
+            lin += (idx[0] + r) * self.plane_stride() as isize;
+        }
+        let a = base as isize + lin;
+        debug_assert!(a >= 0, "address underflow");
+        a as usize
+    }
+
+    /// Read `B` back from machine memory as a grid in storage shape
+    /// (padding stripped).
+    pub fn read_b(&self, machine: &Machine) -> DenseGrid {
+        self.read_grid(machine, self.b_base)
+    }
+
+    /// Read `A` back from machine memory (TV ping-pongs A/B).
+    pub fn read_a(&self, machine: &Machine) -> DenseGrid {
+        self.read_grid(machine, self.a_base)
+    }
+
+    /// Swap the roles of A and B (time-step ping-pong).
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.a_base, &mut self.b_base);
+    }
+}
+
+/// A coefficient table resident in simulator memory.
+///
+/// Two sections:
+/// - `splat`: the raw non-zero weights packed densely (for `VFmaLane`
+///   coefficient broadcasting in the vector baselines);
+/// - `cv`: for the outer method, every shifted coefficient vector
+///   `cv(line, p)` of Eq. (12), `n` elements each, so CV assembly is a
+///   single (L1-resident) vector load.
+#[derive(Debug, Clone)]
+pub struct CoeffTable {
+    /// Base address of the packed weights section.
+    pub splat_base: usize,
+    /// Base address of the coefficient-vector section.
+    pub cv_base: usize,
+    /// Vector length used for cv layout.
+    pub vlen: usize,
+    /// Number of `p` slots per line (`n + 2r`).
+    pub p_slots: usize,
+}
+
+impl CoeffTable {
+    /// Write the packed weights of `coeffs` (dense footprint order,
+    /// including zeros so lane indices are predictable).
+    pub fn install_splats(machine: &mut Machine, coeffs: &CoeffTensor) -> CoeffTable {
+        let splat_base = machine.alloc(coeffs.data.len().max(1));
+        machine.write_mem(splat_base, &coeffs.data);
+        CoeffTable { splat_base, cv_base: 0, vlen: machine.cfg.vlen, p_slots: 0 }
+    }
+
+    /// Write both sections, including cv vectors for every line of
+    /// `cover`.
+    pub fn install_full(
+        machine: &mut Machine,
+        coeffs: &CoeffTensor,
+        cover: &crate::scatter::LineCover,
+    ) -> CoeffTable {
+        let vlen = machine.cfg.vlen;
+        let r = coeffs.spec.order;
+        let p_slots = vlen + 2 * r;
+        let splat_base = machine.alloc(coeffs.data.len());
+        machine.write_mem(splat_base, &coeffs.data);
+        let cv_base = machine.alloc(cover.lines.len() * p_slots * vlen);
+        for (li, line) in cover.lines.iter().enumerate() {
+            for ps in 0..p_slots {
+                let p = ps as isize - r as isize;
+                let cv = line.coeff_vector(p, vlen);
+                machine.write_mem(cv_base + (li * p_slots + ps) * vlen, &cv);
+            }
+        }
+        CoeffTable { splat_base, cv_base, vlen, p_slots }
+    }
+
+    /// Address of the cv vector for line `li`, input position `p`
+    /// (relative, `-r ..= vlen-1+r`).
+    pub fn cv_addr(&self, li: usize, p: isize, r: usize) -> usize {
+        let ps = (p + r as isize) as usize;
+        debug_assert!(ps < self.p_slots);
+        self.cv_base + (li * self.p_slots + ps) * self.vlen
+    }
+
+    /// Address of the packed weight with dense footprint index `di`.
+    pub fn splat_addr(&self, di: usize) -> usize {
+        self.splat_base + di
+    }
+}
+
+/// Parameters of the paper's outer-product generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OuterParams {
+    /// Which coefficient-line cover to use (§4.1).
+    pub option: CoverOption,
+    /// Unroll factor along the leading non-contiguous dimension
+    /// (2D: unused; 3D: `ui` of §4.2).
+    pub ui: usize,
+    /// Unroll factor along the unit-stride dimension (2D: `uj`; 3D: `uk`).
+    pub uk: usize,
+    /// Outer-product scheduling (§4.3): share input vectors and
+    /// coefficient vectors across the unrolled tiles. When off, each tile
+    /// is generated independently (the naive scheme of §4.3).
+    pub scheduled: bool,
+}
+
+impl OuterParams {
+    /// The paper's default for a spec: parallel cover, `uj = 8` (2D box /
+    /// star r=1) or orthogonal `uj = 4` (2D star r>=2); 3D: `i4k2`-style.
+    pub fn paper_best(spec: StencilSpec) -> OuterParams {
+        use crate::stencil::StencilKind;
+        match (spec.dims, spec.kind, spec.order) {
+            (2, StencilKind::Star, r) if r >= 2 => {
+                OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 4, scheduled: true }
+            }
+            (2, _, _) => OuterParams { option: CoverOption::Parallel, ui: 1, uk: 8, scheduled: true },
+            (3, StencilKind::Star, 1) => {
+                OuterParams { option: CoverOption::Parallel, ui: 4, uk: 1, scheduled: true }
+            }
+            (3, StencilKind::Star, _) => {
+                OuterParams { option: CoverOption::Orthogonal, ui: 4, uk: 1, scheduled: true }
+            }
+            _ => OuterParams { option: CoverOption::Parallel, ui: 4, uk: 2, scheduled: true },
+        }
+    }
+
+    /// Table 3-style label, e.g. `p-j8`, `o-i4`, `h-k4`.
+    pub fn label(&self, dims: usize) -> String {
+        let opt = self.option.label();
+        if dims == 2 {
+            format!("{opt}-j{}", self.uk)
+        } else if self.uk > 1 && self.ui > 1 {
+            format!("{opt}-i{}k{}", self.ui, self.uk)
+        } else if self.ui > 1 {
+            format!("{opt}-i{}", self.ui)
+        } else {
+            format!("{opt}-k{}", self.uk)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn layout_addressing_2d() {
+        let mut m = Machine::new(SimConfig::default());
+        let spec = StencilSpec::box2d(1);
+        let g = DenseGrid::verification_input(&[10, 10], 1); // N = 8
+        let l = Layout::alloc(&mut m, spec, &g);
+        assert_eq!(l.n, 8);
+        assert_eq!(l.ext, 10);
+        // domain (0,0) is storage (1,1)
+        assert_eq!(l.a_addr(&[0, 0]), l.a_base + l.stride_row + 1);
+        // halo corner (-1,-1) is storage (0,0)
+        assert_eq!(l.a_addr(&[-1, -1]), l.a_base);
+        // unit stride on the last dim
+        assert_eq!(l.a_addr(&[3, 4]) + 1, l.a_addr(&[3, 5]));
+        // domain column 0 is 64B-aligned on every row
+        assert_eq!(l.a_addr(&[0, 0]) % 8, 0);
+        assert_eq!(l.a_addr(&[5, 0]) % 8, 0);
+        assert_eq!(l.b_addr(&[2, 0]) % 8, 0);
+        // B initialized as a copy of A (padding stripped on read)
+        assert_eq!(l.read_b(&m).data, g.data);
+        assert_eq!(l.read_a(&m).data, g.data);
+    }
+
+    #[test]
+    fn layout_addressing_3d() {
+        let mut m = Machine::new(SimConfig::default());
+        let spec = StencilSpec::star3d(2);
+        let g = DenseGrid::verification_input(&[12, 12, 12], 2); // N = 8
+        let l = Layout::alloc(&mut m, spec, &g);
+        assert_eq!(l.n, 8);
+        assert_eq!(l.plane_stride(), 12 * l.stride_row);
+        assert_eq!(
+            l.a_addr(&[0, 0, 0]),
+            l.a_base + 2 * l.plane_stride() + 2 * l.stride_row + 2
+        );
+        assert_eq!(l.a_addr(&[1, 0, 0]) - l.a_addr(&[0, 0, 0]), l.plane_stride());
+        assert_eq!(l.a_addr(&[0, 0, 0]) % 8, 0);
+        assert_eq!(l.read_a(&m).data, g.data);
+    }
+
+    #[test]
+    fn coeff_table_cv_roundtrip() {
+        let mut m = Machine::new(SimConfig::default());
+        let spec = StencilSpec::box2d(1);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let cover = crate::scatter::build_cover(&coeffs, CoverOption::Parallel).unwrap();
+        let t = CoeffTable::install_full(&mut m, &coeffs, &cover);
+        for (li, line) in cover.lines.iter().enumerate() {
+            for p in -1..=8isize {
+                let addr = t.cv_addr(li, p, 1);
+                let got = m.read_mem(addr, 8);
+                assert_eq!(got, &line.coeff_vector(p, 8)[..], "line {li} p {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_best_labels() {
+        assert_eq!(OuterParams::paper_best(StencilSpec::box2d(1)).label(2), "p-j8");
+        assert_eq!(OuterParams::paper_best(StencilSpec::star2d(2)).label(2), "o-j4");
+        assert_eq!(OuterParams::paper_best(StencilSpec::box3d(1)).label(3), "p-i4k2");
+        assert_eq!(OuterParams::paper_best(StencilSpec::star3d(2)).label(3), "o-i4");
+    }
+
+    #[test]
+    fn swap_ping_pongs() {
+        let mut m = Machine::new(SimConfig::default());
+        let spec = StencilSpec::box2d(1);
+        let g = DenseGrid::verification_input(&[10, 10], 3);
+        let mut l = Layout::alloc(&mut m, spec, &g);
+        let (a0, b0) = (l.a_base, l.b_base);
+        l.swap();
+        assert_eq!((l.a_base, l.b_base), (b0, a0));
+    }
+}

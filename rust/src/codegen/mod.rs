@@ -1,0 +1,31 @@
+//! Code generators targeting the simulator ISA.
+//!
+//! Five methods, all producing *functionally correct* instruction streams
+//! that are verified element-wise against [`crate::stencil::reference`]:
+//!
+//! - [`outer`] — **the paper's method**: scatter-mode outer products over
+//!   coefficient-line covers, with multi-dimensional unrolling (§4.2),
+//!   outer-product scheduling (§4.3) and inter-register data
+//!   reorganization for the alignment conflict.
+//! - [`vectorize`] — the compiler-auto-vectorization baseline (gather
+//!   mode, one unaligned load + FMA per tap; Table 3's "1.0×").
+//! - [`dlt`] — the DLT baseline [Henretty et al. 2011]: dimension-lifted
+//!   transposed layout, all loads aligned, strip-private halos.
+//! - [`tv`] — the temporal-vectorization baseline [Yuan et al. 2021],
+//!   modeled as overlapped temporal blocking over 4 time steps (the
+//!   memory-volume ÷4 behaviour the paper cites).
+//! - [`scalar`] — plain scalar code, for completeness and sanity.
+//!
+//! [`verify`] hosts the end-to-end runner: allocate grids in simulator
+//! memory, generate + execute, check against the oracle, return stats.
+
+pub mod common;
+pub mod dlt;
+pub mod outer;
+pub mod scalar;
+pub mod tv;
+pub mod vectorize;
+pub mod verify;
+
+pub use common::{Layout, OuterParams};
+pub use verify::{run_method, Method, MethodResult};

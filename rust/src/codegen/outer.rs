@@ -1,0 +1,793 @@
+//! The paper's stencil algorithm: scatter-mode vector outer products
+//! (Eq. (12)) over a coefficient-line cover, with the §4 optimizations.
+//!
+//! Structure of the generated code (mirrors Algorithm 1):
+//!
+//! - The output is processed in `n×n` tiles held in matrix registers
+//!   (`n` = vector length), grouped `ui × uk` by **multi-dimensional
+//!   unrolling** (§4.2).
+//! - For every input row position `p`, the needed aligned `A` vectors are
+//!   loaded once and the shifted input vectors of each tile/line are
+//!   assembled by inter-register `EXT` — the **data reorganization**
+//!   solution to the alignment conflict (§4.3).
+//! - With **outer-product scheduling** (§4.3) on, coefficient vectors are
+//!   loaded once per `(line, p)` and reused across all unrolled tiles, and
+//!   input vectors are scattered to every tile that needs them right after
+//!   assembly. With it off, every tile is generated independently (the
+//!   naive scheme), reloading coefficient and input vectors per tile.
+//! - Lines running along a non-unit-stride dimension consume contiguous
+//!   `A` row vectors; lines along the unit-stride dimension need
+//!   strided column vectors, produced by the matrix-register transpose
+//!   trick (§4.1) for in-tile columns and gather loads for halo columns.
+//! - 3D covers whose lines run along `i` (the orthogonal option's
+//!   `CLS(*,r,r)`) need a second pass with the other tile orientation
+//!   (`B_{n×1×n}`), accumulating into `B` in memory — the extra output
+//!   references Table 2 charges that option with.
+
+use super::common::{CoeffTable, Layout, OuterParams};
+use crate::scatter::line::{CoeffLine, LineCover};
+use crate::sim::{Instr, MReg, Sink, SimConfig, VReg};
+
+// ---- vector register plan (see module doc in codegen/mod.rs) ----
+/// Aligned A blocks: v0..=v9 (block index t maps to v(t+1), t in -1..=8).
+const V_BLOCK0: u8 = 0;
+/// Assembled input vector.
+const V_AV: u8 = 10;
+/// Coefficient vector (reload slot).
+const V_CV: u8 = 11;
+/// Gather / transpose scratch.
+const V_SCRATCH: u8 = 12;
+/// Second scratch (diagonal path B row).
+const V_SCRATCH2: u8 = 13;
+/// First register of the resident CV bank (3D scheduled).
+const V_CV_BANK: u8 = 14;
+/// Size of the resident CV bank.
+const CV_BANK: usize = 18;
+
+/// Generate the outer-product stencil program into `sink`.
+///
+/// `B` must be pre-initialized with the boundary values (the harness
+/// copies `A`); the generated code computes all `N^d` interior points.
+pub fn generate(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cover: &LineCover,
+    table: &CoeffTable,
+    params: OuterParams,
+    sink: &mut impl Sink,
+) -> anyhow::Result<()> {
+    let n = cfg.vlen;
+    anyhow::ensure!(layout.n % n == 0, "domain must be a multiple of the vector length");
+    anyhow::ensure!(layout.spec.order <= n, "order larger than vector length unsupported");
+    match layout.spec.dims {
+        2 => gen2d(cfg, layout, cover, table, params, sink),
+        3 => gen3d(cfg, layout, cover, table, params, sink),
+        _ => unreachable!(),
+    }
+}
+
+/// Line classification by direction.
+struct Classified<'a> {
+    /// `(cover_index, line)` for lines along dimension 0 (2D `i`).
+    dim0: Vec<(usize, &'a CoeffLine)>,
+    /// Lines along dimension 1 (2D `j`, 3D `j`).
+    dim1: Vec<(usize, &'a CoeffLine)>,
+    /// Lines along dimension 2 (3D `k`).
+    dim2: Vec<(usize, &'a CoeffLine)>,
+    /// 2D diagonal lines `(idx, line, slope)`.
+    diag: Vec<(usize, &'a CoeffLine, isize)>,
+}
+
+fn classify(cover: &LineCover) -> Classified<'_> {
+    let mut c = Classified { dim0: vec![], dim1: vec![], dim2: vec![], diag: vec![] };
+    for (i, l) in cover.lines.iter().enumerate() {
+        let nz: Vec<usize> = (0..l.dir.len()).filter(|&d| l.dir[d] != 0).collect();
+        if nz.len() == 2 {
+            c.diag.push((i, l, l.dir[1]));
+        } else {
+            match nz[0] {
+                0 => c.dim0.push((i, l)),
+                1 => c.dim1.push((i, l)),
+                _ => c.dim2.push((i, l)),
+            }
+        }
+    }
+    c
+}
+
+/// Emit the aligned-block load for block `t` (origin `col0 + t*n`).
+fn block_reg(t: isize) -> VReg {
+    VReg(V_BLOCK0 + (t + 1) as u8)
+}
+
+/// Assemble `A[row, col0 + t*n + off .. +n]` into a register, given that
+/// aligned blocks `t-1 ..= t+1` are resident (per `block_reg`). Returns
+/// the register holding the vector (a block register when `off == 0`).
+fn assemble(n: usize, t: isize, off: isize, sink: &mut impl Sink) -> VReg {
+    if off == 0 {
+        return block_reg(t);
+    }
+    let dst = VReg(V_AV);
+    if off > 0 {
+        sink.emit(Instr::Ext { dst, lo: block_reg(t), hi: block_reg(t + 1), shift: off as usize });
+    } else {
+        sink.emit(Instr::Ext {
+            dst,
+            lo: block_reg(t - 1),
+            hi: block_reg(t),
+            shift: (n as isize + off) as usize,
+        });
+    }
+    dst
+}
+
+// ===================================================================
+// 2D
+// ===================================================================
+
+fn gen2d(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cover: &LineCover,
+    table: &CoeffTable,
+    params: OuterParams,
+    sink: &mut impl Sink,
+) -> anyhow::Result<()> {
+    let n = cfg.vlen;
+    let big_n = layout.n;
+    let _r = layout.spec.order as isize;
+    let cls = classify(cover);
+    // tiles per group along j; the transpose trick needs one spare tile
+    let max_tiles = if cls.dim1.is_empty() { cfg.n_mregs } else { cfg.n_mregs - 1 };
+    let uj = params.uk.clamp(1, max_tiles);
+    let tiles_j = big_n / n;
+
+    for i0 in (0..big_n as isize).step_by(n) {
+        let mut tj = 0usize;
+        while tj < tiles_j {
+            let group = uj.min(tiles_j - tj);
+            let j0 = (tj * n) as isize;
+            for t in 0..group {
+                sink.emit(Instr::MZero { m: MReg(t as u8) });
+            }
+            if params.scheduled {
+                gen2d_group_scheduled(cfg, layout, &cls, table, i0, j0, group, sink);
+            } else {
+                for t in 0..group {
+                    gen2d_tile_naive(cfg, layout, &cls, table, i0, j0 + (t * n) as isize, t, sink);
+                }
+            }
+            // diagonal lines (vector path, accumulates into the tiles)
+            if !cls.diag.is_empty() {
+                gen2d_diag(cfg, layout, &cls, table, i0, j0, group, sink);
+            }
+            // store the group
+            for t in 0..group {
+                for x in 0..n {
+                    let addr = layout.b_addr(&[i0 + x as isize, j0 + (t * n) as isize]);
+                    sink.emit(Instr::StMRow { m: MReg(t as u8), row: x, addr });
+                }
+            }
+            tj += group;
+        }
+    }
+    Ok(())
+}
+
+/// Scheduled 2D group: input vectors and coefficient vectors shared
+/// across the `group` tiles (§4.3).
+fn gen2d_group_scheduled(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    i0: isize,
+    j0: isize,
+    group: usize,
+    sink: &mut impl Sink,
+) {
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    if !cls.dim0.is_empty() {
+        let need_left = cls.dim0.iter().any(|(_, l)| l.base[1] < 0);
+        let need_right = cls.dim0.iter().any(|(_, l)| l.base[1] > 0);
+        for p in -r..(n as isize + r) {
+            let row = i0 + p;
+            // load the aligned blocks this input row contributes through
+            let t_lo = if need_left { -1 } else { 0 };
+            let t_hi = group as isize - 1 + if need_right { 1 } else { 0 };
+            for t in t_lo..=t_hi {
+                sink.emit(Instr::LdVec {
+                    dst: block_reg(t),
+                    addr: layout.a_addr(&[row, j0 + t * n as isize]),
+                });
+            }
+            for &(li, line) in &cls.dim0 {
+                if !line.cv_nonzero(p, n) {
+                    continue;
+                }
+                sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+                let oj = line.base[1];
+                for t in 0..group as isize {
+                    let av = assemble(n, t, oj, sink);
+                    sink.emit(Instr::Fmopa { m: MReg(t as u8), a: VReg(V_CV), b: av });
+                }
+            }
+        }
+    }
+    // lines along j: strided input columns via the transpose trick
+    for t in 0..group {
+        gen2d_jlines_tile(cfg, layout, cls, table, i0, j0 + (t * n) as isize, t, sink);
+    }
+}
+
+/// Naive 2D tile: everything reloaded per tile (§4.3's strawman).
+fn gen2d_tile_naive(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    i0: isize,
+    jt: isize,
+    tile: usize,
+    sink: &mut impl Sink,
+) {
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    for &(li, line) in &cls.dim0 {
+        let oj = line.base[1];
+        for p in -r..(n as isize + r) {
+            if !line.cv_nonzero(p, n) {
+                continue;
+            }
+            let row = i0 + p;
+            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            // load only the blocks this tile needs (t = 0 locally)
+            sink.emit(Instr::LdVec { dst: block_reg(0), addr: layout.a_addr(&[row, jt]) });
+            if oj < 0 {
+                sink.emit(Instr::LdVec {
+                    dst: block_reg(-1),
+                    addr: layout.a_addr(&[row, jt - n as isize]),
+                });
+            } else if oj > 0 {
+                sink.emit(Instr::LdVec {
+                    dst: block_reg(1),
+                    addr: layout.a_addr(&[row, jt + n as isize]),
+                });
+            }
+            let av = assemble(n, 0, oj, sink);
+            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: VReg(V_CV), b: av });
+        }
+    }
+    gen2d_jlines_tile(cfg, layout, cls, table, i0, jt, tile, sink);
+}
+
+/// Lines along `j` for one 2D tile (Eq. (14)): input columns
+/// `A[i0..i0+n, jt+p]`. In-tile columns (`0 <= p < n`) come from the
+/// matrix-register transpose; halo columns use gather loads.
+fn gen2d_jlines_tile(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    i0: isize,
+    jt: isize,
+    tile: usize,
+    sink: &mut impl Sink,
+) {
+    if cls.dim1.is_empty() {
+        return;
+    }
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    let scratch_m = MReg((cfg.n_mregs - 1) as u8);
+    // group j-lines by their row offset oi: each group shares one
+    // transpose scratch holding rows i0+oi .. i0+oi+n of block jt.
+    let mut ois: Vec<isize> = cls.dim1.iter().map(|(_, l)| l.base[0]).collect();
+    ois.sort_unstable();
+    ois.dedup();
+    for oi in ois {
+        // fill the scratch tile with A rows (vector-to-matrix moves); the
+        // in-tile columns are then matrix-to-vector column moves (§4.1).
+        for x in 0..n {
+            sink.emit(Instr::LdVec {
+                dst: VReg(V_SCRATCH),
+                addr: layout.a_addr(&[i0 + oi + x as isize, jt]),
+            });
+            sink.emit(Instr::MovVToMRow { m: scratch_m, row: x, src: VReg(V_SCRATCH) });
+        }
+        for &(li, line) in &cls.dim1 {
+            if line.base[0] != oi {
+                continue;
+            }
+            for p in -r..(n as isize + r) {
+                if !line.cv_nonzero(p, n) {
+                    continue;
+                }
+                sink.emit(Instr::LdVec {
+                    dst: VReg(V_CV),
+                    addr: table.cv_addr(li, p, r as usize),
+                });
+                let col = if (0..n as isize).contains(&p) {
+                    sink.emit(Instr::MovMColToV {
+                        dst: VReg(V_SCRATCH),
+                        m: scratch_m,
+                        col: p as usize,
+                    });
+                    VReg(V_SCRATCH)
+                } else {
+                    sink.emit(Instr::LdVecStrided {
+                        dst: VReg(V_SCRATCH),
+                        base: layout.a_addr(&[i0 + oi, jt + p]),
+                        stride: layout.row_stride(),
+                    });
+                    VReg(V_SCRATCH)
+                };
+                sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
+            }
+        }
+    }
+}
+
+/// Diagonal lines (Eq. (15)/(16)) — vector path: the sheared output tiles
+/// a diagonal outer product would need do not tile `B` cleanly, so each
+/// diagonal line is applied as vector FMAs accumulated straight into the
+/// matrix-register tiles row by row.
+fn gen2d_diag(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    i0: isize,
+    j0: isize,
+    group: usize,
+    sink: &mut impl Sink,
+) {
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    for t in 0..group {
+        let jt = j0 + (t * n) as isize;
+        for x in 0..n {
+            // current tile row
+            sink.emit(Instr::MovMRowToV { dst: VReg(V_SCRATCH2), m: MReg(t as u8), row: x });
+            for &(li, line, slope) in &cls.diag {
+                // coefficient lanes: the 2r+1 weights live in the splat
+                // table at the line's footprint offsets
+                for d in -r..=r {
+                    let w = line.weights[(d + r) as usize];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    // load the weight as a broadcast (splat table is in
+                    // dense footprint order)
+                    let off = line.point(d);
+                    let side = layout.spec.side() as isize;
+                    let idx = ((off[0] + r) * side + (off[1] + r)) as usize;
+                    sink.emit(Instr::LdSplat { dst: VReg(V_CV), addr: table.splat_addr(idx) });
+                    // input row: A[i0+x+d, jt + slope*d .. +n] (sheared)
+                    let row = i0 + x as isize + d;
+                    let cs = jt + slope * d;
+                    let base = cs.div_euclid(n as isize) * n as isize;
+                    let off_in = cs - base;
+                    sink.emit(Instr::LdVec {
+                        dst: block_reg(0),
+                        addr: layout.a_addr(&[row, base]),
+                    });
+                    if off_in > 0 {
+                        sink.emit(Instr::LdVec {
+                            dst: block_reg(1),
+                            addr: layout.a_addr(&[row, base + n as isize]),
+                        });
+                    }
+                    let av = assemble(n, 0, off_in, sink);
+                    sink.emit(Instr::VFma { acc: VReg(V_SCRATCH2), a: av, b: VReg(V_CV) });
+                    let _ = li;
+                }
+            }
+            sink.emit(Instr::MovVToMRow { m: MReg(t as u8), row: x, src: VReg(V_SCRATCH2) });
+        }
+    }
+}
+
+// ===================================================================
+// 3D
+// ===================================================================
+
+fn gen3d(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cover: &LineCover,
+    table: &CoeffTable,
+    params: OuterParams,
+    sink: &mut impl Sink,
+) -> anyhow::Result<()> {
+    let n = cfg.vlen;
+    let big_n = layout.n;
+    let cls = classify(cover);
+    anyhow::ensure!(cls.diag.is_empty(), "diagonal lines are 2D-only");
+    let needs_scratch = !cls.dim2.is_empty();
+    let max_tiles = if needs_scratch { cfg.n_mregs - 1 } else { cfg.n_mregs };
+    let ui = params.ui.clamp(1, max_tiles);
+    let uk = params.uk.clamp(1, max_tiles / ui);
+    let tiles_k = big_n / n;
+
+    // ---- pass 1: tiles B[i ; j0..j0+n ; k0..k0+n], lines along j and k
+    for i0 in (0..big_n as isize).step_by(ui) {
+        let gi = (ui as isize).min(big_n as isize - i0) as usize;
+        for j0 in (0..big_n as isize).step_by(n) {
+            let mut tk = 0usize;
+            while tk < tiles_k {
+                let gk = uk.min(tiles_k - tk);
+                let k0 = (tk * n) as isize;
+                for m in 0..gi * gk {
+                    sink.emit(Instr::MZero { m: MReg(m as u8) });
+                }
+                if params.scheduled {
+                    gen3d_group_scheduled(cfg, layout, &cls, table, i0, j0, k0, gi, gk, sink);
+                } else {
+                    for u in 0..gi {
+                        for t in 0..gk {
+                            gen3d_tile_naive(
+                                cfg,
+                                layout,
+                                &cls,
+                                table,
+                                i0 + u as isize,
+                                j0,
+                                k0 + (t * n) as isize,
+                                u * gk + t,
+                                sink,
+                            );
+                        }
+                    }
+                }
+                for u in 0..gi {
+                    for t in 0..gk {
+                        let m = MReg((u * gk + t) as u8);
+                        for y in 0..n {
+                            let addr = layout.b_addr(&[
+                                i0 + u as isize,
+                                j0 + y as isize,
+                                k0 + (t * n) as isize,
+                            ]);
+                            sink.emit(Instr::StMRow { m, row: y, addr });
+                        }
+                    }
+                }
+                tk += gk;
+            }
+        }
+    }
+
+    // ---- pass 2: lines along i (orthogonal option's CLS(*,r,r)) with the
+    // other tile orientation B[i0..i0+n ; j ; k0..k0+n], accumulating into
+    // the B written by pass 1 (the extra output references of Table 2).
+    if !cls.dim0.is_empty() {
+        gen3d_ipass(cfg, layout, &cls, table, params, sink)?;
+    }
+    Ok(())
+}
+
+/// Scheduled 3D group (Algorithm 1): iterate input `j` positions; per
+/// input plane row, load the A vectors once and scatter to every tile.
+#[allow(clippy::too_many_arguments)]
+fn gen3d_group_scheduled(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    i0: isize,
+    j0: isize,
+    k0: isize,
+    gi: usize,
+    gk: usize,
+    sink: &mut impl Sink,
+) {
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    if !cls.dim1.is_empty() {
+        // 3D j-lines have base = [oi, 0, ok]
+        let need_left = cls.dim1.iter().any(|(_, l)| l.base[2] < 0);
+        let need_right = cls.dim1.iter().any(|(_, l)| l.base[2] > 0);
+        // distinct ko offsets present in the cover
+        let mut kos: Vec<isize> = cls.dim1.iter().map(|(_, l)| l.base[2]).collect();
+        kos.sort_unstable();
+        kos.dedup();
+        for p in -r..(n as isize + r) {
+            let jrow = j0 + p;
+            // resident CV bank for this p: one register per line
+            for (slot, &(li, line)) in cls.dim1.iter().enumerate() {
+                if slot >= CV_BANK {
+                    break;
+                }
+                if line.cv_nonzero(p, n) {
+                    sink.emit(Instr::LdVec {
+                        dst: VReg(V_CV_BANK + slot as u8),
+                        addr: table.cv_addr(li, p, r as usize),
+                    });
+                }
+            }
+            for ii in (i0 - r)..(i0 + gi as isize + r) {
+                // does any line scatter this input plane into a tile?
+                let used = cls.dim1.iter().any(|(_, l)| {
+                    let u = ii - i0 - l.base[0];
+                    (0..gi as isize).contains(&u)
+                });
+                if !used {
+                    continue;
+                }
+                let t_lo = if need_left { -1 } else { 0 };
+                let t_hi = gk as isize - 1 + if need_right { 1 } else { 0 };
+                for t in t_lo..=t_hi {
+                    sink.emit(Instr::LdVec {
+                        dst: block_reg(t),
+                        addr: layout.a_addr(&[ii, jrow, k0 + t * n as isize]),
+                    });
+                }
+                for &ko in &kos {
+                    for t in 0..gk as isize {
+                        let mut av = VReg(0); // assembled lazily
+                        let mut assembled = false;
+                        for (slot, &(li, line)) in cls.dim1.iter().enumerate() {
+                            if line.base[2] != ko {
+                                continue;
+                            }
+                            let u = ii - i0 - line.base[0];
+                            if !(0..gi as isize).contains(&u) {
+                                continue;
+                            }
+                            if !line.cv_nonzero(p, n) {
+                                continue;
+                            }
+                            if !assembled {
+                                av = assemble(n, t, ko, sink);
+                                assembled = true;
+                            }
+                            let cv_reg = if slot < CV_BANK {
+                                VReg(V_CV_BANK + slot as u8)
+                            } else {
+                                // overflow: reload (register spill behaviour)
+                                sink.emit(Instr::LdVec {
+                                    dst: VReg(V_CV),
+                                    addr: table.cv_addr(li, p, r as usize),
+                                });
+                                VReg(V_CV)
+                            };
+                            let m = MReg((u as usize * gk + t as usize) as u8);
+                            sink.emit(Instr::Fmopa { m, a: cv_reg, b: av });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // k-lines (strided j-columns) per tile
+    for u in 0..gi {
+        for t in 0..gk {
+            gen3d_klines_tile(
+                cfg,
+                layout,
+                cls,
+                table,
+                i0 + u as isize,
+                j0,
+                k0 + (t * n) as isize,
+                u * gk + t,
+                sink,
+            );
+        }
+    }
+}
+
+/// Naive 3D tile: per-tile reloads (no sharing).
+#[allow(clippy::too_many_arguments)]
+fn gen3d_tile_naive(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    it: isize,
+    j0: isize,
+    kt: isize,
+    tile: usize,
+    sink: &mut impl Sink,
+) {
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    for &(li, line) in &cls.dim1 {
+        let (oi, ok) = (line.base[0], line.base[2]);
+        for p in -r..(n as isize + r) {
+            if !line.cv_nonzero(p, n) {
+                continue;
+            }
+            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            let plane = it + oi;
+            let jrow = j0 + p;
+            sink.emit(Instr::LdVec { dst: block_reg(0), addr: layout.a_addr(&[plane, jrow, kt]) });
+            if ok < 0 {
+                sink.emit(Instr::LdVec {
+                    dst: block_reg(-1),
+                    addr: layout.a_addr(&[plane, jrow, kt - n as isize]),
+                });
+            } else if ok > 0 {
+                sink.emit(Instr::LdVec {
+                    dst: block_reg(1),
+                    addr: layout.a_addr(&[plane, jrow, kt + n as isize]),
+                });
+            }
+            let av = assemble(n, 0, ok, sink);
+            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: VReg(V_CV), b: av });
+        }
+    }
+    gen3d_klines_tile(cfg, layout, cls, table, it, j0, kt, tile, sink);
+}
+
+/// Lines along `k` for one 3D tile: input columns `A[it+oi, j0+oj+y, kcol]`
+/// along `j` — transpose trick for in-tile columns, gathers for halo.
+#[allow(clippy::too_many_arguments)]
+fn gen3d_klines_tile(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    it: isize,
+    j0: isize,
+    kt: isize,
+    tile: usize,
+    sink: &mut impl Sink,
+) {
+    if cls.dim2.is_empty() {
+        return;
+    }
+    let n = cfg.vlen;
+    let r = layout.spec.order as isize;
+    let scratch_m = MReg((cfg.n_mregs - 1) as u8);
+    for &(li, line) in &cls.dim2 {
+        let (oi, oj) = (line.base[0], line.base[1]);
+        debug_assert_eq!(oi, 0, "3D k-lines with i offsets unsupported");
+        debug_assert_eq!(oj, 0, "3D k-lines with j offsets unsupported");
+        // transpose scratch: rows y hold A[it, j0+y, kt..kt+n]
+        for y in 0..n {
+            sink.emit(Instr::LdVec {
+                dst: VReg(V_SCRATCH),
+                addr: layout.a_addr(&[it, j0 + y as isize, kt]),
+            });
+            sink.emit(Instr::MovVToMRow { m: scratch_m, row: y, src: VReg(V_SCRATCH) });
+        }
+        for p in -r..(n as isize + r) {
+            if !line.cv_nonzero(p, n) {
+                continue;
+            }
+            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            let col = if (0..n as isize).contains(&p) {
+                sink.emit(Instr::MovMColToV {
+                    dst: VReg(V_SCRATCH),
+                    m: scratch_m,
+                    col: p as usize,
+                });
+                VReg(V_SCRATCH)
+            } else {
+                sink.emit(Instr::LdVecStrided {
+                    dst: VReg(V_SCRATCH),
+                    base: layout.a_addr(&[it, j0, kt + p]),
+                    stride: layout.row_stride(),
+                });
+                VReg(V_SCRATCH)
+            };
+            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
+        }
+    }
+}
+
+/// Pass 2: lines along `i`, tile orientation `B[i0..i0+n ; j ; k0..k0+n]`,
+/// read-modify-write on `B`.
+fn gen3d_ipass(
+    cfg: &SimConfig,
+    layout: &Layout,
+    cls: &Classified<'_>,
+    table: &CoeffTable,
+    params: OuterParams,
+    sink: &mut impl Sink,
+) -> anyhow::Result<()> {
+    let n = cfg.vlen;
+    let big_n = layout.n;
+    let r = layout.spec.order as isize;
+    let uk = params.uk.clamp(1, cfg.n_mregs);
+    let tiles_k = big_n / n;
+    for i0 in (0..big_n as isize).step_by(n) {
+        for j in 0..big_n as isize {
+            let mut tk = 0usize;
+            while tk < tiles_k {
+                let gk = uk.min(tiles_k - tk);
+                let k0 = (tk * n) as isize;
+                // load current B tiles (RMW)
+                for t in 0..gk {
+                    for x in 0..n {
+                        sink.emit(Instr::LdMRow {
+                            m: MReg(t as u8),
+                            row: x,
+                            addr: layout.b_addr(&[i0 + x as isize, j, k0 + (t * n) as isize]),
+                        });
+                    }
+                }
+                for p in -r..(n as isize + r) {
+                    let plane = i0 + p;
+                    // shared aligned loads for this input row
+                    for t in 0..gk as isize {
+                        sink.emit(Instr::LdVec {
+                            dst: block_reg(t),
+                            addr: layout.a_addr(&[plane, j, k0 + t * n as isize]),
+                        });
+                    }
+                    for &(li, line) in &cls.dim0 {
+                        debug_assert_eq!(line.base, vec![0, 0, 0], "i-lines off centre unsupported");
+                        if !line.cv_nonzero(p, n) {
+                            continue;
+                        }
+                        sink.emit(Instr::LdVec {
+                            dst: VReg(V_CV),
+                            addr: table.cv_addr(li, p, r as usize),
+                        });
+                        for t in 0..gk {
+                            sink.emit(Instr::Fmopa {
+                                m: MReg(t as u8),
+                                a: VReg(V_CV),
+                                b: block_reg(t as isize),
+                            });
+                        }
+                    }
+                }
+                for t in 0..gk {
+                    for x in 0..n {
+                        sink.emit(Instr::StMRow {
+                            m: MReg(t as u8),
+                            row: x,
+                            addr: layout.b_addr(&[i0 + x as isize, j, k0 + (t * n) as isize]),
+                        });
+                    }
+                }
+                tk += gk;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // Correctness of this generator is exercised end-to-end in
+    // codegen::verify (every spec × option × unroll × scheduling), and in
+    // the integration tests under rust/tests/. Unit tests here cover the
+    // pure helpers.
+    use super::*;
+    use crate::sim::isa::Program;
+
+    #[test]
+    fn assemble_zero_offset_uses_block_directly() {
+        let mut p = Program::default();
+        let reg = assemble(8, 2, 0, &mut p);
+        assert_eq!(reg, block_reg(2));
+        assert!(p.0.is_empty());
+    }
+
+    #[test]
+    fn assemble_positive_offset_exts_right() {
+        let mut p = Program::default();
+        let reg = assemble(8, 0, 2, &mut p);
+        assert_eq!(reg, VReg(V_AV));
+        assert_eq!(
+            p.0,
+            vec![Instr::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 2 }]
+        );
+    }
+
+    #[test]
+    fn assemble_negative_offset_exts_left() {
+        let mut p = Program::default();
+        assemble(8, 1, -3, &mut p);
+        assert_eq!(
+            p.0,
+            vec![Instr::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 5 }]
+        );
+    }
+}

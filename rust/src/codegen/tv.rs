@@ -1,0 +1,420 @@
+//! Temporal-vectorization baseline (Yuan et al., SC'21; the paper's
+//! comparison method [57]), modeled as overlapped temporal blocking.
+//!
+//! TV's defining property — the one the paper's §5.2 discussion leans on —
+//! is a large reduction in memory volume (up to ¼) by advancing several
+//! time steps over a cache-resident strip before moving on, at the price
+//! of redundant halo computation and a larger in-flight working set that
+//! hurts 3D. We reproduce exactly that profile:
+//!
+//! - `TB = 4` time steps are advanced per spatial strip (hence the ¼
+//!   memory volume on streaming sizes);
+//! - strips are tiled along the unit-stride dimension; two scratch grids
+//!   ping-pong the intermediate steps, staying cache-resident;
+//! - each strip's compute region shrinks by `r` per remaining step
+//!   (overlapped / ghost-zone tiling), so adjacent strips recompute the
+//!   overlap — the redundant work visible at small strip widths;
+//! - per-step compute uses the same gather-mode vector kernel as the
+//!   auto-vectorization baseline.
+//!
+//! For 3D grids the strip working set is `N² × width` and no longer fits
+//! L1/L2, which is why TV shows limited or negative speedups on 3D
+//! stencils — in the paper (§5.2, Table 3) and in this model.
+//!
+//! The harness must compare the result against `TB` reference steps and
+//! normalize cycles by `TB`.
+
+use super::common::{CoeffTable, Layout};
+use crate::stencil::CoeffTensor;
+use crate::sim::{Instr, Machine, Sink, VReg};
+
+/// Time steps advanced per strip.
+pub const TIME_BLOCK: usize = 4;
+/// Strip width in vector blocks (3D).
+const STRIP_VECS_3D: usize = 2;
+
+const V_ACC0: u8 = 0;
+const V_LOAD: u8 = 4;
+const V_CSPILL: u8 = 5;
+const V_COEFF0: u8 = 6;
+const JAM: usize = 4;
+
+/// Rows per 2D strip (tiled along `i`, full row width).
+const STRIP_ROWS_2D: usize = 32;
+
+/// A cache-resident strip buffer: `rows` domain rows × the full domain
+/// width, with an `r` halo on all sides. Reused by every strip, so after
+/// the first strip it lives permanently in L2 — the residency that gives
+/// TV its memory-volume reduction.
+pub struct StripBuf {
+    base: usize,
+    stride: usize,
+    /// Domain rows the buffer can hold.
+    pub rows: usize,
+    r: usize,
+    n: usize,
+}
+
+impl StripBuf {
+    fn alloc(machine: &mut Machine, rows: usize, n: usize, r: usize, vlen: usize) -> StripBuf {
+        let stride = (n + 2 * r).div_ceil(vlen) * vlen + vlen;
+        let raw = machine.alloc((rows + 2 * r) * stride + vlen);
+        let base = raw + (vlen - (raw + r) % vlen) % vlen;
+        StripBuf { base, stride, rows, r, n }
+    }
+
+    /// Address of buffer-domain row `x` (may be in the ±r halo), column
+    /// `j` (domain, may be in the ±r halo).
+    fn addr(&self, x: isize, j: isize) -> usize {
+        let r = self.r as isize;
+        debug_assert!(x >= -r && x < (self.rows + self.r) as isize);
+        debug_assert!(j >= -r - 8 && j < (self.n + self.r) as isize + 8);
+        (self.base as isize + (x + r) * self.stride as isize + j) as usize
+    }
+}
+
+/// TV's scratch state (built once; reused across measured runs).
+pub struct Scratch {
+    /// 2D: two strip buffers (ping-pong).
+    bufs: Option<[StripBuf; 2]>,
+    /// 3D fallback: two full scratch grids.
+    grids: Option<[Layout; 2]>,
+    /// Max halo growth across the time block: `(TB-1) * r`.
+    margin: usize,
+}
+
+/// Allocate the scratch state. 2D uses two reusable strip buffers (the
+/// real TV structure); 3D keeps full scratch grids — the working set that
+/// is exactly why TV does not pay off for 3D stencils (§5.2).
+pub fn setup(machine: &mut Machine, layout: &Layout) -> Scratch {
+    let r = layout.spec.order;
+    let margin = (TIME_BLOCK - 1) * r;
+    if layout.spec.dims == 2 {
+        let rows = STRIP_ROWS_2D + 2 * margin;
+        let vlen = machine.cfg.vlen;
+        let b0 = StripBuf::alloc(machine, rows, layout.n, r, vlen);
+        let b1 = StripBuf::alloc(machine, rows, layout.n, r, vlen);
+        Scratch { bufs: Some([b0, b1]), grids: None, margin }
+    } else {
+        let a_grid = layout.read_a(machine);
+        let s0 = Layout::alloc(machine, layout.spec, &a_grid);
+        let s1 = Layout::alloc(machine, layout.spec, &a_grid);
+        Scratch { bufs: None, grids: Some([s0, s1]), margin }
+    }
+}
+
+/// Generate and execute the TV program on `machine` (TV needs the machine
+/// as sink because intermediate values flow through its scratch grids).
+///
+/// On return, `B` holds the grid after [`TIME_BLOCK`] steps.
+pub fn generate(
+    machine: &mut Machine,
+    layout: &Layout,
+    scratch: &Scratch,
+    coeffs: &CoeffTensor,
+    table: &CoeffTable,
+) -> anyhow::Result<()> {
+    let cfg = machine.cfg.clone();
+    let vlen = cfg.vlen;
+    anyhow::ensure!(layout.n % vlen == 0, "domain must be a multiple of the vector length");
+    let taps: Vec<(Vec<isize>, usize)> = layout
+        .spec
+        .dense_offsets()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| coeffs.data[*i] != 0.0)
+        .map(|(i, off)| (off, i))
+        .collect();
+    let resident = taps.len() <= (cfg.n_vregs - V_COEFF0 as usize);
+    if resident {
+        for (slot, (_, di)) in taps.iter().enumerate() {
+            machine.emit(Instr::LdSplat {
+                dst: VReg(V_COEFF0 + slot as u8),
+                addr: table.splat_addr(*di),
+            });
+        }
+    }
+    if layout.spec.dims == 2 {
+        gen2d_strips(machine, layout, scratch, &taps, table, resident)
+    } else {
+        gen3d_grids(machine, layout, scratch, &taps, table, resident)
+    }
+}
+
+/// 2D: strips along `i`, full row width, ping-ponging through the two
+/// cache-resident strip buffers. A is read once and B written once per
+/// TIME_BLOCK steps — the ÷4 memory volume.
+fn gen2d_strips(
+    machine: &mut Machine,
+    layout: &Layout,
+    scratch: &Scratch,
+    taps: &[(Vec<isize>, usize)],
+    table: &CoeffTable,
+    resident: bool,
+) -> anyhow::Result<()> {
+    let bufs = scratch.bufs.as_ref().expect("2D scratch");
+    let n = layout.n as isize;
+    let r = layout.spec.order as isize;
+    let m = scratch.margin as isize;
+    let vlen = machine.cfg.vlen as isize;
+    let mut i0 = 0isize;
+    while i0 < n {
+        let ih = (STRIP_ROWS_2D as isize).min(n - i0);
+        // prefill frozen values in both buffers (instructions, charged):
+        // rows mapping outside the domain get the full frozen row; domain
+        // rows get the 2r frozen halo columns.
+        for buf in bufs.iter() {
+            let rows = buf.rows as isize;
+            for x in -r..rows + r {
+                let g = i0 - m + x;
+                if !(-r..n + r).contains(&g) {
+                    continue; // never read
+                }
+                if g < 0 || g >= n {
+                    // frozen full row, vector copies
+                    let mut c = -vlen; // cover the left halo block too
+                    while c < n + r {
+                        machine.emit(Instr::LdVec {
+                            dst: VReg(V_LOAD),
+                            addr: layout.a_addr(&[g, c]),
+                        });
+                        machine.emit(Instr::StVec { src: VReg(V_LOAD), addr: buf.addr(x, c) });
+                        c += vlen;
+                    }
+                } else {
+                    for c in 1..=r {
+                        machine.emit(Instr::LdSplat {
+                            dst: VReg(V_LOAD),
+                            addr: layout.a_addr(&[g, -c]),
+                        });
+                        machine
+                            .emit(Instr::StLane { src: VReg(V_LOAD), lane: 0, addr: buf.addr(x, -c) });
+                        machine.emit(Instr::LdSplat {
+                            dst: VReg(V_LOAD),
+                            addr: layout.a_addr(&[g, n - 1 + c]),
+                        });
+                        machine.emit(Instr::StLane {
+                            src: VReg(V_LOAD),
+                            lane: 0,
+                            addr: buf.addr(x, n - 1 + c),
+                        });
+                    }
+                }
+            }
+        }
+        // backward-derived row regions (no vector rounding needed in i)
+        let mut regions = [(0isize, 0isize); TIME_BLOCK];
+        regions[TIME_BLOCK - 1] = (i0, i0 + ih);
+        for s in (0..TIME_BLOCK - 1).rev() {
+            let (nlo, nhi) = regions[s + 1];
+            regions[s] = ((nlo - r).max(0), (nhi + r).min(n));
+        }
+        for (s, &(lo, hi)) in regions.iter().enumerate() {
+            let src_buf = if s == 0 { None } else { Some(&bufs[(s - 1) % 2]) };
+            let dst_buf = if s == TIME_BLOCK - 1 { None } else { Some(&bufs[s % 2]) };
+            for g in lo..hi {
+                let mut c0 = 0isize;
+                while c0 < n {
+                    let jam = JAM.min(((n - c0) / vlen) as usize).max(1);
+                    for u in 0..jam {
+                        machine.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+                    }
+                    for (slot, (off, di)) in taps.iter().enumerate() {
+                        let coeff = if resident {
+                            VReg(V_COEFF0 + slot as u8)
+                        } else {
+                            machine.emit(Instr::LdSplat {
+                                dst: VReg(V_CSPILL),
+                                addr: table.splat_addr(*di),
+                            });
+                            VReg(V_CSPILL)
+                        };
+                        for u in 0..jam {
+                            let gi = g + off[0];
+                            let gc = c0 + (u as isize) * vlen + off[1];
+                            let addr = match src_buf {
+                                None => layout.a_addr(&[gi, gc]),
+                                Some(b) => b.addr(gi - (i0 - m), gc),
+                            };
+                            machine.emit(Instr::LdVec { dst: VReg(V_LOAD), addr });
+                            machine.emit(Instr::VFma {
+                                acc: VReg(V_ACC0 + u as u8),
+                                a: VReg(V_LOAD),
+                                b: coeff,
+                            });
+                        }
+                    }
+                    for u in 0..jam {
+                        let gc = c0 + (u as isize) * vlen;
+                        let addr = match dst_buf {
+                            None => layout.b_addr(&[g, gc]),
+                            Some(b) => b.addr(g - (i0 - m), gc),
+                        };
+                        machine.emit(Instr::StVec { src: VReg(V_ACC0 + u as u8), addr });
+                    }
+                    c0 += (jam as isize) * vlen;
+                }
+            }
+        }
+        i0 += ih;
+    }
+    Ok(())
+}
+
+/// 3D: overlapped temporal blocking over unit-stride slabs with full
+/// scratch grids — the oversized working set that makes TV unprofitable
+/// in 3D (§5.2).
+fn gen3d_grids(
+    machine: &mut Machine,
+    layout: &Layout,
+    scratch: &Scratch,
+    taps: &[(Vec<isize>, usize)],
+    table: &CoeffTable,
+    resident: bool,
+) -> anyhow::Result<()> {
+    let grids = scratch.grids.as_ref().expect("3D scratch");
+    let (s0, s1) = (&grids[0], &grids[1]);
+    let vlen = machine.cfg.vlen;
+    let n = layout.n as isize;
+    let r = layout.spec.order as isize;
+    let strip = (STRIP_VECS_3D * vlen) as isize;
+    let vl = vlen as isize;
+    let mut c0 = 0isize;
+    while c0 < n {
+        let cw = strip.min(n - c0);
+        // derive each step's compute region backward from the strip so
+        // every read of step s+1 lands inside step s's region (or the
+        // frozen halo): reg[s] = round_out(reg[s+1] grown by r), clamped.
+        let mut regions = [(0isize, 0isize); TIME_BLOCK];
+        regions[TIME_BLOCK - 1] = (c0, c0 + cw);
+        for s in (0..TIME_BLOCK - 1).rev() {
+            let (nlo, nhi) = regions[s + 1];
+            let lo = ((nlo - r).div_euclid(vl) * vl).max(0);
+            let hi = (nhi + r + vl - 1).div_euclid(vl) * vl;
+            regions[s] = (lo, hi.min(n));
+        }
+        for (s, &(lo, hi)) in regions.iter().enumerate() {
+            let src: &Layout = match s {
+                0 => layout,
+                _ if s % 2 == 1 => s0,
+                _ => s1,
+            };
+            let dst: &Layout = if s == TIME_BLOCK - 1 {
+                layout
+            } else if s % 2 == 0 {
+                s0
+            } else {
+                s1
+            };
+            // dst for the final step is B of `layout`; intermediate steps
+            // use the A side of the scratch layouts.
+            step(
+                machine,
+                layout,
+                src,
+                dst,
+                s == TIME_BLOCK - 1,
+                taps,
+                table,
+                resident,
+                lo,
+                hi,
+            );
+        }
+        c0 += cw;
+    }
+    Ok(())
+}
+
+/// One gather-mode vector time-step over unit-stride range `[lo, hi)`.
+#[allow(clippy::too_many_arguments)]
+fn step(
+    machine: &mut Machine,
+    layout: &Layout,
+    src: &Layout,
+    dst: &Layout,
+    dst_is_b: bool,
+    taps: &[(Vec<isize>, usize)],
+    table: &CoeffTable,
+    resident: bool,
+    lo: isize,
+    hi: isize,
+) {
+    let vlen = machine.cfg.vlen as isize;
+    let n = layout.n as isize;
+    let dims = layout.spec.dims;
+    // sources always read the A side (scratch grids live in their layout's
+    // A array); only the final step writes the real B.
+    let src_addr = |idx: &[isize]| src.a_addr(idx);
+    let dst_addr = |idx: &[isize]| if dst_is_b { dst.b_addr(idx) } else { dst.a_addr(idx) };
+    let outer_loop = |machine: &mut Machine, outer: &[isize]| {
+        let mut c = lo;
+        while c < hi {
+            let jam = JAM.min(((hi - c) / vlen) as usize).max(1);
+            for u in 0..jam {
+                machine.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+            }
+            for (slot, (off, di)) in taps.iter().enumerate() {
+                let coeff = if resident {
+                    VReg(V_COEFF0 + slot as u8)
+                } else {
+                    machine
+                        .emit(Instr::LdSplat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
+                    VReg(V_CSPILL)
+                };
+                for u in 0..jam {
+                    let mut idx: Vec<isize> =
+                        outer.iter().enumerate().map(|(d, &o)| o + off[d]).collect();
+                    idx.push(c + (u as isize) * vlen + off[dims - 1]);
+                    machine.emit(Instr::LdVec { dst: VReg(V_LOAD), addr: src_addr(&idx) });
+                    machine.emit(Instr::VFma {
+                        acc: VReg(V_ACC0 + u as u8),
+                        a: VReg(V_LOAD),
+                        b: coeff,
+                    });
+                }
+            }
+            for u in 0..jam {
+                let mut idx: Vec<isize> = outer.to_vec();
+                idx.push(c + (u as isize) * vlen);
+                machine.emit(Instr::StVec { src: VReg(V_ACC0 + u as u8), addr: dst_addr(&idx) });
+            }
+            c += (jam as isize) * vlen;
+        }
+    };
+    if dims == 2 {
+        for i in 0..n {
+            outer_loop(machine, &[i]);
+        }
+    } else {
+        for i in 0..n {
+            for j in 0..n {
+                outer_loop(machine, &[i, j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, DenseGrid, StencilSpec};
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn tv_computes_four_steps() {
+        let cfg = SimConfig::default();
+        let mut m = Machine::new(cfg);
+        let spec = StencilSpec::star2d(1);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let g = DenseGrid::verification_input(&[34, 34], 3); // N = 32
+        let layout = Layout::alloc(&mut m, spec, &g);
+        let table = CoeffTable::install_splats(&mut m, &coeffs);
+        let scratch = setup(&mut m, &layout);
+        generate(&mut m, &layout, &scratch, &coeffs, &table).unwrap();
+        let got = layout.read_b(&m);
+        let want = reference::evolve(&coeffs, &g, TIME_BLOCK);
+        let err = got.max_abs_diff_interior(&want, 1);
+        assert!(err < 1e-12, "err={err}");
+    }
+}

@@ -1,0 +1,312 @@
+//! End-to-end method runner: allocate grids in simulator memory, generate
+//! and execute a method's program, verify against the scalar oracle, and
+//! return timing statistics.
+//!
+//! Every benchmark number in this repo flows through [`run_method`], so a
+//! result is only ever reported for a program that produced bit-accurate
+//! (within 1e-9) stencil output.
+
+use super::common::{CoeffTable, Layout, OuterParams};
+use super::{dlt, outer, scalar, tv, vectorize};
+use crate::scatter::build_cover;
+use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use crate::sim::{Machine, RunStats, SimConfig};
+use std::fmt;
+
+/// A stencil execution method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// The paper's outer-product algorithm.
+    Outer(OuterParams),
+    /// Compiler-style auto-vectorization (the speedup baseline).
+    AutoVec,
+    /// Data Layout Transformation [20].
+    Dlt,
+    /// Temporal vectorization [57] (modeled as 4-step temporal blocking).
+    Tv,
+    /// Plain scalar code.
+    Scalar,
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Method::Outer(p) => write!(f, "outer({:?},ui={},uk={},sched={})",
+                p.option, p.ui, p.uk, p.scheduled),
+            Method::AutoVec => write!(f, "autovec"),
+            Method::Dlt => write!(f, "dlt"),
+            Method::Tv => write!(f, "tv"),
+            Method::Scalar => write!(f, "scalar"),
+        }
+    }
+}
+
+/// Outcome of one verified simulation run.
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    /// The method that ran.
+    pub method: Method,
+    /// The stencil.
+    pub spec: StencilSpec,
+    /// Domain extent per dimension.
+    pub n: usize,
+    /// Time steps the program advanced (1, or 4 for TV).
+    pub steps: usize,
+    /// Timing/instruction counters of the measured run.
+    pub stats: RunStats,
+    /// Max |error| vs. the scalar reference over the interior.
+    pub max_err: f64,
+}
+
+impl MethodResult {
+    /// Domain points.
+    pub fn points(&self) -> usize {
+        self.n.pow(self.spec.dims as u32)
+    }
+
+    /// Cycles per output point per time step — the normalized cost all
+    /// figures/tables are computed from.
+    pub fn cycles_per_point(&self) -> f64 {
+        self.stats.cycles as f64 / (self.points() * self.steps) as f64
+    }
+
+    /// True when the run reproduced the oracle.
+    pub fn verified(&self) -> bool {
+        self.max_err < 1e-9
+    }
+}
+
+/// Run `method` on a fresh machine and verify the result.
+///
+/// `warm` runs the program once before measuring (steady-state caches, the
+/// paper's in-cache methodology); pass `false` for cold-cache runs.
+pub fn run_method(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    warm: bool,
+) -> anyhow::Result<MethodResult> {
+    let coeffs = CoeffTensor::paper_default(spec);
+    let shape = vec![n + 2 * spec.order; spec.dims];
+    let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+    let mut machine = Machine::new(cfg.clone());
+    let layout = Layout::alloc(&mut machine, spec, &grid);
+
+    // ---- one-time setup (never charged to the measured run) ----
+    let cfg2 = machine.cfg.clone();
+    let outer_setup = if let Method::Outer(params) = method {
+        let cover = build_cover(&coeffs, params.option)?;
+        let table = CoeffTable::install_full(&mut machine, &coeffs, &cover);
+        Some((cover, table, params))
+    } else {
+        None
+    };
+    let splat_table = match method {
+        Method::Outer(_) => None,
+        _ => Some(CoeffTable::install_splats(&mut machine, &coeffs)),
+    };
+    let dlt_layout = if method == Method::Dlt {
+        Some(dlt::DltLayout::build(&mut machine, &layout, &grid))
+    } else {
+        None
+    };
+    let tv_scratch = if method == Method::Tv {
+        Some(tv::setup(&mut machine, &layout))
+    } else {
+        None
+    };
+    machine.finish(); // reset timing; setup is host work
+
+    let passes = if warm { 2 } else { 1 };
+    let mut stats = RunStats::default();
+    let mut steps = 1usize;
+    for _pass in 0..passes {
+        match method {
+            Method::Outer(_) => {
+                let (cover, table, params) = outer_setup.as_ref().unwrap();
+                outer::generate(&cfg2, &layout, cover, table, *params, &mut machine)?;
+            }
+            Method::AutoVec => {
+                vectorize::generate(
+                    &cfg2,
+                    &layout,
+                    &coeffs,
+                    splat_table.as_ref().unwrap(),
+                    &mut machine,
+                )?;
+            }
+            Method::Scalar => {
+                scalar::generate(
+                    &cfg2,
+                    &layout,
+                    &coeffs,
+                    splat_table.as_ref().unwrap(),
+                    &mut machine,
+                )?;
+            }
+            Method::Dlt => {
+                dlt::generate(
+                    &cfg2,
+                    &layout,
+                    dlt_layout.as_ref().unwrap(),
+                    &coeffs,
+                    splat_table.as_ref().unwrap(),
+                    &mut machine,
+                )?;
+            }
+            Method::Tv => {
+                tv::generate(
+                    &mut machine,
+                    &layout,
+                    tv_scratch.as_ref().unwrap(),
+                    &coeffs,
+                    splat_table.as_ref().unwrap(),
+                )?;
+                steps = tv::TIME_BLOCK;
+            }
+        }
+        stats = machine.finish();
+    }
+    let got = match &dlt_layout {
+        Some(d) => d.read_b(&machine, &grid),
+        None => layout.read_b(&machine),
+    };
+    let want = reference::evolve(&coeffs, &grid, steps);
+    let max_err = got.max_abs_diff_interior(&want, spec.order);
+    Ok(MethodResult { method, spec, n, steps, stats, max_err })
+}
+
+/// Speedup of `m` over `base`, normalized per point per step.
+pub fn speedup(base: &MethodResult, m: &MethodResult) -> f64 {
+    base.cycles_per_point() / m.cycles_per_point()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scatter::CoverOption;
+
+    fn check(spec: StencilSpec, n: usize, method: Method) -> MethodResult {
+        let cfg = SimConfig::default();
+        let r = run_method(&cfg, spec, n, method, true).unwrap();
+        assert!(
+            r.verified(),
+            "{method} on {spec} N={n}: max_err={}",
+            r.max_err
+        );
+        r
+    }
+
+    #[test]
+    fn scalar_verifies_2d() {
+        check(StencilSpec::box2d(1), 16, Method::Scalar);
+        check(StencilSpec::star2d(2), 16, Method::Scalar);
+        check(StencilSpec::diag2d(1), 16, Method::Scalar);
+    }
+
+    #[test]
+    fn scalar_verifies_3d() {
+        check(StencilSpec::box3d(1), 8, Method::Scalar);
+        check(StencilSpec::star3d(2), 8, Method::Scalar);
+    }
+
+    #[test]
+    fn autovec_verifies() {
+        check(StencilSpec::box2d(1), 16, Method::AutoVec);
+        check(StencilSpec::box2d(3), 16, Method::AutoVec);
+        check(StencilSpec::star2d(1), 24, Method::AutoVec);
+        check(StencilSpec::box3d(1), 8, Method::AutoVec);
+        check(StencilSpec::star3d(3), 16, Method::AutoVec);
+    }
+
+    #[test]
+    fn dlt_verifies() {
+        check(StencilSpec::box2d(1), 16, Method::Dlt);
+        check(StencilSpec::star2d(2), 32, Method::Dlt);
+        check(StencilSpec::box3d(1), 8, Method::Dlt);
+        check(StencilSpec::star3d(1), 16, Method::Dlt);
+    }
+
+    #[test]
+    fn tv_verifies() {
+        let r = check(StencilSpec::star2d(1), 32, Method::Tv);
+        assert_eq!(r.steps, 4);
+        check(StencilSpec::box3d(1), 8, Method::Tv);
+    }
+
+    #[test]
+    fn outer_parallel_verifies_2d() {
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 8, scheduled: true };
+        check(StencilSpec::box2d(1), 16, Method::Outer(p));
+        check(StencilSpec::box2d(2), 16, Method::Outer(p));
+        check(StencilSpec::star2d(1), 16, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_parallel_verifies_2d_unscheduled() {
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 1, scheduled: false };
+        check(StencilSpec::box2d(1), 16, Method::Outer(p));
+        check(StencilSpec::star2d(3), 16, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_orthogonal_verifies_2d() {
+        let p = OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 4, scheduled: true };
+        check(StencilSpec::star2d(1), 16, Method::Outer(p));
+        check(StencilSpec::star2d(2), 16, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_minimal_verifies_2d() {
+        let p = OuterParams { option: CoverOption::MinimalAxis, ui: 1, uk: 4, scheduled: true };
+        check(StencilSpec::box2d(1), 16, Method::Outer(p));
+        check(StencilSpec::star2d(2), 16, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_diagonals_verify() {
+        let p = OuterParams { option: CoverOption::Diagonals, ui: 1, uk: 2, scheduled: true };
+        check(StencilSpec::diag2d(1), 16, Method::Outer(p));
+        check(StencilSpec::diag2d(2), 16, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_parallel_verifies_3d() {
+        let p = OuterParams { option: CoverOption::Parallel, ui: 4, uk: 2, scheduled: true };
+        check(StencilSpec::box3d(1), 8, Method::Outer(p));
+        check(StencilSpec::star3d(1), 8, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_orthogonal_verifies_3d() {
+        let p = OuterParams { option: CoverOption::Orthogonal, ui: 4, uk: 1, scheduled: true };
+        check(StencilSpec::star3d(1), 8, Method::Outer(p));
+        check(StencilSpec::star3d(2), 8, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_hybrid_verifies_3d() {
+        let p = OuterParams { option: CoverOption::Hybrid, ui: 1, uk: 4, scheduled: true };
+        check(StencilSpec::star3d(1), 8, Method::Outer(p));
+        check(StencilSpec::star3d(3), 8, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_3d_unscheduled() {
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 1, scheduled: false };
+        check(StencilSpec::box3d(1), 8, Method::Outer(p));
+        check(StencilSpec::star3d(2), 8, Method::Outer(p));
+    }
+
+    #[test]
+    fn outer_beats_autovec_on_box2d() {
+        let cfg = SimConfig::default();
+        let base = run_method(&cfg, StencilSpec::box2d(1), 64, Method::AutoVec, true).unwrap();
+        let p = OuterParams::paper_best(StencilSpec::box2d(1));
+        let ours = run_method(&cfg, StencilSpec::box2d(1), 64, Method::Outer(p), true).unwrap();
+        assert!(base.verified() && ours.verified());
+        let s = speedup(&base, &ours);
+        assert!(s > 1.5, "expected clear speedup, got {s:.2}×");
+    }
+}

@@ -1,0 +1,84 @@
+//! Named experiments: each regenerates one paper artifact (or all).
+
+use crate::bench_harness::{ablation, fig3, fig4, fig5, table3, Report};
+use crate::sim::SimConfig;
+use std::str::FromStr;
+use std::time::Instant;
+
+/// The experiment catalogue (`stencil-matrix bench <name>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Experiment {
+    /// Fig. 3 — CLS options for star stencils.
+    Fig3,
+    /// Fig. 4 — unrolling + scheduling ablation.
+    Fig4,
+    /// Fig. 5 — method comparison at r = 1.
+    Fig5,
+    /// Table 3 — full speedup matrix.
+    Table3,
+    /// Extra ablations (unroll sweep, register-count sensitivity).
+    Ablations,
+    /// Everything above.
+    All,
+}
+
+impl FromStr for Experiment {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Experiment> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fig3" => Experiment::Fig3,
+            "fig4" => Experiment::Fig4,
+            "fig5" => Experiment::Fig5,
+            "table3" => Experiment::Table3,
+            "ablations" | "ablation" => Experiment::Ablations,
+            "all" => Experiment::All,
+            other => anyhow::bail!(
+                "unknown experiment '{other}' (fig3|fig4|fig5|table3|ablations|all)"
+            ),
+        })
+    }
+}
+
+/// Run an experiment; reports are printed and written to
+/// `target/bench-reports/`.
+pub fn run_experiment(cfg: &SimConfig, exp: Experiment) -> anyhow::Result<Vec<Report>> {
+    let t0 = Instant::now();
+    let reports = match exp {
+        Experiment::Fig3 => fig3::run_all(cfg)?,
+        Experiment::Fig4 => fig4::run_all(cfg)?,
+        Experiment::Fig5 => fig5::run_all(cfg)?,
+        Experiment::Table3 => table3::run_all(cfg)?,
+        Experiment::Ablations => ablation::run_all(cfg)?,
+        Experiment::All => {
+            let mut all = fig3::run_all(cfg)?;
+            all.extend(fig4::run_all(cfg)?);
+            all.extend(fig5::run_all(cfg)?);
+            all.extend(table3::run_all(cfg)?);
+            all.extend(ablation::run_all(cfg)?);
+            all
+        }
+    };
+    for r in &reports {
+        r.emit()?;
+    }
+    eprintln!(
+        "[{exp:?}] {} report(s) in {:.1}s → {}",
+        reports.len(),
+        t0.elapsed().as_secs_f64(),
+        Report::dir().display()
+    );
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_parsing() {
+        assert_eq!("fig3".parse::<Experiment>().unwrap(), Experiment::Fig3);
+        assert_eq!("TABLE3".parse::<Experiment>().unwrap(), Experiment::Table3);
+        assert!("fig9".parse::<Experiment>().is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! The L3 coordinator: experiment orchestration around the simulator and
+//! the PJRT runtime.
+//!
+//! For this paper the system contribution lives in-core (L1/L2-of-the-
+//! stack: the outer-product algorithm and its code generator), so L3 is a
+//! *driver* per the architecture contract: CLI, experiment running,
+//! sweeps, report collection, and the PJRT evolution service.
+
+pub mod experiment;
+pub mod service;
+pub mod sweep;
+
+pub use experiment::{run_experiment, Experiment};
+pub use service::EvolutionService;
+pub use sweep::Sweep;

@@ -1,0 +1,82 @@
+//! Generic parameter sweeps over verified simulation runs.
+
+use crate::codegen::{run_method, Method, MethodResult};
+use crate::stencil::StencilSpec;
+use crate::sim::SimConfig;
+
+/// A cartesian sweep of (spec, size, method) cells.
+#[derive(Debug, Clone, Default)]
+pub struct Sweep {
+    /// Stencils to sweep.
+    pub specs: Vec<StencilSpec>,
+    /// Domain sizes to sweep.
+    pub sizes: Vec<usize>,
+    /// Methods to sweep.
+    pub methods: Vec<Method>,
+    /// Warm (steady-state) or cold caches.
+    pub warm: bool,
+}
+
+impl Sweep {
+    /// New warm sweep.
+    pub fn new() -> Sweep {
+        Sweep { warm: true, ..Default::default() }
+    }
+
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        self.specs.len() * self.sizes.len() * self.methods.len()
+    }
+
+    /// True when the sweep is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run every cell, calling `progress` after each; all results are
+    /// oracle-verified (an unverified run is an error).
+    pub fn run(
+        &self,
+        cfg: &SimConfig,
+        mut progress: impl FnMut(usize, usize, &MethodResult),
+    ) -> anyhow::Result<Vec<MethodResult>> {
+        let total = self.len();
+        let mut out = Vec::with_capacity(total);
+        for &spec in &self.specs {
+            for &n in &self.sizes {
+                for &method in &self.methods {
+                    let res = run_method(cfg, spec, n, method, self.warm)?;
+                    anyhow::ensure!(
+                        res.verified(),
+                        "sweep cell {spec} N={n} {method}: max_err {}",
+                        res.max_err
+                    );
+                    progress(out.len() + 1, total, &res);
+                    out.push(res);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::OuterParams;
+
+    #[test]
+    fn sweep_runs_all_cells() {
+        let mut sweep = Sweep::new();
+        sweep.specs = vec![StencilSpec::star2d(1)];
+        sweep.sizes = vec![16, 32];
+        sweep.methods = vec![
+            Method::AutoVec,
+            Method::Outer(OuterParams::paper_best(StencilSpec::star2d(1))),
+        ];
+        let mut seen = 0;
+        let res = sweep.run(&SimConfig::default(), |_, _, _| seen += 1).unwrap();
+        assert_eq!(res.len(), 4);
+        assert_eq!(seen, 4);
+    }
+}

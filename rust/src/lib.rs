@@ -1,0 +1,41 @@
+//! # Stencil Matrixization
+//!
+//! A reproduction of *Stencil Matrixization* (Zhao et al., CS.DC 2023): a
+//! stencil-computation algorithm built on **vector outer products** (ARM
+//! SME / IBM MMA-style instructions), together with everything needed to
+//! evaluate it:
+//!
+//! - [`stencil`] — stencil specs, coefficient algebra (gather ↔ scatter,
+//!   Eq. (5)), grids and the scalar reference oracle.
+//! - [`scatter`] — the paper's §3 contribution: coefficient lines, the
+//!   outer-product expansion (Eq. (12)), cover options (parallel /
+//!   orthogonal / hybrid) and the minimal axis-parallel line cover solved
+//!   via König's theorem (§3.5), plus the §3.4 instruction-count analysis.
+//! - [`sim`] — the evaluation substrate: a configurable, SME-like
+//!   functional + timing simulator (vector & matrix register files, outer
+//!   product unit, L1/L2/memory hierarchy) replacing the paper's
+//!   proprietary ARM simulator.
+//! - [`codegen`] — code generators targeting the simulator ISA: the
+//!   paper's outer-product method (§4: multi-dimensional unrolling,
+//!   outer-product scheduling, data reorganization) and the baselines
+//!   (scalar, compiler-style auto-vectorization, DLT, temporal
+//!   vectorization).
+//! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executing them from Rust; Python never runs
+//!   at request time.
+//! - [`coordinator`] — experiment runner, parameter sweeps, report tables
+//!   and the async batch driver.
+//! - [`bench_harness`] — regenerates every figure and table of the paper's
+//!   evaluation (Fig. 3, Fig. 4, Fig. 5, Table 3) plus ablations.
+
+pub mod bench_harness;
+pub mod codegen;
+pub mod coordinator;
+pub mod runtime;
+pub mod scatter;
+pub mod sim;
+pub mod stencil;
+pub mod util;
+
+/// Vector length in f64 lanes (512-bit vectors, §5.1).
+pub const VLEN: usize = 8;

@@ -1,0 +1,280 @@
+//! `stencil-matrix` — CLI for the Stencil Matrixization reproduction.
+//!
+//! ```text
+//! stencil-matrix analyze  --stencil 2d-box --order 2 [--n 8]
+//! stencil-matrix cover    --stencil 2d-star --order 2 --option minimalaxis
+//! stencil-matrix simulate --stencil 2d-box --order 1 --size 64 \
+//!                         --method outer [--option parallel] [--ui 1] \
+//!                         [--uk 8] [--no-sched] [--cold]
+//! stencil-matrix bench    fig3|fig4|fig5|table3|ablations|all
+//! stencil-matrix serve    --artifact evolve_2d5p_n256_t4 --executions 25
+//! stencil-matrix list     [--artifacts-dir artifacts]
+//! ```
+
+use stencil_matrix::codegen::{run_method, Method, OuterParams};
+use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
+use stencil_matrix::scatter::{analysis, build_cover, CoverOption};
+use stencil_matrix::stencil::{CoeffTensor, StencilKind, StencilSpec};
+use stencil_matrix::sim::SimConfig;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` arguments plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut a = Args { positional: Vec::new(), flags: HashMap::new(), switches: Vec::new() };
+    let mut i = 0;
+    while i < argv.len() {
+        let arg = &argv[i];
+        if let Some(key) = arg.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                a.flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                a.switches.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            a.positional.push(arg.clone());
+            i += 1;
+        }
+    }
+    a
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn parse_spec(args: &Args) -> anyhow::Result<StencilSpec> {
+    let st = args.get("stencil").unwrap_or("2d-box");
+    let order = args.usize_or("order", 1)?;
+    let (dims, kind) = match st {
+        "2d-box" => (2, StencilKind::Box),
+        "2d-star" => (2, StencilKind::Star),
+        "2d-diag" => (2, StencilKind::Diagonal),
+        "3d-box" => (3, StencilKind::Box),
+        "3d-star" => (3, StencilKind::Star),
+        other => anyhow::bail!("unknown --stencil '{other}' (2d-box|2d-star|2d-diag|3d-box|3d-star)"),
+    };
+    StencilSpec::new(dims, order, kind)
+}
+
+fn parse_option(s: &str) -> anyhow::Result<CoverOption> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "parallel" | "p" => CoverOption::Parallel,
+        "orthogonal" | "o" => CoverOption::Orthogonal,
+        "hybrid" | "h" => CoverOption::Hybrid,
+        "minimalaxis" | "minimal" | "m" => CoverOption::MinimalAxis,
+        "diagonals" | "d" => CoverOption::Diagonals,
+        other => anyhow::bail!("unknown --option '{other}'"),
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..]);
+    let cfg = SimConfig::default();
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => print_help(),
+        "analyze" => {
+            let spec = parse_spec(&args)?;
+            let n = args.usize_or("n", cfg.vlen)?;
+            println!("§3.4 analysis for {spec}, block extent n = {n}:");
+            for option in CoverOption::applicable(spec) {
+                let a = analysis::analyze(spec, option, n)?;
+                println!(
+                    "  {:12} lines→ vec FMA/outvec {:5.1} | outer/outvec {:6.2} | instr ratio {:5.2}x",
+                    format!("{option:?}"),
+                    a.vec_fma_per_outvec,
+                    a.outer_per_outvec,
+                    a.instr_ratio
+                );
+            }
+            let (before, after) = analysis::box_per_line_reduction(spec.order, n);
+            println!("  per-line reduction (box): {before} → {after} instructions/output vector");
+        }
+        "cover" => {
+            let spec = parse_spec(&args)?;
+            let option = parse_option(args.get("option").unwrap_or("parallel"))?;
+            let coeffs = CoeffTensor::paper_default(spec);
+            let cover = build_cover(&coeffs, option)?;
+            println!("{spec} with {option:?}: {} line(s)", cover.len());
+            for (i, line) in cover.lines.iter().enumerate() {
+                println!(
+                    "  line {i}: dir {:?} base {:?} weights {:?} ({} nonzero)",
+                    line.dir,
+                    line.base,
+                    line.weights,
+                    line.nonzeros()
+                );
+            }
+            println!("outer products per n=8 block: {}", cover.outer_products(8));
+        }
+        "simulate" => {
+            let spec = parse_spec(&args)?;
+            let n = args.usize_or("size", 64)?;
+            let method = match args.get("method").unwrap_or("outer") {
+                "outer" => {
+                    let mut p = OuterParams::paper_best(spec);
+                    if let Some(o) = args.get("option") {
+                        p.option = parse_option(o)?;
+                    }
+                    p.ui = args.usize_or("ui", p.ui)?;
+                    p.uk = args.usize_or("uk", p.uk)?;
+                    if args.has("no-sched") {
+                        p.scheduled = false;
+                    }
+                    Method::Outer(p)
+                }
+                "autovec" => Method::AutoVec,
+                "dlt" => Method::Dlt,
+                "tv" => Method::Tv,
+                "scalar" => Method::Scalar,
+                other => anyhow::bail!("unknown --method '{other}'"),
+            };
+            let warm = !args.has("cold");
+            let res = run_method(&cfg, spec, n, method, warm)?;
+            println!(
+                "{spec} N={n} {method}: {} cycles, {:.3} cyc/pt, verified={} (max err {:.2e})",
+                res.stats.cycles,
+                res.cycles_per_point(),
+                res.verified(),
+                res.max_err
+            );
+            println!("{}", res.stats);
+            println!("{}", stencil_matrix::sim::trace::roofline(&cfg, &res.stats));
+            anyhow::ensure!(res.verified(), "simulation output did not match the oracle");
+        }
+        "disasm" => {
+            use stencil_matrix::codegen::common::{CoeffTable, Layout};
+            use stencil_matrix::sim::isa::Program;
+            use stencil_matrix::sim::Machine;
+            use stencil_matrix::stencil::DenseGrid;
+            let spec = parse_spec(&args)?;
+            let n = args.usize_or("size", 16)?;
+            let limit = args.usize_or("limit", 80)?;
+            let mut p = OuterParams::paper_best(spec);
+            if let Some(o) = args.get("option") {
+                p.option = parse_option(o)?;
+            }
+            let coeffs = CoeffTensor::paper_default(spec);
+            let cover = build_cover(&coeffs, p.option)?;
+            let mut machine = Machine::new(cfg.clone());
+            let shape = vec![n + 2 * spec.order; spec.dims];
+            let grid = DenseGrid::verification_input(&shape, 1);
+            let layout = Layout::alloc(&mut machine, spec, &grid);
+            let table = CoeffTable::install_full(&mut machine, &coeffs, &cover);
+            let mut prog = Program::default();
+            stencil_matrix::codegen::outer::generate(&cfg, &layout, &cover, &table, p, &mut prog)?;
+            println!(
+                "# {spec} N={n} {} — {} instructions, {} fmopa",
+                p.label(spec.dims),
+                prog.0.len(),
+                prog.fmopa_count()
+            );
+            print!("{}", stencil_matrix::sim::trace::disassemble(&prog, limit));
+        }
+        "bench" => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all")
+                .parse::<Experiment>()?;
+            run_experiment(&cfg, which)?;
+        }
+        "serve" => {
+            let dir = PathBuf::from(args.get("artifacts-dir").unwrap_or("artifacts"));
+            let mut svc = EvolutionService::new(&dir)?;
+            println!("platform: {}", svc.platform());
+            let artifact = args.get("artifact").unwrap_or("evolve_2d5p_n64_t8").to_string();
+            let executions = args.usize_or("executions", 10)?;
+            let req = stencil_matrix::coordinator::service::EvolveRequest {
+                artifact,
+                executions,
+                verify: !args.has("no-verify"),
+            };
+            let (_, report) = svc.serve(&req)?;
+            println!(
+                "{}: {} executions / {} steps in {:.3}s → {:.2} Mpoints/s (max err {:?})",
+                req.artifact,
+                report.executions,
+                report.steps,
+                report.seconds,
+                report.points_per_sec / 1e6,
+                report.max_err
+            );
+            if let Some(err) = report.max_err {
+                anyhow::ensure!(err < 1e-9, "PJRT output did not match the oracle");
+            }
+        }
+        "list" => {
+            let dir = PathBuf::from(args.get("artifacts-dir").unwrap_or("artifacts"));
+            let reg = stencil_matrix::runtime::Registry::load(&dir)?;
+            for a in &reg.artifacts {
+                println!(
+                    "{:24} {} N={} steps={} ({})",
+                    a.name,
+                    a.spec,
+                    a.n,
+                    a.steps,
+                    a.path.display()
+                );
+            }
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "stencil-matrix — Stencil Matrixization (CS.DC 2023) reproduction
+
+USAGE:
+  stencil-matrix analyze  --stencil 2d-box --order 2 [--n 8]
+  stencil-matrix cover    --stencil 2d-star --order 2 --option orthogonal
+  stencil-matrix simulate --stencil 2d-box --order 1 --size 64 --method outer
+                          [--option parallel] [--ui 1] [--uk 8] [--no-sched] [--cold]
+  stencil-matrix disasm   --stencil 2d-box --order 1 --size 16 [--limit 80]
+  stencil-matrix bench    fig3|fig4|fig5|table3|ablations|all
+  stencil-matrix serve    --artifact evolve_2d5p_n256_t4 --executions 25
+  stencil-matrix list     [--artifacts-dir artifacts]
+
+Methods: outer (the paper's), autovec, dlt, tv, scalar.
+Stencils: 2d-box 2d-star 2d-diag 3d-box 3d-star; --order 1..4."
+    );
+}

@@ -1,0 +1,67 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Pattern (see /opt/xla-example/src/bin/load_hlo.rs): `PjRtClient::cpu()`
+//! → `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos).
+
+use super::registry::ArtifactMeta;
+use crate::stencil::DenseGrid;
+
+/// A live PJRT client plus the executables compiled on it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled stencil executable.
+pub struct StencilExecutable {
+    /// The artifact this executable was compiled from.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Platform name of the underlying client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn compile(&self, meta: &ArtifactMeta) -> anyhow::Result<StencilExecutable> {
+        let path = meta
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(StencilExecutable { meta: meta.clone(), exe })
+    }
+}
+
+impl StencilExecutable {
+    /// Run one execution: grid in (storage shape), grid out. Advances
+    /// `meta.steps` time steps.
+    pub fn run(&self, grid: &DenseGrid) -> anyhow::Result<DenseGrid> {
+        anyhow::ensure!(
+            grid.shape == self.meta.shape(),
+            "grid shape {:?} does not match artifact {:?}",
+            grid.shape,
+            self.meta.shape()
+        );
+        let dims: Vec<i64> = grid.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&grid.data).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f64>()?;
+        anyhow::ensure!(data.len() == grid.data.len(), "output size mismatch");
+        Ok(DenseGrid { shape: grid.shape.clone(), data })
+    }
+}

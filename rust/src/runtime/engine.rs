@@ -1,0 +1,72 @@
+//! The stencil engine: multi-execution evolution over a compiled
+//! artifact, with throughput accounting and oracle verification.
+
+use super::client::StencilExecutable;
+use crate::stencil::{reference, CoeffTensor, DenseGrid};
+use std::time::Instant;
+
+/// Outcome of an engine evolution run.
+#[derive(Debug, Clone)]
+pub struct EvolutionReport {
+    /// Executions performed.
+    pub executions: usize,
+    /// Total time steps advanced (`executions × artifact.steps`).
+    pub steps: usize,
+    /// Wall-clock seconds of the execute loop (PJRT only, no verify).
+    pub seconds: f64,
+    /// Grid points updated per second (points × steps / seconds).
+    pub points_per_sec: f64,
+    /// Max |error| vs the scalar reference (interior), if verified.
+    pub max_err: Option<f64>,
+}
+
+/// Drives a [`StencilExecutable`] over many executions.
+pub struct StencilEngine {
+    exe: StencilExecutable,
+}
+
+impl StencilEngine {
+    /// Wrap a compiled executable.
+    pub fn new(exe: StencilExecutable) -> StencilEngine {
+        StencilEngine { exe }
+    }
+
+    /// The artifact metadata.
+    pub fn meta(&self) -> &super::registry::ArtifactMeta {
+        &self.exe.meta
+    }
+
+    /// Run `executions` back-to-back executions starting from `grid`,
+    /// optionally verifying the final state against the scalar oracle.
+    pub fn evolve(
+        &self,
+        grid: &DenseGrid,
+        executions: usize,
+        verify: bool,
+    ) -> anyhow::Result<(DenseGrid, EvolutionReport)> {
+        let meta = &self.exe.meta;
+        let t0 = Instant::now();
+        let mut cur = grid.clone();
+        for _ in 0..executions {
+            cur = self.exe.run(&cur)?;
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let steps = executions * meta.steps;
+        let interior_points = meta.n.pow(meta.spec.dims as u32);
+        let max_err = if verify {
+            let coeffs = CoeffTensor::paper_default(meta.spec);
+            let want = reference::evolve(&coeffs, grid, steps);
+            Some(cur.max_abs_diff_interior(&want, meta.spec.order))
+        } else {
+            None
+        };
+        let report = EvolutionReport {
+            executions,
+            steps,
+            seconds,
+            points_per_sec: interior_points as f64 * steps as f64 / seconds.max(1e-12),
+            max_err,
+        };
+        Ok((cur, report))
+    }
+}

@@ -1,0 +1,18 @@
+//! The PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and executes them from Rust. Python never runs on this path — after
+//! `make artifacts`, the binary is self-contained.
+//!
+//! - [`registry`] — parses `artifacts/manifest.json` into typed
+//!   [`ArtifactMeta`] records.
+//! - [`client`] — thin wrapper over the `xla` crate: PJRT CPU client,
+//!   HLO-text loading, compilation, execution.
+//! - [`engine`] — the stencil engine: typed grid in/out, multi-step
+//!   evolution, throughput accounting and oracle verification.
+
+pub mod client;
+pub mod engine;
+pub mod registry;
+
+pub use client::{PjrtRuntime, StencilExecutable};
+pub use engine::{EvolutionReport, StencilEngine};
+pub use registry::{ArtifactMeta, Registry};

@@ -1,0 +1,121 @@
+//! Artifact registry: `artifacts/manifest.json` → typed metadata.
+
+use crate::stencil::{StencilKind, StencilSpec};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT artifact (written by `python/compile/aot.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Variant name, e.g. `step_2d5p_n64`.
+    pub name: String,
+    /// The stencil the artifact computes.
+    pub spec: StencilSpec,
+    /// Domain extent `N`.
+    pub n: usize,
+    /// Storage extent `N + 2r` (the executable's array shape per dim).
+    pub storage_extent: usize,
+    /// Time steps one execution advances.
+    pub steps: usize,
+    /// Path to the HLO text.
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Total elements of the input/output array.
+    pub fn elements(&self) -> usize {
+        self.storage_extent.pow(self.spec.dims as u32)
+    }
+
+    /// Array shape per dimension.
+    pub fn shape(&self) -> Vec<usize> {
+        vec![self.storage_extent; self.spec.dims]
+    }
+}
+
+/// The set of available artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    /// All artifacts, manifest order.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts` first)", manifest.display()))?;
+        let v = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for item in v.as_arr().ok_or_else(|| anyhow::anyhow!("manifest must be an array"))? {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let spec_v = item.get("spec").ok_or_else(|| anyhow::anyhow!("{name}: missing spec"))?;
+            let dims = spec_v.get("dims").and_then(Json::as_usize).unwrap_or(0);
+            let order = spec_v.get("order").and_then(Json::as_usize).unwrap_or(0);
+            let kind = match spec_v.get("kind").and_then(Json::as_str) {
+                Some("box") => StencilKind::Box,
+                Some("star") => StencilKind::Star,
+                Some("diag") => StencilKind::Diagonal,
+                k => anyhow::bail!("{name}: bad kind {k:?}"),
+            };
+            let spec = StencilSpec::new(dims, order, kind)?;
+            let file = item
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?;
+            artifacts.push(ArtifactMeta {
+                spec,
+                n: item.get("n").and_then(Json::as_usize).unwrap_or(0),
+                storage_extent: item
+                    .get("storage_extent")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                steps: item.get("steps").and_then(Json::as_usize).unwrap_or(1),
+                path: dir.join(file),
+                name,
+            });
+        }
+        Ok(Registry { artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                anyhow::anyhow!("no artifact '{name}' (have: {names:?})")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let dir = std::env::temp_dir().join("sm-registry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"[{"name":"step_2d5p_n64","spec":{"dims":2,"order":1,"kind":"star"},
+                 "n":64,"storage_extent":66,"steps":1,"dtype":"f64",
+                 "file":"step_2d5p_n64.hlo.txt"}]"#,
+        )
+        .unwrap();
+        let reg = Registry::load(&dir).unwrap();
+        let a = reg.find("step_2d5p_n64").unwrap();
+        assert_eq!(a.n, 64);
+        assert_eq!(a.storage_extent, 66);
+        assert_eq!(a.elements(), 66 * 66);
+        assert_eq!(a.spec, StencilSpec::star2d(1));
+        assert!(reg.find("nope").is_err());
+    }
+}

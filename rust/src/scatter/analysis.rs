@@ -1,0 +1,152 @@
+//! §3.4 — theoretical instruction-count analysis.
+//!
+//! Vectorization needs `#nonzeros / n` FMA instructions per `n` outputs;
+//! the outer-product method needs `Σ_lines (2r + n) / n`-ish outer products
+//! (each line with all `2r+1` weights yields `2r + n` coefficient vectors;
+//! single-weight lines yield `n`). The paper's headline: per output
+//! *vector*, box stencils drop from `2r + 1` (vector FMAs per line ×
+//! lines… i.e. `(2r+1)^d / n^(d-1)`-style counts collapse) to `2r/n + 1`.
+
+use super::line::LineCover;
+use super::options::{build_cover, CoverOption};
+use crate::stencil::{CoeffTensor, StencilSpec};
+
+/// Closed-form and measured instruction counts for one (spec, option, n).
+#[derive(Debug, Clone)]
+pub struct InstrAnalysis {
+    /// Stencil analyzed.
+    pub spec: StencilSpec,
+    /// Cover option analyzed.
+    pub option: CoverOption,
+    /// Output-block extent `n` (the matrix-register side).
+    pub n: usize,
+    /// Vector-FMA instructions per output vector for plain vectorization
+    /// (= number of non-zero weights, one FMA each per output vector).
+    pub vec_fma_per_outvec: f64,
+    /// Outer products per output vector for this cover (counted from the
+    /// actual expansion, Table 1 / Table 2 semantics).
+    pub outer_per_outvec: f64,
+    /// The paper's asymptotic per-output-vector count `2r/n + 1` scaled by
+    /// the number of *full* lines (box: `2r+1` lines ⇒
+    /// `(2r+1)(2r+n)/n / (2r+1) = (2r+n)/n` per line).
+    pub paper_asymptote: f64,
+    /// `vec_fma_per_outvec / outer_per_outvec` — the theoretical speedup
+    /// upper bound from instruction counts alone.
+    pub instr_ratio: f64,
+}
+
+/// Outer products per output vector, from the expanded cover.
+///
+/// An `n×n` output block holds `n` output vectors, and a cover expansion
+/// covers the whole block, so the per-vector count is
+/// `cover.outer_products(n) / n`.
+pub fn outer_per_outvec(cover: &LineCover, n: usize) -> f64 {
+    cover.outer_products(n) as f64 / n as f64
+}
+
+/// Run the analysis for one configuration.
+pub fn analyze(spec: StencilSpec, option: CoverOption, n: usize) -> anyhow::Result<InstrAnalysis> {
+    let coeffs = CoeffTensor::paper_default(spec);
+    let cover = build_cover(&coeffs, option)?;
+    let r = spec.order as f64;
+    let nf = n as f64;
+    Ok(InstrAnalysis {
+        spec,
+        option,
+        n,
+        vec_fma_per_outvec: spec.nonzero_points() as f64,
+        outer_per_outvec: outer_per_outvec(&cover, n),
+        paper_asymptote: cover.len() as f64 * (2.0 * r / nf + 1.0),
+        instr_ratio: spec.nonzero_points() as f64 / outer_per_outvec(&cover, n),
+    })
+}
+
+/// The paper's §3.4 claim for box stencils: average instructions per output
+/// vector drop from `2r + 1` *per line* to `2r/n + 1` per line.
+pub fn box_per_line_reduction(r: usize, n: usize) -> (f64, f64) {
+    ((2 * r + 1) as f64, 2.0 * r as f64 / n as f64 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box2d_outer_count_matches_eq12() {
+        // Eq. (12): (2r+1)(2r+n) outer products per n×n block.
+        for r in 1..=3 {
+            let spec = StencilSpec::box2d(r);
+            let coeffs = CoeffTensor::paper_default(spec);
+            let cover = build_cover(&coeffs, CoverOption::Parallel).unwrap();
+            let n = 8;
+            assert_eq!(cover.outer_products(n), (2 * r + 1) * (2 * r + n));
+        }
+    }
+
+    #[test]
+    fn box_per_outvec_is_paper_formula() {
+        // (2r+1)(2r+n)/n per output vector == (2r+1) * (2r/n + 1).
+        for r in 1..=3 {
+            for n in [4usize, 8, 16] {
+                let a = analyze(StencilSpec::box2d(r), CoverOption::Parallel, n).unwrap();
+                let expect = (2 * r + 1) as f64 * (2.0 * r as f64 / n as f64 + 1.0);
+                assert!((a.outer_per_outvec - expect).abs() < 1e-12);
+                assert!((a.paper_asymptote - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn instruction_ratio_grows_with_n() {
+        // As n grows, outer products per output vector fall toward 2r+1
+        // per cover, so the ratio improves — the 1/n decrease of §3.4.
+        let r4 = analyze(StencilSpec::box2d(1), CoverOption::Parallel, 4).unwrap();
+        let r8 = analyze(StencilSpec::box2d(1), CoverOption::Parallel, 8).unwrap();
+        let r16 = analyze(StencilSpec::box2d(1), CoverOption::Parallel, 16).unwrap();
+        assert!(r4.instr_ratio < r8.instr_ratio);
+        assert!(r8.instr_ratio < r16.instr_ratio);
+    }
+
+    #[test]
+    fn star_parallel_vs_orthogonal_growth_rates() {
+        // §5.2 / Table 1: parallel grows O(n) with r (adds 2r·n), the
+        // orthogonal option grows O(1) (adds 4r per extra order). Check the
+        // *difference* between r and r+1 for both options.
+        let n = 8;
+        let d = |opt: CoverOption, r: usize| {
+            let a = analyze(StencilSpec::star2d(r), opt, n).unwrap();
+            let b = analyze(StencilSpec::star2d(r + 1), opt, n).unwrap();
+            (b.outer_per_outvec - a.outer_per_outvec) * n as f64
+        };
+        let dp = d(CoverOption::Parallel, 1);
+        let dq = d(CoverOption::Orthogonal, 1);
+        assert!(dp > dq, "parallel should grow faster ({dp} vs {dq})");
+        assert!((dp - (2.0 * n as f64 + 2.0)).abs() < 1e-9); // 2n + 2
+        assert!(dq <= 4.0 + 1e-9); // O(1) in n
+    }
+
+    #[test]
+    fn star3d_hybrid_between_parallel_and_orthogonal() {
+        for r in 1..=3 {
+            let n = 8;
+            let p = analyze(StencilSpec::star3d(r), CoverOption::Parallel, n).unwrap();
+            let o = analyze(StencilSpec::star3d(r), CoverOption::Orthogonal, n).unwrap();
+            let h = analyze(StencilSpec::star3d(r), CoverOption::Hybrid, n).unwrap();
+            assert!(
+                o.outer_per_outvec <= h.outer_per_outvec + 1e-9
+                    && h.outer_per_outvec <= p.outer_per_outvec + 1e-9,
+                "r={r}: o={} h={} p={}",
+                o.outer_per_outvec,
+                h.outer_per_outvec,
+                p.outer_per_outvec
+            );
+        }
+    }
+
+    #[test]
+    fn per_line_reduction_formula() {
+        let (before, after) = box_per_line_reduction(1, 8);
+        assert_eq!(before, 3.0);
+        assert_eq!(after, 1.25);
+    }
+}

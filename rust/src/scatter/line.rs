@@ -1,0 +1,276 @@
+//! Coefficient lines and their outer-product expansion (Eq. (7)–(12)).
+//!
+//! A *coefficient line* is a 1-D slice of the stencil's coefficient tensor:
+//! a direction `dir` through the footprint plus the `2r+1` weights along it.
+//! The paper's final formula (Eq. (12)) expands each line into `n + 2r`
+//! shifted *coefficient vectors*: input position `p` (relative to the output
+//! block start along the line) is scattered to block rows `k` with weight
+//! `w[p - k + r]` — exactly the sub-sequences of a `C^o` column.
+//!
+//! Weights are stored in **gather orientation** (`w[t + r]` multiplies
+//! `A[k + t]` when computing `B[k]`); the scatter reversal of Eq. (5) is
+//! what the `p - k` index flip in [`CoeffLine::coeff_vector`] realizes, so
+//! no separate scatter copy is needed (see the `scatter_identity` test).
+
+use crate::stencil::{CoeffTensor, StencilSpec};
+
+
+/// One coefficient line: a direction through the footprint and its weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoeffLine {
+    /// Direction of the line; components in `{-1, 0, 1}`, at least one
+    /// non-zero. Axis-parallel lines have a single non-zero component;
+    /// diagonal lines (Eq. (16)) have two.
+    pub dir: Vec<isize>,
+    /// Base offset of the line's `t = 0` point within the footprint
+    /// (components in `-r..=r`; zero along `dir`'s non-zero components).
+    pub base: Vec<isize>,
+    /// Gather-orientation weights indexed by `t + r`, `t` in `-r..=r`.
+    /// Zero entries mark weights assigned to other lines of the cover (or
+    /// genuinely-zero footprint positions).
+    pub weights: Vec<f64>,
+}
+
+impl CoeffLine {
+    /// Axis-parallel line along `dim` at fixed offsets `fixed` (one per
+    /// non-line dimension, increasing dim order), taking ALL weights of the
+    /// tensor on that line.
+    pub fn axis(coeffs: &CoeffTensor, dim: usize, fixed: &[isize]) -> Self {
+        let dims = coeffs.spec.dims;
+        let mut dir = vec![0isize; dims];
+        dir[dim] = 1;
+        let mut base = vec![0isize; dims];
+        let mut fi = 0;
+        for d in 0..dims {
+            if d != dim {
+                base[d] = fixed[fi];
+                fi += 1;
+            }
+        }
+        Self { dir, base, weights: coeffs.line(dim, fixed) }
+    }
+
+    /// 2D diagonal line through the centre (Eq. (16)); `anti` selects the
+    /// anti-diagonal.
+    pub fn diagonal(coeffs: &CoeffTensor, anti: bool) -> Self {
+        assert_eq!(coeffs.spec.dims, 2);
+        Self {
+            dir: if anti { vec![1, -1] } else { vec![1, 1] },
+            base: vec![0, 0],
+            weights: coeffs.diag_line(anti),
+        }
+    }
+
+    /// Stencil order `r` implied by the stored weights.
+    pub fn order(&self) -> usize {
+        (self.weights.len() - 1) / 2
+    }
+
+    /// Footprint offset of the line point at parameter `t` (`-r..=r`).
+    pub fn point(&self, t: isize) -> Vec<isize> {
+        self.dir
+            .iter()
+            .zip(&self.base)
+            .map(|(&d, &b)| b + t * d)
+            .collect()
+    }
+
+    /// Number of non-zero weights on this line.
+    pub fn nonzeros(&self) -> usize {
+        self.weights.iter().filter(|w| **w != 0.0).count()
+    }
+
+    /// Zero out the weight at parameter `t` (used when another line of the
+    /// cover owns that footprint position, e.g. the shared centre of star
+    /// stencils).
+    pub fn clear_weight(&mut self, t: isize) {
+        let r = self.order() as isize;
+        self.weights[(t + r) as usize] = 0.0;
+    }
+
+    /// The shifted coefficient vector of Eq. (12) for input position `p`
+    /// (relative to the output-block start along the line direction,
+    /// `p` in `-r ..= n-1+r`) and block extent `n`:
+    ///
+    /// `cv[k] = w[(p - k) + r]` when `|p - k| <= r`, else 0.
+    ///
+    /// Input element at line position `p` is scattered to output row `k`
+    /// with the gather weight for displacement `p - k`.
+    pub fn coeff_vector(&self, p: isize, n: usize) -> Vec<f64> {
+        let r = self.order() as isize;
+        (0..n as isize)
+            .map(|k| {
+                let d = p - k;
+                if (-r..=r).contains(&d) {
+                    self.weights[(d + r) as usize]
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// True when `coeff_vector(p, n)` has any non-zero entry — computed
+    /// without allocating (§Perf: the code generators test this in their
+    /// innermost loops).
+    pub fn cv_nonzero(&self, p: isize, n: usize) -> bool {
+        let r = self.order() as isize;
+        let d_lo = (-r).max(p - n as isize + 1);
+        let d_hi = r.min(p);
+        (d_lo..=d_hi).any(|d| self.weights[(d + r) as usize] != 0.0)
+    }
+
+    /// All `(p, cv)` pairs with a non-zero coefficient vector, `p` in
+    /// `-r ..= n-1+r`. This is the per-line outer-product workload; its
+    /// length is what Table 1 / Table 2 count.
+    pub fn coeff_vectors(&self, n: usize) -> Vec<(isize, Vec<f64>)> {
+        let r = self.order() as isize;
+        (-r..=(n as isize - 1 + r))
+            .filter_map(|p| {
+                let cv = self.coeff_vector(p, n);
+                if cv.iter().any(|v| *v != 0.0) {
+                    Some((p, cv))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+/// A set of coefficient lines that together cover every non-zero weight of
+/// a stencil exactly once (§3.5 "minimal cover", §4.1 "options").
+#[derive(Debug, Clone, PartialEq)]
+pub struct LineCover {
+    /// The stencil this cover belongs to.
+    pub spec: StencilSpec,
+    /// The lines; each non-zero footprint weight appears in exactly one.
+    pub lines: Vec<CoeffLine>,
+}
+
+impl LineCover {
+    /// Verify the cover property: summing each line's weights back into a
+    /// dense tensor reproduces the original coefficient tensor exactly.
+    pub fn reconstructs(&self, coeffs: &CoeffTensor) -> bool {
+        let mut acc = CoeffTensor { spec: self.spec, data: vec![0.0; coeffs.data.len()] };
+        let r = self.spec.order as isize;
+        for line in &self.lines {
+            for t in -r..=r {
+                let w = line.weights[(t + r) as usize];
+                if w != 0.0 {
+                    let off = line.point(t);
+                    let idx = acc.dense_index(&off);
+                    acc.data[idx] += w;
+                }
+            }
+        }
+        acc.data
+            .iter()
+            .zip(&coeffs.data)
+            .all(|(a, b)| (a - b).abs() < 1e-15)
+    }
+
+    /// Total outer products for an `n`-extent output block, counting only
+    /// non-zero coefficient vectors (the quantity in Table 1 / Table 2).
+    pub fn outer_products(&self, n: usize) -> usize {
+        self.lines.iter().map(|l| l.coeff_vectors(n).len()).sum()
+    }
+
+    /// Number of lines.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// True if the cover has no lines.
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::StencilSpec;
+
+    #[test]
+    fn axis_line_extracts_gather_column() {
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let l = CoeffLine::axis(&c, 0, &[0]); // middle column, line along i
+        assert_eq!(l.weights, vec![c.at(&[-1, 0]), c.at(&[0, 0]), c.at(&[1, 0])]);
+        assert_eq!(l.point(-1), vec![-1, 0]);
+        assert_eq!(l.point(1), vec![1, 0]);
+    }
+
+    #[test]
+    fn coeff_vector_matches_eq9() {
+        // Eq. (9): for the middle line of 2D9P (r=1), input position p=-1
+        // (the paper's A_{i-2,j} relative to a block starting at i-1...)
+        // must scatter only to row 0 with the "top" weight, p=0 to rows
+        // 0..2 etc. With gather weights (w_m1, w_0, w_p1):
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let l = CoeffLine::axis(&c, 0, &[0]);
+        let (wm1, w0, wp1) = (l.weights[0], l.weights[1], l.weights[2]);
+        let n = 4;
+        // p = -1: contributes to k=0 with displacement p-k=-1 → w[-1+r]=wm1
+        assert_eq!(l.coeff_vector(-1, n), vec![wm1, 0.0, 0.0, 0.0]);
+        // p = 0: k=0 → w0; k=1 → wm1
+        assert_eq!(l.coeff_vector(0, n), vec![w0, wm1, 0.0, 0.0]);
+        // p = 1: k=0 → wp1; k=1 → w0; k=2 → wm1
+        assert_eq!(l.coeff_vector(1, n), vec![wp1, w0, wm1, 0.0]);
+        // p = n-1+r = 4: only k=3 with wp1
+        assert_eq!(l.coeff_vector(4, n), vec![0.0, 0.0, 0.0, wp1]);
+    }
+
+    #[test]
+    fn coeff_vector_count_is_2r_plus_n() {
+        // A full line (all 2r+1 weights non-zero) yields exactly 2r+n
+        // non-zero coefficient vectors (§3.4).
+        for r in 1..=4usize {
+            let c = CoeffTensor::paper_default(StencilSpec::box2d(r));
+            let l = CoeffLine::axis(&c, 0, &[0]);
+            assert_eq!(l.coeff_vectors(8).len(), 2 * r + 8);
+        }
+    }
+
+    #[test]
+    fn single_weight_line_yields_n_vectors() {
+        // Table 1: a line with one non-zero weight produces n outer
+        // products.
+        let c = CoeffTensor::paper_default(StencilSpec::star2d(1));
+        // line along i at j-offset 1 has only the (0, 1) weight
+        let l = CoeffLine::axis(&c, 0, &[1]);
+        assert_eq!(l.nonzeros(), 1);
+        assert_eq!(l.coeff_vectors(8).len(), 8);
+    }
+
+    #[test]
+    fn scatter_identity() {
+        // Functional check that coeff_vector realizes the scatter reversal:
+        // summing cv(p)[k] * A[p] over p equals the gather formula at k.
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(2));
+        let l = CoeffLine::axis(&c, 0, &[0]);
+        let r = 2isize;
+        let n = 6usize;
+        // Synthetic 1-D signal along the line.
+        let a = |p: isize| 0.3 + 0.7 * (p as f64) + 0.05 * (p as f64).powi(2);
+        for k in 0..n as isize {
+            // gather: B[k] = Σ_t w[t+r] A[k+t]
+            let gather: f64 = (-r..=r).map(|t| l.weights[(t + r) as usize] * a(k + t)).sum();
+            // scatter: B[k] = Σ_p cv(p)[k] A[p]
+            let scatter: f64 = (-r..=(n as isize - 1 + r))
+                .map(|p| l.coeff_vector(p, n)[k as usize] * a(p))
+                .sum();
+            assert!((gather - scatter).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_line_points() {
+        let c = CoeffTensor::paper_default(StencilSpec::diag2d(1));
+        let main = CoeffLine::diagonal(&c, false);
+        let anti = CoeffLine::diagonal(&c, true);
+        assert_eq!(main.point(-1), vec![-1, -1]);
+        assert_eq!(anti.point(-1), vec![-1, 1]);
+        assert_eq!(anti.point(1), vec![1, -1]);
+    }
+}

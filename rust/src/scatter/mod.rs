@@ -1,0 +1,21 @@
+//! The paper's §3 contribution: the scatter-mode, outer-product stencil
+//! formulation.
+//!
+//! - [`line`] — coefficient lines (the "essential concept underlying the
+//!   basic formula", §3.3) and their expansion into the shifted coefficient
+//!   vectors of Eq. (9)–(12).
+//! - [`options`] — the coefficient-line cover options of §4.1 / Table 1 &
+//!   Table 2: parallel, orthogonal, hybrid, plus diagonal covers (Eq. (15))
+//!   and the minimal axis-parallel cover.
+//! - [`cover`] — §3.5: minimal axis-parallel line cover via minimum vertex
+//!   cover of a bipartite graph (Hopcroft–Karp matching + König's theorem).
+//! - [`analysis`] — §3.4 instruction-count theory (`2r+1 → 2r/n + 1` per
+//!   output vector) and the Table 1 / Table 2 outer-product counts.
+
+pub mod analysis;
+pub mod cover;
+pub mod line;
+pub mod options;
+
+pub use line::{CoeffLine, LineCover};
+pub use options::{build_cover, CoverOption};

@@ -1,0 +1,143 @@
+//! Machine configuration (§5.1 parameters, all overridable).
+
+/// Cache hierarchy parameters (Kunpeng 920-like, §5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// L1 data cache capacity in bytes (64 KB).
+    pub l1_bytes: usize,
+    /// L1 associativity.
+    pub l1_assoc: usize,
+    /// L2 (private) capacity in bytes (512 KB).
+    pub l2_bytes: usize,
+    /// L2 associativity.
+    pub l2_assoc: usize,
+    /// Cache line size in bytes.
+    pub line_bytes: usize,
+    /// Load-to-use latency on an L1 hit (cycles).
+    pub lat_l1: u64,
+    /// Load-to-use latency on an L1 miss / L2 hit.
+    pub lat_l2: u64,
+    /// Load-to-use latency on an L2 miss (memory).
+    pub lat_mem: u64,
+    /// DRAM bandwidth model: minimum cycles between two line transfers
+    /// from memory (12 ⇒ ~5.3 B/cycle sustained, a realistic single-core STREAM
+    /// ratio; this is what makes out-of-cache problem sizes
+    /// bandwidth-bound rather than latency-bound).
+    pub mem_line_interval: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            l1_bytes: 64 * 1024,
+            l1_assoc: 4,
+            l2_bytes: 512 * 1024,
+            l2_assoc: 8,
+            line_bytes: 64,
+            lat_l1: 4,
+            lat_l2: 14,
+            lat_mem: 100,
+            mem_line_interval: 12,
+        }
+    }
+}
+
+/// Full machine configuration.
+///
+/// Defaults mirror the paper's simulator setup (§5.1): 512-bit vectors
+/// (8 × f64), 8×8 matrix registers, 32 vector + 8 matrix registers, one
+/// outer-product unit, plus a dual-issue in-order front end and two vector
+/// ALU pipes (typical of the Kunpeng-920-class core the memory hierarchy
+/// is modeled after).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// Vector length in f64 lanes (512-bit ⇒ 8).
+    pub vlen: usize,
+    /// Number of architectural vector registers.
+    pub n_vregs: usize,
+    /// Number of architectural matrix registers (`vlen × vlen` each).
+    pub n_mregs: usize,
+    /// Instructions issued per cycle (in order).
+    pub issue_width: usize,
+    /// Number of outer-product units (§5.1 sets 1).
+    pub opu_units: usize,
+    /// Number of vector ALU pipes (FMA/EXT/moves).
+    pub valu_units: usize,
+    /// Number of load/store pipes.
+    pub lsu_units: usize,
+    /// FMOPA issue-to-result latency (cycles). Back-to-back FMOPA to the
+    /// same accumulator are pipelined (accumulator forwarding), so this
+    /// latency is only paid by *reads* of the matrix register.
+    pub lat_fmopa: u64,
+    /// Vector FMA latency.
+    pub lat_vfma: u64,
+    /// Vector EXT / register re-organization latency.
+    pub lat_ext: u64,
+    /// Matrix ↔ vector move latency.
+    pub lat_mov: u64,
+    /// Max outstanding cache misses (MSHRs).
+    pub mshrs: usize,
+    /// Extra cycles for a vector memory access whose 64-byte footprint
+    /// crosses a cache-line boundary (the unaligned-access penalty that
+    /// makes the data-alignment conflict of §4.3 visible).
+    pub split_line_penalty: u64,
+    /// Cache hierarchy.
+    pub cache: CacheConfig,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            vlen: 8,
+            n_vregs: 32,
+            n_mregs: 8,
+            issue_width: 2,
+            opu_units: 1,
+            valu_units: 2,
+            lsu_units: 2,
+            lat_fmopa: 4,
+            lat_vfma: 4,
+            lat_ext: 2,
+            lat_mov: 2,
+            mshrs: 8,
+            split_line_penalty: 1,
+            cache: CacheConfig::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Bytes per vector register.
+    pub fn vector_bytes(&self) -> usize {
+        self.vlen * 8
+    }
+
+    /// A config with double the matrix registers (ablation §DESIGN).
+    pub fn with_mregs(mut self, n: usize) -> Self {
+        self.n_mregs = n;
+        self
+    }
+
+    /// Override the vector length (must divide the problem sizes used).
+    pub fn with_vlen(mut self, vlen: usize) -> Self {
+        self.vlen = vlen;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_section_5_1() {
+        let c = SimConfig::default();
+        assert_eq!(c.vlen, 8); // 512-bit / f64
+        assert_eq!(c.n_vregs, 32);
+        assert_eq!(c.n_mregs, 8);
+        assert_eq!(c.opu_units, 1);
+        assert_eq!(c.cache.l1_bytes, 64 * 1024);
+        assert_eq!(c.cache.l2_bytes, 512 * 1024);
+        assert_eq!(c.vector_bytes(), 64);
+    }
+}

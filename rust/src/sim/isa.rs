@@ -1,0 +1,260 @@
+//! The simulator's instruction set.
+//!
+//! Mirrors the instruction classes the paper relies on (§3.1 observations):
+//! vector-granularity matrix-register assembly (no intra-/inter-matrix
+//! re-organization), a rich set of vector re-organization instructions
+//! (`Ext`), and the outer-product accumulate (`Fmopa`) with the matrix
+//! register as both input and output.
+//!
+//! Addresses are **element indices** (f64 slots) into the machine's flat
+//! memory; the cache model converts to bytes internally.
+
+use std::fmt;
+
+/// A vector register id (`z0..z{n_vregs-1}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VReg(pub u8);
+
+/// A matrix (tile) register id (`za0..za{n_mregs-1}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MReg(pub u8);
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "z{}", self.0)
+    }
+}
+
+impl fmt::Display for MReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "za{}", self.0)
+    }
+}
+
+/// One machine instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    // ---- memory, vector granularity ----
+    /// `dst <- mem[addr .. addr+vlen]` (contiguous).
+    LdVec { dst: VReg, addr: usize },
+    /// `mem[addr .. addr+vlen] <- src`.
+    StVec { src: VReg, addr: usize },
+    /// Gather load: `dst[k] <- mem[base + k*stride]`. Models the
+    /// "memory inefficient" strided access of §4.1; issues one cache
+    /// access per element.
+    LdVecStrided { dst: VReg, base: usize, stride: usize },
+    /// Broadcast load: `dst[k] <- mem[addr]` for all lanes.
+    LdSplat { dst: VReg, addr: usize },
+    /// Store a single lane: `mem[addr] <- src[lane]` (scalar stores for
+    /// the scalar baseline and edge handling).
+    StLane { src: VReg, lane: usize, addr: usize },
+
+    // ---- vector register re-organization (§3.1: "cheap and flexible") ----
+    /// `dst <- (lo ++ hi)[shift .. shift+vlen]` — the inter-register
+    /// assembling of §4.3 (NEON/SVE `EXT`).
+    Ext { dst: VReg, lo: VReg, hi: VReg, shift: usize },
+    /// Broadcast one lane: `dst[k] <- src[lane]` for all `k`.
+    Dup { dst: VReg, src: VReg, lane: usize },
+
+    // ---- vector arithmetic ----
+    /// `acc[k] += a[k] * b[k]` (predicated FMA).
+    VFma { acc: VReg, a: VReg, b: VReg },
+    /// `acc[k] += a[k] * b[lane]` (indexed FMA — coefficient broadcast).
+    VFmaLane { acc: VReg, a: VReg, b: VReg, lane: usize },
+    /// `dst[k] = a[k] + b[k]`.
+    VAdd { dst: VReg, a: VReg, b: VReg },
+    /// `dst[k] = a[k] * b[k]`.
+    VMul { dst: VReg, a: VReg, b: VReg },
+    /// `dst[k] = 0`.
+    VZero { dst: VReg },
+
+    // ---- matrix (tile) operations ----
+    /// Zero the whole tile.
+    MZero { m: MReg },
+    /// Outer product accumulate: `m[i][j] += a[i] * b[j]` (SME `FMOPA`).
+    Fmopa { m: MReg, a: VReg, b: VReg },
+    /// `m[row][*] <- src` (vector → tile row move).
+    MovVToMRow { m: MReg, row: usize, src: VReg },
+    /// `dst <- m[row][*]` (tile row → vector move).
+    MovMRowToV { dst: VReg, m: MReg, row: usize },
+    /// `m[*][col] <- src` (vector → tile column move; SME supports both
+    /// orientations on ZA slices).
+    MovVToMCol { m: MReg, col: usize, src: VReg },
+    /// `dst <- m[*][col]` (tile column → vector move — the transpose
+    /// building block of §4.1).
+    MovMColToV { dst: VReg, m: MReg, col: usize },
+    /// `m[row][*] <- mem[addr .. addr+vlen]` (vector-granularity tile
+    /// fill straight from memory).
+    LdMRow { m: MReg, row: usize, addr: usize },
+    /// `mem[addr .. addr+vlen] <- m[row][*]`.
+    StMRow { m: MReg, row: usize, addr: usize },
+}
+
+/// Number of distinct opcodes (for fixed-size counters).
+pub const N_OPCODES: usize = 20;
+
+/// Mnemonic per opcode index (same order as [`Instr::opcode`]).
+pub const OPCODE_MNEMONICS: [&str; N_OPCODES] = [
+    "ld1d",
+    "st1d",
+    "ld1d.gather",
+    "ld1rd",
+    "st1d.lane",
+    "ext",
+    "dup",
+    "fmla",
+    "fmla.idx",
+    "fadd",
+    "fmul",
+    "vzero",
+    "zero.za",
+    "fmopa",
+    "mova.h.in",
+    "mova.h.out",
+    "mova.v.in",
+    "mova.v.out",
+    "ld1d.za",
+    "st1d.za",
+];
+
+impl Instr {
+    /// Dense opcode index (see [`OPCODE_MNEMONICS`]).
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Instr::LdVec { .. } => 0,
+            Instr::StVec { .. } => 1,
+            Instr::LdVecStrided { .. } => 2,
+            Instr::LdSplat { .. } => 3,
+            Instr::StLane { .. } => 4,
+            Instr::Ext { .. } => 5,
+            Instr::Dup { .. } => 6,
+            Instr::VFma { .. } => 7,
+            Instr::VFmaLane { .. } => 8,
+            Instr::VAdd { .. } => 9,
+            Instr::VMul { .. } => 10,
+            Instr::VZero { .. } => 11,
+            Instr::MZero { .. } => 12,
+            Instr::Fmopa { .. } => 13,
+            Instr::MovVToMRow { .. } => 14,
+            Instr::MovMRowToV { .. } => 15,
+            Instr::MovVToMCol { .. } => 16,
+            Instr::MovMColToV { .. } => 17,
+            Instr::LdMRow { .. } => 18,
+            Instr::StMRow { .. } => 19,
+        }
+    }
+
+    /// Floating-point operations this instruction performs (mul + add).
+    pub fn flops(&self, vlen: usize) -> u64 {
+        match self {
+            Instr::VFma { .. } | Instr::VFmaLane { .. } => 2 * vlen as u64,
+            Instr::VAdd { .. } | Instr::VMul { .. } => vlen as u64,
+            Instr::Fmopa { .. } => 2 * (vlen * vlen) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Short mnemonic for traces and instruction-mix stats.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::LdVec { .. } => "ld1d",
+            Instr::StVec { .. } => "st1d",
+            Instr::LdVecStrided { .. } => "ld1d.gather",
+            Instr::LdSplat { .. } => "ld1rd",
+            Instr::StLane { .. } => "st1d.lane",
+            Instr::Ext { .. } => "ext",
+            Instr::Dup { .. } => "dup",
+            Instr::VFma { .. } => "fmla",
+            Instr::VFmaLane { .. } => "fmla.idx",
+            Instr::VAdd { .. } => "fadd",
+            Instr::VMul { .. } => "fmul",
+            Instr::VZero { .. } => "vzero",
+            Instr::MZero { .. } => "zero.za",
+            Instr::Fmopa { .. } => "fmopa",
+            Instr::MovVToMRow { .. } => "mova.h.in",
+            Instr::MovMRowToV { .. } => "mova.h.out",
+            Instr::MovVToMCol { .. } => "mova.v.in",
+            Instr::MovMColToV { .. } => "mova.v.out",
+            Instr::LdMRow { .. } => "ld1d.za",
+            Instr::StMRow { .. } => "st1d.za",
+        }
+    }
+
+    /// True for instructions that touch memory.
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Instr::LdVec { .. }
+                | Instr::StVec { .. }
+                | Instr::LdVecStrided { .. }
+                | Instr::LdSplat { .. }
+                | Instr::StLane { .. }
+                | Instr::LdMRow { .. }
+                | Instr::StMRow { .. }
+        )
+    }
+}
+
+/// Consumer of generated instructions.
+///
+/// Code generators emit into a `Sink` so programs can be executed
+/// on-the-fly by [`crate::sim::Machine`] (no multi-megabyte program
+/// buffers) or captured into a [`Program`] for inspection and tests.
+pub trait Sink {
+    /// Consume one instruction.
+    fn emit(&mut self, i: Instr);
+}
+
+/// A captured instruction stream.
+#[derive(Debug, Default, Clone)]
+pub struct Program(pub Vec<Instr>);
+
+impl Sink for Program {
+    fn emit(&mut self, i: Instr) {
+        self.0.push(i);
+    }
+}
+
+impl Program {
+    /// Count instructions matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Instr) -> bool) -> usize {
+        self.0.iter().filter(|i| pred(i)).count()
+    }
+
+    /// Number of `Fmopa` instructions (what Table 1/2 count).
+    pub fn fmopa_count(&self) -> usize {
+        self.count(|i| matches!(i, Instr::Fmopa { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_accounting() {
+        let v = VReg(0);
+        let m = MReg(0);
+        assert_eq!(Instr::VFma { acc: v, a: v, b: v }.flops(8), 16);
+        assert_eq!(Instr::Fmopa { m, a: v, b: v }.flops(8), 128);
+        assert_eq!(Instr::LdVec { dst: v, addr: 0 }.flops(8), 0);
+    }
+
+    #[test]
+    fn mem_classification() {
+        let v = VReg(1);
+        assert!(Instr::LdVec { dst: v, addr: 4 }.is_mem());
+        assert!(Instr::StMRow { m: MReg(0), row: 1, addr: 0 }.is_mem());
+        assert!(!Instr::Ext { dst: v, lo: v, hi: v, shift: 3 }.is_mem());
+    }
+
+    #[test]
+    fn program_counts() {
+        let mut p = Program::default();
+        p.emit(Instr::MZero { m: MReg(0) });
+        p.emit(Instr::Fmopa { m: MReg(0), a: VReg(0), b: VReg(1) });
+        p.emit(Instr::Fmopa { m: MReg(0), a: VReg(0), b: VReg(2) });
+        assert_eq!(p.fmopa_count(), 2);
+        assert_eq!(p.0.len(), 3);
+    }
+}

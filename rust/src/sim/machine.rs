@@ -1,0 +1,671 @@
+//! The machine: functional execution + cycle-approximate timing.
+//!
+//! Every instruction is executed *functionally* (real f64 values in the
+//! register files and memory) and simultaneously *timed* by an in-order,
+//! multi-issue scoreboard:
+//!
+//! - an instruction issues at the earliest cycle `>=` the previous
+//!   instruction's issue cycle (in-order) where its source registers are
+//!   ready, an execution-unit instance is free, and an issue slot remains;
+//! - destination registers become ready `latency` cycles after issue
+//!   (loads: the cache-model latency);
+//! - cache misses occupy one of `mshrs` miss registers until data returns,
+//!   bounding memory-level parallelism;
+//! - back-to-back `FMOPA` to the same tile pipeline through accumulator
+//!   forwarding (1-cycle RAW), but *reads* of a tile (row/col moves,
+//!   stores) wait for the full `lat_fmopa` — mirroring how SME/MMA
+//!   accumulators behave;
+//! - vector FMA chains on one accumulator pay full latency (generators
+//!   are expected to use multiple accumulators, as compilers do).
+
+use super::cache::CacheSim;
+use super::config::SimConfig;
+use super::isa::{Instr, Sink};
+#[cfg(test)]
+use super::isa::VReg;
+use super::stats::RunStats;
+
+/// Execution-unit classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Unit {
+    /// Load/store pipes.
+    Lsu,
+    /// Vector ALU pipes (FMA, EXT, moves).
+    Valu,
+    /// Outer-product unit(s).
+    Opu,
+}
+
+/// The simulated machine. Implements [`Sink`], so code generators can emit
+/// straight into it and programs are executed on-the-fly.
+pub struct Machine {
+    /// Machine parameters.
+    pub cfg: SimConfig,
+    /// Flat data memory (f64 elements).
+    pub mem: Vec<f64>,
+    next_alloc: usize,
+    /// Flat vector register file (`n_vregs × vlen`).
+    vregs: Vec<f64>,
+    /// Flat matrix register file (`n_mregs × vlen²`).
+    mregs: Vec<f64>,
+    cache: CacheSim,
+    // ---- timing state ----
+    /// Instructions fetched so far (front-end bandwidth model).
+    fetched: u64,
+    unit_free: [Vec<u64>; 3],
+    v_ready: Vec<u64>,
+    /// Tile ready-for-read (full latency after last write).
+    m_read_ready: Vec<u64>,
+    /// Tile ready-for-accumulate (forwarding: issue + 1).
+    m_accum_ready: Vec<u64>,
+    mshr: Vec<u64>,
+    /// Next cycle the DRAM channel can start another line transfer.
+    mem_next_free: u64,
+    end_cycle: u64,
+    /// Cache counters at the last `finish()` (for per-run deltas).
+    cache_snapshot: super::cache::CacheStats,
+    /// Per-opcode counters (folded into `stats.mix` at `finish()`).
+    mix_counts: [u64; super::isa::N_OPCODES],
+    /// Reusable scratch vector (avoids per-instruction allocation).
+    tmp: Vec<f64>,
+    /// Counters for the current run.
+    pub stats: RunStats,
+}
+
+impl Machine {
+    /// Fresh machine with the given configuration.
+    pub fn new(cfg: SimConfig) -> Self {
+        let cache = CacheSim::new(&cfg.cache);
+        Self {
+            vregs: vec![0.0; cfg.vlen * cfg.n_vregs],
+            mregs: vec![0.0; cfg.vlen * cfg.vlen * cfg.n_mregs],
+            v_ready: vec![0; cfg.n_vregs],
+            m_read_ready: vec![0; cfg.n_mregs],
+            m_accum_ready: vec![0; cfg.n_mregs],
+            unit_free: [
+                vec![0; cfg.lsu_units],
+                vec![0; cfg.valu_units],
+                vec![0; cfg.opu_units],
+            ],
+            mem: Vec::new(),
+            next_alloc: 0,
+            tmp: vec![0.0; cfg.vlen.max(8)],
+            cache,
+            cfg,
+            fetched: 0,
+            mshr: Vec::new(),
+            mem_next_free: 0,
+            end_cycle: 0,
+            cache_snapshot: super::cache::CacheStats::default(),
+            mix_counts: [0; super::isa::N_OPCODES],
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Allocate `n` f64 elements with a guard band on both sides (so halo
+    /// reads just outside an array stay in mapped memory) and return the
+    /// base element address.
+    pub fn alloc(&mut self, n: usize) -> usize {
+        const GUARD: usize = 64;
+        // 64-byte-align every base (what a real allocator + posix_memalign
+        // would give a performance-conscious stencil code).
+        let base = (self.next_alloc + GUARD).div_ceil(self.cfg.vlen) * self.cfg.vlen;
+        self.next_alloc = base + n + GUARD;
+        if self.mem.len() < self.next_alloc {
+            self.mem.resize(self.next_alloc, 0.0);
+        }
+        base
+    }
+
+    /// Copy a slice into memory at `addr`.
+    pub fn write_mem(&mut self, addr: usize, data: &[f64]) {
+        self.mem[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    /// Read `n` elements from memory at `addr`.
+    pub fn read_mem(&self, addr: usize, n: usize) -> &[f64] {
+        &self.mem[addr..addr + n]
+    }
+
+    /// Finish the run: return the stats with `cycles` set to the cycle at
+    /// which the last result/store completes, and reset the timing state
+    /// (memory and caches keep their contents).
+    pub fn finish(&mut self) -> RunStats {
+        self.stats.cycles = self
+            .end_cycle
+            .max(self.fetched / self.cfg.issue_width as u64);
+        // per-run cache counters = delta since the previous finish()
+        let cur = &self.cache.stats;
+        let snap = &self.cache_snapshot;
+        self.stats.cache = super::cache::CacheStats {
+            l1_hits: cur.l1_hits - snap.l1_hits,
+            l2_hits: cur.l2_hits - snap.l2_hits,
+            mem_accesses: cur.mem_accesses - snap.mem_accesses,
+            l1_fill_bytes: cur.l1_fill_bytes - snap.l1_fill_bytes,
+            l2_fill_bytes: cur.l2_fill_bytes - snap.l2_fill_bytes,
+            writeback_bytes: cur.writeback_bytes - snap.writeback_bytes,
+        };
+        self.cache_snapshot = cur.clone();
+        for (op, &count) in self.mix_counts.iter().enumerate() {
+            if count > 0 {
+                *self
+                    .stats
+                    .mix
+                    .entry(super::isa::OPCODE_MNEMONICS[op])
+                    .or_insert(0) += count;
+            }
+        }
+        self.mix_counts = [0; super::isa::N_OPCODES];
+        let out = std::mem::take(&mut self.stats);
+        self.fetched = 0;
+        self.end_cycle = 0;
+        self.mem_next_free = 0;
+        self.mshr.clear();
+        for v in &mut self.v_ready {
+            *v = 0;
+        }
+        for v in &mut self.m_read_ready {
+            *v = 0;
+        }
+        for v in &mut self.m_accum_ready {
+            *v = 0;
+        }
+        for u in &mut self.unit_free {
+            for c in u.iter_mut() {
+                *c = 0;
+            }
+        }
+        out
+    }
+
+    /// Drop all cache contents (cold-start the next run) without touching
+    /// memory values.
+    pub fn flush_caches(&mut self) {
+        self.cache = CacheSim::new(&self.cfg.cache);
+    }
+
+    // ---------------- timing helpers ----------------
+
+    /// Issue an instruction: find the issue cycle given operand readiness,
+    /// front-end fetch bandwidth and unit availability.
+    ///
+    /// Models an out-of-order core (the Kunpeng-920-class core of §5.1)
+    /// with an in-order front end fetching `issue_width` instructions per
+    /// cycle and an effectively unbounded window: an instruction executes
+    /// as soon as its operands are ready and a unit instance is free; a
+    /// stalled instruction does not block independent younger ones.
+    fn issue(&mut self, unit: Unit, ready: u64) -> u64 {
+        self.fetched += 1;
+        let floor = self.fetched / self.cfg.issue_width as u64;
+        let ui = unit as usize;
+        // earliest unit instance
+        let (best, &free) = self.unit_free[ui]
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &c)| c)
+            .expect("unit instance");
+        let t = ready.max(free).max(floor);
+        // fully pipelined units: occupied for 1 cycle
+        self.unit_free[ui][best] = t + 1;
+        t
+    }
+
+    /// Account a memory access of `len` elements at element address `addr`.
+    /// Returns the data-ready cycle given issue at `t`.
+    fn mem_access(&mut self, t: u64, addr: usize, elems: usize, write: bool) -> u64 {
+        let byte = (addr as u64) * 8;
+        let len = (elems as u64) * 8;
+        let (lat, lines, mem_lines) = self.cache.access_range(byte, len, write);
+        let mut extra = 0;
+        if lines > 1 {
+            extra += self.cfg.split_line_penalty * (lines - 1);
+            // a split access occupies the LSU one extra cycle per extra
+            // line (real cores replay the second half)
+            let ui = Unit::Lsu as usize;
+            if let Some(slot) = self.unit_free[ui].iter_mut().min() {
+                *slot += lines - 1;
+            }
+        }
+        // MSHR pressure for anything that missed L1
+        let mut t = t;
+        if lat > self.cfg.cache.lat_l1 {
+            self.mshr.retain(|&c| c > t);
+            if self.mshr.len() >= self.cfg.mshrs {
+                let earliest = *self.mshr.iter().min().unwrap();
+                self.stats.mshr_stall_cycles += earliest - t;
+                t = earliest;
+                self.mshr.retain(|&c| c > t);
+            }
+            self.mshr.push(t + lat);
+        }
+        let mut done = t + lat + extra;
+        // DRAM bandwidth: every line that came from memory occupies the
+        // channel for `mem_line_interval` cycles.
+        if mem_lines > 0 {
+            let interval = self.cfg.cache.mem_line_interval;
+            self.mem_next_free = self.mem_next_free.max(t) + interval * mem_lines;
+            done = done.max(self.mem_next_free);
+        }
+        done
+    }
+
+    fn retire(&mut self, done: u64) {
+        if done > self.end_cycle {
+            self.end_cycle = done;
+        }
+    }
+
+    // ---------------- execute one instruction ----------------
+
+    /// Execute `i` functionally and account its timing.
+    pub fn exec(&mut self, i: &Instr) {
+        self.stats.instructions += 1;
+        self.stats.flops += i.flops(self.cfg.vlen);
+        // §Perf: indexed counter (a BTreeMap<&str> entry per instruction
+        // cost ~30% of the whole execute loop); folded into stats.mix at
+        // finish().
+        self.mix_counts[i.opcode() as usize] += 1;
+        let vlen = self.cfg.vlen;
+        match *i {
+            Instr::LdVec { dst, addr } => {
+                let t = self.issue(Unit::Lsu, 0);
+                let done = self.mem_access(t, addr, vlen, false);
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] = self.mem[addr + k];
+                }
+                self.v_ready[dst.0 as usize] = done;
+                self.retire(done);
+            }
+            Instr::StVec { src, addr } => {
+                let ready = self.v_ready[src.0 as usize];
+                let t = self.issue(Unit::Lsu, ready);
+                let done = self.mem_access(t, addr, vlen, true);
+                for k in 0..vlen {
+                    self.mem[addr + k] = self.vregs[src.0 as usize * vlen + k];
+                }
+                self.retire(done);
+            }
+            Instr::LdVecStrided { dst, base, stride } => {
+                // gather: one access per element, occupies the LSU longer
+                let mut t = self.issue(Unit::Lsu, 0);
+                let mut done = t;
+                for k in 0..vlen {
+                    let a = base + k * stride;
+                    let d = self.mem_access(t, a, 1, false);
+                    done = done.max(d);
+                    t += 1; // element-serialized
+                    self.vregs[dst.0 as usize * vlen + k] = self.mem[a];
+                }
+                // keep the LSU busy for the serialized elements
+                let ui = Unit::Lsu as usize;
+                let idx = (0..self.unit_free[ui].len())
+                    .min_by_key(|&x| self.unit_free[ui][x])
+                    .unwrap();
+                self.unit_free[ui][idx] = self.unit_free[ui][idx].max(t);
+                self.v_ready[dst.0 as usize] = done;
+                self.retire(done);
+            }
+            Instr::LdSplat { dst, addr } => {
+                let t = self.issue(Unit::Lsu, 0);
+                let done = self.mem_access(t, addr, 1, false);
+                let v = self.mem[addr];
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(v);
+                self.v_ready[dst.0 as usize] = done;
+                self.retire(done);
+            }
+            Instr::StLane { src, lane, addr } => {
+                let ready = self.v_ready[src.0 as usize];
+                let t = self.issue(Unit::Lsu, ready);
+                let done = self.mem_access(t, addr, 1, true);
+                self.mem[addr] = self.vregs[src.0 as usize * vlen + lane];
+                self.retire(done);
+            }
+            Instr::Ext { dst, lo, hi, shift } => {
+                debug_assert!(shift <= vlen);
+                let ready = self.v_ready[lo.0 as usize].max(self.v_ready[hi.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    let pos = k + shift;
+                    self.tmp[k] = if pos < vlen {
+                        self.vregs[lo.0 as usize * vlen + pos]
+                    } else {
+                        self.vregs[hi.0 as usize * vlen + pos - vlen]
+                    };
+                }
+                let d0 = dst.0 as usize * vlen;
+                self.vregs[d0..d0 + vlen].copy_from_slice(&self.tmp[..vlen]);
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_ext;
+                self.retire(t + self.cfg.lat_ext);
+            }
+            Instr::Dup { dst, src, lane } => {
+                let ready = self.v_ready[src.0 as usize];
+                let t = self.issue(Unit::Valu, ready);
+                let v = self.vregs[src.0 as usize * vlen + lane];
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(v);
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_ext;
+                self.retire(t + self.cfg.lat_ext);
+            }
+            Instr::VFma { acc, a, b } => {
+                let ready = self.v_ready[acc.0 as usize]
+                    .max(self.v_ready[a.0 as usize])
+                    .max(self.v_ready[b.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    let prod = self.vregs[a.0 as usize * vlen + k] * self.vregs[b.0 as usize * vlen + k];
+                    self.vregs[acc.0 as usize * vlen + k] += prod;
+                }
+                self.v_ready[acc.0 as usize] = t + self.cfg.lat_vfma;
+                self.retire(t + self.cfg.lat_vfma);
+            }
+            Instr::VFmaLane { acc, a, b, lane } => {
+                let ready = self.v_ready[acc.0 as usize]
+                    .max(self.v_ready[a.0 as usize])
+                    .max(self.v_ready[b.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                let c = self.vregs[b.0 as usize * vlen + lane];
+                for k in 0..vlen {
+                    let prod = self.vregs[a.0 as usize * vlen + k] * c;
+                    self.vregs[acc.0 as usize * vlen + k] += prod;
+                }
+                self.v_ready[acc.0 as usize] = t + self.cfg.lat_vfma;
+                self.retire(t + self.cfg.lat_vfma);
+            }
+            Instr::VAdd { dst, a, b } => {
+                let ready = self.v_ready[a.0 as usize].max(self.v_ready[b.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] =
+                        self.vregs[a.0 as usize * vlen + k] + self.vregs[b.0 as usize * vlen + k];
+                }
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_vfma;
+                self.retire(t + self.cfg.lat_vfma);
+            }
+            Instr::VMul { dst, a, b } => {
+                let ready = self.v_ready[a.0 as usize].max(self.v_ready[b.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] =
+                        self.vregs[a.0 as usize * vlen + k] * self.vregs[b.0 as usize * vlen + k];
+                }
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_vfma;
+                self.retire(t + self.cfg.lat_vfma);
+            }
+            Instr::VZero { dst } => {
+                let t = self.issue(Unit::Valu, 0);
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(0.0);
+                self.v_ready[dst.0 as usize] = t + 1;
+                self.retire(t + 1);
+            }
+            Instr::MZero { m } => {
+                let t = self.issue(Unit::Opu, self.m_accum_ready[m.0 as usize]);
+                self.mregs[m.0 as usize * vlen * vlen..(m.0 as usize + 1) * vlen * vlen].fill(0.0);
+                self.m_accum_ready[m.0 as usize] = t + 1;
+                self.m_read_ready[m.0 as usize] = t + 1;
+                self.retire(t + 1);
+            }
+            Instr::Fmopa { m, a, b } => {
+                let ready = self.v_ready[a.0 as usize]
+                    .max(self.v_ready[b.0 as usize])
+                    .max(self.m_accum_ready[m.0 as usize]);
+                let t = self.issue(Unit::Opu, ready);
+                for i in 0..vlen {
+                    let ai = self.vregs[a.0 as usize * vlen + i];
+                    for j in 0..vlen {
+                        self.mregs[m.0 as usize * vlen * vlen + (i * vlen + j)] +=
+                            ai * self.vregs[b.0 as usize * vlen + j];
+                    }
+                }
+                // accumulator forwarding for the next FMOPA; full latency
+                // before the tile can be read out.
+                self.m_accum_ready[m.0 as usize] = t + 1;
+                let rr = t + self.cfg.lat_fmopa;
+                if rr > self.m_read_ready[m.0 as usize] {
+                    self.m_read_ready[m.0 as usize] = rr;
+                }
+                self.retire(rr);
+            }
+            Instr::MovVToMRow { m, row, src } => {
+                let ready =
+                    self.v_ready[src.0 as usize].max(self.m_accum_ready[m.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)] = self.vregs[src.0 as usize * vlen + k];
+                }
+                self.m_accum_ready[m.0 as usize] = t + 1;
+                let rr = t + self.cfg.lat_mov;
+                if rr > self.m_read_ready[m.0 as usize] {
+                    self.m_read_ready[m.0 as usize] = rr;
+                }
+                self.retire(rr);
+            }
+            Instr::MovMRowToV { dst, m, row } => {
+                let ready = self.m_read_ready[m.0 as usize];
+                let t = self.issue(Unit::Valu, ready);
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] = self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)];
+                }
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_mov;
+                self.retire(t + self.cfg.lat_mov);
+            }
+            Instr::MovVToMCol { m, col, src } => {
+                let ready =
+                    self.v_ready[src.0 as usize].max(self.m_accum_ready[m.0 as usize]);
+                let t = self.issue(Unit::Valu, ready);
+                for i in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (i * vlen + col)] = self.vregs[src.0 as usize * vlen + i];
+                }
+                self.m_accum_ready[m.0 as usize] = t + 1;
+                let rr = t + self.cfg.lat_mov;
+                if rr > self.m_read_ready[m.0 as usize] {
+                    self.m_read_ready[m.0 as usize] = rr;
+                }
+                self.retire(rr);
+            }
+            Instr::MovMColToV { dst, m, col } => {
+                let ready = self.m_read_ready[m.0 as usize];
+                let t = self.issue(Unit::Valu, ready);
+                for i in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + i] = self.mregs[m.0 as usize * vlen * vlen + (i * vlen + col)];
+                }
+                self.v_ready[dst.0 as usize] = t + self.cfg.lat_mov;
+                self.retire(t + self.cfg.lat_mov);
+            }
+            Instr::LdMRow { m, row, addr } => {
+                let t = self.issue(Unit::Lsu, self.m_accum_ready[m.0 as usize]);
+                let done = self.mem_access(t, addr, vlen, false);
+                for k in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)] = self.mem[addr + k];
+                }
+                self.m_accum_ready[m.0 as usize] = t + 1;
+                if done > self.m_read_ready[m.0 as usize] {
+                    self.m_read_ready[m.0 as usize] = done;
+                }
+                self.retire(done);
+            }
+            Instr::StMRow { m, row, addr } => {
+                let ready = self.m_read_ready[m.0 as usize];
+                let t = self.issue(Unit::Lsu, ready);
+                let done = self.mem_access(t, addr, vlen, true);
+                for k in 0..vlen {
+                    self.mem[addr + k] = self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)];
+                }
+                self.retire(done);
+            }
+        }
+    }
+}
+
+impl Sink for Machine {
+    fn emit(&mut self, i: Instr) {
+        self.exec(&i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::MReg;
+
+    fn m() -> Machine {
+        Machine::new(SimConfig::default())
+    }
+
+    #[test]
+    fn load_compute_store_roundtrip() {
+        let mut mc = m();
+        let a = mc.alloc(8);
+        let b = mc.alloc(8);
+        mc.write_mem(a, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        mc.exec(&Instr::LdVec { dst: VReg(0), addr: a });
+        mc.exec(&Instr::LdVec { dst: VReg(1), addr: a });
+        mc.exec(&Instr::VZero { dst: VReg(2) });
+        mc.exec(&Instr::VFma { acc: VReg(2), a: VReg(0), b: VReg(1) });
+        mc.exec(&Instr::StVec { src: VReg(2), addr: b });
+        let out = mc.read_mem(b, 8);
+        assert_eq!(out, &[1., 4., 9., 16., 25., 36., 49., 64.]);
+        let stats = mc.finish();
+        assert_eq!(stats.instructions, 5);
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn fmopa_is_outer_product_accumulate() {
+        let mut mc = m();
+        let a = mc.alloc(8);
+        let b = mc.alloc(8);
+        mc.write_mem(a, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        mc.write_mem(b, &[10., 20., 30., 40., 50., 60., 70., 80.]);
+        mc.exec(&Instr::LdVec { dst: VReg(0), addr: a });
+        mc.exec(&Instr::LdVec { dst: VReg(1), addr: b });
+        mc.exec(&Instr::MZero { m: MReg(0) });
+        mc.exec(&Instr::Fmopa { m: MReg(0), a: VReg(0), b: VReg(1) });
+        mc.exec(&Instr::Fmopa { m: MReg(0), a: VReg(0), b: VReg(1) });
+        // read row 2 back: m[2][j] = 2 * (3 * b[j])
+        mc.exec(&Instr::MovMRowToV { dst: VReg(2), m: MReg(0), row: 2 });
+        let c = mc.alloc(8);
+        mc.exec(&Instr::StVec { src: VReg(2), addr: c });
+        let row = mc.read_mem(c, 8);
+        let expect: Vec<f64> = [10., 20., 30., 40., 50., 60., 70., 80.]
+            .iter()
+            .map(|x| 2.0 * 3.0 * x)
+            .collect();
+        assert_eq!(row, &expect[..]);
+        assert_eq!(mc.finish().fmopa(), 2);
+    }
+
+    #[test]
+    fn ext_assembles_shifted_vector() {
+        let mut mc = m();
+        let a = mc.alloc(16);
+        mc.write_mem(a, &(0..16).map(|x| x as f64).collect::<Vec<_>>());
+        mc.exec(&Instr::LdVec { dst: VReg(0), addr: a });
+        mc.exec(&Instr::LdVec { dst: VReg(1), addr: a + 8 });
+        mc.exec(&Instr::Ext { dst: VReg(2), lo: VReg(0), hi: VReg(1), shift: 3 });
+        let out = mc.alloc(8);
+        mc.exec(&Instr::StVec { src: VReg(2), addr: out });
+        assert_eq!(mc.read_mem(out, 8), &[3., 4., 5., 6., 7., 8., 9., 10.]);
+    }
+
+    #[test]
+    fn strided_gather_loads_column() {
+        let mut mc = m();
+        let a = mc.alloc(64);
+        let vals: Vec<f64> = (0..64).map(|x| x as f64).collect();
+        mc.write_mem(a, &vals);
+        mc.exec(&Instr::LdVecStrided { dst: VReg(0), base: a + 2, stride: 8 });
+        let out = mc.alloc(8);
+        mc.exec(&Instr::StVec { src: VReg(0), addr: out });
+        assert_eq!(mc.read_mem(out, 8), &[2., 10., 18., 26., 34., 42., 50., 58.]);
+    }
+
+    #[test]
+    fn col_moves_transpose() {
+        let mut mc = m();
+        let a = mc.alloc(8);
+        mc.write_mem(a, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        mc.exec(&Instr::LdVec { dst: VReg(0), addr: a });
+        // write the vector as column 5, read row 3 → lane 5 must be v[3]
+        mc.exec(&Instr::MZero { m: MReg(1) });
+        mc.exec(&Instr::MovVToMCol { m: MReg(1), col: 5, src: VReg(0) });
+        mc.exec(&Instr::MovMRowToV { dst: VReg(1), m: MReg(1), row: 3 });
+        let out = mc.alloc(8);
+        mc.exec(&Instr::StVec { src: VReg(1), addr: out });
+        let row = mc.read_mem(out, 8);
+        assert_eq!(row[5], 4.0);
+        assert_eq!(row[0], 0.0);
+    }
+
+    #[test]
+    fn dual_issue_bounds_ipc() {
+        // independent VZero instructions: IPC must not exceed issue width
+        let mut mc = m();
+        for k in 0..16u8 {
+            mc.exec(&Instr::VZero { dst: VReg(k % 4) });
+        }
+        let s = mc.finish();
+        assert!(s.ipc() <= mc.cfg.issue_width as f64 + 1e-9, "ipc={}", s.ipc());
+    }
+
+    #[test]
+    fn fma_dependency_chain_pays_latency() {
+        // 8 chained FMAs on one accumulator should take ~8 × lat_vfma.
+        let mut mc = m();
+        mc.exec(&Instr::VZero { dst: VReg(0) });
+        mc.exec(&Instr::VZero { dst: VReg(1) });
+        mc.exec(&Instr::VZero { dst: VReg(2) });
+        let t0 = {
+            let s = mc.finish();
+            s.cycles
+        };
+        for _ in 0..8 {
+            mc.exec(&Instr::VFma { acc: VReg(0), a: VReg(1), b: VReg(2) });
+        }
+        let s = mc.finish();
+        assert!(s.cycles >= t0 + 8 * mc.cfg.lat_vfma - 4, "cycles={}", s.cycles);
+    }
+
+    #[test]
+    fn fmopa_chain_is_pipelined() {
+        // 32 FMOPAs to the same tile should take ~32 cycles (forwarding),
+        // not 32 × lat_fmopa.
+        let mut mc = m();
+        mc.exec(&Instr::VZero { dst: VReg(0) });
+        mc.exec(&Instr::VZero { dst: VReg(1) });
+        mc.exec(&Instr::MZero { m: MReg(0) });
+        for _ in 0..32 {
+            mc.exec(&Instr::Fmopa { m: MReg(0), a: VReg(0), b: VReg(1) });
+        }
+        let s = mc.finish();
+        assert!(s.cycles < 32 + 20, "cycles={}", s.cycles);
+        assert!(s.cycles >= 32, "cycles={}", s.cycles);
+    }
+
+    #[test]
+    fn cache_locality_speeds_up_second_pass() {
+        let mut mc = m();
+        let a = mc.alloc(8 * 1024); // 64 KB: fits L1
+        for blk in 0..2 {
+            for i in 0..1024usize {
+                mc.exec(&Instr::LdVec { dst: VReg((i % 8) as u8), addr: a + i * 8 });
+            }
+            if blk == 0 {
+                let cold = mc.finish();
+                assert!(cold.cache.mem_accesses > 900);
+            }
+        }
+        let warm = mc.finish();
+        assert_eq!(warm.cache.mem_accesses, 0);
+        assert_eq!(warm.cache.l1_hits, 1024);
+    }
+
+    #[test]
+    fn alloc_guard_bands_do_not_overlap() {
+        let mut mc = m();
+        let a = mc.alloc(100);
+        let b = mc.alloc(50);
+        assert!(b >= a + 100 + 64);
+        mc.write_mem(a + 99, &[7.0]);
+        mc.write_mem(b, &[9.0]);
+        assert_eq!(mc.read_mem(a + 99, 1), &[7.0]);
+    }
+}

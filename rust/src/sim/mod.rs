@@ -1,0 +1,31 @@
+//! The evaluation substrate: a configurable, SME-like functional + timing
+//! simulator.
+//!
+//! The paper evaluates on a proprietary cycle-accurate ARM simulator
+//! (§5.1: 512-bit vectors ⇒ 8 f64 lanes, 8×8 matrix registers, 32 vector +
+//! 8 matrix registers, one outer-product unit, 64 KB L1D, 512 KB L2). This
+//! module is our open substitute. It is *functional* — every instruction
+//! computes real values, so generated programs are verified element-wise
+//! against the scalar reference — and *cycle-approximate*: an in-order,
+//! multi-issue scoreboard with per-unit latency/throughput, a two-level
+//! write-back LRU cache model, and an MSHR cap on outstanding misses.
+//!
+//! - [`isa`] — the instruction set (vector loads/stores, register
+//!   re-organization, vector FMA, outer product `FMOPA`, matrix ↔ vector
+//!   moves).
+//! - [`config`] — machine parameters (§5.1 defaults, fully configurable).
+//! - [`cache`] — L1/L2/memory hierarchy with traffic accounting.
+//! - [`machine`] — functional execution + timing scoreboard.
+//! - [`stats`] — cycle/instruction/traffic counters and derived metrics.
+
+pub mod cache;
+pub mod config;
+pub mod isa;
+pub mod machine;
+pub mod stats;
+pub mod trace;
+
+pub use config::SimConfig;
+pub use isa::{Instr, MReg, Sink, VReg};
+pub use machine::Machine;
+pub use stats::RunStats;

@@ -1,0 +1,139 @@
+//! Run statistics: cycles, instruction mix, FLOPs, memory behaviour.
+
+use super::cache::CacheStats;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Counters produced by one simulated program run.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// Total simulated cycles (completion time of the last instruction).
+    pub cycles: u64,
+    /// Instructions executed.
+    pub instructions: u64,
+    /// Floating-point operations performed (multiplies + adds).
+    pub flops: u64,
+    /// Instruction counts by mnemonic.
+    pub mix: BTreeMap<&'static str, u64>,
+    /// Cycles lost waiting for a free MSHR (memory-parallelism limit).
+    pub mshr_stall_cycles: u64,
+    /// Cache hierarchy counters.
+    pub cache: CacheStats,
+}
+
+impl RunStats {
+    /// FLOPs per cycle — the utilization metric used in EXPERIMENTS.md.
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Instructions per cycle.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles as f64
+        }
+    }
+
+    /// Count for one mnemonic.
+    pub fn count(&self, mnemonic: &str) -> u64 {
+        self.mix.get(mnemonic).copied().unwrap_or(0)
+    }
+
+    /// Number of outer products executed.
+    pub fn fmopa(&self) -> u64 {
+        self.count("fmopa")
+    }
+
+    /// Total bytes moved from memory into the hierarchy.
+    pub fn mem_bytes(&self) -> u64 {
+        self.cache.l2_fill_bytes + self.cache.writeback_bytes
+    }
+
+    /// Merge another run's counters into this one (used by multi-pass
+    /// harness runs).
+    pub fn merge(&mut self, other: &RunStats) {
+        self.cycles += other.cycles;
+        self.instructions += other.instructions;
+        self.flops += other.flops;
+        self.mshr_stall_cycles += other.mshr_stall_cycles;
+        for (k, v) in &other.mix {
+            *self.mix.entry(k).or_insert(0) += v;
+        }
+        self.cache.l1_hits += other.cache.l1_hits;
+        self.cache.l2_hits += other.cache.l2_hits;
+        self.cache.mem_accesses += other.cache.mem_accesses;
+        self.cache.l1_fill_bytes += other.cache.l1_fill_bytes;
+        self.cache.l2_fill_bytes += other.cache.l2_fill_bytes;
+        self.cache.writeback_bytes += other.cache.writeback_bytes;
+    }
+}
+
+impl fmt::Display for RunStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "cycles={} instrs={} ipc={:.2} flops={} flops/cyc={:.2}",
+            self.cycles,
+            self.instructions,
+            self.ipc(),
+            self.flops,
+            self.flops_per_cycle()
+        )?;
+        writeln!(
+            f,
+            "cache: L1 {} / L2 {} / mem {}  traffic: L1-fill {} B, L2-fill {} B, WB {} B",
+            self.cache.l1_hits,
+            self.cache.l2_hits,
+            self.cache.mem_accesses,
+            self.cache.l1_fill_bytes,
+            self.cache.l2_fill_bytes,
+            self.cache.writeback_bytes
+        )?;
+        write!(f, "mix:")?;
+        for (k, v) in &self.mix {
+            write!(f, " {k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let mut s = RunStats { cycles: 100, instructions: 150, flops: 400, ..Default::default() };
+        s.mix.insert("fmopa", 3);
+        assert_eq!(s.ipc(), 1.5);
+        assert_eq!(s.flops_per_cycle(), 4.0);
+        assert_eq!(s.fmopa(), 3);
+        assert_eq!(s.count("missing"), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RunStats { cycles: 10, instructions: 5, flops: 20, ..Default::default() };
+        a.mix.insert("fmla", 2);
+        let mut b = RunStats { cycles: 7, instructions: 3, flops: 12, ..Default::default() };
+        b.mix.insert("fmla", 1);
+        b.mix.insert("fmopa", 4);
+        a.merge(&b);
+        assert_eq!(a.cycles, 17);
+        assert_eq!(a.count("fmla"), 3);
+        assert_eq!(a.count("fmopa"), 4);
+    }
+
+    #[test]
+    fn zero_cycles_safe() {
+        let s = RunStats::default();
+        assert_eq!(s.ipc(), 0.0);
+        assert_eq!(s.flops_per_cycle(), 0.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Disassembly and utilization analysis.
+//!
+//! The paper ships an automatic code generator (§4.4); this module renders
+//! generated programs in an SME-like assembly syntax (for inspection and
+//! for the `disasm` CLI command) and derives occupancy/roofline summaries
+//! from run statistics.
+
+use super::config::SimConfig;
+use super::isa::{Instr, Program};
+use super::stats::RunStats;
+use std::fmt::Write as _;
+
+/// Render one instruction in SME-like assembly.
+pub fn disasm(i: &Instr) -> String {
+    match *i {
+        Instr::LdVec { dst, addr } => format!("ld1d    {dst}, [{addr}]"),
+        Instr::StVec { src, addr } => format!("st1d    {src}, [{addr}]"),
+        Instr::LdVecStrided { dst, base, stride } => {
+            format!("ld1d    {dst}, [{base}, gather +{stride}]")
+        }
+        Instr::LdSplat { dst, addr } => format!("ld1rd   {dst}, [{addr}]"),
+        Instr::StLane { src, lane, addr } => format!("st1d    {src}[{lane}], [{addr}]"),
+        Instr::Ext { dst, lo, hi, shift } => format!("ext     {dst}, {lo}, {hi}, #{shift}"),
+        Instr::Dup { dst, src, lane } => format!("dup     {dst}, {src}[{lane}]"),
+        Instr::VFma { acc, a, b } => format!("fmla    {acc}, {a}, {b}"),
+        Instr::VFmaLane { acc, a, b, lane } => format!("fmla    {acc}, {a}, {b}[{lane}]"),
+        Instr::VAdd { dst, a, b } => format!("fadd    {dst}, {a}, {b}"),
+        Instr::VMul { dst, a, b } => format!("fmul    {dst}, {a}, {b}"),
+        Instr::VZero { dst } => format!("dup     {dst}, #0"),
+        Instr::MZero { m } => format!("zero    {m}"),
+        Instr::Fmopa { m, a, b } => format!("fmopa   {m}, {a}, {b}"),
+        Instr::MovVToMRow { m, row, src } => format!("mova    {m}h[{row}], {src}"),
+        Instr::MovMRowToV { dst, m, row } => format!("mova    {dst}, {m}h[{row}]"),
+        Instr::MovVToMCol { m, col, src } => format!("mova    {m}v[{col}], {src}"),
+        Instr::MovMColToV { dst, m, col } => format!("mova    {dst}, {m}v[{col}]"),
+        Instr::LdMRow { m, row, addr } => format!("ld1d    {m}h[{row}], [{addr}]"),
+        Instr::StMRow { m, row, addr } => format!("st1d    {m}h[{row}], [{addr}]"),
+    }
+}
+
+/// Disassemble (up to) the first `limit` instructions of a program.
+pub fn disassemble(p: &Program, limit: usize) -> String {
+    let mut out = String::new();
+    for (pc, i) in p.0.iter().take(limit).enumerate() {
+        let _ = writeln!(out, "{pc:6}: {}", disasm(i));
+    }
+    if p.0.len() > limit {
+        let _ = writeln!(out, "  ... ({} more)", p.0.len() - limit);
+    }
+    out
+}
+
+/// What bounds a run, derived from its counters and the machine config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Roofline {
+    /// Cycles the outer-product unit was occupied (1/FMOPA issue).
+    pub opu_cycles: u64,
+    /// Cycles the vector ALUs were occupied (÷ `valu_units`).
+    pub valu_cycles: u64,
+    /// Cycles the LSUs were occupied (÷ `lsu_units`, incl. splits/gathers).
+    pub lsu_cycles: u64,
+    /// Cycles the DRAM channel was occupied (lines × interval).
+    pub dram_cycles: u64,
+    /// Measured cycles.
+    pub cycles: u64,
+    /// The dominating resource.
+    pub bound: &'static str,
+}
+
+/// Derive the roofline decomposition of a finished run.
+pub fn roofline(cfg: &SimConfig, stats: &RunStats) -> Roofline {
+    let valu_ops = stats.count("fmla")
+        + stats.count("fmla.idx")
+        + stats.count("fadd")
+        + stats.count("fmul")
+        + stats.count("ext")
+        + stats.count("dup")
+        + stats.count("vzero")
+        + stats.count("mova.h.in")
+        + stats.count("mova.h.out")
+        + stats.count("mova.v.in")
+        + stats.count("mova.v.out");
+    let lsu_ops = stats.count("ld1d")
+        + stats.count("st1d")
+        + stats.count("ld1rd")
+        + stats.count("st1d.lane")
+        + stats.count("ld1d.za")
+        + stats.count("st1d.za")
+        + stats.count("ld1d.gather") * cfg.vlen as u64;
+    let opu_cycles = stats.count("fmopa") + stats.count("zero.za");
+    let valu_cycles = valu_ops / cfg.valu_units as u64;
+    let lsu_cycles = lsu_ops / cfg.lsu_units as u64;
+    let dram_cycles = stats.cache.mem_accesses * cfg.cache.mem_line_interval;
+    let bound = [
+        ("OPU", opu_cycles),
+        ("VALU", valu_cycles),
+        ("LSU", lsu_cycles),
+        ("DRAM", dram_cycles),
+    ]
+    .into_iter()
+    .max_by_key(|&(_, c)| c)
+    .map(|(n, _)| n)
+    .unwrap();
+    Roofline { opu_cycles, valu_cycles, lsu_cycles, dram_cycles, cycles: stats.cycles, bound }
+}
+
+impl std::fmt::Display for Roofline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "roofline: OPU {} | VALU {} | LSU {} | DRAM {} of {} cycles → {}-bound",
+            self.opu_cycles, self.valu_cycles, self.lsu_cycles, self.dram_cycles, self.cycles,
+            self.bound
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::{MReg, Sink, VReg};
+
+    #[test]
+    fn disasm_syntax() {
+        assert_eq!(
+            disasm(&Instr::Fmopa { m: MReg(0), a: VReg(1), b: VReg(2) }),
+            "fmopa   za0, z1, z2"
+        );
+        assert_eq!(
+            disasm(&Instr::Ext { dst: VReg(3), lo: VReg(1), hi: VReg(2), shift: 5 }),
+            "ext     z3, z1, z2, #5"
+        );
+        assert_eq!(disasm(&Instr::LdVec { dst: VReg(0), addr: 128 }), "ld1d    z0, [128]");
+    }
+
+    #[test]
+    fn disassemble_truncates() {
+        let mut p = Program::default();
+        for k in 0..10u8 {
+            p.emit(Instr::VZero { dst: VReg(k) });
+        }
+        let text = disassemble(&p, 4);
+        assert_eq!(text.lines().count(), 5);
+        assert!(text.contains("(6 more)"));
+    }
+
+    #[test]
+    fn roofline_identifies_opu_bound() {
+        let cfg = SimConfig::default();
+        let mut stats = RunStats::default();
+        stats.cycles = 100;
+        stats.mix.insert("fmopa", 90);
+        stats.mix.insert("ld1d", 10);
+        let r = roofline(&cfg, &stats);
+        assert_eq!(r.bound, "OPU");
+        assert_eq!(r.opu_cycles, 90);
+    }
+
+    #[test]
+    fn roofline_identifies_dram_bound() {
+        let cfg = SimConfig::default();
+        let mut stats = RunStats::default();
+        stats.cycles = 5000;
+        stats.mix.insert("fmla", 100);
+        stats.cache.mem_accesses = 400; // × 12 = 4800 cycles
+        let r = roofline(&cfg, &stats);
+        assert_eq!(r.bound, "DRAM");
+    }
+
+    #[test]
+    fn gather_counts_vlen_lsu_slots() {
+        let cfg = SimConfig::default();
+        let mut stats = RunStats::default();
+        stats.mix.insert("ld1d.gather", 4);
+        let r = roofline(&cfg, &stats);
+        assert_eq!(r.lsu_cycles, 4 * 8 / 2);
+    }
+}

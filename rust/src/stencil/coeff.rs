@@ -1,0 +1,214 @@
+//! Coefficient algebra: dense coefficient tensors, the gather ↔ scatter
+//! conversion of Eq. (5), and per-line extraction used by the scatter
+//! formulation.
+//!
+//! A `CoeffTensor` always stores the *dense* `(2r+1)^d` footprint in
+//! **gather** orientation (`C^g`): element at per-dim index `idx` (each in
+//! `0..2r`, centre at `r`) is the weight multiplying `A[p + idx - r]` when
+//! computing `B[p]` (Eq. (1)). The scatter tensor `C^s = J C^g J` (Eq. (5))
+//! is the index-reversed view.
+
+use super::spec::StencilSpec;
+
+
+/// Dense coefficient tensor in gather orientation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoeffTensor {
+    /// The stencil this tensor belongs to.
+    pub spec: StencilSpec,
+    /// Row-major dense `(2r+1)^d` weights (gather view, zeros where masked).
+    pub data: Vec<f64>,
+}
+
+impl CoeffTensor {
+    /// Side length `2r+1`.
+    pub fn side(&self) -> usize {
+        self.spec.side()
+    }
+
+    /// Build from a closure giving the weight for each *dense* offset
+    /// (components in `-r..=r`); positions masked out by the shape are
+    /// forced to zero.
+    pub fn from_fn(spec: StencilSpec, mut f: impl FnMut(&[isize]) -> f64) -> Self {
+        let data = spec
+            .dense_offsets()
+            .iter()
+            .map(|off| if spec.mask(off) { f(off) } else { 0.0 })
+            .collect();
+        Self { spec, data }
+    }
+
+    /// The deterministic default weights used across the whole repo
+    /// (Rust reference, simulator programs, and the Python/Pallas layer —
+    /// `python/compile/kernels/ref.py` replicates this formula exactly).
+    ///
+    /// Weights are asymmetric (to catch gather/scatter reversal bugs) and
+    /// normalized to sum 1 (so multi-step evolutions stay bounded).
+    pub fn paper_default(spec: StencilSpec) -> Self {
+        let mut lin = 0usize;
+        let mut t = Self::from_fn(spec, |_| {
+            let v = ((3 * lin + 5) % 11 + 1) as f64;
+            lin += 1;
+            v
+        });
+        // `from_fn` only advanced `lin` on unmasked points; recompute with
+        // the dense linear index instead so the formula depends purely on
+        // position (replicable layout-first in Python).
+        let offsets = spec.dense_offsets();
+        for (i, off) in offsets.iter().enumerate() {
+            t.data[i] = if spec.mask(off) { ((3 * i + 5) % 11 + 1) as f64 } else { 0.0 };
+        }
+        let sum: f64 = t.data.iter().sum();
+        for v in &mut t.data {
+            *v /= sum;
+        }
+        t
+    }
+
+    /// Weight at dense offset `off` (components in `-r..=r`), gather view.
+    pub fn at(&self, off: &[isize]) -> f64 {
+        self.data[self.dense_index(off)]
+    }
+
+    /// Row-major linear index of a dense offset.
+    pub fn dense_index(&self, off: &[isize]) -> usize {
+        debug_assert_eq!(off.len(), self.spec.dims);
+        let r = self.spec.order as isize;
+        let s = self.side() as isize;
+        let mut idx = 0isize;
+        for &o in off {
+            debug_assert!((-r..=r).contains(&o));
+            idx = idx * s + (o + r);
+        }
+        idx as usize
+    }
+
+    /// The scatter-mode tensor `C^s = J C^g J` of Eq. (5): all indices
+    /// reversed. `C^s[idx] = C^g[2r - idx]` per dimension.
+    pub fn scatter(&self) -> CoeffTensor {
+        let mut out = self.clone();
+        for (i, off) in self.spec.dense_offsets().iter().enumerate() {
+            let rev: Vec<isize> = off.iter().map(|&o| -o).collect();
+            out.data[i] = self.at(&rev);
+        }
+        out
+    }
+
+    /// Extract the gather-view *coefficient line* running along dimension
+    /// `line_dim`, at fixed offsets `fixed` in the remaining dimensions
+    /// (in order of increasing dimension index, each in `-r..=r`).
+    ///
+    /// Returns the `2r+1` weights indexed by the line-dim offset `-r..=r`.
+    pub fn line(&self, line_dim: usize, fixed: &[isize]) -> Vec<f64> {
+        let r = self.spec.order as isize;
+        assert!(line_dim < self.spec.dims);
+        assert_eq!(fixed.len(), self.spec.dims - 1);
+        (-r..=r)
+            .map(|o| {
+                let mut off = Vec::with_capacity(self.spec.dims);
+                let mut fi = 0;
+                for d in 0..self.spec.dims {
+                    if d == line_dim {
+                        off.push(o);
+                    } else {
+                        off.push(fixed[fi]);
+                        fi += 1;
+                    }
+                }
+                self.at(&off)
+            })
+            .collect()
+    }
+
+    /// Extract a diagonal line of the (2D) tensor. `anti == false` walks the
+    /// main diagonal (offset `(o, o)`), `anti == true` the anti-diagonal
+    /// (offset `(o, -o)`), for `o` in `-r..=r` (Eq. (16)).
+    pub fn diag_line(&self, anti: bool) -> Vec<f64> {
+        assert_eq!(self.spec.dims, 2, "diagonal lines are 2D-only");
+        let r = self.spec.order as isize;
+        (-r..=r)
+            .map(|o| self.at(&[o, if anti { -o } else { o }]))
+            .collect()
+    }
+
+    /// Sum of all weights (1.0 for `paper_default`).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec::StencilKind;
+
+    #[test]
+    fn default_is_normalized_and_masked() {
+        for spec in [
+            StencilSpec::box2d(1),
+            StencilSpec::star2d(2),
+            StencilSpec::box3d(1),
+            StencilSpec::star3d(1),
+            StencilSpec::diag2d(1),
+        ] {
+            let c = CoeffTensor::paper_default(spec);
+            assert!((c.sum() - 1.0).abs() < 1e-12, "{spec}");
+            let nz = c.data.iter().filter(|v| **v != 0.0).count();
+            assert_eq!(nz, spec.nonzero_points(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn scatter_is_involution() {
+        // C^s = J C^g J, and J is an involution, so scatter() twice is id.
+        for spec in [StencilSpec::box2d(2), StencilSpec::box3d(1), StencilSpec::star3d(2)] {
+            let c = CoeffTensor::paper_default(spec);
+            assert_eq!(c.scatter().scatter(), c, "{spec}");
+        }
+    }
+
+    #[test]
+    fn scatter_matches_eq3_for_2d9p() {
+        // Eq. (3)/(4): C^s is C^g with rows and columns reversed.
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let s = c.scatter();
+        for i in -1..=1isize {
+            for j in -1..=1isize {
+                assert_eq!(s.at(&[i, j]), c.at(&[-i, -j]));
+            }
+        }
+    }
+
+    #[test]
+    fn line_extraction_middle_column_2d() {
+        // The middle (j = 0) gather line of the 2D9P tensor is
+        // (C_{01}, C_{11}, C_{21}) in the paper's numbering.
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let l = c.line(0, &[0]);
+        assert_eq!(l, vec![c.at(&[-1, 0]), c.at(&[0, 0]), c.at(&[1, 0])]);
+    }
+
+    #[test]
+    fn line_extraction_3d() {
+        let c = CoeffTensor::paper_default(StencilSpec::box3d(1));
+        // Line along j (dim 1) at fixed (i, k) = (1, -1).
+        let l = c.line(1, &[1, -1]);
+        assert_eq!(l, vec![c.at(&[1, -1, -1]), c.at(&[1, 0, -1]), c.at(&[1, 1, -1])]);
+    }
+
+    #[test]
+    fn diag_lines_match_eq15() {
+        let c = CoeffTensor::paper_default(StencilSpec::diag2d(1));
+        assert_eq!(c.diag_line(false), vec![c.at(&[-1, -1]), c.at(&[0, 0]), c.at(&[1, 1])]);
+        assert_eq!(c.diag_line(true), vec![c.at(&[-1, 1]), c.at(&[0, 0]), c.at(&[1, -1])]);
+    }
+
+    #[test]
+    fn star_lines_share_only_centre() {
+        let c = CoeffTensor::paper_default(StencilSpec::new(2, 1, StencilKind::Star).unwrap());
+        let col = c.line(0, &[0]);
+        let row = c.line(1, &[0]);
+        assert_eq!(col[1], row[1]); // both contain the centre weight
+        assert_ne!(col, row); // but differ elsewhere (asymmetric defaults)
+    }
+}

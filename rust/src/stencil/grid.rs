@@ -1,0 +1,172 @@
+//! Dense row-major grids (the paper's arrays `A` and `B`).
+//!
+//! C-style storage (paper footnote 1): the rightmost index is the
+//! unit-stride one — `j` for 2D grids, `k` for 3D grids.
+
+
+
+/// A dense row-major `f64` grid of 2 or 3 dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseGrid {
+    /// Extent per dimension (len 2 or 3).
+    pub shape: Vec<usize>,
+    /// Row-major data, `shape.iter().product()` elements.
+    pub data: Vec<f64>,
+}
+
+impl DenseGrid {
+    /// All-zero grid.
+    pub fn zeros(shape: &[usize]) -> Self {
+        assert!(shape.len() == 2 || shape.len() == 3, "grids are 2D or 3D");
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Grid filled by `f(index)` over row-major indices.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> f64) -> Self {
+        let mut g = Self::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for lin in 0..g.data.len() {
+            g.unravel(lin, &mut idx);
+            g.data[lin] = f(&idx);
+        }
+        g
+    }
+
+    /// Deterministic pseudo-random grid used across the repo for
+    /// verification (replicated by the Python layer): a cheap LCG-ish hash
+    /// of the linear index mapped into `[-1, 1)`.
+    pub fn verification_input(shape: &[usize], seed: u64) -> Self {
+        let mut g = Self::zeros(shape);
+        for (lin, v) in g.data.iter_mut().enumerate() {
+            let mut h = (lin as u64).wrapping_add(seed).wrapping_mul(0x9E3779B97F4A7C15);
+            h ^= h >> 29;
+            h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+            h ^= h >> 32;
+            // 21 bits of mantissa are plenty and keep exact f64 values small.
+            let u = (h >> 43) as f64 / (1u64 << 21) as f64; // [0, 1)
+            *v = 2.0 * u - 1.0;
+        }
+        g
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the grid has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major linear index of `idx`.
+    #[inline]
+    pub fn lin(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut l = 0usize;
+        for (d, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.shape[d]);
+            l = l * self.shape[d] + i;
+        }
+        l
+    }
+
+    /// Convert a linear index back to a multi-index (into `out`).
+    #[inline]
+    pub fn unravel(&self, mut lin: usize, out: &mut [usize]) {
+        for d in (0..self.shape.len()).rev() {
+            out[d] = lin % self.shape[d];
+            lin /= self.shape[d];
+        }
+    }
+
+    /// Element access by multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f64 {
+        self.data[self.lin(idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    #[inline]
+    pub fn at_mut(&mut self, idx: &mut [usize]) -> &mut f64 {
+        let l = self.lin(idx);
+        &mut self.data[l]
+    }
+
+    /// Maximum absolute difference against another grid on the *interior*
+    /// (all indices at distance >= `halo` from every boundary). The halo is
+    /// excluded because stencil methods only define interior outputs.
+    pub fn max_abs_diff_interior(&self, other: &DenseGrid, halo: usize) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut idx = vec![0usize; self.shape.len()];
+        let mut worst = 0.0f64;
+        for lin in 0..self.data.len() {
+            self.unravel(lin, &mut idx);
+            let interior = idx
+                .iter()
+                .zip(&self.shape)
+                .all(|(&i, &n)| i >= halo && i + halo < n);
+            if interior {
+                let d = (self.data[lin] - other.data[lin]).abs();
+                if d > worst {
+                    worst = d;
+                }
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lin_unravel_roundtrip_2d() {
+        let g = DenseGrid::zeros(&[5, 7]);
+        let mut idx = [0usize; 2];
+        for lin in 0..g.len() {
+            g.unravel(lin, &mut idx);
+            assert_eq!(g.lin(&idx), lin);
+        }
+    }
+
+    #[test]
+    fn lin_unravel_roundtrip_3d() {
+        let g = DenseGrid::zeros(&[3, 4, 5]);
+        let mut idx = [0usize; 3];
+        for lin in 0..g.len() {
+            g.unravel(lin, &mut idx);
+            assert_eq!(g.lin(&idx), lin);
+        }
+    }
+
+    #[test]
+    fn rightmost_index_is_unit_stride() {
+        let g = DenseGrid::zeros(&[4, 6]);
+        assert_eq!(g.lin(&[2, 3]) + 1, g.lin(&[2, 4]));
+        let g3 = DenseGrid::zeros(&[2, 3, 4]);
+        assert_eq!(g3.lin(&[1, 2, 0]) + 1, g3.lin(&[1, 2, 1]));
+    }
+
+    #[test]
+    fn verification_input_is_deterministic_and_bounded() {
+        let a = DenseGrid::verification_input(&[16, 16], 7);
+        let b = DenseGrid::verification_input(&[16, 16], 7);
+        let c = DenseGrid::verification_input(&[16, 16], 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn interior_diff_ignores_halo() {
+        let mut a = DenseGrid::zeros(&[6, 6]);
+        let b = DenseGrid::zeros(&[6, 6]);
+        a.data[0] = 100.0; // corner: outside any halo >= 1
+        assert_eq!(a.max_abs_diff_interior(&b, 1), 0.0);
+        let l = a.lin(&[3, 3]);
+        a.data[l] = 2.5;
+        assert_eq!(a.max_abs_diff_interior(&b, 1), 2.5);
+    }
+}

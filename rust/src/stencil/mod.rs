@@ -1,0 +1,16 @@
+//! Stencil fundamentals: specifications, coefficient algebra, grids, and the
+//! scalar gather-mode reference implementation.
+//!
+//! Everything downstream (the scatter/outer-product algorithm, the code
+//! generators, the Pallas artifacts) is validated against
+//! [`reference::apply`], which is a direct transcription of the paper's
+//! Equation (1) generalized over dimension, shape and order.
+
+pub mod coeff;
+pub mod grid;
+pub mod reference;
+pub mod spec;
+
+pub use coeff::CoeffTensor;
+pub use grid::DenseGrid;
+pub use spec::{StencilKind, StencilSpec};

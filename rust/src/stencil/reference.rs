@@ -1,0 +1,185 @@
+//! Scalar gather-mode reference implementation (the paper's Eq. (1),
+//! generalized over dimension / shape / order).
+//!
+//! This is the correctness oracle for every other execution path in the
+//! repo: simulator programs from all five code generators, the scatter-mode
+//! outer-product plans, and the PJRT-executed Pallas artifacts are all
+//! compared element-wise against [`apply`].
+
+use super::coeff::CoeffTensor;
+use super::grid::DenseGrid;
+
+/// Apply one stencil time-step in gather mode.
+///
+/// Interior points (at distance >= `r` from every boundary) of the output
+/// are computed per Eq. (1); boundary points are copied from the input
+/// (Dirichlet-style frozen boundary, the convention used by all code paths
+/// in this repo and by the Python oracle).
+pub fn apply(coeffs: &CoeffTensor, a: &DenseGrid) -> DenseGrid {
+    let spec = coeffs.spec;
+    assert_eq!(a.shape.len(), spec.dims, "grid/stencil dimension mismatch");
+    let r = spec.order;
+    assert!(
+        a.shape.iter().all(|&n| n > 2 * r),
+        "grid too small for order-{r} stencil"
+    );
+    let mut b = a.clone(); // boundary = copy of input
+    let offsets = spec.dense_offsets();
+    let mut idx = vec![0usize; spec.dims];
+    let mut nb = vec![0usize; spec.dims];
+    for lin in 0..a.len() {
+        a.unravel(lin, &mut idx);
+        let interior = idx.iter().zip(&a.shape).all(|(&i, &n)| i >= r && i + r < n);
+        if !interior {
+            continue;
+        }
+        let mut acc = 0.0f64;
+        for (oi, off) in offsets.iter().enumerate() {
+            let c = coeffs.data[oi];
+            if c == 0.0 {
+                continue;
+            }
+            for d in 0..spec.dims {
+                nb[d] = (idx[d] as isize + off[d]) as usize;
+            }
+            acc += c * a.at(&nb);
+        }
+        b.data[lin] = acc;
+    }
+    b
+}
+
+/// Apply `steps` time-steps, ping-ponging two copies (§2.2).
+pub fn evolve(coeffs: &CoeffTensor, a: &DenseGrid, steps: usize) -> DenseGrid {
+    let mut cur = a.clone();
+    for _ in 0..steps {
+        cur = apply(coeffs, &cur);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec::StencilSpec;
+
+    #[test]
+    fn identity_stencil_is_identity() {
+        // Only the centre weight set: B must equal A everywhere.
+        let spec = StencilSpec::box2d(1);
+        let c = CoeffTensor::from_fn(spec, |off| {
+            if off.iter().all(|&o| o == 0) {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let a = DenseGrid::verification_input(&[12, 9], 1);
+        assert_eq!(apply(&c, &a), a);
+    }
+
+    #[test]
+    fn constant_field_is_fixed_point_of_normalized_weights() {
+        // paper_default sums to 1, so a constant field is invariant.
+        for spec in [StencilSpec::box2d(2), StencilSpec::star3d(1), StencilSpec::diag2d(1)] {
+            let c = CoeffTensor::paper_default(spec);
+            let shape: Vec<usize> = vec![10; spec.dims];
+            let a = DenseGrid::from_fn(&shape, |_| 3.25);
+            let b = apply(&c, &a);
+            let d = b.data.iter().map(|v| (v - 3.25).abs()).fold(0.0, f64::max);
+            assert!(d < 1e-12, "{spec}: {d}");
+        }
+    }
+
+    #[test]
+    fn boundary_is_copied() {
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let a = DenseGrid::verification_input(&[8, 8], 3);
+        let b = apply(&c, &a);
+        for j in 0..8 {
+            assert_eq!(b.at(&[0, j]), a.at(&[0, j]));
+            assert_eq!(b.at(&[7, j]), a.at(&[7, j]));
+            assert_eq!(b.at(&[j, 0]), a.at(&[j, 0]));
+            assert_eq!(b.at(&[j, 7]), a.at(&[j, 7]));
+        }
+    }
+
+    #[test]
+    fn hand_computed_2d5p_point() {
+        // Star r=1: B[i][j] = cN*A[i-1][j] + cW*A[i][j-1] + cC*A[i][j]
+        //                    + cE*A[i][j+1] + cS*A[i+1][j]
+        let spec = StencilSpec::star2d(1);
+        let c = CoeffTensor::paper_default(spec);
+        let a = DenseGrid::verification_input(&[6, 6], 11);
+        let b = apply(&c, &a);
+        let (i, j) = (2, 3);
+        let expect = c.at(&[-1, 0]) * a.at(&[i - 1, j])
+            + c.at(&[0, -1]) * a.at(&[i, j - 1])
+            + c.at(&[0, 0]) * a.at(&[i, j])
+            + c.at(&[0, 1]) * a.at(&[i, j + 1])
+            + c.at(&[1, 0]) * a.at(&[i + 1, j]);
+        assert!((b.at(&[i, j]) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hand_computed_3d7p_point() {
+        let spec = StencilSpec::star3d(1);
+        let c = CoeffTensor::paper_default(spec);
+        let a = DenseGrid::verification_input(&[5, 5, 5], 2);
+        let b = apply(&c, &a);
+        let p = [2usize, 2, 2];
+        let mut expect = c.at(&[0, 0, 0]) * a.at(&p);
+        for (off, sign) in [(0usize, -1isize), (0, 1), (1, -1), (1, 1), (2, -1), (2, 1)] {
+            let mut q = p;
+            q[off] = (q[off] as isize + sign) as usize;
+            let mut o = [0isize; 3];
+            o[off] = sign;
+            expect += c.at(&o) * a.at(&q);
+        }
+        assert!((b.at(&p) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn evolve_composes_apply() {
+        let c = CoeffTensor::paper_default(StencilSpec::box2d(1));
+        let a = DenseGrid::verification_input(&[9, 9], 5);
+        assert_eq!(evolve(&c, &a, 3), apply(&c, &apply(&c, &apply(&c, &a))));
+    }
+
+    #[test]
+    fn scatter_equivalence() {
+        // Computing B in scatter mode (each input scattered to neighbours
+        // with C^s) must equal gather mode with C^g — the core identity
+        // behind the paper's Eq. (3)-(5).
+        let spec = StencilSpec::box2d(1);
+        let cg = CoeffTensor::paper_default(spec);
+        let cs = cg.scatter();
+        let a = DenseGrid::verification_input(&[10, 10], 9);
+        let gather = apply(&cg, &a);
+
+        let mut scat = a.clone();
+        // zero interior, then scatter every input element
+        for i in 1..9usize {
+            for j in 1..9usize {
+                *scat.at_mut(&mut [i, j]) = 0.0;
+            }
+        }
+        for i in 0..10usize {
+            for j in 0..10usize {
+                for oi in -1..=1isize {
+                    for oj in -1..=1isize {
+                        let (ti, tj) = (i as isize + oi, j as isize + oj);
+                        // target must be interior
+                        if (1..9).contains(&ti) && (1..9).contains(&tj) {
+                            // scatter weight for displacement (oi,oj) is
+                            // C^s at (oi,oj) == C^g at (-oi,-oj)
+                            *scat.at_mut(&mut [ti as usize, tj as usize]) +=
+                                cs.at(&[oi, oj]) * a.at(&[i, j]);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(gather.max_abs_diff_interior(&scat, 1) < 1e-12);
+    }
+}

@@ -1,0 +1,222 @@
+//! Stencil specifications: dimension, shape and order.
+//!
+//! The paper classifies stencils by the dimension of the space grid (2D, 3D),
+//! the shape (box, star, and "other" shapes such as the diagonal stencil of
+//! Eq. (15)), and the order `r`. A `StencilSpec` pins all three down and is
+//! the single identifier threaded through the scatter algebra, the code
+//! generators, the simulator harness and the AOT artifact naming.
+
+
+use std::fmt;
+
+/// Shape of the stencil footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StencilKind {
+    /// Full `(2r+1)^d` footprint (e.g. 2D9P, 3D27P for r = 1).
+    Box,
+    /// Axis-aligned cross with `2rd + 1` points (e.g. 2D5P, 3D7P for r = 1).
+    Star,
+    /// 2D-only: non-zeros on the main diagonal and anti-diagonal (Eq. (15)).
+    Diagonal,
+}
+
+impl fmt::Display for StencilKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StencilKind::Box => write!(f, "box"),
+            StencilKind::Star => write!(f, "star"),
+            StencilKind::Diagonal => write!(f, "diag"),
+        }
+    }
+}
+
+/// A concrete stencil: `dims`-dimensional, `kind`-shaped, order `r`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StencilSpec {
+    /// Spatial dimension of the grid: 2 or 3.
+    pub dims: usize,
+    /// Stencil order `r`: the footprint reaches `r` points from the centre.
+    pub order: usize,
+    /// Footprint shape.
+    pub kind: StencilKind,
+}
+
+impl StencilSpec {
+    /// Construct a spec, validating the (dims, kind, order) combination.
+    pub fn new(dims: usize, order: usize, kind: StencilKind) -> anyhow::Result<Self> {
+        anyhow::ensure!(dims == 2 || dims == 3, "only 2D and 3D stencils are supported");
+        anyhow::ensure!(order >= 1, "stencil order must be >= 1");
+        anyhow::ensure!(
+            !(kind == StencilKind::Diagonal && dims != 2),
+            "diagonal stencils are 2D-only (paper Eq. (15))"
+        );
+        Ok(Self { dims, order, kind })
+    }
+
+    /// 2D box stencil of order `r`.
+    pub fn box2d(r: usize) -> Self {
+        Self { dims: 2, order: r, kind: StencilKind::Box }
+    }
+
+    /// 2D star stencil of order `r`.
+    pub fn star2d(r: usize) -> Self {
+        Self { dims: 2, order: r, kind: StencilKind::Star }
+    }
+
+    /// 3D box stencil of order `r`.
+    pub fn box3d(r: usize) -> Self {
+        Self { dims: 3, order: r, kind: StencilKind::Box }
+    }
+
+    /// 3D star stencil of order `r`.
+    pub fn star3d(r: usize) -> Self {
+        Self { dims: 3, order: r, kind: StencilKind::Star }
+    }
+
+    /// 2D diagonal stencil of order `r` (Eq. (15) generalized to order r).
+    pub fn diag2d(r: usize) -> Self {
+        Self { dims: 2, order: r, kind: StencilKind::Diagonal }
+    }
+
+    /// Footprint side length `2r + 1`.
+    pub fn side(&self) -> usize {
+        2 * self.order + 1
+    }
+
+    /// Number of points in the *dense* `(2r+1)^d` footprint (incl. zeros).
+    pub fn dense_points(&self) -> usize {
+        self.side().pow(self.dims as u32)
+    }
+
+    /// Number of non-zero weights for this shape.
+    ///
+    /// Box: `(2r+1)^d`; star: `2rd + 1` (§3.4); diagonal: `4r + 1`
+    /// (both diagonals of length `2r+1` sharing the centre).
+    pub fn nonzero_points(&self) -> usize {
+        match self.kind {
+            StencilKind::Box => self.dense_points(),
+            StencilKind::Star => 2 * self.order * self.dims + 1,
+            StencilKind::Diagonal => 4 * self.order + 1,
+        }
+    }
+
+    /// Whether the dense-footprint offset `off` (each component in
+    /// `-r..=r`) carries a non-zero weight for this shape.
+    pub fn mask(&self, off: &[isize]) -> bool {
+        debug_assert_eq!(off.len(), self.dims);
+        let r = self.order as isize;
+        debug_assert!(off.iter().all(|&o| -r <= o && o <= r));
+        match self.kind {
+            StencilKind::Box => true,
+            StencilKind::Star => off.iter().filter(|&&o| o != 0).count() <= 1,
+            StencilKind::Diagonal => off[0] == off[1] || off[0] == -off[1],
+        }
+    }
+
+    /// Conventional name, e.g. `2d9p-box-r1`, `3d7p-star-r1`.
+    pub fn name(&self) -> String {
+        format!("{}d{}p-{}-r{}", self.dims, self.nonzero_points(), self.kind, self.order)
+    }
+
+    /// Iterate over all dense footprint offsets (row-major, each component
+    /// in `-r..=r`), including masked-out (zero) positions.
+    pub fn dense_offsets(&self) -> Vec<Vec<isize>> {
+        let r = self.order as isize;
+        let mut out = Vec::with_capacity(self.dense_points());
+        match self.dims {
+            2 => {
+                for i in -r..=r {
+                    for j in -r..=r {
+                        out.push(vec![i, j]);
+                    }
+                }
+            }
+            3 => {
+                for i in -r..=r {
+                    for j in -r..=r {
+                        for k in -r..=r {
+                            out.push(vec![i, j, k]);
+                        }
+                    }
+                }
+            }
+            _ => unreachable!("spec validated at construction"),
+        }
+        out
+    }
+
+    /// FLOPs per interior output point: one multiply + one add per non-zero
+    /// tap (§3.4 counts multiplies only; we report both conventions).
+    pub fn flops_per_point(&self) -> usize {
+        2 * self.nonzero_points()
+    }
+}
+
+impl fmt::Display for StencilSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_counts_match_paper() {
+        assert_eq!(StencilSpec::box2d(1).nonzero_points(), 9); // 2D9P
+        assert_eq!(StencilSpec::star2d(1).nonzero_points(), 5); // 2D5P
+        assert_eq!(StencilSpec::box3d(1).nonzero_points(), 27); // 3D27P
+        assert_eq!(StencilSpec::star3d(1).nonzero_points(), 7); // 3D7P
+        assert_eq!(StencilSpec::star2d(2).nonzero_points(), 9);
+        assert_eq!(StencilSpec::star3d(2).nonzero_points(), 13);
+        assert_eq!(StencilSpec::diag2d(1).nonzero_points(), 5);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(StencilSpec::box2d(1).name(), "2d9p-box-r1");
+        assert_eq!(StencilSpec::star3d(1).name(), "3d7p-star-r1");
+    }
+
+    #[test]
+    fn star_mask_is_axis_cross() {
+        let s = StencilSpec::star2d(1);
+        assert!(s.mask(&[0, 0]));
+        assert!(s.mask(&[1, 0]));
+        assert!(s.mask(&[0, -1]));
+        assert!(!s.mask(&[1, 1]));
+    }
+
+    #[test]
+    fn diagonal_mask_matches_eq15() {
+        let s = StencilSpec::diag2d(1);
+        assert!(s.mask(&[-1, -1]) && s.mask(&[1, 1]));
+        assert!(s.mask(&[-1, 1]) && s.mask(&[1, -1]));
+        assert!(s.mask(&[0, 0]));
+        assert!(!s.mask(&[0, 1]) && !s.mask(&[1, 0]));
+    }
+
+    #[test]
+    fn mask_count_equals_nonzero_points() {
+        for spec in [
+            StencilSpec::box2d(2),
+            StencilSpec::star2d(3),
+            StencilSpec::box3d(1),
+            StencilSpec::star3d(2),
+            StencilSpec::diag2d(2),
+        ] {
+            let n = spec.dense_offsets().iter().filter(|o| spec.mask(o)).count();
+            assert_eq!(n, spec.nonzero_points(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(StencilSpec::new(1, 1, StencilKind::Box).is_err());
+        assert!(StencilSpec::new(4, 1, StencilKind::Star).is_err());
+        assert!(StencilSpec::new(2, 0, StencilKind::Box).is_err());
+        assert!(StencilSpec::new(3, 1, StencilKind::Diagonal).is_err());
+        assert!(StencilSpec::new(3, 2, StencilKind::Star).is_ok());
+    }
+}

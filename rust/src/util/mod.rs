@@ -1,0 +1,7 @@
+//! Small utilities standing in for crates absent from the offline vendor
+//! set: JSON (serde_json), property testing (proptest), and benchmark
+//! timing (criterion).
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,103 @@
+//! Tiny property-testing helper (the offline crate set has no proptest).
+//!
+//! Deterministic SplitMix64-based case generation: `cases(n, seed, f)`
+//! runs `f` on `n` independently-seeded RNGs; failures report the case
+//! seed so they can be replayed with `Rng::new(seed)`.
+
+/// SplitMix64 PRNG — tiny, fast, good enough for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: usize) -> usize {
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[-1, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Bernoulli(1/2).
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `n` generated cases; panic with the failing case seed on error.
+pub fn cases(n: usize, seed: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x100000001B3)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property case {case} failed (replay with Rng::new({case_seed:#x}))");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+            let x = r.range(3, 9);
+            assert!((3..=9).contains(&x));
+            assert!((-1.0..1.0).contains(&r.f64()));
+        }
+    }
+
+    #[test]
+    fn cases_runs_all() {
+        let mut count = 0;
+        cases(25, 42, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cases_propagates_failures() {
+        cases(5, 1, |rng| assert!(rng.below(10) > 100));
+    }
+}

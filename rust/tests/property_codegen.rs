@@ -1,0 +1,132 @@
+//! Property tests (util::prop, seeded SplitMix64 cases) over the codegen
+//! and scatter invariants:
+//!
+//! - every (method × spec × size × unroll × scheduling) cell produces
+//!   oracle-exact output;
+//! - König's minimal cover matches the brute-force oracle on random
+//!   coefficient masks and always reconstructs the tensor;
+//! - the Eq. (12) expansion conserves every weight's total contribution.
+
+use stencil_matrix::codegen::{run_method, Method, OuterParams};
+use stencil_matrix::scatter::cover::{minimal_axis_cover_2d, Bipartite};
+use stencil_matrix::scatter::line::LineCover;
+use stencil_matrix::scatter::{build_cover, CoverOption};
+use stencil_matrix::stencil::{CoeffTensor, StencilKind, StencilSpec};
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::prop::{cases, Rng};
+
+fn random_spec(rng: &mut Rng, dims: usize) -> StencilSpec {
+    let kinds: &[StencilKind] = if dims == 2 {
+        &[StencilKind::Box, StencilKind::Star, StencilKind::Diagonal]
+    } else {
+        &[StencilKind::Box, StencilKind::Star]
+    };
+    StencilSpec::new(dims, rng.range(1, 3), *rng.choose(kinds)).unwrap()
+}
+
+#[test]
+fn outer_method_is_oracle_exact_across_param_space_2d() {
+    let cfg = SimConfig::default();
+    cases(12, 0x2D, |rng| {
+        let spec = random_spec(rng, 2);
+        let n = *rng.choose(&[16usize, 24, 32]);
+        let mut options = CoverOption::applicable(spec);
+        options.retain(|o| *o != CoverOption::MinimalAxis || spec.kind != StencilKind::Diagonal);
+        let option = *rng.choose(&options);
+        let params = OuterParams {
+            option,
+            ui: 1,
+            uk: rng.range(1, 8),
+            scheduled: rng.bool(),
+        };
+        let res = run_method(&cfg, spec, n, Method::Outer(params), false).unwrap();
+        assert!(
+            res.verified(),
+            "{spec} N={n} {params:?}: max_err {}",
+            res.max_err
+        );
+    });
+}
+
+#[test]
+fn outer_method_is_oracle_exact_across_param_space_3d() {
+    let cfg = SimConfig::default();
+    cases(8, 0x3D, |rng| {
+        let spec = random_spec(rng, 3);
+        let n = *rng.choose(&[8usize, 16]);
+        let options = CoverOption::applicable(spec);
+        let option = *rng.choose(&options);
+        let (ui, uk) = *rng.choose(&[(1usize, 1usize), (2, 2), (4, 1), (1, 4)]);
+        let params = OuterParams { option, ui, uk, scheduled: rng.bool() };
+        let res = run_method(&cfg, spec, n, Method::Outer(params), false).unwrap();
+        assert!(
+            res.verified(),
+            "{spec} N={n} {params:?}: max_err {}",
+            res.max_err
+        );
+    });
+}
+
+#[test]
+fn baselines_are_oracle_exact() {
+    let cfg = SimConfig::default();
+    cases(10, 0xBA5E, |rng| {
+        let dims = rng.range(2, 3);
+        let spec = random_spec(rng, dims);
+        let n = if dims == 2 { *rng.choose(&[16usize, 32]) } else { 8 };
+        let method = *rng.choose(&[Method::AutoVec, Method::Dlt, Method::Tv, Method::Scalar]);
+        let res = run_method(&cfg, spec, n, method, false).unwrap();
+        assert!(res.verified(), "{method} {spec} N={n}: {}", res.max_err);
+    });
+}
+
+#[test]
+fn koenig_cover_matches_bruteforce_on_random_masks() {
+    cases(40, 0x4B0E, |rng| {
+        let r = rng.range(1, 3);
+        let spec = StencilSpec::box2d(r);
+        let side = spec.side();
+        // random mask with a guaranteed non-zero centre
+        let mut c = CoeffTensor { spec, data: vec![0.0; side * side] };
+        for v in c.data.iter_mut() {
+            if rng.below(3) == 0 {
+                *v = rng.f64() + 2.0; // strictly non-zero
+            }
+        }
+        let centre = (side * side) / 2;
+        c.data[centre] = 1.0;
+        let g = Bipartite::from_coeffs(&c);
+        let (rows, cols) = g.min_vertex_cover();
+        assert_eq!(rows.len() + cols.len(), g.brute_force_cover_size());
+        let cover = LineCover { spec, lines: minimal_axis_cover_2d(&c) };
+        assert!(cover.reconstructs(&c), "minimal cover must reconstruct");
+        assert_eq!(cover.len(), rows.len() + cols.len());
+    });
+}
+
+#[test]
+fn eq12_expansion_conserves_weights() {
+    // Σ_p cv(p)[k] over all output rows k equals each weight's count of
+    // uses: every weight w[d] appears exactly once per output row.
+    cases(30, 0xE012, |rng| {
+        let spec = random_spec(rng, 2);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let options = CoverOption::applicable(spec);
+        let option = *rng.choose(&options);
+        let cover = build_cover(&coeffs, option).unwrap();
+        let n = 8;
+        let weight_sum: f64 = coeffs.data.iter().sum();
+        let mut contrib = 0.0;
+        for line in &cover.lines {
+            for (_, cv) in line.coeff_vectors(n) {
+                contrib += cv.iter().sum::<f64>();
+            }
+        }
+        // every weight contributes to exactly n output rows
+        assert!(
+            (contrib - weight_sum * n as f64).abs() < 1e-9,
+            "{spec} {option:?}: {contrib} vs {}",
+            weight_sum * n as f64
+        );
+    });
+}
