@@ -1,67 +1,6 @@
-//! The PJRT evolution service: a small request loop over compiled
-//! artifacts — the "request path" of the three-layer architecture
-//! (Rust + compiled XLA only; Python never runs here).
+//! Back-compat shim: the evolution service moved to
+//! [`crate::serve::service`] when the serving subsystem grew its own
+//! layer (domain decomposition, worker pool, batched front-end). The
+//! coordinator remains a *driver* and delegates all serving to `serve`.
 
-use crate::runtime::{PjrtRuntime, Registry, StencilEngine};
-use crate::stencil::DenseGrid;
-use std::collections::HashMap;
-use std::path::Path;
-
-/// A request to advance a grid.
-#[derive(Debug, Clone)]
-pub struct EvolveRequest {
-    /// Artifact name (see `artifacts/manifest.json`).
-    pub artifact: String,
-    /// Number of executions (each advances `artifact.steps` steps).
-    pub executions: usize,
-    /// Verify the result against the scalar oracle.
-    pub verify: bool,
-}
-
-/// Serves evolve requests, caching compiled executables per artifact.
-pub struct EvolutionService {
-    runtime: PjrtRuntime,
-    registry: Registry,
-    engines: HashMap<String, StencilEngine>,
-}
-
-impl EvolutionService {
-    /// Start the service over an artifact directory.
-    pub fn new(artifact_dir: &Path) -> anyhow::Result<EvolutionService> {
-        let runtime = PjrtRuntime::cpu()?;
-        let registry = Registry::load(artifact_dir)?;
-        Ok(EvolutionService { runtime, registry, engines: HashMap::new() })
-    }
-
-    /// Platform the service runs on.
-    pub fn platform(&self) -> String {
-        self.runtime.platform()
-    }
-
-    /// Artifact names available.
-    pub fn artifacts(&self) -> Vec<String> {
-        self.registry.artifacts.iter().map(|a| a.name.clone()).collect()
-    }
-
-    /// Compile (or fetch the cached) engine for an artifact.
-    pub fn engine(&mut self, name: &str) -> anyhow::Result<&StencilEngine> {
-        if !self.engines.contains_key(name) {
-            let meta = self.registry.find(name)?.clone();
-            let exe = self.runtime.compile(&meta)?;
-            self.engines.insert(name.to_string(), StencilEngine::new(exe));
-        }
-        Ok(&self.engines[name])
-    }
-
-    /// Serve one request: build the deterministic verification input for
-    /// the artifact's shape, evolve, and report.
-    pub fn serve(
-        &mut self,
-        req: &EvolveRequest,
-    ) -> anyhow::Result<(DenseGrid, crate::runtime::EvolutionReport)> {
-        let engine = self.engine(&req.artifact)?;
-        let shape = engine.meta().shape();
-        let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
-        engine.evolve(&grid, req.executions, req.verify)
-    }
-}
+pub use crate::serve::service::{EvolutionService, EvolveRequest};

@@ -22,7 +22,13 @@
 //!   vectorization).
 //! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executing them from Rust; Python never runs
-//!   at request time.
+//!   at request time (gated behind the `pjrt` cargo feature; a stub
+//!   otherwise).
+//! - [`serve`] — the serving subsystem: slab domain decomposition with
+//!   halo exchange, a work-stealing worker pool with per-step barriers,
+//!   an LRU cache of compiled shard kernels, and a batched request
+//!   front-end with backpressure, coalescing and JSON metrics. Sharded
+//!   multi-threaded evolution is *bitwise* equal to the scalar oracle.
 //! - [`coordinator`] — experiment runner, parameter sweeps, report tables
 //!   and the async batch driver.
 //! - [`bench_harness`] — regenerates every figure and table of the paper's
@@ -33,6 +39,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod runtime;
 pub mod scatter;
+pub mod serve;
 pub mod sim;
 pub mod stencil;
 pub mod util;

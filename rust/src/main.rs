@@ -1,23 +1,29 @@
 //! `stencil-matrix` — CLI for the Stencil Matrixization reproduction.
 //!
 //! ```text
-//! stencil-matrix analyze  --stencil 2d-box --order 2 [--n 8]
-//! stencil-matrix cover    --stencil 2d-star --order 2 --option minimalaxis
-//! stencil-matrix simulate --stencil 2d-box --order 1 --size 64 \
-//!                         --method outer [--option parallel] [--ui 1] \
-//!                         [--uk 8] [--no-sched] [--cold]
-//! stencil-matrix bench    fig3|fig4|fig5|table3|ablations|all
-//! stencil-matrix serve    --artifact evolve_2d5p_n256_t4 --executions 25
-//! stencil-matrix list     [--artifacts-dir artifacts]
+//! stencil-matrix analyze     --stencil 2d-box --order 2 [--n 8]
+//! stencil-matrix cover       --stencil 2d-star --order 2 --option minimalaxis
+//! stencil-matrix simulate    --stencil 2d-box --order 1 --size 64 \
+//!                            --method outer [--option parallel] [--ui 1] \
+//!                            [--uk 8] [--no-sched] [--cold]
+//! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
+//! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
+//!                            --size 256 --steps 4 --requests 32
+//! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
+//! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
+//! stencil-matrix list        [--artifacts-dir artifacts]
 //! ```
 
 use stencil_matrix::codegen::{run_method, Method, OuterParams};
 use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
 use stencil_matrix::scatter::{analysis, build_cover, CoverOption};
-use stencil_matrix::stencil::{CoeffTensor, StencilKind, StencilSpec};
+use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, ShardedEvolver, StencilServer};
+use stencil_matrix::stencil::{CoeffTensor, DenseGrid, StencilKind, StencilSpec};
 use stencil_matrix::sim::SimConfig;
+use stencil_matrix::util::json::{obj, Json};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -26,24 +32,33 @@ fn main() {
     }
 }
 
-/// Parsed `--key value` arguments plus positionals.
+/// Parsed command-line arguments: positionals, `--key value` /
+/// `--key=value` flags, and bare `--switch`es.
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
     switches: Vec<String>,
 }
 
+/// Parse `argv` (without the subcommand). Both `--key value` and
+/// `--key=value` are accepted; `=` values may be empty, contain further
+/// `=`, or begin with any number of dashes. Space-separated values may
+/// begin with a single `-` (e.g. `--offset -3`); a following `--token`
+/// is never consumed as a value (use `--key=--token` for that).
 fn parse_args(argv: &[String]) -> Args {
     let mut a = Args { positional: Vec::new(), flags: HashMap::new(), switches: Vec::new() };
     let mut i = 0;
     while i < argv.len() {
         let arg = &argv[i];
-        if let Some(key) = arg.strip_prefix("--") {
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                a.flags.insert(key.to_string(), argv[i + 1].clone());
+        if let Some(body) = arg.strip_prefix("--") {
+            if let Some((key, value)) = body.split_once('=') {
+                a.flags.insert(key.to_string(), value.to_string());
+                i += 1;
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                a.flags.insert(body.to_string(), argv[i + 1].clone());
                 i += 2;
             } else {
-                a.switches.push(key.to_string());
+                a.switches.push(body.to_string());
                 i += 1;
             }
         } else {
@@ -94,6 +109,10 @@ fn parse_option(s: &str) -> anyhow::Result<CoverOption> {
         "diagonals" | "d" => CoverOption::Diagonals,
         other => anyhow::bail!("unknown --option '{other}'"),
     })
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 fn run() -> anyhow::Result<()> {
@@ -179,7 +198,6 @@ fn run() -> anyhow::Result<()> {
             use stencil_matrix::codegen::common::{CoeffTable, Layout};
             use stencil_matrix::sim::isa::Program;
             use stencil_matrix::sim::Machine;
-            use stencil_matrix::stencil::DenseGrid;
             let spec = parse_spec(&args)?;
             let n = args.usize_or("size", 16)?;
             let limit = args.usize_or("limit", 80)?;
@@ -214,29 +232,31 @@ fn run() -> anyhow::Result<()> {
             run_experiment(&cfg, which)?;
         }
         "serve" => {
-            let dir = PathBuf::from(args.get("artifacts-dir").unwrap_or("artifacts"));
-            let mut svc = EvolutionService::new(&dir)?;
-            println!("platform: {}", svc.platform());
-            let artifact = args.get("artifact").unwrap_or("evolve_2d5p_n64_t8").to_string();
-            let executions = args.usize_or("executions", 10)?;
-            let req = stencil_matrix::coordinator::service::EvolveRequest {
-                artifact,
-                executions,
-                verify: !args.has("no-verify"),
+            // --backend picks explicitly; otherwise any artifact-flavoured
+            // flag keeps the pre-existing PJRT path (including
+            // `serve --executions N`, which used to serve the default
+            // artifact)
+            let backend = match args.get("backend") {
+                Some(b) => b.to_string(),
+                None => {
+                    if args.get("artifact").is_some()
+                        || args.get("artifacts-dir").is_some()
+                        || args.get("executions").is_some()
+                    {
+                        "artifact".to_string()
+                    } else {
+                        "native".to_string()
+                    }
+                }
             };
-            let (_, report) = svc.serve(&req)?;
-            println!(
-                "{}: {} executions / {} steps in {:.3}s → {:.2} Mpoints/s (max err {:?})",
-                req.artifact,
-                report.executions,
-                report.steps,
-                report.seconds,
-                report.points_per_sec / 1e6,
-                report.max_err
-            );
-            if let Some(err) = report.max_err {
-                anyhow::ensure!(err < 1e-9, "PJRT output did not match the oracle");
+            match backend.as_str() {
+                "artifact" | "pjrt" => serve_artifact(&args)?,
+                "native" => serve_native(&args)?,
+                other => anyhow::bail!("unknown --backend '{other}' (native|artifact)"),
             }
+        }
+        "shard-bench" => {
+            shard_bench(&args)?;
         }
         "list" => {
             let dir = PathBuf::from(args.get("artifacts-dir").unwrap_or("artifacts"));
@@ -260,21 +280,266 @@ fn run() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve` with `--artifact`: the PJRT compiled-artifact path.
+fn serve_artifact(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get("artifacts-dir").unwrap_or("artifacts"));
+    let mut svc = EvolutionService::new(&dir)?;
+    println!("platform: {}", svc.platform());
+    let artifact = args.get("artifact").unwrap_or("evolve_2d5p_n64_t8").to_string();
+    let executions = args.usize_or("executions", 10)?;
+    let req = stencil_matrix::coordinator::service::EvolveRequest {
+        artifact,
+        executions,
+        verify: !args.has("no-verify"),
+    };
+    let (_, report) = svc.serve(&req)?;
+    println!(
+        "{}: {} executions / {} steps in {:.3}s → {:.2} Mpoints/s (max err {:?})",
+        req.artifact,
+        report.executions,
+        report.steps,
+        report.seconds,
+        report.points_per_sec / 1e6,
+        report.max_err
+    );
+    if let Some(err) = report.max_err {
+        anyhow::ensure!(err < 1e-9, "PJRT output did not match the oracle");
+    }
+    Ok(())
+}
+
+/// `serve --backend native` (the default without artifact flags): the
+/// native sharded multi-threaded server.
+///
+/// Simulates a client fleet: `--clients` threads submit `--requests`
+/// requests total (seeds cycling over `--distinct` values, so identical
+/// requests that are still queued coalesce), then prints the metrics
+/// snapshot as JSON.
+fn serve_native(args: &Args) -> anyhow::Result<()> {
+    let spec = parse_spec(args)?;
+    let n = args.usize_or("size", 64)?;
+    let steps = args.usize_or("steps", 4)?;
+    let workers = args.usize_or("workers", default_workers())?;
+    let shards = args.usize_or("shards", 0)?; // 0 = one per worker
+    let queue_depth = args.usize_or("queue-depth", 32)?.max(1);
+    let requests = args.usize_or("requests", 16)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let distinct = args.usize_or("distinct", 4)?.max(1);
+    let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
+    let verify = !args.has("no-verify");
+
+    let server = Arc::new(StencilServer::new(ServeConfig {
+        workers,
+        shards,
+        queue_depth,
+        plan_cache: 32,
+    }));
+    server.start();
+    println!(
+        "serving {requests} request(s) from {clients} client(s): {spec} N={n} steps={steps} \
+         kernel={method} workers={workers} shards={} queue-depth={queue_depth}",
+        server.effective_shards()
+    );
+
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut served = 0usize;
+            let mut i = c;
+            while i < requests {
+                let req = ShardRequest {
+                    spec,
+                    n,
+                    steps,
+                    seed: (i % distinct) as u64,
+                    method,
+                    verify,
+                };
+                let resp = server.submit(req)?.wait()?;
+                if verify {
+                    anyhow::ensure!(
+                        resp.report.max_err == Some(0.0),
+                        "request {i} failed verification (max_err {:?})",
+                        resp.report.max_err
+                    );
+                }
+                served += 1;
+                i += clients;
+            }
+            Ok(served)
+        }));
+    }
+    let mut served = 0usize;
+    for h in handles {
+        served += h
+            .join()
+            .map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    server.shutdown();
+    println!("{}", server.metrics_json().to_string_compact());
+    if verify {
+        println!("served {served}/{requests} request(s), all verified against the scalar oracle");
+    } else {
+        println!("served {served}/{requests} request(s) (verification disabled)");
+    }
+    Ok(())
+}
+
+/// `shard-bench`: wall-clock scaling of sharded evolution over worker
+/// counts (1, 2, 4, …, `--max-workers`) on one large grid.
+fn shard_bench(args: &Args) -> anyhow::Result<()> {
+    use stencil_matrix::util::bench::{fmt_secs, time_it, Table};
+
+    let spec = parse_spec(args)?;
+    let n = args.usize_or("size", 512)?;
+    let steps = args.usize_or("steps", 8)?;
+    let max_workers = args.usize_or("max-workers", default_workers().max(4))?.max(1);
+    let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
+
+    let shape = vec![n + 2 * spec.order; spec.dims];
+    let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+    let point_steps = (n.pow(spec.dims as u32) * steps) as f64;
+    println!(
+        "shard-bench: {spec} N={n} steps={steps} kernel={method} (host parallelism: {})",
+        default_workers()
+    );
+
+    let mut workers_list = Vec::new();
+    let mut w = 1usize;
+    while w < max_workers {
+        workers_list.push(w);
+        w *= 2;
+    }
+    workers_list.push(max_workers);
+    workers_list.dedup();
+
+    let mut table = Table::new(&["workers", "shards", "best", "Mpts/s", "speedup"]);
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    let mut base_secs = None;
+    for &w in &workers_list {
+        let ev = ShardedEvolver::new(w);
+        let shards = 2 * w; // oversubscribe so stealing levels uneven slabs
+        ev.evolve(spec, &grid, 1, shards, method)?; // warm the plan cache
+        let (best, _) = time_it(3, || {
+            ev.evolve(spec, &grid, steps, shards, method).unwrap();
+        });
+        let base = *base_secs.get_or_insert(best);
+        let speedup = base / best;
+        speedups.push(speedup);
+        table.row(vec![
+            w.to_string(),
+            shards.to_string(),
+            fmt_secs(best),
+            format!("{:.1}", point_steps / best / 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("seconds", Json::Num(best)),
+            ("mpts_per_s", Json::Num(point_steps / best / 1e6)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    print!("{}", table.to_markdown());
+    println!("{}", Json::Arr(rows).to_string_compact());
+
+    let peak = speedups.iter().copied().fold(1.0f64, f64::max);
+    let top_workers = *workers_list.last().unwrap();
+    println!("peak speedup: {peak:.2}x at up to {top_workers} worker(s)");
+    if peak < top_workers as f64 * 0.5 && default_workers() < 2 * top_workers {
+        println!(
+            "note: host exposes {} hardware thread(s); scaling is capped by physical parallelism",
+            default_workers()
+        );
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "stencil-matrix — Stencil Matrixization (CS.DC 2023) reproduction
 
 USAGE:
-  stencil-matrix analyze  --stencil 2d-box --order 2 [--n 8]
-  stencil-matrix cover    --stencil 2d-star --order 2 --option orthogonal
-  stencil-matrix simulate --stencil 2d-box --order 1 --size 64 --method outer
-                          [--option parallel] [--ui 1] [--uk 8] [--no-sched] [--cold]
-  stencil-matrix disasm   --stencil 2d-box --order 1 --size 16 [--limit 80]
-  stencil-matrix bench    fig3|fig4|fig5|table3|ablations|all
-  stencil-matrix serve    --artifact evolve_2d5p_n256_t4 --executions 25
-  stencil-matrix list     [--artifacts-dir artifacts]
+  stencil-matrix analyze     --stencil 2d-box --order 2 [--n 8]
+  stencil-matrix cover       --stencil 2d-star --order 2 --option orthogonal
+  stencil-matrix simulate    --stencil 2d-box --order 1 --size 64 --method outer
+                             [--option parallel] [--ui 1] [--uk 8] [--no-sched] [--cold]
+  stencil-matrix disasm      --stencil 2d-box --order 1 --size 16 [--limit 80]
+  stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
+  stencil-matrix serve       [--backend native] [--workers N] [--shards M]
+                             [--queue-depth D] [--size 256] [--steps 4]
+                             [--requests 32] [--clients 4] [--distinct 4]
+                             [--kernel taps|oracle] [--no-verify]
+  stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
+  stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
+                             [--kernel taps|oracle]
+  stencil-matrix list        [--artifacts-dir artifacts]
 
-Methods: outer (the paper's), autovec, dlt, tv, scalar.
+Flags accept both '--key value' and '--key=value'; '=' values may begin
+with '-'. Methods: outer (the paper's), autovec, dlt, tv, scalar.
 Stencils: 2d-box 2d-star 2d-diag 3d-box 3d-star; --order 1..4."
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn space_separated_flags() {
+        let a = parse_args(&argv(&["--size", "64", "--stencil", "2d-box"]));
+        assert_eq!(a.get("size"), Some("64"));
+        assert_eq!(a.get("stencil"), Some("2d-box"));
+        assert!(a.positional.is_empty() && a.switches.is_empty());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse_args(&argv(&["--size=128", "--label=a=b", "--empty="]));
+        assert_eq!(a.get("size"), Some("128"));
+        assert_eq!(a.get("label"), Some("a=b")); // only first '=' splits
+        assert_eq!(a.get("empty"), Some(""));
+    }
+
+    #[test]
+    fn values_beginning_with_dash() {
+        let a = parse_args(&argv(&["--offset", "-7", "--delta=-3", "--raw=--switch"]));
+        assert_eq!(a.get("offset"), Some("-7"));
+        assert_eq!(a.get("delta"), Some("-3"));
+        assert_eq!(a.get("raw"), Some("--switch")); // '=' can smuggle '--'
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = parse_args(&argv(&["run", "--cold", "--size", "64", "extra"]));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert!(a.has("cold"));
+        assert_eq!(a.usize_or("size", 0).unwrap(), 64);
+        assert!(!a.has("size"));
+    }
+
+    #[test]
+    fn trailing_flag_is_a_switch() {
+        let a = parse_args(&argv(&["--no-verify"]));
+        assert!(a.has("no-verify"));
+        let b = parse_args(&argv(&["--cold", "--size", "32"]));
+        assert!(b.has("cold"));
+        assert_eq!(b.get("size"), Some("32"));
+    }
+
+    #[test]
+    fn usize_or_defaults_and_parses() {
+        let a = parse_args(&argv(&["--size=24"]));
+        assert_eq!(a.usize_or("size", 64).unwrap(), 24);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        let bad = parse_args(&argv(&["--size=nope"]));
+        assert!(bad.usize_or("size", 64).is_err());
+    }
 }

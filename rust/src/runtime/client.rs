@@ -4,64 +4,119 @@
 //! → `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. HLO *text* is the interchange format
 //! (xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos).
+//!
+//! The `xla` crate is not part of the offline vendor set, so the real
+//! implementation is gated behind the `pjrt` cargo feature. Without it
+//! this module compiles a stub whose [`PjrtRuntime::cpu`] returns an
+//! error, keeping every non-PJRT layer (simulator, codegen, scatter, the
+//! sharded serving subsystem) fully usable.
 
-use super::registry::ArtifactMeta;
-use crate::stencil::DenseGrid;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::runtime::registry::ArtifactMeta;
+    use crate::stencil::DenseGrid;
 
-/// A live PJRT client plus the executables compiled on it.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled stencil executable.
-pub struct StencilExecutable {
-    /// The artifact this executable was compiled from.
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl PjrtRuntime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> anyhow::Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime { client })
+    /// A live PJRT client plus the executables compiled on it.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    /// Platform name of the underlying client.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled stencil executable.
+    pub struct StencilExecutable {
+        /// The artifact this executable was compiled from.
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Load + compile one artifact.
-    pub fn compile(&self, meta: &ArtifactMeta) -> anyhow::Result<StencilExecutable> {
-        let path = meta
-            .path
-            .to_str()
-            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(StencilExecutable { meta: meta.clone(), exe })
+    impl PjrtRuntime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtRuntime { client })
+        }
+
+        /// Platform name of the underlying client.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one artifact.
+        pub fn compile(&self, meta: &ArtifactMeta) -> anyhow::Result<StencilExecutable> {
+            let path = meta
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(StencilExecutable { meta: meta.clone(), exe })
+        }
+    }
+
+    impl StencilExecutable {
+        /// Run one execution: grid in (storage shape), grid out. Advances
+        /// `meta.steps` time steps.
+        pub fn run(&self, grid: &DenseGrid) -> anyhow::Result<DenseGrid> {
+            anyhow::ensure!(
+                grid.shape == self.meta.shape(),
+                "grid shape {:?} does not match artifact {:?}",
+                grid.shape,
+                self.meta.shape()
+            );
+            let dims: Vec<i64> = grid.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&grid.data).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+            let out = result.to_tuple1()?;
+            let data = out.to_vec::<f64>()?;
+            anyhow::ensure!(data.len() == grid.data.len(), "output size mismatch");
+            Ok(DenseGrid { shape: grid.shape.clone(), data })
+        }
     }
 }
 
-impl StencilExecutable {
-    /// Run one execution: grid in (storage shape), grid out. Advances
-    /// `meta.steps` time steps.
-    pub fn run(&self, grid: &DenseGrid) -> anyhow::Result<DenseGrid> {
-        anyhow::ensure!(
-            grid.shape == self.meta.shape(),
-            "grid shape {:?} does not match artifact {:?}",
-            grid.shape,
-            self.meta.shape()
-        );
-        let dims: Vec<i64> = grid.shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(&grid.data).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f64>()?;
-        anyhow::ensure!(data.len() == grid.data.len(), "output size mismatch");
-        Ok(DenseGrid { shape: grid.shape.clone(), data })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::runtime::registry::ArtifactMeta;
+    use crate::stencil::DenseGrid;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was built without the \
+                               `pjrt` cargo feature (which requires the `xla` crate)";
+
+    /// Stub standing in for the PJRT client when `pjrt` is disabled.
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    /// Stub compiled executable; only its metadata is real.
+    pub struct StencilExecutable {
+        /// The artifact this executable was compiled from.
+        pub meta: ArtifactMeta,
+    }
+
+    impl PjrtRuntime {
+        /// Always fails: the feature is off.
+        pub fn cpu() -> anyhow::Result<PjrtRuntime> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        /// Platform name (unreachable in practice: `cpu()` cannot succeed).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Always fails: the feature is off.
+        pub fn compile(&self, _meta: &ArtifactMeta) -> anyhow::Result<StencilExecutable> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+    }
+
+    impl StencilExecutable {
+        /// Always fails: the feature is off.
+        pub fn run(&self, _grid: &DenseGrid) -> anyhow::Result<DenseGrid> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
     }
 }
+
+pub use imp::{PjrtRuntime, StencilExecutable};

@@ -1,0 +1,180 @@
+//! Halo exchange: refresh each tile's ghost rows from its neighbours'
+//! freshly-computed owned rows between time steps.
+//!
+//! Two variants of the same copy:
+//!
+//! - [`exchange_serial`] over `&mut [DenseGrid]` — used by tests and as
+//!   the specification of the exchange;
+//! - [`refresh_ghosts`] over `&[Mutex<DenseGrid>]` — the form the worker
+//!   pool runs, one call per shard. It never holds two tile locks at
+//!   once (neighbour rows are copied out into a scratch buffer first), so
+//!   concurrent exchange jobs for adjacent shards cannot deadlock; the
+//!   regions are disjoint (a shard only *writes* its own ghost rows and
+//!   only *reads* neighbours' owned rows), so the result equals the
+//!   serial exchange.
+
+use super::partition::Partition;
+use crate::stencil::DenseGrid;
+use std::sync::Mutex;
+
+/// Rows `[row, row + count)` of `tile` as a linear range, given `rest`
+/// elements per row.
+fn row_range(row: usize, count: usize, rest: usize) -> std::ops::Range<usize> {
+    row * rest..(row + count) * rest
+}
+
+/// Serially refresh every tile's ghost rows from its neighbours' owned
+/// rows. `tiles[s]` must have shape `part.tile_shape(s)`.
+pub fn exchange_serial(part: &Partition, tiles: &mut [DenseGrid]) {
+    assert_eq!(tiles.len(), part.len());
+    let rest = part.row_elems();
+    for s in 0..tiles.len() {
+        if let Some((src_range, dst_range)) = lower_ghost_copy(part, s, rest) {
+            let buf = tiles[s - 1].data[src_range].to_vec();
+            tiles[s].data[dst_range].copy_from_slice(&buf);
+        }
+        if let Some((src_range, dst_range)) = upper_ghost_copy(part, s, rest) {
+            let buf = tiles[s + 1].data[src_range].to_vec();
+            tiles[s].data[dst_range].copy_from_slice(&buf);
+        }
+    }
+}
+
+/// Refresh shard `s`'s ghost rows, locking one tile at a time.
+pub fn refresh_ghosts(part: &Partition, tiles: &[Mutex<DenseGrid>], s: usize) {
+    assert_eq!(tiles.len(), part.len());
+    let rest = part.row_elems();
+    if let Some((src_range, dst_range)) = lower_ghost_copy(part, s, rest) {
+        let buf = tiles[s - 1].lock().unwrap().data[src_range].to_vec();
+        tiles[s].lock().unwrap().data[dst_range].copy_from_slice(&buf);
+    }
+    if let Some((src_range, dst_range)) = upper_ghost_copy(part, s, rest) {
+        let buf = tiles[s + 1].lock().unwrap().data[src_range].to_vec();
+        tiles[s].lock().unwrap().data[dst_range].copy_from_slice(&buf);
+    }
+}
+
+/// Source range (in tile `s - 1`) and destination range (in tile `s`) for
+/// shard `s`'s lower ghost rows, or `None` when it has none.
+fn lower_ghost_copy(
+    part: &Partition,
+    s: usize,
+    rest: usize,
+) -> Option<(std::ops::Range<usize>, std::ops::Range<usize>)> {
+    let slab = &part.slabs[s];
+    if slab.ghost_lo == 0 {
+        return None;
+    }
+    let prev = &part.slabs[s - 1];
+    // shard s's lower ghosts are global rows [lo - ghost_lo, lo), i.e. the
+    // last ghost_lo owned rows of shard s-1 (heights >= halo guarantee
+    // they all belong to that one neighbour)
+    let src_row = prev.ghost_lo + prev.rows() - slab.ghost_lo;
+    Some((
+        row_range(src_row, slab.ghost_lo, rest),
+        row_range(0, slab.ghost_lo, rest),
+    ))
+}
+
+/// Source range (in tile `s + 1`) and destination range (in tile `s`) for
+/// shard `s`'s upper ghost rows, or `None` when it has none.
+fn upper_ghost_copy(
+    part: &Partition,
+    s: usize,
+    rest: usize,
+) -> Option<(std::ops::Range<usize>, std::ops::Range<usize>)> {
+    let slab = &part.slabs[s];
+    if slab.ghost_hi == 0 {
+        return None;
+    }
+    let next = &part.slabs[s + 1];
+    // shard s's upper ghosts are global rows [hi, hi + ghost_hi), i.e. the
+    // first ghost_hi owned rows of shard s+1
+    Some((
+        row_range(next.ghost_lo, slab.ghost_hi, rest),
+        row_range(slab.ghost_lo + slab.rows(), slab.ghost_hi, rest),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, CoeffTensor, StencilSpec};
+
+    /// The specification run: extract tiles, then alternate per-tile
+    /// oracle applications with serial halo exchanges. Must equal the
+    /// global oracle bitwise — the exactness guarantee the whole serving
+    /// subsystem rests on.
+    fn sharded_oracle_evolve(
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+    ) -> DenseGrid {
+        let coeffs = CoeffTensor::paper_default(spec);
+        let part = Partition::new(&grid.shape, shards, spec.order).unwrap();
+        let mut tiles = part.extract(grid);
+        for step in 0..steps {
+            for t in tiles.iter_mut() {
+                // tiles too small to hold any interior point are all
+                // frozen boundary: the oracle would reject them, and the
+                // correct result is a plain copy (i.e. no-op)
+                if t.shape.iter().all(|&n| n > 2 * spec.order) {
+                    *t = reference::apply(&coeffs, t);
+                }
+            }
+            if step + 1 < steps {
+                exchange_serial(&part, &mut tiles);
+            }
+        }
+        let refs: Vec<&DenseGrid> = tiles.iter().collect();
+        part.assemble(&refs).unwrap()
+    }
+
+    #[test]
+    fn sharded_evolution_is_bitwise_exact_2d() {
+        for (order, n, steps) in [(1usize, 16usize, 3usize), (2, 17, 2), (3, 20, 2)] {
+            let spec = StencilSpec::box2d(order);
+            let shape = vec![n; 2];
+            let grid = DenseGrid::verification_input(&shape, 42);
+            let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, steps);
+            for shards in [1usize, 2, 3, 4, 7] {
+                let got = sharded_oracle_evolve(spec, &grid, steps, shards);
+                assert_eq!(got, want, "order {order} N={n} steps={steps} x{shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_evolution_is_bitwise_exact_3d() {
+        let spec = StencilSpec::star3d(2);
+        let grid = DenseGrid::verification_input(&[11, 9, 8], 7);
+        let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, 2);
+        for shards in [1usize, 2, 3, 5] {
+            let got = sharded_oracle_evolve(spec, &grid, 2, shards);
+            assert_eq!(got, want, "x{shards}");
+        }
+    }
+
+    #[test]
+    fn locked_exchange_matches_serial() {
+        let spec = StencilSpec::box2d(1);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let grid = DenseGrid::verification_input(&[12, 6], 9);
+        let part = Partition::new(&grid.shape, 3, 1).unwrap();
+
+        let mut serial = part.extract(&grid);
+        for t in serial.iter_mut() {
+            *t = reference::apply(&coeffs, t);
+        }
+        let locked: Vec<Mutex<DenseGrid>> = serial.iter().cloned().map(Mutex::new).collect();
+
+        exchange_serial(&part, &mut serial);
+        for s in 0..part.len() {
+            refresh_ghosts(&part, &locked, s);
+        }
+        for (s, m) in locked.iter().enumerate() {
+            assert_eq!(*m.lock().unwrap(), serial[s], "shard {s}");
+        }
+    }
+}

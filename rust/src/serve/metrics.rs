@@ -1,0 +1,216 @@
+//! Serving metrics: per-request latency recorders and the aggregate
+//! counters the server reports as JSON (via the repo's own `util::json`).
+
+use crate::util::json::{obj, Json};
+use std::time::Instant;
+
+/// Retained percentile window: memory stays bounded on long-running
+/// servers; count/mean/max are exact over the full history.
+const WINDOW: usize = 4096;
+
+/// Records a latency distribution in seconds. Aggregates (count, mean,
+/// max) are exact; percentiles are nearest-rank over a sliding window of
+/// the most recent [`WINDOW`] samples, sorted once per snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    window: Vec<f64>,
+    next: usize,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LatencyRecorder {
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        self.count += 1;
+        self.sum += seconds;
+        self.max = self.max.max(seconds);
+        if self.window.len() < WINDOW {
+            self.window.push(seconds);
+        } else {
+            self.window[self.next] = seconds;
+            self.next = (self.next + 1) % WINDOW;
+        }
+    }
+
+    /// Samples recorded over the recorder's lifetime.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean over all samples, or 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Maximum over all samples, or 0 when empty.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// The retained window, sorted ascending.
+    fn sorted_window(&self) -> Vec<f64> {
+        let mut sorted = self.window.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100) over the retained
+    /// window, or 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(&self.sorted_window(), p)
+    }
+
+    /// Summary as a JSON object (seconds). Sorts the window once.
+    pub fn to_json(&self) -> Json {
+        let sorted = self.sorted_window();
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_s", Json::Num(self.mean())),
+            ("p50_s", Json::Num(percentile_of(&sorted, 50.0))),
+            ("p95_s", Json::Num(percentile_of(&sorted, 95.0))),
+            ("p99_s", Json::Num(percentile_of(&sorted, 99.0))),
+            ("max_s", Json::Num(self.max())),
+        ])
+    }
+}
+
+fn percentile_of(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Aggregate serving counters; owned by the server behind a mutex.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    started: Instant,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that failed (evolution error or verification mismatch).
+    pub failed: u64,
+    /// Submissions merged into an already-queued identical request.
+    pub coalesced: u64,
+    /// `try_submit` calls rejected by backpressure.
+    pub rejected: u64,
+    /// Deepest queue occupancy observed.
+    pub max_queue_depth: usize,
+    /// Point-steps served (grid points × time steps, summed over every
+    /// completed submission — coalesced waiters each count the work they
+    /// received, mirroring `completed`).
+    pub point_steps: u64,
+    /// Time spent waiting in the queue.
+    pub queue_wait: LatencyRecorder,
+    /// Time spent computing (per request, excludes queueing).
+    pub service_time: LatencyRecorder,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> ServiceMetrics {
+        ServiceMetrics {
+            started: Instant::now(),
+            completed: 0,
+            failed: 0,
+            coalesced: 0,
+            rejected: 0,
+            max_queue_depth: 0,
+            point_steps: 0,
+            queue_wait: LatencyRecorder::default(),
+            service_time: LatencyRecorder::default(),
+        }
+    }
+}
+
+impl ServiceMetrics {
+    /// Seconds since the server started.
+    pub fn uptime(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Aggregate throughput in point-steps per second of uptime.
+    pub fn throughput(&self) -> f64 {
+        self.point_steps as f64 / self.uptime().max(1e-12)
+    }
+
+    /// Snapshot as a JSON object.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("uptime_s", Json::Num(self.uptime())),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("point_steps", Json::Num(self.point_steps as f64)),
+            ("throughput_pts_per_s", Json::Num(self.throughput())),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("service_time", self.service_time.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut r = LatencyRecorder::default();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            r.record(v);
+        }
+        assert_eq!(r.count(), 5);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(50.0), 3.0);
+        assert_eq!(r.percentile(100.0), 5.0);
+        assert_eq!(r.max(), 5.0);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.percentile(99.0), 0.0);
+        assert_eq!(r.max(), 0.0);
+    }
+
+    #[test]
+    fn window_is_bounded_but_aggregates_are_exact() {
+        let mut r = LatencyRecorder::default();
+        let n = super::WINDOW + 100;
+        for i in 0..n {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), n as u64);
+        assert_eq!(r.max(), (n - 1) as f64);
+        assert!((r.mean() - (n - 1) as f64 / 2.0).abs() < 1e-9);
+        // the retained window holds only the most recent WINDOW samples
+        assert_eq!(r.percentile(0.0), 100.0);
+        assert_eq!(r.percentile(100.0), (n - 1) as f64);
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips() {
+        let mut m = ServiceMetrics::default();
+        m.completed = 3;
+        m.point_steps = 12_000;
+        m.queue_wait.record(0.5);
+        m.service_time.record(1.5);
+        let text = m.to_json().to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("completed").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            back.get("service_time").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(back.get("throughput_pts_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

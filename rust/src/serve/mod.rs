@@ -1,0 +1,45 @@
+//! The serving subsystem: sharded, multi-threaded stencil evolution
+//! behind a batched request front-end.
+//!
+//! The paper evaluates one kernel at a time on a single simulated core;
+//! serving heavy traffic requires the classic scaling move stencil
+//! systems apply *above* the vector/matrix-unit layer (cf. the
+//! Cerebras-WSE and vectorization-scheme lines of related work): split
+//! the grid into shards with ghost cells, exchange halos between time
+//! steps, and keep every core busy with batched requests.
+//!
+//! - [`partition`] — slab domain decomposition with ghost rows sized by
+//!   the stencil order, and tile extraction/assembly.
+//! - [`halo`] — ghost-row refresh between steps (serial spec + the
+//!   lock-per-tile form the pool runs).
+//! - [`pool`] — `std::thread` worker pool: per-worker deques, work
+//!   stealing, per-batch barrier.
+//! - [`scheduler`] — compiled shard kernels (bitwise-identical to the
+//!   scalar oracle), an LRU plan cache keyed by (spec, shape, method),
+//!   and the step loop (compute batch → barrier → halo exchange).
+//! - [`service`] — the batched front-end: bounded queue with
+//!   backpressure, coalescing of identical requests, dispatcher thread;
+//!   also hosts the PJRT artifact service absorbed from `coordinator`.
+//! - [`metrics`] — latency/throughput/traffic counters reported as JSON.
+//!
+//! **Exactness guarantee**: sharded multi-threaded evolution is bitwise
+//! equal to [`crate::stencil::reference::evolve`] — tiles see exactly the
+//! neighbourhoods the global sweep sees, the frozen global boundary stays
+//! inside tile-boundary bands, and the shard kernels preserve the
+//! oracle's accumulation order (see `rust/tests/shard_correctness.rs`).
+
+pub mod halo;
+pub mod metrics;
+pub mod partition;
+pub mod pool;
+pub mod scheduler;
+pub mod service;
+
+pub use metrics::{LatencyRecorder, ServiceMetrics};
+pub use partition::{Partition, Slab};
+pub use pool::WorkerPool;
+pub use scheduler::{CompiledPlan, KernelMethod, PlanCache, PlanKey, ShardedEvolver};
+pub use service::{
+    EvolutionService, EvolveRequest, ServeConfig, ShardRequest, ShardResponse, StencilServer,
+    Ticket,
+};

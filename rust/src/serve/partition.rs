@@ -1,0 +1,240 @@
+//! Domain decomposition: split a [`DenseGrid`] into contiguous slabs along
+//! the outermost (slowest-varying) dimension, each padded with ghost rows
+//! sized by the stencil order.
+//!
+//! Slab decomposition keeps every per-shard tile a dense row-major grid —
+//! a "row" here is one index of dimension 0 (a line in 2D, a plane in 3D),
+//! always a contiguous `shape[1..].product()` run of the storage — so
+//! extraction, halo exchange, and assembly are all `memcpy`-shaped.
+//!
+//! **Exactness.** Every shard's height is kept `>= halo` (the shard count
+//! is clamped if needed). With ghosts of depth `halo = order` refreshed
+//! between steps, applying the scalar oracle per tile reproduces the
+//! global computation *bitwise*: tile-interior points see exactly the
+//! neighbourhood the global sweep sees, and the global frozen-boundary
+//! band (distance `< order` from a global edge) is always a tile-boundary
+//! band too, so it is copied, never computed. See `serve::halo` for the
+//! exchange and the proof-by-test.
+
+use crate::stencil::DenseGrid;
+
+/// One shard's slab: owned rows `[lo, hi)` of dimension 0, plus ghost
+/// depths actually present on each side (`min(halo, space available)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slab {
+    /// First owned row (global index along dimension 0).
+    pub lo: usize,
+    /// One past the last owned row.
+    pub hi: usize,
+    /// Ghost rows below `lo` in this shard's tile (0 for the first shard).
+    pub ghost_lo: usize,
+    /// Ghost rows above `hi` in this shard's tile (0 for the last shard).
+    pub ghost_hi: usize,
+}
+
+impl Slab {
+    /// Owned rows.
+    pub fn rows(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Total tile rows including ghosts.
+    pub fn tile_rows(&self) -> usize {
+        self.ghost_lo + self.rows() + self.ghost_hi
+    }
+}
+
+/// A slab decomposition of a grid shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Global grid shape.
+    pub shape: Vec<usize>,
+    /// Ghost depth (the stencil order `r`).
+    pub halo: usize,
+    /// Per-shard slabs, in order along dimension 0.
+    pub slabs: Vec<Slab>,
+}
+
+impl Partition {
+    /// Largest shard count such that every shard still owns `>= halo`
+    /// rows (required for single-neighbour halo exchange and for the
+    /// frozen-boundary band to stay within the edge shards).
+    pub fn max_shards(n0: usize, halo: usize) -> usize {
+        (n0 / halo.max(1)).max(1)
+    }
+
+    /// Balanced decomposition of `shape` into (up to) `shards` slabs.
+    ///
+    /// The effective shard count is clamped to [`Partition::max_shards`];
+    /// remainder rows go to the leading shards, so heights differ by at
+    /// most one (the "uneven shards" the scheduler's work stealing evens
+    /// out).
+    pub fn new(shape: &[usize], shards: usize, halo: usize) -> anyhow::Result<Partition> {
+        anyhow::ensure!(
+            shape.len() == 2 || shape.len() == 3,
+            "grids are 2D or 3D, got shape {shape:?}"
+        );
+        anyhow::ensure!(halo >= 1, "halo (stencil order) must be >= 1");
+        let n0 = shape[0];
+        anyhow::ensure!(n0 >= 1, "empty leading dimension");
+        let s = shards.max(1).min(Self::max_shards(n0, halo));
+        let base = n0 / s;
+        let rem = n0 % s;
+        let mut slabs = Vec::with_capacity(s);
+        let mut lo = 0usize;
+        for i in 0..s {
+            let height = base + usize::from(i < rem);
+            let hi = lo + height;
+            slabs.push(Slab {
+                lo,
+                hi,
+                ghost_lo: halo.min(lo),
+                ghost_hi: halo.min(n0 - hi),
+            });
+            lo = hi;
+        }
+        debug_assert_eq!(lo, n0);
+        Ok(Partition { shape: shape.to_vec(), halo, slabs })
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.slabs.len()
+    }
+
+    /// True when there are no slabs. Never the case for a constructed
+    /// partition (`new` always produces at least one shard); present for
+    /// API completeness alongside [`Partition::len`].
+    pub fn is_empty(&self) -> bool {
+        self.slabs.is_empty()
+    }
+
+    /// Elements per row of dimension 0 (`shape[1..].product()`).
+    pub fn row_elems(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Storage shape of shard `s`'s tile.
+    pub fn tile_shape(&self, s: usize) -> Vec<usize> {
+        let mut shape = self.shape.clone();
+        shape[0] = self.slabs[s].tile_rows();
+        shape
+    }
+
+    /// Extract all tiles (owned rows plus current ghost rows) from a grid.
+    pub fn extract(&self, grid: &DenseGrid) -> Vec<DenseGrid> {
+        assert_eq!(grid.shape, self.shape, "grid does not match partition");
+        let rest = self.row_elems();
+        self.slabs
+            .iter()
+            .enumerate()
+            .map(|(s, slab)| {
+                let start = (slab.lo - slab.ghost_lo) * rest;
+                let len = slab.tile_rows() * rest;
+                DenseGrid {
+                    shape: self.tile_shape(s),
+                    data: grid.data[start..start + len].to_vec(),
+                }
+            })
+            .collect()
+    }
+
+    /// Reassemble a global grid from each shard's *owned* rows (ghost rows
+    /// are discarded).
+    pub fn assemble(&self, tiles: &[&DenseGrid]) -> anyhow::Result<DenseGrid> {
+        anyhow::ensure!(
+            tiles.len() == self.slabs.len(),
+            "expected {} tiles, got {}",
+            self.slabs.len(),
+            tiles.len()
+        );
+        let rest = self.row_elems();
+        let mut out = DenseGrid::zeros(&self.shape);
+        for (s, (slab, tile)) in self.slabs.iter().zip(tiles).enumerate() {
+            anyhow::ensure!(
+                tile.shape == self.tile_shape(s),
+                "tile {s} shape {:?} does not match partition {:?}",
+                tile.shape,
+                self.tile_shape(s)
+            );
+            let src = slab.ghost_lo * rest;
+            let dst = slab.lo * rest;
+            let len = slab.rows() * rest;
+            out.data[dst..dst + len].copy_from_slice(&tile.data[src..src + len]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_heights_cover_domain() {
+        let p = Partition::new(&[17, 9], 4, 2).unwrap();
+        assert_eq!(p.len(), 4);
+        let heights: Vec<usize> = p.slabs.iter().map(Slab::rows).collect();
+        assert_eq!(heights.iter().sum::<usize>(), 17);
+        assert!(heights.iter().all(|&h| h >= 2));
+        assert!(heights.iter().max().unwrap() - heights.iter().min().unwrap() <= 1);
+        // contiguity
+        for w in p.slabs.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        assert_eq!(p.slabs[0].lo, 0);
+        assert_eq!(p.slabs.last().unwrap().hi, 17);
+    }
+
+    #[test]
+    fn ghost_depths() {
+        let p = Partition::new(&[12, 8], 3, 2).unwrap();
+        assert_eq!(p.slabs[0].ghost_lo, 0);
+        assert_eq!(p.slabs[0].ghost_hi, 2);
+        assert_eq!(p.slabs[1].ghost_lo, 2);
+        assert_eq!(p.slabs[1].ghost_hi, 2);
+        assert_eq!(p.slabs[2].ghost_lo, 2);
+        assert_eq!(p.slabs[2].ghost_hi, 0);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_min_height() {
+        // 10 rows with halo 3 can host at most 3 shards of height >= 3
+        let p = Partition::new(&[10, 6], 64, 3).unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(p.slabs.iter().all(|s| s.rows() >= 3));
+        // single row always yields one shard
+        let p1 = Partition::new(&[1, 6], 8, 1).unwrap();
+        assert_eq!(p1.len(), 1);
+    }
+
+    #[test]
+    fn extract_assemble_roundtrip() {
+        for shape in [vec![13usize, 7], vec![6, 5, 4]] {
+            let g = DenseGrid::verification_input(&shape, 3);
+            for shards in [1usize, 2, 3, 5] {
+                let p = Partition::new(&shape, shards, 1).unwrap();
+                let tiles = p.extract(&g);
+                let refs: Vec<&DenseGrid> = tiles.iter().collect();
+                assert_eq!(p.assemble(&refs).unwrap(), g, "{shape:?} x{shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_carry_ghost_rows() {
+        let g = DenseGrid::verification_input(&[9, 4], 5);
+        let p = Partition::new(&[9, 4], 3, 1).unwrap();
+        let tiles = p.extract(&g);
+        // middle shard: rows [3,6) plus one ghost row each side = rows [2,7)
+        assert_eq!(tiles[1].shape, vec![5, 4]);
+        assert_eq!(tiles[1].data[..4], g.data[2 * 4..3 * 4]);
+        assert_eq!(tiles[1].data[4 * 4..], g.data[6 * 4..7 * 4]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Partition::new(&[8], 2, 1).is_err());
+        assert!(Partition::new(&[8, 8], 2, 0).is_err());
+    }
+}

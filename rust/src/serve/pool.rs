@@ -1,0 +1,307 @@
+//! A `std::thread` worker pool with per-worker deques, work stealing, and
+//! batch barriers — the execution substrate of the sharded scheduler.
+//!
+//! Shards are uneven (remainder rows go to leading shards) and there may
+//! be more shards than workers, so each worker owns a deque: it pops its
+//! own jobs from the front and steals from the *back* of other workers'
+//! deques when idle. [`WorkerPool::run_batch`] submits a batch and blocks
+//! until every job in it has finished — the per-step barrier between
+//! compute and halo-exchange phases. Panics inside jobs are caught per
+//! job and surfaced as one error after the barrier, so a poisoned shard
+//! cannot deadlock the step.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of pool work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct State {
+    /// Jobs queued but not yet popped (not: currently executing).
+    pending: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    state: Mutex<State>,
+    wake: Condvar,
+}
+
+/// Counts a batch down to zero and wakes the submitter.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+/// Fixed-size thread pool executing [`Job`]s with work stealing.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers.max(1)` threads.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            state: Mutex::new(State { pending: 0, shutdown: false }),
+            wake: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("stencil-worker-{i}"))
+                    .spawn(move || worker_loop(&sh, i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, next: AtomicUsize::new(0) }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Distribute jobs round-robin over the worker deques and wake everyone.
+    fn scatter(&self, jobs: Vec<Job>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        self.shared.state.lock().unwrap().pending += n;
+        let w = self.shared.queues.len();
+        for job in jobs {
+            let q = self.next.fetch_add(1, Ordering::Relaxed) % w;
+            self.shared.queues[q].lock().unwrap().push_back(job);
+        }
+        self.shared.wake.notify_all();
+    }
+
+    /// Run a batch of jobs to completion (the barrier). Returns an error
+    /// if any job panicked, after the whole batch has drained.
+    pub fn run_batch(&self, jobs: Vec<Job>) -> anyhow::Result<()> {
+        let total = jobs.len();
+        if total == 0 {
+            return Ok(());
+        }
+        let latch = Arc::new(Latch::new(total));
+        let panics: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let wrapped: Vec<Job> = jobs
+            .into_iter()
+            .map(|job| {
+                let latch = Arc::clone(&latch);
+                let panics = Arc::clone(&panics);
+                let wrapped: Job = Box::new(move || {
+                    let result =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    if let Err(payload) = result {
+                        panics.lock().unwrap().push(panic_message(&payload));
+                    }
+                    latch.count_down();
+                });
+                wrapped
+            })
+            .collect();
+        self.scatter(wrapped);
+        latch.wait();
+        let failed = panics.lock().unwrap();
+        anyhow::ensure!(
+            failed.is_empty(),
+            "{} of {total} pool job(s) panicked: {}",
+            failed.len(),
+            failed.join("; ")
+        );
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.wake.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker job panicked".to_string()
+    }
+}
+
+fn worker_loop(sh: &Shared, idx: usize) {
+    loop {
+        if let Some(job) = pop(sh, idx) {
+            job();
+            continue;
+        }
+        let mut st = sh.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if st.pending > 0 {
+                // jobs exist somewhere (possibly mid-push); retry popping
+                break;
+            }
+            st = sh.wake.wait(st).unwrap();
+        }
+        drop(st);
+        std::thread::yield_now();
+    }
+}
+
+/// Pop own front, then steal from the back of the other deques.
+fn pop(sh: &Shared, idx: usize) -> Option<Job> {
+    let w = sh.queues.len();
+    if let Some(job) = sh.queues[idx].lock().unwrap().pop_front() {
+        sh.state.lock().unwrap().pending -= 1;
+        return Some(job);
+    }
+    for k in 1..w {
+        let q = (idx + k) % w;
+        if let Some(job) = sh.queues[q].lock().unwrap().pop_back() {
+            sh.state.lock().unwrap().pending -= 1;
+            return Some(job);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_runs_every_job() {
+        let pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Job> = (0..64)
+            .map(|_| {
+                let hits = Arc::clone(&hits);
+                let j: Job = Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+                j
+            })
+            .collect();
+        pool.run_batch(jobs).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn barrier_separates_batches() {
+        // every job of batch 2 must observe all of batch 1's effects
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let first: Vec<Job> = (0..16)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                let j: Job = Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                j
+            })
+            .collect();
+        pool.run_batch(first).unwrap();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let second: Vec<Job> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                let seen = Arc::clone(&seen);
+                let j: Job = Box::new(move || {
+                    seen.lock().unwrap().push(c.load(Ordering::SeqCst));
+                });
+                j
+            })
+            .collect();
+        pool.run_batch(second).unwrap();
+        assert!(seen.lock().unwrap().iter().all(|&v| v >= 16));
+    }
+
+    #[test]
+    fn uneven_jobs_all_complete_via_stealing() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| {
+                let hits = Arc::clone(&hits);
+                let j: Job = Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                    }
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+                j
+            })
+            .collect();
+        pool.run_batch(jobs).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn panics_surface_as_errors_not_deadlocks() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| {
+                let j: Job = Box::new(move || {
+                    if i == 2 {
+                        panic!("shard {i} exploded");
+                    }
+                });
+                j
+            })
+            .collect();
+        let err = pool.run_batch(jobs).unwrap_err().to_string();
+        assert!(err.contains("shard 2 exploded"), "{err}");
+        // pool still usable afterwards
+        pool.run_batch(vec![Box::new(|| {}) as Job]).unwrap();
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = WorkerPool::new(0); // clamps to 1
+        assert_eq!(pool.workers(), 1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.run_batch(vec![Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }) as Job])
+            .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+}

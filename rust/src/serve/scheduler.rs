@@ -1,0 +1,461 @@
+//! The shard scheduler: compiled per-tile kernels with an LRU plan cache,
+//! and the step loop that drives compute + halo-exchange batches over the
+//! worker pool.
+//!
+//! A *plan* is the per-(spec, tile-shape, method) precomputation a shard
+//! kernel needs — for the native kernel, the stencil's non-zero taps
+//! lowered to linear-offset/weight pairs against the tile's strides.
+//! Plans are immutable and shared across threads (`Arc`), and cached in
+//! an LRU keyed by `(spec, shape, method)` so a server handling a mixed
+//! request stream compiles each shape once.
+//!
+//! Both kernels reproduce [`crate::stencil::reference::apply`] **bitwise**:
+//! the native kernel iterates taps in the same dense-offset order with the
+//! same accumulation order, so sharded multi-threaded evolution is
+//! indistinguishable from the single-shard scalar oracle.
+
+use super::halo;
+use super::partition::Partition;
+use super::pool::{Job, WorkerPool};
+use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Mutex};
+
+/// Which kernel a plan compiles to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelMethod {
+    /// Call the scalar reference oracle directly (specification kernel).
+    Oracle,
+    /// Precomputed linear-offset taps (same FP order, no index math).
+    Taps,
+}
+
+impl fmt::Display for KernelMethod {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelMethod::Oracle => write!(f, "oracle"),
+            KernelMethod::Taps => write!(f, "taps"),
+        }
+    }
+}
+
+impl FromStr for KernelMethod {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<KernelMethod> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "oracle" => KernelMethod::Oracle,
+            "taps" | "native" => KernelMethod::Taps,
+            other => anyhow::bail!("unknown kernel '{other}' (oracle|taps)"),
+        })
+    }
+}
+
+/// Cache key: everything a compiled plan depends on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// The stencil.
+    pub spec: StencilSpec,
+    /// Tile storage shape the plan is compiled for.
+    pub shape: Vec<usize>,
+    /// Kernel flavour.
+    pub method: KernelMethod,
+}
+
+/// A compiled shard kernel for one (spec, tile shape, method).
+#[derive(Debug)]
+pub struct CompiledPlan {
+    /// The key this plan was compiled for.
+    pub key: PlanKey,
+    coeffs: CoeffTensor,
+    /// (linear offset, weight) per non-zero tap, dense-offset order.
+    taps: Vec<(isize, f64)>,
+}
+
+impl CompiledPlan {
+    /// Compile a plan (uses the repo-wide `paper_default` weights).
+    pub fn compile(key: PlanKey) -> CompiledPlan {
+        let coeffs = CoeffTensor::paper_default(key.spec);
+        let dims = key.shape.len();
+        let mut strides = vec![1isize; dims];
+        for d in (0..dims.saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * key.shape[d + 1] as isize;
+        }
+        let taps = key
+            .spec
+            .dense_offsets()
+            .iter()
+            .enumerate()
+            .filter(|(oi, _)| coeffs.data[*oi] != 0.0)
+            .map(|(oi, off)| {
+                let lin: isize = off.iter().zip(&strides).map(|(&o, &s)| o * s).sum();
+                (lin, coeffs.data[oi])
+            })
+            .collect();
+        CompiledPlan { key, coeffs, taps }
+    }
+
+    /// Apply one time step to a tile. Tiles too small to contain any
+    /// interior point (edge shards wholly inside the global frozen band)
+    /// are returned unchanged — their every point is boundary.
+    pub fn apply(&self, a: &DenseGrid) -> DenseGrid {
+        debug_assert_eq!(a.shape, self.key.shape, "tile does not match plan");
+        let r = self.key.spec.order;
+        if a.shape.iter().any(|&n| n <= 2 * r) {
+            return a.clone();
+        }
+        match self.key.method {
+            KernelMethod::Oracle => reference::apply(&self.coeffs, a),
+            KernelMethod::Taps => self.apply_taps(a),
+        }
+    }
+
+    /// Native kernel: same loop structure and accumulation order as the
+    /// oracle (dense-offset order, zeros skipped), so the result is
+    /// bitwise identical; only the per-point index arithmetic is hoisted.
+    fn apply_taps(&self, a: &DenseGrid) -> DenseGrid {
+        let r = self.key.spec.order;
+        let mut b = a.clone();
+        match *a.shape.as_slice() {
+            [n0, n1] => {
+                for i in r..n0 - r {
+                    let row = i * n1;
+                    for j in r..n1 - r {
+                        let lin = row + j;
+                        let mut acc = 0.0f64;
+                        for &(off, w) in &self.taps {
+                            acc += w * a.data[(lin as isize + off) as usize];
+                        }
+                        b.data[lin] = acc;
+                    }
+                }
+            }
+            [n0, n1, n2] => {
+                for i in r..n0 - r {
+                    for j in r..n1 - r {
+                        let row = (i * n1 + j) * n2;
+                        for k in r..n2 - r {
+                            let lin = row + k;
+                            let mut acc = 0.0f64;
+                            for &(off, w) in &self.taps {
+                                acc += w * a.data[(lin as isize + off) as usize];
+                            }
+                            b.data[lin] = acc;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!("grids are 2D or 3D"),
+        }
+        b
+    }
+}
+
+/// Cache counters, readable while serving.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from cache.
+    pub hits: u64,
+    /// Lookups that compiled a new plan.
+    pub misses: u64,
+    /// Plans evicted to stay within capacity.
+    pub evictions: u64,
+    /// Plans currently resident.
+    pub len: usize,
+}
+
+struct CacheEntry {
+    plan: Arc<CompiledPlan>,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<PlanKey, CacheEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU cache of compiled plans keyed by (spec, shape, method).
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl PlanCache {
+    /// New cache holding at most `capacity.max(1)` plans.
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Fetch (or compile and insert) the plan for a key.
+    pub fn get(&self, key: PlanKey) -> Arc<CompiledPlan> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.map.get_mut(&key) {
+            entry.last_used = tick;
+            inner.hits += 1;
+            return Arc::clone(&entry.plan);
+        }
+        inner.misses += 1;
+        let plan = Arc::new(CompiledPlan::compile(key.clone()));
+        inner.map.insert(key, CacheEntry { plan: Arc::clone(&plan), last_used: tick });
+        if inner.map.len() > self.capacity {
+            if let Some(oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&oldest);
+                inner.evictions += 1;
+            }
+        }
+        plan
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.map.len(),
+        }
+    }
+}
+
+/// Multi-threaded sharded evolution: partition → per-step compute batches
+/// with a barrier → halo exchange → assemble.
+pub struct ShardedEvolver {
+    pool: Arc<WorkerPool>,
+    cache: Arc<PlanCache>,
+}
+
+impl ShardedEvolver {
+    /// Evolver with its own pool of `workers` threads and a default-sized
+    /// plan cache.
+    pub fn new(workers: usize) -> ShardedEvolver {
+        ShardedEvolver::with_parts(Arc::new(WorkerPool::new(workers)), Arc::new(PlanCache::new(32)))
+    }
+
+    /// Evolver over an existing pool and cache (shared with a server).
+    pub fn with_parts(pool: Arc<WorkerPool>, cache: Arc<PlanCache>) -> ShardedEvolver {
+        ShardedEvolver { pool, cache }
+    }
+
+    /// The worker pool.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// The plan cache.
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Evolve `grid` by `steps` time steps of `spec`, decomposed into (up
+    /// to) `shards` slabs executed on the pool. Bitwise equal to
+    /// [`reference::evolve`] with `paper_default` weights.
+    pub fn evolve(
+        &self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+    ) -> anyhow::Result<DenseGrid> {
+        self.evolve_sharded(spec, grid, steps, shards, method)
+            .map(|(grid, _)| grid)
+    }
+
+    /// [`ShardedEvolver::evolve`], additionally returning the shard count
+    /// actually used (after clamping) — the number the report should
+    /// carry, rather than re-deriving the partition at the call site.
+    pub fn evolve_sharded(
+        &self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+    ) -> anyhow::Result<(DenseGrid, usize)> {
+        anyhow::ensure!(
+            grid.shape.len() == spec.dims,
+            "grid shape {:?} does not match {spec}",
+            grid.shape
+        );
+        anyhow::ensure!(
+            grid.shape.iter().all(|&n| n > 2 * spec.order),
+            "grid {:?} too small for order-{} stencil",
+            grid.shape,
+            spec.order
+        );
+        let part = Arc::new(Partition::new(&grid.shape, shards, spec.order)?);
+        let n_shards = part.len();
+        if steps == 0 {
+            return Ok((grid.clone(), n_shards));
+        }
+        let plans: Vec<Arc<CompiledPlan>> = (0..n_shards)
+            .map(|s| {
+                self.cache
+                    .get(PlanKey { spec, shape: part.tile_shape(s), method })
+            })
+            .collect();
+        let tiles: Arc<Vec<Mutex<DenseGrid>>> =
+            Arc::new(part.extract(grid).into_iter().map(Mutex::new).collect());
+
+        for step in 0..steps {
+            let compute: Vec<Job> = (0..n_shards)
+                .map(|s| {
+                    let tiles = Arc::clone(&tiles);
+                    let plan = Arc::clone(&plans[s]);
+                    let job: Job = Box::new(move || {
+                        let mut tile = tiles[s].lock().unwrap();
+                        *tile = plan.apply(&tile);
+                    });
+                    job
+                })
+                .collect();
+            self.pool.run_batch(compute)?;
+
+            if step + 1 < steps && n_shards > 1 {
+                let exchange: Vec<Job> = (0..n_shards)
+                    .map(|s| {
+                        let tiles = Arc::clone(&tiles);
+                        let part = Arc::clone(&part);
+                        let job: Job = Box::new(move || {
+                            halo::refresh_ghosts(&part, &tiles, s);
+                        });
+                        job
+                    })
+                    .collect();
+                self.pool.run_batch(exchange)?;
+            }
+        }
+
+        let guards: Vec<std::sync::MutexGuard<'_, DenseGrid>> =
+            tiles.iter().map(|m| m.lock().unwrap()).collect();
+        let refs: Vec<&DenseGrid> = guards.iter().map(|g| &**g).collect();
+        Ok((part.assemble(&refs)?, n_shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taps_kernel_matches_oracle_bitwise() {
+        for spec in [
+            StencilSpec::box2d(1),
+            StencilSpec::star2d(2),
+            StencilSpec::diag2d(1),
+            StencilSpec::box3d(1),
+            StencilSpec::star3d(2),
+        ] {
+            let shape: Vec<usize> = vec![4 * spec.order + 3; spec.dims];
+            let a = DenseGrid::verification_input(&shape, 13);
+            let key = PlanKey { spec, shape: shape.clone(), method: KernelMethod::Taps };
+            let plan = CompiledPlan::compile(key);
+            let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
+            assert_eq!(plan.apply(&a), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn degenerate_tile_is_identity() {
+        let spec = StencilSpec::box2d(2);
+        // 4 rows = 2r: no interior row, must be a pure copy
+        let a = DenseGrid::verification_input(&[4, 9], 1);
+        for method in [KernelMethod::Oracle, KernelMethod::Taps] {
+            let plan =
+                CompiledPlan::compile(PlanKey { spec, shape: vec![4, 9], method });
+            assert_eq!(plan.apply(&a), a, "{method}");
+        }
+    }
+
+    #[test]
+    fn lru_cache_hits_and_evicts() {
+        let cache = PlanCache::new(2);
+        let key = |n: usize| PlanKey {
+            spec: StencilSpec::box2d(1),
+            shape: vec![n, n],
+            method: KernelMethod::Taps,
+        };
+        let a = cache.get(key(8));
+        let _b = cache.get(key(9));
+        assert_eq!(cache.stats().misses, 2);
+        // hit keeps 8 recent
+        let a2 = cache.get(key(8));
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(cache.stats().hits, 1);
+        // third key evicts the LRU entry (9)
+        let _c = cache.get(key(10));
+        let st = cache.stats();
+        assert_eq!((st.evictions, st.len), (1, 2));
+        // 9 was evicted → miss again (which in turn evicts 8, now LRU)
+        cache.get(key(9));
+        let st = cache.stats();
+        assert_eq!(st.misses, 4);
+        assert_eq!(st.evictions, 2);
+        // 10 is still resident → hit
+        cache.get(key(10));
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn sharded_evolve_matches_reference_bitwise() {
+        let spec = StencilSpec::box2d(1);
+        let grid = DenseGrid::verification_input(&[24, 18], 0xC0FFEE);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let want = reference::evolve(&coeffs, &grid, 3);
+        for workers in [1usize, 4] {
+            let ev = ShardedEvolver::new(workers);
+            for shards in [1usize, 2, 5] {
+                for method in [KernelMethod::Oracle, KernelMethod::Taps] {
+                    let got = ev.evolve(spec, &grid, 3, shards, method).unwrap();
+                    assert_eq!(got, want, "workers={workers} shards={shards} {method}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evolve_rejects_mismatched_grid() {
+        let ev = ShardedEvolver::new(1);
+        let g2 = DenseGrid::verification_input(&[8, 8], 0);
+        assert!(ev
+            .evolve(StencilSpec::box3d(1), &g2, 1, 2, KernelMethod::Taps)
+            .is_err());
+        let tiny = DenseGrid::verification_input(&[4, 4], 0);
+        assert!(ev
+            .evolve(StencilSpec::box2d(2), &tiny, 1, 1, KernelMethod::Taps)
+            .is_err());
+    }
+
+    #[test]
+    fn zero_steps_is_identity() {
+        let ev = ShardedEvolver::new(2);
+        let g = DenseGrid::verification_input(&[9, 9], 4);
+        let out = ev
+            .evolve(StencilSpec::box2d(1), &g, 0, 3, KernelMethod::Taps)
+            .unwrap();
+        assert_eq!(out, g);
+    }
+}

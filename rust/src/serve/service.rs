@@ -1,0 +1,574 @@
+//! The batched request front-end: a bounded queue with backpressure,
+//! coalescing of identical queued requests, per-request latency and
+//! aggregate throughput metrics (JSON), and a dispatcher that executes
+//! requests on the sharded multi-threaded evolver.
+//!
+//! This module also hosts [`EvolutionService`], the PJRT artifact-serving
+//! request path that previously lived in `coordinator::service` (that
+//! module now re-exports from here): the native sharded server and the
+//! compiled-artifact server are the two backends of the same serving
+//! layer.
+
+use super::metrics::ServiceMetrics;
+use super::scheduler::{KernelMethod, ShardedEvolver};
+use crate::runtime::{PjrtRuntime, Registry, StencilEngine};
+use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use crate::util::json::{obj, Json};
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Native sharded serving
+// ---------------------------------------------------------------------------
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Shards per request (0 = one per worker).
+    pub shards: usize,
+    /// Bounded queue capacity; submissions beyond it block (or are
+    /// rejected via [`StencilServer::try_submit`]).
+    pub queue_depth: usize,
+    /// Plan-cache capacity (compiled kernels).
+    pub plan_cache: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { workers: 4, shards: 0, queue_depth: 32, plan_cache: 32 }
+    }
+}
+
+/// A request to evolve the deterministic verification grid for a stencil.
+///
+/// Identical requests still *queued* are coalesced: they share one
+/// computation and one response. (Requests are identified by every field,
+/// so two requests differing only in `seed` are distinct artifacts; a
+/// request already popped by the dispatcher is recomputed, not joined.)
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShardRequest {
+    /// The stencil to apply.
+    pub spec: StencilSpec,
+    /// Interior extent per dimension (storage is `n + 2·order`).
+    pub n: usize,
+    /// Time steps to advance.
+    pub steps: usize,
+    /// Seed of the deterministic input grid.
+    pub seed: u64,
+    /// Shard kernel to use.
+    pub method: KernelMethod,
+    /// Check the result bitwise against the scalar oracle.
+    pub verify: bool,
+}
+
+/// Per-request outcome accounting.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Seconds spent queued before dispatch.
+    pub queue_seconds: f64,
+    /// Seconds spent computing.
+    pub service_seconds: f64,
+    /// Interior points of the grid.
+    pub points: usize,
+    /// Time steps advanced.
+    pub steps: usize,
+    /// Shards actually used (after clamping).
+    pub shards: usize,
+    /// Submissions that shared this computation (1 = no coalescing).
+    pub waiters: usize,
+    /// Max |error| vs the scalar oracle (0.0 expected), if verified.
+    pub max_err: Option<f64>,
+}
+
+/// A served response: the evolved grid plus accounting.
+#[derive(Debug, Clone)]
+pub struct ShardResponse {
+    /// The evolved grid (storage shape).
+    pub grid: DenseGrid,
+    /// Accounting for this request.
+    pub report: ShardReport,
+}
+
+struct Slot {
+    state: Mutex<Option<Result<Arc<ShardResponse>, String>>>,
+    ready: Condvar,
+}
+
+impl Slot {
+    fn new() -> Arc<Slot> {
+        Arc::new(Slot { state: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    fn fulfill(&self, result: Result<Arc<ShardResponse>, String>) {
+        *self.state.lock().unwrap() = Some(result);
+        self.ready.notify_all();
+    }
+}
+
+/// A handle to a submitted request; coalesced submissions share the
+/// underlying response.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the request has been served.
+    pub fn wait(&self) -> anyhow::Result<Arc<ShardResponse>> {
+        let mut state = self.slot.state.lock().unwrap();
+        loop {
+            match &*state {
+                Some(Ok(resp)) => return Ok(Arc::clone(resp)),
+                Some(Err(msg)) => anyhow::bail!("{msg}"),
+                None => state = self.slot.ready.wait(state).unwrap(),
+            }
+        }
+    }
+}
+
+struct Pending {
+    req: ShardRequest,
+    slot: Arc<Slot>,
+    enqueued: Instant,
+    waiters: usize,
+}
+
+struct QueueInner {
+    entries: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Everything the dispatcher thread needs. The thread holds an
+/// `Arc<ServerInner>` — *not* the outer [`StencilServer`] — so dropping
+/// the server handle still fires its `Drop`, which shuts the queue and
+/// joins the thread (no leaked dispatcher).
+struct ServerInner {
+    cfg: ServeConfig,
+    evolver: ShardedEvolver,
+    queue: Mutex<QueueInner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    metrics: Mutex<ServiceMetrics>,
+}
+
+impl ServerInner {
+    /// Under the queue lock: coalesce onto an identical queued request,
+    /// or enqueue, or give the request back if the queue is full.
+    fn admit(&self, q: &mut QueueInner, req: ShardRequest) -> Result<Ticket, ShardRequest> {
+        if let Some(p) = q.entries.iter_mut().find(|p| p.req == req) {
+            p.waiters += 1;
+            self.metrics.lock().unwrap().coalesced += 1;
+            return Ok(Ticket { slot: Arc::clone(&p.slot) });
+        }
+        if q.entries.len() >= self.cfg.queue_depth {
+            return Err(req);
+        }
+        let slot = Slot::new();
+        q.entries.push_back(Pending {
+            req,
+            slot: Arc::clone(&slot),
+            enqueued: Instant::now(),
+            waiters: 1,
+        });
+        let mut m = self.metrics.lock().unwrap();
+        m.max_queue_depth = m.max_queue_depth.max(q.entries.len());
+        drop(m);
+        self.not_empty.notify_all();
+        Ok(Ticket { slot })
+    }
+
+    fn effective_shards(&self) -> usize {
+        if self.cfg.shards == 0 {
+            self.evolver.pool().workers()
+        } else {
+            self.cfg.shards
+        }
+    }
+
+    fn pop_blocking(&self) -> Option<Pending> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(p) = q.entries.pop_front() {
+                self.not_full.notify_all();
+                return Some(p);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    fn handle(&self, pending: Pending) {
+        let queue_seconds = pending.enqueued.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let result = self.execute(&pending.req);
+        let service_seconds = t0.elapsed().as_secs_f64();
+        let waiters = pending.waiters;
+        match result {
+            Ok((grid, max_err, shards)) => {
+                let points = pending.req.n.pow(pending.req.spec.dims as u32);
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.completed += waiters as u64;
+                    // served work: each coalesced waiter received these
+                    // point-steps, same as `completed` counts submissions
+                    m.point_steps += (points * pending.req.steps * waiters) as u64;
+                    m.queue_wait.record(queue_seconds);
+                    m.service_time.record(service_seconds);
+                }
+                let report = ShardReport {
+                    queue_seconds,
+                    service_seconds,
+                    points,
+                    steps: pending.req.steps,
+                    shards,
+                    waiters,
+                    max_err,
+                };
+                pending.slot.fulfill(Ok(Arc::new(ShardResponse { grid, report })));
+            }
+            Err(e) => {
+                self.metrics.lock().unwrap().failed += waiters as u64;
+                pending.slot.fulfill(Err(format!("{e:#}")));
+            }
+        }
+    }
+
+    /// Execute one request (no queue involved).
+    fn execute(&self, req: &ShardRequest) -> anyhow::Result<(DenseGrid, Option<f64>, usize)> {
+        anyhow::ensure!(req.n >= 1, "empty domain");
+        let storage = vec![req.n + 2 * req.spec.order; req.spec.dims];
+        let grid = DenseGrid::verification_input(&storage, req.seed);
+        let shards = self.effective_shards();
+        let (out, used) = self
+            .evolver
+            .evolve_sharded(req.spec, &grid, req.steps, shards, req.method)?;
+        let max_err = if req.verify {
+            let coeffs = CoeffTensor::paper_default(req.spec);
+            let want = reference::evolve(&coeffs, &grid, req.steps);
+            let err = out.max_abs_diff_interior(&want, 0);
+            anyhow::ensure!(
+                err == 0.0,
+                "sharded result diverged from the scalar oracle (max err {err:e})"
+            );
+            Some(err)
+        } else {
+            None
+        };
+        Ok((out, max_err, used))
+    }
+}
+
+/// The batched sharded stencil server.
+///
+/// Lifecycle: construct, optionally [`StencilServer::start`] a background
+/// dispatcher (or call [`StencilServer::drain`] manually for deterministic
+/// tests), submit requests, wait on tickets. [`StencilServer::shutdown`]
+/// (or simply dropping the last server handle) closes the queue, stops
+/// the dispatcher and fails any unserved tickets.
+pub struct StencilServer {
+    inner: Arc<ServerInner>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl StencilServer {
+    /// Build a server (spawns the worker pool immediately).
+    pub fn new(cfg: ServeConfig) -> StencilServer {
+        let evolver = ShardedEvolver::with_parts(
+            Arc::new(super::pool::WorkerPool::new(cfg.workers)),
+            Arc::new(super::scheduler::PlanCache::new(cfg.plan_cache)),
+        );
+        StencilServer {
+            inner: Arc::new(ServerInner {
+                cfg,
+                evolver,
+                queue: Mutex::new(QueueInner { entries: VecDeque::new(), closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                metrics: Mutex::new(ServiceMetrics::default()),
+            }),
+            dispatcher: Mutex::new(None),
+        }
+    }
+
+    /// Shards used per request.
+    pub fn effective_shards(&self) -> usize {
+        self.inner.effective_shards()
+    }
+
+    /// Requests currently queued (coalesced submissions count once).
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().unwrap().entries.len()
+    }
+
+    /// Submit a request, blocking while the queue is full (backpressure).
+    /// An identical request still queued is coalesced instead.
+    pub fn submit(&self, req: ShardRequest) -> anyhow::Result<Ticket> {
+        let mut q = self.inner.queue.lock().unwrap();
+        let mut req = req;
+        loop {
+            anyhow::ensure!(!q.closed, "server is shut down");
+            match self.inner.admit(&mut q, req) {
+                Ok(ticket) => return Ok(ticket),
+                Err(back) => {
+                    req = back;
+                    q = self.inner.not_full.wait(q).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Non-blocking submit: errors immediately when the queue is full
+    /// (still coalesces identical queued requests).
+    pub fn try_submit(&self, req: ShardRequest) -> anyhow::Result<Ticket> {
+        let mut q = self.inner.queue.lock().unwrap();
+        anyhow::ensure!(!q.closed, "server is shut down");
+        match self.inner.admit(&mut q, req) {
+            Ok(ticket) => Ok(ticket),
+            Err(_) => {
+                self.inner.metrics.lock().unwrap().rejected += 1;
+                anyhow::bail!(
+                    "queue full ({} pending, depth {})",
+                    q.entries.len(),
+                    self.inner.cfg.queue_depth
+                );
+            }
+        }
+    }
+
+    /// Serve the next queued request on the calling thread; `false` when
+    /// the queue is empty. Deterministic alternative to the dispatcher.
+    pub fn process_next(&self) -> bool {
+        let pending = self.inner.queue.lock().unwrap().entries.pop_front();
+        match pending {
+            Some(p) => {
+                self.inner.not_full.notify_all();
+                self.inner.handle(p);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Serve queued requests until the queue is empty.
+    pub fn drain(&self) {
+        while self.process_next() {}
+    }
+
+    /// Spawn the background dispatcher thread.
+    pub fn start(&self) {
+        let inner = Arc::clone(&self.inner);
+        let handle = std::thread::Builder::new()
+            .name("stencil-serve-dispatch".to_string())
+            .spawn(move || {
+                while let Some(p) = inner.pop_blocking() {
+                    inner.handle(p);
+                }
+            })
+            .expect("failed to spawn dispatcher");
+        *self.dispatcher.lock().unwrap() = Some(handle);
+    }
+
+    /// Close the queue, stop the dispatcher, and fail any unserved
+    /// tickets. Idempotent; also invoked on drop.
+    pub fn shutdown(&self) {
+        let leftovers: Vec<Pending> = {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.closed = true;
+            q.entries.drain(..).collect()
+        };
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+        let handle = self.dispatcher.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        for p in leftovers {
+            p.slot
+                .fulfill(Err("server shut down before request was served".to_string()));
+        }
+    }
+
+    /// Full metrics snapshot (service + plan cache + config) as JSON.
+    pub fn metrics_json(&self) -> Json {
+        let service = self.inner.metrics.lock().unwrap().to_json();
+        let cs = self.inner.evolver.cache().stats();
+        obj(vec![
+            ("service", service),
+            (
+                "plan_cache",
+                obj(vec![
+                    ("hits", Json::Num(cs.hits as f64)),
+                    ("misses", Json::Num(cs.misses as f64)),
+                    ("evictions", Json::Num(cs.evictions as f64)),
+                    ("resident", Json::Num(cs.len as f64)),
+                ]),
+            ),
+            (
+                "config",
+                obj(vec![
+                    ("workers", Json::Num(self.inner.evolver.pool().workers() as f64)),
+                    ("shards", Json::Num(self.effective_shards() as f64)),
+                    ("queue_depth", Json::Num(self.inner.cfg.queue_depth as f64)),
+                    ("plan_cache", Json::Num(self.inner.cfg.plan_cache as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl Drop for StencilServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT artifact serving (moved from coordinator::service)
+// ---------------------------------------------------------------------------
+
+/// A request to advance a grid via a compiled PJRT artifact.
+#[derive(Debug, Clone)]
+pub struct EvolveRequest {
+    /// Artifact name (see `artifacts/manifest.json`).
+    pub artifact: String,
+    /// Number of executions (each advances `artifact.steps` steps).
+    pub executions: usize,
+    /// Verify the result against the scalar oracle.
+    pub verify: bool,
+}
+
+/// Serves evolve requests over compiled XLA artifacts, caching compiled
+/// executables per artifact. (Requires the `pjrt` cargo feature at run
+/// time; without it `new` returns an error.)
+pub struct EvolutionService {
+    runtime: PjrtRuntime,
+    registry: Registry,
+    engines: HashMap<String, StencilEngine>,
+}
+
+impl EvolutionService {
+    /// Start the service over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<EvolutionService> {
+        let runtime = PjrtRuntime::cpu()?;
+        let registry = Registry::load(artifact_dir)?;
+        Ok(EvolutionService { runtime, registry, engines: HashMap::new() })
+    }
+
+    /// Platform the service runs on.
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Artifact names available.
+    pub fn artifacts(&self) -> Vec<String> {
+        self.registry.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Compile (or fetch the cached) engine for an artifact.
+    pub fn engine(&mut self, name: &str) -> anyhow::Result<&StencilEngine> {
+        if !self.engines.contains_key(name) {
+            let meta = self.registry.find(name)?.clone();
+            let exe = self.runtime.compile(&meta)?;
+            self.engines.insert(name.to_string(), StencilEngine::new(exe));
+        }
+        Ok(&self.engines[name])
+    }
+
+    /// Serve one request: build the deterministic verification input for
+    /// the artifact's shape, evolve, and report.
+    pub fn serve(
+        &mut self,
+        req: &EvolveRequest,
+    ) -> anyhow::Result<(DenseGrid, crate::runtime::EvolutionReport)> {
+        let engine = self.engine(&req.artifact)?;
+        let shape = engine.meta().shape();
+        let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+        engine.evolve(&grid, req.executions, req.verify)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_req(seed: u64) -> ShardRequest {
+        ShardRequest {
+            spec: StencilSpec::box2d(1),
+            n: 12,
+            steps: 2,
+            seed,
+            method: KernelMethod::Taps,
+            verify: true,
+        }
+    }
+
+    #[test]
+    fn submit_drain_wait_roundtrip() {
+        let server = StencilServer::new(ServeConfig {
+            workers: 2,
+            shards: 2,
+            queue_depth: 8,
+            plan_cache: 8,
+        });
+        let t = server.submit(small_req(1)).unwrap();
+        assert_eq!(server.queue_len(), 1);
+        server.drain();
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.report.max_err, Some(0.0));
+        assert_eq!(resp.report.steps, 2);
+        assert_eq!(resp.report.points, 12 * 12);
+        assert_eq!(resp.report.shards, 2);
+        assert_eq!(resp.grid.shape, vec![14, 14]);
+    }
+
+    #[test]
+    fn identical_requests_coalesce() {
+        let server = StencilServer::new(ServeConfig::default());
+        let a = server.submit(small_req(7)).unwrap();
+        let b = server.submit(small_req(7)).unwrap();
+        let c = server.submit(small_req(8)).unwrap(); // different seed
+        assert_eq!(server.queue_len(), 2);
+        server.drain();
+        let ra = a.wait().unwrap();
+        let rb = b.wait().unwrap();
+        let rc = c.wait().unwrap();
+        assert_eq!(ra.report.waiters, 2);
+        assert!(Arc::ptr_eq(&ra, &rb));
+        assert_eq!(rc.report.waiters, 1);
+        assert_ne!(ra.grid, rc.grid);
+    }
+
+    #[test]
+    fn shutdown_fails_unserved_tickets() {
+        let server = StencilServer::new(ServeConfig::default());
+        let t = server.submit(small_req(3)).unwrap();
+        server.shutdown();
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("shut down"), "{err}");
+        assert!(server.submit(small_req(4)).is_err());
+    }
+
+    #[test]
+    fn dropping_a_started_server_stops_its_dispatcher() {
+        // the dispatcher holds ServerInner, not the outer handle, so this
+        // Drop runs, joins the thread, and fails the pending ticket
+        let server = StencilServer::new(ServeConfig::default());
+        server.start();
+        let t = {
+            // submit while the dispatcher may already be draining
+            server.submit(small_req(5)).unwrap()
+        };
+        drop(server);
+        // the ticket either completed before shutdown or was failed by it
+        match t.wait() {
+            Ok(resp) => assert_eq!(resp.report.max_err, Some(0.0)),
+            Err(e) => assert!(e.to_string().contains("shut down"), "{e}"),
+        }
+    }
+}

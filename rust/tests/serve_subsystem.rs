@@ -1,0 +1,154 @@
+//! Integration tests for the batched serving front-end: queue semantics
+//! (backpressure, coalescing), the background dispatcher, and the metrics
+//! snapshot consumed as JSON.
+
+use std::sync::Arc;
+use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, StencilServer};
+use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use stencil_matrix::util::json::Json;
+
+fn req(spec: StencilSpec, n: usize, steps: usize, seed: u64) -> ShardRequest {
+    ShardRequest { spec, n, steps, seed, method: KernelMethod::Taps, verify: true }
+}
+
+#[test]
+fn served_grid_matches_oracle() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 3,
+        shards: 4,
+        queue_depth: 8,
+        plan_cache: 8,
+    });
+    let spec = StencilSpec::star2d(2);
+    let ticket = server.submit(req(spec, 20, 3, 9)).unwrap();
+    server.drain();
+    let resp = ticket.wait().unwrap();
+    // the server's report already claims bitwise verification…
+    assert_eq!(resp.report.max_err, Some(0.0));
+    // …and we re-derive the oracle result independently out here
+    let input = DenseGrid::verification_input(&[24, 24], 9);
+    let want = reference::evolve(&CoeffTensor::paper_default(spec), &input, 3);
+    assert_eq!(resp.grid, want);
+}
+
+#[test]
+fn backpressure_rejects_when_full_and_recovers() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 1,
+        shards: 1,
+        queue_depth: 2,
+        plan_cache: 4,
+    });
+    let spec = StencilSpec::box2d(1);
+    let t1 = server.try_submit(req(spec, 10, 1, 1)).unwrap();
+    let t2 = server.try_submit(req(spec, 10, 1, 2)).unwrap();
+    // queue full → distinct request rejected…
+    let err = server.try_submit(req(spec, 10, 1, 3)).unwrap_err().to_string();
+    assert!(err.contains("queue full"), "{err}");
+    // …but an identical one still coalesces (consumes no capacity)
+    let t2b = server.try_submit(req(spec, 10, 1, 2)).unwrap();
+    assert_eq!(server.queue_len(), 2);
+    server.drain();
+    // capacity is back
+    let t3 = server.try_submit(req(spec, 10, 1, 3)).unwrap();
+    server.drain();
+    for t in [t1, t2, t2b, t3] {
+        assert_eq!(t.wait().unwrap().report.max_err, Some(0.0));
+    }
+    let m = server.metrics_json();
+    let svc = m.get("service").unwrap();
+    assert_eq!(svc.get("rejected").unwrap().as_usize(), Some(1));
+    assert_eq!(svc.get("coalesced").unwrap().as_usize(), Some(1));
+    // 3 distinct computations served 4 submissions
+    assert_eq!(svc.get("completed").unwrap().as_usize(), Some(4));
+}
+
+#[test]
+fn dispatcher_serves_concurrent_clients() {
+    let server = Arc::new(StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 16,
+        plan_cache: 8,
+    }));
+    server.start();
+    let spec = StencilSpec::box2d(1);
+    let mut clients = Vec::new();
+    for c in 0..3u64 {
+        let server = Arc::clone(&server);
+        clients.push(std::thread::spawn(move || {
+            for i in 0..4u64 {
+                // seeds overlap across clients → some submissions coalesce
+                let t = server.submit(req(spec, 12, 2, (c + i) % 5)).unwrap();
+                let resp = t.wait().unwrap();
+                assert_eq!(resp.report.max_err, Some(0.0));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.shutdown();
+    let m = server.metrics_json();
+    let svc = m.get("service").unwrap();
+    assert_eq!(svc.get("completed").unwrap().as_usize(), Some(12));
+    assert_eq!(svc.get("failed").unwrap().as_usize(), Some(0));
+}
+
+#[test]
+fn metrics_snapshot_is_valid_json_with_cache_stats() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 3,
+        queue_depth: 8,
+        plan_cache: 8,
+    });
+    let spec = StencilSpec::box2d(1);
+    // same (spec, size): plans compile once, then hit
+    for seed in 0..3u64 {
+        let t = server.submit(req(spec, 16, 2, seed)).unwrap();
+        server.drain();
+        t.wait().unwrap();
+    }
+    let text = server.metrics_json().to_string_compact();
+    let m = Json::parse(&text).unwrap();
+    let cache = m.get("plan_cache").unwrap();
+    let misses = cache.get("misses").unwrap().as_usize().unwrap();
+    let hits = cache.get("hits").unwrap().as_usize().unwrap();
+    assert!(misses >= 1);
+    assert!(hits > 0, "repeat requests should hit the plan cache");
+    let svc = m.get("service").unwrap();
+    assert_eq!(svc.get("completed").unwrap().as_usize(), Some(3));
+    assert!(
+        svc.get("service_time").unwrap().get("p95_s").unwrap().as_f64().is_some()
+    );
+    let cfgj = m.get("config").unwrap();
+    assert_eq!(cfgj.get("workers").unwrap().as_usize(), Some(2));
+    assert_eq!(cfgj.get("shards").unwrap().as_usize(), Some(3));
+}
+
+#[test]
+fn distinct_methods_are_distinct_cache_plans() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 8,
+        plan_cache: 8,
+    });
+    let spec = StencilSpec::box2d(1);
+    let mut a = req(spec, 14, 1, 3);
+    let mut b = req(spec, 14, 1, 3);
+    a.method = KernelMethod::Taps;
+    b.method = KernelMethod::Oracle;
+    // different method → NOT coalesced
+    let ta = server.submit(a).unwrap();
+    let tb = server.submit(b).unwrap();
+    assert_eq!(server.queue_len(), 2);
+    server.drain();
+    let ra = ta.wait().unwrap();
+    let rb = tb.wait().unwrap();
+    // …but bitwise-identical results
+    assert_eq!(ra.grid, rb.grid);
+    assert_eq!(ra.report.waiters, 1);
+    assert_eq!(rb.report.waiters, 1);
+}

@@ -1,0 +1,134 @@
+//! Shard-correctness property tests: sharded **multi-threaded** evolution
+//! must be *bitwise* equal to the single-shard scalar oracle
+//! (`stencil::reference::evolve`) across random specs, orders, shard
+//! counts, worker counts, step counts and kernels.
+//!
+//! Bitwise (not epsilon) equality is the point: the shard kernels
+//! preserve the oracle's accumulation order, tiles see exactly the
+//! neighbourhoods the global sweep sees, and halo exchange keeps ghost
+//! rows current — any crack in partitioning, exchange scheduling, or the
+//! frozen-boundary convention shows up as a single differing bit.
+
+use stencil_matrix::serve::{KernelMethod, Partition, ShardedEvolver};
+use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilKind, StencilSpec};
+use stencil_matrix::util::prop::{cases, Rng};
+
+fn random_spec(rng: &mut Rng, dims: usize) -> StencilSpec {
+    let kinds: &[StencilKind] = if dims == 2 {
+        &[StencilKind::Box, StencilKind::Star, StencilKind::Diagonal]
+    } else {
+        &[StencilKind::Box, StencilKind::Star]
+    };
+    StencilSpec::new(dims, rng.range(1, 3), *rng.choose(kinds)).unwrap()
+}
+
+fn check_case(
+    spec: StencilSpec,
+    shape: &[usize],
+    steps: usize,
+    shards: usize,
+    workers: usize,
+    method: KernelMethod,
+    seed: u64,
+) {
+    let grid = DenseGrid::verification_input(shape, seed);
+    let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, steps);
+    let ev = ShardedEvolver::new(workers);
+    let got = ev.evolve(spec, &grid, steps, shards, method).unwrap();
+    assert_eq!(
+        got, want,
+        "{spec} shape={shape:?} steps={steps} shards={shards} workers={workers} {method}"
+    );
+}
+
+#[test]
+fn sharded_equals_oracle_bitwise_2d() {
+    cases(16, 0x5A2D, |rng| {
+        let spec = random_spec(rng, 2);
+        // non-square shapes, including extents barely above 2r+1
+        let lo = 2 * spec.order + 2;
+        let shape = vec![rng.range(lo, lo + 24), rng.range(lo, lo + 24)];
+        check_case(
+            spec,
+            &shape,
+            rng.range(1, 4),
+            rng.range(1, 8),
+            rng.range(1, 4),
+            *rng.choose(&[KernelMethod::Oracle, KernelMethod::Taps]),
+            rng.next_u64(),
+        );
+    });
+}
+
+#[test]
+fn sharded_equals_oracle_bitwise_3d() {
+    cases(8, 0x5A3D, |rng| {
+        let spec = random_spec(rng, 3);
+        let lo = 2 * spec.order + 2;
+        let shape = vec![
+            rng.range(lo, lo + 8),
+            rng.range(lo, lo + 8),
+            rng.range(lo, lo + 8),
+        ];
+        check_case(
+            spec,
+            &shape,
+            rng.range(1, 3),
+            rng.range(1, 6),
+            rng.range(1, 4),
+            *rng.choose(&[KernelMethod::Oracle, KernelMethod::Taps]),
+            rng.next_u64(),
+        );
+    });
+}
+
+#[test]
+fn oversharding_clamps_and_stays_exact() {
+    // More shards than rows-per-halo allows: the partition clamps, edge
+    // shards may consist entirely of frozen-boundary rows, and the result
+    // must still match bitwise.
+    let spec = StencilSpec::box2d(2);
+    let shape = vec![11usize, 9];
+    let grid = DenseGrid::verification_input(&shape, 5);
+    let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, 3);
+    assert_eq!(Partition::max_shards(11, 2), 5);
+    for shards in [5usize, 6, 64] {
+        let ev = ShardedEvolver::new(3);
+        let got = ev.evolve(spec, &grid, 3, shards, KernelMethod::Taps).unwrap();
+        assert_eq!(got, want, "x{shards}");
+    }
+}
+
+#[test]
+fn minimal_grid_single_interior_point() {
+    // The smallest legal grid (2r+2 per dim) has very few interior
+    // points; every decomposition must agree with the oracle.
+    for spec in [StencilSpec::box2d(1), StencilSpec::star2d(3), StencilSpec::box3d(1)] {
+        let shape = vec![2 * spec.order + 2; spec.dims];
+        let grid = DenseGrid::verification_input(&shape, 77);
+        let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, 2);
+        for shards in 1..=3usize {
+            let ev = ShardedEvolver::new(2);
+            let got = ev
+                .evolve(spec, &grid, 2, shards, KernelMethod::Taps)
+                .unwrap();
+            assert_eq!(got, want, "{spec} x{shards}");
+        }
+    }
+}
+
+#[test]
+fn many_steps_keep_halos_current() {
+    // Longer evolutions amplify any stale-ghost bug: a single missed
+    // exchange diverges more every step.
+    let spec = StencilSpec::star2d(1);
+    let grid = DenseGrid::verification_input(&[40, 24], 0xBEEF);
+    let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, 12);
+    let ev = ShardedEvolver::new(4);
+    for shards in [2usize, 4, 8] {
+        let got = ev
+            .evolve(spec, &grid, 12, shards, KernelMethod::Taps)
+            .unwrap();
+        assert_eq!(got, want, "x{shards}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Offline vendored shim of the `anyhow` error crate.
+//!
+//! The offline crate set this repo builds against has no crates.io access,
+//! so this package provides the subset of `anyhow`'s API the repo actually
+//! uses — [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!`
+//! macros — with source-compatible semantics:
+//!
+//! - any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`;
+//! - `{:#}` (alternate Display) prints the full cause chain, `{}` only the
+//!   outermost message;
+//! - `Debug` also prints the cause chain, so `unwrap()` failures in tests
+//!   stay informative.
+//!
+//! Swapping this path dependency for the real `anyhow` requires no source
+//! changes.
+
+use std::fmt;
+
+/// A type-erased error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the same default as the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Create an error wrapping a concrete error value as its cause.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Iterate the cause chain (outermost message first is `self`; this
+    /// yields the wrapped sources below it).
+    fn sources(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next = self
+            .source
+            .as_ref()
+            .map(|b| &**b as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.sources() {
+                let s = cause.to_string();
+                // the outermost message is the wrapped error's to_string();
+                // avoid printing it twice
+                if s != self.msg {
+                    write!(f, ": {s}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> = self
+            .sources()
+            .map(|c| c.to_string())
+            .filter(|s| *s != self.msg)
+            .collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds. With no message
+/// the error names the failed condition, like the real crate.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("Condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_it(s: &str) -> Result<usize> {
+        let n: usize = s.parse()?; // std error converts via `?`
+        ensure!(n > 10, "{n} is not > 10");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(parse_it("42").is_ok());
+        let e = parse_it("nope").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        let e = parse_it("3").unwrap_err();
+        assert_eq!(e.to_string(), "3 is not > 10");
+        let f = || -> Result<()> { bail!("boom {}", 7) };
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        let f = |v: usize| -> Result<()> {
+            ensure!(v > 2);
+            Ok(())
+        };
+        assert!(f(3).is_ok());
+        let e = f(1).unwrap_err().to_string();
+        assert!(e.contains("v > 2"), "{e}");
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner cause");
+        let e = Error::from(io);
+        // outer message equals the wrapped error's Display; no duplication
+        assert_eq!(format!("{e:#}"), "inner cause");
+        let m = anyhow!("just a message");
+        assert_eq!(format!("{m:#}"), "just a message");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("x = {}, y = {y}", 1, y = 2);
+        assert_eq!(e.to_string(), "x = 1, y = 2");
+    }
+}
