@@ -96,9 +96,55 @@ pub fn mreg_sweep(cfg: &SimConfig) -> anyhow::Result<Report> {
     })
 }
 
+/// Tuned vs. paper-default plans: what does closing the loop buy, per
+/// stencil? Runs a cost-guided tune per row and compares the winner's
+/// cycles per point with the paper-default plan's (both oracle-verified
+/// inside the tuner).
+pub fn tuned_vs_default(cfg: &SimConfig) -> anyhow::Result<Report> {
+    use crate::tune::{tune, Strategy};
+    let mut table =
+        Table::new(&["stencil", "N", "default", "def cyc/pt", "tuned", "cyc/pt", "speedup"]);
+    let mut points = Vec::new();
+    let cells: &[(StencilSpec, usize)] = &[
+        (StencilSpec::box2d(1), 64),
+        (StencilSpec::star2d(2), 64),
+        (StencilSpec::diag2d(1), 64),
+        (StencilSpec::box3d(1), 16),
+        (StencilSpec::star3d(2), 16),
+    ];
+    for &(spec, n) in cells {
+        let out = tune(cfg, spec, n, 8, Strategy::CostGuided)?;
+        let (best, default) = (out.best(), out.paper_default());
+        table.row(vec![
+            spec.name(),
+            n.to_string(),
+            default.plan.label(spec.dims),
+            format!("{:.3}", default.cycles_per_point),
+            best.plan.label(spec.dims),
+            format!("{:.3}", best.cycles_per_point),
+            format!("{:.2}x", out.speedup_vs_default()),
+        ]);
+        points.push(obj(vec![
+            ("stencil", Json::Str(spec.name())),
+            ("n", Json::Num(n as f64)),
+            ("default_plan", Json::Str(default.plan.label(spec.dims))),
+            ("default_cycles_per_point", Json::Num(default.cycles_per_point)),
+            ("tuned_plan", Json::Str(best.plan.label(spec.dims))),
+            ("tuned_cycles_per_point", Json::Num(best.cycles_per_point)),
+            ("speedup", Json::Num(out.speedup_vs_default())),
+        ]));
+    }
+    Ok(Report {
+        name: "ablation-tuned".into(),
+        title: "tuned vs. paper-default plans (cost-guided search, budget 8)".into(),
+        table,
+        json: Json::Arr(points),
+    })
+}
+
 /// All ablations.
 pub fn run_all(cfg: &SimConfig) -> anyhow::Result<Vec<Report>> {
-    Ok(vec![unroll_sweep(cfg)?, mreg_sweep(cfg)?])
+    Ok(vec![unroll_sweep(cfg)?, mreg_sweep(cfg)?, tuned_vs_default(cfg)?])
 }
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 //! | [`fig4`] | Fig. 4 — multi-dimensional unrolling + scheduling ablation |
 //! | [`fig5`] | Fig. 5 — autovec / DLT / TV / ours on r = 1 stencils |
 //! | [`table3`] | Table 3 — speedups over auto-vectorization, full matrix |
-//! | [`ablation`] | extra ablations DESIGN.md calls out |
+//! | [`ablation`] | extra ablations (unroll, mregs, tuned-vs-default) |
+//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_2.json`) |
 //!
 //! Absolute cycle counts come from our simulator, not the paper's
 //! proprietary one, so the comparison target is the *shape* of each
@@ -22,6 +23,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod report;
+pub mod snapshot;
 pub mod table3;
 
 pub use report::Report;

@@ -1,0 +1,123 @@
+//! Machine-readable perf snapshot (`BENCH_2.json`): per-method simulated
+//! cycles and speedups for the Table-3 stencil rows at one representative
+//! size per dimensionality.
+//!
+//! This is the bench-trajectory artifact: small enough to regenerate on
+//! every CI run (`stencil-matrix bench-json`), complete enough to detect
+//! perf regressions in any method. Every number passes through
+//! [`run_method`], so a snapshot can only contain oracle-verified runs.
+
+use super::table3;
+use crate::codegen::{run_method, verify::speedup, Method, OuterParams};
+use crate::sim::SimConfig;
+use crate::util::json::{obj, Json};
+
+/// Snapshot schema version.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+fn method_json(cycles: u64, cycles_per_point: f64, speedup: f64) -> Json {
+    obj(vec![
+        ("cycles", Json::Num(cycles as f64)),
+        ("cycles_per_point", Json::Num(cycles_per_point)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
+/// Build the snapshot: every Table-3 spec at `n2d`² / `n3d`³, methods
+/// scalar / autovec / dlt / tv / outer (best Table-3 candidate per cell,
+/// with its plan label). Speedups are vs. auto-vectorization, the
+/// paper's baseline.
+pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
+    let mut results = Vec::new();
+    for dims in [2usize, 3] {
+        let n = if dims == 2 { n2d } else { n3d };
+        for spec in table3::rows(dims) {
+            let base = run_method(cfg, spec, n, Method::AutoVec, true)?;
+            anyhow::ensure!(base.verified(), "{spec} autovec N={n}: max_err {}", base.max_err);
+            let mut methods: Vec<(&str, Json)> = Vec::new();
+            methods.push((
+                "autovec",
+                method_json(base.stats.cycles, base.cycles_per_point(), 1.0),
+            ));
+            for (name, method) in
+                [("scalar", Method::Scalar), ("dlt", Method::Dlt), ("tv", Method::Tv)]
+            {
+                let res = run_method(cfg, spec, n, method, true)?;
+                anyhow::ensure!(res.verified(), "{spec} {method} N={n}: max_err {}", res.max_err);
+                methods.push((
+                    name,
+                    method_json(res.stats.cycles, res.cycles_per_point(), speedup(&base, &res)),
+                ));
+            }
+            // "our" method: best of the Table-3 candidate set for the cell
+            let mut best: Option<(OuterParams, crate::codegen::MethodResult)> = None;
+            for params in table3::candidates(spec) {
+                let res = run_method(cfg, spec, n, Method::Outer(params), true)?;
+                anyhow::ensure!(res.verified(), "{spec} {params:?} N={n}");
+                if best
+                    .as_ref()
+                    .map(|(_, b)| res.cycles_per_point() < b.cycles_per_point())
+                    .unwrap_or(true)
+                {
+                    best = Some((params, res));
+                }
+            }
+            let (bp, bres) = best.expect("candidate set is never empty");
+            let mut outer = method_json(
+                bres.stats.cycles,
+                bres.cycles_per_point(),
+                speedup(&base, &bres),
+            );
+            if let Json::Obj(m) = &mut outer {
+                m.insert("plan".to_string(), Json::Str(bp.label(dims)));
+            }
+            methods.push(("outer", outer));
+            results.push(obj(vec![
+                ("stencil", Json::Str(spec.name())),
+                ("dims", Json::Num(dims as f64)),
+                ("n", Json::Num(n as f64)),
+                ("methods", obj(methods)),
+            ]));
+        }
+    }
+    Ok(obj(vec![
+        ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+        ("kind", Json::Str("table3-snapshot".into())),
+        ("fingerprint", Json::Str(cfg.fingerprint())),
+        (
+            "sizes",
+            obj(vec![("2d", Json::Num(n2d as f64)), ("3d", Json::Num(n3d as f64))]),
+        ),
+        ("results", Json::Arr(results)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_covers_every_table3_row() {
+        // tiny sizes keep this test fast; CI regenerates at 64/16
+        let j = run(&SimConfig::default(), 16, 8).unwrap();
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(1));
+        let results = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
+        for r in results {
+            let methods = r.get("methods").unwrap();
+            for m in ["scalar", "autovec", "dlt", "tv", "outer"] {
+                let e = methods.get(m).unwrap_or_else(|| panic!("missing {m}"));
+                assert!(e.get("cycles").and_then(Json::as_f64).unwrap() > 0.0);
+                assert!(e.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+            }
+            assert_eq!(
+                methods.get("autovec").unwrap().get("speedup").and_then(Json::as_f64),
+                Some(1.0)
+            );
+            assert!(methods.get("outer").unwrap().get("plan").and_then(Json::as_str).is_some());
+        }
+        // round-trips through the parser
+        let rt = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(rt.get("kind").and_then(Json::as_str), Some("table3-snapshot"));
+    }
+}

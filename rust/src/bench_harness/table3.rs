@@ -40,7 +40,9 @@ pub fn candidates(spec: StencilSpec) -> Vec<OuterParams> {
     v
 }
 
-fn rows(dims: usize) -> Vec<StencilSpec> {
+/// The Table-3 stencil rows for one dimensionality (also the row set of
+/// the `bench-json` snapshot).
+pub fn rows(dims: usize) -> Vec<StencilSpec> {
     let mut v = Vec::new();
     let box_orders: &[usize] = if dims == 2 { &[1, 2, 3] } else { &[1, 2] };
     for &r in box_orders {

@@ -12,4 +12,4 @@ pub mod sweep;
 
 pub use experiment::{run_experiment, Experiment};
 pub use service::EvolutionService;
-pub use sweep::Sweep;
+pub use sweep::{Sweep, TunedSweep};

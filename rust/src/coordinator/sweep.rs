@@ -1,8 +1,38 @@
 //! Generic parameter sweeps over verified simulation runs.
 
-use crate::codegen::{run_method, Method, MethodResult};
+use crate::codegen::{run_method, Method, MethodResult, OuterParams};
 use crate::stencil::StencilSpec;
 use crate::sim::SimConfig;
+use crate::tune::TuneDb;
+use std::sync::Arc;
+
+/// Source of tuned plans for [`Sweep`]'s `tuned` method variant.
+#[derive(Debug, Clone)]
+pub struct TunedSweep {
+    /// The tuning database to resolve plans from.
+    pub db: Arc<TuneDb>,
+    /// Machine fingerprint the sweep's `cfg` corresponds to (see
+    /// [`crate::sim::SimConfig::fingerprint`]).
+    pub fingerprint: String,
+}
+
+impl TunedSweep {
+    /// Tuned-plan source for a machine config.
+    pub fn new(db: Arc<TuneDb>, cfg: &SimConfig) -> TunedSweep {
+        TunedSweep { db, fingerprint: cfg.fingerprint() }
+    }
+
+    /// Resolve the method to run for a sweep cell: the database entry for
+    /// the exact `(spec, n)` key, else the entry tuned at the largest
+    /// size for `spec`, else the paper-default outer plan.
+    pub fn resolve(&self, spec: StencilSpec, n: usize) -> Method {
+        self.db
+            .lookup(spec, n, &self.fingerprint)
+            .or_else(|| self.db.best_for(spec, &self.fingerprint))
+            .map(|e| e.plan.to_method())
+            .unwrap_or(Method::Outer(OuterParams::paper_best(spec)))
+    }
+}
 
 /// A cartesian sweep of (spec, size, method) cells.
 #[derive(Debug, Clone, Default)]
@@ -13,6 +43,10 @@ pub struct Sweep {
     pub sizes: Vec<usize>,
     /// Methods to sweep.
     pub methods: Vec<Method>,
+    /// When set, each (spec, size) cell additionally runs the `tuned`
+    /// method variant: the plan the tuning database holds for that cell
+    /// (falling back to the paper default when the database has none).
+    pub tuned: Option<TunedSweep>,
     /// Warm (steady-state) or cold caches.
     pub warm: bool,
 }
@@ -23,9 +57,9 @@ impl Sweep {
         Sweep { warm: true, ..Default::default() }
     }
 
-    /// Number of cells.
+    /// Number of cells (the `tuned` variant counts as one method).
     pub fn len(&self) -> usize {
-        self.specs.len() * self.sizes.len() * self.methods.len()
+        self.specs.len() * self.sizes.len() * (self.methods.len() + self.tuned.is_some() as usize)
     }
 
     /// True when the sweep is empty.
@@ -44,7 +78,8 @@ impl Sweep {
         let mut out = Vec::with_capacity(total);
         for &spec in &self.specs {
             for &n in &self.sizes {
-                for &method in &self.methods {
+                let tuned_method = self.tuned.as_ref().map(|t| t.resolve(spec, n));
+                for &method in self.methods.iter().chain(tuned_method.iter()) {
                     let res = run_method(cfg, spec, n, method, self.warm)?;
                     anyhow::ensure!(
                         res.verified(),
@@ -64,6 +99,7 @@ impl Sweep {
 mod tests {
     use super::*;
     use crate::codegen::OuterParams;
+    use crate::tune::{tune, Strategy};
 
     #[test]
     fn sweep_runs_all_cells() {
@@ -78,5 +114,33 @@ mod tests {
         let res = sweep.run(&SimConfig::default(), |_, _, _| seen += 1).unwrap();
         assert_eq!(res.len(), 4);
         assert_eq!(seen, 4);
+    }
+
+    #[test]
+    fn tuned_variant_resolves_from_the_db_and_falls_back() {
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let mut db = TuneDb::new();
+        let outcome = tune(&cfg, spec, 16, 3, Strategy::CostGuided).unwrap();
+        db.record(&outcome);
+        let tuned = TunedSweep::new(Arc::new(db), &cfg);
+
+        // exact key hit
+        assert_eq!(tuned.resolve(spec, 16), outcome.best().plan.to_method());
+        // size miss → the entry tuned at the largest size for the spec
+        assert_eq!(tuned.resolve(spec, 32), outcome.best().plan.to_method());
+        // spec miss → paper default
+        let other = StencilSpec::star3d(1);
+        assert_eq!(tuned.resolve(other, 16), Method::Outer(OuterParams::paper_best(other)));
+
+        let mut sweep = Sweep::new();
+        sweep.specs = vec![spec];
+        sweep.sizes = vec![16];
+        sweep.methods = vec![Method::AutoVec];
+        sweep.tuned = Some(tuned);
+        assert_eq!(sweep.len(), 2);
+        let res = sweep.run(&cfg, |_, _, _| {}).unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[1].method, outcome.best().plan.to_method());
     }
 }

@@ -29,6 +29,11 @@
 //!   an LRU cache of compiled shard kernels, and a batched request
 //!   front-end with backpressure, coalescing and JSON metrics. Sharded
 //!   multi-threaded evolution is *bitwise* equal to the scalar oracle.
+//! - [`tune`] — sim-in-the-loop autotuning: a search space over the
+//!   paper's optimization choices (cover option × unroll × scheduling ×
+//!   layout × method), an analytic cost model for pruning, oracle-verified
+//!   empirical ranking on the simulator, and a versioned JSON tuning
+//!   database consumed by `serve`, `coordinator` and the bench harness.
 //! - [`coordinator`] — experiment runner, parameter sweeps, report tables
 //!   and the async batch driver.
 //! - [`bench_harness`] — regenerates every figure and table of the paper's
@@ -42,6 +47,7 @@ pub mod scatter;
 pub mod serve;
 pub mod sim;
 pub mod stencil;
+pub mod tune;
 pub mod util;
 
 /// Vector length in f64 lanes (512-bit vectors, §5.1).

@@ -6,13 +6,21 @@
 //! stencil-matrix simulate    --stencil 2d-box --order 1 --size 64 \
 //!                            --method outer [--option parallel] [--ui 1] \
 //!                            [--uk 8] [--no-sched] [--cold]
+//! stencil-matrix tune        --stencil 2d-star --order 2 --size 64 \
+//!                            [--budget 12] [--strategy guided] \
+//!                            [--db target/tune/tune_db.json] [--out target/tune]
 //! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
+//! stencil-matrix bench-json  [--out BENCH_2.json] [--size2d 64] [--size3d 16]
 //! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
-//!                            --size 256 --steps 4 --requests 32
+//!                            --size 256 --steps 4 --requests 32 \
+//!                            [--kernel tuned --tune-db target/tune/tune_db.json]
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
 //! stencil-matrix list        [--artifacts-dir artifacts]
 //! ```
+//!
+//! Every subcommand prints its usage on `--help`/`-h` (or via
+//! `stencil-matrix help <subcommand>`).
 
 use stencil_matrix::codegen::{run_method, Method, OuterParams};
 use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
@@ -20,6 +28,7 @@ use stencil_matrix::scatter::{analysis, build_cover, CoverOption};
 use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, ShardedEvolver, StencilServer};
 use stencil_matrix::stencil::{CoeffTensor, DenseGrid, StencilKind, StencilSpec};
 use stencil_matrix::sim::SimConfig;
+use stencil_matrix::tune::{self, TuneDb};
 use stencil_matrix::util::json::{obj, Json};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -101,14 +110,7 @@ fn parse_spec(args: &Args) -> anyhow::Result<StencilSpec> {
 }
 
 fn parse_option(s: &str) -> anyhow::Result<CoverOption> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "parallel" | "p" => CoverOption::Parallel,
-        "orthogonal" | "o" => CoverOption::Orthogonal,
-        "hybrid" | "h" => CoverOption::Hybrid,
-        "minimalaxis" | "minimal" | "m" => CoverOption::MinimalAxis,
-        "diagonals" | "d" => CoverOption::Diagonals,
-        other => anyhow::bail!("unknown --option '{other}'"),
-    })
+    s.parse()
 }
 
 fn default_workers() -> usize {
@@ -121,10 +123,26 @@ fn run() -> anyhow::Result<()> {
         print_help();
         return Ok(());
     };
+    // `<cmd> --help` / `<cmd> -h` prints that subcommand's usage;
+    // `help <cmd>` does the same.
+    if argv[1..].iter().any(|a| a == "--help" || a == "-h") {
+        match usage_for(cmd) {
+            Some(u) => println!("{u}"),
+            None => print_help(),
+        }
+        return Ok(());
+    }
+    if cmd == "help" {
+        match argv.get(1).and_then(|topic| usage_for(topic)) {
+            Some(u) => println!("{u}"),
+            None => print_help(),
+        }
+        return Ok(());
+    }
     let args = parse_args(&argv[1..]);
     let cfg = SimConfig::default();
     match cmd.as_str() {
-        "help" | "--help" | "-h" => print_help(),
+        "--help" | "-h" => print_help(),
         "analyze" => {
             let spec = parse_spec(&args)?;
             let n = args.usize_or("n", cfg.vlen)?;
@@ -231,6 +249,23 @@ fn run() -> anyhow::Result<()> {
                 .parse::<Experiment>()?;
             run_experiment(&cfg, which)?;
         }
+        "bench-json" => {
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_2.json"));
+            let n2d = args.usize_or("size2d", 64)?;
+            let n3d = args.usize_or("size3d", 16)?;
+            let snap = stencil_matrix::bench_harness::snapshot::run(&cfg, n2d, n3d)?;
+            std::fs::write(&out, snap.to_string_compact())?;
+            let rows = snap.get("results").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+            println!(
+                "wrote {} ({} stencil row(s) at {n2d}²/{n3d}³, fingerprint {})",
+                out.display(),
+                rows,
+                cfg.fingerprint()
+            );
+        }
+        "tune" => {
+            tune_cmd(&cfg, &args)?;
+        }
         "serve" => {
             // --backend picks explicitly; otherwise any artifact-flavoured
             // flag keeps the pre-existing PJRT path (including
@@ -277,6 +312,42 @@ fn run() -> anyhow::Result<()> {
             anyhow::bail!("unknown command '{other}'");
         }
     }
+    Ok(())
+}
+
+/// `tune`: search the optimization space for one stencil, verify and rank
+/// candidates on the simulator, report, and update the tuning database.
+fn tune_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
+    let spec = parse_spec(args)?;
+    let default_n = if spec.dims == 2 { 64 } else { 16 };
+    let n = args.usize_or("size", default_n)?;
+    let budget = args.usize_or("budget", 12)?;
+    let strategy: tune::Strategy = args.get("strategy").unwrap_or("guided").parse()?;
+    let db_path = PathBuf::from(args.get("db").unwrap_or("target/tune/tune_db.json"));
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("target/tune"));
+
+    let outcome = tune::tune(cfg, spec, n, budget, strategy)?;
+    let md = tune::report::to_markdown(&outcome);
+    print!("{md}");
+    std::fs::create_dir_all(&out_dir)?;
+    let stem = format!("tune-{}-n{n}", spec.name());
+    std::fs::write(out_dir.join(format!("{stem}.md")), &md)?;
+    std::fs::write(
+        out_dir.join(format!("{stem}.json")),
+        tune::report::to_json(&outcome).to_string_compact(),
+    )?;
+
+    let mut db = TuneDb::load_or_new(&db_path)?;
+    db.record(&outcome);
+    db.save(&db_path)?;
+    println!(
+        "recorded {} → {} ({} entr{}); reports in {}",
+        outcome.best().plan.label(spec.dims),
+        db_path.display(),
+        db.len(),
+        if db.len() == 1 { "y" } else { "ies" },
+        out_dir.display()
+    );
     Ok(())
 }
 
@@ -328,12 +399,19 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
     let verify = !args.has("no-verify");
 
-    let server = Arc::new(StencilServer::new(ServeConfig {
-        workers,
-        shards,
-        queue_depth,
-        plan_cache: 32,
-    }));
+    let serve_cfg = ServeConfig { workers, shards, queue_depth, plan_cache: 32 };
+    let server = match args.get("tune-db") {
+        Some(path) => {
+            let db = TuneDb::load(&PathBuf::from(path))?;
+            println!("tuning DB: {path} ({} entr{})", db.len(), if db.len() == 1 { "y" } else { "ies" });
+            Arc::new(StencilServer::with_tune_db(
+                serve_cfg,
+                Arc::new(db),
+                SimConfig::default().fingerprint(),
+            ))
+        }
+        None => Arc::new(StencilServer::new(serve_cfg)),
+    };
     server.start();
     println!(
         "serving {requests} request(s) from {clients} client(s): {spec} N={n} steps={steps} \
@@ -458,6 +536,129 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `(subcommand, usage text)` — one entry per subcommand, used by both
+/// the general help and `<subcommand> --help`.
+const USAGES: &[(&str, &str)] = &[
+    (
+        "analyze",
+        "stencil-matrix analyze — §3.4 instruction-count analysis per cover option
+
+USAGE:
+  stencil-matrix analyze [--stencil 2d-box] [--order 1] [--n 8]
+
+  --stencil   2d-box|2d-star|2d-diag|3d-box|3d-star (default 2d-box)
+  --order     stencil order r, 1..4 (default 1)
+  --n         output-block extent for the counts (default: vector length)",
+    ),
+    (
+        "cover",
+        "stencil-matrix cover — print a coefficient-line cover (§4.1/§3.5)
+
+USAGE:
+  stencil-matrix cover [--stencil 2d-star] [--order 2] [--option parallel]
+
+  --option    parallel|orthogonal|hybrid|minimalaxis|diagonals
+              (must be applicable to the stencil shape)",
+    ),
+    (
+        "simulate",
+        "stencil-matrix simulate — run one verified kernel on the SME-like simulator
+
+USAGE:
+  stencil-matrix simulate [--stencil 2d-box] [--order 1] [--size 64]
+                          [--method outer] [--option parallel]
+                          [--ui 1] [--uk 8] [--no-sched] [--cold]
+
+  --method    outer|autovec|dlt|tv|scalar (default outer)
+  --size      domain extent N (multiple of the vector length)
+  --ui/--uk   unroll factors for the outer method (§4.2)
+  --no-sched  disable outer-product scheduling (§4.3)
+  --cold      measure with cold caches (default: warm)",
+    ),
+    (
+        "disasm",
+        "stencil-matrix disasm — disassemble the outer method's generated program
+
+USAGE:
+  stencil-matrix disasm [--stencil 2d-box] [--order 1] [--size 16]
+                        [--option parallel] [--limit 80]",
+    ),
+    (
+        "tune",
+        "stencil-matrix tune — sim-in-the-loop autotuning for one stencil
+
+Searches cover option × unroll × scheduling × layout × method, prunes with
+the analytic cost model, verifies + ranks survivors on the simulator, and
+records the winner in the tuning database (keyed by stencil, size, and
+machine fingerprint). The tuned plan is never worse than the paper default.
+
+USAGE:
+  stencil-matrix tune [--stencil 2d-box] [--order 1] [--size 64]
+                      [--budget 12] [--strategy guided|exhaustive]
+                      [--db target/tune/tune_db.json] [--out target/tune]
+
+  --budget    simulator runs the guided strategy may spend (default 12)
+  --db        tuning-database path (created/updated; versioned JSON)
+  --out       report directory (markdown + JSON per run)",
+    ),
+    (
+        "bench",
+        "stencil-matrix bench — regenerate the paper's figures and tables
+
+USAGE:
+  stencil-matrix bench [fig3|fig4|fig5|table3|ablations|all]
+
+Reports land in target/bench-reports/ as markdown + JSON (default: all).",
+    ),
+    (
+        "bench-json",
+        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_2.json)
+
+Per-method simulated cycles and speedups (scalar, autovec, dlt, tv, outer)
+for every Table-3 stencil row at one size per dimensionality.
+
+USAGE:
+  stencil-matrix bench-json [--out BENCH_2.json] [--size2d 64] [--size3d 16]",
+    ),
+    (
+        "serve",
+        "stencil-matrix serve — the sharded multi-threaded stencil server
+
+USAGE:
+  stencil-matrix serve [--backend native] [--workers N] [--shards M]
+                       [--queue-depth D] [--size 256] [--steps 4]
+                       [--requests 32] [--clients 4] [--distinct 4]
+                       [--kernel taps|oracle|tuned] [--no-verify]
+                       [--tune-db target/tune/tune_db.json]
+  stencil-matrix serve --artifact evolve_2d5p_n256_t4 --executions 25
+
+With --tune-db, the kernel LRU consults the tuning database before
+compiling shard kernels; --kernel tuned requests report the matched plan.
+The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
+    ),
+    (
+        "shard-bench",
+        "stencil-matrix shard-bench — worker-scaling benchmark of sharded evolution
+
+USAGE:
+  stencil-matrix shard-bench [--stencil 2d-box] [--order 1] [--size 512]
+                             [--steps 8] [--max-workers 4]
+                             [--kernel taps|oracle]",
+    ),
+    (
+        "list",
+        "stencil-matrix list — list AOT-compiled PJRT artifacts
+
+USAGE:
+  stencil-matrix list [--artifacts-dir artifacts]",
+    ),
+];
+
+/// Usage text for one subcommand.
+fn usage_for(cmd: &str) -> Option<&'static str> {
+    USAGES.iter().find(|(name, _)| *name == cmd).map(|(_, text)| *text)
+}
+
 fn print_help() {
     println!(
         "stencil-matrix — Stencil Matrixization (CS.DC 2023) reproduction
@@ -468,18 +669,23 @@ USAGE:
   stencil-matrix simulate    --stencil 2d-box --order 1 --size 64 --method outer
                              [--option parallel] [--ui 1] [--uk 8] [--no-sched] [--cold]
   stencil-matrix disasm      --stencil 2d-box --order 1 --size 16 [--limit 80]
+  stencil-matrix tune        --stencil 2d-star --order 2 --size 64 [--budget 12]
+                             [--strategy guided] [--db target/tune/tune_db.json]
   stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
+  stencil-matrix bench-json  [--out BENCH_2.json] [--size2d 64] [--size3d 16]
   stencil-matrix serve       [--backend native] [--workers N] [--shards M]
                              [--queue-depth D] [--size 256] [--steps 4]
                              [--requests 32] [--clients 4] [--distinct 4]
-                             [--kernel taps|oracle] [--no-verify]
+                             [--kernel taps|oracle|tuned] [--no-verify]
+                             [--tune-db target/tune/tune_db.json]
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle]
   stencil-matrix list        [--artifacts-dir artifacts]
 
-Flags accept both '--key value' and '--key=value'; '=' values may begin
-with '-'. Methods: outer (the paper's), autovec, dlt, tv, scalar.
+Run 'stencil-matrix help <subcommand>' (or '<subcommand> --help') for
+details. Flags accept both '--key value' and '--key=value'; '=' values may
+begin with '-'. Methods: outer (the paper's), autovec, dlt, tv, scalar.
 Stencils: 2d-box 2d-star 2d-diag 3d-box 3d-star; --order 1..4."
     );
 }
@@ -541,5 +747,43 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         let bad = parse_args(&argv(&["--size=nope"]));
         assert!(bad.usize_or("size", 64).is_err());
+    }
+
+    /// Every dispatched subcommand must appear in [`USAGES`] so that
+    /// `<cmd> --help` and `help <cmd>` print real usage rather than the
+    /// generic banner.
+    #[test]
+    fn every_subcommand_has_usage_text() {
+        let subcommands = [
+            "analyze",
+            "cover",
+            "simulate",
+            "disasm",
+            "tune",
+            "bench",
+            "bench-json",
+            "serve",
+            "shard-bench",
+            "list",
+        ];
+        for cmd in subcommands {
+            let text = usage_for(cmd).unwrap_or_else(|| panic!("no usage for '{cmd}'"));
+            assert!(text.contains(cmd), "usage for '{cmd}' does not mention it");
+            assert!(text.contains("USAGE:"), "usage for '{cmd}' has no USAGE section");
+        }
+        assert!(usage_for("no-such-command").is_none());
+        assert_eq!(USAGES.len(), subcommands.len());
+    }
+
+    #[test]
+    fn usage_texts_mention_key_flags() {
+        assert!(usage_for("tune").unwrap().contains("--budget"));
+        assert!(usage_for("tune").unwrap().contains("--strategy"));
+        assert!(usage_for("tune").unwrap().contains("--db"));
+        assert!(usage_for("serve").unwrap().contains("--tune-db"));
+        assert!(usage_for("serve").unwrap().contains("tuned"));
+        assert!(usage_for("bench-json").unwrap().contains("BENCH_2.json"));
+        assert!(usage_for("bench").unwrap().contains("table3"));
+        assert!(usage_for("simulate").unwrap().contains("--method"));
     }
 }

@@ -318,4 +318,106 @@ mod tests {
         let (rows, cols) = g.min_vertex_cover();
         assert!(rows.is_empty() && cols.is_empty());
     }
+
+    /// The cover property, checked positionally: every non-zero footprint
+    /// weight belongs to exactly one line (with its original value), and
+    /// no line carries weight at a zero position.
+    fn assert_exactly_once(coeffs: &CoeffTensor, lines: &[CoeffLine]) {
+        let s = coeffs.spec.side();
+        let r = coeffs.spec.order as isize;
+        let mut owners = vec![0usize; s * s];
+        let mut sums = vec![0.0f64; s * s];
+        for line in lines {
+            for t in -r..=r {
+                let w = line.weights[(t + r) as usize];
+                if w != 0.0 {
+                    let p = line.point(t);
+                    let idx = ((p[0] + r) * s as isize + (p[1] + r)) as usize;
+                    owners[idx] += 1;
+                    sums[idx] += w;
+                }
+            }
+        }
+        for idx in 0..s * s {
+            if coeffs.data[idx] != 0.0 {
+                assert_eq!(owners[idx], 1, "position {idx} covered {} times", owners[idx]);
+                assert_eq!(sums[idx], coeffs.data[idx], "position {idx} weight changed");
+            } else {
+                assert_eq!(owners[idx], 0, "zero position {idx} got a weight");
+            }
+        }
+    }
+
+    /// Random 2D coefficient tensor: box-spec container, random non-zero
+    /// mask (at least the centre), random non-zero weights.
+    fn random_coeffs(rng: &mut crate::util::prop::Rng, r: usize) -> CoeffTensor {
+        let spec = StencilSpec::box2d(r);
+        let s = spec.side();
+        let mut data = vec![0.0f64; s * s];
+        for w in data.iter_mut() {
+            if rng.below(3) == 0 {
+                let mut v = rng.f64();
+                if v == 0.0 {
+                    v = 0.5;
+                }
+                *w = v;
+            }
+        }
+        let centre = (s / 2) * s + s / 2;
+        if data.iter().all(|w| *w == 0.0) {
+            data[centre] = 1.0;
+        }
+        CoeffTensor { spec, data }
+    }
+
+    #[test]
+    fn minimal_cover_covers_every_weight_exactly_once_up_to_order_4() {
+        // deterministic paper shapes, orders 1..=4
+        for r in 1..=4usize {
+            for spec in [StencilSpec::box2d(r), StencilSpec::star2d(r), StencilSpec::diag2d(r)] {
+                let c = CoeffTensor::paper_default(spec);
+                assert_exactly_once(&c, &minimal_axis_cover_2d(&c));
+            }
+        }
+        // random masks and weights
+        crate::util::prop::cases(60, 0x2D11, |rng| {
+            let c = random_coeffs(rng, rng.range(1, 4));
+            assert_exactly_once(&c, &minimal_axis_cover_2d(&c));
+        });
+    }
+
+    #[test]
+    fn minimal_cover_line_count_is_koenig_minimum_up_to_order_4() {
+        // König: |min cover| = |max matching|; the line construction drops
+        // nothing (no minimum-cover vertex is redundant), so the line
+        // count must equal the matching size — and, for orders where the
+        // brute-force oracle is tractable, the true minimum.
+        for r in 1..=4usize {
+            for spec in [StencilSpec::box2d(r), StencilSpec::star2d(r), StencilSpec::diag2d(r)] {
+                let c = CoeffTensor::paper_default(spec);
+                let lines = minimal_axis_cover_2d(&c);
+                let g = Bipartite::from_coeffs(&c);
+                let (mu, _) = g.hopcroft_karp();
+                let matching = mu.iter().filter(|&&v| v != usize::MAX).count();
+                assert_eq!(lines.len(), matching, "{spec}");
+                if r <= 3 {
+                    assert_eq!(lines.len(), g.brute_force_cover_size(), "{spec}");
+                }
+                // closed forms (§3.5): star needs 2 lines, box and the
+                // permutation-patterned diagonal need 2r+1
+                let want = match spec.kind {
+                    StencilKind::Star => 2,
+                    _ => 2 * r + 1,
+                };
+                assert_eq!(lines.len(), want, "{spec}");
+            }
+        }
+        // random masks, orders the brute-force oracle handles quickly
+        crate::util::prop::cases(40, 0x2D12, |rng| {
+            let c = random_coeffs(rng, rng.range(1, 2));
+            let lines = minimal_axis_cover_2d(&c);
+            let g = Bipartite::from_coeffs(&c);
+            assert_eq!(lines.len(), g.brute_force_cover_size());
+        });
+    }
 }

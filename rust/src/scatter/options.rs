@@ -13,6 +13,7 @@ use crate::stencil::{CoeffTensor, StencilKind, StencilSpec};
 
 use std::collections::HashSet;
 use std::fmt;
+use std::str::FromStr;
 
 /// Which cover of the non-zero weights to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -71,6 +72,26 @@ impl CoverOption {
 impl fmt::Display for CoverOption {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}", format!("{self:?}").to_lowercase())
+    }
+}
+
+impl FromStr for CoverOption {
+    type Err = anyhow::Error;
+
+    /// Parse a cover-option name: the lowercase `Display` form or the
+    /// one-letter `label` (`parallel`/`p`, `orthogonal`/`o`, `hybrid`/`h`,
+    /// `minimalaxis`/`minimal`/`m`, `diagonals`/`d`).
+    fn from_str(s: &str) -> anyhow::Result<CoverOption> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "parallel" | "p" => CoverOption::Parallel,
+            "orthogonal" | "o" => CoverOption::Orthogonal,
+            "hybrid" | "h" => CoverOption::Hybrid,
+            "minimalaxis" | "minimal" | "m" => CoverOption::MinimalAxis,
+            "diagonals" | "d" => CoverOption::Diagonals,
+            other => anyhow::bail!(
+                "unknown cover option '{other}' (parallel|orthogonal|hybrid|minimalaxis|diagonals)"
+            ),
+        })
     }
 }
 
@@ -290,6 +311,21 @@ mod tests {
         let star3d = CoeffTensor::paper_default(StencilSpec::star3d(1));
         assert!(build_cover(&star3d, CoverOption::MinimalAxis).is_err());
         assert!(build_cover(&star3d, CoverOption::Diagonals).is_err());
+    }
+
+    #[test]
+    fn cover_option_roundtrips_through_strings() {
+        for opt in [
+            CoverOption::Parallel,
+            CoverOption::Orthogonal,
+            CoverOption::Hybrid,
+            CoverOption::MinimalAxis,
+            CoverOption::Diagonals,
+        ] {
+            assert_eq!(opt.to_string().parse::<CoverOption>().unwrap(), opt);
+            assert_eq!(opt.label().parse::<CoverOption>().unwrap(), opt);
+        }
+        assert!("bogus".parse::<CoverOption>().is_err());
     }
 
     #[test]

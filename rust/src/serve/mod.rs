@@ -15,8 +15,10 @@
 //! - [`pool`] — `std::thread` worker pool: per-worker deques, work
 //!   stealing, per-batch barrier.
 //! - [`scheduler`] — compiled shard kernels (bitwise-identical to the
-//!   scalar oracle), an LRU plan cache keyed by (spec, shape, method),
-//!   and the step loop (compute batch → barrier → halo exchange).
+//!   scalar oracle), an LRU plan cache keyed by (spec, shape, method)
+//!   that consults the [`crate::tune`] database before compiling `tuned`
+//!   shard kernels, and the step loop (compute batch → barrier → halo
+//!   exchange).
 //! - [`service`] — the batched front-end: bounded queue with
 //!   backpressure, coalescing of identical requests, dispatcher thread;
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
@@ -38,7 +40,7 @@ pub mod service;
 pub use metrics::{LatencyRecorder, ServiceMetrics};
 pub use partition::{Partition, Slab};
 pub use pool::WorkerPool;
-pub use scheduler::{CompiledPlan, KernelMethod, PlanCache, PlanKey, ShardedEvolver};
+pub use scheduler::{CompiledPlan, KernelMethod, PlanCache, PlanKey, ShardedEvolver, TunedInfo};
 pub use service::{
     EvolutionService, EvolveRequest, ServeConfig, ShardRequest, ShardResponse, StencilServer,
     Ticket,

@@ -18,6 +18,7 @@ use super::halo;
 use super::partition::Partition;
 use super::pool::{Job, WorkerPool};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use crate::tune::TuneDb;
 use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
@@ -30,6 +31,14 @@ pub enum KernelMethod {
     Oracle,
     /// Precomputed linear-offset taps (same FP order, no index math).
     Taps,
+    /// Like [`KernelMethod::Taps`], but plan compilation consults the
+    /// tuning database (when the cache has one): the compiled shard plan
+    /// carries the tuned accelerator plan for this stencil on the tuned
+    /// machine. Host execution stays the bitwise taps kernel — the tuned
+    /// plan describes the simulator/SME program the tuner validated and
+    /// measured, and is surfaced through [`TunedInfo`] and the serve
+    /// metrics.
+    Tuned,
 }
 
 impl fmt::Display for KernelMethod {
@@ -37,6 +46,7 @@ impl fmt::Display for KernelMethod {
         match self {
             KernelMethod::Oracle => write!(f, "oracle"),
             KernelMethod::Taps => write!(f, "taps"),
+            KernelMethod::Tuned => write!(f, "tuned"),
         }
     }
 }
@@ -48,9 +58,21 @@ impl FromStr for KernelMethod {
         Ok(match s.to_ascii_lowercase().as_str() {
             "oracle" => KernelMethod::Oracle,
             "taps" | "native" => KernelMethod::Taps,
-            other => anyhow::bail!("unknown kernel '{other}' (oracle|taps)"),
+            "tuned" => KernelMethod::Tuned,
+            other => anyhow::bail!("unknown kernel '{other}' (oracle|taps|tuned)"),
         })
     }
+}
+
+/// The tuning-database record a compiled shard plan was matched with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedInfo {
+    /// Table-3-style label of the tuned plan (e.g. `p-j8`, `o-i4`).
+    pub label: String,
+    /// The tuned plan's simulated cycles per point per step.
+    pub sim_cycles_per_point: f64,
+    /// Domain extent the plan was tuned at.
+    pub tuned_n: usize,
 }
 
 /// Cache key: everything a compiled plan depends on.
@@ -69,6 +91,10 @@ pub struct PlanKey {
 pub struct CompiledPlan {
     /// The key this plan was compiled for.
     pub key: PlanKey,
+    /// Tuning-database match, when the plan was compiled through a cache
+    /// holding a [`TuneDb`] and the database had an entry for this
+    /// stencil on the tuned machine.
+    pub tuned: Option<TunedInfo>,
     coeffs: CoeffTensor,
     /// (linear offset, weight) per non-zero tap, dense-offset order.
     taps: Vec<(isize, f64)>,
@@ -94,7 +120,7 @@ impl CompiledPlan {
                 (lin, coeffs.data[oi])
             })
             .collect();
-        CompiledPlan { key, coeffs, taps }
+        CompiledPlan { key, tuned: None, coeffs, taps }
     }
 
     /// Apply one time step to a tile. Tiles too small to contain any
@@ -108,7 +134,11 @@ impl CompiledPlan {
         }
         match self.key.method {
             KernelMethod::Oracle => reference::apply(&self.coeffs, a),
-            KernelMethod::Taps => self.apply_taps(a),
+            // `Tuned` executes the bitwise taps kernel on the host; the
+            // tuned accelerator plan rides along as metadata (see
+            // `KernelMethod::Tuned`), preserving the serve subsystem's
+            // bitwise-exactness guarantee.
+            KernelMethod::Taps | KernelMethod::Tuned => self.apply_taps(a),
         }
     }
 
@@ -162,6 +192,8 @@ pub struct CacheStats {
     pub misses: u64,
     /// Plans evicted to stay within capacity.
     pub evictions: u64,
+    /// Compiled plans that were matched with a tuning-database entry.
+    pub tuned_hits: u64,
     /// Plans currently resident.
     pub len: usize,
 }
@@ -173,31 +205,82 @@ struct CacheEntry {
 
 struct CacheInner {
     map: HashMap<PlanKey, CacheEntry>,
+    /// Per-spec tuning-database resolution, memoized: the DB (immutable
+    /// once handed to the cache) is scanned at most once per stencil.
+    tuned_memo: HashMap<StencilSpec, Option<TunedInfo>>,
     tick: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
+    tuned_hits: u64,
 }
 
 /// Thread-safe LRU cache of compiled plans keyed by (spec, shape, method).
+///
+/// A cache built with [`PlanCache::with_tune_db`] consults the tuning
+/// database **before** compiling a shard kernel: plans compiled for
+/// [`KernelMethod::Tuned`] are matched (by stencil + machine fingerprint)
+/// with the database's best entry and carry it as
+/// [`CompiledPlan::tuned`].
 pub struct PlanCache {
     capacity: usize,
     inner: Mutex<CacheInner>,
+    tune: Option<(Arc<TuneDb>, String)>,
 }
 
 impl PlanCache {
     /// New cache holding at most `capacity.max(1)` plans.
     pub fn new(capacity: usize) -> PlanCache {
+        PlanCache::build(capacity, None)
+    }
+
+    /// New cache that consults `db` (entries for machine `fingerprint`)
+    /// when compiling [`KernelMethod::Tuned`] plans.
+    pub fn with_tune_db(capacity: usize, db: Arc<TuneDb>, fingerprint: String) -> PlanCache {
+        PlanCache::build(capacity, Some((db, fingerprint)))
+    }
+
+    fn build(capacity: usize, tune: Option<(Arc<TuneDb>, String)>) -> PlanCache {
         PlanCache {
             capacity: capacity.max(1),
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
+                tuned_memo: HashMap::new(),
                 tick: 0,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                tuned_hits: 0,
             }),
+            tune,
         }
+    }
+
+    /// The tuned-plan label this cache resolves for a stencil (the same
+    /// lookup plan compilation performs), if its database has one.
+    pub fn tuned_label(&self, spec: StencilSpec) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec).map(|i| i.label)
+    }
+
+    /// Memoized tuning-database resolution for a stencil.
+    fn resolve_tuned(
+        tune: &Option<(Arc<TuneDb>, String)>,
+        memo: &mut HashMap<StencilSpec, Option<TunedInfo>>,
+        spec: StencilSpec,
+    ) -> Option<TunedInfo> {
+        if let Some(cached) = memo.get(&spec) {
+            return cached.clone();
+        }
+        let resolved = tune.as_ref().and_then(|(db, fp)| {
+            db.best_for(spec, fp).map(|e| TunedInfo {
+                label: e.plan.label(spec.dims),
+                sim_cycles_per_point: e.cycles_per_point,
+                tuned_n: e.n,
+            })
+        });
+        memo.insert(spec, resolved.clone());
+        resolved
     }
 
     /// Fetch (or compile and insert) the plan for a key.
@@ -212,7 +295,17 @@ impl PlanCache {
             return Arc::clone(&entry.plan);
         }
         inner.misses += 1;
-        let plan = Arc::new(CompiledPlan::compile(key.clone()));
+        let mut compiled = CompiledPlan::compile(key.clone());
+        // the tuning DB is consulted only on the compile path (and at
+        // most once per stencil thanks to the memo), so the steady-state
+        // hit path never pays the lookup
+        if key.method == KernelMethod::Tuned {
+            if let Some(info) = Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, key.spec) {
+                inner.tuned_hits += 1;
+                compiled.tuned = Some(info);
+            }
+        }
+        let plan = Arc::new(compiled);
         inner.map.insert(key, CacheEntry { plan: Arc::clone(&plan), last_used: tick });
         if inner.map.len() > self.capacity {
             if let Some(oldest) = inner
@@ -235,6 +328,7 @@ impl PlanCache {
             hits: inner.hits,
             misses: inner.misses,
             evictions: inner.evictions,
+            tuned_hits: inner.tuned_hits,
             len: inner.map.len(),
         }
     }
@@ -457,5 +551,63 @@ mod tests {
             .evolve(StencilSpec::box2d(1), &g, 0, 3, KernelMethod::Taps)
             .unwrap();
         assert_eq!(out, g);
+    }
+
+    #[test]
+    fn kernel_method_parses_tuned() {
+        assert_eq!("tuned".parse::<KernelMethod>().unwrap(), KernelMethod::Tuned);
+        assert_eq!(KernelMethod::Tuned.to_string(), "tuned");
+    }
+
+    #[test]
+    fn tuned_kernel_is_bitwise_taps() {
+        let spec = StencilSpec::star2d(2);
+        let shape = vec![13, 13];
+        let a = DenseGrid::verification_input(&shape, 9);
+        let t = CompiledPlan::compile(PlanKey {
+            spec,
+            shape: shape.clone(),
+            method: KernelMethod::Taps,
+        });
+        let u = CompiledPlan::compile(PlanKey { spec, shape, method: KernelMethod::Tuned });
+        assert_eq!(t.apply(&a), u.apply(&a));
+        assert!(u.tuned.is_none()); // compile() alone never consults a DB
+    }
+
+    #[test]
+    fn cache_attaches_tuning_db_entries_to_tuned_plans() {
+        use crate::tune::{tune, Strategy, TuneDb};
+        use crate::sim::SimConfig;
+
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let mut db = TuneDb::new();
+        let out = tune(&cfg, spec, 16, 2, Strategy::CostGuided).unwrap();
+        db.record(&out);
+        let cache = PlanCache::with_tune_db(4, Arc::new(db), cfg.fingerprint());
+
+        let tuned = cache.get(PlanKey {
+            spec,
+            shape: vec![10, 10],
+            method: KernelMethod::Tuned,
+        });
+        let info = tuned.tuned.as_ref().expect("tuned plan carries the DB entry");
+        assert_eq!(info.label, out.best().plan.label(spec.dims));
+        assert_eq!(info.tuned_n, 16);
+        assert_eq!(cache.tuned_label(spec), Some(info.label.clone()));
+        assert_eq!(cache.stats().tuned_hits, 1);
+
+        // plain taps plans never consult the database
+        let taps = cache.get(PlanKey { spec, shape: vec![10, 10], method: KernelMethod::Taps });
+        assert!(taps.tuned.is_none());
+        assert_eq!(cache.stats().tuned_hits, 1);
+        // a spec the DB has no entry for compiles fine, unannotated
+        let other = cache.get(PlanKey {
+            spec: StencilSpec::star3d(1),
+            shape: vec![6, 6, 6],
+            method: KernelMethod::Tuned,
+        });
+        assert!(other.tuned.is_none());
+        assert_eq!(cache.tuned_label(StencilSpec::star3d(1)), None);
     }
 }

@@ -83,6 +83,10 @@ pub struct ShardReport {
     pub waiters: usize,
     /// Max |error| vs the scalar oracle (0.0 expected), if verified.
     pub max_err: Option<f64>,
+    /// Label of the tuning-database plan the kernel LRU matched for this
+    /// request (`tuned` kernel on a server with a tuning DB; `None`
+    /// otherwise, including when the DB has no entry for the stencil).
+    pub tuned_plan: Option<String>,
 }
 
 /// A served response: the evolved grid plus accounting.
@@ -211,6 +215,11 @@ impl ServerInner {
         let waiters = pending.waiters;
         match result {
             Ok((grid, max_err, shards)) => {
+                let tuned_plan = if pending.req.method == KernelMethod::Tuned {
+                    self.evolver.cache().tuned_label(pending.req.spec)
+                } else {
+                    None
+                };
                 let points = pending.req.n.pow(pending.req.spec.dims as u32);
                 {
                     let mut m = self.metrics.lock().unwrap();
@@ -229,6 +238,7 @@ impl ServerInner {
                     shards,
                     waiters,
                     max_err,
+                    tuned_plan,
                 };
                 pending.slot.fulfill(Ok(Arc::new(ShardResponse { grid, report })));
             }
@@ -279,9 +289,30 @@ pub struct StencilServer {
 impl StencilServer {
     /// Build a server (spawns the worker pool immediately).
     pub fn new(cfg: ServeConfig) -> StencilServer {
+        let cache = Arc::new(super::scheduler::PlanCache::new(cfg.plan_cache));
+        StencilServer::with_cache(cfg, cache)
+    }
+
+    /// Build a server whose kernel LRU consults a tuning database before
+    /// compiling shard kernels: `tuned`-kernel requests are matched with
+    /// `db`'s best entry for their stencil on the machine identified by
+    /// `fingerprint` (see [`crate::sim::SimConfig::fingerprint`]), and
+    /// responses report the matched plan in
+    /// [`ShardReport::tuned_plan`].
+    pub fn with_tune_db(
+        cfg: ServeConfig,
+        db: Arc<crate::tune::TuneDb>,
+        fingerprint: String,
+    ) -> StencilServer {
+        let cache =
+            Arc::new(super::scheduler::PlanCache::with_tune_db(cfg.plan_cache, db, fingerprint));
+        StencilServer::with_cache(cfg, cache)
+    }
+
+    fn with_cache(cfg: ServeConfig, cache: Arc<super::scheduler::PlanCache>) -> StencilServer {
         let evolver = ShardedEvolver::with_parts(
             Arc::new(super::pool::WorkerPool::new(cfg.workers)),
-            Arc::new(super::scheduler::PlanCache::new(cfg.plan_cache)),
+            cache,
         );
         StencilServer {
             inner: Arc::new(ServerInner {
@@ -406,6 +437,7 @@ impl StencilServer {
                     ("hits", Json::Num(cs.hits as f64)),
                     ("misses", Json::Num(cs.misses as f64)),
                     ("evictions", Json::Num(cs.evictions as f64)),
+                    ("tuned_hits", Json::Num(cs.tuned_hits as f64)),
                     ("resident", Json::Num(cs.len as f64)),
                 ]),
             ),

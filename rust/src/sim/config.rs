@@ -123,6 +123,48 @@ impl SimConfig {
         self.vlen = vlen;
         self
     }
+
+    /// A stable 16-hex-digit fingerprint over **every** machine parameter
+    /// (FNV-1a over a canonical field dump). Two configs share a
+    /// fingerprint iff they describe the same simulated machine; the
+    /// tuning database uses it as part of its key, so tuned plans are
+    /// never silently reused across machine models.
+    pub fn fingerprint(&self) -> String {
+        let c = &self.cache;
+        let canon = format!(
+            "vlen={} vregs={} mregs={} issue={} opu={} valu={} lsu={} \
+             lat_fmopa={} lat_vfma={} lat_ext={} lat_mov={} mshrs={} split={} \
+             l1={}x{} l2={}x{} line={} lat={}:{}:{} mli={}",
+            self.vlen,
+            self.n_vregs,
+            self.n_mregs,
+            self.issue_width,
+            self.opu_units,
+            self.valu_units,
+            self.lsu_units,
+            self.lat_fmopa,
+            self.lat_vfma,
+            self.lat_ext,
+            self.lat_mov,
+            self.mshrs,
+            self.split_line_penalty,
+            c.l1_bytes,
+            c.l1_assoc,
+            c.l2_bytes,
+            c.l2_assoc,
+            c.line_bytes,
+            c.lat_l1,
+            c.lat_l2,
+            c.lat_mem,
+            c.mem_line_interval,
+        );
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in canon.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{h:016x}")
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +181,17 @@ mod tests {
         assert_eq!(c.cache.l1_bytes, 64 * 1024);
         assert_eq!(c.cache.l2_bytes, 512 * 1024);
         assert_eq!(c.vector_bytes(), 64);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = SimConfig::default().fingerprint();
+        assert_eq!(a.len(), 16);
+        assert_eq!(a, SimConfig::default().fingerprint());
+        assert_ne!(a, SimConfig::default().with_mregs(16).fingerprint());
+        assert_ne!(a, SimConfig::default().with_vlen(4).fingerprint());
+        let mut c = SimConfig::default();
+        c.cache.l2_bytes *= 2;
+        assert_ne!(a, c.fingerprint());
     }
 }

@@ -1,0 +1,399 @@
+//! Analytic cost model: ranks candidate plans *before* any simulation.
+//!
+//! The model is derived from [`SimConfig`] and the cover algebra of §3–§4:
+//! for every plan it counts, per output point, the work each execution
+//! unit has to do — outer products (exact, from
+//! [`LineCover::outer_products`]), vector loads/stores including the
+//! gather expansion of strided column accesses and the per-(line, p)
+//! reload behaviour of unscheduled code, and vector-ALU operations (EXT
+//! assembly, tile↔vector moves, FMAs) — and takes the binding-unit
+//! bottleneck under the machine's issue width:
+//!
+//! ```text
+//! cyc/pt ≈ max(opu/OPU, mem/LSU, valu/VALU, total/issue_width)
+//! ```
+//!
+//! with a DRAM-bandwidth floor (`mem_line_interval`) once the working set
+//! spills L2. Register pressure enters through the effective-unroll
+//! normalization of [`super::space::effective_outer`]: a plan that asks
+//! for more tiles than the machine has matrix registers is costed (and
+//! later run) at its clamped shape.
+//!
+//! This is a *pruning heuristic*, not a cycle predictor: the search
+//! (`super::search`) re-ranks every surviving candidate on the functional
+//! + timing simulator, so model error can waste budget but never corrupt
+//! results.
+
+use super::space::{effective_outer, TunePlan};
+use crate::codegen::Method;
+use crate::scatter::line::{CoeffLine, LineCover};
+use crate::scatter::build_cover;
+use crate::stencil::{CoeffTensor, StencilSpec};
+use crate::sim::SimConfig;
+
+/// Modelled per-point cost of one candidate plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    /// Estimated cycles per output point per time step.
+    pub cycles_per_point: f64,
+    /// Outer products per output point (exact for outer plans, 0 for the
+    /// vector baselines).
+    pub fmopa_per_point: f64,
+    /// Load/store-unit operations per output point (gathers expanded).
+    pub mem_per_point: f64,
+    /// True when the DRAM-bandwidth floor is the binding constraint.
+    pub mem_bound: bool,
+}
+
+/// Per-unit work accumulated per output point.
+#[derive(Debug, Default, Clone, Copy)]
+struct UnitWork {
+    opu: f64,
+    lsu: f64,
+    valu: f64,
+}
+
+impl UnitWork {
+    fn add(&mut self, other: UnitWork, scale: f64) {
+        self.opu += other.opu * scale;
+        self.lsu += other.lsu * scale;
+        self.valu += other.valu * scale;
+    }
+}
+
+/// Estimate the cost of `plan` for `spec` at domain extent `n` on `cfg`.
+pub fn estimate(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    plan: &TunePlan,
+) -> anyhow::Result<CostEstimate> {
+    let nz = spec.nonzero_points() as f64;
+    let v = cfg.vlen as f64;
+    let (work, fmopa_pt, mem_scale) = match plan.method {
+        Method::Outer(p) => {
+            let w = outer_work(cfg, spec, n, p)?;
+            (w, w.opu, 1.0)
+        }
+        Method::AutoVec => {
+            // one mostly-unaligned load + one indexed FMA per tap per
+            // output vector, plus the store
+            let unaligned = 1.0 + cfg.split_line_penalty as f64 * 0.5;
+            let w = UnitWork { opu: 0.0, lsu: (nz * unaligned + 1.0) / v, valu: nz / v };
+            (w, 0.0, 1.0)
+        }
+        Method::Dlt => {
+            // all loads aligned after the dimension-lifted transpose, at
+            // the price of the in/out layout transformation each step
+            let w = UnitWork { opu: 0.0, lsu: (nz + 5.0) / v, valu: (nz + 2.0) / v };
+            (w, 0.0, 1.0)
+        }
+        Method::Tv => {
+            // temporal blocking over 4 steps: slightly more register
+            // shuffling per step, a quarter of the memory traffic
+            let w = UnitWork { opu: 0.0, lsu: (nz * 1.1 + 1.0) / v, valu: nz * 1.3 / v };
+            (w, 0.0, 0.25)
+        }
+        Method::Scalar => {
+            let w = UnitWork { opu: 0.0, lsu: nz + 1.0, valu: nz };
+            (w, 0.0, 1.0)
+        }
+    };
+    let total = work.opu + work.lsu + work.valu;
+    let mut cpp = (work.opu / cfg.opu_units as f64)
+        .max(work.lsu / cfg.lsu_units as f64)
+        .max(work.valu / cfg.valu_units as f64)
+        .max(total / cfg.issue_width as f64);
+    // DRAM-bandwidth floor once A and B no longer fit in L2: ~3 streams
+    // of 8 B/pt (read A, write-allocate + write back B)
+    let ext = n + 2 * spec.order;
+    let grid_bytes = 2 * ext.pow(spec.dims as u32) * 8;
+    let floor = 24.0 / cfg.cache.line_bytes as f64 * cfg.cache.mem_line_interval as f64;
+    let mut mem_bound = false;
+    if grid_bytes > cfg.cache.l2_bytes {
+        let floor = floor * mem_scale;
+        if floor > cpp {
+            cpp = floor;
+            mem_bound = true;
+        }
+    }
+    Ok(CostEstimate {
+        cycles_per_point: cpp,
+        fmopa_per_point: fmopa_pt,
+        mem_per_point: work.lsu,
+        mem_bound,
+    })
+}
+
+/// Cover lines classified by direction (mirrors `codegen::outer`).
+struct Lines<'a> {
+    /// Axis lines along the leading non-unit-stride dimension (2D `i`,
+    /// 3D `i` — the pass-2 lines).
+    d_lead: Vec<&'a CoeffLine>,
+    /// Axis lines feeding the main outer-product pass (2D `i`-lines live
+    /// here too; 3D `j`-lines).
+    d_main: Vec<&'a CoeffLine>,
+    /// Axis lines along the unit-stride dimension (transpose trick).
+    d_unit: Vec<&'a CoeffLine>,
+    /// 2D diagonal lines.
+    diag: Vec<&'a CoeffLine>,
+}
+
+fn classify(spec: StencilSpec, cover: &LineCover) -> Lines<'_> {
+    let mut l = Lines { d_lead: vec![], d_main: vec![], d_unit: vec![], diag: vec![] };
+    for line in &cover.lines {
+        let nzd: Vec<usize> = (0..line.dir.len()).filter(|&d| line.dir[d] != 0).collect();
+        if nzd.len() == 2 {
+            l.diag.push(line);
+        } else if nzd[0] == spec.dims - 1 {
+            l.d_unit.push(line);
+        } else if spec.dims == 3 && nzd[0] == 0 {
+            l.d_lead.push(line);
+        } else {
+            l.d_main.push(line);
+        }
+    }
+    l
+}
+
+/// Expanded coefficient-vector count of a line at block extent `vlen`.
+fn cvs(line: &CoeffLine, vlen: usize) -> f64 {
+    line.coeff_vectors(vlen).len() as f64
+}
+
+/// How many of a line's coefficient vectors have an in-tile `p`
+/// (`0 <= p < vlen`): these resolve via the matrix-register transpose;
+/// the remainder are halo positions served by gather loads.
+fn in_tile(line: &CoeffLine, vlen: usize) -> f64 {
+    (0..vlen as isize).filter(|&p| line.cv_nonzero(p, vlen)).count() as f64
+}
+
+/// Per-point unit work of the outer-product generator.
+fn outer_work(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    params: crate::codegen::OuterParams,
+) -> anyhow::Result<UnitWork> {
+    let p = effective_outer(cfg, spec, n, params)?;
+    let coeffs = CoeffTensor::paper_default(spec);
+    let cover = build_cover(&coeffs, p.option)?;
+    let lines = classify(spec, &cover);
+    let v = cfg.vlen as f64;
+    let vlen = cfg.vlen;
+    let r = spec.order as f64;
+    let sched = p.scheduled;
+    let mut per_point = UnitWork::default();
+
+    if spec.dims == 2 {
+        let g = p.uk as f64;
+        let points = g * v * v; // one unrolled group of g tiles
+        let mut w = UnitWork::default();
+        // ---- i-lines (contiguous A rows → the main fmopa stream) ----
+        let cv_main: f64 = lines.d_main.iter().map(|l| cvs(l, vlen)).sum();
+        let ext_main: f64 =
+            lines.d_main.iter().filter(|l| l.base[1] != 0).map(|l| cvs(l, vlen)).sum();
+        w.opu += cv_main * g;
+        w.valu += ext_main * g;
+        if sched {
+            let lr = lines.d_main.iter().any(|l| l.base[1] < 0) as usize as f64
+                + lines.d_main.iter().any(|l| l.base[1] > 0) as usize as f64;
+            w.lsu += cv_main; // one CV load per (line, p), shared
+            if !lines.d_main.is_empty() {
+                w.lsu += (v + 2.0 * r) * (g + lr); // shared aligned A blocks
+            }
+        } else {
+            // naive: CV + A blocks reloaded per tile
+            let reload: f64 = lines
+                .d_main
+                .iter()
+                .map(|l| cvs(l, vlen) * (2.0 + (l.base[1] != 0) as usize as f64))
+                .sum();
+            w.lsu += reload * g;
+        }
+        // ---- j-lines (strided columns via the transpose trick) ----
+        if !lines.d_unit.is_empty() {
+            let mut ois: Vec<isize> = lines.d_unit.iter().map(|l| l.base[0]).collect();
+            ois.sort_unstable();
+            ois.dedup();
+            // per tile: transpose fill per oi group + per-(line, p) work
+            w.lsu += g * ois.len() as f64 * v;
+            w.valu += g * ois.len() as f64 * v;
+            for l in &lines.d_unit {
+                let c = cvs(l, vlen);
+                let it = in_tile(l, vlen);
+                w.opu += g * c;
+                w.lsu += g * (c + (c - it) * v); // CV loads + halo gathers
+                w.valu += g * it; // column moves
+            }
+        }
+        // ---- diagonal lines (vector-FMA path, per tile row) ----
+        for l in &lines.diag {
+            let taps = l.nonzeros() as f64;
+            w.valu += g * v * (2.0 + taps * 1.9); // row moves + ext + fma
+            w.lsu += g * v * taps * 2.5; // splat + sheared block loads
+        }
+        // ---- stores + tile zeroing ----
+        w.lsu += g * v;
+        w.valu += g;
+        per_point.add(w, 1.0 / points);
+    } else {
+        let (gi, gk) = (p.ui as f64, p.uk as f64);
+        let points = gi * gk * v * v;
+        let mut w = UnitWork::default();
+        // ---- pass 1: j-lines into gi×gk tiles ----
+        let cv_main: f64 = lines.d_main.iter().map(|l| cvs(l, vlen)).sum();
+        w.opu += cv_main * gi * gk;
+        if sched {
+            let lr = lines.d_main.iter().any(|l| l.base[2] < 0) as usize as f64
+                + lines.d_main.iter().any(|l| l.base[2] > 0) as usize as f64;
+            let (lo, hi) = lines
+                .d_main
+                .iter()
+                .fold((0isize, 0isize), |(lo, hi), l| (lo.min(l.base[0]), hi.max(l.base[0])));
+            let planes = gi + (hi - lo) as f64;
+            let mut kos: Vec<isize> = lines.d_main.iter().map(|l| l.base[2]).collect();
+            kos.sort_unstable();
+            kos.dedup();
+            let kos_nz = kos.iter().filter(|&&k| k != 0).count() as f64;
+            w.lsu += cv_main; // CV bank fills
+            if !lines.d_main.is_empty() {
+                w.lsu += (v + 2.0 * r) * planes * (gk + lr); // A blocks
+                w.valu += kos_nz * (v + 2.0 * r) * planes * gk; // EXT assembly
+            }
+        } else {
+            let reload: f64 = lines
+                .d_main
+                .iter()
+                .map(|l| cvs(l, vlen) * (2.0 + (l.base[2] != 0) as usize as f64))
+                .sum();
+            w.lsu += reload * gi * gk;
+            let ext: f64 =
+                lines.d_main.iter().filter(|l| l.base[2] != 0).map(|l| cvs(l, vlen)).sum();
+            w.valu += ext * gi * gk;
+        }
+        // ---- k-lines: per-tile transpose trick ----
+        for l in &lines.d_unit {
+            let c = cvs(l, vlen);
+            let it = in_tile(l, vlen);
+            w.lsu += gi * gk * (v + c + (c - it) * v);
+            w.valu += gi * gk * (v + it);
+            w.opu += gi * gk * c;
+        }
+        // ---- stores + tile zeroing ----
+        w.lsu += gi * gk * v;
+        w.valu += gi * gk;
+        per_point.add(w, 1.0 / points);
+        // ---- pass 2: i-lines, other tile orientation, RMW on B ----
+        if !lines.d_lead.is_empty() {
+            let cv_lead: f64 = lines.d_lead.iter().map(|l| cvs(l, vlen)).sum();
+            let points2 = gk * v * v; // one (i-tile, j, k-group) iteration
+            let mut w2 = UnitWork::default();
+            w2.lsu += 2.0 * gk * v; // tile-row RMW loads + stores
+            w2.lsu += (v + 2.0 * r) * gk; // shared A blocks
+            w2.lsu += cv_lead; // CV loads
+            w2.opu += cv_lead * gk;
+            per_point.add(w2, 1.0 / points2);
+        }
+    }
+    Ok(per_point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::OuterParams;
+    use crate::scatter::CoverOption;
+    use crate::tune::space::enumerate;
+
+    fn est(spec: StencilSpec, n: usize, plan: &TunePlan) -> CostEstimate {
+        estimate(&SimConfig::default(), spec, n, plan).unwrap()
+    }
+
+    #[test]
+    fn estimates_are_finite_and_positive_over_the_space() {
+        let cfg = SimConfig::default();
+        for spec in [
+            StencilSpec::box2d(1),
+            StencilSpec::star2d(3),
+            StencilSpec::diag2d(1),
+            StencilSpec::box3d(1),
+            StencilSpec::star3d(2),
+        ] {
+            for plan in enumerate(&cfg, spec, 64).unwrap() {
+                let e = est(spec, 64, &plan);
+                assert!(
+                    e.cycles_per_point.is_finite() && e.cycles_per_point > 0.0,
+                    "{spec} {plan:?}: {e:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scheduling_and_unrolling_amortize_loads() {
+        let spec = StencilSpec::box2d(1);
+        let p = |uk, scheduled| {
+            TunePlan::outer(OuterParams { option: CoverOption::Parallel, ui: 1, uk, scheduled })
+        };
+        let wide = est(spec, 64, &p(8, true));
+        let narrow = est(spec, 64, &p(1, true));
+        let naive = est(spec, 64, &p(1, false));
+        assert!(wide.cycles_per_point < narrow.cycles_per_point);
+        assert!(narrow.cycles_per_point < naive.cycles_per_point);
+    }
+
+    #[test]
+    fn fmopa_count_matches_cover_algebra() {
+        // box2d parallel: (2r+1)(2r+n) outer products per n×n tile
+        let spec = StencilSpec::box2d(2);
+        let e = est(spec, 64, &TunePlan::paper_default(spec));
+        let n = SimConfig::default().vlen;
+        let want = ((2 * 2 + 1) * (2 * 2 + n)) as f64 / (n * n) as f64;
+        assert!((e.fmopa_per_point - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_star_needs_fewer_outer_products_than_parallel() {
+        let spec = StencilSpec::star2d(3);
+        let o = est(
+            spec,
+            64,
+            &TunePlan::outer(OuterParams {
+                option: CoverOption::Orthogonal,
+                ui: 1,
+                uk: 4,
+                scheduled: true,
+            }),
+        );
+        let p = est(
+            spec,
+            64,
+            &TunePlan::outer(OuterParams {
+                option: CoverOption::Parallel,
+                ui: 1,
+                uk: 4,
+                scheduled: true,
+            }),
+        );
+        assert!(o.fmopa_per_point < p.fmopa_per_point);
+    }
+
+    #[test]
+    fn outer_beats_the_autovec_estimate() {
+        let spec = StencilSpec::box2d(1);
+        let ours = est(spec, 64, &TunePlan::paper_default(spec));
+        let base = est(spec, 64, &TunePlan { method: Method::AutoVec });
+        assert!(ours.cycles_per_point < base.cycles_per_point);
+    }
+
+    #[test]
+    fn large_grids_hit_the_bandwidth_floor() {
+        let spec = StencilSpec::box2d(1);
+        let small = est(spec, 64, &TunePlan::paper_default(spec));
+        let large = est(spec, 2048, &TunePlan::paper_default(spec));
+        assert!(!small.mem_bound);
+        assert!(large.mem_bound);
+        assert!(large.cycles_per_point >= small.cycles_per_point);
+    }
+}

@@ -1,0 +1,303 @@
+//! The versioned JSON tuning database.
+//!
+//! Entries are keyed by `(StencilSpec, domain extent n, SimConfig
+//! fingerprint)`; recording a new outcome for an existing key replaces
+//! the old entry. See [`crate::tune`] module docs for the on-disk schema.
+
+use super::search::TuneOutcome;
+use super::space::TunePlan;
+use crate::stencil::{StencilKind, StencilSpec};
+use crate::util::json::{obj, Json};
+use std::path::Path;
+
+/// Schema version written to (and required from) every database file.
+pub const TUNE_DB_VERSION: u64 = 1;
+
+/// One tuned result.
+#[derive(Debug, Clone)]
+pub struct TuneEntry {
+    /// Stencil the plan was tuned for.
+    pub spec: StencilSpec,
+    /// Domain extent the plan was tuned at.
+    pub n: usize,
+    /// [`crate::sim::SimConfig::fingerprint`] of the machine measured on.
+    pub fingerprint: String,
+    /// The winning plan.
+    pub plan: TunePlan,
+    /// Measured simulated cycles of the winning plan.
+    pub cycles: u64,
+    /// Measured cycles per point per step of the winning plan.
+    pub cycles_per_point: f64,
+    /// Measured cycles per point per step of the paper-default plan.
+    pub default_cycles_per_point: f64,
+    /// `default_cycles_per_point / cycles_per_point` (≥ 1).
+    pub speedup_vs_default: f64,
+    /// Candidates in the full search space.
+    pub searched: usize,
+    /// Candidates measured (all oracle-verified).
+    pub measured: usize,
+}
+
+impl TuneEntry {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "spec",
+                obj(vec![
+                    ("dims", Json::Num(self.spec.dims as f64)),
+                    ("order", Json::Num(self.spec.order as f64)),
+                    ("kind", Json::Str(self.spec.kind.to_string())),
+                ]),
+            ),
+            ("n", Json::Num(self.n as f64)),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("plan", self.plan.to_json()),
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("cycles_per_point", Json::Num(self.cycles_per_point)),
+            ("default_cycles_per_point", Json::Num(self.default_cycles_per_point)),
+            ("speedup_vs_default", Json::Num(self.speedup_vs_default)),
+            ("searched", Json::Num(self.searched as f64)),
+            ("measured", Json::Num(self.measured as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<TuneEntry> {
+        let spec_v = v.get("spec").ok_or_else(|| anyhow::anyhow!("entry missing 'spec'"))?;
+        let dims = spec_v
+            .get("dims")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("spec missing 'dims'"))?;
+        let order = spec_v
+            .get("order")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("spec missing 'order'"))?;
+        let kind = match spec_v.get("kind").and_then(Json::as_str) {
+            Some("box") => StencilKind::Box,
+            Some("star") => StencilKind::Star,
+            Some("diag") => StencilKind::Diagonal,
+            other => anyhow::bail!("unknown stencil kind {other:?}"),
+        };
+        let spec = StencilSpec::new(dims, order, kind)?;
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("entry missing numeric '{k}'"))
+        };
+        Ok(TuneEntry {
+            spec,
+            n: field("n")? as usize,
+            fingerprint: v
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry missing 'fingerprint'"))?
+                .to_string(),
+            plan: TunePlan::from_json(
+                v.get("plan").ok_or_else(|| anyhow::anyhow!("entry missing 'plan'"))?,
+            )?,
+            cycles: field("cycles")? as u64,
+            cycles_per_point: field("cycles_per_point")?,
+            default_cycles_per_point: field("default_cycles_per_point")?,
+            speedup_vs_default: field("speedup_vs_default")?,
+            searched: field("searched")? as usize,
+            measured: field("measured")? as usize,
+        })
+    }
+}
+
+/// The database: a flat, versioned set of [`TuneEntry`]s.
+#[derive(Debug, Clone, Default)]
+pub struct TuneDb {
+    entries: Vec<TuneEntry>,
+}
+
+impl TuneDb {
+    /// An empty database.
+    pub fn new() -> TuneDb {
+        TuneDb::default()
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the database has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[TuneEntry] {
+        &self.entries
+    }
+
+    /// Record a tuning outcome (insert or replace by key).
+    pub fn record(&mut self, outcome: &TuneOutcome) -> &TuneEntry {
+        let best = outcome.best();
+        let entry = TuneEntry {
+            spec: outcome.spec,
+            n: outcome.n,
+            fingerprint: outcome.fingerprint.clone(),
+            plan: best.plan,
+            cycles: best.cycles,
+            cycles_per_point: best.cycles_per_point,
+            default_cycles_per_point: outcome.paper_default().cycles_per_point,
+            speedup_vs_default: outcome.speedup_vs_default(),
+            searched: outcome.space_size,
+            measured: outcome.measurements.len(),
+        };
+        let pos = self.entries.iter().position(|e| {
+            e.spec == entry.spec && e.n == entry.n && e.fingerprint == entry.fingerprint
+        });
+        match pos {
+            Some(i) => {
+                self.entries[i] = entry;
+                &self.entries[i]
+            }
+            None => {
+                self.entries.push(entry);
+                self.entries.last().unwrap()
+            }
+        }
+    }
+
+    /// Exact-key lookup.
+    pub fn lookup(&self, spec: StencilSpec, n: usize, fingerprint: &str) -> Option<&TuneEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.spec == spec && e.n == n && e.fingerprint == fingerprint)
+    }
+
+    /// Best entry for a (spec, machine) pair regardless of tuned size:
+    /// the entry tuned at the **largest** `n` (the most representative
+    /// working set). This is what the serving layer consults, since shard
+    /// tile shapes rarely match a tuned grid size exactly.
+    pub fn best_for(&self, spec: StencilSpec, fingerprint: &str) -> Option<&TuneEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.spec == spec && e.fingerprint == fingerprint)
+            .max_by_key(|e| e.n)
+    }
+
+    /// Serialize the whole database.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::Num(TUNE_DB_VERSION as f64)),
+            ("entries", Json::Arr(self.entries.iter().map(TuneEntry::to_json).collect())),
+        ])
+    }
+
+    /// Deserialize, enforcing the schema version.
+    pub fn from_json(v: &Json) -> anyhow::Result<TuneDb> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("tuning DB missing 'version'"))?;
+        anyhow::ensure!(
+            version as u64 == TUNE_DB_VERSION,
+            "tuning DB version {version} unsupported (expected {TUNE_DB_VERSION}); \
+             re-run `stencil-matrix tune` to regenerate it"
+        );
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tuning DB missing 'entries'"))?
+            .iter()
+            .map(TuneEntry::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TuneDb { entries })
+    }
+
+    /// Load a database from disk.
+    pub fn load(path: &Path) -> anyhow::Result<TuneDb> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading tuning DB {}: {e}", path.display()))?;
+        TuneDb::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load a database, or start an empty one when the file does not
+    /// exist yet (a corrupt or version-mismatched file is still an error).
+    pub fn load_or_new(path: &Path) -> anyhow::Result<TuneDb> {
+        if path.exists() {
+            TuneDb::load(path)
+        } else {
+            Ok(TuneDb::new())
+        }
+    }
+
+    /// Write the database to disk (creating parent directories).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())
+            .map_err(|e| anyhow::anyhow!("writing tuning DB {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::search::{tune, Strategy};
+    use crate::sim::SimConfig;
+
+    fn outcome() -> TuneOutcome {
+        tune(&SimConfig::default(), StencilSpec::box2d(1), 16, 3, Strategy::CostGuided).unwrap()
+    }
+
+    #[test]
+    fn record_lookup_and_replace() {
+        let mut db = TuneDb::new();
+        let out = outcome();
+        db.record(&out);
+        assert_eq!(db.len(), 1);
+        let e = db.lookup(out.spec, out.n, &out.fingerprint).unwrap();
+        assert_eq!(e.plan, out.best().plan);
+        assert!(e.speedup_vs_default >= 1.0);
+        // same key replaces rather than duplicates
+        db.record(&out);
+        assert_eq!(db.len(), 1);
+        assert!(db.lookup(out.spec, out.n, "other-machine").is_none());
+        assert!(db.lookup(StencilSpec::star3d(1), out.n, &out.fingerprint).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = TuneDb::new();
+        db.record(&outcome());
+        let text = db.to_json().to_string_compact();
+        let back = TuneDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        let (a, b) = (&db.entries()[0], &back.entries()[0]);
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let bad = r#"{"version":99,"entries":[]}"#;
+        let err = TuneDb::from_json(&Json::parse(bad).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        assert!(TuneDb::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn best_for_prefers_the_largest_tuned_size() {
+        let cfg = SimConfig::default();
+        let mut db = TuneDb::new();
+        let spec = StencilSpec::box2d(1);
+        let small = tune(&cfg, spec, 16, 2, Strategy::CostGuided).unwrap();
+        let large = tune(&cfg, spec, 32, 2, Strategy::CostGuided).unwrap();
+        db.record(&small);
+        db.record(&large);
+        assert_eq!(db.len(), 2);
+        let fp = cfg.fingerprint();
+        assert_eq!(db.best_for(spec, &fp).unwrap().n, 32);
+        assert!(db.best_for(StencilSpec::star3d(1), &fp).is_none());
+        assert!(db.best_for(spec, "elsewhere").is_none());
+    }
+}

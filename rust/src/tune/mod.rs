@@ -1,0 +1,80 @@
+//! Sim-in-the-loop autotuning: search the paper's optimization space,
+//! verify every candidate against the scalar oracle, and persist the
+//! winners for the rest of the stack to consume.
+//!
+//! The paper's speedups come from *choices* — which coefficient-line
+//! cover (§4.1), which unroll factors (§4.2), whether to schedule outer
+//! products (§4.3), which data layout — and the best choice depends on
+//! the stencil, the grid size, and the machine. This subsystem closes the
+//! loop:
+//!
+//! - [`space`] — the [`space::TunePlan`] search space (cover option ×
+//!   unroll × scheduling × layout × method), normalized to what the
+//!   generator's register-pressure clamping actually runs;
+//! - [`cost`] — an analytic per-point cost model derived from
+//!   [`crate::sim::SimConfig`] (outer-product counts from the cover
+//!   algebra, load/gather traffic, EXT/move pressure, a DRAM-bandwidth
+//!   floor) used to prune the space;
+//! - [`search`] — measures every surviving candidate on the functional +
+//!   timing simulator via [`crate::codegen::run_method`]; a candidate
+//!   whose generated program does not reproduce the scalar oracle aborts
+//!   the search. The paper-default plan is always measured, so the tuned
+//!   winner is **never worse than the paper default**;
+//! - [`db`] — the versioned JSON tuning database;
+//! - [`report`] — markdown/JSON tuning reports.
+//!
+//! Consumers: the `tune` CLI subcommand drives searches and maintains the
+//! database; `serve`'s plan cache consults the database when compiling
+//! shard kernels for the `tuned` kernel method; `coordinator::sweep` can
+//! run a `tuned` method cell resolved from a database; the bench
+//! harness's tuned-vs-default ablation quantifies what tuning buys.
+//!
+//! # Tuning-database schema (version 1)
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {
+//!       "spec": {"dims": 2, "order": 1, "kind": "star"},
+//!       "n": 64,
+//!       "fingerprint": "9f86d081884c7d65",
+//!       "plan": {"method": "outer", "option": "parallel",
+//!                "ui": 1, "uk": 8, "scheduled": true},
+//!       "cycles": 9216,
+//!       "cycles_per_point": 2.25,
+//!       "default_cycles_per_point": 2.25,
+//!       "speedup_vs_default": 1.0,
+//!       "searched": 18,
+//!       "measured": 12
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! - `spec.kind` is one of `"box"`, `"star"`, `"diag"`.
+//! - `plan.method` is one of `"outer"`, `"autovec"`, `"dlt"`, `"tv"`,
+//!   `"scalar"`; the `option`/`ui`/`uk`/`scheduled` fields are present
+//!   only for `"outer"` (`option` is a [`crate::scatter::CoverOption`]
+//!   name: `parallel`, `orthogonal`, `hybrid`, `minimalaxis`,
+//!   `diagonals`).
+//! - `fingerprint` is [`crate::sim::SimConfig::fingerprint`]: a 16-hex-
+//!   digit FNV-1a hash over **every** machine parameter (vector length,
+//!   register counts, issue width, unit counts, latencies, MSHRs, split-
+//!   line penalty, and the full cache hierarchy). Entries only apply to
+//!   the machine they were measured on; a changed config yields a new
+//!   fingerprint and tuning starts fresh.
+//! - Database keys are `(spec, n, fingerprint)`; recording an outcome for
+//!   an existing key replaces the entry. Loading a file whose `version`
+//!   differs from [`db::TUNE_DB_VERSION`] is an error (re-run `tune`).
+
+pub mod cost;
+pub mod db;
+pub mod report;
+pub mod search;
+pub mod space;
+
+pub use cost::{estimate, CostEstimate};
+pub use db::{TuneDb, TuneEntry, TUNE_DB_VERSION};
+pub use search::{tune, Measurement, Strategy, TuneOutcome};
+pub use space::{enumerate, TunePlan};

@@ -1,0 +1,109 @@
+//! Human- and machine-readable tuning reports (markdown + JSON).
+
+use super::search::TuneOutcome;
+use crate::util::bench::Table;
+use crate::util::json::{obj, Json};
+
+/// Render a tuning outcome as a markdown report.
+///
+/// Rows are sorted best-first; the winner is marked `*` and the paper
+/// default `(default)`, mirroring the bench harness's table style.
+pub fn to_markdown(out: &TuneOutcome) -> String {
+    let mut table =
+        Table::new(&["rank", "plan", "est cyc/pt", "cyc/pt", "cycles", "vs default", "verified"]);
+    let default_cpp = out.paper_default().cycles_per_point;
+    for (rank, &i) in out.ranking().iter().enumerate() {
+        let m = &out.measurements[i];
+        let mut label = m.plan.label(out.spec.dims);
+        if i == out.best_idx {
+            label.push('*');
+        }
+        if i == out.default_idx {
+            label.push_str(" (default)");
+        }
+        table.row(vec![
+            (rank + 1).to_string(),
+            label,
+            format!("{:.3}", m.est.cycles_per_point),
+            format!("{:.3}", m.cycles_per_point),
+            m.cycles.to_string(),
+            format!("{:.2}x", default_cpp / m.cycles_per_point),
+            "yes".to_string(), // unverified candidates abort the search
+        ]);
+    }
+    format!(
+        "# tune — {} N={} ({} strategy)\n\n\
+         machine fingerprint `{}`; space {} plan(s), {} pruned by the cost \
+         model, {} measured (all oracle-verified).\n\n{}\n\
+         best: **{}** at {:.3} cyc/pt — {:.2}x vs the paper default\n",
+        out.spec,
+        out.n,
+        out.strategy,
+        out.fingerprint,
+        out.space_size,
+        out.pruned,
+        out.measurements.len(),
+        table.to_markdown(),
+        out.best().plan.label(out.spec.dims),
+        out.best().cycles_per_point,
+        out.speedup_vs_default(),
+    )
+}
+
+/// Render a tuning outcome as JSON (every measurement included).
+pub fn to_json(out: &TuneOutcome) -> Json {
+    let measurements: Vec<Json> = out
+        .measurements
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            obj(vec![
+                ("plan", m.plan.to_json()),
+                ("label", Json::Str(m.plan.label(out.spec.dims))),
+                ("est_cycles_per_point", Json::Num(m.est.cycles_per_point)),
+                ("cycles", Json::Num(m.cycles as f64)),
+                ("cycles_per_point", Json::Num(m.cycles_per_point)),
+                ("max_err", Json::Num(m.max_err)),
+                ("best", Json::Bool(i == out.best_idx)),
+                ("default", Json::Bool(i == out.default_idx)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("stencil", Json::Str(out.spec.name())),
+        ("n", Json::Num(out.n as f64)),
+        ("fingerprint", Json::Str(out.fingerprint.clone())),
+        ("strategy", Json::Str(out.strategy.to_string())),
+        ("space_size", Json::Num(out.space_size as f64)),
+        ("pruned", Json::Num(out.pruned as f64)),
+        ("speedup_vs_default", Json::Num(out.speedup_vs_default())),
+        ("measurements", Json::Arr(measurements)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::search::{tune, Strategy};
+    use crate::stencil::StencilSpec;
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn report_renders_and_marks_best() {
+        let out =
+            tune(&SimConfig::default(), StencilSpec::box2d(1), 16, 3, Strategy::CostGuided)
+                .unwrap();
+        let md = to_markdown(&out);
+        assert!(md.contains("(default)"), "{md}");
+        assert!(md.contains('*'));
+        assert!(md.contains("vs the paper default"));
+        let j = to_json(&out);
+        assert_eq!(j.get("stencil").and_then(Json::as_str), Some("2d9p-box-r1"));
+        let ms = j.get("measurements").and_then(Json::as_arr).unwrap();
+        assert_eq!(ms.len(), out.measurements.len());
+        assert_eq!(ms.iter().filter(|m| m.get("best").and_then(Json::as_bool) == Some(true)).count(), 1);
+        // JSON output parses back
+        let rt = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(rt.get("n").and_then(Json::as_usize), Some(16));
+    }
+}

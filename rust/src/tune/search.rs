@@ -1,0 +1,262 @@
+//! Sim-in-the-loop search: prune with the cost model, then measure every
+//! surviving candidate on the functional + timing simulator.
+//!
+//! Every measurement goes through [`crate::codegen::run_method`], which
+//! executes the generated program *functionally* and compares the full
+//! output grid against the scalar oracle — a candidate that does not
+//! reproduce the oracle aborts the search instead of entering the
+//! ranking, so the tuning database can only ever contain plans whose
+//! generated code is correct.
+//!
+//! The paper-default plan ([`crate::codegen::OuterParams::paper_best`])
+//! is force-included in every search, which gives the headline guarantee:
+//! the tuned plan is **never worse than the paper default** on the
+//! simulator, because the ranking minimum is taken over a set containing
+//! it.
+
+use super::cost::{estimate, CostEstimate};
+use super::space::{enumerate, TunePlan};
+use crate::codegen::run_method;
+use crate::stencil::StencilSpec;
+use crate::sim::SimConfig;
+use std::fmt;
+use std::str::FromStr;
+
+/// How aggressively to prune the space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Measure every candidate in the space (budget ignored).
+    Exhaustive,
+    /// Measure the `budget` candidates the cost model ranks cheapest
+    /// (plus the paper default).
+    CostGuided,
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Strategy::Exhaustive => write!(f, "exhaustive"),
+            Strategy::CostGuided => write!(f, "guided"),
+        }
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Strategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "exhaustive" | "full" | "all" => Strategy::Exhaustive,
+            "guided" | "cost" | "greedy" => Strategy::CostGuided,
+            other => anyhow::bail!("unknown strategy '{other}' (guided|exhaustive)"),
+        })
+    }
+}
+
+/// One measured (and oracle-verified) candidate.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// The plan that ran.
+    pub plan: TunePlan,
+    /// The cost model's prediction for it.
+    pub est: CostEstimate,
+    /// Measured simulated cycles (one pass, warm caches).
+    pub cycles: u64,
+    /// Measured cycles per output point per time step.
+    pub cycles_per_point: f64,
+    /// Max |error| vs. the scalar oracle (`< 1e-9` by construction —
+    /// unverified candidates abort the search).
+    pub max_err: f64,
+}
+
+/// The result of one tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// Stencil tuned.
+    pub spec: StencilSpec,
+    /// Domain extent tuned at.
+    pub n: usize,
+    /// Fingerprint of the machine config the measurements ran on.
+    pub fingerprint: String,
+    /// Strategy used.
+    pub strategy: Strategy,
+    /// Size of the full (deduplicated) space.
+    pub space_size: usize,
+    /// Candidates the cost model pruned away.
+    pub pruned: usize,
+    /// All measured candidates, in measurement order.
+    pub measurements: Vec<Measurement>,
+    /// Index of the winning measurement (minimum cycles per point).
+    pub best_idx: usize,
+    /// Index of the paper-default measurement.
+    pub default_idx: usize,
+}
+
+impl TuneOutcome {
+    /// The winning measurement.
+    pub fn best(&self) -> &Measurement {
+        &self.measurements[self.best_idx]
+    }
+
+    /// The paper-default measurement.
+    pub fn paper_default(&self) -> &Measurement {
+        &self.measurements[self.default_idx]
+    }
+
+    /// Speedup of the tuned plan over the paper default (≥ 1 by
+    /// construction).
+    pub fn speedup_vs_default(&self) -> f64 {
+        self.paper_default().cycles_per_point / self.best().cycles_per_point
+    }
+
+    /// Measurement indices sorted best-first.
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.measurements.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.measurements[a]
+                .cycles_per_point
+                .total_cmp(&self.measurements[b].cycles_per_point)
+        });
+        idx
+    }
+}
+
+/// Tune `spec` at domain extent `n` on machine `cfg`.
+///
+/// `budget` bounds the number of simulator runs under
+/// [`Strategy::CostGuided`] (the paper-default plan is always measured,
+/// even if the model would prune it).
+pub fn tune(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    budget: usize,
+    strategy: Strategy,
+) -> anyhow::Result<TuneOutcome> {
+    anyhow::ensure!(
+        n >= cfg.vlen && n % cfg.vlen == 0,
+        "domain extent {n} must be a positive multiple of the vector length {}",
+        cfg.vlen
+    );
+    anyhow::ensure!(
+        spec.order <= cfg.vlen,
+        "stencil order {} exceeds the vector length {}",
+        spec.order,
+        cfg.vlen
+    );
+    let space = enumerate(cfg, spec, n)?;
+    let space_size = space.len();
+    let default_plan = {
+        let p = crate::codegen::OuterParams::paper_best(spec);
+        TunePlan::outer(super::space::effective_outer(cfg, spec, n, p)?)
+    };
+
+    // rank the space by modelled cost
+    let mut ranked: Vec<(TunePlan, CostEstimate)> = space
+        .into_iter()
+        .map(|plan| estimate(cfg, spec, n, &plan).map(|e| (plan, e)))
+        .collect::<anyhow::Result<_>>()?;
+    ranked.sort_by(|a, b| a.1.cycles_per_point.total_cmp(&b.1.cycles_per_point));
+
+    let keep = match strategy {
+        Strategy::Exhaustive => ranked.len(),
+        Strategy::CostGuided => budget.max(1).min(ranked.len()),
+    };
+    let mut survivors: Vec<(TunePlan, CostEstimate)> = ranked[..keep].to_vec();
+    if !survivors.iter().any(|(p, _)| *p == default_plan) {
+        // force the baseline in, displacing the model's worst survivor
+        let est = ranked
+            .iter()
+            .find(|(p, _)| *p == default_plan)
+            .map(|(_, e)| *e)
+            .expect("enumerate always includes the paper default");
+        if survivors.len() == keep && keep == budget.max(1) && !survivors.is_empty() {
+            survivors.pop();
+        }
+        survivors.push((default_plan, est));
+    }
+    let pruned = space_size - survivors.len();
+
+    // ---- sim-in-the-loop: measure + verify every survivor ----
+    let mut measurements = Vec::with_capacity(survivors.len());
+    for (plan, est) in survivors {
+        let res = run_method(cfg, spec, n, plan.to_method(), true)?;
+        anyhow::ensure!(
+            res.verified(),
+            "candidate {} failed oracle verification (max_err {:.3e}) — refusing to rank it",
+            plan.label(spec.dims),
+            res.max_err
+        );
+        measurements.push(Measurement {
+            plan,
+            est,
+            cycles: res.stats.cycles,
+            cycles_per_point: res.cycles_per_point(),
+            max_err: res.max_err,
+        });
+    }
+    // first minimum wins ties, consistent with the stable sort in
+    // `TuneOutcome::ranking`
+    let best_idx = (1..measurements.len()).fold(0usize, |best, i| {
+        if measurements[i].cycles_per_point < measurements[best].cycles_per_point {
+            i
+        } else {
+            best
+        }
+    });
+    let default_idx = measurements
+        .iter()
+        .position(|m| m.plan == default_plan)
+        .expect("paper default is always measured");
+    Ok(TuneOutcome {
+        spec,
+        n,
+        fingerprint: cfg.fingerprint(),
+        strategy,
+        space_size,
+        pruned,
+        measurements,
+        best_idx,
+        default_idx,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!("guided".parse::<Strategy>().unwrap(), Strategy::CostGuided);
+        assert_eq!("FULL".parse::<Strategy>().unwrap(), Strategy::Exhaustive);
+        assert!("genetic".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn guided_tune_respects_budget_and_never_loses_to_default() {
+        let cfg = SimConfig::default();
+        let out = tune(&cfg, StencilSpec::box2d(1), 16, 4, Strategy::CostGuided).unwrap();
+        assert!(out.measurements.len() <= 4);
+        assert!(out.best().cycles_per_point <= out.paper_default().cycles_per_point);
+        assert!(out.speedup_vs_default() >= 1.0);
+        assert!(out.measurements.iter().all(|m| m.max_err < 1e-9));
+        assert_eq!(out.pruned, out.space_size - out.measurements.len());
+    }
+
+    #[test]
+    fn exhaustive_tune_measures_the_whole_space() {
+        let cfg = SimConfig::default();
+        let out = tune(&cfg, StencilSpec::diag2d(1), 16, 1, Strategy::Exhaustive).unwrap();
+        assert_eq!(out.measurements.len(), out.space_size);
+        assert_eq!(out.pruned, 0);
+        let ranking = out.ranking();
+        assert_eq!(ranking[0], out.best_idx);
+    }
+
+    #[test]
+    fn rejects_bad_domain_sizes() {
+        let cfg = SimConfig::default();
+        assert!(tune(&cfg, StencilSpec::box2d(1), 12, 4, Strategy::CostGuided).is_err());
+        assert!(tune(&cfg, StencilSpec::box2d(1), 0, 4, Strategy::CostGuided).is_err());
+    }
+}

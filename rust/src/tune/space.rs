@@ -1,0 +1,306 @@
+//! The tuning search space: every knob the paper exposes, as data.
+//!
+//! A [`TunePlan`] names one complete configuration of the stack:
+//!
+//! - **method** — the paper's outer-product algorithm or one of the
+//!   baselines (`autovec`, `dlt`, `tv`); the DLT baseline doubles as the
+//!   *layout* axis of the space (dimension-lifted transposed storage vs.
+//!   the standard padded row-major layout every other method uses);
+//! - for the outer method: **cover option** (§4.1), **unroll factors**
+//!   `ui × uk` (§4.2) and **outer-product scheduling** on/off (§4.3).
+//!
+//! [`enumerate`] expands the full space for a stencil on a machine,
+//! normalizing unroll factors to what the generator's register-pressure
+//! clamping would actually run (`n_mregs`, minus a scratch tile when the
+//! cover needs the §4.1 transpose trick) and deduplicating configurations
+//! that clamp to the same effective plan — so every candidate in the
+//! space is *distinct* work for the simulator.
+
+use crate::codegen::{Method, OuterParams};
+use crate::scatter::{build_cover, CoverOption};
+use crate::stencil::{CoeffTensor, StencilSpec};
+use crate::sim::SimConfig;
+use crate::util::json::{obj, Json};
+
+/// One point of the search space (a thin, serializable wrapper around
+/// [`Method`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunePlan {
+    /// The execution method this plan selects.
+    pub method: Method,
+}
+
+impl TunePlan {
+    /// Plan for the paper's outer method with explicit parameters.
+    pub fn outer(params: OuterParams) -> TunePlan {
+        TunePlan { method: Method::Outer(params) }
+    }
+
+    /// The paper's default plan for a spec (the tuning baseline).
+    pub fn paper_default(spec: StencilSpec) -> TunePlan {
+        TunePlan::outer(OuterParams::paper_best(spec))
+    }
+
+    /// The wrapped method.
+    pub fn to_method(&self) -> Method {
+        self.method
+    }
+
+    /// Short Table-3-style label: `p-j8`, `o-i4`, `autovec`, ...
+    pub fn label(&self, dims: usize) -> String {
+        match self.method {
+            Method::Outer(p) => {
+                let mut l = p.label(dims);
+                if !p.scheduled {
+                    l.push_str("-ns");
+                }
+                l
+            }
+            Method::AutoVec => "autovec".to_string(),
+            Method::Dlt => "dlt".to_string(),
+            Method::Tv => "tv".to_string(),
+            Method::Scalar => "scalar".to_string(),
+        }
+    }
+
+    /// Serialize for the tuning database.
+    pub fn to_json(&self) -> Json {
+        match self.method {
+            Method::Outer(p) => obj(vec![
+                ("method", Json::Str("outer".into())),
+                ("option", Json::Str(p.option.to_string())),
+                ("ui", Json::Num(p.ui as f64)),
+                ("uk", Json::Num(p.uk as f64)),
+                ("scheduled", Json::Bool(p.scheduled)),
+            ]),
+            Method::AutoVec => obj(vec![("method", Json::Str("autovec".into()))]),
+            Method::Dlt => obj(vec![("method", Json::Str("dlt".into()))]),
+            Method::Tv => obj(vec![("method", Json::Str("tv".into()))]),
+            Method::Scalar => obj(vec![("method", Json::Str("scalar".into()))]),
+        }
+    }
+
+    /// Deserialize from the tuning database.
+    pub fn from_json(v: &Json) -> anyhow::Result<TunePlan> {
+        let name = v
+            .get("method")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("plan is missing the 'method' field"))?;
+        let method = match name {
+            "outer" => {
+                let option: CoverOption = v
+                    .get("option")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("outer plan is missing 'option'"))?
+                    .parse()?;
+                let ui = v.get("ui").and_then(Json::as_usize).unwrap_or(1).max(1);
+                let uk = v.get("uk").and_then(Json::as_usize).unwrap_or(1).max(1);
+                let scheduled = v.get("scheduled").and_then(Json::as_bool).unwrap_or(true);
+                Method::Outer(OuterParams { option, ui, uk, scheduled })
+            }
+            "autovec" => Method::AutoVec,
+            "dlt" => Method::Dlt,
+            "tv" => Method::Tv,
+            "scalar" => Method::Scalar,
+            other => anyhow::bail!("unknown plan method '{other}'"),
+        };
+        Ok(TunePlan { method })
+    }
+}
+
+/// The effective outer parameters after the generator's register-pressure
+/// clamping (see `codegen::outer::gen2d`/`gen3d`): unroll factors are
+/// limited by `n_mregs`, minus one scratch tile when the cover contains
+/// unit-stride-dimension lines (the §4.1 transpose trick), and by the
+/// number of tiles the domain actually has. Unscheduled plans share
+/// nothing across tiles, so their unroll factors normalize to 1.
+pub fn effective_outer(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    p: OuterParams,
+) -> anyhow::Result<OuterParams> {
+    let coeffs = CoeffTensor::paper_default(spec);
+    let cover = build_cover(&coeffs, p.option)?;
+    // unit-stride-dim axis lines need the scratch matrix register for the
+    // transpose trick (2D diagonal lines use vector scratch instead)
+    let last = spec.dims - 1;
+    let needs_scratch = cover
+        .lines
+        .iter()
+        .any(|l| l.dir.iter().filter(|&&d| d != 0).count() == 1 && l.dir[last] != 0);
+    anyhow::ensure!(
+        cfg.n_mregs > needs_scratch as usize,
+        "machine has {} matrix register(s), but the {:?} cover needs at least {} \
+         (one output tile{})",
+        cfg.n_mregs,
+        p.option,
+        1 + needs_scratch as usize,
+        if needs_scratch { " plus the transpose scratch tile" } else { "" },
+    );
+    let max_tiles = if needs_scratch { cfg.n_mregs - 1 } else { cfg.n_mregs };
+    let tiles_unit = (n / cfg.vlen).max(1);
+    if !p.scheduled {
+        return Ok(OuterParams { option: p.option, ui: 1, uk: 1, scheduled: false });
+    }
+    if spec.dims == 2 {
+        let uk = p.uk.clamp(1, max_tiles).min(tiles_unit);
+        Ok(OuterParams { option: p.option, ui: 1, uk, scheduled: true })
+    } else {
+        let ui = p.ui.clamp(1, max_tiles).min(n);
+        let uk = p.uk.clamp(1, max_tiles / ui).min(tiles_unit);
+        Ok(OuterParams { option: p.option, ui, uk, scheduled: true })
+    }
+}
+
+/// Expand the full (deduplicated) search space for `spec` at domain size
+/// `n` on machine `cfg`. The paper-default plan is always a member.
+pub fn enumerate(cfg: &SimConfig, spec: StencilSpec, n: usize) -> anyhow::Result<Vec<TunePlan>> {
+    let mut out: Vec<TunePlan> = Vec::new();
+    let push = |plan: TunePlan, out: &mut Vec<TunePlan>| {
+        if !out.contains(&plan) {
+            out.push(plan);
+        }
+    };
+    for option in CoverOption::applicable(spec) {
+        // an option whose cover the machine cannot host (not enough
+        // matrix registers for a tile + scratch) is skipped, not fatal
+        let probe = OuterParams { option, ui: 1, uk: 1, scheduled: true };
+        if effective_outer(cfg, spec, n, probe).is_err() {
+            continue;
+        }
+        // scheduled plans: the unroll grid, normalized + deduplicated
+        let unrolls: Vec<(usize, usize)> = if spec.dims == 2 {
+            [1usize, 2, 4, 8].iter().map(|&uk| (1, uk)).collect()
+        } else {
+            let mut v = Vec::new();
+            for ui in [1usize, 2, 4, 8] {
+                for uk in [1usize, 2, 4] {
+                    if ui * uk <= cfg.n_mregs {
+                        v.push((ui, uk));
+                    }
+                }
+            }
+            v
+        };
+        for (ui, uk) in unrolls {
+            let p = OuterParams { option, ui, uk, scheduled: true };
+            push(TunePlan::outer(effective_outer(cfg, spec, n, p)?), &mut out);
+        }
+        // the §4.3 naive strawman (no cross-tile sharing)
+        let naive = OuterParams { option, ui: 1, uk: 1, scheduled: false };
+        push(TunePlan::outer(naive), &mut out);
+    }
+    // the baselines: autovec (the speedup reference), DLT (the layout
+    // axis), and temporal vectorization
+    for m in [Method::AutoVec, Method::Dlt, Method::Tv] {
+        push(TunePlan { method: m }, &mut out);
+    }
+    // the paper default is a scheduled config the grid above covers, but
+    // make the invariant explicit in case paper_best ever moves outside it
+    let default = TunePlan::outer(effective_outer(
+        cfg,
+        spec,
+        n,
+        OuterParams::paper_best(spec),
+    )?);
+    push(default, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_contains_paper_default_and_baselines() {
+        let cfg = SimConfig::default();
+        for spec in [
+            StencilSpec::box2d(1),
+            StencilSpec::star2d(2),
+            StencilSpec::diag2d(1),
+            StencilSpec::box3d(1),
+            StencilSpec::star3d(2),
+        ] {
+            let space = enumerate(&cfg, spec, 64).unwrap();
+            let default = TunePlan::outer(
+                effective_outer(&cfg, spec, 64, OuterParams::paper_best(spec)).unwrap(),
+            );
+            assert!(space.contains(&default), "{spec}");
+            assert!(space.contains(&TunePlan { method: Method::AutoVec }));
+            assert!(space.contains(&TunePlan { method: Method::Dlt }));
+            assert!(space.contains(&TunePlan { method: Method::Tv }));
+            // deduplicated
+            for (i, a) in space.iter().enumerate() {
+                assert!(!space[i + 1..].contains(a), "{spec}: duplicate {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_unrolls_respect_register_pressure() {
+        let cfg = SimConfig::default(); // 8 matrix registers
+        // 2D orthogonal star needs the transpose scratch → at most 7 tiles
+        let p = OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 8, scheduled: true };
+        let e = effective_outer(&cfg, StencilSpec::star2d(1), 64, p).unwrap();
+        assert_eq!(e.uk, 7);
+        // 2D parallel covers only use row lines → all 8 tiles available
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 8, scheduled: true };
+        let e = effective_outer(&cfg, StencilSpec::box2d(1), 64, p).unwrap();
+        assert_eq!(e.uk, 8);
+        // 3D: ui×uk bounded by the tile budget
+        let p = OuterParams { option: CoverOption::Parallel, ui: 8, uk: 4, scheduled: true };
+        let e = effective_outer(&cfg, StencilSpec::box3d(1), 64, p).unwrap();
+        assert!(e.ui * e.uk <= cfg.n_mregs);
+        // small domains clamp the unit-stride unroll to the tile count
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 8, scheduled: true };
+        let e = effective_outer(&cfg, StencilSpec::box2d(1), 16, p).unwrap();
+        assert_eq!(e.uk, 2);
+    }
+
+    #[test]
+    fn too_few_matrix_registers_is_an_error_not_a_panic() {
+        // 1 mreg + a cover needing the transpose scratch: no tile left
+        let tiny = SimConfig::default().with_mregs(1);
+        let p = OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 1, scheduled: true };
+        assert!(effective_outer(&tiny, StencilSpec::star2d(1), 64, p).is_err());
+        // 1 mreg with a scratch-free cover is still (just) runnable
+        let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 4, scheduled: true };
+        let e = effective_outer(&tiny, StencilSpec::box2d(1), 64, p).unwrap();
+        assert_eq!(e.uk, 1);
+    }
+
+    #[test]
+    fn unscheduled_normalizes_unrolls() {
+        let cfg = SimConfig::default();
+        let p = OuterParams { option: CoverOption::Parallel, ui: 4, uk: 8, scheduled: false };
+        let e = effective_outer(&cfg, StencilSpec::box2d(1), 64, p).unwrap();
+        assert_eq!((e.ui, e.uk, e.scheduled), (1, 1, false));
+    }
+
+    #[test]
+    fn plans_roundtrip_through_json() {
+        let cfg = SimConfig::default();
+        for spec in [StencilSpec::star2d(1), StencilSpec::box3d(1), StencilSpec::diag2d(2)] {
+            for plan in enumerate(&cfg, spec, 64).unwrap() {
+                let back = TunePlan::from_json(&plan.to_json()).unwrap();
+                assert_eq!(back, plan, "{spec}");
+            }
+        }
+        assert!(TunePlan::from_json(&Json::Null).is_err());
+        assert!(TunePlan::from_json(&obj(vec![("method", Json::Str("warp".into()))])).is_err());
+    }
+
+    #[test]
+    fn labels_are_compact() {
+        assert_eq!(TunePlan::paper_default(StencilSpec::box2d(1)).label(2), "p-j8");
+        let naive = TunePlan::outer(OuterParams {
+            option: CoverOption::Parallel,
+            ui: 1,
+            uk: 1,
+            scheduled: false,
+        });
+        assert_eq!(naive.label(2), "p-j1-ns");
+        assert_eq!(TunePlan { method: Method::Dlt }.label(3), "dlt");
+    }
+}

@@ -48,6 +48,14 @@ impl Json {
         }
     }
 
+    /// Boolean content (if a bool).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// Numeric content (if a number).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
@@ -312,6 +320,13 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
         assert_eq!(Json::parse("17").unwrap().as_usize(), Some(17));
+    }
+
+    #[test]
+    fn bools() {
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("false").unwrap().as_bool(), Some(false));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Integration tests for the autotuning subsystem (ISSUE 2 acceptance):
+//!
+//! - for a 2D star and a 3D box stencil, `tune` finds a plan whose
+//!   simulated cycle count is ≤ the paper-default outer-product plan
+//!   (never worse — the default is always in the measured set);
+//! - every searched candidate is verified against the scalar oracle
+//!   (an unverifiable candidate aborts the search, so measurements exist
+//!   only for verified plans);
+//! - the tuning database round-trips through disk with its version
+//!   enforced;
+//! - `serve` demonstrably loads the tuned plan from the DB: a server
+//!   built over the database answers `tuned`-kernel requests with the
+//!   DB plan's label in the report and counts the match in its plan-cache
+//!   metrics, while results stay bitwise equal to the scalar oracle.
+
+use stencil_matrix::codegen::Method;
+use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, StencilServer};
+use stencil_matrix::stencil::StencilSpec;
+use stencil_matrix::sim::SimConfig;
+use stencil_matrix::tune::{tune, Strategy, TuneDb};
+use stencil_matrix::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("stencil_tune_{}_{name}.json", std::process::id()))
+}
+
+#[test]
+fn tuned_plan_never_loses_to_paper_default_2d_star() {
+    let cfg = SimConfig::default();
+    let out = tune(&cfg, StencilSpec::star2d(2), 16, 8, Strategy::CostGuided).unwrap();
+    assert!(out.best().cycles <= out.paper_default().cycles);
+    assert!(out.best().cycles_per_point <= out.paper_default().cycles_per_point);
+    assert!(out.speedup_vs_default() >= 1.0);
+    // every measured candidate was verified bitwise-close to the oracle
+    assert!(!out.measurements.is_empty());
+    for m in &out.measurements {
+        assert!(m.max_err < 1e-9, "{:?} not verified: {}", m.plan, m.max_err);
+    }
+    // the winner is a real outer-product plan description
+    match out.best().plan.to_method() {
+        Method::Outer(_) | Method::AutoVec | Method::Dlt | Method::Tv | Method::Scalar => {}
+    }
+}
+
+#[test]
+fn tuned_plan_never_loses_to_paper_default_3d_box() {
+    let cfg = SimConfig::default();
+    let out = tune(&cfg, StencilSpec::box3d(1), 8, 8, Strategy::CostGuided).unwrap();
+    assert!(out.best().cycles <= out.paper_default().cycles);
+    assert!(out.speedup_vs_default() >= 1.0);
+    assert!(out.measurements.iter().all(|m| m.max_err < 1e-9));
+    assert_eq!(out.fingerprint, cfg.fingerprint());
+}
+
+#[test]
+fn tuning_db_roundtrips_through_disk_with_version_enforcement() {
+    let cfg = SimConfig::default();
+    let spec = StencilSpec::star2d(1);
+    let out = tune(&cfg, spec, 16, 4, Strategy::CostGuided).unwrap();
+    let mut db = TuneDb::new();
+    db.record(&out);
+
+    let path = temp_path("roundtrip");
+    db.save(&path).unwrap();
+    let loaded = TuneDb::load(&path).unwrap();
+    assert_eq!(loaded.len(), 1);
+    let e = loaded.lookup(spec, 16, &cfg.fingerprint()).unwrap();
+    assert_eq!(e.plan, out.best().plan);
+    assert_eq!(e.cycles, out.best().cycles);
+    assert!(e.speedup_vs_default >= 1.0);
+
+    // load_or_new: missing file is an empty DB, corrupt version is an error
+    let missing = temp_path("missing");
+    let _ = std::fs::remove_file(&missing);
+    assert_eq!(TuneDb::load_or_new(&missing).unwrap().len(), 0);
+    let bad = temp_path("badversion");
+    std::fs::write(&bad, r#"{"version":99,"entries":[]}"#).unwrap();
+    assert!(TuneDb::load_or_new(&bad).is_err());
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn serve_loads_the_tuned_plan_from_the_db() {
+    let cfg = SimConfig::default();
+    let spec = StencilSpec::star2d(2);
+    let out = tune(&cfg, spec, 16, 6, Strategy::CostGuided).unwrap();
+    let mut db = TuneDb::new();
+    db.record(&out);
+    let expected_label = out.best().plan.label(spec.dims);
+
+    let server = StencilServer::with_tune_db(
+        ServeConfig { workers: 2, shards: 2, queue_depth: 8, plan_cache: 8 },
+        Arc::new(db),
+        cfg.fingerprint(),
+    );
+    let ticket = server
+        .submit(ShardRequest {
+            spec,
+            n: 12,
+            steps: 2,
+            seed: 7,
+            method: KernelMethod::Tuned,
+            verify: true,
+        })
+        .unwrap();
+    server.drain();
+    let resp = ticket.wait().unwrap();
+    // bitwise equal to the scalar oracle, as for every serve kernel
+    assert_eq!(resp.report.max_err, Some(0.0));
+    // the response names the DB plan the kernel LRU matched
+    assert_eq!(resp.report.tuned_plan.as_deref(), Some(expected_label.as_str()));
+    // and the plan-cache metrics count the tuning-DB match
+    let metrics = server.metrics_json();
+    let tuned_hits = metrics
+        .get("plan_cache")
+        .and_then(|c| c.get("tuned_hits"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(tuned_hits >= 1.0, "expected tuned_hits >= 1, got {tuned_hits}");
+    server.shutdown();
+}
+
+#[test]
+fn tuned_kernel_without_db_serves_and_reports_no_plan() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 1,
+        shards: 2,
+        queue_depth: 4,
+        plan_cache: 4,
+    });
+    let ticket = server
+        .submit(ShardRequest {
+            spec: StencilSpec::box2d(1),
+            n: 10,
+            steps: 1,
+            seed: 1,
+            method: KernelMethod::Tuned,
+            verify: true,
+        })
+        .unwrap();
+    server.drain();
+    let resp = ticket.wait().unwrap();
+    assert_eq!(resp.report.max_err, Some(0.0));
+    assert_eq!(resp.report.tuned_plan, None);
+    server.shutdown();
+}
+
+#[test]
+fn db_entries_are_machine_specific() {
+    let cfg = SimConfig::default();
+    let spec = StencilSpec::star2d(2);
+    let out = tune(&cfg, spec, 16, 4, Strategy::CostGuided).unwrap();
+    let mut db = TuneDb::new();
+    db.record(&out);
+
+    // a server identifying as a *different* machine must not match
+    let server = StencilServer::with_tune_db(
+        ServeConfig { workers: 1, shards: 1, queue_depth: 4, plan_cache: 4 },
+        Arc::new(db),
+        SimConfig::default().with_mregs(16).fingerprint(),
+    );
+    let ticket = server
+        .submit(ShardRequest {
+            spec,
+            n: 12,
+            steps: 1,
+            seed: 3,
+            method: KernelMethod::Tuned,
+            verify: true,
+        })
+        .unwrap();
+    server.drain();
+    let resp = ticket.wait().unwrap();
+    assert_eq!(resp.report.max_err, Some(0.0));
+    assert_eq!(resp.report.tuned_plan, None);
+    server.shutdown();
+}
