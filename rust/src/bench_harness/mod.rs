@@ -7,7 +7,7 @@
 //! | [`fig5`] | Fig. 5 — autovec / DLT / TV / ours on r = 1 stencils |
 //! | [`table3`] | Table 3 — speedups over auto-vectorization, full matrix |
 //! | [`ablation`] | extra ablations (unroll, mregs, tuned-vs-default) |
-//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_2.json`) |
+//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_3.json`: sim cycles + host wall-clock) |
 //!
 //! Absolute cycle counts come from our simulator, not the paper's
 //! proprietary one, so the comparison target is the *shape* of each

@@ -1,32 +1,55 @@
-//! Machine-readable perf snapshot (`BENCH_2.json`): per-method simulated
-//! cycles and speedups for the Table-3 stencil rows at one representative
-//! size per dimensionality.
+//! Machine-readable perf snapshot (`BENCH_3.json`): per-method simulated
+//! cycles *and* host wall-clock for the Table-3 stencil rows at one
+//! representative size per dimensionality.
 //!
 //! This is the bench-trajectory artifact: small enough to regenerate on
 //! every CI run (`stencil-matrix bench-json`), complete enough to detect
-//! perf regressions in any method. Every number passes through
-//! [`run_method`], so a snapshot can only contain oracle-verified runs.
+//! perf regressions in any method on either backend. Every simulated
+//! number passes through [`run_method`] and every host number through
+//! [`run_host`] (the KIR host executor), so a snapshot can only contain
+//! oracle-verified runs.
 
 use super::table3;
-use crate::codegen::{run_method, verify::speedup, Method, OuterParams};
+use crate::codegen::{run_host, run_method, verify::speedup, HostRun, Method, OuterParams};
 use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 
-/// Snapshot schema version.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// Snapshot schema version (2: host wall-clock columns).
+pub const SNAPSHOT_VERSION: u64 = 2;
 
-fn method_json(cycles: u64, cycles_per_point: f64, speedup: f64) -> Json {
+fn method_json(
+    cycles: u64,
+    cycles_per_point: f64,
+    speedup: f64,
+    host: &HostRun,
+    points: usize,
+) -> Json {
     obj(vec![
         ("cycles", Json::Num(cycles as f64)),
         ("cycles_per_point", Json::Num(cycles_per_point)),
         ("speedup", Json::Num(speedup)),
+        ("host_seconds", Json::Num(host.seconds)),
+        (
+            "host_mpts_per_s",
+            Json::Num((points * host.steps) as f64 / host.seconds.max(1e-12) / 1e6),
+        ),
+        ("host_ops", Json::Num(host.ops as f64)),
     ])
+}
+
+/// Run the host backend for one cell, enforcing the same verification
+/// bar as the simulated run.
+fn host_cell(cfg: &SimConfig, spec: crate::stencil::StencilSpec, n: usize, method: Method) -> anyhow::Result<HostRun> {
+    let host = run_host(cfg, spec, n, method)?;
+    anyhow::ensure!(host.verified(), "{spec} {method} N={n} host: max_err {}", host.max_err);
+    Ok(host)
 }
 
 /// Build the snapshot: every Table-3 spec at `n2d`² / `n3d`³, methods
 /// scalar / autovec / dlt / tv / outer (best Table-3 candidate per cell,
 /// with its plan label). Speedups are vs. auto-vectorization, the
-/// paper's baseline.
+/// paper's baseline; each cell also carries the KIR host executor's
+/// wall-clock next to the simulated cycles.
 pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
     let mut results = Vec::new();
     for dims in [2usize, 3] {
@@ -34,19 +57,33 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
         for spec in table3::rows(dims) {
             let base = run_method(cfg, spec, n, Method::AutoVec, true)?;
             anyhow::ensure!(base.verified(), "{spec} autovec N={n}: max_err {}", base.max_err);
+            let base_host = host_cell(cfg, spec, n, Method::AutoVec)?;
             let mut methods: Vec<(&str, Json)> = Vec::new();
             methods.push((
                 "autovec",
-                method_json(base.stats.cycles, base.cycles_per_point(), 1.0),
+                method_json(
+                    base.stats.cycles,
+                    base.cycles_per_point(),
+                    1.0,
+                    &base_host,
+                    base.points(),
+                ),
             ));
             for (name, method) in
                 [("scalar", Method::Scalar), ("dlt", Method::Dlt), ("tv", Method::Tv)]
             {
                 let res = run_method(cfg, spec, n, method, true)?;
                 anyhow::ensure!(res.verified(), "{spec} {method} N={n}: max_err {}", res.max_err);
+                let host = host_cell(cfg, spec, n, method)?;
                 methods.push((
                     name,
-                    method_json(res.stats.cycles, res.cycles_per_point(), speedup(&base, &res)),
+                    method_json(
+                        res.stats.cycles,
+                        res.cycles_per_point(),
+                        speedup(&base, &res),
+                        &host,
+                        res.points(),
+                    ),
                 ));
             }
             // "our" method: best of the Table-3 candidate set for the cell
@@ -63,10 +100,13 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                 }
             }
             let (bp, bres) = best.expect("candidate set is never empty");
+            let best_host = host_cell(cfg, spec, n, Method::Outer(bp))?;
             let mut outer = method_json(
                 bres.stats.cycles,
                 bres.cycles_per_point(),
                 speedup(&base, &bres),
+                &best_host,
+                bres.points(),
             );
             if let Json::Obj(m) = &mut outer {
                 m.insert("plan".to_string(), Json::Str(bp.label(dims)));
@@ -100,7 +140,7 @@ mod tests {
     fn snapshot_covers_every_table3_row() {
         // tiny sizes keep this test fast; CI regenerates at 64/16
         let j = run(&SimConfig::default(), 16, 8).unwrap();
-        assert_eq!(j.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(2));
         let results = j.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
         for r in results {
@@ -109,6 +149,10 @@ mod tests {
                 let e = methods.get(m).unwrap_or_else(|| panic!("missing {m}"));
                 assert!(e.get("cycles").and_then(Json::as_f64).unwrap() > 0.0);
                 assert!(e.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+                // host wall-clock columns ride along with the sim cycles
+                assert!(e.get("host_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("host_mpts_per_s").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("host_ops").and_then(Json::as_f64).unwrap() > 0.0);
             }
             assert_eq!(
                 methods.get("autovec").unwrap().get("speedup").and_then(Json::as_f64),

@@ -1,9 +1,9 @@
 //! Shared code-generation infrastructure: grid layouts in simulator
 //! memory, coefficient tables, and generator parameters.
 
+use crate::kir::Arena;
 use crate::scatter::CoverOption;
 use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
-use crate::sim::Machine;
 
 /// Placement of the `A` and `B` grids in simulator memory.
 ///
@@ -37,8 +37,8 @@ impl Layout {
     /// Allocate `A` and `B` (with halos) in machine memory and fill them:
     /// `A` from `grid` (storage shape `(N+2r)^d`), `B` as a copy of `A`
     /// (frozen boundary convention).
-    pub fn alloc(machine: &mut Machine, spec: StencilSpec, grid: &DenseGrid) -> Layout {
-        let vlen = machine.cfg.vlen;
+    pub fn alloc(machine: &mut impl Arena, spec: StencilSpec, grid: &DenseGrid) -> Layout {
+        let vlen = machine.vlen();
         let r = spec.order;
         let n = grid.shape[0] - 2 * r;
         assert!(grid.shape.iter().all(|&s| s == n + 2 * r), "cubic grids only");
@@ -64,7 +64,7 @@ impl Layout {
         layout
     }
 
-    fn write_grid(&self, machine: &mut Machine, base: usize, grid: &DenseGrid) {
+    fn write_grid(&self, machine: &mut impl Arena, base: usize, grid: &DenseGrid) {
         let rows = if self.spec.dims == 2 { self.ext } else { self.ext * self.ext };
         for row in 0..rows {
             let src = &grid.data[row * self.ext..(row + 1) * self.ext];
@@ -72,7 +72,7 @@ impl Layout {
         }
     }
 
-    fn read_grid(&self, machine: &Machine, base: usize) -> DenseGrid {
+    fn read_grid(&self, machine: &impl Arena, base: usize) -> DenseGrid {
         let shape = vec![self.ext; self.spec.dims];
         let rows = if self.spec.dims == 2 { self.ext } else { self.ext * self.ext };
         let mut data = Vec::with_capacity(rows * self.ext);
@@ -135,12 +135,12 @@ impl Layout {
 
     /// Read `B` back from machine memory as a grid in storage shape
     /// (padding stripped).
-    pub fn read_b(&self, machine: &Machine) -> DenseGrid {
+    pub fn read_b(&self, machine: &impl Arena) -> DenseGrid {
         self.read_grid(machine, self.b_base)
     }
 
     /// Read `A` back from machine memory (TV ping-pongs A/B).
-    pub fn read_a(&self, machine: &Machine) -> DenseGrid {
+    pub fn read_a(&self, machine: &impl Arena) -> DenseGrid {
         self.read_grid(machine, self.a_base)
     }
 
@@ -173,20 +173,20 @@ pub struct CoeffTable {
 impl CoeffTable {
     /// Write the packed weights of `coeffs` (dense footprint order,
     /// including zeros so lane indices are predictable).
-    pub fn install_splats(machine: &mut Machine, coeffs: &CoeffTensor) -> CoeffTable {
+    pub fn install_splats(machine: &mut impl Arena, coeffs: &CoeffTensor) -> CoeffTable {
         let splat_base = machine.alloc(coeffs.data.len().max(1));
         machine.write_mem(splat_base, &coeffs.data);
-        CoeffTable { splat_base, cv_base: 0, vlen: machine.cfg.vlen, p_slots: 0 }
+        CoeffTable { splat_base, cv_base: 0, vlen: machine.vlen(), p_slots: 0 }
     }
 
     /// Write both sections, including cv vectors for every line of
     /// `cover`.
     pub fn install_full(
-        machine: &mut Machine,
+        machine: &mut impl Arena,
         coeffs: &CoeffTensor,
         cover: &crate::scatter::LineCover,
     ) -> CoeffTable {
-        let vlen = machine.cfg.vlen;
+        let vlen = machine.vlen();
         let r = coeffs.spec.order;
         let p_slots = vlen + 2 * r;
         let splat_base = machine.alloc(coeffs.data.len());
@@ -270,7 +270,7 @@ impl OuterParams {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::SimConfig;
+    use crate::sim::{Machine, SimConfig};
 
     #[test]
     fn layout_addressing_2d() {

@@ -18,7 +18,8 @@
 
 use super::common::{CoeffTable, Layout};
 use crate::stencil::{CoeffTensor, DenseGrid};
-use crate::sim::{Instr, Machine, Sink, SimConfig, VReg};
+use crate::kir::{Arena, KirSink, Op, VReg};
+use crate::sim::SimConfig;
 
 const JAM: usize = 4;
 const V_ACC0: u8 = 0;
@@ -46,8 +47,8 @@ pub struct DltLayout {
 impl DltLayout {
     /// Build the transformed arrays from the (already allocated) standard
     /// layout's input grid. Host-side transform — not simulated.
-    pub fn build(machine: &mut Machine, layout: &Layout, grid: &DenseGrid) -> DltLayout {
-        let vlen = machine.cfg.vlen;
+    pub fn build(machine: &mut impl Arena, layout: &Layout, grid: &DenseGrid) -> DltLayout {
+        let vlen = machine.vlen();
         let n = layout.n;
         let r = layout.spec.order;
         let dims = layout.spec.dims;
@@ -113,7 +114,7 @@ impl DltLayout {
 
     /// Inverse transform: read transformed `B` back into a storage-shape
     /// grid (boundary slots taken from `boundary`).
-    pub fn read_b(&self, machine: &Machine, boundary: &DenseGrid) -> DenseGrid {
+    pub fn read_b(&self, machine: &impl Arena, boundary: &DenseGrid) -> DenseGrid {
         let ext = self.n + 2 * self.r;
         let mut out = boundary.clone();
         let rows_i = self.n + 2 * self.r;
@@ -167,7 +168,7 @@ pub fn generate(
     dlt: &DltLayout,
     coeffs: &CoeffTensor,
     table: &CoeffTable,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let taps: Vec<(Vec<isize>, usize)> = layout
         .spec
@@ -180,7 +181,7 @@ pub fn generate(
     let resident = taps.len() <= (cfg.n_vregs - V_COEFF0 as usize);
     if resident {
         for (slot, (_, di)) in taps.iter().enumerate() {
-            sink.emit(Instr::LdSplat {
+            sink.emit(Op::Splat {
                 dst: VReg(V_COEFF0 + slot as u8),
                 addr: table.splat_addr(*di),
             });
@@ -217,32 +218,32 @@ fn emit_row(
     dlt: &DltLayout,
     outer: &[isize],
     w: isize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let dims = outer.len() + 1;
     let mut m0 = 0isize;
     while m0 < w {
         let jam = JAM.min((w - m0) as usize);
         for u in 0..jam {
-            sink.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+            sink.emit(Op::Zero { dst: VReg(V_ACC0 + u as u8) });
         }
         for (slot, (off, di)) in taps.iter().enumerate() {
             let coeff = if resident {
                 VReg(V_COEFF0 + slot as u8)
             } else {
-                sink.emit(Instr::LdSplat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
+                sink.emit(Op::Splat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
                 VReg(V_CSPILL)
             };
             for u in 0..jam {
                 let souter: Vec<isize> =
                     outer.iter().enumerate().map(|(d, &o)| o + off[d]).collect();
                 let m = m0 + u as isize + off[dims - 1];
-                sink.emit(Instr::LdVec { dst: VReg(V_LOAD), addr: dlt.a_block(&souter, m) });
-                sink.emit(Instr::VFma { acc: VReg(V_ACC0 + u as u8), a: VReg(V_LOAD), b: coeff });
+                sink.emit(Op::Load { dst: VReg(V_LOAD), addr: dlt.a_block(&souter, m) });
+                sink.emit(Op::Fma { acc: VReg(V_ACC0 + u as u8), a: VReg(V_LOAD), b: coeff });
             }
         }
         for u in 0..jam {
-            sink.emit(Instr::StVec {
+            sink.emit(Op::Store {
                 src: VReg(V_ACC0 + u as u8),
                 addr: dlt.b_block(outer, m0 + u as isize),
             });
@@ -254,6 +255,7 @@ fn emit_row(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::Machine;
     use crate::stencil::StencilSpec;
 
     #[test]

@@ -1,7 +1,11 @@
-//! Code generators targeting the simulator ISA.
+//! Code generators emitting the backend-agnostic kernel IR
+//! ([`crate::kir`]).
 //!
-//! Five methods, all producing *functionally correct* instruction streams
-//! that are verified element-wise against [`crate::stencil::reference`]:
+//! Five methods, all producing *functionally correct* operation streams
+//! that are verified element-wise against [`crate::stencil::reference`].
+//! Generators emit [`crate::kir::Op`]s into any [`crate::kir::KirSink`];
+//! the sim backend lowers them 1:1 to the simulator ISA on emit
+//! (timing), and the host backend interprets them natively (wall-clock):
 //!
 //! - [`outer`] — **the paper's method**: scatter-mode outer products over
 //!   coefficient-line covers, with multi-dimensional unrolling (§4.2),
@@ -16,8 +20,9 @@
 //!   memory-volume ÷4 behaviour the paper cites).
 //! - [`scalar`] — plain scalar code, for completeness and sanity.
 //!
-//! [`verify`] hosts the end-to-end runner: allocate grids in simulator
-//! memory, generate + execute, check against the oracle, return stats.
+//! [`verify`] hosts the end-to-end runners: allocate grids in backend
+//! memory, generate + execute, check against the oracle, return stats
+//! ([`run_method`] on the simulator, [`run_host`] on the host).
 
 pub mod common;
 pub mod dlt;
@@ -28,4 +33,4 @@ pub mod vectorize;
 pub mod verify;
 
 pub use common::{Layout, OuterParams};
-pub use verify::{run_method, Method, MethodResult};
+pub use verify::{kernel_for, run_host, run_method, HostRun, Method, MethodResult};

@@ -26,7 +26,8 @@
 
 use super::common::{CoeffTable, Layout, OuterParams};
 use crate::scatter::line::{CoeffLine, LineCover};
-use crate::sim::{Instr, MReg, Sink, SimConfig, VReg};
+use crate::kir::{KirSink, Marker, MReg, Op, VReg};
+use crate::sim::SimConfig;
 
 // ---- vector register plan (see module doc in codegen/mod.rs) ----
 /// Aligned A blocks: v0..=v9 (block index t maps to v(t+1), t in -1..=8).
@@ -54,7 +55,7 @@ pub fn generate(
     cover: &LineCover,
     table: &CoeffTable,
     params: OuterParams,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let n = cfg.vlen;
     anyhow::ensure!(layout.n % n == 0, "domain must be a multiple of the vector length");
@@ -103,15 +104,15 @@ fn block_reg(t: isize) -> VReg {
 /// Assemble `A[row, col0 + t*n + off .. +n]` into a register, given that
 /// aligned blocks `t-1 ..= t+1` are resident (per `block_reg`). Returns
 /// the register holding the vector (a block register when `off == 0`).
-fn assemble(n: usize, t: isize, off: isize, sink: &mut impl Sink) -> VReg {
+fn assemble(n: usize, t: isize, off: isize, sink: &mut impl KirSink) -> VReg {
     if off == 0 {
         return block_reg(t);
     }
     let dst = VReg(V_AV);
     if off > 0 {
-        sink.emit(Instr::Ext { dst, lo: block_reg(t), hi: block_reg(t + 1), shift: off as usize });
+        sink.emit(Op::Ext { dst, lo: block_reg(t), hi: block_reg(t + 1), shift: off as usize });
     } else {
-        sink.emit(Instr::Ext {
+        sink.emit(Op::Ext {
             dst,
             lo: block_reg(t - 1),
             hi: block_reg(t),
@@ -131,7 +132,7 @@ fn gen2d(
     cover: &LineCover,
     table: &CoeffTable,
     params: OuterParams,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let n = cfg.vlen;
     let big_n = layout.n;
@@ -147,8 +148,10 @@ fn gen2d(
         while tj < tiles_j {
             let group = uj.min(tiles_j - tj);
             let j0 = (tj * n) as isize;
+            let marker = Marker::TileGroup { i0, j0, k0: 0, ui: 1, uk: group };
+            sink.emit(Op::Begin(marker));
             for t in 0..group {
-                sink.emit(Instr::MZero { m: MReg(t as u8) });
+                sink.emit(Op::TileZero { m: MReg(t as u8) });
             }
             if params.scheduled {
                 gen2d_group_scheduled(cfg, layout, &cls, table, i0, j0, group, sink);
@@ -165,9 +168,10 @@ fn gen2d(
             for t in 0..group {
                 for x in 0..n {
                     let addr = layout.b_addr(&[i0 + x as isize, j0 + (t * n) as isize]);
-                    sink.emit(Instr::StMRow { m: MReg(t as u8), row: x, addr });
+                    sink.emit(Op::RowStore { m: MReg(t as u8), row: x, addr });
                 }
             }
+            sink.emit(Op::End(marker));
             tj += group;
         }
     }
@@ -184,7 +188,7 @@ fn gen2d_group_scheduled(
     i0: isize,
     j0: isize,
     group: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen;
     let r = layout.spec.order as isize;
@@ -197,7 +201,7 @@ fn gen2d_group_scheduled(
             let t_lo = if need_left { -1 } else { 0 };
             let t_hi = group as isize - 1 + if need_right { 1 } else { 0 };
             for t in t_lo..=t_hi {
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: block_reg(t),
                     addr: layout.a_addr(&[row, j0 + t * n as isize]),
                 });
@@ -206,11 +210,11 @@ fn gen2d_group_scheduled(
                 if !line.cv_nonzero(p, n) {
                     continue;
                 }
-                sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+                sink.emit(Op::Load { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
                 let oj = line.base[1];
                 for t in 0..group as isize {
                     let av = assemble(n, t, oj, sink);
-                    sink.emit(Instr::Fmopa { m: MReg(t as u8), a: VReg(V_CV), b: av });
+                    sink.emit(Op::Outer { m: MReg(t as u8), a: VReg(V_CV), b: av });
                 }
             }
         }
@@ -230,7 +234,7 @@ fn gen2d_tile_naive(
     i0: isize,
     jt: isize,
     tile: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen;
     let r = layout.spec.order as isize;
@@ -241,22 +245,22 @@ fn gen2d_tile_naive(
                 continue;
             }
             let row = i0 + p;
-            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            sink.emit(Op::Load { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
             // load only the blocks this tile needs (t = 0 locally)
-            sink.emit(Instr::LdVec { dst: block_reg(0), addr: layout.a_addr(&[row, jt]) });
+            sink.emit(Op::Load { dst: block_reg(0), addr: layout.a_addr(&[row, jt]) });
             if oj < 0 {
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: block_reg(-1),
                     addr: layout.a_addr(&[row, jt - n as isize]),
                 });
             } else if oj > 0 {
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: block_reg(1),
                     addr: layout.a_addr(&[row, jt + n as isize]),
                 });
             }
             let av = assemble(n, 0, oj, sink);
-            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: VReg(V_CV), b: av });
+            sink.emit(Op::Outer { m: MReg(tile as u8), a: VReg(V_CV), b: av });
         }
     }
     gen2d_jlines_tile(cfg, layout, cls, table, i0, jt, tile, sink);
@@ -273,7 +277,7 @@ fn gen2d_jlines_tile(
     i0: isize,
     jt: isize,
     tile: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     if cls.dim1.is_empty() {
         return;
@@ -290,11 +294,11 @@ fn gen2d_jlines_tile(
         // fill the scratch tile with A rows (vector-to-matrix moves); the
         // in-tile columns are then matrix-to-vector column moves (§4.1).
         for x in 0..n {
-            sink.emit(Instr::LdVec {
+            sink.emit(Op::Load {
                 dst: VReg(V_SCRATCH),
                 addr: layout.a_addr(&[i0 + oi + x as isize, jt]),
             });
-            sink.emit(Instr::MovVToMRow { m: scratch_m, row: x, src: VReg(V_SCRATCH) });
+            sink.emit(Op::RowIn { m: scratch_m, row: x, src: VReg(V_SCRATCH) });
         }
         for &(li, line) in &cls.dim1 {
             if line.base[0] != oi {
@@ -304,26 +308,26 @@ fn gen2d_jlines_tile(
                 if !line.cv_nonzero(p, n) {
                     continue;
                 }
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: VReg(V_CV),
                     addr: table.cv_addr(li, p, r as usize),
                 });
                 let col = if (0..n as isize).contains(&p) {
-                    sink.emit(Instr::MovMColToV {
+                    sink.emit(Op::ColOut {
                         dst: VReg(V_SCRATCH),
                         m: scratch_m,
                         col: p as usize,
                     });
                     VReg(V_SCRATCH)
                 } else {
-                    sink.emit(Instr::LdVecStrided {
+                    sink.emit(Op::Gather {
                         dst: VReg(V_SCRATCH),
                         base: layout.a_addr(&[i0 + oi, jt + p]),
                         stride: layout.row_stride(),
                     });
                     VReg(V_SCRATCH)
                 };
-                sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
+                sink.emit(Op::Outer { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
             }
         }
     }
@@ -341,7 +345,7 @@ fn gen2d_diag(
     i0: isize,
     j0: isize,
     group: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen;
     let r = layout.spec.order as isize;
@@ -349,7 +353,7 @@ fn gen2d_diag(
         let jt = j0 + (t * n) as isize;
         for x in 0..n {
             // current tile row
-            sink.emit(Instr::MovMRowToV { dst: VReg(V_SCRATCH2), m: MReg(t as u8), row: x });
+            sink.emit(Op::RowOut { dst: VReg(V_SCRATCH2), m: MReg(t as u8), row: x });
             for &(li, line, slope) in &cls.diag {
                 // coefficient lanes: the 2r+1 weights live in the splat
                 // table at the line's footprint offsets
@@ -363,28 +367,28 @@ fn gen2d_diag(
                     let off = line.point(d);
                     let side = layout.spec.side() as isize;
                     let idx = ((off[0] + r) * side + (off[1] + r)) as usize;
-                    sink.emit(Instr::LdSplat { dst: VReg(V_CV), addr: table.splat_addr(idx) });
+                    sink.emit(Op::Splat { dst: VReg(V_CV), addr: table.splat_addr(idx) });
                     // input row: A[i0+x+d, jt + slope*d .. +n] (sheared)
                     let row = i0 + x as isize + d;
                     let cs = jt + slope * d;
                     let base = cs.div_euclid(n as isize) * n as isize;
                     let off_in = cs - base;
-                    sink.emit(Instr::LdVec {
+                    sink.emit(Op::Load {
                         dst: block_reg(0),
                         addr: layout.a_addr(&[row, base]),
                     });
                     if off_in > 0 {
-                        sink.emit(Instr::LdVec {
+                        sink.emit(Op::Load {
                             dst: block_reg(1),
                             addr: layout.a_addr(&[row, base + n as isize]),
                         });
                     }
                     let av = assemble(n, 0, off_in, sink);
-                    sink.emit(Instr::VFma { acc: VReg(V_SCRATCH2), a: av, b: VReg(V_CV) });
+                    sink.emit(Op::Fma { acc: VReg(V_SCRATCH2), a: av, b: VReg(V_CV) });
                     let _ = li;
                 }
             }
-            sink.emit(Instr::MovVToMRow { m: MReg(t as u8), row: x, src: VReg(V_SCRATCH2) });
+            sink.emit(Op::RowIn { m: MReg(t as u8), row: x, src: VReg(V_SCRATCH2) });
         }
     }
 }
@@ -399,7 +403,7 @@ fn gen3d(
     cover: &LineCover,
     table: &CoeffTable,
     params: OuterParams,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let n = cfg.vlen;
     let big_n = layout.n;
@@ -419,8 +423,10 @@ fn gen3d(
             while tk < tiles_k {
                 let gk = uk.min(tiles_k - tk);
                 let k0 = (tk * n) as isize;
+                let marker = Marker::TileGroup { i0, j0, k0, ui: gi, uk: gk };
+                sink.emit(Op::Begin(marker));
                 for m in 0..gi * gk {
-                    sink.emit(Instr::MZero { m: MReg(m as u8) });
+                    sink.emit(Op::TileZero { m: MReg(m as u8) });
                 }
                 if params.scheduled {
                     gen3d_group_scheduled(cfg, layout, &cls, table, i0, j0, k0, gi, gk, sink);
@@ -450,10 +456,11 @@ fn gen3d(
                                 j0 + y as isize,
                                 k0 + (t * n) as isize,
                             ]);
-                            sink.emit(Instr::StMRow { m, row: y, addr });
+                            sink.emit(Op::RowStore { m, row: y, addr });
                         }
                     }
                 }
+                sink.emit(Op::End(marker));
                 tk += gk;
             }
         }
@@ -481,7 +488,7 @@ fn gen3d_group_scheduled(
     k0: isize,
     gi: usize,
     gk: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen;
     let r = layout.spec.order as isize;
@@ -501,7 +508,7 @@ fn gen3d_group_scheduled(
                     break;
                 }
                 if line.cv_nonzero(p, n) {
-                    sink.emit(Instr::LdVec {
+                    sink.emit(Op::Load {
                         dst: VReg(V_CV_BANK + slot as u8),
                         addr: table.cv_addr(li, p, r as usize),
                     });
@@ -519,7 +526,7 @@ fn gen3d_group_scheduled(
                 let t_lo = if need_left { -1 } else { 0 };
                 let t_hi = gk as isize - 1 + if need_right { 1 } else { 0 };
                 for t in t_lo..=t_hi {
-                    sink.emit(Instr::LdVec {
+                    sink.emit(Op::Load {
                         dst: block_reg(t),
                         addr: layout.a_addr(&[ii, jrow, k0 + t * n as isize]),
                     });
@@ -547,14 +554,14 @@ fn gen3d_group_scheduled(
                                 VReg(V_CV_BANK + slot as u8)
                             } else {
                                 // overflow: reload (register spill behaviour)
-                                sink.emit(Instr::LdVec {
+                                sink.emit(Op::Load {
                                     dst: VReg(V_CV),
                                     addr: table.cv_addr(li, p, r as usize),
                                 });
                                 VReg(V_CV)
                             };
                             let m = MReg((u as usize * gk + t as usize) as u8);
-                            sink.emit(Instr::Fmopa { m, a: cv_reg, b: av });
+                            sink.emit(Op::Outer { m, a: cv_reg, b: av });
                         }
                     }
                 }
@@ -590,7 +597,7 @@ fn gen3d_tile_naive(
     j0: isize,
     kt: isize,
     tile: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen;
     let r = layout.spec.order as isize;
@@ -600,23 +607,23 @@ fn gen3d_tile_naive(
             if !line.cv_nonzero(p, n) {
                 continue;
             }
-            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            sink.emit(Op::Load { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
             let plane = it + oi;
             let jrow = j0 + p;
-            sink.emit(Instr::LdVec { dst: block_reg(0), addr: layout.a_addr(&[plane, jrow, kt]) });
+            sink.emit(Op::Load { dst: block_reg(0), addr: layout.a_addr(&[plane, jrow, kt]) });
             if ok < 0 {
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: block_reg(-1),
                     addr: layout.a_addr(&[plane, jrow, kt - n as isize]),
                 });
             } else if ok > 0 {
-                sink.emit(Instr::LdVec {
+                sink.emit(Op::Load {
                     dst: block_reg(1),
                     addr: layout.a_addr(&[plane, jrow, kt + n as isize]),
                 });
             }
             let av = assemble(n, 0, ok, sink);
-            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: VReg(V_CV), b: av });
+            sink.emit(Op::Outer { m: MReg(tile as u8), a: VReg(V_CV), b: av });
         }
     }
     gen3d_klines_tile(cfg, layout, cls, table, it, j0, kt, tile, sink);
@@ -634,7 +641,7 @@ fn gen3d_klines_tile(
     j0: isize,
     kt: isize,
     tile: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     if cls.dim2.is_empty() {
         return;
@@ -648,33 +655,33 @@ fn gen3d_klines_tile(
         debug_assert_eq!(oj, 0, "3D k-lines with j offsets unsupported");
         // transpose scratch: rows y hold A[it, j0+y, kt..kt+n]
         for y in 0..n {
-            sink.emit(Instr::LdVec {
+            sink.emit(Op::Load {
                 dst: VReg(V_SCRATCH),
                 addr: layout.a_addr(&[it, j0 + y as isize, kt]),
             });
-            sink.emit(Instr::MovVToMRow { m: scratch_m, row: y, src: VReg(V_SCRATCH) });
+            sink.emit(Op::RowIn { m: scratch_m, row: y, src: VReg(V_SCRATCH) });
         }
         for p in -r..(n as isize + r) {
             if !line.cv_nonzero(p, n) {
                 continue;
             }
-            sink.emit(Instr::LdVec { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
+            sink.emit(Op::Load { dst: VReg(V_CV), addr: table.cv_addr(li, p, r as usize) });
             let col = if (0..n as isize).contains(&p) {
-                sink.emit(Instr::MovMColToV {
+                sink.emit(Op::ColOut {
                     dst: VReg(V_SCRATCH),
                     m: scratch_m,
                     col: p as usize,
                 });
                 VReg(V_SCRATCH)
             } else {
-                sink.emit(Instr::LdVecStrided {
+                sink.emit(Op::Gather {
                     dst: VReg(V_SCRATCH),
                     base: layout.a_addr(&[it, j0, kt + p]),
                     stride: layout.row_stride(),
                 });
                 VReg(V_SCRATCH)
             };
-            sink.emit(Instr::Fmopa { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
+            sink.emit(Op::Outer { m: MReg(tile as u8), a: col, b: VReg(V_CV) });
         }
     }
 }
@@ -687,14 +694,20 @@ fn gen3d_ipass(
     cls: &Classified<'_>,
     table: &CoeffTable,
     params: OuterParams,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let n = cfg.vlen;
     let big_n = layout.n;
     let r = layout.spec.order as isize;
     let uk = params.uk.clamp(1, cfg.n_mregs);
     let tiles_k = big_n / n;
+    sink.emit(Op::Begin(Marker::Phase("i-line pass")));
     for i0 in (0..big_n as isize).step_by(n) {
+        // one self-contained group per i0 block (tiles B[i0..i0+n; *; *]),
+        // so backends can reason about row ranges (host tile kernels trim
+        // blocks whose rows a tile does not need)
+        let marker = Marker::TileGroup { i0, j0: 0, k0: 0, ui: n, uk };
+        sink.emit(Op::Begin(marker));
         for j in 0..big_n as isize {
             let mut tk = 0usize;
             while tk < tiles_k {
@@ -703,7 +716,7 @@ fn gen3d_ipass(
                 // load current B tiles (RMW)
                 for t in 0..gk {
                     for x in 0..n {
-                        sink.emit(Instr::LdMRow {
+                        sink.emit(Op::RowLoad {
                             m: MReg(t as u8),
                             row: x,
                             addr: layout.b_addr(&[i0 + x as isize, j, k0 + (t * n) as isize]),
@@ -714,7 +727,7 @@ fn gen3d_ipass(
                     let plane = i0 + p;
                     // shared aligned loads for this input row
                     for t in 0..gk as isize {
-                        sink.emit(Instr::LdVec {
+                        sink.emit(Op::Load {
                             dst: block_reg(t),
                             addr: layout.a_addr(&[plane, j, k0 + t * n as isize]),
                         });
@@ -724,12 +737,12 @@ fn gen3d_ipass(
                         if !line.cv_nonzero(p, n) {
                             continue;
                         }
-                        sink.emit(Instr::LdVec {
+                        sink.emit(Op::Load {
                             dst: VReg(V_CV),
                             addr: table.cv_addr(li, p, r as usize),
                         });
                         for t in 0..gk {
-                            sink.emit(Instr::Fmopa {
+                            sink.emit(Op::Outer {
                                 m: MReg(t as u8),
                                 a: VReg(V_CV),
                                 b: block_reg(t as isize),
@@ -739,7 +752,7 @@ fn gen3d_ipass(
                 }
                 for t in 0..gk {
                     for x in 0..n {
-                        sink.emit(Instr::StMRow {
+                        sink.emit(Op::RowStore {
                             m: MReg(t as u8),
                             row: x,
                             addr: layout.b_addr(&[i0 + x as isize, j, k0 + (t * n) as isize]),
@@ -749,7 +762,9 @@ fn gen3d_ipass(
                 tk += gk;
             }
         }
+        sink.emit(Op::End(marker));
     }
+    sink.emit(Op::End(Marker::Phase("i-line pass")));
     Ok(())
 }
 
@@ -760,34 +775,34 @@ mod tests {
     // the integration tests under rust/tests/. Unit tests here cover the
     // pure helpers.
     use super::*;
-    use crate::sim::isa::Program;
+    use crate::kir::Kernel;
 
     #[test]
     fn assemble_zero_offset_uses_block_directly() {
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         let reg = assemble(8, 2, 0, &mut p);
         assert_eq!(reg, block_reg(2));
-        assert!(p.0.is_empty());
+        assert!(p.is_empty());
     }
 
     #[test]
     fn assemble_positive_offset_exts_right() {
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         let reg = assemble(8, 0, 2, &mut p);
         assert_eq!(reg, VReg(V_AV));
         assert_eq!(
-            p.0,
-            vec![Instr::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 2 }]
+            p.ops,
+            vec![Op::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 2 }]
         );
     }
 
     #[test]
     fn assemble_negative_offset_exts_left() {
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         assemble(8, 1, -3, &mut p);
         assert_eq!(
-            p.0,
-            vec![Instr::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 5 }]
+            p.ops,
+            vec![Op::Ext { dst: VReg(V_AV), lo: block_reg(0), hi: block_reg(1), shift: 5 }]
         );
     }
 }

@@ -8,7 +8,8 @@
 
 use super::common::{CoeffTable, Layout};
 use crate::stencil::CoeffTensor;
-use crate::sim::{Instr, Sink, SimConfig, VReg};
+use crate::kir::{KirSink, Op, VReg};
+use crate::sim::SimConfig;
 
 const V_ACC: u8 = 0;
 const V_IN: u8 = 1;
@@ -21,7 +22,7 @@ pub fn generate(
     layout: &Layout,
     coeffs: &CoeffTensor,
     table: &CoeffTable,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let taps: Vec<(Vec<isize>, usize)> = layout
         .spec
@@ -52,15 +53,15 @@ pub fn generate(
         }
     };
     let mut body = |pt: &[isize]| {
-        sink.emit(Instr::VZero { dst: VReg(V_ACC) });
+        sink.emit(Op::Zero { dst: VReg(V_ACC) });
         for (off, di) in &taps {
             let mut q: Vec<isize> = pt.iter().zip(off.iter()).map(|(a, b)| a + b).collect();
-            sink.emit(Instr::LdSplat { dst: VReg(V_IN), addr: layout.a_addr(&q) });
-            sink.emit(Instr::LdSplat { dst: VReg(V_COEFF0), addr: table.splat_addr(*di) });
-            sink.emit(Instr::VFma { acc: VReg(V_ACC), a: VReg(V_IN), b: VReg(V_COEFF0) });
+            sink.emit(Op::Splat { dst: VReg(V_IN), addr: layout.a_addr(&q) });
+            sink.emit(Op::Splat { dst: VReg(V_COEFF0), addr: table.splat_addr(*di) });
+            sink.emit(Op::Fma { acc: VReg(V_ACC), a: VReg(V_IN), b: VReg(V_COEFF0) });
             q.clear();
         }
-        sink.emit(Instr::StLane { src: VReg(V_ACC), lane: 0, addr: layout.b_addr(pt) });
+        sink.emit(Op::StoreLane { src: VReg(V_ACC), lane: 0, addr: layout.b_addr(pt) });
     };
     walk(&mut body);
     Ok(())
@@ -69,7 +70,7 @@ pub fn generate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::isa::Program;
+    use crate::kir::Kernel;
     use crate::stencil::{DenseGrid, StencilSpec};
 
     #[test]
@@ -81,9 +82,9 @@ mod tests {
         let g = DenseGrid::verification_input(&[10, 10], 1);
         let layout = Layout::alloc(&mut m, spec, &g);
         let table = CoeffTable::install_splats(&mut m, &coeffs);
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         generate(&cfg, &layout, &coeffs, &table, &mut p).unwrap();
         // per point: zero + 5 × (2 loads + fma) + store = 17
-        assert_eq!(p.0.len(), 64 * 17);
+        assert_eq!(p.len(), 64 * 17);
     }
 }

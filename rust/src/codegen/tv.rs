@@ -26,7 +26,8 @@
 
 use super::common::{CoeffTable, Layout};
 use crate::stencil::CoeffTensor;
-use crate::sim::{Instr, Machine, Sink, VReg};
+use crate::kir::{Arena, KirSink, Op, VReg};
+use crate::sim::SimConfig;
 
 /// Time steps advanced per strip.
 pub const TIME_BLOCK: usize = 4;
@@ -56,7 +57,7 @@ pub struct StripBuf {
 }
 
 impl StripBuf {
-    fn alloc(machine: &mut Machine, rows: usize, n: usize, r: usize, vlen: usize) -> StripBuf {
+    fn alloc(machine: &mut impl Arena, rows: usize, n: usize, r: usize, vlen: usize) -> StripBuf {
         let stride = (n + 2 * r).div_ceil(vlen) * vlen + vlen;
         let raw = machine.alloc((rows + 2 * r) * stride + vlen);
         let base = raw + (vlen - (raw + r) % vlen) % vlen;
@@ -86,12 +87,12 @@ pub struct Scratch {
 /// Allocate the scratch state. 2D uses two reusable strip buffers (the
 /// real TV structure); 3D keeps full scratch grids — the working set that
 /// is exactly why TV does not pay off for 3D stencils (§5.2).
-pub fn setup(machine: &mut Machine, layout: &Layout) -> Scratch {
+pub fn setup(machine: &mut impl Arena, layout: &Layout) -> Scratch {
     let r = layout.spec.order;
     let margin = (TIME_BLOCK - 1) * r;
     if layout.spec.dims == 2 {
         let rows = STRIP_ROWS_2D + 2 * margin;
-        let vlen = machine.cfg.vlen;
+        let vlen = machine.vlen();
         let b0 = StripBuf::alloc(machine, rows, layout.n, r, vlen);
         let b1 = StripBuf::alloc(machine, rows, layout.n, r, vlen);
         Scratch { bufs: Some([b0, b1]), grids: None, margin }
@@ -103,18 +104,20 @@ pub fn setup(machine: &mut Machine, layout: &Layout) -> Scratch {
     }
 }
 
-/// Generate and execute the TV program on `machine` (TV needs the machine
-/// as sink because intermediate values flow through its scratch grids).
+/// Generate the TV program into `sink`. The program must be *executed*
+/// in emission order (intermediate values flow through the scratch
+/// grids), which every backend does — the simulator and the host
+/// machine both execute on emit or replay the captured stream in order.
 ///
-/// On return, `B` holds the grid after [`TIME_BLOCK`] steps.
+/// After execution, `B` holds the grid after [`TIME_BLOCK`] steps.
 pub fn generate(
-    machine: &mut Machine,
+    cfg: &SimConfig,
     layout: &Layout,
     scratch: &Scratch,
     coeffs: &CoeffTensor,
     table: &CoeffTable,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
-    let cfg = machine.cfg.clone();
     let vlen = cfg.vlen;
     anyhow::ensure!(layout.n % vlen == 0, "domain must be a multiple of the vector length");
     let taps: Vec<(Vec<isize>, usize)> = layout
@@ -128,24 +131,26 @@ pub fn generate(
     let resident = taps.len() <= (cfg.n_vregs - V_COEFF0 as usize);
     if resident {
         for (slot, (_, di)) in taps.iter().enumerate() {
-            machine.emit(Instr::LdSplat {
+            sink.emit(Op::Splat {
                 dst: VReg(V_COEFF0 + slot as u8),
                 addr: table.splat_addr(*di),
             });
         }
     }
     if layout.spec.dims == 2 {
-        gen2d_strips(machine, layout, scratch, &taps, table, resident)
+        gen2d_strips(cfg, sink, layout, scratch, &taps, table, resident)
     } else {
-        gen3d_grids(machine, layout, scratch, &taps, table, resident)
+        gen3d_grids(cfg, sink, layout, scratch, &taps, table, resident)
     }
 }
 
 /// 2D: strips along `i`, full row width, ping-ponging through the two
 /// cache-resident strip buffers. A is read once and B written once per
 /// TIME_BLOCK steps — the ÷4 memory volume.
-fn gen2d_strips(
-    machine: &mut Machine,
+#[allow(clippy::too_many_arguments)]
+fn gen2d_strips<S: KirSink>(
+    cfg: &SimConfig,
+    sink: &mut S,
     layout: &Layout,
     scratch: &Scratch,
     taps: &[(Vec<isize>, usize)],
@@ -156,7 +161,7 @@ fn gen2d_strips(
     let n = layout.n as isize;
     let r = layout.spec.order as isize;
     let m = scratch.margin as isize;
-    let vlen = machine.cfg.vlen as isize;
+    let vlen = cfg.vlen as isize;
     let mut i0 = 0isize;
     while i0 < n {
         let ih = (STRIP_ROWS_2D as isize).min(n - i0);
@@ -174,26 +179,25 @@ fn gen2d_strips(
                     // frozen full row, vector copies
                     let mut c = -vlen; // cover the left halo block too
                     while c < n + r {
-                        machine.emit(Instr::LdVec {
+                        sink.emit(Op::Load {
                             dst: VReg(V_LOAD),
                             addr: layout.a_addr(&[g, c]),
                         });
-                        machine.emit(Instr::StVec { src: VReg(V_LOAD), addr: buf.addr(x, c) });
+                        sink.emit(Op::Store { src: VReg(V_LOAD), addr: buf.addr(x, c) });
                         c += vlen;
                     }
                 } else {
                     for c in 1..=r {
-                        machine.emit(Instr::LdSplat {
+                        sink.emit(Op::Splat {
                             dst: VReg(V_LOAD),
                             addr: layout.a_addr(&[g, -c]),
                         });
-                        machine
-                            .emit(Instr::StLane { src: VReg(V_LOAD), lane: 0, addr: buf.addr(x, -c) });
-                        machine.emit(Instr::LdSplat {
+                        sink.emit(Op::StoreLane { src: VReg(V_LOAD), lane: 0, addr: buf.addr(x, -c) });
+                        sink.emit(Op::Splat {
                             dst: VReg(V_LOAD),
                             addr: layout.a_addr(&[g, n - 1 + c]),
                         });
-                        machine.emit(Instr::StLane {
+                        sink.emit(Op::StoreLane {
                             src: VReg(V_LOAD),
                             lane: 0,
                             addr: buf.addr(x, n - 1 + c),
@@ -217,13 +221,13 @@ fn gen2d_strips(
                 while c0 < n {
                     let jam = JAM.min(((n - c0) / vlen) as usize).max(1);
                     for u in 0..jam {
-                        machine.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+                        sink.emit(Op::Zero { dst: VReg(V_ACC0 + u as u8) });
                     }
                     for (slot, (off, di)) in taps.iter().enumerate() {
                         let coeff = if resident {
                             VReg(V_COEFF0 + slot as u8)
                         } else {
-                            machine.emit(Instr::LdSplat {
+                            sink.emit(Op::Splat {
                                 dst: VReg(V_CSPILL),
                                 addr: table.splat_addr(*di),
                             });
@@ -236,8 +240,8 @@ fn gen2d_strips(
                                 None => layout.a_addr(&[gi, gc]),
                                 Some(b) => b.addr(gi - (i0 - m), gc),
                             };
-                            machine.emit(Instr::LdVec { dst: VReg(V_LOAD), addr });
-                            machine.emit(Instr::VFma {
+                            sink.emit(Op::Load { dst: VReg(V_LOAD), addr });
+                            sink.emit(Op::Fma {
                                 acc: VReg(V_ACC0 + u as u8),
                                 a: VReg(V_LOAD),
                                 b: coeff,
@@ -250,7 +254,7 @@ fn gen2d_strips(
                             None => layout.b_addr(&[g, gc]),
                             Some(b) => b.addr(g - (i0 - m), gc),
                         };
-                        machine.emit(Instr::StVec { src: VReg(V_ACC0 + u as u8), addr });
+                        sink.emit(Op::Store { src: VReg(V_ACC0 + u as u8), addr });
                     }
                     c0 += (jam as isize) * vlen;
                 }
@@ -264,8 +268,10 @@ fn gen2d_strips(
 /// 3D: overlapped temporal blocking over unit-stride slabs with full
 /// scratch grids — the oversized working set that makes TV unprofitable
 /// in 3D (§5.2).
-fn gen3d_grids(
-    machine: &mut Machine,
+#[allow(clippy::too_many_arguments)]
+fn gen3d_grids<S: KirSink>(
+    cfg: &SimConfig,
+    sink: &mut S,
     layout: &Layout,
     scratch: &Scratch,
     taps: &[(Vec<isize>, usize)],
@@ -274,7 +280,7 @@ fn gen3d_grids(
 ) -> anyhow::Result<()> {
     let grids = scratch.grids.as_ref().expect("3D scratch");
     let (s0, s1) = (&grids[0], &grids[1]);
-    let vlen = machine.cfg.vlen;
+    let vlen = cfg.vlen;
     let n = layout.n as isize;
     let r = layout.spec.order as isize;
     let strip = (STRIP_VECS_3D * vlen) as isize;
@@ -309,7 +315,8 @@ fn gen3d_grids(
             // dst for the final step is B of `layout`; intermediate steps
             // use the A side of the scratch layouts.
             step(
-                machine,
+                cfg,
+                sink,
                 layout,
                 src,
                 dst,
@@ -328,8 +335,9 @@ fn gen3d_grids(
 
 /// One gather-mode vector time-step over unit-stride range `[lo, hi)`.
 #[allow(clippy::too_many_arguments)]
-fn step(
-    machine: &mut Machine,
+fn step<S: KirSink>(
+    cfg: &SimConfig,
+    sink: &mut S,
     layout: &Layout,
     src: &Layout,
     dst: &Layout,
@@ -340,34 +348,33 @@ fn step(
     lo: isize,
     hi: isize,
 ) {
-    let vlen = machine.cfg.vlen as isize;
+    let vlen = cfg.vlen as isize;
     let n = layout.n as isize;
     let dims = layout.spec.dims;
     // sources always read the A side (scratch grids live in their layout's
     // A array); only the final step writes the real B.
     let src_addr = |idx: &[isize]| src.a_addr(idx);
     let dst_addr = |idx: &[isize]| if dst_is_b { dst.b_addr(idx) } else { dst.a_addr(idx) };
-    let outer_loop = |machine: &mut Machine, outer: &[isize]| {
+    let outer_loop = |sink: &mut S, outer: &[isize]| {
         let mut c = lo;
         while c < hi {
             let jam = JAM.min(((hi - c) / vlen) as usize).max(1);
             for u in 0..jam {
-                machine.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+                sink.emit(Op::Zero { dst: VReg(V_ACC0 + u as u8) });
             }
             for (slot, (off, di)) in taps.iter().enumerate() {
                 let coeff = if resident {
                     VReg(V_COEFF0 + slot as u8)
                 } else {
-                    machine
-                        .emit(Instr::LdSplat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
+                    sink.emit(Op::Splat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
                     VReg(V_CSPILL)
                 };
                 for u in 0..jam {
                     let mut idx: Vec<isize> =
                         outer.iter().enumerate().map(|(d, &o)| o + off[d]).collect();
                     idx.push(c + (u as isize) * vlen + off[dims - 1]);
-                    machine.emit(Instr::LdVec { dst: VReg(V_LOAD), addr: src_addr(&idx) });
-                    machine.emit(Instr::VFma {
+                    sink.emit(Op::Load { dst: VReg(V_LOAD), addr: src_addr(&idx) });
+                    sink.emit(Op::Fma {
                         acc: VReg(V_ACC0 + u as u8),
                         a: VReg(V_LOAD),
                         b: coeff,
@@ -377,19 +384,19 @@ fn step(
             for u in 0..jam {
                 let mut idx: Vec<isize> = outer.to_vec();
                 idx.push(c + (u as isize) * vlen);
-                machine.emit(Instr::StVec { src: VReg(V_ACC0 + u as u8), addr: dst_addr(&idx) });
+                sink.emit(Op::Store { src: VReg(V_ACC0 + u as u8), addr: dst_addr(&idx) });
             }
             c += (jam as isize) * vlen;
         }
     };
     if dims == 2 {
         for i in 0..n {
-            outer_loop(machine, &[i]);
+            outer_loop(sink, &[i]);
         }
     } else {
         for i in 0..n {
             for j in 0..n {
-                outer_loop(machine, &[i, j]);
+                outer_loop(sink, &[i, j]);
             }
         }
     }
@@ -399,19 +406,19 @@ fn step(
 mod tests {
     use super::*;
     use crate::stencil::{reference, DenseGrid, StencilSpec};
-    use crate::sim::SimConfig;
+    use crate::sim::Machine;
 
     #[test]
     fn tv_computes_four_steps() {
         let cfg = SimConfig::default();
-        let mut m = Machine::new(cfg);
+        let mut m = Machine::new(cfg.clone());
         let spec = StencilSpec::star2d(1);
         let coeffs = CoeffTensor::paper_default(spec);
         let g = DenseGrid::verification_input(&[34, 34], 3); // N = 32
         let layout = Layout::alloc(&mut m, spec, &g);
         let table = CoeffTable::install_splats(&mut m, &coeffs);
         let scratch = setup(&mut m, &layout);
-        generate(&mut m, &layout, &scratch, &coeffs, &table).unwrap();
+        generate(&cfg, &layout, &scratch, &coeffs, &table, &mut m).unwrap();
         let got = layout.read_b(&m);
         let want = reference::evolve(&coeffs, &g, TIME_BLOCK);
         let err = got.max_abs_diff_interior(&want, 1);

@@ -18,7 +18,8 @@
 
 use super::common::{CoeffTable, Layout};
 use crate::stencil::CoeffTensor;
-use crate::sim::{Instr, Sink, SimConfig, VReg};
+use crate::kir::{KirSink, Op, VReg};
+use crate::sim::SimConfig;
 
 /// Unroll-and-jam factor (independent accumulators).
 const JAM: usize = 4;
@@ -37,7 +38,7 @@ pub fn generate(
     layout: &Layout,
     coeffs: &CoeffTensor,
     table: &CoeffTable,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) -> anyhow::Result<()> {
     let n = cfg.vlen;
     anyhow::ensure!(layout.n % n == 0, "domain must be a multiple of the vector length");
@@ -52,7 +53,7 @@ pub fn generate(
     let resident = taps.len() <= (cfg.n_vregs - V_COEFF0 as usize);
     if resident {
         for (slot, (_, di)) in taps.iter().enumerate() {
-            sink.emit(Instr::LdSplat {
+            sink.emit(Op::Splat {
                 dst: VReg(V_COEFF0 + slot as u8),
                 addr: table.splat_addr(*di),
             });
@@ -100,17 +101,17 @@ fn emit_strip(
     outer: &[isize],
     c0: isize,
     jam: usize,
-    sink: &mut impl Sink,
+    sink: &mut impl KirSink,
 ) {
     let n = cfg.vlen as isize;
     for u in 0..jam {
-        sink.emit(Instr::VZero { dst: VReg(V_ACC0 + u as u8) });
+        sink.emit(Op::Zero { dst: VReg(V_ACC0 + u as u8) });
     }
     for (slot, (off, di)) in taps.iter().enumerate() {
         let coeff = if resident {
             VReg(V_COEFF0 + slot as u8)
         } else {
-            sink.emit(Instr::LdSplat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
+            sink.emit(Op::Splat { dst: VReg(V_CSPILL), addr: table.splat_addr(*di) });
             VReg(V_CSPILL)
         };
         for u in 0..jam {
@@ -120,21 +121,21 @@ fn emit_strip(
                 idx.push(o + off[d]);
             }
             idx.push(c0 + (u as isize) * n + off[layout.spec.dims - 1]);
-            sink.emit(Instr::LdVec { dst: VReg(V_LOAD), addr: layout.a_addr(&idx) });
-            sink.emit(Instr::VFma { acc: VReg(V_ACC0 + u as u8), a: VReg(V_LOAD), b: coeff });
+            sink.emit(Op::Load { dst: VReg(V_LOAD), addr: layout.a_addr(&idx) });
+            sink.emit(Op::Fma { acc: VReg(V_ACC0 + u as u8), a: VReg(V_LOAD), b: coeff });
         }
     }
     for u in 0..jam {
         let mut idx: Vec<isize> = outer.to_vec();
         idx.push(c0 + (u as isize) * n);
-        sink.emit(Instr::StVec { src: VReg(V_ACC0 + u as u8), addr: layout.b_addr(&idx) });
+        sink.emit(Op::Store { src: VReg(V_ACC0 + u as u8), addr: layout.b_addr(&idx) });
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::isa::Program;
+    use crate::kir::Kernel;
     use crate::stencil::{DenseGrid, StencilSpec};
 
     #[test]
@@ -148,14 +149,14 @@ mod tests {
         let g = DenseGrid::verification_input(&[18, 18], 1);
         let layout = Layout::alloc(&mut m, spec, &g);
         let table = CoeffTable::install_splats(&mut m, &coeffs);
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         generate(&cfg, &layout, &coeffs, &table, &mut p).unwrap();
         let outvecs = 16 * 2;
-        assert_eq!(p.count(|i| matches!(i, Instr::VFma { .. })), 9 * outvecs);
-        assert_eq!(p.count(|i| matches!(i, Instr::LdVec { .. })), 9 * outvecs);
-        assert_eq!(p.count(|i| matches!(i, Instr::StVec { .. })), outvecs);
+        assert_eq!(p.count(|i| matches!(i, Op::Fma { .. })), 9 * outvecs);
+        assert_eq!(p.count(|i| matches!(i, Op::Load { .. })), 9 * outvecs);
+        assert_eq!(p.count(|i| matches!(i, Op::Store { .. })), outvecs);
         // 9 resident coefficient splats
-        assert_eq!(p.count(|i| matches!(i, Instr::LdSplat { .. })), 9);
+        assert_eq!(p.count(|i| matches!(i, Op::Splat { .. })), 9);
     }
 
     #[test]
@@ -169,10 +170,10 @@ mod tests {
         let g = DenseGrid::verification_input(&[22, 22], 1);
         let layout = Layout::alloc(&mut m, spec, &g);
         let table = CoeffTable::install_splats(&mut m, &coeffs);
-        let mut p = Program::default();
+        let mut p = Kernel::default();
         generate(&cfg, &layout, &coeffs, &table, &mut p).unwrap();
         let strips = 16 / 8 / 4; // ceil over jam... one 2-vector strip per row
         let _ = strips;
-        assert!(p.count(|i| matches!(i, Instr::LdSplat { .. })) > 49);
+        assert!(p.count(|i| matches!(i, Op::Splat { .. })) > 49);
     }
 }

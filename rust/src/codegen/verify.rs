@@ -1,13 +1,23 @@
-//! End-to-end method runner: allocate grids in simulator memory, generate
-//! and execute a method's program, verify against the scalar oracle, and
-//! return timing statistics.
+//! End-to-end method runners: allocate grids in backend memory, generate
+//! a method's KIR program, execute it, verify against the scalar oracle,
+//! and report.
 //!
-//! Every benchmark number in this repo flows through [`run_method`], so a
-//! result is only ever reported for a program that produced bit-accurate
-//! (within 1e-9) stencil output.
+//! Two backends, one generation path:
+//!
+//! - [`run_method`] — the simulator: generators stream KIR into the
+//!   [`Machine`] (which lowers each op to the sim ISA on emit), returning
+//!   cycle-approximate timing. Every benchmark number in this repo flows
+//!   through it, so a result is only ever reported for a program that
+//!   produced bit-accurate (within 1e-9) stencil output.
+//! - [`run_host`] — the host: the same generators emit the same program,
+//!   captured once and interpreted natively over flat f64 buffers by
+//!   [`crate::kir::HostMachine`], returning wall-clock seconds. Host
+//!   output is bitwise identical to the simulated output
+//!   (`rust/tests/kir_equivalence.rs`).
 
 use super::common::{CoeffTable, Layout, OuterParams};
 use super::{dlt, outer, scalar, tv, vectorize};
+use crate::kir::{HostMachine, Kernel};
 use crate::scatter::build_cover;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::{Machine, RunStats, SimConfig};
@@ -56,6 +66,9 @@ pub struct MethodResult {
     pub stats: RunStats,
     /// Max |error| vs. the scalar reference over the interior.
     pub max_err: f64,
+    /// The produced output grid (storage shape) — what `max_err` was
+    /// computed from, kept so callers can compare backends bitwise.
+    pub grid: DenseGrid,
 }
 
 impl MethodResult {
@@ -157,11 +170,12 @@ pub fn run_method(
             }
             Method::Tv => {
                 tv::generate(
-                    &mut machine,
+                    &cfg2,
                     &layout,
                     tv_scratch.as_ref().unwrap(),
                     &coeffs,
                     splat_table.as_ref().unwrap(),
+                    &mut machine,
                 )?;
                 steps = tv::TIME_BLOCK;
             }
@@ -174,7 +188,122 @@ pub fn run_method(
     };
     let want = reference::evolve(&coeffs, &grid, steps);
     let max_err = got.max_abs_diff_interior(&want, spec.order);
-    Ok(MethodResult { method, spec, n, steps, stats, max_err })
+    Ok(MethodResult { method, spec, n, steps, stats, max_err, grid: got })
+}
+
+/// Outcome of one verified host-backend run.
+#[derive(Debug, Clone)]
+pub struct HostRun {
+    /// The produced output grid (storage shape).
+    pub grid: DenseGrid,
+    /// Time steps the program advanced (1, or 4 for TV).
+    pub steps: usize,
+    /// Pure-execution wall-clock seconds (program generated beforehand).
+    pub seconds: f64,
+    /// Non-marker operations executed.
+    pub ops: u64,
+    /// Max |error| vs. the scalar reference over the interior.
+    pub max_err: f64,
+}
+
+impl HostRun {
+    /// True when the run reproduced the oracle (same bar as
+    /// [`MethodResult::verified`]).
+    pub fn verified(&self) -> bool {
+        self.max_err < 1e-9
+    }
+}
+
+/// Everything the host backend needs to run one method: the prepared
+/// machine (grids + tables resident), the layouts, and the captured
+/// program.
+struct HostPrep {
+    machine: HostMachine,
+    layout: Layout,
+    dlt: Option<dlt::DltLayout>,
+    steps: usize,
+    kernel: Kernel,
+    coeffs: CoeffTensor,
+    grid: DenseGrid,
+}
+
+fn prepare_host(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+) -> anyhow::Result<HostPrep> {
+    let coeffs = CoeffTensor::paper_default(spec);
+    let shape = vec![n + 2 * spec.order; spec.dims];
+    let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+    let mut machine = HostMachine::from_config(cfg);
+    let layout = Layout::alloc(&mut machine, spec, &grid);
+    let mut kernel = Kernel::default();
+    let mut dlt_layout = None;
+    let mut steps = 1usize;
+    match method {
+        Method::Outer(params) => {
+            let cover = build_cover(&coeffs, params.option)?;
+            let table = CoeffTable::install_full(&mut machine, &coeffs, &cover);
+            outer::generate(cfg, &layout, &cover, &table, params, &mut kernel)?;
+        }
+        Method::AutoVec => {
+            let table = CoeffTable::install_splats(&mut machine, &coeffs);
+            vectorize::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+        }
+        Method::Scalar => {
+            let table = CoeffTable::install_splats(&mut machine, &coeffs);
+            scalar::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+        }
+        Method::Dlt => {
+            let table = CoeffTable::install_splats(&mut machine, &coeffs);
+            let d = dlt::DltLayout::build(&mut machine, &layout, &grid);
+            dlt::generate(cfg, &layout, &d, &coeffs, &table, &mut kernel)?;
+            dlt_layout = Some(d);
+        }
+        Method::Tv => {
+            let table = CoeffTable::install_splats(&mut machine, &coeffs);
+            let scratch = tv::setup(&mut machine, &layout);
+            tv::generate(cfg, &layout, &scratch, &coeffs, &table, &mut kernel)?;
+            steps = tv::TIME_BLOCK;
+        }
+    }
+    Ok(HostPrep { machine, layout, dlt: dlt_layout, steps, kernel, coeffs, grid })
+}
+
+/// Capture the KIR program a method generates for `spec` at extent `n`
+/// (what `dump-ir` prints and the cost model counts).
+pub fn kernel_for(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+) -> anyhow::Result<Kernel> {
+    prepare_host(cfg, spec, n, method).map(|p| p.kernel)
+}
+
+/// Run `method` on the host backend and verify the result.
+///
+/// The program is generated (and all tables installed) before the clock
+/// starts, so `seconds` measures pure native execution — the wall-clock
+/// column next to the simulator's cycle counts.
+pub fn run_host(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+) -> anyhow::Result<HostRun> {
+    let mut p = prepare_host(cfg, spec, n, method)?;
+    let t0 = std::time::Instant::now();
+    p.machine.run(&p.kernel.ops);
+    let seconds = t0.elapsed().as_secs_f64();
+    let got = match &p.dlt {
+        Some(d) => d.read_b(&p.machine, &p.grid),
+        None => p.layout.read_b(&p.machine),
+    };
+    let want = reference::evolve(&p.coeffs, &p.grid, p.steps);
+    let max_err = got.max_abs_diff_interior(&want, spec.order);
+    Ok(HostRun { grid: got, steps: p.steps, seconds, ops: p.machine.executed, max_err })
 }
 
 /// Speedup of `m` over `base`, normalized per point per step.
@@ -297,6 +426,47 @@ mod tests {
         let p = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 1, scheduled: false };
         check(StencilSpec::box3d(1), 8, Method::Outer(p));
         check(StencilSpec::star3d(2), 8, Method::Outer(p));
+    }
+
+    #[test]
+    fn host_backend_matches_sim_backend_bitwise() {
+        let cfg = SimConfig::default();
+        for (spec, n, method) in [
+            (StencilSpec::box2d(1), 16, Method::Scalar),
+            (StencilSpec::star2d(2), 16, Method::AutoVec),
+            (
+                StencilSpec::box2d(1),
+                16,
+                Method::Outer(OuterParams::paper_best(StencilSpec::box2d(1))),
+            ),
+        ] {
+            let sim = run_method(&cfg, spec, n, method, false).unwrap();
+            let host = run_host(&cfg, spec, n, method).unwrap();
+            assert!(host.verified(), "{spec} {method}: {}", host.max_err);
+            assert_eq!(host.steps, sim.steps);
+            assert_eq!(host.grid.data, sim.grid.data, "{spec} {method}");
+            assert!(host.ops > 0 && host.seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn kernel_capture_matches_streamed_program_size() {
+        let cfg = SimConfig::default();
+        // scalar star2d(1) emits no markers: 16² points × (zero + 5 taps
+        // × (2 loads + fma) + store) = 17 ops per point
+        let k = kernel_for(&cfg, StencilSpec::star2d(1), 16, Method::Scalar).unwrap();
+        assert_eq!(k.len(), 256 * 17);
+        assert_eq!(k.stats().markers, 0);
+        let spec = StencilSpec::box2d(1);
+        let ko = kernel_for(
+            &cfg,
+            spec,
+            16,
+            Method::Outer(OuterParams::paper_best(spec)),
+        )
+        .unwrap();
+        assert!(ko.outer_count() > 0);
+        assert!(ko.stats().markers > 0, "outer programs carry structure markers");
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! KIR → host execution: a functional interpreter over flat f64 buffers.
+//!
+//! This is the second backend: the same programs the simulator times are
+//! executed *natively* on the CPU — real register files as plain arrays,
+//! no cache model, no scoreboard — which is what lets the serving hot
+//! path run the paper's outer-product scatter algorithm for real (and
+//! what the host wall-clock columns of the bench snapshot measure).
+//!
+//! Functional semantics are kept operation-for-operation identical to
+//! [`crate::sim::Machine::exec`] (same loop orders, same accumulation
+//! order), so a program's host output is **bitwise identical** to its
+//! simulated output — `rust/tests/kir_equivalence.rs` enforces this
+//! across all five generators.
+
+use super::ir::{KirSink, Op};
+use super::mem::Arena;
+use crate::sim::SimConfig;
+
+/// Guard band in elements around every allocation (mirrors the simulator
+/// machine's allocator, so halo reads just outside an array stay mapped
+/// and read zeros on both backends).
+const GUARD: usize = 64;
+
+/// The host execution backend: memory + register files, no timing.
+#[derive(Debug, Clone)]
+pub struct HostMachine {
+    /// Vector length in f64 lanes.
+    pub vlen: usize,
+    /// Flat data memory (f64 elements).
+    pub mem: Vec<f64>,
+    next_alloc: usize,
+    /// Flat vector register file (`n_vregs × vlen`).
+    vregs: Vec<f64>,
+    /// Flat matrix register file (`n_mregs × vlen²`).
+    mregs: Vec<f64>,
+    /// Scratch for aliasing-safe `Ext`.
+    tmp: Vec<f64>,
+    /// Non-marker operations executed.
+    pub executed: u64,
+}
+
+impl HostMachine {
+    /// Fresh host machine with explicit register-file shape.
+    pub fn new(vlen: usize, n_vregs: usize, n_mregs: usize) -> HostMachine {
+        HostMachine {
+            vlen,
+            mem: Vec::new(),
+            next_alloc: 0,
+            vregs: vec![0.0; vlen * n_vregs],
+            mregs: vec![0.0; vlen * vlen * n_mregs],
+            tmp: vec![0.0; vlen.max(8)],
+            executed: 0,
+        }
+    }
+
+    /// Host machine shaped like the simulated machine (`vlen`, register
+    /// counts) — programs generated for one run on the other.
+    pub fn from_config(cfg: &SimConfig) -> HostMachine {
+        HostMachine::new(cfg.vlen, cfg.n_vregs, cfg.n_mregs)
+    }
+
+    /// Execute a whole program.
+    pub fn run(&mut self, ops: &[Op]) {
+        for op in ops {
+            self.exec(op);
+        }
+    }
+
+    /// Execute one operation functionally (markers are skipped).
+    pub fn exec(&mut self, op: &Op) {
+        let vlen = self.vlen;
+        if !op.is_marker() {
+            self.executed += 1;
+        }
+        match *op {
+            Op::Load { dst, addr } => {
+                let d0 = dst.0 as usize * vlen;
+                self.vregs[d0..d0 + vlen].copy_from_slice(&self.mem[addr..addr + vlen]);
+            }
+            Op::Store { src, addr } => {
+                let s0 = src.0 as usize * vlen;
+                self.mem[addr..addr + vlen].copy_from_slice(&self.vregs[s0..s0 + vlen]);
+            }
+            Op::Gather { dst, base, stride } => {
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] = self.mem[base + k * stride];
+                }
+            }
+            Op::Splat { dst, addr } => {
+                let v = self.mem[addr];
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(v);
+            }
+            Op::StoreLane { src, lane, addr } => {
+                self.mem[addr] = self.vregs[src.0 as usize * vlen + lane];
+            }
+            Op::Ext { dst, lo, hi, shift } => {
+                debug_assert!(shift <= vlen);
+                for k in 0..vlen {
+                    let pos = k + shift;
+                    self.tmp[k] = if pos < vlen {
+                        self.vregs[lo.0 as usize * vlen + pos]
+                    } else {
+                        self.vregs[hi.0 as usize * vlen + pos - vlen]
+                    };
+                }
+                let d0 = dst.0 as usize * vlen;
+                self.vregs[d0..d0 + vlen].copy_from_slice(&self.tmp[..vlen]);
+            }
+            Op::Dup { dst, src, lane } => {
+                let v = self.vregs[src.0 as usize * vlen + lane];
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(v);
+            }
+            Op::Fma { acc, a, b } => {
+                for k in 0..vlen {
+                    let prod =
+                        self.vregs[a.0 as usize * vlen + k] * self.vregs[b.0 as usize * vlen + k];
+                    self.vregs[acc.0 as usize * vlen + k] += prod;
+                }
+            }
+            Op::FmaLane { acc, a, b, lane } => {
+                let c = self.vregs[b.0 as usize * vlen + lane];
+                for k in 0..vlen {
+                    let prod = self.vregs[a.0 as usize * vlen + k] * c;
+                    self.vregs[acc.0 as usize * vlen + k] += prod;
+                }
+            }
+            Op::Add { dst, a, b } => {
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] =
+                        self.vregs[a.0 as usize * vlen + k] + self.vregs[b.0 as usize * vlen + k];
+                }
+            }
+            Op::Mul { dst, a, b } => {
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] =
+                        self.vregs[a.0 as usize * vlen + k] * self.vregs[b.0 as usize * vlen + k];
+                }
+            }
+            Op::Zero { dst } => {
+                self.vregs[dst.0 as usize * vlen..(dst.0 as usize + 1) * vlen].fill(0.0);
+            }
+            Op::TileZero { m } => {
+                self.mregs[m.0 as usize * vlen * vlen..(m.0 as usize + 1) * vlen * vlen].fill(0.0);
+            }
+            Op::Outer { m, a, b } => {
+                for i in 0..vlen {
+                    let ai = self.vregs[a.0 as usize * vlen + i];
+                    for j in 0..vlen {
+                        self.mregs[m.0 as usize * vlen * vlen + (i * vlen + j)] +=
+                            ai * self.vregs[b.0 as usize * vlen + j];
+                    }
+                }
+            }
+            Op::RowIn { m, row, src } => {
+                for k in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)] =
+                        self.vregs[src.0 as usize * vlen + k];
+                }
+            }
+            Op::RowOut { dst, m, row } => {
+                for k in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + k] =
+                        self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)];
+                }
+            }
+            Op::ColIn { m, col, src } => {
+                for i in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (i * vlen + col)] =
+                        self.vregs[src.0 as usize * vlen + i];
+                }
+            }
+            Op::ColOut { dst, m, col } => {
+                for i in 0..vlen {
+                    self.vregs[dst.0 as usize * vlen + i] =
+                        self.mregs[m.0 as usize * vlen * vlen + (i * vlen + col)];
+                }
+            }
+            Op::RowLoad { m, row, addr } => {
+                for k in 0..vlen {
+                    self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)] = self.mem[addr + k];
+                }
+            }
+            Op::RowStore { m, row, addr } => {
+                for k in 0..vlen {
+                    self.mem[addr + k] = self.mregs[m.0 as usize * vlen * vlen + (row * vlen + k)];
+                }
+            }
+            Op::Begin(_) | Op::End(_) => {}
+        }
+    }
+}
+
+impl Arena for HostMachine {
+    fn vlen(&self) -> usize {
+        self.vlen
+    }
+
+    /// Same formula as the simulator machine's allocator: vector-aligned
+    /// base, `GUARD` elements of zero padding on both sides.
+    fn alloc(&mut self, n: usize) -> usize {
+        let base = (self.next_alloc + GUARD).div_ceil(self.vlen) * self.vlen;
+        self.next_alloc = base + n + GUARD;
+        if self.mem.len() < self.next_alloc {
+            self.mem.resize(self.next_alloc, 0.0);
+        }
+        base
+    }
+
+    fn write_mem(&mut self, addr: usize, data: &[f64]) {
+        self.mem[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    fn read_mem(&self, addr: usize, n: usize) -> &[f64] {
+        &self.mem[addr..addr + n]
+    }
+}
+
+impl KirSink for HostMachine {
+    /// Execute-on-emit: generators can stream straight into the host
+    /// backend, exactly as they stream into the simulator.
+    fn emit(&mut self, op: Op) {
+        self.exec(&op);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::ir::{MReg, VReg};
+
+    fn hm() -> HostMachine {
+        HostMachine::new(8, 32, 8)
+    }
+
+    #[test]
+    fn load_fma_store_roundtrip() {
+        let mut m = hm();
+        let a = m.alloc(8);
+        let b = m.alloc(8);
+        m.write_mem(a, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        m.exec(&Op::Load { dst: VReg(0), addr: a });
+        m.exec(&Op::Load { dst: VReg(1), addr: a });
+        m.exec(&Op::Zero { dst: VReg(2) });
+        m.exec(&Op::Fma { acc: VReg(2), a: VReg(0), b: VReg(1) });
+        m.exec(&Op::Store { src: VReg(2), addr: b });
+        assert_eq!(m.read_mem(b, 8), &[1., 4., 9., 16., 25., 36., 49., 64.]);
+        assert_eq!(m.executed, 5);
+    }
+
+    #[test]
+    fn outer_product_accumulates_and_transposes() {
+        let mut m = hm();
+        let a = m.alloc(8);
+        let b = m.alloc(8);
+        m.write_mem(a, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        m.write_mem(b, &[10., 20., 30., 40., 50., 60., 70., 80.]);
+        m.exec(&Op::Load { dst: VReg(0), addr: a });
+        m.exec(&Op::Load { dst: VReg(1), addr: b });
+        m.exec(&Op::TileZero { m: MReg(0) });
+        m.exec(&Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+        m.exec(&Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+        m.exec(&Op::RowOut { dst: VReg(2), m: MReg(0), row: 2 });
+        let c = m.alloc(8);
+        m.exec(&Op::Store { src: VReg(2), addr: c });
+        let expect: Vec<f64> =
+            [10., 20., 30., 40., 50., 60., 70., 80.].iter().map(|x| 6.0 * x).collect();
+        assert_eq!(m.read_mem(c, 8), &expect[..]);
+        // column read-back transposes
+        m.exec(&Op::ColOut { dst: VReg(3), m: MReg(0), col: 1 });
+        m.exec(&Op::Store { src: VReg(3), addr: c });
+        let expect: Vec<f64> = (1..=8).map(|x| 2.0 * (x as f64) * 20.0).collect();
+        assert_eq!(m.read_mem(c, 8), &expect[..]);
+    }
+
+    #[test]
+    fn ext_assembles_shifted_vectors() {
+        let mut m = hm();
+        let a = m.alloc(16);
+        m.write_mem(a, &(0..16).map(|x| x as f64).collect::<Vec<_>>());
+        m.exec(&Op::Load { dst: VReg(0), addr: a });
+        m.exec(&Op::Load { dst: VReg(1), addr: a + 8 });
+        m.exec(&Op::Ext { dst: VReg(0), lo: VReg(0), hi: VReg(1), shift: 3 });
+        let out = m.alloc(8);
+        m.exec(&Op::Store { src: VReg(0), addr: out });
+        // aliasing-safe: dst == lo
+        assert_eq!(m.read_mem(out, 8), &[3., 4., 5., 6., 7., 8., 9., 10.]);
+    }
+
+    #[test]
+    fn alloc_mirrors_sim_machine() {
+        // same allocation sequence → same base addresses on both backends
+        use crate::sim::Machine;
+        let cfg = SimConfig::default();
+        let mut sim = Machine::new(cfg.clone());
+        let mut host = HostMachine::from_config(&cfg);
+        for n in [100usize, 17, 64, 1000] {
+            assert_eq!(Machine::alloc(&mut sim, n), host.alloc(n));
+        }
+        assert!(host.read_mem(0, 64).iter().all(|&v| v == 0.0));
+    }
+}

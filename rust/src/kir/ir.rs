@@ -1,0 +1,438 @@
+//! The IR itself: registers, typed operations, structure markers, and
+//! per-program operation statistics.
+//!
+//! Field names deliberately mirror the simulator ISA's so the two stay
+//! easy to diff; only the *names* of the operations are backend-neutral
+//! (`Load`/`Outer`/`RowIn` rather than SME mnemonics). Addresses are
+//! element indices into the kernel's flat f64 memory plan (see
+//! [`crate::kir::mem::Arena`]); both backends interpret them identically.
+
+use std::fmt;
+
+/// A vector register id (`z0..`). Shared by the IR and every backend —
+/// the simulator ISA re-exports this type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VReg(pub u8);
+
+/// A matrix (tile) register id (`za0..`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MReg(pub u8);
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "z{}", self.0)
+    }
+}
+
+impl fmt::Display for MReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "za{}", self.0)
+    }
+}
+
+/// Structure markers: the loop/unroll shape of the generated program.
+///
+/// Markers carry no semantics — both backends skip them — but they make
+/// the IR inspectable (`dump-ir` indents on them) and let tools reason
+/// about the §4.2 unroll structure without re-deriving it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Marker {
+    /// An unrolled group of output tiles (§4.2): domain origin plus the
+    /// group's tile counts along the unrolled dimensions (`ui × uk`; 2D
+    /// groups have `ui = 1` and `k0 = 0`).
+    TileGroup { i0: isize, j0: isize, k0: isize, ui: usize, uk: usize },
+    /// A named program phase (e.g. the 3D orthogonal cover's second pass
+    /// over `i`-lines).
+    Phase(&'static str),
+}
+
+/// One kernel-IR operation.
+///
+/// The op set captures exactly what the paper's algorithm needs: vector
+/// loads/stores (contiguous, gather, broadcast), inter-register
+/// reorganization (`Ext`/`Dup`), vector FMA forms, and the matrix-tile
+/// operations (outer-product accumulate, row/column moves, row
+/// loads/stores). `Begin`/`End` are structure markers, not computation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    // ---- memory, vector granularity ----
+    /// `dst <- mem[addr .. addr+vlen]` (contiguous, aligned by layout).
+    Load { dst: VReg, addr: usize },
+    /// `mem[addr .. addr+vlen] <- src`.
+    Store { src: VReg, addr: usize },
+    /// Gather: `dst[k] <- mem[base + k*stride]` (one access per lane).
+    Gather { dst: VReg, base: usize, stride: usize },
+    /// Broadcast load: `dst[k] <- mem[addr]` for all lanes.
+    Splat { dst: VReg, addr: usize },
+    /// Store one lane: `mem[addr] <- src[lane]`.
+    StoreLane { src: VReg, lane: usize, addr: usize },
+
+    // ---- inter-register reorganization (§4.3) ----
+    /// `dst <- (lo ++ hi)[shift .. shift+vlen]`.
+    Ext { dst: VReg, lo: VReg, hi: VReg, shift: usize },
+    /// Broadcast one lane: `dst[k] <- src[lane]`.
+    Dup { dst: VReg, src: VReg, lane: usize },
+
+    // ---- vector arithmetic ----
+    /// `acc[k] += a[k] * b[k]`.
+    Fma { acc: VReg, a: VReg, b: VReg },
+    /// `acc[k] += a[k] * b[lane]` (indexed FMA).
+    FmaLane { acc: VReg, a: VReg, b: VReg, lane: usize },
+    /// `dst[k] = a[k] + b[k]`.
+    Add { dst: VReg, a: VReg, b: VReg },
+    /// `dst[k] = a[k] * b[k]`.
+    Mul { dst: VReg, a: VReg, b: VReg },
+    /// `dst[k] = 0`.
+    Zero { dst: VReg },
+
+    // ---- matrix-tile operations ----
+    /// Zero the whole tile.
+    TileZero { m: MReg },
+    /// Outer-product accumulate: `m[i][j] += a[i] * b[j]` (Eq. (12)).
+    Outer { m: MReg, a: VReg, b: VReg },
+    /// `m[row][*] <- src`.
+    RowIn { m: MReg, row: usize, src: VReg },
+    /// `dst <- m[row][*]`.
+    RowOut { dst: VReg, m: MReg, row: usize },
+    /// `m[*][col] <- src` (transpose building block, §4.1).
+    ColIn { m: MReg, col: usize, src: VReg },
+    /// `dst <- m[*][col]`.
+    ColOut { dst: VReg, m: MReg, col: usize },
+    /// `m[row][*] <- mem[addr .. addr+vlen]`.
+    RowLoad { m: MReg, row: usize, addr: usize },
+    /// `mem[addr .. addr+vlen] <- m[row][*]`.
+    RowStore { m: MReg, row: usize, addr: usize },
+
+    // ---- structure (no computation; backends skip these) ----
+    /// Open a structural region.
+    Begin(Marker),
+    /// Close a structural region.
+    End(Marker),
+}
+
+impl Op {
+    /// True for structure markers (no computation, lowered to nothing).
+    pub fn is_marker(&self) -> bool {
+        matches!(self, Op::Begin(_) | Op::End(_))
+    }
+
+    /// Floating-point operations this op performs at vector length `vlen`.
+    pub fn flops(&self, vlen: usize) -> u64 {
+        match self {
+            Op::Fma { .. } | Op::FmaLane { .. } => 2 * vlen as u64,
+            Op::Add { .. } | Op::Mul { .. } => vlen as u64,
+            Op::Outer { .. } => 2 * (vlen * vlen) as u64,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Op::Load { dst, addr } => write!(f, "load    {dst} <- [{addr}]"),
+            Op::Store { src, addr } => write!(f, "store   [{addr}] <- {src}"),
+            Op::Gather { dst, base, stride } => {
+                write!(f, "gather  {dst} <- [{base} +k*{stride}]")
+            }
+            Op::Splat { dst, addr } => write!(f, "splat   {dst} <- [{addr}]"),
+            Op::StoreLane { src, lane, addr } => {
+                write!(f, "store   [{addr}] <- {src}[{lane}]")
+            }
+            Op::Ext { dst, lo, hi, shift } => {
+                write!(f, "ext     {dst} <- ({lo} ++ {hi}) >> {shift}")
+            }
+            Op::Dup { dst, src, lane } => write!(f, "dup     {dst} <- {src}[{lane}]"),
+            Op::Fma { acc, a, b } => write!(f, "fma     {acc} += {a} * {b}"),
+            Op::FmaLane { acc, a, b, lane } => {
+                write!(f, "fma     {acc} += {a} * {b}[{lane}]")
+            }
+            Op::Add { dst, a, b } => write!(f, "add     {dst} = {a} + {b}"),
+            Op::Mul { dst, a, b } => write!(f, "mul     {dst} = {a} * {b}"),
+            Op::Zero { dst } => write!(f, "zero    {dst}"),
+            Op::TileZero { m } => write!(f, "zero    {m}"),
+            Op::Outer { m, a, b } => write!(f, "outer   {m} += {a} (x) {b}"),
+            Op::RowIn { m, row, src } => write!(f, "mov     {m}.row[{row}] <- {src}"),
+            Op::RowOut { dst, m, row } => write!(f, "mov     {dst} <- {m}.row[{row}]"),
+            Op::ColIn { m, col, src } => write!(f, "mov     {m}.col[{col}] <- {src}"),
+            Op::ColOut { dst, m, col } => write!(f, "mov     {dst} <- {m}.col[{col}]"),
+            Op::RowLoad { m, row, addr } => {
+                write!(f, "load    {m}.row[{row}] <- [{addr}]")
+            }
+            Op::RowStore { m, row, addr } => {
+                write!(f, "store   [{addr}] <- {m}.row[{row}]")
+            }
+            Op::Begin(m) => write!(f, "{} {{", marker_label(&m)),
+            Op::End(_) => write!(f, "}}"),
+        }
+    }
+}
+
+fn marker_label(m: &Marker) -> String {
+    match *m {
+        Marker::TileGroup { i0, j0, k0, ui, uk } => {
+            format!("group @({i0},{j0},{k0}) ui={ui} uk={uk}")
+        }
+        Marker::Phase(name) => format!("phase {name}"),
+    }
+}
+
+/// Consumer of generated kernel-IR operations.
+///
+/// Code generators emit into a `KirSink`, so a program can be captured
+/// ([`Kernel`]), lowered straight onto the simulator
+/// ([`crate::sim::Machine`] implements this via the
+/// [`crate::kir::lower`] mapping), executed natively on the host
+/// ([`crate::kir::HostMachine`]), or merely counted ([`OpStats`]) — all
+/// without multi-megabyte buffers when streaming.
+pub trait KirSink {
+    /// Consume one operation.
+    fn emit(&mut self, op: Op);
+}
+
+/// A captured kernel-IR program.
+#[derive(Debug, Default, Clone)]
+pub struct Kernel {
+    /// The operations, markers included, in emission order.
+    pub ops: Vec<Op>,
+}
+
+impl KirSink for Kernel {
+    fn emit(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+}
+
+impl Kernel {
+    /// Number of operations (markers included).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the kernel holds no operations.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Count operations matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.ops.iter().filter(|o| pred(o)).count()
+    }
+
+    /// Number of outer-product accumulates (what Table 1/2 count).
+    pub fn outer_count(&self) -> usize {
+        self.count(|o| matches!(o, Op::Outer { .. }))
+    }
+
+    /// Operation statistics over the whole program.
+    pub fn stats(&self) -> OpStats {
+        let mut s = OpStats::default();
+        for op in &self.ops {
+            s.add(op);
+        }
+        s
+    }
+}
+
+/// Per-class operation counters; also usable as a streaming [`KirSink`]
+/// (the cost model counts programs without buffering them).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpStats {
+    /// Contiguous vector loads.
+    pub loads: u64,
+    /// Contiguous vector stores.
+    pub stores: u64,
+    /// Gather loads (each occupies the memory pipe for `vlen` accesses).
+    pub gathers: u64,
+    /// Broadcast loads.
+    pub splats: u64,
+    /// Single-lane stores.
+    pub lane_stores: u64,
+    /// Tile-row loads from memory.
+    pub row_loads: u64,
+    /// Tile-row stores to memory.
+    pub row_stores: u64,
+    /// `Ext` reorganizations.
+    pub exts: u64,
+    /// `Dup` broadcasts.
+    pub dups: u64,
+    /// Vector FMAs (plain + indexed).
+    pub fmas: u64,
+    /// Vector adds + muls.
+    pub alu: u64,
+    /// Vector zeroings.
+    pub zeros: u64,
+    /// Tile ↔ vector row/column moves.
+    pub moves: u64,
+    /// Tile zeroings.
+    pub tile_zeros: u64,
+    /// Outer-product accumulates.
+    pub outer_products: u64,
+    /// Structure markers (not computation).
+    pub markers: u64,
+}
+
+impl OpStats {
+    /// Account one operation.
+    pub fn add(&mut self, op: &Op) {
+        match op {
+            Op::Load { .. } => self.loads += 1,
+            Op::Store { .. } => self.stores += 1,
+            Op::Gather { .. } => self.gathers += 1,
+            Op::Splat { .. } => self.splats += 1,
+            Op::StoreLane { .. } => self.lane_stores += 1,
+            Op::RowLoad { .. } => self.row_loads += 1,
+            Op::RowStore { .. } => self.row_stores += 1,
+            Op::Ext { .. } => self.exts += 1,
+            Op::Dup { .. } => self.dups += 1,
+            Op::Fma { .. } | Op::FmaLane { .. } => self.fmas += 1,
+            Op::Add { .. } | Op::Mul { .. } => self.alu += 1,
+            Op::Zero { .. } => self.zeros += 1,
+            Op::RowIn { .. } | Op::RowOut { .. } | Op::ColIn { .. } | Op::ColOut { .. } => {
+                self.moves += 1
+            }
+            Op::TileZero { .. } => self.tile_zeros += 1,
+            Op::Outer { .. } => self.outer_products += 1,
+            Op::Begin(_) | Op::End(_) => self.markers += 1,
+        }
+    }
+
+    /// Total non-marker operations.
+    pub fn total(&self) -> u64 {
+        self.loads
+            + self.stores
+            + self.gathers
+            + self.splats
+            + self.lane_stores
+            + self.row_loads
+            + self.row_stores
+            + self.exts
+            + self.dups
+            + self.fmas
+            + self.alu
+            + self.zeros
+            + self.moves
+            + self.tile_zeros
+            + self.outer_products
+    }
+
+    /// Load/store-pipe slots, with gathers expanded to one slot per lane
+    /// (the element-serialized behaviour both backends share).
+    pub fn lsu_slots(&self, vlen: usize) -> u64 {
+        self.loads
+            + self.stores
+            + self.splats
+            + self.lane_stores
+            + self.row_loads
+            + self.row_stores
+            + self.gathers * vlen as u64
+    }
+
+    /// Vector-ALU operations (reorganization, FMA, moves, zeroing).
+    pub fn valu_ops(&self) -> u64 {
+        self.exts + self.dups + self.fmas + self.alu + self.zeros + self.moves
+    }
+
+    /// Outer-product-unit operations (tile zero + outer accumulate).
+    pub fn opu_ops(&self) -> u64 {
+        self.tile_zeros + self.outer_products
+    }
+
+    /// Floating-point operations at vector length `vlen`.
+    pub fn flops(&self, vlen: usize) -> u64 {
+        self.fmas * 2 * vlen as u64
+            + self.alu * vlen as u64
+            + self.outer_products * 2 * (vlen * vlen) as u64
+    }
+}
+
+impl KirSink for OpStats {
+    fn emit(&mut self, op: Op) {
+        self.add(&op);
+    }
+}
+
+/// Render a kernel as indented text (markers open/close blocks), up to
+/// `limit` operations — the `dump-ir` CLI output.
+pub fn dump(kernel: &Kernel, limit: usize) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let mut depth = 0usize;
+    for (i, op) in kernel.ops.iter().enumerate() {
+        if i >= limit {
+            let _ = writeln!(out, "{:indent$}... ({} more)", "", kernel.ops.len() - i, indent = 2 * depth);
+            break;
+        }
+        if matches!(op, Op::End(_)) {
+            depth = depth.saturating_sub(1);
+        }
+        let _ = writeln!(out, "{:indent$}{op}", "", indent = 2 * depth);
+        if matches!(op, Op::Begin(_)) {
+            depth += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_classify_and_total() {
+        let mut k = Kernel::default();
+        k.emit(Op::Begin(Marker::Phase("t")));
+        k.emit(Op::Load { dst: VReg(0), addr: 0 });
+        k.emit(Op::Gather { dst: VReg(1), base: 0, stride: 8 });
+        k.emit(Op::TileZero { m: MReg(0) });
+        k.emit(Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+        k.emit(Op::RowStore { m: MReg(0), row: 0, addr: 64 });
+        k.emit(Op::End(Marker::Phase("t")));
+        let s = k.stats();
+        assert_eq!(s.total(), 5);
+        assert_eq!(s.markers, 2);
+        assert_eq!(s.opu_ops(), 2);
+        assert_eq!(s.lsu_slots(8), 1 + 8 + 1);
+        assert_eq!(s.flops(8), 2 * 64);
+        assert_eq!(k.outer_count(), 1);
+    }
+
+    #[test]
+    fn stats_sink_matches_kernel_stats() {
+        let mut k = Kernel::default();
+        let mut s = OpStats::default();
+        for op in [
+            Op::Zero { dst: VReg(0) },
+            Op::Fma { acc: VReg(0), a: VReg(1), b: VReg(2) },
+            Op::Store { src: VReg(0), addr: 3 },
+        ] {
+            k.emit(op);
+            s.emit(op);
+        }
+        assert_eq!(k.stats(), s);
+        assert_eq!(s.valu_ops(), 2);
+    }
+
+    #[test]
+    fn dump_indents_on_markers() {
+        let mut k = Kernel::default();
+        k.emit(Op::Begin(Marker::TileGroup { i0: 0, j0: 8, k0: 0, ui: 1, uk: 2 }));
+        k.emit(Op::TileZero { m: MReg(0) });
+        k.emit(Op::End(Marker::TileGroup { i0: 0, j0: 8, k0: 0, ui: 1, uk: 2 }));
+        let text = dump(&k, 100);
+        assert!(text.contains("group @(0,8,0) ui=1 uk=2 {"), "{text}");
+        assert!(text.contains("  zero    za0"), "{text}");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[2], "}");
+        // truncation note
+        let short = dump(&k, 1);
+        assert!(short.contains("(2 more)"), "{short}");
+    }
+
+    #[test]
+    fn marker_ops_are_markers() {
+        assert!(Op::Begin(Marker::Phase("x")).is_marker());
+        assert!(!Op::Zero { dst: VReg(0) }.is_marker());
+        assert_eq!(Op::Outer { m: MReg(0), a: VReg(0), b: VReg(0) }.flops(8), 128);
+    }
+}

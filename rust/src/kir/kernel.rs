@@ -1,0 +1,343 @@
+//! Compiled host kernels: a (stencil, tile shape, method) baked into a
+//! KIR program plus the memory image it runs against.
+//!
+//! This is what `serve` executes for `KernelMethod::Outer` (and for
+//! `Tuned` plans the host backend supports): the tile's interior is
+//! embedded into a vector-aligned cubic domain, the generator emits the
+//! paper's program once at compile time, and every `apply` writes the
+//! tile in, interprets the ops on a clone of the template machine, and
+//! copies the interior back out. The per-output accumulation order of
+//! the generated programs depends only on relative offsets — never on
+//! where a tile sits in the global grid — so sharded execution is
+//! bitwise identical to single-shard execution of the same kernel
+//! (enforced in `rust/tests/shard_correctness.rs`).
+
+use super::host::HostMachine;
+use super::ir::{Kernel, Marker, Op};
+use super::mem::Arena as _;
+use crate::codegen::common::{CoeffTable, Layout};
+use crate::codegen::{outer, scalar, vectorize, Method};
+use crate::scatter::build_cover;
+use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
+use crate::sim::SimConfig;
+
+/// A host kernel compiled for one (spec, tile shape, method).
+#[derive(Debug, Clone)]
+pub struct HostKernel {
+    spec: StencilSpec,
+    /// Padded cubic domain extent the program was generated for.
+    d: usize,
+    /// Generated program (markers included).
+    ops: Vec<Op>,
+    /// Grid layout inside the template machine's memory.
+    layout: Layout,
+    /// Memory image with coefficient tables installed and zeroed grids;
+    /// cloned per `apply`.
+    template: HostMachine,
+    /// Plan label (method + parameters) for reports.
+    label: String,
+}
+
+impl HostKernel {
+    /// Compile a host kernel for tiles of storage shape `tile_shape`.
+    ///
+    /// The tile's interior (`shape - 2r` per dimension) is embedded in a
+    /// cubic domain rounded up to the vector length; `Dlt`/`Tv` are not
+    /// compilable as tile kernels (they restructure whole grids) and
+    /// return an error.
+    pub fn compile(
+        cfg: &SimConfig,
+        spec: StencilSpec,
+        tile_shape: &[usize],
+        method: Method,
+    ) -> anyhow::Result<HostKernel> {
+        let r = spec.order;
+        anyhow::ensure!(tile_shape.len() == spec.dims, "tile shape does not match {spec}");
+        anyhow::ensure!(
+            tile_shape.iter().all(|&s| s > 2 * r),
+            "degenerate tile {tile_shape:?} for order-{r} stencil"
+        );
+        anyhow::ensure!(r <= cfg.vlen, "order {r} exceeds the vector length {}", cfg.vlen);
+        let interior = tile_shape.iter().map(|&s| s - 2 * r).max().unwrap();
+        let d = interior.div_ceil(cfg.vlen) * cfg.vlen;
+        let storage = vec![d + 2 * r; spec.dims];
+        let zero = DenseGrid::zeros(&storage);
+        let mut template = HostMachine::from_config(cfg);
+        let layout = Layout::alloc(&mut template, spec, &zero);
+        let coeffs = CoeffTensor::paper_default(spec);
+        let mut kernel = Kernel::default();
+        match method {
+            Method::Outer(params) => {
+                let cover = build_cover(&coeffs, params.option)?;
+                let table = CoeffTable::install_full(&mut template, &coeffs, &cover);
+                outer::generate(cfg, &layout, &cover, &table, params, &mut kernel)?;
+            }
+            Method::AutoVec => {
+                let table = CoeffTable::install_splats(&mut template, &coeffs);
+                vectorize::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+            }
+            Method::Scalar => {
+                let table = CoeffTable::install_splats(&mut template, &coeffs);
+                scalar::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+            }
+            Method::Dlt | Method::Tv => {
+                anyhow::bail!("{method} restructures whole grids and has no tile host kernel")
+            }
+        }
+        let label = match method {
+            Method::Outer(p) => p.label(spec.dims),
+            other => other.to_string(),
+        };
+        // drop the cubic embedding's padded row groups: slab tiles are
+        // usually much shorter (dim 0) than the full-width domain, and
+        // without trimming every shard would interpret the whole d×d(×d)
+        // program — total work growing with the shard count
+        let ops = trim_row_groups(kernel.ops, tile_shape[0] - 2 * r);
+        Ok(HostKernel { spec, d, ops, layout, template, label })
+    }
+
+    /// Non-marker operations in the compiled program.
+    pub fn op_count(&self) -> usize {
+        self.ops.iter().filter(|o| !o.is_marker()).count()
+    }
+
+    /// Padded domain extent the program runs over.
+    pub fn domain(&self) -> usize {
+        self.d
+    }
+
+    /// Plan label (e.g. `p-j8`, `autovec`).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Apply one time step to a tile (storage shape, `r`-deep boundary
+    /// band frozen): interior points get the stencil result, everything
+    /// else is copied from the input — the same contract as the taps
+    /// kernel. Tiles too small to have an interior are returned
+    /// unchanged.
+    ///
+    /// Each application clones the template memory image (grids +
+    /// tables); for realistic tiles that memcpy is small next to
+    /// interpreting the program itself, and it is what guarantees the
+    /// zero padding beyond the tile is fresh every step.
+    pub fn apply(&self, a: &DenseGrid) -> DenseGrid {
+        let r = self.spec.order;
+        if a.shape.iter().any(|&s| s <= 2 * r) {
+            return a.clone();
+        }
+        debug_assert_eq!(a.shape.len(), self.spec.dims, "tile does not match kernel");
+        let ri = r as isize;
+        let mut m = self.template.clone();
+        // embed the tile: tile storage index t maps to padded storage
+        // index t (domain index t - r); the region beyond stays zero and
+        // only feeds outputs that are discarded below
+        match *a.shape.as_slice() {
+            [n0, n1] => {
+                for i in 0..n0 {
+                    let row = &a.data[i * n1..(i + 1) * n1];
+                    m.write_mem(self.layout.a_addr(&[i as isize - ri, -ri]), row);
+                    m.write_mem(self.layout.b_addr(&[i as isize - ri, -ri]), row);
+                }
+            }
+            [n0, n1, n2] => {
+                for i in 0..n0 {
+                    for j in 0..n1 {
+                        let row = &a.data[(i * n1 + j) * n2..(i * n1 + j + 1) * n2];
+                        let idx = [i as isize - ri, j as isize - ri, -ri];
+                        m.write_mem(self.layout.a_addr(&idx), row);
+                        m.write_mem(self.layout.b_addr(&idx), row);
+                    }
+                }
+            }
+            _ => unreachable!("grids are 2D or 3D"),
+        }
+        m.run(&self.ops);
+        let mut b = a.clone();
+        match *a.shape.as_slice() {
+            [n0, n1] => {
+                for i in r..n0 - r {
+                    let addr = self.layout.b_addr(&[i as isize - ri, 0]);
+                    b.data[i * n1 + r..(i + 1) * n1 - r]
+                        .copy_from_slice(m.read_mem(addr, n1 - 2 * r));
+                }
+            }
+            [n0, n1, n2] => {
+                for i in r..n0 - r {
+                    for j in r..n1 - r {
+                        let addr = self.layout.b_addr(&[i as isize - ri, j as isize - ri, 0]);
+                        let base = (i * n1 + j) * n2;
+                        b.data[base + r..base + n2 - r]
+                            .copy_from_slice(m.read_mem(addr, n2 - 2 * r));
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        b
+    }
+}
+
+/// Drop tile groups whose output rows (dimension 0) lie entirely at or
+/// beyond `rows`, the tile's real interior extent — the rows only the
+/// cubic padding added. Groups are self-contained (every register they
+/// consume is loaded inside them, and they touch disjoint output rows),
+/// so removing whole groups cannot change the outputs that remain.
+/// Generators without structure markers (autovec/scalar) are returned
+/// unchanged.
+fn trim_row_groups(ops: Vec<Op>, rows: usize) -> Vec<Op> {
+    let mut out = Vec::with_capacity(ops.len());
+    let mut skip_until: Option<Op> = None;
+    for op in ops {
+        if let Some(end) = skip_until {
+            if op == end {
+                skip_until = None;
+            }
+            continue;
+        }
+        if let Op::Begin(m) = op {
+            if let Marker::TileGroup { i0, .. } = m {
+                if i0 >= rows as isize {
+                    skip_until = Some(Op::End(m));
+                    continue;
+                }
+            }
+        }
+        out.push(op);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::OuterParams;
+    use crate::stencil::reference;
+
+    fn check_close(spec: StencilSpec, shape: &[usize], method: Method) {
+        let cfg = SimConfig::default();
+        let k = HostKernel::compile(&cfg, spec, shape, method).unwrap();
+        assert!(k.op_count() > 0);
+        let a = DenseGrid::verification_input(shape, 42);
+        let got = k.apply(&a);
+        let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
+        let err = got.max_abs_diff_interior(&want, 0);
+        assert!(err < 1e-9, "{spec} {method} {shape:?}: max err {err:e}");
+        // boundary band is copied, bitwise
+        assert_eq!(got.data[0], a.data[0]);
+    }
+
+    #[test]
+    fn outer_tile_kernel_matches_oracle_2d() {
+        check_close(
+            StencilSpec::box2d(1),
+            &[14, 23],
+            Method::Outer(OuterParams::paper_best(StencilSpec::box2d(1))),
+        );
+        check_close(
+            StencilSpec::star2d(2),
+            &[17, 12],
+            Method::Outer(OuterParams::paper_best(StencilSpec::star2d(2))),
+        );
+        check_close(
+            StencilSpec::diag2d(1),
+            &[11, 11],
+            Method::Outer(OuterParams::paper_best(StencilSpec::diag2d(1))),
+        );
+    }
+
+    #[test]
+    fn outer_tile_kernel_matches_oracle_3d() {
+        check_close(
+            StencilSpec::box3d(1),
+            &[9, 12, 10],
+            Method::Outer(OuterParams::paper_best(StencilSpec::box3d(1))),
+        );
+        check_close(
+            StencilSpec::star3d(2),
+            &[11, 9, 13],
+            Method::Outer(OuterParams::paper_best(StencilSpec::star3d(2))),
+        );
+    }
+
+    #[test]
+    fn autovec_and_scalar_tile_kernels_work() {
+        check_close(StencilSpec::box2d(1), &[12, 19], Method::AutoVec);
+        check_close(StencilSpec::star2d(1), &[9, 9], Method::Scalar);
+    }
+
+    #[test]
+    fn grid_restructuring_methods_are_rejected() {
+        let cfg = SimConfig::default();
+        assert!(HostKernel::compile(&cfg, StencilSpec::box2d(1), &[12, 12], Method::Dlt).is_err());
+        assert!(HostKernel::compile(&cfg, StencilSpec::box2d(1), &[12, 12], Method::Tv).is_err());
+        // degenerate tiles are rejected at compile (serve skips them)
+        assert!(HostKernel::compile(
+            &cfg,
+            StencilSpec::box2d(2),
+            &[4, 12],
+            Method::Outer(OuterParams::paper_best(StencilSpec::box2d(2)))
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn padded_row_groups_are_trimmed() {
+        // a short, wide slab tile must not pay for the full-width cubic
+        // embedding: its kernel keeps only the row groups it needs
+        let spec = StencilSpec::box2d(1);
+        let cfg = SimConfig::default();
+        let method = Method::Outer(OuterParams::paper_best(spec));
+        let short = HostKernel::compile(&cfg, spec, &[12, 66], method).unwrap();
+        let tall = HostKernel::compile(&cfg, spec, &[66, 66], method).unwrap();
+        assert_eq!(short.domain(), tall.domain());
+        // 10 interior rows → 2 of 8 row blocks kept
+        assert!(
+            short.op_count() * 3 < tall.op_count(),
+            "short {} vs tall {}",
+            short.op_count(),
+            tall.op_count()
+        );
+        // and the trimmed kernel is still correct
+        let a = DenseGrid::verification_input(&[12, 66], 3);
+        let got = short.apply(&a);
+        let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
+        assert!(got.max_abs_diff_interior(&want, 0) < 1e-9);
+    }
+
+    #[test]
+    fn apply_is_position_independent() {
+        // the same physical subgrid produces bitwise-identical interior
+        // results whether applied as a whole or as an embedded tile —
+        // the property sharding relies on
+        let spec = StencilSpec::box2d(1);
+        let cfg = SimConfig::default();
+        let full_shape = [20usize, 14];
+        let a = DenseGrid::verification_input(&full_shape, 7);
+        let kf = HostKernel::compile(
+            &cfg,
+            spec,
+            &full_shape,
+            Method::Outer(OuterParams::paper_best(spec)),
+        )
+        .unwrap();
+        let whole = kf.apply(&a);
+        // slab rows 6..14 with 1-deep ghost rows = rows 5..15
+        let tile_shape = [10usize, 14];
+        let mut tile = DenseGrid::zeros(&tile_shape);
+        tile.data.copy_from_slice(&a.data[5 * 14..15 * 14]);
+        let kt =
+            HostKernel::compile(&cfg, spec, &tile_shape, Method::Outer(OuterParams::paper_best(spec)))
+                .unwrap();
+        let tout = kt.apply(&tile);
+        // interior rows of the tile (1..9) line up with whole rows 6..14
+        for ti in 1..9usize {
+            let wi = ti + 5;
+            assert_eq!(
+                &tout.data[ti * 14 + 1..(ti + 1) * 14 - 1],
+                &whole.data[wi * 14 + 1..(wi + 1) * 14 - 1],
+                "row {wi}"
+            );
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! The memory-plan abstraction both backends implement.
+//!
+//! Kernel-IR addresses are element indices into a flat f64 memory whose
+//! layout is decided at *generation* time (grids with halos and padded
+//! strides, coefficient tables). [`Arena`] is the small surface the
+//! layout/planning code needs: allocation with guard bands and raw
+//! element reads/writes. [`crate::sim::Machine`] implements it (the sim
+//! backend), and so does [`crate::kir::HostMachine`] (the host backend) —
+//! which is what makes `codegen::common::Layout` and the coefficient
+//! tables backend-agnostic.
+
+/// A flat f64 memory arena with vector-aligned, guard-banded allocation.
+///
+/// Implementations must mirror each other's allocation discipline (same
+/// alignment, same guard bands) so that a program generated against one
+/// arena's layout executes identically on another arena prepared the
+/// same way.
+pub trait Arena {
+    /// Vector length in f64 lanes (allocation alignment unit).
+    fn vlen(&self) -> usize;
+
+    /// Allocate `n` f64 elements (zero-initialized, guard-banded) and
+    /// return the base element address.
+    fn alloc(&mut self, n: usize) -> usize;
+
+    /// Copy a slice into memory at `addr`.
+    fn write_mem(&mut self, addr: usize, data: &[f64]);
+
+    /// Read `n` elements from memory at `addr`.
+    fn read_mem(&self, addr: usize, n: usize) -> &[f64];
+}

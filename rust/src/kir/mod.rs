@@ -1,0 +1,49 @@
+//! Backend-agnostic kernel IR: one outer-product program, two targets.
+//!
+//! The paper's optimizations — cover choice (§4.1), multi-dimensional
+//! unrolling (§4.2), outer-product scheduling and inter-register data
+//! reorganization (§4.3) — are *instruction-stream transformations*. This
+//! module gives those streams a home of their own: all five generators in
+//! [`crate::codegen`] emit typed KIR operations, and two backends lower
+//! them, inverting the old generators → simulator dependency into
+//! generators → IR → {simulator, host}:
+//!
+//! - [`ir`] — the IR: register ids ([`VReg`]/[`MReg`], shared with the
+//!   simulator ISA), the [`Op`] set (vector loads/stores/gather/splat,
+//!   `EXT`-style reorganization, FMA forms, tile outer-product
+//!   accumulate and row/column moves), [`Marker`] structure ops
+//!   recording the loop/unroll shape, streaming [`KirSink`] consumers,
+//!   captured [`Kernel`] programs, and [`OpStats`] counters (what the
+//!   autotuner's cost model is derived from);
+//! - [`mem`] — the [`Arena`](mem::Arena) memory-plan trait both backends
+//!   implement, which makes grid layouts and coefficient tables
+//!   backend-agnostic;
+//! - [`lower`] — KIR → simulator ISA, 1:1 per computational op, markers
+//!   dropped; [`crate::sim::Machine`] consumes KIR directly
+//!   (execute-on-emit), so every benchmark and verification path flows
+//!   through the IR with unchanged programs;
+//! - [`host`] — KIR → host execution: [`HostMachine`] interprets the
+//!   same programs natively over flat f64 buffers, with functional
+//!   semantics kept operation-for-operation identical to the simulator
+//!   (host output is bitwise equal to sim output —
+//!   `rust/tests/kir_equivalence.rs`);
+//! - [`kernel`] — [`HostKernel`]: a (spec, tile shape, method) compiled
+//!   once into a KIR program + memory image, applied per tile by the
+//!   serving subsystem (`serve --kernel outer`, and `tuned` plans
+//!   compiled to real host kernels).
+//!
+//! Consumers: `codegen::run_method` (sim backend, timing),
+//! `codegen::verify::run_host` (host backend, wall-clock),
+//! `serve::scheduler` (tile host kernels), `tune::cost` (op statistics),
+//! and the `dump-ir` CLI subcommand (human-readable programs).
+
+pub mod host;
+pub mod ir;
+pub mod kernel;
+pub mod lower;
+pub mod mem;
+
+pub use host::HostMachine;
+pub use ir::{dump, Kernel, KirSink, Marker, MReg, Op, OpStats, VReg};
+pub use kernel::HostKernel;
+pub use mem::Arena;

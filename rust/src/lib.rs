@@ -15,11 +15,15 @@
 //!   functional + timing simulator (vector & matrix register files, outer
 //!   product unit, L1/L2/memory hierarchy) replacing the paper's
 //!   proprietary ARM simulator.
-//! - [`codegen`] — code generators targeting the simulator ISA: the
-//!   paper's outer-product method (§4: multi-dimensional unrolling,
+//! - [`codegen`] — code generators emitting the kernel IR: the paper's
+//!   outer-product method (§4: multi-dimensional unrolling,
 //!   outer-product scheduling, data reorganization) and the baselines
 //!   (scalar, compiler-style auto-vectorization, DLT, temporal
 //!   vectorization).
+//! - [`kir`] — the backend-agnostic kernel IR all five generators emit,
+//!   with two lowerings: KIR → simulator ISA (timing, unchanged
+//!   programs) and KIR → host execution (the paper's algorithm running
+//!   natively on the CPU, bitwise equal to the simulated output).
 //! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executing them from Rust; Python never runs
 //!   at request time (gated behind the `pjrt` cargo feature; a stub
@@ -42,6 +46,7 @@
 pub mod bench_harness;
 pub mod codegen;
 pub mod coordinator;
+pub mod kir;
 pub mod runtime;
 pub mod scatter;
 pub mod serve;

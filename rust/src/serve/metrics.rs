@@ -110,6 +110,10 @@ pub struct ServiceMetrics {
     pub queue_wait: LatencyRecorder,
     /// Time spent computing (per request, excludes queueing).
     pub service_time: LatencyRecorder,
+    /// Per-request kernel wall-clock (sharded evolution only — excludes
+    /// queueing and verification, but includes one-time shard-plan
+    /// compilation on cache misses); p50/p99 are in the JSON snapshot.
+    pub kernel_time: LatencyRecorder,
 }
 
 impl Default for ServiceMetrics {
@@ -124,6 +128,7 @@ impl Default for ServiceMetrics {
             point_steps: 0,
             queue_wait: LatencyRecorder::default(),
             service_time: LatencyRecorder::default(),
+            kernel_time: LatencyRecorder::default(),
         }
     }
 }
@@ -152,6 +157,7 @@ impl ServiceMetrics {
             ("throughput_pts_per_s", Json::Num(self.throughput())),
             ("queue_wait", self.queue_wait.to_json()),
             ("service_time", self.service_time.to_json()),
+            ("kernel_time", self.kernel_time.to_json()),
         ])
     }
 }
@@ -204,9 +210,14 @@ mod tests {
         m.point_steps = 12_000;
         m.queue_wait.record(0.5);
         m.service_time.record(1.5);
+        m.kernel_time.record(1.25);
         let text = m.to_json().to_string_compact();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("completed").unwrap().as_usize(), Some(3));
+        let kt = back.get("kernel_time").unwrap();
+        assert_eq!(kt.get("count").unwrap().as_usize(), Some(1));
+        assert!(kt.get("p50_s").unwrap().as_f64().is_some());
+        assert!(kt.get("p99_s").unwrap().as_f64().is_some());
         assert_eq!(
             back.get("service_time").unwrap().get("count").unwrap().as_usize(),
             Some(1)

@@ -14,21 +14,28 @@
 //!   lock-per-tile form the pool runs).
 //! - [`pool`] — `std::thread` worker pool: per-worker deques, work
 //!   stealing, per-batch barrier.
-//! - [`scheduler`] — compiled shard kernels (bitwise-identical to the
-//!   scalar oracle), an LRU plan cache keyed by (spec, shape, method)
-//!   that consults the [`crate::tune`] database before compiling `tuned`
-//!   shard kernels, and the step loop (compute batch → barrier → halo
-//!   exchange).
+//! - [`scheduler`] — compiled shard kernels (oracle/taps: bitwise-
+//!   identical to the scalar oracle; `outer`: the paper's algorithm
+//!   compiled through [`crate::kir`] and executed natively on the host),
+//!   an LRU plan cache keyed by (spec, shape, method) that consults the
+//!   [`crate::tune`] database before compiling `tuned` shard kernels —
+//!   now to real host kernels when the plan supports it — and the step
+//!   loop (compute batch → barrier → halo exchange).
 //! - [`service`] — the batched front-end: bounded queue with
 //!   backpressure, coalescing of identical requests, dispatcher thread;
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
-//! - [`metrics`] — latency/throughput/traffic counters reported as JSON.
+//! - [`metrics`] — latency/throughput/traffic counters reported as JSON,
+//!   including per-request kernel wall-clock with p50/p99.
 //!
-//! **Exactness guarantee**: sharded multi-threaded evolution is bitwise
-//! equal to [`crate::stencil::reference::evolve`] — tiles see exactly the
+//! **Exactness guarantee**: with the oracle/taps kernels, sharded
+//! multi-threaded evolution is bitwise equal to
+//! [`crate::stencil::reference::evolve`] — tiles see exactly the
 //! neighbourhoods the global sweep sees, the frozen global boundary stays
 //! inside tile-boundary bands, and the shard kernels preserve the
-//! oracle's accumulation order (see `rust/tests/shard_correctness.rs`).
+//! oracle's accumulation order. With the KIR host kernels (`outer`,
+//! compiled tuned plans) results match the oracle within 1e-9 and
+//! sharded execution is bitwise equal to single-shard execution of the
+//! same kernel (see `rust/tests/shard_correctness.rs`).
 
 pub mod halo;
 pub mod metrics;

@@ -9,16 +9,24 @@
 //! an LRU keyed by `(spec, shape, method)` so a server handling a mixed
 //! request stream compiles each shape once.
 //!
-//! Both kernels reproduce [`crate::stencil::reference::apply`] **bitwise**:
-//! the native kernel iterates taps in the same dense-offset order with the
-//! same accumulation order, so sharded multi-threaded evolution is
-//! indistinguishable from the single-shard scalar oracle.
+//! The oracle/taps kernels reproduce [`crate::stencil::reference::apply`]
+//! **bitwise**: the native kernel iterates taps in the same dense-offset
+//! order with the same accumulation order, so sharded multi-threaded
+//! evolution is indistinguishable from the single-shard scalar oracle.
+//! The `outer` kernel (and tuned plans compiled to host kernels) runs the
+//! paper's algorithm through the kernel IR instead: it matches the oracle
+//! within 1e-9, and its per-output accumulation order is position-
+//! independent, so sharded execution stays bitwise equal to single-shard
+//! execution of the same kernel.
 
 use super::halo;
 use super::partition::Partition;
 use super::pool::{Job, WorkerPool};
+use crate::codegen::{Method, OuterParams};
+use crate::kir::HostKernel;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
-use crate::tune::TuneDb;
+use crate::sim::SimConfig;
+use crate::tune::{TuneDb, TunePlan};
 use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
@@ -31,13 +39,20 @@ pub enum KernelMethod {
     Oracle,
     /// Precomputed linear-offset taps (same FP order, no index math).
     Taps,
+    /// The paper's outer-product scatter algorithm, compiled through the
+    /// kernel IR ([`crate::kir::HostKernel`]) and executed natively on
+    /// the host. Matches the oracle within 1e-9 (not bitwise: the
+    /// outer-product accumulation order differs from the gather sweep's),
+    /// and sharded execution is bitwise identical to single-shard
+    /// execution of the same kernel.
+    Outer,
     /// Like [`KernelMethod::Taps`], but plan compilation consults the
-    /// tuning database (when the cache has one): the compiled shard plan
-    /// carries the tuned accelerator plan for this stencil on the tuned
-    /// machine. Host execution stays the bitwise taps kernel — the tuned
-    /// plan describes the simulator/SME program the tuner validated and
-    /// measured, and is surfaced through [`TunedInfo`] and the serve
-    /// metrics.
+    /// tuning database (when the cache has one): a matched tuned plan is
+    /// compiled to a **real host kernel** through the kernel IR (outer /
+    /// autovec / scalar plans; grid-restructuring plans such as DLT/TV
+    /// fall back to the bitwise taps kernel, as does every request when
+    /// the database has no entry). The match is surfaced through
+    /// [`TunedInfo`] and the serve metrics.
     Tuned,
 }
 
@@ -46,6 +61,7 @@ impl fmt::Display for KernelMethod {
         match self {
             KernelMethod::Oracle => write!(f, "oracle"),
             KernelMethod::Taps => write!(f, "taps"),
+            KernelMethod::Outer => write!(f, "outer"),
             KernelMethod::Tuned => write!(f, "tuned"),
         }
     }
@@ -58,8 +74,9 @@ impl FromStr for KernelMethod {
         Ok(match s.to_ascii_lowercase().as_str() {
             "oracle" => KernelMethod::Oracle,
             "taps" | "native" => KernelMethod::Taps,
+            "outer" | "kir" => KernelMethod::Outer,
             "tuned" => KernelMethod::Tuned,
-            other => anyhow::bail!("unknown kernel '{other}' (oracle|taps|tuned)"),
+            other => anyhow::bail!("unknown kernel '{other}' (oracle|taps|outer|tuned)"),
         })
     }
 }
@@ -69,6 +86,8 @@ impl FromStr for KernelMethod {
 pub struct TunedInfo {
     /// Table-3-style label of the tuned plan (e.g. `p-j8`, `o-i4`).
     pub label: String,
+    /// The tuned plan itself (compiled to a host kernel when supported).
+    pub plan: TunePlan,
     /// The tuned plan's simulated cycles per point per step.
     pub sim_cycles_per_point: f64,
     /// Domain extent the plan was tuned at.
@@ -98,11 +117,21 @@ pub struct CompiledPlan {
     coeffs: CoeffTensor,
     /// (linear offset, weight) per non-zero tap, dense-offset order.
     taps: Vec<(isize, f64)>,
+    /// KIR-compiled host kernel ([`KernelMethod::Outer`], and `Tuned`
+    /// plans the host backend supports); `None` falls back to the
+    /// bitwise taps kernel.
+    host: Option<HostKernel>,
 }
 
 impl CompiledPlan {
     /// Compile a plan (uses the repo-wide `paper_default` weights).
     pub fn compile(key: PlanKey) -> CompiledPlan {
+        let host = match key.method {
+            KernelMethod::Outer => {
+                host_kernel(&key, Method::Outer(OuterParams::paper_best(key.spec)))
+            }
+            _ => None,
+        };
         let coeffs = CoeffTensor::paper_default(key.spec);
         let dims = key.shape.len();
         let mut strides = vec![1isize; dims];
@@ -120,7 +149,18 @@ impl CompiledPlan {
                 (lin, coeffs.data[oi])
             })
             .collect();
-        CompiledPlan { key, tuned: None, coeffs, taps }
+        CompiledPlan { key, tuned: None, coeffs, taps, host }
+    }
+
+    /// Non-marker KIR operations of the compiled host kernel, when this
+    /// plan has one.
+    pub fn host_ops(&self) -> Option<usize> {
+        self.host.as_ref().map(|k| k.op_count())
+    }
+
+    /// Label of the compiled host kernel's plan, when this plan has one.
+    pub fn host_label(&self) -> Option<&str> {
+        self.host.as_ref().map(|k| k.label())
     }
 
     /// Apply one time step to a tile. Tiles too small to contain any
@@ -134,11 +174,14 @@ impl CompiledPlan {
         }
         match self.key.method {
             KernelMethod::Oracle => reference::apply(&self.coeffs, a),
-            // `Tuned` executes the bitwise taps kernel on the host; the
-            // tuned accelerator plan rides along as metadata (see
-            // `KernelMethod::Tuned`), preserving the serve subsystem's
-            // bitwise-exactness guarantee.
-            KernelMethod::Taps | KernelMethod::Tuned => self.apply_taps(a),
+            KernelMethod::Taps => self.apply_taps(a),
+            // the KIR host kernel when one compiled; the bitwise taps
+            // kernel otherwise (degenerate tiles, unsupported tuned
+            // plans, or no tuning-database match)
+            KernelMethod::Outer | KernelMethod::Tuned => match &self.host {
+                Some(k) => k.apply(a),
+                None => self.apply_taps(a),
+            },
         }
     }
 
@@ -181,6 +224,18 @@ impl CompiledPlan {
         }
         b
     }
+}
+
+/// Compile the KIR host kernel for a plan key, if the tile shape and
+/// method admit one. Degenerate tiles (no interior) and
+/// grid-restructuring methods yield `None` — the caller falls back to
+/// the bitwise taps kernel. Host kernels run on the default §5.1 machine
+/// shape (8-lane vectors, 8×8 tiles).
+fn host_kernel(key: &PlanKey, method: Method) -> Option<HostKernel> {
+    if key.shape.iter().any(|&s| s <= 2 * key.spec.order) {
+        return None;
+    }
+    HostKernel::compile(&SimConfig::default(), key.spec, &key.shape, method).ok()
 }
 
 /// Cache counters, readable while serving.
@@ -263,6 +318,21 @@ impl PlanCache {
         Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec).map(|i| i.label)
     }
 
+    /// True when `tuned`-kernel requests for this stencil resolve to a
+    /// plan the host backend can compile (a database match with an
+    /// outer/autovec/scalar plan); false when they fall back to the
+    /// bitwise taps kernel (no match, or a grid-restructuring DLT/TV
+    /// plan). The serving layer keeps the *bitwise* verification bar in
+    /// the false case; in the true case it verifies at 1e-9 — even for
+    /// the rare per-tile taps/identity fallbacks (degenerate tiles),
+    /// which are copies and cannot introduce error anyway.
+    pub fn tuned_runs_host(&self, spec: StencilSpec) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec)
+            .map(|i| !matches!(i.plan.to_method(), Method::Dlt | Method::Tv))
+            .unwrap_or(false)
+    }
+
     /// Memoized tuning-database resolution for a stencil.
     fn resolve_tuned(
         tune: &Option<(Arc<TuneDb>, String)>,
@@ -275,6 +345,7 @@ impl PlanCache {
         let resolved = tune.as_ref().and_then(|(db, fp)| {
             db.best_for(spec, fp).map(|e| TunedInfo {
                 label: e.plan.label(spec.dims),
+                plan: e.plan,
                 sim_cycles_per_point: e.cycles_per_point,
                 tuned_n: e.n,
             })
@@ -302,6 +373,9 @@ impl PlanCache {
         if key.method == KernelMethod::Tuned {
             if let Some(info) = Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, key.spec) {
                 inner.tuned_hits += 1;
+                // compile the tuned plan to a real host kernel when the
+                // host backend supports it (outer/autovec/scalar)
+                compiled.host = host_kernel(&key, info.plan.to_method());
                 compiled.tuned = Some(info);
             }
         }
@@ -477,7 +551,7 @@ mod tests {
         let spec = StencilSpec::box2d(2);
         // 4 rows = 2r: no interior row, must be a pure copy
         let a = DenseGrid::verification_input(&[4, 9], 1);
-        for method in [KernelMethod::Oracle, KernelMethod::Taps] {
+        for method in [KernelMethod::Oracle, KernelMethod::Taps, KernelMethod::Outer] {
             let plan =
                 CompiledPlan::compile(PlanKey { spec, shape: vec![4, 9], method });
             assert_eq!(plan.apply(&a), a, "{method}");
@@ -557,6 +631,37 @@ mod tests {
     fn kernel_method_parses_tuned() {
         assert_eq!("tuned".parse::<KernelMethod>().unwrap(), KernelMethod::Tuned);
         assert_eq!(KernelMethod::Tuned.to_string(), "tuned");
+        assert_eq!("outer".parse::<KernelMethod>().unwrap(), KernelMethod::Outer);
+        assert_eq!("kir".parse::<KernelMethod>().unwrap(), KernelMethod::Outer);
+        assert_eq!(KernelMethod::Outer.to_string(), "outer");
+        assert!("warp".parse::<KernelMethod>().is_err());
+    }
+
+    #[test]
+    fn outer_kernel_runs_the_kir_host_program() {
+        for spec in [StencilSpec::box2d(1), StencilSpec::star2d(2), StencilSpec::box3d(1)] {
+            let shape: Vec<usize> = vec![4 * spec.order + 5; spec.dims];
+            let a = DenseGrid::verification_input(&shape, 21);
+            let plan = CompiledPlan::compile(PlanKey {
+                spec,
+                shape: shape.clone(),
+                method: KernelMethod::Outer,
+            });
+            assert!(plan.host_ops().unwrap() > 0, "{spec}: host kernel compiled");
+            let got = plan.apply(&a);
+            let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
+            let err = got.max_abs_diff_interior(&want, 0);
+            assert!(err < 1e-9, "{spec}: max err {err:e}");
+            // boundary band is copied bitwise, like every serve kernel
+            assert_eq!(got.data[0], a.data[0]);
+        }
+        // taps/oracle plans never carry a host kernel
+        let t = CompiledPlan::compile(PlanKey {
+            spec: StencilSpec::box2d(1),
+            shape: vec![10, 10],
+            method: KernelMethod::Taps,
+        });
+        assert!(t.host_ops().is_none());
     }
 
     #[test]
@@ -593,7 +698,17 @@ mod tests {
         });
         let info = tuned.tuned.as_ref().expect("tuned plan carries the DB entry");
         assert_eq!(info.label, out.best().plan.label(spec.dims));
+        assert_eq!(info.plan, out.best().plan);
         assert_eq!(info.tuned_n, 16);
+        // a supported tuned plan compiles to a real host kernel;
+        // grid-restructuring plans fall back to the bitwise taps kernel
+        match info.plan.to_method() {
+            Method::Outer(_) | Method::AutoVec | Method::Scalar => {
+                assert!(tuned.host_ops().unwrap() > 0, "tuned plan compiled to a host kernel");
+                assert!(tuned.host_label().is_some());
+            }
+            Method::Dlt | Method::Tv => assert!(tuned.host_ops().is_none()),
+        }
         assert_eq!(cache.tuned_label(spec), Some(info.label.clone()));
         assert_eq!(cache.stats().tuned_hits, 1);
 

@@ -71,8 +71,13 @@ pub struct ShardRequest {
 pub struct ShardReport {
     /// Seconds spent queued before dispatch.
     pub queue_seconds: f64,
-    /// Seconds spent computing.
+    /// Seconds spent computing (kernel + verification).
     pub service_seconds: f64,
+    /// Seconds spent in the sharded kernel path (excludes queueing and
+    /// verification; a request that compiles a new shard plan pays that
+    /// one-time compilation here too) — what the metrics' `kernel_time`
+    /// p50/p99 track.
+    pub kernel_seconds: f64,
     /// Interior points of the grid.
     pub points: usize,
     /// Time steps advanced.
@@ -214,7 +219,7 @@ impl ServerInner {
         let service_seconds = t0.elapsed().as_secs_f64();
         let waiters = pending.waiters;
         match result {
-            Ok((grid, max_err, shards)) => {
+            Ok((grid, max_err, shards, kernel_seconds)) => {
                 let tuned_plan = if pending.req.method == KernelMethod::Tuned {
                     self.evolver.cache().tuned_label(pending.req.spec)
                 } else {
@@ -229,10 +234,12 @@ impl ServerInner {
                     m.point_steps += (points * pending.req.steps * waiters) as u64;
                     m.queue_wait.record(queue_seconds);
                     m.service_time.record(service_seconds);
+                    m.kernel_time.record(kernel_seconds);
                 }
                 let report = ShardReport {
                     queue_seconds,
                     service_seconds,
+                    kernel_seconds,
                     points,
                     steps: pending.req.steps,
                     shards,
@@ -249,28 +256,52 @@ impl ServerInner {
         }
     }
 
-    /// Execute one request (no queue involved).
-    fn execute(&self, req: &ShardRequest) -> anyhow::Result<(DenseGrid, Option<f64>, usize)> {
+    /// Execute one request (no queue involved). Returns the grid, the
+    /// verification error (when requested), the shard count used, and
+    /// the kernel-only wall-clock seconds.
+    fn execute(
+        &self,
+        req: &ShardRequest,
+    ) -> anyhow::Result<(DenseGrid, Option<f64>, usize, f64)> {
         anyhow::ensure!(req.n >= 1, "empty domain");
         let storage = vec![req.n + 2 * req.spec.order; req.spec.dims];
         let grid = DenseGrid::verification_input(&storage, req.seed);
         let shards = self.effective_shards();
+        let t_kernel = Instant::now();
         let (out, used) = self
             .evolver
             .evolve_sharded(req.spec, &grid, req.steps, shards, req.method)?;
+        let kernel_seconds = t_kernel.elapsed().as_secs_f64();
         let max_err = if req.verify {
+            // oracle/taps are bitwise; the KIR host kernels (`outer`, and
+            // tuned plans the DB compiled to host kernels) match within
+            // 1e-9 because the outer-product accumulation order differs —
+            // but a tuned request that fell back to the taps kernel keeps
+            // the bitwise bar
+            let bitwise = match req.method {
+                KernelMethod::Oracle | KernelMethod::Taps => true,
+                KernelMethod::Outer => false,
+                KernelMethod::Tuned => !self.evolver.cache().tuned_runs_host(req.spec),
+            };
             let coeffs = CoeffTensor::paper_default(req.spec);
             let want = reference::evolve(&coeffs, &grid, req.steps);
             let err = out.max_abs_diff_interior(&want, 0);
-            anyhow::ensure!(
-                err == 0.0,
-                "sharded result diverged from the scalar oracle (max err {err:e})"
-            );
+            if bitwise {
+                anyhow::ensure!(
+                    err == 0.0,
+                    "sharded result diverged from the scalar oracle (max err {err:e})"
+                );
+            } else {
+                anyhow::ensure!(
+                    err < 1e-9,
+                    "host-kernel result outside the 1e-9 bar (max err {err:e})"
+                );
+            }
             Some(err)
         } else {
             None
         };
-        Ok((out, max_err, used))
+        Ok((out, max_err, used, kernel_seconds))
     }
 }
 

@@ -9,27 +9,10 @@
 //! Addresses are **element indices** (f64 slots) into the machine's flat
 //! memory; the cache model converts to bytes internally.
 
-use std::fmt;
-
-/// A vector register id (`z0..z{n_vregs-1}`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct VReg(pub u8);
-
-/// A matrix (tile) register id (`za0..za{n_mregs-1}`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct MReg(pub u8);
-
-impl fmt::Display for VReg {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "z{}", self.0)
-    }
-}
-
-impl fmt::Display for MReg {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "za{}", self.0)
-    }
-}
+/// Register ids are owned by the backend-agnostic kernel IR (the
+/// generators emit KIR; this ISA is the sim lowering target) and
+/// re-exported here so simulator code keeps its familiar names.
+pub use crate::kir::ir::{MReg, VReg};
 
 /// One machine instruction.
 #[derive(Debug, Clone, PartialEq)]

@@ -501,6 +501,27 @@ impl Sink for Machine {
     }
 }
 
+/// The simulator is one of the kernel IR's two memory backends: grid
+/// layouts and coefficient tables are planned against this trait, so the
+/// same planning code also targets [`crate::kir::HostMachine`].
+impl crate::kir::mem::Arena for Machine {
+    fn vlen(&self) -> usize {
+        self.cfg.vlen
+    }
+
+    fn alloc(&mut self, n: usize) -> usize {
+        Machine::alloc(self, n)
+    }
+
+    fn write_mem(&mut self, addr: usize, data: &[f64]) {
+        Machine::write_mem(self, addr, data)
+    }
+
+    fn read_mem(&self, addr: usize, n: usize) -> &[f64] {
+        Machine::read_mem(self, addr, n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

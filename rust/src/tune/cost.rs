@@ -1,13 +1,13 @@
 //! Analytic cost model: ranks candidate plans *before* any simulation.
 //!
-//! The model is derived from [`SimConfig`] and the cover algebra of §3–§4:
-//! for every plan it counts, per output point, the work each execution
-//! unit has to do — outer products (exact, from
-//! [`LineCover::outer_products`]), vector loads/stores including the
-//! gather expansion of strided column accesses and the per-(line, p)
-//! reload behaviour of unscheduled code, and vector-ALU operations (EXT
-//! assembly, tile↔vector moves, FMAs) — and takes the binding-unit
-//! bottleneck under the machine's issue width:
+//! For the paper's outer-product method the per-point operation counts
+//! are no longer re-derived from the cover algebra: the generator itself
+//! emits the kernel IR for one steady-state unrolled group (the smallest
+//! domain that realizes the plan's effective unroll), and
+//! [`crate::kir::OpStats`] counts exactly what was emitted — outer
+//! products, loads/stores with gathers expanded, EXT assembly and
+//! tile↔vector moves. The model then takes the binding-unit bottleneck
+//! under the machine's issue width:
 //!
 //! ```text
 //! cyc/pt ≈ max(opu/OPU, mem/LSU, valu/VALU, total/issue_width)
@@ -25,10 +25,11 @@
 //! results.
 
 use super::space::{effective_outer, TunePlan};
-use crate::codegen::Method;
-use crate::scatter::line::{CoeffLine, LineCover};
+use crate::codegen::common::{CoeffTable, Layout};
+use crate::codegen::{outer, Method};
+use crate::kir::{HostMachine, OpStats};
 use crate::scatter::build_cover;
-use crate::stencil::{CoeffTensor, StencilSpec};
+use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
 
 /// Modelled per-point cost of one candidate plan.
@@ -53,14 +54,6 @@ struct UnitWork {
     valu: f64,
 }
 
-impl UnitWork {
-    fn add(&mut self, other: UnitWork, scale: f64) {
-        self.opu += other.opu * scale;
-        self.lsu += other.lsu * scale;
-        self.valu += other.valu * scale;
-    }
-}
-
 /// Estimate the cost of `plan` for `spec` at domain extent `n` on `cfg`.
 pub fn estimate(
     cfg: &SimConfig,
@@ -72,8 +65,8 @@ pub fn estimate(
     let v = cfg.vlen as f64;
     let (work, fmopa_pt, mem_scale) = match plan.method {
         Method::Outer(p) => {
-            let w = outer_work(cfg, spec, n, p)?;
-            (w, w.opu, 1.0)
+            let (w, fmopa) = outer_work(cfg, spec, n, p)?;
+            (w, fmopa, 1.0)
         }
         Method::AutoVec => {
             // one mostly-unaligned load + one indexed FMA per tap per
@@ -125,178 +118,51 @@ pub fn estimate(
     })
 }
 
-/// Cover lines classified by direction (mirrors `codegen::outer`).
-struct Lines<'a> {
-    /// Axis lines along the leading non-unit-stride dimension (2D `i`,
-    /// 3D `i` — the pass-2 lines).
-    d_lead: Vec<&'a CoeffLine>,
-    /// Axis lines feeding the main outer-product pass (2D `i`-lines live
-    /// here too; 3D `j`-lines).
-    d_main: Vec<&'a CoeffLine>,
-    /// Axis lines along the unit-stride dimension (transpose trick).
-    d_unit: Vec<&'a CoeffLine>,
-    /// 2D diagonal lines.
-    diag: Vec<&'a CoeffLine>,
-}
-
-fn classify(spec: StencilSpec, cover: &LineCover) -> Lines<'_> {
-    let mut l = Lines { d_lead: vec![], d_main: vec![], d_unit: vec![], diag: vec![] };
-    for line in &cover.lines {
-        let nzd: Vec<usize> = (0..line.dir.len()).filter(|&d| line.dir[d] != 0).collect();
-        if nzd.len() == 2 {
-            l.diag.push(line);
-        } else if nzd[0] == spec.dims - 1 {
-            l.d_unit.push(line);
-        } else if spec.dims == 3 && nzd[0] == 0 {
-            l.d_lead.push(line);
-        } else {
-            l.d_main.push(line);
-        }
-    }
-    l
-}
-
-/// Expanded coefficient-vector count of a line at block extent `vlen`.
-fn cvs(line: &CoeffLine, vlen: usize) -> f64 {
-    line.coeff_vectors(vlen).len() as f64
-}
-
-/// How many of a line's coefficient vectors have an in-tile `p`
-/// (`0 <= p < vlen`): these resolve via the matrix-register transpose;
-/// the remainder are halo positions served by gather loads.
-fn in_tile(line: &CoeffLine, vlen: usize) -> f64 {
-    (0..vlen as isize).filter(|&p| line.cv_nonzero(p, vlen)).count() as f64
-}
-
-/// Per-point unit work of the outer-product generator.
+/// Per-point unit work of the outer-product generator, counted from the
+/// kernel IR it actually emits.
+///
+/// The program is generated (into a streaming [`OpStats`] sink — no
+/// buffering) for the smallest domain that realizes one steady-state
+/// unrolled group: `d = vlen · uk` after register-pressure clamping,
+/// rounded up so the 3D `ui` unroll divides it (no partial groups in
+/// the sample). Every group of such a domain is identical, so counts
+/// normalized by `d^dims` are exact per-point steady-state numbers; in
+/// particular the outer-product count reproduces the cover algebra of
+/// Table 1/2 to the last operation. Gathers are expanded to `vlen` memory-pipe slots
+/// (both backends element-serialize them). Returns the per-point unit
+/// work and the outer products per point.
 fn outer_work(
     cfg: &SimConfig,
     spec: StencilSpec,
     n: usize,
     params: crate::codegen::OuterParams,
-) -> anyhow::Result<UnitWork> {
+) -> anyhow::Result<(UnitWork, f64)> {
     let p = effective_outer(cfg, spec, n, params)?;
-    let coeffs = CoeffTensor::paper_default(spec);
-    let cover = build_cover(&coeffs, p.option)?;
-    let lines = classify(spec, &cover);
-    let v = cfg.vlen as f64;
-    let vlen = cfg.vlen;
-    let r = spec.order as f64;
-    let sched = p.scheduled;
-    let mut per_point = UnitWork::default();
-
-    if spec.dims == 2 {
-        let g = p.uk as f64;
-        let points = g * v * v; // one unrolled group of g tiles
-        let mut w = UnitWork::default();
-        // ---- i-lines (contiguous A rows → the main fmopa stream) ----
-        let cv_main: f64 = lines.d_main.iter().map(|l| cvs(l, vlen)).sum();
-        let ext_main: f64 =
-            lines.d_main.iter().filter(|l| l.base[1] != 0).map(|l| cvs(l, vlen)).sum();
-        w.opu += cv_main * g;
-        w.valu += ext_main * g;
-        if sched {
-            let lr = lines.d_main.iter().any(|l| l.base[1] < 0) as usize as f64
-                + lines.d_main.iter().any(|l| l.base[1] > 0) as usize as f64;
-            w.lsu += cv_main; // one CV load per (line, p), shared
-            if !lines.d_main.is_empty() {
-                w.lsu += (v + 2.0 * r) * (g + lr); // shared aligned A blocks
-            }
-        } else {
-            // naive: CV + A blocks reloaded per tile
-            let reload: f64 = lines
-                .d_main
-                .iter()
-                .map(|l| cvs(l, vlen) * (2.0 + (l.base[1] != 0) as usize as f64))
-                .sum();
-            w.lsu += reload * g;
-        }
-        // ---- j-lines (strided columns via the transpose trick) ----
-        if !lines.d_unit.is_empty() {
-            let mut ois: Vec<isize> = lines.d_unit.iter().map(|l| l.base[0]).collect();
-            ois.sort_unstable();
-            ois.dedup();
-            // per tile: transpose fill per oi group + per-(line, p) work
-            w.lsu += g * ois.len() as f64 * v;
-            w.valu += g * ois.len() as f64 * v;
-            for l in &lines.d_unit {
-                let c = cvs(l, vlen);
-                let it = in_tile(l, vlen);
-                w.opu += g * c;
-                w.lsu += g * (c + (c - it) * v); // CV loads + halo gathers
-                w.valu += g * it; // column moves
-            }
-        }
-        // ---- diagonal lines (vector-FMA path, per tile row) ----
-        for l in &lines.diag {
-            let taps = l.nonzeros() as f64;
-            w.valu += g * v * (2.0 + taps * 1.9); // row moves + ext + fma
-            w.lsu += g * v * taps * 2.5; // splat + sheared block loads
-        }
-        // ---- stores + tile zeroing ----
-        w.lsu += g * v;
-        w.valu += g;
-        per_point.add(w, 1.0 / points);
-    } else {
-        let (gi, gk) = (p.ui as f64, p.uk as f64);
-        let points = gi * gk * v * v;
-        let mut w = UnitWork::default();
-        // ---- pass 1: j-lines into gi×gk tiles ----
-        let cv_main: f64 = lines.d_main.iter().map(|l| cvs(l, vlen)).sum();
-        w.opu += cv_main * gi * gk;
-        if sched {
-            let lr = lines.d_main.iter().any(|l| l.base[2] < 0) as usize as f64
-                + lines.d_main.iter().any(|l| l.base[2] > 0) as usize as f64;
-            let (lo, hi) = lines
-                .d_main
-                .iter()
-                .fold((0isize, 0isize), |(lo, hi), l| (lo.min(l.base[0]), hi.max(l.base[0])));
-            let planes = gi + (hi - lo) as f64;
-            let mut kos: Vec<isize> = lines.d_main.iter().map(|l| l.base[2]).collect();
-            kos.sort_unstable();
-            kos.dedup();
-            let kos_nz = kos.iter().filter(|&&k| k != 0).count() as f64;
-            w.lsu += cv_main; // CV bank fills
-            if !lines.d_main.is_empty() {
-                w.lsu += (v + 2.0 * r) * planes * (gk + lr); // A blocks
-                w.valu += kos_nz * (v + 2.0 * r) * planes * gk; // EXT assembly
-            }
-        } else {
-            let reload: f64 = lines
-                .d_main
-                .iter()
-                .map(|l| cvs(l, vlen) * (2.0 + (l.base[2] != 0) as usize as f64))
-                .sum();
-            w.lsu += reload * gi * gk;
-            let ext: f64 =
-                lines.d_main.iter().filter(|l| l.base[2] != 0).map(|l| cvs(l, vlen)).sum();
-            w.valu += ext * gi * gk;
-        }
-        // ---- k-lines: per-tile transpose trick ----
-        for l in &lines.d_unit {
-            let c = cvs(l, vlen);
-            let it = in_tile(l, vlen);
-            w.lsu += gi * gk * (v + c + (c - it) * v);
-            w.valu += gi * gk * (v + it);
-            w.opu += gi * gk * c;
-        }
-        // ---- stores + tile zeroing ----
-        w.lsu += gi * gk * v;
-        w.valu += gi * gk;
-        per_point.add(w, 1.0 / points);
-        // ---- pass 2: i-lines, other tile orientation, RMW on B ----
-        if !lines.d_lead.is_empty() {
-            let cv_lead: f64 = lines.d_lead.iter().map(|l| cvs(l, vlen)).sum();
-            let points2 = gk * v * v; // one (i-tile, j, k-group) iteration
-            let mut w2 = UnitWork::default();
-            w2.lsu += 2.0 * gk * v; // tile-row RMW loads + stores
-            w2.lsu += (v + 2.0 * r) * gk; // shared A blocks
-            w2.lsu += cv_lead; // CV loads
-            w2.opu += cv_lead * gk;
-            per_point.add(w2, 1.0 / points2);
+    let mut d = (cfg.vlen * p.uk.max(1)).max(cfg.vlen);
+    if spec.dims == 3 {
+        // keep the 3D `ui` unroll dividing the probe domain, so the
+        // sample contains no partial row groups the real (much larger)
+        // domain would amortize away
+        while d % p.ui.max(1) != 0 {
+            d += cfg.vlen;
         }
     }
-    Ok(per_point)
+    let coeffs = CoeffTensor::paper_default(spec);
+    let cover = build_cover(&coeffs, p.option)?;
+    let shape = vec![d + 2 * spec.order; spec.dims];
+    let zero = DenseGrid::zeros(&shape);
+    let mut arena = HostMachine::from_config(cfg);
+    let layout = Layout::alloc(&mut arena, spec, &zero);
+    let table = CoeffTable::install_full(&mut arena, &coeffs, &cover);
+    let mut stats = OpStats::default();
+    outer::generate(cfg, &layout, &cover, &table, p, &mut stats)?;
+    let points = (d as f64).powi(spec.dims as i32);
+    let work = UnitWork {
+        opu: stats.opu_ops() as f64 / points,
+        lsu: stats.lsu_slots(cfg.vlen) as f64 / points,
+        valu: stats.valu_ops() as f64 / points,
+    };
+    Ok((work, stats.outer_products as f64 / points))
 }
 
 #[cfg(test)]

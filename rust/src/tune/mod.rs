@@ -12,9 +12,11 @@
 //!   unroll × scheduling × layout × method), normalized to what the
 //!   generator's register-pressure clamping actually runs;
 //! - [`cost`] — an analytic per-point cost model derived from
-//!   [`crate::sim::SimConfig`] (outer-product counts from the cover
-//!   algebra, load/gather traffic, EXT/move pressure, a DRAM-bandwidth
-//!   floor) used to prune the space;
+//!   [`crate::sim::SimConfig`] and, for outer plans, from
+//!   [`crate::kir::OpStats`] over the kernel IR the generator actually
+//!   emits (exact outer-product/load/EXT counts for one steady-state
+//!   unrolled group, plus a DRAM-bandwidth floor) used to prune the
+//!   space;
 //! - [`search`] — measures every surviving candidate on the functional +
 //!   timing simulator via [`crate::codegen::run_method`]; a candidate
 //!   whose generated program does not reproduce the scalar oracle aborts

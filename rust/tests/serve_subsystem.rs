@@ -7,6 +7,10 @@ use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, StencilServ
 use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use stencil_matrix::util::json::Json;
 
+fn outer_req(spec: StencilSpec, n: usize, steps: usize, seed: u64) -> ShardRequest {
+    ShardRequest { spec, n, steps, seed, method: KernelMethod::Outer, verify: true }
+}
+
 fn req(spec: StencilSpec, n: usize, steps: usize, seed: u64) -> ShardRequest {
     ShardRequest { spec, n, steps, seed, method: KernelMethod::Taps, verify: true }
 }
@@ -151,4 +155,51 @@ fn distinct_methods_are_distinct_cache_plans() {
     assert_eq!(ra.grid, rb.grid);
     assert_eq!(ra.report.waiters, 1);
     assert_eq!(rb.report.waiters, 1);
+}
+
+#[test]
+fn outer_kernel_request_serves_the_kir_host_program() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 3,
+        queue_depth: 8,
+        plan_cache: 8,
+    });
+    let spec = StencilSpec::star2d(2);
+    let ticket = server.submit(outer_req(spec, 20, 2, 9)).unwrap();
+    server.drain();
+    let resp = ticket.wait().unwrap();
+    // the server verified within the host-kernel bar (1e-9, not bitwise)
+    let err = resp.report.max_err.expect("verification ran");
+    assert!(err < 1e-9, "max_err {err:e}");
+    // independent re-derivation out here
+    let input = DenseGrid::verification_input(&[24, 24], 9);
+    let want = reference::evolve(&CoeffTensor::paper_default(spec), &input, 2);
+    assert!(resp.grid.max_abs_diff_interior(&want, 0) < 1e-9);
+    assert_eq!(resp.grid.shape, want.shape);
+}
+
+#[test]
+fn kernel_wall_clock_is_recorded_with_percentiles() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 8,
+        plan_cache: 8,
+    });
+    let spec = StencilSpec::box2d(1);
+    for seed in 0..3u64 {
+        let t = server.submit(outer_req(spec, 16, 2, seed)).unwrap();
+        server.drain();
+        let resp = t.wait().unwrap();
+        // kernel time is a sub-interval of service time
+        assert!(resp.report.kernel_seconds >= 0.0);
+        assert!(resp.report.kernel_seconds <= resp.report.service_seconds + 1e-6);
+    }
+    let m = Json::parse(&server.metrics_json().to_string_compact()).unwrap();
+    let kt = m.get("service").unwrap().get("kernel_time").unwrap();
+    assert_eq!(kt.get("count").unwrap().as_usize(), Some(3));
+    let p50 = kt.get("p50_s").unwrap().as_f64().unwrap();
+    let p99 = kt.get("p99_s").unwrap().as_f64().unwrap();
+    assert!(p50 >= 0.0 && p99 >= p50, "p50={p50} p99={p99}");
 }

@@ -8,6 +8,12 @@
 //! neighbourhoods the global sweep sees, and halo exchange keeps ghost
 //! rows current — any crack in partitioning, exchange scheduling, or the
 //! frozen-boundary convention shows up as a single differing bit.
+//!
+//! The KIR host kernel (`--kernel outer`) runs the paper's outer-product
+//! algorithm, whose accumulation order differs from the gather sweep's —
+//! there the bitwise oracle is **single-shard execution of the same
+//! kernel** (its per-output accumulation order is position-independent),
+//! and the scalar oracle is matched within the usual 1e-9 bar.
 
 use stencil_matrix::serve::{KernelMethod, Partition, ShardedEvolver};
 use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilKind, StencilSpec};
@@ -113,6 +119,37 @@ fn minimal_grid_single_interior_point() {
                 .evolve(spec, &grid, 2, shards, KernelMethod::Taps)
                 .unwrap();
             assert_eq!(got, want, "{spec} x{shards}");
+        }
+    }
+}
+
+#[test]
+fn outer_host_kernel_sharded_is_bitwise_unsharded_and_close_to_oracle() {
+    // sharded multi-threaded `outer` == single-shard single-worker
+    // `outer`, bit for bit — and both within 1e-9 of the scalar oracle
+    let cases: &[(StencilSpec, &[usize], usize)] = &[
+        (StencilSpec::box2d(1), &[26, 19], 3),
+        (StencilSpec::star2d(2), &[21, 24], 2),
+        (StencilSpec::diag2d(1), &[18, 18], 2),
+        (StencilSpec::box3d(1), &[12, 10, 11], 2),
+        (StencilSpec::star3d(2), &[11, 9, 10], 1),
+    ];
+    for &(spec, shape, steps) in cases {
+        let grid = DenseGrid::verification_input(shape, 0xC0FFEE);
+        let single = ShardedEvolver::new(1)
+            .evolve(spec, &grid, steps, 1, KernelMethod::Outer)
+            .unwrap();
+        let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, steps);
+        let err = single.max_abs_diff_interior(&want, 0);
+        assert!(err < 1e-9, "{spec}: outer kernel vs oracle max err {err:e}");
+        for (shards, workers) in [(2usize, 2usize), (3, 4), (5, 3)] {
+            let multi = ShardedEvolver::new(workers)
+                .evolve(spec, &grid, steps, shards, KernelMethod::Outer)
+                .unwrap();
+            assert_eq!(
+                multi, single,
+                "{spec} shards={shards} workers={workers}: sharded outer diverged bitwise"
+            );
         }
     }
 }

@@ -11,7 +11,9 @@
 //! - `serve` demonstrably loads the tuned plan from the DB: a server
 //!   built over the database answers `tuned`-kernel requests with the
 //!   DB plan's label in the report and counts the match in its plan-cache
-//!   metrics, while results stay bitwise equal to the scalar oracle.
+//!   metrics. Tuned plans now compile to real KIR host kernels, so
+//!   results match the scalar oracle within the 1e-9 bar (bitwise when
+//!   the plan falls back to the taps kernel).
 
 use stencil_matrix::codegen::Method;
 use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, StencilServer};
@@ -109,8 +111,10 @@ fn serve_loads_the_tuned_plan_from_the_db() {
         .unwrap();
     server.drain();
     let resp = ticket.wait().unwrap();
-    // bitwise equal to the scalar oracle, as for every serve kernel
-    assert_eq!(resp.report.max_err, Some(0.0));
+    // the tuned plan runs as a real host kernel (1e-9 bar; 0.0 when the
+    // plan fell back to the bitwise taps kernel)
+    let err = resp.report.max_err.expect("verification ran");
+    assert!(err < 1e-9, "max_err {err:e}");
     // the response names the DB plan the kernel LRU matched
     assert_eq!(resp.report.tuned_plan.as_deref(), Some(expected_label.as_str()));
     // and the plan-cache metrics count the tuning-DB match
