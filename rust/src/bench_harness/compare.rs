@@ -1,0 +1,324 @@
+//! The CI perf-regression gate: compare a fresh `BENCH_4.json` snapshot
+//! against the checked-in `bench/baseline.json`.
+//!
+//! The gate keys on **simulated cycles**, which are fully deterministic
+//! (the simulator has no noise), so a >tolerance increase on any
+//! (stencil, method) cell is a real codegen/model regression, not
+//! machine jitter. Host wall-clock is never gated — it is reported as
+//! advisory context in the CI job summary. Op-count drifts are reported
+//! as notes (an op-count change with flat cycles is usually an
+//! intentional codegen change; refresh the baseline alongside it).
+//!
+//! Bootstrap: a baseline with `"pending": true` (the state checked in
+//! before the first refresh) makes the gate advisory — the report is
+//! still produced, nothing fails — and CONTRIBUTING.md documents how to
+//! promote a CI-produced snapshot into the real baseline.
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// Default regression tolerance: fail the gate when a method's simulated
+/// cycles exceed the baseline by more than 2%.
+pub const DEFAULT_TOLERANCE: f64 = 0.02;
+
+/// One compared (stencil, method) cell.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    /// Stencil row name (e.g. `2d9p-box-r1`).
+    pub stencil: String,
+    /// Method name (scalar/autovec/dlt/tv/outer).
+    pub method: String,
+    /// Baseline simulated cycles.
+    pub base_cycles: f64,
+    /// Current simulated cycles.
+    pub cur_cycles: f64,
+    /// Relative cycle change (positive = slower).
+    pub delta: f64,
+    /// Whether the cell fails the gate.
+    pub regressed: bool,
+    /// Op-count drift note, when host_ops moved.
+    pub ops_note: Option<String>,
+}
+
+/// Outcome of one baseline comparison.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// True when the baseline is a `pending` placeholder (gate
+    /// advisory).
+    pub pending: bool,
+    /// Tolerance the gate ran with.
+    pub tolerance: f64,
+    /// Every compared cell.
+    pub cells: Vec<CellDelta>,
+    /// Human-readable summaries of the failing cells (empty = gate
+    /// passes).
+    pub regressions: Vec<String>,
+}
+
+impl Comparison {
+    /// True when the gate passes (no regression, or pending baseline).
+    pub fn passed(&self) -> bool {
+        self.pending || self.regressions.is_empty()
+    }
+
+    /// Render the comparison as a markdown report (what CI appends to
+    /// the job summary).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# perf gate — sim cycles vs bench/baseline.json\n\n");
+        if self.pending {
+            out.push_str(
+                "**baseline pending** — `bench/baseline.json` is a placeholder; the gate is \
+                 advisory until a CI `BENCH_4.json` is promoted (see CONTRIBUTING.md).\n\n",
+            );
+            return out;
+        }
+        let mut table =
+            Table::new(&["stencil", "method", "baseline cyc", "current cyc", "delta", "status"]);
+        for c in &self.cells {
+            let status = if c.regressed {
+                "REGRESSED".to_string()
+            } else {
+                match &c.ops_note {
+                    Some(note) => format!("ok ({note})"),
+                    None => "ok".to_string(),
+                }
+            };
+            table.row(vec![
+                c.stencil.clone(),
+                c.method.clone(),
+                format!("{:.0}", c.base_cycles),
+                format!("{:.0}", c.cur_cycles),
+                format!("{:+.2}%", c.delta * 100.0),
+                status,
+            ]);
+        }
+        out.push_str(&table.to_markdown());
+        out.push('\n');
+        if self.regressions.is_empty() {
+            out.push_str(&format!(
+                "gate **passed**: no method regressed more than {:.1}% ({} cells compared).\n",
+                self.tolerance * 100.0,
+                self.cells.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "gate **FAILED**: {} regression(s) beyond {:.1}%:\n",
+                self.regressions.len(),
+                self.tolerance * 100.0
+            ));
+            for r in &self.regressions {
+                out.push_str(&format!("- {r}\n"));
+            }
+        }
+        out
+    }
+}
+
+fn cell_f64(methods: &Json, method: &str, field: &str) -> Option<f64> {
+    methods.get(method)?.get(field)?.as_f64()
+}
+
+/// Compare `current` (a fresh snapshot) against `baseline`.
+///
+/// Errors on schema mismatches a refresh must fix (version, fingerprint,
+/// sizes, missing rows); returns regressions via [`Comparison`].
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Result<Comparison> {
+    if baseline.get("pending").and_then(Json::as_bool) == Some(true) {
+        return Ok(Comparison { pending: true, tolerance, cells: Vec::new(), regressions: Vec::new() });
+    }
+    for field in ["version", "fingerprint", "sizes"] {
+        let b = baseline.get(field);
+        let c = current.get(field);
+        anyhow::ensure!(
+            b.is_some() && b == c,
+            "baseline/current '{field}' mismatch ({b:?} vs {c:?}) — refresh bench/baseline.json \
+             (see CONTRIBUTING.md)"
+        );
+    }
+    let base_rows = baseline
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("baseline has no results array"))?;
+    let cur_rows = current
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("current snapshot has no results array"))?;
+    let mut cells = Vec::new();
+    let mut regressions = Vec::new();
+    for brow in base_rows {
+        let stencil = brow
+            .get("stencil")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("baseline row without stencil name"))?;
+        let crow = cur_rows
+            .iter()
+            .find(|r| r.get("stencil").and_then(Json::as_str) == Some(stencil))
+            .ok_or_else(|| anyhow::anyhow!("current snapshot is missing stencil '{stencil}'"))?;
+        let (bm, cm) = (
+            brow.get("methods")
+                .ok_or_else(|| anyhow::anyhow!("baseline row '{stencil}' without methods"))?,
+            crow.get("methods")
+                .ok_or_else(|| anyhow::anyhow!("current row '{stencil}' without methods"))?,
+        );
+        for method in ["scalar", "autovec", "dlt", "tv", "outer"] {
+            let base_cycles = cell_f64(bm, method, "cycles")
+                .ok_or_else(|| anyhow::anyhow!("baseline {stencil}/{method} has no cycles"))?;
+            let cur_cycles = cell_f64(cm, method, "cycles")
+                .ok_or_else(|| anyhow::anyhow!("current {stencil}/{method} has no cycles"))?;
+            let delta = (cur_cycles - base_cycles) / base_cycles.max(1.0);
+            let regressed = delta > tolerance;
+            let ops_note = match (cell_f64(bm, method, "host_ops"), cell_f64(cm, method, "host_ops"))
+            {
+                (Some(b), Some(c)) if b != c => {
+                    Some(format!("ops {:.0} → {:.0}", b, c))
+                }
+                _ => None,
+            };
+            if regressed {
+                regressions.push(format!(
+                    "{stencil}/{method}: {base_cycles:.0} → {cur_cycles:.0} cycles ({:+.2}%)",
+                    delta * 100.0
+                ));
+            }
+            cells.push(CellDelta {
+                stencil: stencil.to_string(),
+                method: method.to_string(),
+                base_cycles,
+                cur_cycles,
+                delta,
+                regressed,
+                ops_note,
+            });
+        }
+    }
+    Ok(Comparison { pending: false, tolerance, cells, regressions })
+}
+
+/// Multiply every `cycles` field of a snapshot by `factor` (the
+/// self-test's injected regression).
+pub fn inflate_cycles(snapshot: &Json, factor: f64) -> Json {
+    match snapshot {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .map(|(k, v)| {
+                    let v = if k == "cycles" {
+                        match v {
+                            Json::Num(n) => Json::Num((n * factor).round()),
+                            other => other.clone(),
+                        }
+                    } else {
+                        inflate_cycles(v, factor)
+                    };
+                    (k.clone(), v)
+                })
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(|v| inflate_cycles(v, factor)).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Prove the gate trips: compare `current` against itself with an
+/// injected cycle inflation beyond tolerance, and error if no regression
+/// is reported. CI runs this every build so a silently vacuous gate
+/// cannot survive.
+pub fn self_test(current: &Json, tolerance: f64) -> anyhow::Result<Comparison> {
+    anyhow::ensure!(
+        current.get("pending").and_then(Json::as_bool) != Some(true),
+        "self-test needs a real snapshot, not a pending placeholder"
+    );
+    let inflated = inflate_cycles(current, 1.0 + 2.0 * tolerance + 0.01);
+    let cmp = compare(current, &inflated, tolerance)?;
+    anyhow::ensure!(
+        !cmp.regressions.is_empty(),
+        "perf-gate self-test failed: injected regression was not detected"
+    );
+    // and the unperturbed comparison must pass
+    let clean = compare(current, current, tolerance)?;
+    anyhow::ensure!(
+        clean.passed() && !clean.pending,
+        "perf-gate self-test failed: identical snapshots did not pass"
+    );
+    Ok(cmp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    fn tiny_snapshot() -> &'static Json {
+        // real snapshot at tiny sizes: deterministic, all rows present;
+        // computed once and shared across the tests in this module
+        static SNAP: std::sync::OnceLock<Json> = std::sync::OnceLock::new();
+        SNAP.get_or_init(|| super::super::snapshot::run(&SimConfig::default(), 16, 8).unwrap())
+    }
+
+    #[test]
+    fn identical_snapshots_pass() {
+        let snap = tiny_snapshot();
+        let cmp = compare(snap, snap, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.passed() && !cmp.pending);
+        assert_eq!(cmp.cells.len(), 11 * 5);
+        assert!(cmp.regressions.is_empty());
+        let md = cmp.to_markdown();
+        assert!(md.contains("gate **passed**"), "{md}");
+    }
+
+    #[test]
+    fn injected_regression_fails_the_gate() {
+        let snap = tiny_snapshot();
+        // +5% on every cycles cell: every cell must regress at 2%
+        let worse = inflate_cycles(snap, 1.05);
+        let cmp = compare(snap, &worse, DEFAULT_TOLERANCE).unwrap();
+        assert!(!cmp.passed());
+        assert_eq!(cmp.regressions.len(), 11 * 5);
+        assert!(cmp.to_markdown().contains("gate **FAILED**"));
+        // +1% stays inside the 2% tolerance
+        let slightly = inflate_cycles(snap, 1.01);
+        let cmp = compare(snap, &slightly, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        // improvements never fail
+        let better = inflate_cycles(snap, 0.90);
+        assert!(compare(snap, &better, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+
+    #[test]
+    fn self_test_detects_and_clears() {
+        let snap = tiny_snapshot();
+        let cmp = self_test(snap, DEFAULT_TOLERANCE).unwrap();
+        assert!(!cmp.regressions.is_empty());
+    }
+
+    #[test]
+    fn pending_baseline_is_advisory() {
+        let baseline = Json::parse(r#"{"version":3,"kind":"table3-snapshot","pending":true,"results":[]}"#)
+            .unwrap();
+        let snap = tiny_snapshot();
+        let cmp = compare(&baseline, snap, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.pending && cmp.passed());
+        assert!(cmp.to_markdown().contains("baseline pending"));
+        // a pending placeholder cannot satisfy the self-test
+        assert!(self_test(&baseline, DEFAULT_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn schema_mismatches_error_with_refresh_hint() {
+        let snap = tiny_snapshot();
+        let mut other = snap.clone();
+        if let Json::Obj(m) = &mut other {
+            m.insert("fingerprint".into(), Json::Str("other-machine".into()));
+        }
+        let err = compare(&other, snap, DEFAULT_TOLERANCE).unwrap_err().to_string();
+        assert!(err.contains("refresh"), "{err}");
+        // missing stencil row
+        let mut short = snap.clone();
+        if let Json::Obj(m) = &mut short {
+            let rows = m.get("results").and_then(Json::as_arr).unwrap();
+            let truncated = Json::Arr(rows[..rows.len() - 1].to_vec());
+            m.insert("results".into(), truncated);
+        }
+        assert!(compare(snap, &short, DEFAULT_TOLERANCE).is_err());
+    }
+}

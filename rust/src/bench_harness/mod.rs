@@ -7,7 +7,8 @@
 //! | [`fig5`] | Fig. 5 — autovec / DLT / TV / ours on r = 1 stencils |
 //! | [`table3`] | Table 3 — speedups over auto-vectorization, full matrix |
 //! | [`ablation`] | extra ablations (unroll, mregs, tuned-vs-default) |
-//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_3.json`: sim cycles + host wall-clock) |
+//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_4.json`: sim cycles + host wall-clock, compiled engine vs interpreter) |
+//! | [`compare`] | the CI perf-regression gate (`bench-compare`): fresh snapshot vs `bench/baseline.json`, >2% sim-cycle drift fails |
 //!
 //! Absolute cycle counts come from our simulator, not the paper's
 //! proprietary one, so the comparison target is the *shape* of each
@@ -19,6 +20,7 @@
 //! before reporting — a result from an incorrect program is impossible.
 
 pub mod ablation;
+pub mod compare;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;

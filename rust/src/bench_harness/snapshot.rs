@@ -1,54 +1,82 @@
-//! Machine-readable perf snapshot (`BENCH_3.json`): per-method simulated
-//! cycles *and* host wall-clock for the Table-3 stencil rows at one
-//! representative size per dimensionality.
+//! Machine-readable perf snapshot (`BENCH_4.json`): per-method simulated
+//! cycles *and* host wall-clock — compiled engine vs interpreter — for
+//! the Table-3 stencil rows at one representative size per
+//! dimensionality.
 //!
 //! This is the bench-trajectory artifact: small enough to regenerate on
 //! every CI run (`stencil-matrix bench-json`), complete enough to detect
-//! perf regressions in any method on either backend. Every simulated
-//! number passes through [`run_method`] and every host number through
-//! [`run_host`] (the KIR host executor), so a snapshot can only contain
-//! oracle-verified runs.
+//! perf regressions in any method on either backend. The simulated
+//! cycles and op counts are **deterministic** (the simulator has no
+//! noise), which is what `bench/baseline.json` + the `bench-compare` CI
+//! gate key on; host wall-clock is advisory. Every simulated number
+//! passes through [`run_method`] and every host number through
+//! [`run_host`], so a snapshot can only contain oracle-verified runs —
+//! and the two host engines are checked bitwise-equal per cell.
 
 use super::table3;
 use crate::codegen::{run_host, run_method, verify::speedup, HostRun, Method, OuterParams};
+use crate::kir::Engine;
 use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 
-/// Snapshot schema version (2: host wall-clock columns).
-pub const SNAPSHOT_VERSION: u64 = 2;
+/// Snapshot schema version (3: compiled-vs-interpreter host columns).
+pub const SNAPSHOT_VERSION: u64 = 3;
+
+fn mpts(points: usize, run: &HostRun) -> f64 {
+    run.mpts_per_s(points)
+}
 
 fn method_json(
     cycles: u64,
     cycles_per_point: f64,
     speedup: f64,
-    host: &HostRun,
+    interp: &HostRun,
+    compiled: &HostRun,
     points: usize,
 ) -> Json {
     obj(vec![
         ("cycles", Json::Num(cycles as f64)),
         ("cycles_per_point", Json::Num(cycles_per_point)),
         ("speedup", Json::Num(speedup)),
-        ("host_seconds", Json::Num(host.seconds)),
+        // compiled engine (the serving default)
+        ("host_seconds", Json::Num(compiled.seconds)),
+        ("host_mpts_per_s", Json::Num(mpts(points, compiled))),
+        ("host_threads", Json::Num(compiled.threads as f64)),
+        // interpreter twin + the engine-vs-interpreter ratio
+        ("host_interp_seconds", Json::Num(interp.seconds)),
+        ("host_interp_mpts_per_s", Json::Num(mpts(points, interp))),
         (
-            "host_mpts_per_s",
-            Json::Num((points * host.steps) as f64 / host.seconds.max(1e-12) / 1e6),
+            "engine_speedup",
+            Json::Num(interp.seconds / compiled.seconds.max(1e-12)),
         ),
-        ("host_ops", Json::Num(host.ops as f64)),
+        ("host_ops", Json::Num(compiled.ops as f64)),
     ])
 }
 
-/// Run the host backend for one cell, enforcing the same verification
-/// bar as the simulated run.
-fn host_cell(cfg: &SimConfig, spec: crate::stencil::StencilSpec, n: usize, method: Method) -> anyhow::Result<HostRun> {
-    let host = run_host(cfg, spec, n, method)?;
-    anyhow::ensure!(host.verified(), "{spec} {method} N={n} host: max_err {}", host.max_err);
-    Ok(host)
+/// Run both host engines for one cell, enforcing the same verification
+/// bar as the simulated run plus bitwise engine equality. Returns
+/// (interpreter, compiled).
+fn host_cell(
+    cfg: &SimConfig,
+    spec: crate::stencil::StencilSpec,
+    n: usize,
+    method: Method,
+) -> anyhow::Result<(HostRun, HostRun)> {
+    let interp = run_host(cfg, spec, n, method, Engine::Interpret)?;
+    anyhow::ensure!(interp.verified(), "{spec} {method} N={n} host: max_err {}", interp.max_err);
+    let compiled = run_host(cfg, spec, n, method, Engine::Compiled)?;
+    anyhow::ensure!(
+        compiled.grid.data == interp.grid.data,
+        "{spec} {method} N={n}: engines disagree bitwise"
+    );
+    anyhow::ensure!(compiled.ops == interp.ops, "{spec} {method} N={n}: op counts diverge");
+    Ok((interp, compiled))
 }
 
 /// Build the snapshot: every Table-3 spec at `n2d`² / `n3d`³, methods
 /// scalar / autovec / dlt / tv / outer (best Table-3 candidate per cell,
 /// with its plan label). Speedups are vs. auto-vectorization, the
-/// paper's baseline; each cell also carries the KIR host executor's
+/// paper's baseline; each cell also carries both host engines'
 /// wall-clock next to the simulated cycles.
 pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
     let mut results = Vec::new();
@@ -57,7 +85,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
         for spec in table3::rows(dims) {
             let base = run_method(cfg, spec, n, Method::AutoVec, true)?;
             anyhow::ensure!(base.verified(), "{spec} autovec N={n}: max_err {}", base.max_err);
-            let base_host = host_cell(cfg, spec, n, Method::AutoVec)?;
+            let (base_i, base_c) = host_cell(cfg, spec, n, Method::AutoVec)?;
             let mut methods: Vec<(&str, Json)> = Vec::new();
             methods.push((
                 "autovec",
@@ -65,7 +93,8 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                     base.stats.cycles,
                     base.cycles_per_point(),
                     1.0,
-                    &base_host,
+                    &base_i,
+                    &base_c,
                     base.points(),
                 ),
             ));
@@ -74,14 +103,15 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
             {
                 let res = run_method(cfg, spec, n, method, true)?;
                 anyhow::ensure!(res.verified(), "{spec} {method} N={n}: max_err {}", res.max_err);
-                let host = host_cell(cfg, spec, n, method)?;
+                let (hi, hc) = host_cell(cfg, spec, n, method)?;
                 methods.push((
                     name,
                     method_json(
                         res.stats.cycles,
                         res.cycles_per_point(),
                         speedup(&base, &res),
-                        &host,
+                        &hi,
+                        &hc,
                         res.points(),
                     ),
                 ));
@@ -100,12 +130,13 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                 }
             }
             let (bp, bres) = best.expect("candidate set is never empty");
-            let best_host = host_cell(cfg, spec, n, Method::Outer(bp))?;
+            let (bi, bc) = host_cell(cfg, spec, n, Method::Outer(bp))?;
             let mut outer = method_json(
                 bres.stats.cycles,
                 bres.cycles_per_point(),
                 speedup(&base, &bres),
-                &best_host,
+                &bi,
+                &bc,
                 bres.points(),
             );
             if let Json::Obj(m) = &mut outer {
@@ -140,7 +171,7 @@ mod tests {
     fn snapshot_covers_every_table3_row() {
         // tiny sizes keep this test fast; CI regenerates at 64/16
         let j = run(&SimConfig::default(), 16, 8).unwrap();
-        assert_eq!(j.get("version").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(3));
         let results = j.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
         for r in results {
@@ -149,9 +180,12 @@ mod tests {
                 let e = methods.get(m).unwrap_or_else(|| panic!("missing {m}"));
                 assert!(e.get("cycles").and_then(Json::as_f64).unwrap() > 0.0);
                 assert!(e.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
-                // host wall-clock columns ride along with the sim cycles
+                // both host engines ride along with the sim cycles
                 assert!(e.get("host_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
                 assert!(e.get("host_mpts_per_s").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("host_interp_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("engine_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+                assert!(e.get("host_threads").and_then(Json::as_f64).unwrap() >= 1.0);
                 assert!(e.get("host_ops").and_then(Json::as_f64).unwrap() > 0.0);
             }
             assert_eq!(

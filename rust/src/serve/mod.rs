@@ -16,10 +16,13 @@
 //!   stealing, per-batch barrier.
 //! - [`scheduler`] — compiled shard kernels (oracle/taps: bitwise-
 //!   identical to the scalar oracle; `outer`: the paper's algorithm
-//!   compiled through [`crate::kir`] and executed natively on the host),
-//!   an LRU plan cache keyed by (spec, shape, method) that consults the
+//!   compiled through [`crate::kir`] and executed natively on the host
+//!   by the compiling engine — [`crate::kir::Engine::Compiled`], with
+//!   the op-by-op interpreter as the bitwise-identical reference twin;
+//!   a single-shard request fans its row groups across every core), an
+//!   LRU plan cache keyed by (spec, shape, method) that consults the
 //!   [`crate::tune`] database before compiling `tuned` shard kernels —
-//!   now to real host kernels when the plan supports it — and the step
+//!   to real host kernels when the plan supports it — and the step
 //!   loop (compute batch → barrier → halo exchange).
 //! - [`service`] — the batched front-end: bounded queue with
 //!   backpressure, coalescing of identical requests, dispatcher thread;

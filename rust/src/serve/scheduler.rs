@@ -23,7 +23,7 @@ use super::halo;
 use super::partition::Partition;
 use super::pool::{Job, WorkerPool};
 use crate::codegen::{Method, OuterParams};
-use crate::kir::HostKernel;
+use crate::kir::{Engine, HostKernel};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
 use crate::tune::{TuneDb, TunePlan};
@@ -124,11 +124,18 @@ pub struct CompiledPlan {
 }
 
 impl CompiledPlan {
-    /// Compile a plan (uses the repo-wide `paper_default` weights).
+    /// Compile a plan (uses the repo-wide `paper_default` weights) with
+    /// the default compiled host engine.
     pub fn compile(key: PlanKey) -> CompiledPlan {
+        CompiledPlan::compile_with_engine(key, Engine::default())
+    }
+
+    /// Compile a plan whose KIR host kernels (if any) execute on
+    /// `engine`.
+    pub fn compile_with_engine(key: PlanKey, engine: Engine) -> CompiledPlan {
         let host = match key.method {
             KernelMethod::Outer => {
-                host_kernel(&key, Method::Outer(OuterParams::paper_best(key.spec)))
+                host_kernel(&key, Method::Outer(OuterParams::paper_best(key.spec)), engine)
             }
             _ => None,
         };
@@ -163,10 +170,26 @@ impl CompiledPlan {
         self.host.as_ref().map(|k| k.label())
     }
 
-    /// Apply one time step to a tile. Tiles too small to contain any
+    /// Engine the compiled host kernel executes on, when this plan has
+    /// one.
+    pub fn host_engine(&self) -> Option<Engine> {
+        self.host.as_ref().map(|k| k.engine())
+    }
+
+    /// Apply one time step to a tile on one thread (see
+    /// [`CompiledPlan::apply_with`]). Tiles too small to contain any
     /// interior point (edge shards wholly inside the global frozen band)
     /// are returned unchanged — their every point is boundary.
     pub fn apply(&self, a: &DenseGrid) -> DenseGrid {
+        self.apply_with(a, 1)
+    }
+
+    /// Apply one time step to a tile, allowing a KIR host kernel's
+    /// compiled engine up to `threads` worker threads (0 = one per
+    /// available core; the taps/oracle kernels and the interpret engine
+    /// always run on the calling thread). The result is bitwise
+    /// independent of `threads`.
+    pub fn apply_with(&self, a: &DenseGrid, threads: usize) -> DenseGrid {
         debug_assert_eq!(a.shape, self.key.shape, "tile does not match plan");
         let r = self.key.spec.order;
         if a.shape.iter().any(|&n| n <= 2 * r) {
@@ -179,7 +202,7 @@ impl CompiledPlan {
             // kernel otherwise (degenerate tiles, unsupported tuned
             // plans, or no tuning-database match)
             KernelMethod::Outer | KernelMethod::Tuned => match &self.host {
-                Some(k) => k.apply(a),
+                Some(k) => k.apply_with(a, k.engine(), threads),
                 None => self.apply_taps(a),
             },
         }
@@ -230,12 +253,17 @@ impl CompiledPlan {
 /// method admit one. Degenerate tiles (no interior) and
 /// grid-restructuring methods yield `None` — the caller falls back to
 /// the bitwise taps kernel. Host kernels run on the default §5.1 machine
-/// shape (8-lane vectors, 8×8 tiles).
-fn host_kernel(key: &PlanKey, method: Method) -> Option<HostKernel> {
+/// shape (8-lane vectors, 8×8 tiles), executed by `engine`.
+fn host_kernel(key: &PlanKey, method: Method, engine: Engine) -> Option<HostKernel> {
     if key.shape.iter().any(|&s| s <= 2 * key.spec.order) {
         return None;
     }
-    HostKernel::compile(&SimConfig::default(), key.spec, &key.shape, method).ok()
+    HostKernel::compile(&SimConfig::default(), key.spec, &key.shape, method)
+        .ok()
+        .map(|mut k| {
+            k.set_engine(engine);
+            k
+        })
 }
 
 /// Cache counters, readable while serving.
@@ -281,10 +309,13 @@ pub struct PlanCache {
     capacity: usize,
     inner: Mutex<CacheInner>,
     tune: Option<(Arc<TuneDb>, String)>,
+    /// Engine for KIR host kernels compiled by this cache.
+    engine: Engine,
 }
 
 impl PlanCache {
-    /// New cache holding at most `capacity.max(1)` plans.
+    /// New cache holding at most `capacity.max(1)` plans (compiled host
+    /// engine by default).
     pub fn new(capacity: usize) -> PlanCache {
         PlanCache::build(capacity, None)
     }
@@ -308,7 +339,19 @@ impl PlanCache {
                 tuned_hits: 0,
             }),
             tune,
+            engine: Engine::default(),
         }
+    }
+
+    /// Select the engine for host kernels this cache compiles (set
+    /// before sharing the cache; already-resident plans are unaffected).
+    pub fn set_engine(&mut self, engine: Engine) {
+        self.engine = engine;
+    }
+
+    /// Engine for host kernels this cache compiles.
+    pub fn engine(&self) -> Engine {
+        self.engine
     }
 
     /// The tuned-plan label this cache resolves for a stencil (the same
@@ -366,7 +409,7 @@ impl PlanCache {
             return Arc::clone(&entry.plan);
         }
         inner.misses += 1;
-        let mut compiled = CompiledPlan::compile(key.clone());
+        let mut compiled = CompiledPlan::compile_with_engine(key.clone(), self.engine);
         // the tuning DB is consulted only on the compile path (and at
         // most once per stencil thanks to the memo), so the steady-state
         // hit path never pays the lookup
@@ -375,7 +418,7 @@ impl PlanCache {
                 inner.tuned_hits += 1;
                 // compile the tuned plan to a real host kernel when the
                 // host backend supports it (outer/autovec/scalar)
-                compiled.host = host_kernel(&key, info.plan.to_method());
+                compiled.host = host_kernel(&key, info.plan.to_method(), self.engine);
                 compiled.tuned = Some(info);
             }
         }
@@ -487,6 +530,11 @@ impl ShardedEvolver {
             .collect();
         let tiles: Arc<Vec<Mutex<DenseGrid>>> =
             Arc::new(part.extract(grid).into_iter().map(Mutex::new).collect());
+        // a single shard may drive every core through the compiled
+        // engine's row-group threading; with multiple shards the pool's
+        // shard-level parallelism owns the cores (results are bitwise
+        // independent of this choice)
+        let kernel_threads = if n_shards == 1 { 0 } else { 1 };
 
         for step in 0..steps {
             let compute: Vec<Job> = (0..n_shards)
@@ -495,7 +543,7 @@ impl ShardedEvolver {
                     let plan = Arc::clone(&plans[s]);
                     let job: Job = Box::new(move || {
                         let mut tile = tiles[s].lock().unwrap();
-                        *tile = plan.apply(&tile);
+                        *tile = plan.apply_with(&tile, kernel_threads);
                     });
                     job
                 })
@@ -662,6 +710,28 @@ mod tests {
             method: KernelMethod::Taps,
         });
         assert!(t.host_ops().is_none());
+    }
+
+    #[test]
+    fn cache_engine_selects_host_execution_engine() {
+        let spec = StencilSpec::box2d(1);
+        let shape = vec![13usize, 13];
+        let a = DenseGrid::verification_input(&shape, 5);
+        let mut interp_cache = PlanCache::new(4);
+        interp_cache.set_engine(Engine::Interpret);
+        assert_eq!(interp_cache.engine(), Engine::Interpret);
+        let compiled_cache = PlanCache::new(4);
+        assert_eq!(compiled_cache.engine(), Engine::Compiled);
+        let key = PlanKey { spec, shape: shape.clone(), method: KernelMethod::Outer };
+        let pi = interp_cache.get(key.clone());
+        let pc = compiled_cache.get(key);
+        assert_eq!(pi.host_engine(), Some(Engine::Interpret));
+        assert_eq!(pc.host_engine(), Some(Engine::Compiled));
+        // both engines, any thread budget: bitwise identical tiles
+        let want = pi.apply(&a);
+        assert_eq!(pc.apply(&a), want);
+        assert_eq!(pc.apply_with(&a, 4), want);
+        assert_eq!(pc.apply_with(&a, 0), want);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::metrics::ServiceMetrics;
 use super::scheduler::{KernelMethod, ShardedEvolver};
+use crate::kir::Engine;
 use crate::runtime::{PjrtRuntime, Registry, StencilEngine};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::util::json::{obj, Json};
@@ -36,11 +37,21 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Plan-cache capacity (compiled kernels).
     pub plan_cache: usize,
+    /// Host execution engine for KIR shard kernels (`outer`, compiled
+    /// tuned plans): the compiling engine by default, with the op-by-op
+    /// interpreter as the bitwise-identical reference twin.
+    pub engine: Engine,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { workers: 4, shards: 0, queue_depth: 32, plan_cache: 32 }
+        ServeConfig {
+            workers: 4,
+            shards: 0,
+            queue_depth: 32,
+            plan_cache: 32,
+            engine: Engine::default(),
+        }
     }
 }
 
@@ -320,8 +331,9 @@ pub struct StencilServer {
 impl StencilServer {
     /// Build a server (spawns the worker pool immediately).
     pub fn new(cfg: ServeConfig) -> StencilServer {
-        let cache = Arc::new(super::scheduler::PlanCache::new(cfg.plan_cache));
-        StencilServer::with_cache(cfg, cache)
+        let mut cache = super::scheduler::PlanCache::new(cfg.plan_cache);
+        cache.set_engine(cfg.engine);
+        StencilServer::with_cache(cfg, Arc::new(cache))
     }
 
     /// Build a server whose kernel LRU consults a tuning database before
@@ -335,9 +347,10 @@ impl StencilServer {
         db: Arc<crate::tune::TuneDb>,
         fingerprint: String,
     ) -> StencilServer {
-        let cache =
-            Arc::new(super::scheduler::PlanCache::with_tune_db(cfg.plan_cache, db, fingerprint));
-        StencilServer::with_cache(cfg, cache)
+        let mut cache =
+            super::scheduler::PlanCache::with_tune_db(cfg.plan_cache, db, fingerprint);
+        cache.set_engine(cfg.engine);
+        StencilServer::with_cache(cfg, Arc::new(cache))
     }
 
     fn with_cache(cfg: ServeConfig, cache: Arc<super::scheduler::PlanCache>) -> StencilServer {
@@ -479,6 +492,7 @@ impl StencilServer {
                     ("shards", Json::Num(self.effective_shards() as f64)),
                     ("queue_depth", Json::Num(self.inner.cfg.queue_depth as f64)),
                     ("plan_cache", Json::Num(self.inner.cfg.plan_cache as f64)),
+                    ("engine", Json::Str(self.inner.cfg.engine.to_string())),
                 ]),
             ),
         ])
@@ -578,6 +592,7 @@ mod tests {
             shards: 2,
             queue_depth: 8,
             plan_cache: 8,
+            ..ServeConfig::default()
         });
         let t = server.submit(small_req(1)).unwrap();
         assert_eq!(server.queue_len(), 1);

@@ -9,8 +9,16 @@ use crate::util::json::{obj, Json};
 /// Rows are sorted best-first; the winner is marked `*` and the paper
 /// default `(default)`, mirroring the bench harness's table style.
 pub fn to_markdown(out: &TuneOutcome) -> String {
-    let mut table =
-        Table::new(&["rank", "plan", "est cyc/pt", "cyc/pt", "cycles", "vs default", "verified"]);
+    let mut table = Table::new(&[
+        "rank",
+        "plan",
+        "est cyc/pt",
+        "cyc/pt",
+        "cycles",
+        "vs default",
+        "host Mpts/s",
+        "verified",
+    ]);
     let default_cpp = out.paper_default().cycles_per_point;
     for (rank, &i) in out.ranking().iter().enumerate() {
         let m = &out.measurements[i];
@@ -28,6 +36,8 @@ pub fn to_markdown(out: &TuneOutcome) -> String {
             format!("{:.3}", m.cycles_per_point),
             m.cycles.to_string(),
             format!("{:.2}x", default_cpp / m.cycles_per_point),
+            // advisory compiled-engine wall-clock, winner + default only
+            m.host_mpts_per_s.map_or("-".to_string(), |h| format!("{h:.1}")),
             "yes".to_string(), // unverified candidates abort the search
         ]);
     }
@@ -64,6 +74,8 @@ pub fn to_json(out: &TuneOutcome) -> Json {
                 ("cycles", Json::Num(m.cycles as f64)),
                 ("cycles_per_point", Json::Num(m.cycles_per_point)),
                 ("max_err", Json::Num(m.max_err)),
+                ("host_seconds", m.host_seconds.map_or(Json::Null, Json::Num)),
+                ("host_mpts_per_s", m.host_mpts_per_s.map_or(Json::Null, Json::Num)),
                 ("best", Json::Bool(i == out.best_idx)),
                 ("default", Json::Bool(i == out.default_idx)),
             ])
@@ -97,6 +109,7 @@ mod tests {
         assert!(md.contains("(default)"), "{md}");
         assert!(md.contains('*'));
         assert!(md.contains("vs the paper default"));
+        assert!(md.contains("host Mpts/s"), "{md}");
         let j = to_json(&out);
         assert_eq!(j.get("stencil").and_then(Json::as_str), Some("2d9p-box-r1"));
         let ms = j.get("measurements").and_then(Json::as_arr).unwrap();

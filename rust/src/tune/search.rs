@@ -16,7 +16,8 @@
 
 use super::cost::{estimate, CostEstimate};
 use super::space::{enumerate, TunePlan};
-use crate::codegen::run_method;
+use crate::codegen::{run_host, run_method};
+use crate::kir::Engine;
 use crate::stencil::StencilSpec;
 use crate::sim::SimConfig;
 use std::fmt;
@@ -67,6 +68,12 @@ pub struct Measurement {
     /// Max |error| vs. the scalar oracle (`< 1e-9` by construction —
     /// unverified candidates abort the search).
     pub max_err: f64,
+    /// Compiled-engine host wall-clock seconds for the same program
+    /// (advisory, measured for the winner and the paper default only;
+    /// the ranking key stays simulated cycles).
+    pub host_seconds: Option<f64>,
+    /// Host throughput in Mpoints/s matching `host_seconds`.
+    pub host_mpts_per_s: Option<f64>,
 }
 
 /// The result of one tuning run.
@@ -193,6 +200,8 @@ pub fn tune(
             cycles: res.stats.cycles,
             cycles_per_point: res.cycles_per_point(),
             max_err: res.max_err,
+            host_seconds: None,
+            host_mpts_per_s: None,
         });
     }
     // first minimum wins ties, consistent with the stable sort in
@@ -208,6 +217,26 @@ pub fn tune(
         .iter()
         .position(|m| m.plan == default_plan)
         .expect("paper default is always measured");
+    // advisory: compiled-engine host wall-clock for the winner and the
+    // baseline, so the report shows real CPU throughput next to the
+    // simulated ranking
+    let mut host_idx = vec![best_idx];
+    if default_idx != best_idx {
+        host_idx.push(default_idx);
+    }
+    for idx in host_idx {
+        let method = measurements[idx].plan.to_method();
+        let host = run_host(cfg, spec, n, method, Engine::Compiled)?;
+        anyhow::ensure!(
+            host.verified(),
+            "host run of {} failed verification (max_err {:.3e})",
+            measurements[idx].plan.label(spec.dims),
+            host.max_err
+        );
+        let points = n.pow(spec.dims as u32);
+        measurements[idx].host_seconds = Some(host.seconds);
+        measurements[idx].host_mpts_per_s = Some(host.mpts_per_s(points));
+    }
     Ok(TuneOutcome {
         spec,
         n,
@@ -241,6 +270,9 @@ mod tests {
         assert!(out.speedup_vs_default() >= 1.0);
         assert!(out.measurements.iter().all(|m| m.max_err < 1e-9));
         assert_eq!(out.pruned, out.space_size - out.measurements.len());
+        // winner and baseline carry advisory compiled-host wall-clock
+        assert!(out.best().host_seconds.is_some());
+        assert!(out.paper_default().host_mpts_per_s.unwrap() > 0.0);
     }
 
     #[test]
