@@ -1,4 +1,4 @@
-//! The CI perf-regression gate: compare a fresh `BENCH_4.json` snapshot
+//! The CI perf-regression gate: compare a fresh `BENCH_5.json` snapshot
 //! against the checked-in `bench/baseline.json`.
 //!
 //! The gate keys on **simulated cycles**, which are fully deterministic
@@ -69,7 +69,7 @@ impl Comparison {
         if self.pending {
             out.push_str(
                 "**baseline pending** — `bench/baseline.json` is a placeholder; the gate is \
-                 advisory until a CI `BENCH_4.json` is promoted (see CONTRIBUTING.md).\n\n",
+                 advisory until a CI `BENCH_5.json` is promoted (see CONTRIBUTING.md).\n\n",
             );
             return out;
         }
@@ -293,7 +293,7 @@ mod tests {
 
     #[test]
     fn pending_baseline_is_advisory() {
-        let baseline = Json::parse(r#"{"version":3,"kind":"table3-snapshot","pending":true,"results":[]}"#)
+        let baseline = Json::parse(r#"{"version":4,"kind":"table3-snapshot","pending":true,"results":[]}"#)
             .unwrap();
         let snap = tiny_snapshot();
         let cmp = compare(&baseline, snap, DEFAULT_TOLERANCE).unwrap();

@@ -1,26 +1,38 @@
-//! Machine-readable perf snapshot (`BENCH_4.json`): per-method simulated
+//! Machine-readable perf snapshot (`BENCH_5.json`): per-method simulated
 //! cycles *and* host wall-clock — compiled engine vs interpreter — for
 //! the Table-3 stencil rows at one representative size per
-//! dimensionality.
+//! dimensionality, plus a fused-vs-unfused serving measurement per row
+//! (temporal blocking at depth [`FUSE_STEPS`]).
 //!
 //! This is the bench-trajectory artifact: small enough to regenerate on
 //! every CI run (`stencil-matrix bench-json`), complete enough to detect
 //! perf regressions in any method on either backend. The simulated
 //! cycles and op counts are **deterministic** (the simulator has no
 //! noise), which is what `bench/baseline.json` + the `bench-compare` CI
-//! gate key on; host wall-clock is advisory. Every simulated number
-//! passes through [`run_method`] and every host number through
-//! [`run_host`], so a snapshot can only contain oracle-verified runs —
-//! and the two host engines are checked bitwise-equal per cell.
+//! gate key on; host wall-clock (including the fused-serve columns) is
+//! advisory. Every simulated number passes through [`run_method`] and
+//! every host number through [`run_host`], so a snapshot can only
+//! contain oracle-verified runs — the two host engines are checked
+//! bitwise-equal per cell, and the fused serve run is checked bitwise
+//! against the unfused one.
 
 use super::table3;
 use crate::codegen::{run_host, run_method, verify::speedup, HostRun, Method, OuterParams};
 use crate::kir::Engine;
+use crate::serve::{KernelMethod, ShardedEvolver};
+use crate::stencil::DenseGrid;
 use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
+use std::time::Instant;
 
-/// Snapshot schema version (3: compiled-vs-interpreter host columns).
-pub const SNAPSHOT_VERSION: u64 = 3;
+/// Snapshot schema version (4: fused-vs-unfused serve columns).
+pub const SNAPSHOT_VERSION: u64 = 4;
+
+/// Time-tile depth of the snapshot's fused serving measurement.
+pub const FUSE_STEPS: usize = 4;
+
+/// Time steps the fused serving measurement advances per run.
+const FUSE_TOTAL_STEPS: usize = 8;
 
 fn mpts(points: usize, run: &HostRun) -> f64 {
     run.mpts_per_s(points)
@@ -73,11 +85,60 @@ fn host_cell(
     Ok((interp, compiled))
 }
 
+/// Fused-vs-unfused serving measurement for one stencil row: evolve the
+/// deterministic verification grid [`FUSE_TOTAL_STEPS`] steps through
+/// the sharded evolver with the outer KIR kernel, once with per-step
+/// halo exchanges (`T = 1`) and once temporally blocked at
+/// [`FUSE_STEPS`]. The two outputs are checked **bitwise equal**;
+/// wall-clock is best-of-2 and advisory (never gated).
+fn fused_serve(spec: crate::stencil::StencilSpec, n: usize) -> anyhow::Result<Json> {
+    let shape = vec![n + 2 * spec.order; spec.dims];
+    let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+    let ev = ShardedEvolver::new(2);
+    let shards = 2usize;
+    let method = KernelMethod::Outer;
+    // warm the plan cache so one-time kernel compilation stays out of
+    // the timed runs
+    ev.evolve_fused(spec, &grid, FUSE_TOTAL_STEPS, shards, method, 1)?;
+    ev.evolve_fused(spec, &grid, FUSE_TOTAL_STEPS, shards, method, FUSE_STEPS)?;
+    let time = |fuse: usize| -> anyhow::Result<(f64, DenseGrid, crate::serve::FuseReport)> {
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let r = ev.evolve_fused(spec, &grid, FUSE_TOTAL_STEPS, shards, method, fuse)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(r);
+        }
+        let (g, _, fr) = last.unwrap();
+        Ok((best, g, fr))
+    };
+    let (unfused_s, unfused_g, fr1) = time(1)?;
+    let (fused_s, fused_g, frt) = time(FUSE_STEPS)?;
+    anyhow::ensure!(
+        fused_g == unfused_g,
+        "{spec}: fused serving diverged bitwise from unfused"
+    );
+    let point_steps = (n.pow(spec.dims as u32) * FUSE_TOTAL_STEPS) as f64;
+    Ok(obj(vec![
+        ("steps", Json::Num(FUSE_TOTAL_STEPS as f64)),
+        ("fuse_steps", Json::Num(frt.fuse_steps as f64)),
+        ("halo_exchanges_unfused", Json::Num(fr1.halo_exchanges as f64)),
+        ("halo_exchanges_fused", Json::Num(frt.halo_exchanges as f64)),
+        ("unfused_seconds", Json::Num(unfused_s)),
+        ("fused_seconds", Json::Num(fused_s)),
+        ("unfused_mpts_per_s", Json::Num(point_steps / unfused_s.max(1e-12) / 1e6)),
+        ("fused_mpts_per_s", Json::Num(point_steps / fused_s.max(1e-12) / 1e6)),
+        ("fused_speedup", Json::Num(unfused_s / fused_s.max(1e-12))),
+    ]))
+}
+
 /// Build the snapshot: every Table-3 spec at `n2d`² / `n3d`³, methods
 /// scalar / autovec / dlt / tv / outer (best Table-3 candidate per cell,
 /// with its plan label). Speedups are vs. auto-vectorization, the
 /// paper's baseline; each cell also carries both host engines'
-/// wall-clock next to the simulated cycles.
+/// wall-clock next to the simulated cycles, and each row a
+/// fused-vs-unfused serving measurement ([`fused_serve`]).
 pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
     let mut results = Vec::new();
     for dims in [2usize, 3] {
@@ -148,6 +209,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                 ("dims", Json::Num(dims as f64)),
                 ("n", Json::Num(n as f64)),
                 ("methods", obj(methods)),
+                ("fused_serve", fused_serve(spec, n)?),
             ]));
         }
     }
@@ -171,7 +233,7 @@ mod tests {
     fn snapshot_covers_every_table3_row() {
         // tiny sizes keep this test fast; CI regenerates at 64/16
         let j = run(&SimConfig::default(), 16, 8).unwrap();
-        assert_eq!(j.get("version").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(4));
         let results = j.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
         for r in results {
@@ -193,6 +255,17 @@ mod tests {
                 Some(1.0)
             );
             assert!(methods.get("outer").unwrap().get("plan").and_then(Json::as_str).is_some());
+            // the fused-vs-unfused serving cell (bitwise-checked inside run)
+            let fs = r.get("fused_serve").expect("row carries fused_serve");
+            assert_eq!(fs.get("steps").and_then(Json::as_usize), Some(8));
+            let t = fs.get("fuse_steps").and_then(Json::as_usize).unwrap();
+            assert!((1..=FUSE_STEPS).contains(&t));
+            let unfused_x = fs.get("halo_exchanges_unfused").and_then(Json::as_usize).unwrap();
+            let fused_x = fs.get("halo_exchanges_fused").and_then(Json::as_usize).unwrap();
+            assert_eq!(unfused_x, 8 - 1);
+            assert_eq!(fused_x, 8usize.div_ceil(t) - 1);
+            assert!(fs.get("fused_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(fs.get("fused_mpts_per_s").and_then(Json::as_f64).unwrap() > 0.0);
         }
         // round-trips through the parser
         let rt = Json::parse(&j.to_string_compact()).unwrap();

@@ -148,6 +148,15 @@ impl Layout {
     pub fn swap(&mut self) {
         std::mem::swap(&mut self.a_base, &mut self.b_base);
     }
+
+    /// Rewrite both grids from a fresh input image (e.g. between
+    /// measurement passes of a temporally blocked run, whose ping-pong
+    /// steps overwrite the original `A` contents). Host-side work — on
+    /// the simulator it is never charged to the measured run.
+    pub fn reinit(&self, machine: &mut impl Arena, grid: &DenseGrid) {
+        self.write_grid(machine, self.a_base, grid);
+        self.write_grid(machine, self.b_base, grid);
+    }
 }
 
 /// A coefficient table resident in simulator memory.

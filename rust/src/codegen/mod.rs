@@ -34,5 +34,7 @@ pub mod verify;
 
 pub use common::{Layout, OuterParams};
 pub use verify::{
-    kernel_for, run_host, run_host_threads, run_method, HostRun, Method, MethodResult,
+    kernel_for, kernel_for_fused, run_host, run_host_fused, run_host_fused_threads,
+    run_host_threads, run_method, run_method_fused, supports_fusion, HostRun, Method,
+    MethodResult,
 };

@@ -20,11 +20,36 @@
 
 use super::common::{CoeffTable, Layout, OuterParams};
 use super::{dlt, outer, scalar, tv, vectorize};
-use crate::kir::{Engine, ExecPlan, HostMachine, Kernel};
+use crate::kir::{Engine, ExecPlan, HostMachine, Kernel, KirSink, Marker, Op, PingPong};
 use crate::scatter::build_cover;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::{Machine, RunStats, SimConfig};
 use std::fmt;
+
+/// True when a method can be temporally blocked (T fused ping-pong steps
+/// per application): it must evolve grids in place with one sweep per
+/// step. DLT restructures the storage layout around every sweep and TV
+/// blocks time internally already, so both are rejected.
+pub fn supports_fusion(method: Method) -> bool {
+    matches!(method, Method::Outer(_) | Method::AutoVec | Method::Scalar)
+}
+
+fn ensure_fusable(cfg: &SimConfig, n: usize, method: Method, fuse_steps: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(fuse_steps >= 1, "an application must advance at least one step");
+    if fuse_steps > 1 {
+        anyhow::ensure!(
+            supports_fusion(method),
+            "{method} cannot be temporally blocked (it restructures grids or blocks time itself)"
+        );
+        anyhow::ensure!(
+            n % cfg.vlen == 0,
+            "temporal blocking needs an exactly tiled domain (N={n} is not a multiple of the \
+             vector length {})",
+            cfg.vlen
+        );
+    }
+    Ok(())
+}
 
 /// A stencil execution method.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -103,11 +128,32 @@ pub fn run_method(
     method: Method,
     warm: bool,
 ) -> anyhow::Result<MethodResult> {
+    run_method_fused(cfg, spec, n, method, warm, 1)
+}
+
+/// [`run_method`] with a time-tile depth: each application generates
+/// `fuse_steps` ping-pong fused steps (step `s` reads what step `s - 1`
+/// wrote, buffers alternating per [`PingPong`]) and the result is
+/// verified against `fuse_steps` oracle steps. On the full grid the
+/// generated programs write exactly the domain interior, so the frozen
+/// global boundary stays frozen across every fused step with no extra
+/// ops. `fuse_steps = 1` is byte-identical to the classic [`run_method`]
+/// path. Methods that cannot be fused ([`supports_fusion`]) are
+/// rejected for `fuse_steps > 1`.
+pub fn run_method_fused(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    warm: bool,
+    fuse_steps: usize,
+) -> anyhow::Result<MethodResult> {
+    ensure_fusable(cfg, n, method, fuse_steps)?;
     let coeffs = CoeffTensor::paper_default(spec);
     let shape = vec![n + 2 * spec.order; spec.dims];
     let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
     let mut machine = Machine::new(cfg.clone());
-    let layout = Layout::alloc(&mut machine, spec, &grid);
+    let mut layout = Layout::alloc(&mut machine, spec, &grid);
 
     // ---- one-time setup (never charged to the measured run) ----
     let cfg2 = machine.cfg.clone();
@@ -137,53 +183,76 @@ pub fn run_method(
     let passes = if warm { 2 } else { 1 };
     let mut stats = RunStats::default();
     let mut steps = 1usize;
-    for _pass in 0..passes {
-        match method {
-            Method::Outer(_) => {
-                let (cover, table, params) = outer_setup.as_ref().unwrap();
-                outer::generate(&cfg2, &layout, cover, table, *params, &mut machine)?;
+    let mut swapped = false;
+    for pass in 0..passes {
+        if fuse_steps > 1 && pass > 0 {
+            // the previous pass's ping-pong overwrote the original A
+            // contents: restore the untouched input image (host work,
+            // never charged to the measured run) before re-measuring
+            if swapped {
+                layout.swap();
+                swapped = false;
             }
-            Method::AutoVec => {
-                vectorize::generate(
-                    &cfg2,
-                    &layout,
-                    &coeffs,
-                    splat_table.as_ref().unwrap(),
-                    &mut machine,
-                )?;
+            layout.reinit(&mut machine, &grid);
+            machine.finish();
+        }
+        for step in 0..fuse_steps {
+            if step > 0 {
+                layout.swap();
+                swapped = !swapped;
             }
-            Method::Scalar => {
-                scalar::generate(
-                    &cfg2,
-                    &layout,
-                    &coeffs,
-                    splat_table.as_ref().unwrap(),
-                    &mut machine,
-                )?;
-            }
-            Method::Dlt => {
-                dlt::generate(
-                    &cfg2,
-                    &layout,
-                    dlt_layout.as_ref().unwrap(),
-                    &coeffs,
-                    splat_table.as_ref().unwrap(),
-                    &mut machine,
-                )?;
-            }
-            Method::Tv => {
-                tv::generate(
-                    &cfg2,
-                    &layout,
-                    tv_scratch.as_ref().unwrap(),
-                    &coeffs,
-                    splat_table.as_ref().unwrap(),
-                    &mut machine,
-                )?;
-                steps = tv::TIME_BLOCK;
+            match method {
+                Method::Outer(_) => {
+                    let (cover, table, params) = outer_setup.as_ref().unwrap();
+                    outer::generate(&cfg2, &layout, cover, table, *params, &mut machine)?;
+                }
+                Method::AutoVec => {
+                    vectorize::generate(
+                        &cfg2,
+                        &layout,
+                        &coeffs,
+                        splat_table.as_ref().unwrap(),
+                        &mut machine,
+                    )?;
+                }
+                Method::Scalar => {
+                    scalar::generate(
+                        &cfg2,
+                        &layout,
+                        &coeffs,
+                        splat_table.as_ref().unwrap(),
+                        &mut machine,
+                    )?;
+                }
+                Method::Dlt => {
+                    dlt::generate(
+                        &cfg2,
+                        &layout,
+                        dlt_layout.as_ref().unwrap(),
+                        &coeffs,
+                        splat_table.as_ref().unwrap(),
+                        &mut machine,
+                    )?;
+                }
+                Method::Tv => {
+                    tv::generate(
+                        &cfg2,
+                        &layout,
+                        tv_scratch.as_ref().unwrap(),
+                        &coeffs,
+                        splat_table.as_ref().unwrap(),
+                        &mut machine,
+                    )?;
+                    steps = tv::TIME_BLOCK;
+                }
             }
         }
         stats = machine.finish();
+    }
+    if fuse_steps > 1 {
+        steps = fuse_steps;
+        // after T - 1 swaps the layout's B side is the ping-pong result
+        debug_assert_eq!(PingPong::result_in_back(fuse_steps), !swapped);
     }
     let got = match &dlt_layout {
         Some(d) => d.read_b(&machine, &grid),
@@ -247,42 +316,77 @@ fn prepare_host(
     spec: StencilSpec,
     n: usize,
     method: Method,
+    fuse_steps: usize,
 ) -> anyhow::Result<HostPrep> {
+    ensure_fusable(cfg, n, method, fuse_steps)?;
     let coeffs = CoeffTensor::paper_default(spec);
     let shape = vec![n + 2 * spec.order; spec.dims];
     let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
     let mut machine = HostMachine::from_config(cfg);
-    let layout = Layout::alloc(&mut machine, spec, &grid);
+    let mut layout = Layout::alloc(&mut machine, spec, &grid);
     let mut kernel = Kernel::default();
     let mut dlt_layout = None;
     let mut steps = 1usize;
-    match method {
-        Method::Outer(params) => {
-            let cover = build_cover(&coeffs, params.option)?;
-            let table = CoeffTable::install_full(&mut machine, &coeffs, &cover);
-            outer::generate(cfg, &layout, &cover, &table, params, &mut kernel)?;
+    // one-time setup: tables (and DLT/TV scratch) are step-invariant
+    let outer_setup = if let Method::Outer(params) = method {
+        let cover = build_cover(&coeffs, params.option)?;
+        let table = CoeffTable::install_full(&mut machine, &coeffs, &cover);
+        Some((cover, table, params))
+    } else {
+        None
+    };
+    let splat_table = match method {
+        Method::Outer(_) => None,
+        _ => Some(CoeffTable::install_splats(&mut machine, &coeffs)),
+    };
+    let tv_scratch = if method == Method::Tv {
+        Some(tv::setup(&mut machine, &layout))
+    } else {
+        None
+    };
+    for step in 0..fuse_steps {
+        if step > 0 {
+            layout.swap();
         }
-        Method::AutoVec => {
-            let table = CoeffTable::install_splats(&mut machine, &coeffs);
-            vectorize::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+        if fuse_steps > 1 {
+            kernel.emit(Op::Begin(Marker::Step { t: step, of: fuse_steps }));
         }
-        Method::Scalar => {
-            let table = CoeffTable::install_splats(&mut machine, &coeffs);
-            scalar::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
+        match method {
+            Method::Outer(_) => {
+                let (cover, table, params) = outer_setup.as_ref().unwrap();
+                outer::generate(cfg, &layout, cover, table, *params, &mut kernel)?;
+            }
+            Method::AutoVec => {
+                vectorize::generate(cfg, &layout, &coeffs, splat_table.as_ref().unwrap(), &mut kernel)?;
+            }
+            Method::Scalar => {
+                scalar::generate(cfg, &layout, &coeffs, splat_table.as_ref().unwrap(), &mut kernel)?;
+            }
+            Method::Dlt => {
+                let d = dlt::DltLayout::build(&mut machine, &layout, &grid);
+                dlt::generate(cfg, &layout, &d, &coeffs, splat_table.as_ref().unwrap(), &mut kernel)?;
+                dlt_layout = Some(d);
+            }
+            Method::Tv => {
+                tv::generate(
+                    cfg,
+                    &layout,
+                    tv_scratch.as_ref().unwrap(),
+                    &coeffs,
+                    splat_table.as_ref().unwrap(),
+                    &mut kernel,
+                )?;
+                steps = tv::TIME_BLOCK;
+            }
         }
-        Method::Dlt => {
-            let table = CoeffTable::install_splats(&mut machine, &coeffs);
-            let d = dlt::DltLayout::build(&mut machine, &layout, &grid);
-            dlt::generate(cfg, &layout, &d, &coeffs, &table, &mut kernel)?;
-            dlt_layout = Some(d);
-        }
-        Method::Tv => {
-            let table = CoeffTable::install_splats(&mut machine, &coeffs);
-            let scratch = tv::setup(&mut machine, &layout);
-            tv::generate(cfg, &layout, &scratch, &coeffs, &table, &mut kernel)?;
-            steps = tv::TIME_BLOCK;
+        if fuse_steps > 1 {
+            kernel.emit(Op::End(Marker::Step { t: step, of: fuse_steps }));
         }
     }
+    if fuse_steps > 1 {
+        steps = fuse_steps;
+    }
+    kernel.steps = steps;
     Ok(HostPrep { machine, layout, dlt: dlt_layout, steps, kernel, coeffs, grid })
 }
 
@@ -294,7 +398,20 @@ pub fn kernel_for(
     n: usize,
     method: Method,
 ) -> anyhow::Result<Kernel> {
-    prepare_host(cfg, spec, n, method).map(|p| p.kernel)
+    kernel_for_fused(cfg, spec, n, method, 1)
+}
+
+/// [`kernel_for`] with a time-tile depth: the captured program holds
+/// `fuse_steps` [`Marker::Step`]-delimited fused steps against the
+/// ping-pong buffers (what `dump-ir --fuse-steps` prints).
+pub fn kernel_for_fused(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    fuse_steps: usize,
+) -> anyhow::Result<Kernel> {
+    prepare_host(cfg, spec, n, method, fuse_steps).map(|p| p.kernel)
 }
 
 /// Run `method` on the host backend with `engine` and verify the result
@@ -311,7 +428,7 @@ pub fn run_host(
     method: Method,
     engine: Engine,
 ) -> anyhow::Result<HostRun> {
-    run_host_threads(cfg, spec, n, method, engine, 0)
+    run_host_fused_threads(cfg, spec, n, method, engine, 1, 0)
 }
 
 /// [`run_host`] with an explicit thread budget for the compiled engine
@@ -324,7 +441,36 @@ pub fn run_host_threads(
     engine: Engine,
     threads: usize,
 ) -> anyhow::Result<HostRun> {
-    let mut p = prepare_host(cfg, spec, n, method)?;
+    run_host_fused_threads(cfg, spec, n, method, engine, 1, threads)
+}
+
+/// [`run_host`] with a time-tile depth: one execution advances
+/// `fuse_steps` fused ping-pong steps (`HostRun::steps` reports it, so
+/// `mpts_per_s` counts the amortized throughput), verified against
+/// `fuse_steps` oracle steps.
+pub fn run_host_fused(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    engine: Engine,
+    fuse_steps: usize,
+) -> anyhow::Result<HostRun> {
+    run_host_fused_threads(cfg, spec, n, method, engine, fuse_steps, 0)
+}
+
+/// [`run_host_fused`] with an explicit thread budget for the compiled
+/// engine (0 = one per available core; ignored by the interpreter).
+pub fn run_host_fused_threads(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    method: Method,
+    engine: Engine,
+    fuse_steps: usize,
+    threads: usize,
+) -> anyhow::Result<HostRun> {
+    let mut p = prepare_host(cfg, spec, n, method, fuse_steps)?;
     let (seconds, ops, threads_used) = match engine {
         Engine::Interpret => {
             let t0 = std::time::Instant::now();
@@ -527,6 +673,67 @@ mod tests {
         .unwrap();
         assert!(ko.outer_count() > 0);
         assert!(ko.stats().markers > 0, "outer programs carry structure markers");
+    }
+
+    #[test]
+    fn fused_runs_verify_and_backends_agree_bitwise() {
+        let cfg = SimConfig::default();
+        for (spec, n, method) in [
+            (
+                StencilSpec::box2d(1),
+                16,
+                Method::Outer(OuterParams::paper_best(StencilSpec::box2d(1))),
+            ),
+            (StencilSpec::star2d(2), 16, Method::AutoVec),
+            (
+                StencilSpec::box3d(1),
+                8,
+                Method::Outer(OuterParams::paper_best(StencilSpec::box3d(1))),
+            ),
+        ] {
+            for t in [2usize, 4] {
+                let sim = run_method_fused(&cfg, spec, n, method, true, t).unwrap();
+                assert!(sim.verified(), "{spec} {method} T={t}: sim max_err {}", sim.max_err);
+                assert_eq!(sim.steps, t);
+                let host = run_host_fused(&cfg, spec, n, method, Engine::Interpret, t).unwrap();
+                assert!(host.verified(), "{spec} {method} T={t}: host max_err {}", host.max_err);
+                assert_eq!(host.steps, t);
+                assert_eq!(host.grid.data, sim.grid.data, "{spec} {method} T={t}: host vs sim");
+                for threads in [1usize, 3] {
+                    let comp = run_host_fused_threads(
+                        &cfg,
+                        spec,
+                        n,
+                        method,
+                        Engine::Compiled,
+                        t,
+                        threads,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        comp.grid.data, host.grid.data,
+                        "{spec} {method} T={t} threads={threads}"
+                    );
+                }
+            }
+        }
+        // grid-restructuring / time-blocking methods reject fusion
+        assert!(!supports_fusion(Method::Dlt) && !supports_fusion(Method::Tv));
+        assert!(run_method_fused(&cfg, StencilSpec::box2d(1), 16, Method::Dlt, false, 2).is_err());
+        assert!(run_method_fused(&cfg, StencilSpec::box2d(1), 16, Method::Tv, false, 2).is_err());
+        // fused domains must tile exactly
+        assert!(run_method_fused(&cfg, StencilSpec::box2d(1), 12, Method::Scalar, false, 2).is_err());
+        // the captured fused kernel carries its step structure
+        let k = kernel_for_fused(
+            &cfg,
+            StencilSpec::box2d(1),
+            16,
+            Method::Outer(OuterParams::paper_best(StencilSpec::box2d(1))),
+            3,
+        )
+        .unwrap();
+        assert_eq!(k.steps, 3);
+        assert_eq!(crate::kir::step_stats(&k).len(), 3);
     }
 
     #[test]

@@ -122,8 +122,12 @@ fn split_into_group_runs(ops: &[Op]) -> Option<Vec<Vec<Vec<Op>>>> {
                 saw_group = true;
                 i = end + 1;
             }
-            // phase boundaries are barriers: close the current run
-            Op::Begin(Marker::Phase(_)) | Op::End(Marker::Phase(_)) => {
+            // phase and fused-step boundaries are barriers: close the
+            // current run (step t+1 reads what step t wrote)
+            Op::Begin(Marker::Phase(_))
+            | Op::End(Marker::Phase(_))
+            | Op::Begin(Marker::Step { .. })
+            | Op::End(Marker::Step { .. }) => {
                 if !current.is_empty() {
                     runs.push(std::mem::take(&mut current));
                 }
@@ -370,6 +374,26 @@ mod tests {
         assert_eq!(f.sections.len(), 2);
         assert!(matches!(f.sections[0], Section::Par(ref b) if b.len() == 1));
         assert!(matches!(f.sections[1], Section::Par(ref b) if b.len() == 1));
+    }
+
+    #[test]
+    fn step_markers_are_barriers() {
+        // a fused two-step program: step 2 reads step 1's output row, but
+        // the step boundary keeps the runs separate (and ordered) instead
+        // of collapsing the program to Seq
+        let mut ops = vec![Op::Begin(Marker::Step { t: 0, of: 2 })];
+        ops.extend(group(0, tile_body(1000)));
+        ops.push(Op::End(Marker::Step { t: 0, of: 2 }));
+        ops.push(Op::Begin(Marker::Step { t: 1, of: 2 }));
+        let mut body = tile_body(2000);
+        body[1] = Op::Load { dst: VReg(0), addr: 1000 }; // reads step 1's write
+        ops.extend(group(0, body));
+        ops.push(Op::End(Marker::Step { t: 1, of: 2 }));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 2);
+        assert!(matches!(f.sections[0], Section::Par(ref b) if b.len() == 1));
+        assert!(matches!(f.sections[1], Section::Par(ref b) if b.len() == 1));
+        assert_eq!(f.par_blocks(), 2);
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub enum Marker {
     /// A named program phase (e.g. the 3D orthogonal cover's second pass
     /// over `i`-lines).
     Phase(&'static str),
+    /// One fused time step of a temporally blocked program (`t` of `of`,
+    /// zero-based). Like [`Marker::Phase`], a `Step` boundary is a
+    /// barrier: step `t + 1` reads what step `t` wrote, so no scheduling
+    /// freedom crosses it.
+    Step { t: usize, of: usize },
 }
 
 /// One kernel-IR operation.
@@ -174,6 +179,7 @@ fn marker_label(m: &Marker) -> String {
             format!("group @({i0},{j0},{k0}) ui={ui} uk={uk}")
         }
         Marker::Phase(name) => format!("phase {name}"),
+        Marker::Step { t, of } => format!("==== step {}/{} ====", t + 1, of),
     }
 }
 
@@ -191,10 +197,20 @@ pub trait KirSink {
 }
 
 /// A captured kernel-IR program.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct Kernel {
     /// The operations, markers included, in emission order.
     pub ops: Vec<Op>,
+    /// Time steps one execution of the program advances (1 for classic
+    /// single-sweep programs; T for temporally blocked programs whose
+    /// fused steps are delimited by [`Marker::Step`] boundaries).
+    pub steps: usize,
+}
+
+impl Default for Kernel {
+    fn default() -> Kernel {
+        Kernel { ops: Vec::new(), steps: 1 }
+    }
 }
 
 impl KirSink for Kernel {
@@ -352,6 +368,32 @@ impl KirSink for OpStats {
     }
 }
 
+/// Per-step operation statistics of a temporally blocked program: one
+/// [`OpStats`] per `Begin(Step)..End(Step)` region, in step order
+/// (everything inside the region counts, including the inter-step
+/// freeze phases nested in it). Programs without step markers return an
+/// empty vector.
+pub fn step_stats(kernel: &Kernel) -> Vec<OpStats> {
+    let mut out = Vec::new();
+    let mut current: Option<OpStats> = None;
+    for op in &kernel.ops {
+        match op {
+            Op::Begin(Marker::Step { .. }) => current = Some(OpStats::default()),
+            Op::End(Marker::Step { .. }) => {
+                if let Some(s) = current.take() {
+                    out.push(s);
+                }
+            }
+            other => {
+                if let Some(s) = &mut current {
+                    s.add(other);
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Render a kernel as indented text (markers open/close blocks), up to
 /// `limit` operations — the `dump-ir` CLI output.
 pub fn dump(kernel: &Kernel, limit: usize) -> String {
@@ -427,6 +469,33 @@ mod tests {
         // truncation note
         let short = dump(&k, 1);
         assert!(short.contains("(2 more)"), "{short}");
+    }
+
+    #[test]
+    fn step_markers_render_distinctly_and_subtotal() {
+        let mut k = Kernel::default();
+        assert_eq!(k.steps, 1, "default programs advance one step");
+        k.steps = 2;
+        for t in 0..2usize {
+            k.emit(Op::Begin(Marker::Step { t, of: 2 }));
+            k.emit(Op::Load { dst: VReg(0), addr: 64 * t });
+            if t == 0 {
+                // inter-step freeze phase is charged to its step
+                k.emit(Op::Begin(Marker::Phase("freeze")));
+                k.emit(Op::Store { src: VReg(0), addr: 0 });
+                k.emit(Op::End(Marker::Phase("freeze")));
+            }
+            k.emit(Op::End(Marker::Step { t, of: 2 }));
+        }
+        let text = dump(&k, 100);
+        assert!(text.contains("==== step 1/2 ===="), "{text}");
+        assert!(text.contains("==== step 2/2 ===="), "{text}");
+        let per_step = step_stats(&k);
+        assert_eq!(per_step.len(), 2);
+        assert_eq!(per_step[0].total(), 2);
+        assert_eq!(per_step[1].total(), 1);
+        // markerless programs have no step breakdown
+        assert!(step_stats(&Kernel::default()).is_empty());
     }
 
     #[test]

@@ -21,23 +21,31 @@
 
 use super::exec::{Engine, ExecPlan};
 use super::host::HostMachine;
-use super::ir::{Kernel, Marker, Op};
+use super::ir::{Kernel, Marker, Op, VReg};
+use super::mem::PingPong;
 use crate::codegen::common::{CoeffTable, Layout};
 use crate::codegen::{outer, scalar, vectorize, Method};
 use crate::scatter::build_cover;
 use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
 
-/// A host kernel compiled for one (spec, tile shape, method).
+/// A host kernel compiled for one (spec, tile shape, method, time-tile
+/// depth).
 #[derive(Debug, Clone)]
 pub struct HostKernel {
     spec: StencilSpec,
     /// Padded cubic domain extent the program was generated for.
     d: usize,
-    /// Generated program (markers included).
+    /// Fused time steps one `apply` advances (1 = classic single sweep).
+    steps: usize,
+    /// Generated program (markers included; `steps` step regions).
     ops: Vec<Op>,
-    /// Grid layout inside the template machine's memory.
+    /// Grid layout inside the template machine's memory, in the *last*
+    /// step's orientation (its `B` side is where the result lands).
     layout: Layout,
+    /// The ping-pong plan over the two grid buffers (original
+    /// orientation); `layout`'s final orientation is derived from it.
+    pong: PingPong,
     /// Memory image with coefficient tables installed and zeroed grids;
     /// cloned per `apply`.
     template: HostMachine,
@@ -50,19 +58,44 @@ pub struct HostKernel {
 }
 
 impl HostKernel {
-    /// Compile a host kernel for tiles of storage shape `tile_shape`.
-    ///
-    /// The tile's interior (`shape - 2r` per dimension) is embedded in a
-    /// cubic domain rounded up to the vector length; `Dlt`/`Tv` are not
-    /// compilable as tile kernels (they restructure whole grids) and
-    /// return an error.
+    /// Compile a single-step host kernel for tiles of storage shape
+    /// `tile_shape` (see [`HostKernel::compile_fused`]).
     pub fn compile(
         cfg: &SimConfig,
         spec: StencilSpec,
         tile_shape: &[usize],
         method: Method,
     ) -> anyhow::Result<HostKernel> {
+        HostKernel::compile_fused(cfg, spec, tile_shape, method, 1)
+    }
+
+    /// Compile a host kernel for tiles of storage shape `tile_shape`
+    /// whose every application advances `steps` fused time steps
+    /// (temporal blocking).
+    ///
+    /// The tile's interior (`shape - 2r` per dimension) is embedded in a
+    /// cubic domain rounded up to the vector length; `Dlt`/`Tv` are not
+    /// compilable as tile kernels (they restructure whole grids) and
+    /// return an error.
+    ///
+    /// For `steps > 1` the generator emits one program per step against
+    /// the alternating ping-pong buffer ([`PingPong`]), each step wrapped
+    /// in [`Marker::Step`] barriers, and an inter-step *freeze phase*
+    /// restores every non-interior location the step may have dirtied
+    /// from the read buffer. That keeps the per-step frozen-boundary
+    /// contract exact, so a fused `T`-step application is **bitwise
+    /// identical** to `T` single-step applications of the same kernel
+    /// (property-tested in this module and in
+    /// `rust/tests/shard_correctness.rs`).
+    pub fn compile_fused(
+        cfg: &SimConfig,
+        spec: StencilSpec,
+        tile_shape: &[usize],
+        method: Method,
+        steps: usize,
+    ) -> anyhow::Result<HostKernel> {
         let r = spec.order;
+        anyhow::ensure!(steps >= 1, "a kernel application must advance at least one step");
         anyhow::ensure!(tile_shape.len() == spec.dims, "tile shape does not match {spec}");
         anyhow::ensure!(
             tile_shape.iter().all(|&s| s > 2 * r),
@@ -74,38 +107,85 @@ impl HostKernel {
         let storage = vec![d + 2 * r; spec.dims];
         let zero = DenseGrid::zeros(&storage);
         let mut template = HostMachine::from_config(cfg);
-        let layout = Layout::alloc(&mut template, spec, &zero);
+        let mut layout = Layout::alloc(&mut template, spec, &zero);
+        let pong = PingPong::new(layout.a_base, layout.b_base);
         let coeffs = CoeffTensor::paper_default(spec);
-        let mut kernel = Kernel::default();
-        match method {
-            Method::Outer(params) => {
-                let cover = build_cover(&coeffs, params.option)?;
-                let table = CoeffTable::install_full(&mut template, &coeffs, &cover);
-                outer::generate(cfg, &layout, &cover, &table, params, &mut kernel)?;
+        // one-time setup: coefficient tables are step-invariant
+        let outer_setup = if let Method::Outer(params) = method {
+            let cover = build_cover(&coeffs, params.option)?;
+            let table = CoeffTable::install_full(&mut template, &coeffs, &cover);
+            Some((cover, table, params))
+        } else {
+            None
+        };
+        let splat_table = match method {
+            Method::AutoVec | Method::Scalar => {
+                Some(CoeffTable::install_splats(&mut template, &coeffs))
             }
-            Method::AutoVec => {
-                let table = CoeffTable::install_splats(&mut template, &coeffs);
-                vectorize::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
-            }
-            Method::Scalar => {
-                let table = CoeffTable::install_splats(&mut template, &coeffs);
-                scalar::generate(cfg, &layout, &coeffs, &table, &mut kernel)?;
-            }
+            Method::Outer(_) => None,
             Method::Dlt | Method::Tv => {
                 anyhow::bail!("{method} restructures whole grids and has no tile host kernel")
             }
+        };
+        let rows = tile_shape[0] - 2 * r;
+        let mut ops: Vec<Op> = Vec::new();
+        for step in 0..steps {
+            if step > 0 {
+                layout.swap();
+            }
+            debug_assert_eq!(layout.a_base, pong.read_base(step));
+            debug_assert_eq!(layout.b_base, pong.write_base(step));
+            let mut kernel = Kernel::default();
+            match method {
+                Method::Outer(_) => {
+                    let (cover, table, params) = outer_setup.as_ref().unwrap();
+                    outer::generate(cfg, &layout, cover, table, *params, &mut kernel)?;
+                }
+                Method::AutoVec => {
+                    vectorize::generate(cfg, &layout, &coeffs, splat_table.as_ref().unwrap(), &mut kernel)?;
+                }
+                Method::Scalar => {
+                    scalar::generate(cfg, &layout, &coeffs, splat_table.as_ref().unwrap(), &mut kernel)?;
+                }
+                Method::Dlt | Method::Tv => unreachable!("rejected above"),
+            }
+            // drop the cubic embedding's padded row groups: slab tiles are
+            // usually much shorter (dim 0) than the full-width domain, and
+            // without trimming every shard would execute the whole d×d(×d)
+            // program — total work growing with the shard count
+            let step_ops = trim_row_groups(kernel.ops, rows);
+            let written = written_row_extent(&step_ops, &layout);
+            if steps > 1 {
+                ops.push(Op::Begin(Marker::Step { t: step, of: steps }));
+            }
+            ops.extend(step_ops);
+            if step + 1 < steps {
+                emit_freeze(&mut ops, cfg, &layout, tile_shape, written);
+            }
+            if steps > 1 {
+                ops.push(Op::End(Marker::Step { t: step, of: steps }));
+            }
         }
-        let label = match method {
+        let mut label = match method {
             Method::Outer(p) => p.label(spec.dims),
             other => other.to_string(),
         };
-        // drop the cubic embedding's padded row groups: slab tiles are
-        // usually much shorter (dim 0) than the full-width domain, and
-        // without trimming every shard would execute the whole d×d(×d)
-        // program — total work growing with the shard count
-        let ops = trim_row_groups(kernel.ops, tile_shape[0] - 2 * r);
+        if steps > 1 {
+            label.push_str(&format!("-t{steps}"));
+        }
         let plan = ExecPlan::from_config(cfg, &ops);
-        Ok(HostKernel { spec, d, ops, layout, template, plan, engine: Engine::default(), label })
+        Ok(HostKernel {
+            spec,
+            d,
+            steps,
+            ops,
+            layout,
+            pong,
+            template,
+            plan,
+            engine: Engine::default(),
+            label,
+        })
     }
 
     /// Select the engine `apply` uses (compiled by default; the
@@ -134,15 +214,22 @@ impl HostKernel {
         self.d
     }
 
+    /// Fused time steps one `apply` advances.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
     /// Plan label (e.g. `p-j8`, `autovec`).
     pub fn label(&self) -> &str {
         &self.label
     }
 
-    /// Apply one time step to a tile (storage shape, `r`-deep boundary
-    /// band frozen): interior points get the stencil result, everything
-    /// else is copied from the input — the same contract as the taps
-    /// kernel. Tiles too small to have an interior are returned
+    /// Apply the kernel's `steps` fused time steps to a tile (storage
+    /// shape, `r`-deep boundary band frozen per step): interior points
+    /// get the stencil result, everything else is copied from the input
+    /// — the same per-step contract as the taps kernel, so a fused
+    /// application is bitwise identical to `steps` single-step
+    /// applications. Tiles too small to have an interior are returned
     /// unchanged. Uses the kernel's configured engine; the compiled
     /// engine picks one thread per available core (see
     /// [`HostKernel::apply_with`] for explicit control).
@@ -211,9 +298,11 @@ impl HostKernel {
         }
     }
 
-    /// Copy the interior back out of `B`, boundary band taken from the
-    /// input tile.
+    /// Copy the interior back out of the buffer the last fused step
+    /// wrote (the layout's `B` side — the ping-pong plan's result
+    /// buffer), boundary band taken from the input tile.
     fn extract(&self, mem: &[f64], a: &DenseGrid) -> DenseGrid {
+        debug_assert_eq!(self.layout.b_base, self.pong.result_base(self.steps));
         let r = self.spec.order;
         let ri = r as isize;
         let mut b = a.clone();
@@ -269,6 +358,113 @@ fn trim_row_groups(ops: Vec<Op>, rows: usize) -> Vec<Op> {
         out.push(op);
     }
     out
+}
+
+/// One past the highest dim-0 storage row any store in `ops` touches
+/// inside the layout's `B` grid (the buffer this step's program writes),
+/// or 0 when nothing is written. The inter-step freeze pass only
+/// restores rows the program could actually have dirtied — exact, not
+/// structural, so it stays correct for markerless generators and for any
+/// trimming.
+fn written_row_extent(ops: &[Op], layout: &Layout) -> usize {
+    let span = if layout.spec.dims == 2 {
+        layout.row_stride()
+    } else {
+        layout.plane_stride()
+    };
+    let lo = layout.b_base;
+    let hi = lo + span * layout.ext;
+    let mut w = 0usize;
+    for op in ops {
+        let addr = match *op {
+            Op::Store { addr, .. } | Op::StoreLane { addr, .. } | Op::RowStore { addr, .. } => addr,
+            _ => continue,
+        };
+        if (lo..hi).contains(&addr) {
+            w = w.max((addr - lo) / span + 1);
+        }
+    }
+    w
+}
+
+/// Emit the inter-step *freeze phase*: restore, in the buffer the step
+/// just wrote (`layout.b`), every location the program may have dirtied
+/// that is **not** tile interior, copying from the step's read buffer
+/// (`layout.a`). Non-interior locations hold their original embed-time
+/// values in the read buffer by induction (the previous freeze restored
+/// them there), so after this pass the write buffer is exactly what a
+/// fresh single-step `embed` would produce: evolved interior, original
+/// boundary band, original zero padding. That is what makes a fused
+/// application bitwise identical to repeated single-step applications —
+/// including for multi-pass programs that read-modify-write `B`, since
+/// their pre-step `B` content matches the single-step case everywhere it
+/// is read before being written.
+///
+/// Rows entirely outside the tile interior are restored across the full
+/// written width; interior rows only need their tail beyond the tile's
+/// unit-stride interior. Copies are whole vectors; overshoot past the
+/// written region lands in never-written padding where source and
+/// destination already agree. When the tile interior exactly fills the
+/// cubic domain in every dimension, nothing is ever dirtied and this
+/// emits no ops at all.
+fn emit_freeze(
+    ops: &mut Vec<Op>,
+    cfg: &SimConfig,
+    layout: &Layout,
+    tile_shape: &[usize],
+    written_rows: usize,
+) {
+    let r = layout.spec.order;
+    let d = layout.n;
+    let vlen = cfg.vlen;
+    // start addresses (domain coordinates) of the ranges to restore
+    let mut ranges: Vec<(Vec<isize>, usize)> = Vec::new();
+    let mut row_ranges = |idx_prefix: Vec<isize>, tail_only: bool| {
+        let last = tile_shape.len() - 1;
+        let c0 = if tail_only { tile_shape[last] - r } else { r };
+        if c0 < d + r {
+            let mut idx = idx_prefix;
+            idx.push(c0 as isize - r as isize);
+            ranges.push((idx, d + r - c0));
+        }
+    };
+    if layout.spec.dims == 2 {
+        for i in r..written_rows {
+            let interior_row = i < tile_shape[0] - r;
+            row_ranges(vec![i as isize - r as isize], interior_row);
+        }
+    } else {
+        for i in r..written_rows {
+            for j in r..d + r {
+                let interior_row = i < tile_shape[0] - r && j < tile_shape[1] - r;
+                row_ranges(
+                    vec![i as isize - r as isize, j as isize - r as isize],
+                    interior_row,
+                );
+            }
+        }
+    }
+    if ranges.is_empty() {
+        return;
+    }
+    // a barrier-separated, self-contained block: the fuser schedules it
+    // strictly between this step's compute and the next step's
+    let scratch = VReg((cfg.n_vregs - 1) as u8);
+    let group = Marker::TileGroup { i0: 0, j0: 0, k0: 0, ui: 1, uk: 1 };
+    ops.push(Op::Begin(Marker::Phase("freeze")));
+    ops.push(Op::Begin(group));
+    for (idx, len) in ranges {
+        let mut off = 0usize;
+        while off < len {
+            let mut at = idx.clone();
+            *at.last_mut().unwrap() += off as isize;
+            ops.push(Op::Load { dst: scratch, addr: layout.a_addr(&at) });
+            ops.push(Op::Store { src: scratch, addr: layout.b_addr(&at) });
+            off += vlen;
+        }
+    }
+    ops.push(Op::End(group));
+    ops.push(Op::End(Marker::Phase("freeze")));
 }
 
 #[cfg(test)]
@@ -393,6 +589,94 @@ mod tests {
                 assert_eq!(got.data, want.data, "{spec} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn fused_apply_is_bitwise_t_single_steps() {
+        // the temporal-blocking contract: one fused T-step application ==
+        // T single-step applications of the same kernel, bit for bit —
+        // across methods, awkward tile shapes (interior != padded domain,
+        // which exercises the inter-step freeze phase), and T
+        let cfg = SimConfig::default();
+        let cases: &[(StencilSpec, &[usize], Method)] = &[
+            (
+                StencilSpec::box2d(1),
+                &[14, 23],
+                Method::Outer(OuterParams::paper_best(StencilSpec::box2d(1))),
+            ),
+            (
+                StencilSpec::star2d(2),
+                &[17, 12],
+                Method::Outer(OuterParams::paper_best(StencilSpec::star2d(2))),
+            ),
+            (
+                StencilSpec::star3d(2),
+                &[11, 9, 13],
+                Method::Outer(OuterParams::paper_best(StencilSpec::star3d(2))),
+            ),
+            (
+                StencilSpec::box3d(1),
+                &[9, 12, 10],
+                Method::Outer(OuterParams::paper_best(StencilSpec::box3d(1))),
+            ),
+            (StencilSpec::box2d(1), &[12, 19], Method::AutoVec),
+            (StencilSpec::star2d(1), &[9, 9], Method::Scalar),
+        ];
+        for &(spec, shape, method) in cases {
+            let single = HostKernel::compile(&cfg, spec, shape, method).unwrap();
+            let a = DenseGrid::verification_input(shape, 23);
+            for t in [2usize, 3, 4] {
+                let fused = HostKernel::compile_fused(&cfg, spec, shape, method, t).unwrap();
+                assert_eq!(fused.steps(), t);
+                let mut want = a.clone();
+                for _ in 0..t {
+                    want = single.apply(&want);
+                }
+                let got = fused.apply(&a);
+                assert_eq!(got.data, want.data, "{spec} {method} {shape:?} T={t}");
+                // both engines, several thread counts: still bitwise
+                let interp = fused.apply_with(&a, Engine::Interpret, 1);
+                assert_eq!(interp.data, want.data, "{spec} {method} T={t} interp");
+                for threads in 1..=4usize {
+                    let c = fused.apply_with(&a, Engine::Compiled, threads);
+                    assert_eq!(c.data, want.data, "{spec} {method} T={t} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernels_advertise_steps_and_label() {
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let method = Method::Outer(OuterParams::paper_best(spec));
+        let k = HostKernel::compile_fused(&cfg, spec, &[14, 14], method, 4).unwrap();
+        assert_eq!(k.steps(), 4);
+        assert_eq!(k.label(), "p-j8-t4");
+        assert!(k.par_blocks() > 0, "fused outer programs keep their parallel row groups");
+        // the single-step compile is untouched
+        let k1 = HostKernel::compile(&cfg, spec, &[14, 14], method).unwrap();
+        assert_eq!((k1.steps(), k1.label()), (1, "p-j8"));
+        assert!(HostKernel::compile_fused(&cfg, spec, &[14, 14], method, 0).is_err());
+    }
+
+    #[test]
+    fn exact_fit_tiles_need_no_freeze_ops() {
+        // when the tile interior exactly fills the cubic domain, the
+        // program never dirties a non-interior location, so the fused
+        // kernel carries no freeze loads/stores at all: its op count is
+        // exactly T × the single-step program
+        let cfg = SimConfig::default();
+        let spec = StencilSpec::box2d(1);
+        let method = Method::Outer(OuterParams::paper_best(spec));
+        let shape = [18usize, 18]; // interior 16 = 2 × vlen on both dims
+        let single = HostKernel::compile(&cfg, spec, &shape, method).unwrap();
+        let fused = HostKernel::compile_fused(&cfg, spec, &shape, method, 3).unwrap();
+        assert_eq!(fused.op_count(), 3 * single.op_count());
+        // an awkward width does need the freeze pass
+        let ragged = HostKernel::compile_fused(&cfg, spec, &[18, 15], method, 3).unwrap();
+        let ragged1 = HostKernel::compile(&cfg, spec, &[18, 15], method).unwrap();
+        assert!(ragged.op_count() > 3 * ragged1.op_count());
     }
 
     #[test]

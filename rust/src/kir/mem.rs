@@ -8,6 +8,23 @@
 //! backend), and so does [`crate::kir::HostMachine`] (the host backend) —
 //! which is what makes `codegen::common::Layout` and the coefficient
 //! tables backend-agnostic.
+//!
+//! # The ping-pong double-buffer plan
+//!
+//! Temporally blocked programs fuse `T` time steps into one kernel
+//! application. Every step still reads one grid image and writes the
+//! other, but the *roles* alternate: step 0 reads the front buffer and
+//! writes the back buffer, step 1 reads the back and writes the front,
+//! and so on — the classic ping-pong. [`PingPong`] is that plan as data:
+//! given the two buffer base addresses it answers, per fused step, which
+//! base is read and which is written, and which buffer holds the final
+//! result after `T` steps. Both the kernel compiler
+//! ([`crate::kir::HostKernel`], which extracts the output tile from
+//! `result_base`) and the codegen method runners (which pick `read_a` vs
+//! `read_b` after a fused run) derive their buffer choices from it, so
+//! the parity arithmetic lives in exactly one place. Addresses are plain
+//! element indices, so the plan is backend-agnostic like everything else
+//! here.
 
 /// A flat f64 memory arena with vector-aligned, guard-banded allocation.
 ///
@@ -28,4 +45,78 @@ pub trait Arena {
 
     /// Read `n` elements from memory at `addr`.
     fn read_mem(&self, addr: usize, n: usize) -> &[f64];
+}
+
+/// Ping-pong double-buffer plan for temporally blocked programs: which
+/// of the two grid buffers each fused step reads and writes, and where
+/// the final result lands (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PingPong {
+    /// Base address of the buffer step 0 reads (the input image).
+    pub front: usize,
+    /// Base address of the buffer step 0 writes.
+    pub back: usize,
+}
+
+impl PingPong {
+    /// Plan over a front (input) and back buffer.
+    pub fn new(front: usize, back: usize) -> PingPong {
+        PingPong { front, back }
+    }
+
+    /// Base address the given (zero-based) fused step reads.
+    pub fn read_base(&self, step: usize) -> usize {
+        if step % 2 == 0 {
+            self.front
+        } else {
+            self.back
+        }
+    }
+
+    /// Base address the given (zero-based) fused step writes.
+    pub fn write_base(&self, step: usize) -> usize {
+        if step % 2 == 0 {
+            self.back
+        } else {
+            self.front
+        }
+    }
+
+    /// Base address of the buffer holding the result after `steps` fused
+    /// steps (`steps >= 1`).
+    pub fn result_base(&self, steps: usize) -> usize {
+        self.write_base(steps.max(1) - 1)
+    }
+
+    /// True when the result after `steps` fused steps lands in the back
+    /// buffer (the classic `B` grid) — i.e. after an odd number of steps.
+    pub fn result_in_back(steps: usize) -> bool {
+        steps.max(1) % 2 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong_alternates_and_lands_correctly() {
+        let p = PingPong::new(100, 200);
+        assert_eq!((p.read_base(0), p.write_base(0)), (100, 200));
+        assert_eq!((p.read_base(1), p.write_base(1)), (200, 100));
+        // every step reads what the previous one wrote
+        for s in 1..6 {
+            assert_eq!(p.read_base(s), p.write_base(s - 1));
+            assert_ne!(p.read_base(s), p.write_base(s));
+        }
+        assert_eq!(p.result_base(1), 200);
+        assert_eq!(p.result_base(2), 100);
+        assert_eq!(p.result_base(4), 100);
+        assert_eq!(p.result_base(5), 200);
+        assert!(PingPong::result_in_back(1));
+        assert!(!PingPong::result_in_back(2));
+        assert!(PingPong::result_in_back(3));
+        // degenerate: 0 steps behaves like 1 (no program runs twice)
+        assert_eq!(p.result_base(0), p.result_base(1));
+    }
 }

@@ -17,7 +17,9 @@
 //!   autotuner's cost model is derived from);
 //! - [`mem`] — the [`Arena`](mem::Arena) memory-plan trait both backends
 //!   implement, which makes grid layouts and coefficient tables
-//!   backend-agnostic;
+//!   backend-agnostic, plus the [`PingPong`] double-buffer plan
+//!   temporally blocked (multi-step) programs alternate their grid
+//!   buffers with;
 //! - [`lower`] — KIR → simulator ISA, 1:1 per computational op, markers
 //!   dropped; [`crate::sim::Machine`] consumes KIR directly
 //!   (execute-on-emit), so every benchmark and verification path flows
@@ -37,10 +39,15 @@
 //!   gathers turned into precomputed index tables, and independent row
 //!   groups split across a scoped thread pool — bitwise equal to the
 //!   interpreter at any thread count, several times faster;
-//! - [`kernel`] — [`HostKernel`]: a (spec, tile shape, method) compiled
-//!   once into a KIR program + execution plan + memory image, applied
-//!   per tile by the serving subsystem (`serve --kernel outer`, and
-//!   `tuned` plans compiled to real host kernels).
+//! - [`kernel`] — [`HostKernel`]: a (spec, tile shape, method, time-tile
+//!   depth) compiled once into a KIR program + execution plan + memory
+//!   image, applied per tile by the serving subsystem (`serve --kernel
+//!   outer`, and `tuned` plans compiled to real host kernels). With a
+//!   time-tile depth `T > 1` the program fuses `T` time steps behind
+//!   [`Marker::Step`] barriers against the ping-pong buffers, with an
+//!   inter-step freeze phase keeping the per-step frozen-boundary
+//!   contract exact — a fused application is bitwise identical to `T`
+//!   single-step applications.
 //!
 //! Consumers: `codegen::run_method` (sim backend, timing),
 //! `codegen::verify::run_host` (host backend, wall-clock),
@@ -57,6 +64,6 @@ pub mod mem;
 
 pub use exec::{Engine, ExecPlan};
 pub use host::HostMachine;
-pub use ir::{dump, Kernel, KirSink, Marker, MReg, Op, OpStats, VReg};
+pub use ir::{dump, step_stats, Kernel, KirSink, Marker, MReg, Op, OpStats, VReg};
 pub use kernel::HostKernel;
-pub use mem::Arena;
+pub use mem::{Arena, PingPong};

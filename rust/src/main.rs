@@ -10,15 +10,15 @@
 //!                            [--budget 12] [--strategy guided] \
 //!                            [--db target/tune/tune_db.json] [--out target/tune]
 //! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-//! stencil-matrix bench-json  [--out BENCH_4.json] [--size2d 64] [--size3d 16]
+//! stencil-matrix bench-json  [--out BENCH_5.json] [--size2d 64] [--size3d 16]
 //! stencil-matrix bench-compare [--baseline bench/baseline.json] \
-//!                            [--current BENCH_4.json] [--self-test]
+//!                            [--current BENCH_5.json] [--self-test]
 //! stencil-matrix engine-bench --stencil 2d-star --order 2 --size 512
 //! stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 \
 //!                            --method outer [--limit 120]
 //! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
 //!                            --size 256 --steps 4 --requests 32 \
-//!                            [--engine compiled|interpret] \
+//!                            [--engine compiled|interpret] [--fuse-steps 4] \
 //!                            [--kernel tuned --tune-db target/tune/tune_db.json]
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
@@ -37,7 +37,8 @@
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
 
 use stencil_matrix::codegen::{
-    kernel_for, run_host_threads, run_method, HostRun, Method, OuterParams,
+    kernel_for, kernel_for_fused, run_host_fused_threads, run_method, HostRun, Method,
+    OuterParams,
 };
 use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
 use stencil_matrix::kir::Engine;
@@ -261,16 +262,36 @@ fn run() -> anyhow::Result<()> {
             let spec = parse_spec(&args)?;
             let n = args.usize_or("size", 16)?;
             let limit = args.usize_or("limit", 120)?;
+            let fuse = args.usize_or("fuse-steps", 1)?.max(1);
             let method = parse_method(&args, spec)?;
-            let kernel = kernel_for(&cfg, spec, n, method)?;
+            let kernel = kernel_for_fused(&cfg, spec, n, method, fuse)?;
             let stats = kernel.stats();
             println!(
-                "# {spec} N={n} {method} — {} op(s), {} outer product(s), {} marker(s)",
+                "# {spec} N={n} {method} — {} op(s), {} outer product(s), {} marker(s), {} fused step(s)",
                 stats.total(),
                 stats.outer_products,
-                stats.markers
+                stats.markers,
+                kernel.steps
             );
             print!("{}", stencil_matrix::kir::dump(&kernel, limit));
+            // per-step op subtotals (fused programs only): step
+            // boundaries are rendered as `==== step t/T ====` above,
+            // distinctly from the unroll-group markers
+            let per_step = stencil_matrix::kir::step_stats(&kernel);
+            if !per_step.is_empty() {
+                println!("# per-step op subtotals:");
+                for (t, s) in per_step.iter().enumerate() {
+                    println!(
+                        "#   step {}/{}: {} op(s), {} outer product(s), {} load(s), {} store(s)",
+                        t + 1,
+                        per_step.len(),
+                        s.total(),
+                        s.outer_products,
+                        s.loads + s.gathers + s.splats + s.row_loads,
+                        s.stores + s.lane_stores + s.row_stores
+                    );
+                }
+            }
         }
         "bench" => {
             let which = args
@@ -282,7 +303,7 @@ fn run() -> anyhow::Result<()> {
             run_experiment(&cfg, which)?;
         }
         "bench-json" => {
-            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_4.json"));
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_5.json"));
             let n2d = args.usize_or("size2d", 64)?;
             let n3d = args.usize_or("size3d", 16)?;
             let snap = stencil_matrix::bench_harness::snapshot::run(&cfg, n2d, n3d)?;
@@ -354,7 +375,7 @@ fn run() -> anyhow::Result<()> {
 }
 
 /// `bench-compare`: the perf-regression gate — compare a fresh
-/// `BENCH_4.json` against `bench/baseline.json` and fail on >2% sim-cycle
+/// `BENCH_5.json` against `bench/baseline.json` and fail on >2% sim-cycle
 /// drift (`--self-test` proves the gate trips on an injected regression).
 fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::bench_harness::compare;
@@ -363,7 +384,7 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
         Some(s) => s.parse::<f64>()? / 100.0,
         None => compare::DEFAULT_TOLERANCE,
     };
-    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_4.json"));
+    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_5.json"));
     let current = Json::parse(&std::fs::read_to_string(&current_path)?)?;
     if args.has("self-test") {
         let cmp = compare::self_test(&current, tolerance)?;
@@ -391,6 +412,22 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
         std::fs::write(out, &md)?;
     }
     print!("{md}");
+    if cmp.pending {
+        let warn = format!(
+            "\n!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!\n\
+             !! WARNING: {} is still a PLACEHOLDER — the perf gate is\n\
+             !! ADVISORY ONLY and cannot catch regressions. Promote a green CI\n\
+             !! run's {} artifact:\n\
+             !!   stencil-matrix bench-compare --current {} --write-baseline\n\
+             !! then commit the baseline (see CONTRIBUTING.md).\n\
+             !!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!",
+            baseline_path.display(),
+            current_path.display(),
+            current_path.display(),
+        );
+        println!("{warn}");
+        eprintln!("{warn}");
+    }
     anyhow::ensure!(
         cmp.passed(),
         "perf gate failed: {} method(s) regressed more than {:.1}% in simulated cycles",
@@ -402,7 +439,9 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
 
 /// `engine-bench`: compiled engine vs interpreter wall-clock on one
 /// stencil — the engine-vs-interpreter throughput CI puts in the job
-/// summary. All runs are oracle-verified and checked bitwise-equal
+/// summary. With `--fuse-steps T > 1` the temporally blocked T-step
+/// program is measured alongside the unfused one (per-step-normalized
+/// columns). All runs are oracle-verified and checked bitwise-equal
 /// across engines and thread counts.
 fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::util::bench::Table;
@@ -412,15 +451,16 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let method = parse_method(args, spec)?;
     let threads = args.usize_or("threads", 0)?;
     let reps = args.usize_or("reps", 3)?.max(1);
+    let fuse = args.usize_or("fuse-steps", 1)?.max(1);
     let min_speedup = match args.get("min-speedup") {
         Some(s) => Some(s.parse::<f64>()?),
         None => None,
     };
 
-    let best_of = |engine: Engine, t: usize| -> anyhow::Result<HostRun> {
+    let best_of = |engine: Engine, fuse_steps: usize, t: usize| -> anyhow::Result<HostRun> {
         let mut best: Option<HostRun> = None;
         for _ in 0..reps {
-            let run = run_host_threads(cfg, spec, n, method, engine, t)?;
+            let run = run_host_fused_threads(cfg, spec, n, method, engine, fuse_steps, t)?;
             anyhow::ensure!(run.verified(), "{spec} {method} {engine}: max_err {}", run.max_err);
             if best.as_ref().map(|b| run.seconds < b.seconds).unwrap_or(true) {
                 best = Some(run);
@@ -428,48 +468,72 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
         }
         Ok(best.expect("reps >= 1"))
     };
-    let interp = best_of(Engine::Interpret, 1)?;
-    let compiled_1t = best_of(Engine::Compiled, 1)?;
-    let compiled = best_of(Engine::Compiled, threads)?;
+    let interp = best_of(Engine::Interpret, 1, 1)?;
+    let compiled_1t = best_of(Engine::Compiled, 1, 1)?;
+    let compiled = best_of(Engine::Compiled, 1, threads)?;
     for (name, run) in [("compiled-1t", &compiled_1t), ("compiled", &compiled)] {
         anyhow::ensure!(
             run.grid.data == interp.grid.data,
             "{name} output diverged bitwise from the interpreter"
         );
     }
+    let fused = if fuse > 1 {
+        let fi = best_of(Engine::Interpret, fuse, 1)?;
+        let fc = best_of(Engine::Compiled, fuse, threads)?;
+        anyhow::ensure!(
+            fc.grid.data == fi.grid.data,
+            "fused compiled output diverged bitwise from the fused interpreter"
+        );
+        Some((fi, fc))
+    } else {
+        None
+    };
 
     let points = n.pow(spec.dims as u32);
+    // per-step-normalized columns keep fused and unfused rows comparable
     let mpts = |r: &HostRun| r.mpts_per_s(points);
+    let per_step = |r: &HostRun| r.seconds / r.steps as f64;
     println!(
         "# engine-bench — {spec} N={n} {method} (best of {reps}, {} host op(s))\n",
         interp.ops
     );
-    let mut table = Table::new(&["engine", "threads", "seconds", "Mpts/s", "vs interpret"]);
-    for (name, run) in
-        [("interpret", &interp), ("compiled", &compiled_1t), ("compiled", &compiled)]
-    {
+    let mut rows: Vec<(&str, &HostRun)> =
+        vec![("interpret", &interp), ("compiled", &compiled_1t), ("compiled", &compiled)];
+    if let Some((fi, fc)) = &fused {
+        rows.push(("interpret-fused", fi));
+        rows.push(("compiled-fused", fc));
+    }
+    let mut table = Table::new(&["engine", "T", "threads", "s/step", "Mpts/s", "vs interpret"]);
+    for &(name, run) in &rows {
         table.row(vec![
             name.to_string(),
+            run.steps.to_string(),
             run.threads.to_string(),
-            format!("{:.4}", run.seconds),
+            format!("{:.4}", per_step(run)),
             format!("{:.1}", mpts(run)),
-            format!("{:.2}x", interp.seconds / run.seconds.max(1e-12)),
+            format!("{:.2}x", per_step(&interp) / per_step(run).max(1e-12)),
         ]);
     }
     let md = table.to_markdown();
     print!("{md}");
     let speedup = interp.seconds / compiled.seconds.max(1e-12);
-    println!(
+    let mut summary = format!(
         "\ncompiled engine: {speedup:.2}x the interpreter at {} thread(s) \
-         (bitwise-identical output)",
+         (bitwise-identical output)\n",
         compiled.threads
     );
+    if let Some((_, fc)) = &fused {
+        summary.push_str(&format!(
+            "temporal blocking: fused T={} compiled runs at {:.2}x the unfused compiled \
+             per-step throughput (bitwise-identical across engines)\n",
+            fc.steps,
+            per_step(&compiled) / per_step(fc).max(1e-12)
+        ));
+    }
+    print!("{summary}");
     if let Some(out) = args.get("out") {
         let mut text = format!(
-            "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}\n\
-             compiled engine: {speedup:.2}x the interpreter at {} thread(s) \
-             (bitwise-identical output)\n",
-            compiled.threads
+            "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}{summary}"
         );
         text.push_str(&format!(
             "\ninterpreter: {:.4}s · compiled: {:.4}s · host ops: {}\n",
@@ -569,9 +633,11 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     let distinct = args.usize_or("distinct", 4)?.max(1);
     let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
     let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
+    let fuse_steps = args.usize_or("fuse-steps", 1)?.max(1);
     let verify = !args.has("no-verify");
 
-    let serve_cfg = ServeConfig { workers, shards, queue_depth, plan_cache: 32, engine };
+    let serve_cfg =
+        ServeConfig { workers, shards, queue_depth, plan_cache: 32, engine, fuse_steps };
     let server = match args.get("tune-db") {
         Some(path) => {
             let db = TuneDb::load(&PathBuf::from(path))?;
@@ -587,7 +653,8 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     server.start();
     println!(
         "serving {requests} request(s) from {clients} client(s): {spec} N={n} steps={steps} \
-         kernel={method} engine={engine} workers={workers} shards={} queue-depth={queue_depth}",
+         kernel={method} engine={engine} workers={workers} shards={} queue-depth={queue_depth} \
+         fuse-steps={fuse_steps}",
         server.effective_shards()
     );
 
@@ -650,13 +717,14 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
     let max_workers = args.usize_or("max-workers", default_workers().max(4))?.max(1);
     let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
     let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
+    let fuse = args.usize_or("fuse-steps", 1)?.max(1);
 
     let shape = vec![n + 2 * spec.order; spec.dims];
     let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
     let point_steps = (n.pow(spec.dims as u32) * steps) as f64;
     println!(
         "shard-bench: {spec} N={n} steps={steps} kernel={method} engine={engine} \
-         (host parallelism: {})",
+         fuse-steps={fuse} (host parallelism: {})",
         default_workers()
     );
 
@@ -679,9 +747,11 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
         let ev =
             ShardedEvolver::with_parts(Arc::new(WorkerPool::new(w)), Arc::new(cache));
         let shards = 2 * w; // oversubscribe so stealing levels uneven slabs
-        ev.evolve(spec, &grid, 1, shards, method)?; // warm the plan cache
+        // warm the plan cache with the full run (compiles every chunk
+        // depth the fused step loop will use)
+        ev.evolve_fused(spec, &grid, steps, shards, method, fuse)?;
         let (best, _) = time_it(3, || {
-            ev.evolve(spec, &grid, steps, shards, method).unwrap();
+            ev.evolve_fused(spec, &grid, steps, shards, method, fuse).unwrap();
         });
         let base = *base_secs.get_or_insert(best);
         let speedup = base / best;
@@ -776,7 +846,12 @@ USAGE:
   stencil-matrix dump-ir [--stencil 2d-box] [--order 1] [--size 16]
                          [--method outer|autovec|dlt|tv|scalar]
                          [--option parallel] [--ui 1] [--uk 8]
-                         [--no-sched] [--limit 120]",
+                         [--no-sched] [--limit 120] [--fuse-steps 1]
+
+  --fuse-steps T  dump the temporally blocked T-step program: fused
+                  steps are delimited by '==== step t/T ====' barrier
+                  markers (distinct from the unroll-group markers) and
+                  per-step op subtotals are appended",
     ),
     (
         "tune",
@@ -807,22 +882,25 @@ Reports land in target/bench-reports/ as markdown + JSON (default: all).",
     ),
     (
         "bench-json",
-        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_4.json)
+        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_5.json)
 
 Per-method simulated cycles, speedups, and KIR-host wall-clock on both
 engines (compiled + interpreter, with the engine speedup) for scalar,
 autovec, dlt, tv and outer on every Table-3 stencil row at one size per
-dimensionality. Sim cycles and op counts are deterministic — they are
-what bench-compare gates against bench/baseline.json.
+dimensionality, plus a fused-vs-unfused sharded-serving measurement per
+row (temporal blocking at T=4, bitwise-checked). Sim cycles and op
+counts are deterministic — they are what bench-compare gates against
+bench/baseline.json; wall-clock (including the fused columns) is
+advisory.
 
 USAGE:
-  stencil-matrix bench-json [--out BENCH_4.json] [--size2d 64] [--size3d 16]",
+  stencil-matrix bench-json [--out BENCH_5.json] [--size2d 64] [--size3d 16]",
     ),
     (
         "bench-compare",
         "stencil-matrix bench-compare — the CI perf-regression gate
 
-Compares a fresh BENCH_4.json against the checked-in baseline and exits
+Compares a fresh BENCH_5.json against the checked-in baseline and exits
 non-zero when any method's simulated cycles regressed beyond the
 tolerance (default 2%). Host wall-clock is advisory and never gated.
 A baseline marked \"pending\": true makes the gate advisory until a CI
@@ -830,7 +908,7 @@ snapshot is promoted (see CONTRIBUTING.md).
 
 USAGE:
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                               [--current BENCH_4.json] [--tolerance-pct 2]
+                               [--current BENCH_5.json] [--tolerance-pct 2]
                                [--out bench_compare.md]
                                [--write-baseline] [--self-test]
 
@@ -850,9 +928,12 @@ summary).
 USAGE:
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
                               [--method outer] [--threads 0] [--reps 3]
-                              [--out engine_bench.md] [--min-speedup X]
+                              [--fuse-steps 1] [--out engine_bench.md]
+                              [--min-speedup X]
 
   --threads      compiled-engine worker threads (0 = one per core)
+  --fuse-steps   also measure the temporally blocked T-step program on
+                 both engines (fused-vs-unfused rows, per-step columns)
   --min-speedup  fail unless compiled/interpret speedup reaches X",
     ),
     (
@@ -864,8 +945,8 @@ USAGE:
                        [--queue-depth D] [--size 256] [--steps 4]
                        [--requests 32] [--clients 4] [--distinct 4]
                        [--kernel taps|oracle|outer|tuned]
-                       [--engine compiled|interpret] [--no-verify]
-                       [--tune-db target/tune/tune_db.json]
+                       [--engine compiled|interpret] [--fuse-steps 1]
+                       [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve --artifact evolve_2d5p_n256_t4 --executions 25
 
 --kernel outer runs the paper's outer-product algorithm compiled through
@@ -875,7 +956,11 @@ kernels: 'compiled' (default; fused loop nests, threaded row groups) or
 'interpret' (the op-by-op reference twin, bitwise identical). With
 --tune-db, the kernel LRU consults the tuning database before compiling
 shard kernels; --kernel tuned requests compile the matched plan to a
-real host kernel and report its label.
+real host kernel and report its label. --fuse-steps T enables temporal
+blocking: up to T time steps fused per kernel application behind
+order*T-deep ghosts, halo exchanges only every T steps (capped so deep
+halos never starve the shard count; results are bitwise independent of
+T, and the metrics JSON reports halo_exchanges / fused_steps).
 The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
     ),
     (
@@ -886,7 +971,8 @@ USAGE:
   stencil-matrix shard-bench [--stencil 2d-box] [--order 1] [--size 512]
                              [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
-                             [--engine compiled|interpret]",
+                             [--engine compiled|interpret]
+                             [--fuse-steps 1]",
     ),
     (
         "list",
@@ -915,23 +1001,23 @@ USAGE:
   stencil-matrix tune        --stencil 2d-star --order 2 --size 64 [--budget 12]
                              [--strategy guided] [--db target/tune/tune_db.json]
   stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-  stencil-matrix bench-json  [--out BENCH_4.json] [--size2d 64] [--size3d 16]
+  stencil-matrix bench-json  [--out BENCH_5.json] [--size2d 64] [--size3d 16]
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                             [--current BENCH_4.json] [--tolerance-pct 2]
+                             [--current BENCH_5.json] [--tolerance-pct 2]
                              [--write-baseline] [--self-test]
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
-                             [--threads 0] [--min-speedup X]
+                             [--threads 0] [--fuse-steps 1] [--min-speedup X]
   stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 --method outer
   stencil-matrix serve       [--backend native] [--workers N] [--shards M]
                              [--queue-depth D] [--size 256] [--steps 4]
                              [--requests 32] [--clients 4] [--distinct 4]
                              [--kernel taps|oracle|outer|tuned]
-                             [--engine compiled|interpret] [--no-verify]
-                             [--tune-db target/tune/tune_db.json]
+                             [--engine compiled|interpret] [--fuse-steps 1]
+                             [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
-                             [--engine compiled|interpret]
+                             [--engine compiled|interpret] [--fuse-steps 1]
   stencil-matrix list        [--artifacts-dir artifacts]
 
 Run 'stencil-matrix help <subcommand>' (or '<subcommand> --help') for
@@ -1038,11 +1124,16 @@ mod tests {
         assert!(usage_for("serve").unwrap().contains("tuned"));
         assert!(usage_for("serve").unwrap().contains("outer"));
         assert!(usage_for("serve").unwrap().contains("--engine"));
+        assert!(usage_for("serve").unwrap().contains("--fuse-steps"));
         assert!(usage_for("dump-ir").unwrap().contains("--method"));
         assert!(usage_for("dump-ir").unwrap().contains("--limit"));
-        // the snapshot moved to BENCH_4.json with the engine columns
-        assert!(usage_for("bench-json").unwrap().contains("BENCH_4.json"));
-        assert!(!usage_for("bench-json").unwrap().contains("BENCH_3.json"));
+        assert!(usage_for("dump-ir").unwrap().contains("--fuse-steps"));
+        assert!(usage_for("engine-bench").unwrap().contains("--fuse-steps"));
+        assert!(usage_for("shard-bench").unwrap().contains("--fuse-steps"));
+        assert!(usage_for("bench-json").unwrap().contains("fused"));
+        // the snapshot moved to BENCH_5.json with the engine columns
+        assert!(usage_for("bench-json").unwrap().contains("BENCH_5.json"));
+        assert!(!usage_for("bench-json").unwrap().contains("BENCH_4.json"));
         assert!(usage_for("bench-compare").unwrap().contains("--self-test"));
         assert!(usage_for("bench-compare").unwrap().contains("baseline"));
         assert!(usage_for("engine-bench").unwrap().contains("--min-speedup"));

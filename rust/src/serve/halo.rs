@@ -157,6 +157,45 @@ mod tests {
     }
 
     #[test]
+    fn fused_exchange_every_t_steps_is_bitwise_exact() {
+        // the temporal-blocking specification: with ghosts of depth
+        // order·T, applying the oracle T times per tile between
+        // exchanges reproduces the global evolution bitwise — the deep
+        // halo absorbs the ghost band shrinking by `order` per fused
+        // step
+        for (order, n, steps, t) in [(1usize, 20usize, 8usize, 4usize), (2, 21, 6, 2), (1, 16, 5, 4)]
+        {
+            let spec = StencilSpec::box2d(order);
+            let shape = vec![n; 2];
+            let grid = DenseGrid::verification_input(&shape, 99);
+            let coeffs = CoeffTensor::paper_default(spec);
+            let want = reference::evolve(&coeffs, &grid, steps);
+            for shards in [1usize, 2, 3] {
+                let part = Partition::new(&shape, shards, spec.order * t).unwrap();
+                let mut tiles = part.extract(&grid);
+                let mut remaining = steps;
+                while remaining > 0 {
+                    let chunk = t.min(remaining);
+                    for tile in tiles.iter_mut() {
+                        for _ in 0..chunk {
+                            if tile.shape.iter().all(|&s| s > 2 * spec.order) {
+                                *tile = reference::apply(&coeffs, tile);
+                            }
+                        }
+                    }
+                    remaining -= chunk;
+                    if remaining > 0 {
+                        exchange_serial(&part, &mut tiles);
+                    }
+                }
+                let refs: Vec<&DenseGrid> = tiles.iter().collect();
+                let got = part.assemble(&refs).unwrap();
+                assert_eq!(got, want, "order {order} N={n} steps={steps} T={t} x{shards}");
+            }
+        }
+    }
+
+    #[test]
     fn locked_exchange_matches_serial() {
         let spec = StencilSpec::box2d(1);
         let coeffs = CoeffTensor::paper_default(spec);

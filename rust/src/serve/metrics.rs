@@ -66,17 +66,33 @@ impl LatencyRecorder {
         percentile_of(&self.sorted_window(), p)
     }
 
-    /// Summary as a JSON object (seconds). Sorts the window once.
+    /// Summary as a JSON object (seconds — keys suffixed `_s`). Sorts
+    /// the window once.
     pub fn to_json(&self) -> Json {
+        self.to_json_suffixed("_s")
+    }
+
+    /// Summary as a JSON object for unit-less samples (plain
+    /// `mean`/`p50`/… keys) — the recorder also serves count
+    /// distributions such as halo exchanges per request.
+    pub fn to_json_counts(&self) -> Json {
+        self.to_json_suffixed("")
+    }
+
+    fn to_json_suffixed(&self, suffix: &str) -> Json {
         let sorted = self.sorted_window();
-        obj(vec![
-            ("count", Json::Num(self.count as f64)),
-            ("mean_s", Json::Num(self.mean())),
-            ("p50_s", Json::Num(percentile_of(&sorted, 50.0))),
-            ("p95_s", Json::Num(percentile_of(&sorted, 95.0))),
-            ("p99_s", Json::Num(percentile_of(&sorted, 99.0))),
-            ("max_s", Json::Num(self.max())),
-        ])
+        Json::Obj(
+            [
+                ("count".to_string(), Json::Num(self.count as f64)),
+                (format!("mean{suffix}"), Json::Num(self.mean())),
+                (format!("p50{suffix}"), Json::Num(percentile_of(&sorted, 50.0))),
+                (format!("p95{suffix}"), Json::Num(percentile_of(&sorted, 95.0))),
+                (format!("p99{suffix}"), Json::Num(percentile_of(&sorted, 99.0))),
+                (format!("max{suffix}"), Json::Num(self.max())),
+            ]
+            .into_iter()
+            .collect(),
+        )
     }
 }
 
@@ -114,6 +130,14 @@ pub struct ServiceMetrics {
     /// queueing and verification, but includes one-time shard-plan
     /// compilation on cache misses); p50/p99 are in the JSON snapshot.
     pub kernel_time: LatencyRecorder,
+    /// Halo-exchange rounds per request — with temporal blocking this
+    /// drops from `steps - 1` to `ceil(steps / T) - 1`, which is the
+    /// fusion win made observable in production telemetry (p50/p99 in
+    /// the JSON snapshot alongside `kernel_time`).
+    pub halo_exchanges: LatencyRecorder,
+    /// Effective time-tile depth `T` per request (fused steps per kernel
+    /// application, after capping against shard starvation).
+    pub fused_steps: LatencyRecorder,
 }
 
 impl Default for ServiceMetrics {
@@ -129,6 +153,8 @@ impl Default for ServiceMetrics {
             queue_wait: LatencyRecorder::default(),
             service_time: LatencyRecorder::default(),
             kernel_time: LatencyRecorder::default(),
+            halo_exchanges: LatencyRecorder::default(),
+            fused_steps: LatencyRecorder::default(),
         }
     }
 }
@@ -158,6 +184,8 @@ impl ServiceMetrics {
             ("queue_wait", self.queue_wait.to_json()),
             ("service_time", self.service_time.to_json()),
             ("kernel_time", self.kernel_time.to_json()),
+            ("halo_exchanges", self.halo_exchanges.to_json_counts()),
+            ("fused_steps", self.fused_steps.to_json_counts()),
         ])
     }
 }
@@ -204,6 +232,20 @@ mod tests {
     }
 
     #[test]
+    fn count_recorder_json_has_unsuffixed_keys() {
+        let mut r = LatencyRecorder::default();
+        for v in [7.0, 1.0, 3.0] {
+            r.record(v);
+        }
+        let j = r.to_json_counts();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("p50").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("max").unwrap().as_f64(), Some(7.0));
+        assert!(j.get("p99").unwrap().as_f64().is_some());
+        assert!(j.get("p50_s").is_none(), "count snapshots carry no seconds suffix");
+    }
+
+    #[test]
     fn json_snapshot_roundtrips() {
         let mut m = ServiceMetrics::default();
         m.completed = 3;
@@ -211,6 +253,8 @@ mod tests {
         m.queue_wait.record(0.5);
         m.service_time.record(1.5);
         m.kernel_time.record(1.25);
+        m.halo_exchanges.record(1.0);
+        m.fused_steps.record(4.0);
         let text = m.to_json().to_string_compact();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("completed").unwrap().as_usize(), Some(3));
@@ -218,6 +262,9 @@ mod tests {
         assert_eq!(kt.get("count").unwrap().as_usize(), Some(1));
         assert!(kt.get("p50_s").unwrap().as_f64().is_some());
         assert!(kt.get("p99_s").unwrap().as_f64().is_some());
+        let he = back.get("halo_exchanges").unwrap();
+        assert_eq!(he.get("p50").unwrap().as_f64(), Some(1.0));
+        assert_eq!(back.get("fused_steps").unwrap().get("max").unwrap().as_f64(), Some(4.0));
         assert_eq!(
             back.get("service_time").unwrap().get("count").unwrap().as_usize(),
             Some(1)

@@ -9,9 +9,10 @@
 //! steps, and keep every core busy with batched requests.
 //!
 //! - [`partition`] — slab domain decomposition with ghost rows sized by
-//!   the stencil order, and tile extraction/assembly.
-//! - [`halo`] — ghost-row refresh between steps (serial spec + the
-//!   lock-per-tile form the pool runs).
+//!   `order × T` (the time-tile depth; `T = 1` is the classic per-step
+//!   halo), and tile extraction/assembly.
+//! - [`halo`] — ghost-row refresh between fused applications (serial
+//!   spec + the lock-per-tile form the pool runs).
 //! - [`pool`] — `std::thread` worker pool: per-worker deques, work
 //!   stealing, per-batch barrier.
 //! - [`scheduler`] — compiled shard kernels (oracle/taps: bitwise-
@@ -23,7 +24,12 @@
 //!   LRU plan cache keyed by (spec, shape, method) that consults the
 //!   [`crate::tune`] database before compiling `tuned` shard kernels —
 //!   to real host kernels when the plan supports it — and the step
-//!   loop (compute batch → barrier → halo exchange).
+//!   loop (compute batch → barrier → halo exchange). With temporal
+//!   blocking (`ServeConfig::fuse_steps`, `serve --fuse-steps`), each
+//!   compute batch advances `T` fused steps behind `order × T`-deep
+//!   ghosts, so halo exchanges (and embed/extract round-trips) per
+//!   request drop from `steps` to `ceil(steps / T)` — bitwise
+//!   identically to the unfused evolution.
 //! - [`service`] — the batched front-end: bounded queue with
 //!   backpressure, coalescing of identical requests, dispatcher thread;
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
@@ -50,7 +56,9 @@ pub mod service;
 pub use metrics::{LatencyRecorder, ServiceMetrics};
 pub use partition::{Partition, Slab};
 pub use pool::WorkerPool;
-pub use scheduler::{CompiledPlan, KernelMethod, PlanCache, PlanKey, ShardedEvolver, TunedInfo};
+pub use scheduler::{
+    CompiledPlan, FuseReport, KernelMethod, PlanCache, PlanKey, ShardedEvolver, TunedInfo,
+};
 pub use service::{
     EvolutionService, EvolveRequest, ServeConfig, ShardRequest, ShardResponse, StencilServer,
     Ticket,

@@ -63,6 +63,23 @@ impl Partition {
         (n0 / halo.max(1)).max(1)
     }
 
+    /// Largest time-tile depth `t <= fuse` whose deep halo
+    /// (`order * t`) still admits the shard count the caller wants:
+    /// fusing `t` steps behind ghosts of depth `order * t` lets a shard
+    /// run `t` steps between exchanges, but every shard must own
+    /// `>= order * t` rows, so deep halos shrink
+    /// [`Partition::max_shards`]. The returned depth never starves the
+    /// decomposition below `min(want_shards, max_shards(n0, order))` —
+    /// shard-level parallelism wins over exchange amortization.
+    pub fn max_fuse(n0: usize, order: usize, want_shards: usize, fuse: usize) -> usize {
+        let want = want_shards.max(1).min(Self::max_shards(n0, order));
+        let mut t = fuse.max(1);
+        while t > 1 && Self::max_shards(n0, order * t) < want {
+            t -= 1;
+        }
+        t
+    }
+
     /// Balanced decomposition of `shape` into (up to) `shards` slabs.
     ///
     /// The effective shard count is clamped to [`Partition::max_shards`];
@@ -206,6 +223,36 @@ mod tests {
         // single row always yields one shard
         let p1 = Partition::new(&[1, 6], 8, 1).unwrap();
         assert_eq!(p1.len(), 1);
+    }
+
+    #[test]
+    fn max_fuse_caps_deep_halos_against_shard_starvation() {
+        // 64 rows, order 1, 4 shards wanted: halo 4 still hosts 16 shards
+        assert_eq!(Partition::max_fuse(64, 1, 4, 4), 4);
+        // 16 rows, order 2, 4 shards wanted: halo 2·4=8 would allow only
+        // 2 shards → fuse backs off to T=2 (halo 4, 4 shards)
+        assert_eq!(Partition::max_fuse(16, 2, 4, 4), 2);
+        // a single-shard request never needs to back off
+        assert_eq!(Partition::max_fuse(16, 2, 1, 8), 8);
+        // asking for more shards than even T=1 admits caps the want first
+        assert_eq!(Partition::max_fuse(8, 2, 64, 4), 1);
+        assert_eq!(Partition::max_fuse(8, 2, 64, 1), 1);
+        // and T=0 means T=1
+        assert_eq!(Partition::max_fuse(64, 1, 2, 0), 1);
+    }
+
+    #[test]
+    fn deep_halo_partitions_host_fused_ghost_bands() {
+        // halo = order * T: the partition clamps shard counts the same
+        // way, and every shard's ghost band is T·r deep (or runs to the
+        // global edge)
+        let p = Partition::new(&[32, 8], 4, 2 * 3).unwrap();
+        assert!(p.len() <= Partition::max_shards(32, 6));
+        for s in p.slabs.iter() {
+            assert!(s.rows() >= 6);
+            assert!(s.ghost_lo == 6 || s.lo == 0);
+            assert!(s.ghost_hi == 6 || s.hi == 32);
+        }
     }
 
     #[test]

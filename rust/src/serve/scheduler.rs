@@ -2,12 +2,16 @@
 //! and the step loop that drives compute + halo-exchange batches over the
 //! worker pool.
 //!
-//! A *plan* is the per-(spec, tile-shape, method) precomputation a shard
-//! kernel needs — for the native kernel, the stencil's non-zero taps
-//! lowered to linear-offset/weight pairs against the tile's strides.
-//! Plans are immutable and shared across threads (`Arc`), and cached in
-//! an LRU keyed by `(spec, shape, method)` so a server handling a mixed
-//! request stream compiles each shape once.
+//! A *plan* is the per-(spec, tile-shape, method, time-tile depth)
+//! precomputation a shard kernel needs — for the native kernel, the
+//! stencil's non-zero taps lowered to linear-offset/weight pairs against
+//! the tile's strides. Plans are immutable and shared across threads
+//! (`Arc`), and cached in an LRU keyed by `(spec, shape, method, steps)`
+//! so a server handling a mixed request stream compiles each shape once.
+//! A plan with `steps = T > 1` advances `T` fused time steps per
+//! application (temporal blocking behind `order × T`-deep ghosts);
+//! [`ShardedEvolver::evolve_fused`] exchanges halos only between fused
+//! applications, bitwise identically to the unfused step loop.
 //!
 //! The oracle/taps kernels reproduce [`crate::stencil::reference::apply`]
 //! **bitwise**: the native kernel iterates taps in the same dense-offset
@@ -103,6 +107,17 @@ pub struct PlanKey {
     pub shape: Vec<usize>,
     /// Kernel flavour.
     pub method: KernelMethod,
+    /// Fused time steps one `apply` advances (temporal blocking; 1 =
+    /// classic single sweep). Tiles must carry ghosts of depth
+    /// `order * steps` for a fused application to be exact.
+    pub steps: usize,
+}
+
+impl PlanKey {
+    /// Single-step key (the classic pre-temporal-blocking plan).
+    pub fn single(spec: StencilSpec, shape: Vec<usize>, method: KernelMethod) -> PlanKey {
+        PlanKey { spec, shape, method, steps: 1 }
+    }
 }
 
 /// A compiled shard kernel for one (spec, tile shape, method).
@@ -133,6 +148,7 @@ impl CompiledPlan {
     /// Compile a plan whose KIR host kernels (if any) execute on
     /// `engine`.
     pub fn compile_with_engine(key: PlanKey, engine: Engine) -> CompiledPlan {
+        debug_assert!(key.steps >= 1, "a plan advances at least one step per apply");
         let host = match key.method {
             KernelMethod::Outer => {
                 host_kernel(&key, Method::Outer(OuterParams::paper_best(key.spec)), engine)
@@ -176,19 +192,22 @@ impl CompiledPlan {
         self.host.as_ref().map(|k| k.engine())
     }
 
-    /// Apply one time step to a tile on one thread (see
-    /// [`CompiledPlan::apply_with`]). Tiles too small to contain any
-    /// interior point (edge shards wholly inside the global frozen band)
-    /// are returned unchanged — their every point is boundary.
+    /// Apply the plan's `key.steps` fused time steps to a tile on one
+    /// thread (see [`CompiledPlan::apply_with`]). Tiles too small to
+    /// contain any interior point (edge shards wholly inside the global
+    /// frozen band) are returned unchanged — their every point is
+    /// boundary.
     pub fn apply(&self, a: &DenseGrid) -> DenseGrid {
         self.apply_with(a, 1)
     }
 
-    /// Apply one time step to a tile, allowing a KIR host kernel's
-    /// compiled engine up to `threads` worker threads (0 = one per
-    /// available core; the taps/oracle kernels and the interpret engine
-    /// always run on the calling thread). The result is bitwise
-    /// independent of `threads`.
+    /// Apply the plan's `key.steps` fused time steps to a tile, allowing
+    /// a KIR host kernel's compiled engine up to `threads` worker
+    /// threads (0 = one per available core; the taps/oracle kernels and
+    /// the interpret engine always run on the calling thread). Every
+    /// step freezes the tile's `r`-deep boundary band, so a fused
+    /// application is bitwise identical to `key.steps` single-step
+    /// applications; the result is bitwise independent of `threads`.
     pub fn apply_with(&self, a: &DenseGrid, threads: usize) -> DenseGrid {
         debug_assert_eq!(a.shape, self.key.shape, "tile does not match plan");
         let r = self.key.spec.order;
@@ -196,16 +215,31 @@ impl CompiledPlan {
             return a.clone();
         }
         match self.key.method {
-            KernelMethod::Oracle => reference::apply(&self.coeffs, a),
-            KernelMethod::Taps => self.apply_taps(a),
-            // the KIR host kernel when one compiled; the bitwise taps
-            // kernel otherwise (degenerate tiles, unsupported tuned
-            // plans, or no tuning-database match)
+            KernelMethod::Oracle => self.repeat(a, |t| reference::apply(&self.coeffs, t)),
+            KernelMethod::Taps => self.repeat(a, |t| self.apply_taps(t)),
+            // the KIR host kernel when one compiled (already fused to
+            // key.steps); the bitwise taps kernel otherwise (degenerate
+            // tiles, unsupported tuned plans, or no tuning-database
+            // match)
             KernelMethod::Outer | KernelMethod::Tuned => match &self.host {
-                Some(k) => k.apply_with(a, k.engine(), threads),
-                None => self.apply_taps(a),
+                Some(k) => {
+                    debug_assert_eq!(k.steps(), self.key.steps);
+                    k.apply_with(a, k.engine(), threads)
+                }
+                None => self.repeat(a, |t| self.apply_taps(t)),
             },
         }
+    }
+
+    /// `key.steps` tile-local applications of a single-step kernel — the
+    /// reference form of temporal fusion (no exchange, band frozen per
+    /// step).
+    fn repeat(&self, a: &DenseGrid, f: impl Fn(&DenseGrid) -> DenseGrid) -> DenseGrid {
+        let mut cur = f(a);
+        for _ in 1..self.key.steps.max(1) {
+            cur = f(&cur);
+        }
+        cur
     }
 
     /// Native kernel: same loop structure and accumulation order as the
@@ -249,16 +283,18 @@ impl CompiledPlan {
     }
 }
 
-/// Compile the KIR host kernel for a plan key, if the tile shape and
-/// method admit one. Degenerate tiles (no interior) and
-/// grid-restructuring methods yield `None` — the caller falls back to
-/// the bitwise taps kernel. Host kernels run on the default §5.1 machine
-/// shape (8-lane vectors, 8×8 tiles), executed by `engine`.
+/// Compile the KIR host kernel for a plan key (fused to `key.steps`
+/// time steps per application), if the tile shape and method admit one.
+/// Degenerate tiles (no interior), grid-restructuring methods, and
+/// methods the fuser rejects yield `None` — the caller falls back to
+/// the bitwise taps kernel (repeated `key.steps` times). Host kernels
+/// run on the default §5.1 machine shape (8-lane vectors, 8×8 tiles),
+/// executed by `engine`.
 fn host_kernel(key: &PlanKey, method: Method, engine: Engine) -> Option<HostKernel> {
     if key.shape.iter().any(|&s| s <= 2 * key.spec.order) {
         return None;
     }
-    HostKernel::compile(&SimConfig::default(), key.spec, &key.shape, method)
+    HostKernel::compile_fused(&SimConfig::default(), key.spec, &key.shape, method, key.steps)
         .ok()
         .map(|mut k| {
             k.set_engine(engine);
@@ -359,6 +395,18 @@ impl PlanCache {
     pub fn tuned_label(&self, spec: StencilSpec) -> Option<String> {
         let mut inner = self.inner.lock().unwrap();
         Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec).map(|i| i.label)
+    }
+
+    /// The time-tile depth the tuning database's plan for this stencil
+    /// won at (1 when there is no match or the plan is single-sweep).
+    /// The serving layer adopts it for `tuned`-kernel requests so a
+    /// fused tune winner actually runs fused — still capped per request
+    /// by [`crate::serve::Partition::max_fuse`].
+    pub fn tuned_fuse(&self, spec: StencilSpec) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec)
+            .map(|i| i.plan.steps.max(1))
+            .unwrap_or(1)
     }
 
     /// True when `tuned`-kernel requests for this stencil resolve to a
@@ -506,6 +554,32 @@ impl ShardedEvolver {
         shards: usize,
         method: KernelMethod,
     ) -> anyhow::Result<(DenseGrid, usize)> {
+        self.evolve_fused(spec, grid, steps, shards, method, 1)
+            .map(|(grid, shards, _)| (grid, shards))
+    }
+
+    /// Temporally blocked sharded evolution: fuse up to `fuse` time
+    /// steps per kernel application behind ghosts of depth
+    /// `order * T`, exchanging halos only every `T` steps.
+    ///
+    /// The effective depth `T` is capped by [`Partition::max_fuse`] so a
+    /// deep halo never starves the shard count, and by `steps`. Halo
+    /// exchanges per request drop from `steps - 1` to
+    /// `ceil(steps / T) - 1`, and so do the per-step embed/extract
+    /// round-trips and pool barriers. Every kernel application freezes
+    /// the tile's `r`-deep band per fused step, so the result is bitwise
+    /// identical to the unfused (`fuse = 1`) evolution of the same
+    /// kernel. Returns the evolved grid, the shard count used, and the
+    /// fusion accounting.
+    pub fn evolve_fused(
+        &self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+        fuse: usize,
+    ) -> anyhow::Result<(DenseGrid, usize, FuseReport)> {
         anyhow::ensure!(
             grid.shape.len() == spec.dims,
             "grid shape {:?} does not match {spec}",
@@ -517,17 +591,27 @@ impl ShardedEvolver {
             grid.shape,
             spec.order
         );
-        let part = Arc::new(Partition::new(&grid.shape, shards, spec.order)?);
+        let t = Partition::max_fuse(grid.shape[0], spec.order, shards, fuse)
+            .min(steps.max(1));
+        let part = Arc::new(Partition::new(&grid.shape, shards, spec.order * t)?);
         let n_shards = part.len();
         if steps == 0 {
-            return Ok((grid.clone(), n_shards));
+            return Ok((grid.clone(), n_shards, FuseReport { fuse_steps: t, halo_exchanges: 0 }));
         }
-        let plans: Vec<Arc<CompiledPlan>> = (0..n_shards)
-            .map(|s| {
-                self.cache
-                    .get(PlanKey { spec, shape: part.tile_shape(s), method })
-            })
-            .collect();
+        // plans per (shard, chunk depth): the remainder chunk (steps % T)
+        // compiles its own shallower fused kernels
+        let plans_for = |chunk: usize| -> Vec<Arc<CompiledPlan>> {
+            (0..n_shards)
+                .map(|s| {
+                    self.cache.get(PlanKey {
+                        spec,
+                        shape: part.tile_shape(s),
+                        method,
+                        steps: chunk,
+                    })
+                })
+                .collect()
+        };
         let tiles: Arc<Vec<Mutex<DenseGrid>>> =
             Arc::new(part.extract(grid).into_iter().map(Mutex::new).collect());
         // a single shard may drive every core through the compiled
@@ -536,7 +620,16 @@ impl ShardedEvolver {
         // independent of this choice)
         let kernel_threads = if n_shards == 1 { 0 } else { 1 };
 
-        for step in 0..steps {
+        let mut full_plans: Option<Vec<Arc<CompiledPlan>>> = None;
+        let mut remaining = steps;
+        let mut halo_exchanges = 0usize;
+        while remaining > 0 {
+            let chunk = t.min(remaining);
+            let plans = if chunk == t {
+                full_plans.get_or_insert_with(|| plans_for(t)).clone()
+            } else {
+                plans_for(chunk)
+            };
             let compute: Vec<Job> = (0..n_shards)
                 .map(|s| {
                     let tiles = Arc::clone(&tiles);
@@ -549,8 +642,9 @@ impl ShardedEvolver {
                 })
                 .collect();
             self.pool.run_batch(compute)?;
+            remaining -= chunk;
 
-            if step + 1 < steps && n_shards > 1 {
+            if remaining > 0 && n_shards > 1 {
                 let exchange: Vec<Job> = (0..n_shards)
                     .map(|s| {
                         let tiles = Arc::clone(&tiles);
@@ -562,14 +656,30 @@ impl ShardedEvolver {
                     })
                     .collect();
                 self.pool.run_batch(exchange)?;
+                halo_exchanges += 1;
             }
         }
 
         let guards: Vec<std::sync::MutexGuard<'_, DenseGrid>> =
             tiles.iter().map(|m| m.lock().unwrap()).collect();
         let refs: Vec<&DenseGrid> = guards.iter().map(|g| &**g).collect();
-        Ok((part.assemble(&refs)?, n_shards))
+        Ok((
+            part.assemble(&refs)?,
+            n_shards,
+            FuseReport { fuse_steps: t, halo_exchanges },
+        ))
     }
+}
+
+/// Fusion accounting of one sharded evolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuseReport {
+    /// Effective time-tile depth `T` (after capping against shard
+    /// starvation and the requested step count).
+    pub fuse_steps: usize,
+    /// Halo-exchange rounds performed (`ceil(steps / T) - 1` for
+    /// multi-shard runs, 0 otherwise).
+    pub halo_exchanges: usize,
 }
 
 #[cfg(test)]
@@ -587,7 +697,7 @@ mod tests {
         ] {
             let shape: Vec<usize> = vec![4 * spec.order + 3; spec.dims];
             let a = DenseGrid::verification_input(&shape, 13);
-            let key = PlanKey { spec, shape: shape.clone(), method: KernelMethod::Taps };
+            let key = PlanKey::single(spec, shape.clone(), KernelMethod::Taps);
             let plan = CompiledPlan::compile(key);
             let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
             assert_eq!(plan.apply(&a), want, "{spec}");
@@ -601,7 +711,7 @@ mod tests {
         let a = DenseGrid::verification_input(&[4, 9], 1);
         for method in [KernelMethod::Oracle, KernelMethod::Taps, KernelMethod::Outer] {
             let plan =
-                CompiledPlan::compile(PlanKey { spec, shape: vec![4, 9], method });
+                CompiledPlan::compile(PlanKey::single(spec, vec![4, 9], method));
             assert_eq!(plan.apply(&a), a, "{method}");
         }
     }
@@ -609,11 +719,7 @@ mod tests {
     #[test]
     fn lru_cache_hits_and_evicts() {
         let cache = PlanCache::new(2);
-        let key = |n: usize| PlanKey {
-            spec: StencilSpec::box2d(1),
-            shape: vec![n, n],
-            method: KernelMethod::Taps,
-        };
+        let key = |n: usize| PlanKey::single(StencilSpec::box2d(1), vec![n, n], KernelMethod::Taps);
         let a = cache.get(key(8));
         let _b = cache.get(key(9));
         assert_eq!(cache.stats().misses, 2);
@@ -690,11 +796,11 @@ mod tests {
         for spec in [StencilSpec::box2d(1), StencilSpec::star2d(2), StencilSpec::box3d(1)] {
             let shape: Vec<usize> = vec![4 * spec.order + 5; spec.dims];
             let a = DenseGrid::verification_input(&shape, 21);
-            let plan = CompiledPlan::compile(PlanKey {
+            let plan = CompiledPlan::compile(PlanKey::single(
                 spec,
-                shape: shape.clone(),
-                method: KernelMethod::Outer,
-            });
+                shape.clone(),
+                KernelMethod::Outer,
+            ));
             assert!(plan.host_ops().unwrap() > 0, "{spec}: host kernel compiled");
             let got = plan.apply(&a);
             let want = reference::apply(&CoeffTensor::paper_default(spec), &a);
@@ -704,11 +810,11 @@ mod tests {
             assert_eq!(got.data[0], a.data[0]);
         }
         // taps/oracle plans never carry a host kernel
-        let t = CompiledPlan::compile(PlanKey {
-            spec: StencilSpec::box2d(1),
-            shape: vec![10, 10],
-            method: KernelMethod::Taps,
-        });
+        let t = CompiledPlan::compile(PlanKey::single(
+            StencilSpec::box2d(1),
+            vec![10, 10],
+            KernelMethod::Taps,
+        ));
         assert!(t.host_ops().is_none());
     }
 
@@ -722,7 +828,7 @@ mod tests {
         assert_eq!(interp_cache.engine(), Engine::Interpret);
         let compiled_cache = PlanCache::new(4);
         assert_eq!(compiled_cache.engine(), Engine::Compiled);
-        let key = PlanKey { spec, shape: shape.clone(), method: KernelMethod::Outer };
+        let key = PlanKey::single(spec, shape.clone(), KernelMethod::Outer);
         let pi = interp_cache.get(key.clone());
         let pc = compiled_cache.get(key);
         assert_eq!(pi.host_engine(), Some(Engine::Interpret));
@@ -735,16 +841,89 @@ mod tests {
     }
 
     #[test]
+    fn fused_plans_are_bitwise_repeated_single_applications() {
+        for method in [KernelMethod::Oracle, KernelMethod::Taps, KernelMethod::Outer] {
+            for (spec, shape) in [
+                (StencilSpec::box2d(1), vec![14usize, 23]),
+                (StencilSpec::star2d(2), vec![17, 12]),
+                (StencilSpec::box3d(1), vec![9, 12, 10]),
+            ] {
+                let a = DenseGrid::verification_input(&shape, 31);
+                let single =
+                    CompiledPlan::compile(PlanKey::single(spec, shape.clone(), method));
+                for t in [2usize, 3] {
+                    let fused = CompiledPlan::compile(PlanKey {
+                        spec,
+                        shape: shape.clone(),
+                        method,
+                        steps: t,
+                    });
+                    let mut want = a.clone();
+                    for _ in 0..t {
+                        want = single.apply(&want);
+                    }
+                    assert_eq!(fused.apply(&a), want, "{spec} {method} T={t}");
+                    assert_eq!(fused.apply_with(&a, 4), want, "{spec} {method} T={t} threaded");
+                }
+            }
+        }
+        // a fused outer plan carries a fused host kernel
+        let fused = CompiledPlan::compile(PlanKey {
+            spec: StencilSpec::box2d(1),
+            shape: vec![14, 14],
+            method: KernelMethod::Outer,
+            steps: 4,
+        });
+        assert_eq!(fused.host_label(), Some("p-j8-t4"));
+    }
+
+    #[test]
+    fn evolve_fused_matches_unfused_bitwise_and_counts_exchanges() {
+        let ev = ShardedEvolver::new(3);
+        for (spec, shape, steps) in [
+            (StencilSpec::box2d(1), vec![32usize, 18], 8usize),
+            (StencilSpec::star2d(2), vec![24, 20], 5),
+        ] {
+            let grid = DenseGrid::verification_input(&shape, 0xFEED);
+            let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, steps);
+            for method in [KernelMethod::Taps, KernelMethod::Outer] {
+                let (unfused, shards_used, fr1) = ev
+                    .evolve_fused(spec, &grid, steps, 3, method, 1)
+                    .unwrap();
+                assert_eq!(fr1, FuseReport { fuse_steps: 1, halo_exchanges: steps - 1 });
+                for fuse in [2usize, 4] {
+                    let (fused, shards_f, fr) = ev
+                        .evolve_fused(spec, &grid, steps, 3, method, fuse)
+                        .unwrap();
+                    assert_eq!(
+                        fused, unfused,
+                        "{spec} {method} fuse={fuse}: fused diverged bitwise"
+                    );
+                    assert!(fr.fuse_steps >= 1 && fr.fuse_steps <= fuse);
+                    if shards_f > 1 {
+                        assert_eq!(
+                            fr.halo_exchanges,
+                            steps.div_ceil(fr.fuse_steps) - 1,
+                            "{spec} {method} fuse={fuse}"
+                        );
+                    }
+                    assert!(fr.halo_exchanges < fr1.halo_exchanges || fr.fuse_steps == 1);
+                }
+                if method == KernelMethod::Taps {
+                    assert_eq!(unfused, want, "{spec}: unfused taps vs oracle");
+                }
+                assert!(shards_used >= 1);
+            }
+        }
+    }
+
+    #[test]
     fn tuned_kernel_is_bitwise_taps() {
         let spec = StencilSpec::star2d(2);
         let shape = vec![13, 13];
         let a = DenseGrid::verification_input(&shape, 9);
-        let t = CompiledPlan::compile(PlanKey {
-            spec,
-            shape: shape.clone(),
-            method: KernelMethod::Taps,
-        });
-        let u = CompiledPlan::compile(PlanKey { spec, shape, method: KernelMethod::Tuned });
+        let t = CompiledPlan::compile(PlanKey::single(spec, shape.clone(), KernelMethod::Taps));
+        let u = CompiledPlan::compile(PlanKey::single(spec, shape, KernelMethod::Tuned));
         assert_eq!(t.apply(&a), u.apply(&a));
         assert!(u.tuned.is_none()); // compile() alone never consults a DB
     }
@@ -761,11 +940,7 @@ mod tests {
         db.record(&out);
         let cache = PlanCache::with_tune_db(4, Arc::new(db), cfg.fingerprint());
 
-        let tuned = cache.get(PlanKey {
-            spec,
-            shape: vec![10, 10],
-            method: KernelMethod::Tuned,
-        });
+        let tuned = cache.get(PlanKey::single(spec, vec![10, 10], KernelMethod::Tuned));
         let info = tuned.tuned.as_ref().expect("tuned plan carries the DB entry");
         assert_eq!(info.label, out.best().plan.label(spec.dims));
         assert_eq!(info.plan, out.best().plan);
@@ -780,19 +955,18 @@ mod tests {
             Method::Dlt | Method::Tv => assert!(tuned.host_ops().is_none()),
         }
         assert_eq!(cache.tuned_label(spec), Some(info.label.clone()));
+        // serving adopts the winner's time-tile depth for tuned requests
+        assert_eq!(cache.tuned_fuse(spec), info.plan.steps.max(1));
         assert_eq!(cache.stats().tuned_hits, 1);
 
         // plain taps plans never consult the database
-        let taps = cache.get(PlanKey { spec, shape: vec![10, 10], method: KernelMethod::Taps });
+        let taps = cache.get(PlanKey::single(spec, vec![10, 10], KernelMethod::Taps));
         assert!(taps.tuned.is_none());
         assert_eq!(cache.stats().tuned_hits, 1);
         // a spec the DB has no entry for compiles fine, unannotated
-        let other = cache.get(PlanKey {
-            spec: StencilSpec::star3d(1),
-            shape: vec![6, 6, 6],
-            method: KernelMethod::Tuned,
-        });
+        let other = cache.get(PlanKey::single(StencilSpec::star3d(1), vec![6, 6, 6], KernelMethod::Tuned));
         assert!(other.tuned.is_none());
         assert_eq!(cache.tuned_label(StencilSpec::star3d(1)), None);
+        assert_eq!(cache.tuned_fuse(StencilSpec::star3d(1)), 1);
     }
 }

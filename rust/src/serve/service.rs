@@ -41,6 +41,15 @@ pub struct ServeConfig {
     /// tuned plans): the compiling engine by default, with the op-by-op
     /// interpreter as the bitwise-identical reference twin.
     pub engine: Engine,
+    /// Time-tile depth `T`: fuse up to `T` time steps per kernel
+    /// application behind `order * T`-deep ghosts, exchanging halos only
+    /// every `T` steps (1 = classic per-step exchange). Capped per
+    /// request so deep halos never starve the shard count
+    /// ([`crate::serve::Partition::max_fuse`]); results are bitwise
+    /// independent of `T`. `tuned`-kernel requests additionally adopt
+    /// the tuning database plan's depth when it is larger, so a fused
+    /// tune winner actually runs fused.
+    pub fuse_steps: usize,
 }
 
 impl Default for ServeConfig {
@@ -51,6 +60,7 @@ impl Default for ServeConfig {
             queue_depth: 32,
             plan_cache: 32,
             engine: Engine::default(),
+            fuse_steps: 1,
         }
     }
 }
@@ -95,6 +105,12 @@ pub struct ShardReport {
     pub steps: usize,
     /// Shards actually used (after clamping).
     pub shards: usize,
+    /// Effective time-tile depth `T` this request ran with (fused steps
+    /// per kernel application, after capping).
+    pub fused_steps: usize,
+    /// Halo-exchange rounds this request performed
+    /// (`ceil(steps / T) - 1` for multi-shard runs).
+    pub halo_exchanges: usize,
     /// Submissions that shared this computation (1 = no coalescing).
     pub waiters: usize,
     /// Max |error| vs the scalar oracle (0.0 expected), if verified.
@@ -230,7 +246,7 @@ impl ServerInner {
         let service_seconds = t0.elapsed().as_secs_f64();
         let waiters = pending.waiters;
         match result {
-            Ok((grid, max_err, shards, kernel_seconds)) => {
+            Ok((grid, max_err, shards, kernel_seconds, fuse)) => {
                 let tuned_plan = if pending.req.method == KernelMethod::Tuned {
                     self.evolver.cache().tuned_label(pending.req.spec)
                 } else {
@@ -246,6 +262,8 @@ impl ServerInner {
                     m.queue_wait.record(queue_seconds);
                     m.service_time.record(service_seconds);
                     m.kernel_time.record(kernel_seconds);
+                    m.halo_exchanges.record(fuse.halo_exchanges as f64);
+                    m.fused_steps.record(fuse.fuse_steps as f64);
                 }
                 let report = ShardReport {
                     queue_seconds,
@@ -254,6 +272,8 @@ impl ServerInner {
                     points,
                     steps: pending.req.steps,
                     shards,
+                    fused_steps: fuse.fuse_steps,
+                    halo_exchanges: fuse.halo_exchanges,
                     waiters,
                     max_err,
                     tuned_plan,
@@ -268,20 +288,34 @@ impl ServerInner {
     }
 
     /// Execute one request (no queue involved). Returns the grid, the
-    /// verification error (when requested), the shard count used, and
-    /// the kernel-only wall-clock seconds.
+    /// verification error (when requested), the shard count used, the
+    /// kernel-only wall-clock seconds, and the fusion accounting.
     fn execute(
         &self,
         req: &ShardRequest,
-    ) -> anyhow::Result<(DenseGrid, Option<f64>, usize, f64)> {
+    ) -> anyhow::Result<(DenseGrid, Option<f64>, usize, f64, super::scheduler::FuseReport)> {
         anyhow::ensure!(req.n >= 1, "empty domain");
         let storage = vec![req.n + 2 * req.spec.order; req.spec.dims];
         let grid = DenseGrid::verification_input(&storage, req.seed);
         let shards = self.effective_shards();
+        // a tuned request adopts the DB plan's time-tile depth (a fused
+        // tune winner should actually run fused); the server-wide
+        // setting still applies, and evolve_fused caps either against
+        // shard starvation
+        let fuse_steps = if req.method == KernelMethod::Tuned {
+            self.cfg.fuse_steps.max(self.evolver.cache().tuned_fuse(req.spec))
+        } else {
+            self.cfg.fuse_steps
+        };
         let t_kernel = Instant::now();
-        let (out, used) = self
-            .evolver
-            .evolve_sharded(req.spec, &grid, req.steps, shards, req.method)?;
+        let (out, used, fuse) = self.evolver.evolve_fused(
+            req.spec,
+            &grid,
+            req.steps,
+            shards,
+            req.method,
+            fuse_steps,
+        )?;
         let kernel_seconds = t_kernel.elapsed().as_secs_f64();
         let max_err = if req.verify {
             // oracle/taps are bitwise; the KIR host kernels (`outer`, and
@@ -312,7 +346,7 @@ impl ServerInner {
         } else {
             None
         };
-        Ok((out, max_err, used, kernel_seconds))
+        Ok((out, max_err, used, kernel_seconds, fuse))
     }
 }
 
@@ -493,6 +527,7 @@ impl StencilServer {
                     ("queue_depth", Json::Num(self.inner.cfg.queue_depth as f64)),
                     ("plan_cache", Json::Num(self.inner.cfg.plan_cache as f64)),
                     ("engine", Json::Str(self.inner.cfg.engine.to_string())),
+                    ("fuse_steps", Json::Num(self.inner.cfg.fuse_steps as f64)),
                 ]),
             ),
         ])
@@ -603,6 +638,51 @@ mod tests {
         assert_eq!(resp.report.points, 12 * 12);
         assert_eq!(resp.report.shards, 2);
         assert_eq!(resp.grid.shape, vec![14, 14]);
+    }
+
+    #[test]
+    fn fused_server_exchanges_halos_every_t_steps() {
+        let server = StencilServer::new(ServeConfig {
+            workers: 2,
+            shards: 2,
+            queue_depth: 8,
+            plan_cache: 8,
+            fuse_steps: 4,
+            ..ServeConfig::default()
+        });
+        let req = ShardRequest {
+            spec: StencilSpec::box2d(1),
+            n: 24,
+            steps: 8,
+            seed: 5,
+            method: KernelMethod::Taps,
+            verify: true,
+        };
+        let t = server.submit(req).unwrap();
+        server.drain();
+        let resp = t.wait().unwrap();
+        // fused taps stays bitwise equal to the scalar oracle
+        assert_eq!(resp.report.max_err, Some(0.0));
+        assert_eq!(resp.report.fused_steps, 4);
+        assert_eq!(resp.report.shards, 2);
+        // halo exchanges drop from steps - 1 = 7 to ceil(8/4) - 1 = 1
+        assert_eq!(resp.report.halo_exchanges, 1);
+        let m = server.metrics_json();
+        let service = m.get("service").unwrap();
+        for key in ["halo_exchanges", "fused_steps"] {
+            let rec = service.get(key).unwrap_or_else(|| panic!("metrics missing {key}"));
+            assert_eq!(rec.get("count").unwrap().as_usize(), Some(1), "{key}");
+            assert!(rec.get("p50").unwrap().as_f64().is_some(), "{key}");
+            assert!(rec.get("p99").unwrap().as_f64().is_some(), "{key}");
+        }
+        assert_eq!(
+            service.get("halo_exchanges").unwrap().get("max").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            m.get("config").unwrap().get("fuse_steps").unwrap().as_usize(),
+            Some(4)
+        );
     }
 
     #[test]

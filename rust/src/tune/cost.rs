@@ -97,6 +97,26 @@ pub fn estimate(
         .max(work.lsu / cfg.lsu_units as f64)
         .max(work.valu / cfg.valu_units as f64)
         .max(total / cfg.issue_width as f64);
+    // fused-halo traffic model (temporal blocking at depth T): serving
+    // pays one embed/extract + halo round-trip per T steps instead of
+    // per step, at the price of redundantly recomputing the ghost band
+    // as it shrinks by r rows per fused step — on a slab decomposition
+    // the band averages (T-1)·r/2 extra rows per side and step, modelled
+    // against the domain extent as the compute inflation below. Of the
+    // ~3 DRAM streams the floor charges (read A, write-allocate B,
+    // write back B), the input read and the write-back amortize over T
+    // in serving while the per-step store stream persists, so the fused
+    // floor shrinks to (1 + 2/T)/3 — deliberately less generous than
+    // 1/T, since the sim measurement the search re-ranks with still
+    // streams the full grid every step. (Serving-oriented, like the
+    // rest of this heuristic: the measured ranking always decides.)
+    let t = plan.steps.max(1) as f64;
+    let mut mem_scale = mem_scale;
+    if t > 1.0 {
+        let inflation = 1.0 + (t - 1.0) * spec.order as f64 / n as f64;
+        cpp *= inflation;
+        mem_scale *= inflation * (1.0 + 2.0 / t) / 3.0;
+    }
     // DRAM-bandwidth floor once A and B no longer fit in L2: ~3 streams
     // of 8 B/pt (read A, write-allocate + write back B)
     let ext = n + 2 * spec.order;
@@ -249,7 +269,7 @@ mod tests {
     fn outer_beats_the_autovec_estimate() {
         let spec = StencilSpec::box2d(1);
         let ours = est(spec, 64, &TunePlan::paper_default(spec));
-        let base = est(spec, 64, &TunePlan { method: Method::AutoVec });
+        let base = est(spec, 64, &TunePlan::new(Method::AutoVec));
         assert!(ours.cycles_per_point < base.cycles_per_point);
     }
 
@@ -261,5 +281,30 @@ mod tests {
         assert!(!small.mem_bound);
         assert!(large.mem_bound);
         assert!(large.cycles_per_point >= small.cycles_per_point);
+    }
+
+    #[test]
+    fn temporal_blocking_trades_ghost_compute_for_dram_traffic() {
+        let spec = StencilSpec::box2d(1);
+        // in-cache: fusing only adds redundant ghost compute
+        let small = est(spec, 64, &TunePlan::paper_default(spec));
+        let small_fused = est(spec, 64, &TunePlan::paper_default(spec).fused(4));
+        assert!(small_fused.cycles_per_point > small.cycles_per_point);
+        assert!(
+            small_fused.cycles_per_point < small.cycles_per_point * 1.2,
+            "ghost-band inflation stays modest: {} vs {}",
+            small_fused.cycles_per_point,
+            small.cycles_per_point
+        );
+        // memory-bound: the amortized DRAM floor wins
+        let large = est(spec, 2048, &TunePlan::paper_default(spec));
+        let large_fused = est(spec, 2048, &TunePlan::paper_default(spec).fused(4));
+        assert!(large.mem_bound);
+        assert!(
+            large_fused.cycles_per_point < large.cycles_per_point,
+            "fusion must beat the unfused DRAM floor: {} vs {}",
+            large_fused.cycles_per_point,
+            large.cycles_per_point
+        );
     }
 }

@@ -9,8 +9,9 @@
 //! loop:
 //!
 //! - [`space`] — the [`space::TunePlan`] search space (cover option ×
-//!   unroll × scheduling × layout × method), normalized to what the
-//!   generator's register-pressure clamping actually runs;
+//!   unroll × scheduling × layout × method × time-tile depth `T`),
+//!   normalized to what the generator's register-pressure clamping
+//!   actually runs;
 //! - [`cost`] — an analytic per-point cost model derived from
 //!   [`crate::sim::SimConfig`] and, for outer plans, from
 //!   [`crate::kir::OpStats`] over the kernel IR the generator actually
@@ -60,6 +61,10 @@
 //!   only for `"outer"` (`option` is a [`crate::scatter::CoverOption`]
 //!   name: `parallel`, `orthogonal`, `hybrid`, `minimalaxis`,
 //!   `diagonals`).
+//! - `plan.steps` is the time-tile depth `T` (temporal blocking: `T`
+//!   fused steps per kernel application), present only when `> 1`;
+//!   databases written before the field existed load as single-sweep
+//!   plans.
 //! - `fingerprint` is [`crate::sim::SimConfig::fingerprint`]: a 16-hex-
 //!   digit FNV-1a hash over **every** machine parameter (vector length,
 //!   register counts, issue width, unit counts, latencies, MSHRs, split-

@@ -16,7 +16,7 @@
 
 use super::cost::{estimate, CostEstimate};
 use super::space::{enumerate, TunePlan};
-use crate::codegen::{run_host, run_method};
+use crate::codegen::{run_host_fused, run_method_fused};
 use crate::kir::Engine;
 use crate::stencil::StencilSpec;
 use crate::sim::SimConfig;
@@ -185,9 +185,12 @@ pub fn tune(
     let pruned = space_size - survivors.len();
 
     // ---- sim-in-the-loop: measure + verify every survivor ----
+    // (temporally blocked candidates run their fused T-step program and
+    // are verified against T oracle steps; cycles_per_point normalizes
+    // per step, so depths compete fairly)
     let mut measurements = Vec::with_capacity(survivors.len());
     for (plan, est) in survivors {
-        let res = run_method(cfg, spec, n, plan.to_method(), true)?;
+        let res = run_method_fused(cfg, spec, n, plan.to_method(), true, plan.steps)?;
         anyhow::ensure!(
             res.verified(),
             "candidate {} failed oracle verification (max_err {:.3e}) — refusing to rank it",
@@ -226,7 +229,7 @@ pub fn tune(
     }
     for idx in host_idx {
         let method = measurements[idx].plan.to_method();
-        let host = run_host(cfg, spec, n, method, Engine::Compiled)?;
+        let host = run_host_fused(cfg, spec, n, method, Engine::Compiled, measurements[idx].plan.steps)?;
         anyhow::ensure!(
             host.verified(),
             "host run of {} failed verification (max_err {:.3e})",
@@ -283,6 +286,30 @@ mod tests {
         assert_eq!(out.pruned, 0);
         let ranking = out.ranking();
         assert_eq!(ranking[0], out.best_idx);
+    }
+
+    #[test]
+    fn fused_candidates_are_measured_and_verified() {
+        let cfg = SimConfig::default();
+        let out = tune(&cfg, StencilSpec::box2d(1), 16, 1, Strategy::Exhaustive).unwrap();
+        let fused: Vec<_> =
+            out.measurements.iter().filter(|m| m.plan.steps > 1).collect();
+        assert!(!fused.is_empty(), "the space explores the time-tile axis");
+        for m in &fused {
+            assert!(m.max_err < 1e-9, "{}: fused candidate verified", m.plan.label(2));
+            assert!(m.cycles > 0);
+            assert!(m.plan.label(2).contains("-t"), "{}", m.plan.label(2));
+        }
+        // per-step normalization keeps depths comparable: a fused run's
+        // raw cycles cover T steps
+        let default_cpp = out.paper_default().cycles_per_point;
+        for m in &fused {
+            assert!(
+                m.cycles_per_point < default_cpp * 4.0,
+                "{}: fused cyc/pt is per-step-normalized",
+                m.plan.label(2)
+            );
+        }
     }
 
     #[test]

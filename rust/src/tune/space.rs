@@ -7,7 +7,12 @@
 //!   *layout* axis of the space (dimension-lifted transposed storage vs.
 //!   the standard padded row-major layout every other method uses);
 //! - for the outer method: **cover option** (§4.1), **unroll factors**
-//!   `ui × uk` (§4.2) and **outer-product scheduling** on/off (§4.3).
+//!   `ui × uk` (§4.2) and **outer-product scheduling** on/off (§4.3);
+//! - the **time-tile depth** `T` ([`TunePlan::steps`], explored at
+//!   [`TIME_TILES`] for every scheduled outer plan): how many time steps
+//!   one kernel application fuses behind deep halos (temporal
+//!   blocking) — trading redundant ghost-band compute for `1/T` of the
+//!   halo exchanges and DRAM round-trips.
 //!
 //! [`enumerate`] expands the full space for a stencil on a machine,
 //! normalizing unroll factors to what the generator's register-pressure
@@ -22,18 +27,28 @@ use crate::stencil::{CoeffTensor, StencilSpec};
 use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 
-/// One point of the search space (a thin, serializable wrapper around
-/// [`Method`]).
+/// One point of the search space: an execution [`Method`] plus the
+/// time-tile depth `steps` (temporal blocking; 1 = classic single
+/// sweep).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunePlan {
     /// The execution method this plan selects.
     pub method: Method,
+    /// Fused time steps per kernel application (the temporal-blocking
+    /// axis of the space; only in-place single-sweep methods support
+    /// `steps > 1`).
+    pub steps: usize,
 }
 
 impl TunePlan {
+    /// Single-sweep plan for a method.
+    pub fn new(method: Method) -> TunePlan {
+        TunePlan { method, steps: 1 }
+    }
+
     /// Plan for the paper's outer method with explicit parameters.
     pub fn outer(params: OuterParams) -> TunePlan {
-        TunePlan { method: Method::Outer(params) }
+        TunePlan::new(Method::Outer(params))
     }
 
     /// The paper's default plan for a spec (the tuning baseline).
@@ -41,14 +56,20 @@ impl TunePlan {
         TunePlan::outer(OuterParams::paper_best(spec))
     }
 
+    /// This plan with a time-tile depth of `steps`.
+    pub fn fused(self, steps: usize) -> TunePlan {
+        TunePlan { steps: steps.max(1), ..self }
+    }
+
     /// The wrapped method.
     pub fn to_method(&self) -> Method {
         self.method
     }
 
-    /// Short Table-3-style label: `p-j8`, `o-i4`, `autovec`, ...
+    /// Short Table-3-style label: `p-j8`, `o-i4`, `autovec`, ... with a
+    /// `-tT` suffix for temporally blocked plans (e.g. `p-j8-t4`).
     pub fn label(&self, dims: usize) -> String {
-        match self.method {
+        let mut l = match self.method {
             Method::Outer(p) => {
                 let mut l = p.label(dims);
                 if !p.scheduled {
@@ -60,27 +81,38 @@ impl TunePlan {
             Method::Dlt => "dlt".to_string(),
             Method::Tv => "tv".to_string(),
             Method::Scalar => "scalar".to_string(),
+        };
+        if self.steps > 1 {
+            l.push_str(&format!("-t{}", self.steps));
         }
+        l
     }
 
-    /// Serialize for the tuning database.
+    /// Serialize for the tuning database (`steps` omitted when 1, so
+    /// single-sweep entries keep the pre-temporal-blocking shape).
     pub fn to_json(&self) -> Json {
-        match self.method {
-            Method::Outer(p) => obj(vec![
+        let mut pairs = match self.method {
+            Method::Outer(p) => vec![
                 ("method", Json::Str("outer".into())),
                 ("option", Json::Str(p.option.to_string())),
                 ("ui", Json::Num(p.ui as f64)),
                 ("uk", Json::Num(p.uk as f64)),
                 ("scheduled", Json::Bool(p.scheduled)),
-            ]),
-            Method::AutoVec => obj(vec![("method", Json::Str("autovec".into()))]),
-            Method::Dlt => obj(vec![("method", Json::Str("dlt".into()))]),
-            Method::Tv => obj(vec![("method", Json::Str("tv".into()))]),
-            Method::Scalar => obj(vec![("method", Json::Str("scalar".into()))]),
+            ],
+            Method::AutoVec => vec![("method", Json::Str("autovec".into()))],
+            Method::Dlt => vec![("method", Json::Str("dlt".into()))],
+            Method::Tv => vec![("method", Json::Str("tv".into()))],
+            Method::Scalar => vec![("method", Json::Str("scalar".into()))],
+        };
+        if self.steps > 1 {
+            pairs.push(("steps", Json::Num(self.steps as f64)));
         }
+        obj(pairs)
     }
 
-    /// Deserialize from the tuning database.
+    /// Deserialize from the tuning database (a missing `steps` field
+    /// means 1 — databases written before temporal blocking load
+    /// unchanged).
     pub fn from_json(v: &Json) -> anyhow::Result<TunePlan> {
         let name = v
             .get("method")
@@ -104,7 +136,8 @@ impl TunePlan {
             "scalar" => Method::Scalar,
             other => anyhow::bail!("unknown plan method '{other}'"),
         };
-        Ok(TunePlan { method })
+        let steps = v.get("steps").and_then(Json::as_usize).unwrap_or(1).max(1);
+        Ok(TunePlan { method, steps })
     }
 }
 
@@ -153,8 +186,14 @@ pub fn effective_outer(
     }
 }
 
+/// Time-tile depths the space explores for fusable plans (beyond the
+/// implicit `T = 1`).
+pub const TIME_TILES: &[usize] = &[2, 4];
+
 /// Expand the full (deduplicated) search space for `spec` at domain size
-/// `n` on machine `cfg`. The paper-default plan is always a member.
+/// `n` on machine `cfg`. The paper-default plan is always a member;
+/// every scheduled outer plan also appears temporally blocked at the
+/// [`TIME_TILES`] depths (the `T` axis).
 pub fn enumerate(cfg: &SimConfig, spec: StencilSpec, n: usize) -> anyhow::Result<Vec<TunePlan>> {
     let mut out: Vec<TunePlan> = Vec::new();
     let push = |plan: TunePlan, out: &mut Vec<TunePlan>| {
@@ -185,7 +224,12 @@ pub fn enumerate(cfg: &SimConfig, spec: StencilSpec, n: usize) -> anyhow::Result
         };
         for (ui, uk) in unrolls {
             let p = OuterParams { option, ui, uk, scheduled: true };
-            push(TunePlan::outer(effective_outer(cfg, spec, n, p)?), &mut out);
+            let plan = TunePlan::outer(effective_outer(cfg, spec, n, p)?);
+            push(plan, &mut out);
+            // the temporal-blocking axis: same plan at depth T
+            for &t in TIME_TILES {
+                push(plan.fused(t), &mut out);
+            }
         }
         // the §4.3 naive strawman (no cross-tile sharing)
         let naive = OuterParams { option, ui: 1, uk: 1, scheduled: false };
@@ -194,7 +238,7 @@ pub fn enumerate(cfg: &SimConfig, spec: StencilSpec, n: usize) -> anyhow::Result
     // the baselines: autovec (the speedup reference), DLT (the layout
     // axis), and temporal vectorization
     for m in [Method::AutoVec, Method::Dlt, Method::Tv] {
-        push(TunePlan { method: m }, &mut out);
+        push(TunePlan::new(m), &mut out);
     }
     // the paper default is a scheduled config the grid above covers, but
     // make the invariant explicit in case paper_best ever moves outside it
@@ -227,9 +271,9 @@ mod tests {
                 effective_outer(&cfg, spec, 64, OuterParams::paper_best(spec)).unwrap(),
             );
             assert!(space.contains(&default), "{spec}");
-            assert!(space.contains(&TunePlan { method: Method::AutoVec }));
-            assert!(space.contains(&TunePlan { method: Method::Dlt }));
-            assert!(space.contains(&TunePlan { method: Method::Tv }));
+            assert!(space.contains(&TunePlan::new(Method::AutoVec)));
+            assert!(space.contains(&TunePlan::new(Method::Dlt)));
+            assert!(space.contains(&TunePlan::new(Method::Tv)));
             // deduplicated
             for (i, a) in space.iter().enumerate() {
                 assert!(!space[i + 1..].contains(a), "{spec}: duplicate {a:?}");
@@ -292,6 +336,43 @@ mod tests {
     }
 
     #[test]
+    fn space_explores_the_time_tile_axis() {
+        let cfg = SimConfig::default();
+        let space = enumerate(&cfg, StencilSpec::box2d(1), 64).unwrap();
+        let default = TunePlan::outer(
+            effective_outer(&cfg, StencilSpec::box2d(1), 64, OuterParams::paper_best(StencilSpec::box2d(1)))
+                .unwrap(),
+        );
+        for &t in TIME_TILES {
+            assert!(space.contains(&default.fused(t)), "T={t} variant of the default");
+        }
+        // baselines and the naive strawman stay single-sweep
+        for p in &space {
+            if matches!(p.method, Method::AutoVec | Method::Dlt | Method::Tv) {
+                assert_eq!(p.steps, 1, "{p:?}");
+            }
+            if let Method::Outer(op) = p.method {
+                if !op.scheduled {
+                    assert_eq!(p.steps, 1, "{p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_plans_roundtrip_and_label() {
+        let plan = TunePlan::paper_default(StencilSpec::box2d(1)).fused(4);
+        assert_eq!(plan.label(2), "p-j8-t4");
+        let back = TunePlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        // a plan serialized before temporal blocking (no 'steps' field)
+        // deserializes as single-sweep
+        let old = TunePlan::paper_default(StencilSpec::box2d(1));
+        assert!(!old.to_json().to_string_compact().contains("steps"));
+        assert_eq!(TunePlan::from_json(&old.to_json()).unwrap().steps, 1);
+    }
+
+    #[test]
     fn labels_are_compact() {
         assert_eq!(TunePlan::paper_default(StencilSpec::box2d(1)).label(2), "p-j8");
         let naive = TunePlan::outer(OuterParams {
@@ -301,6 +382,6 @@ mod tests {
             scheduled: false,
         });
         assert_eq!(naive.label(2), "p-j1-ns");
-        assert_eq!(TunePlan { method: Method::Dlt }.label(3), "dlt");
+        assert_eq!(TunePlan::new(Method::Dlt).label(3), "dlt");
     }
 }

@@ -22,7 +22,10 @@
 // before landing.
 #![allow(clippy::style, clippy::complexity, clippy::perf)]
 
-use stencil_matrix::codegen::{run_host, run_host_threads, run_method, Method, OuterParams};
+use stencil_matrix::codegen::{
+    run_host, run_host_fused, run_host_fused_threads, run_host_threads, run_method,
+    run_method_fused, supports_fusion, Method, OuterParams,
+};
 use stencil_matrix::kir::Engine;
 use stencil_matrix::scatter::CoverOption;
 use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilKind, StencilSpec};
@@ -151,6 +154,81 @@ fn compiled_engine_covers_multi_pass_covers() {
     check_case(&cfg, StencilSpec::star2d(2), 32, Method::Outer(orth2d));
     let naive = OuterParams { option: CoverOption::Parallel, ui: 1, uk: 1, scheduled: false };
     check_case(&cfg, StencilSpec::box2d(1), 24, Method::Outer(naive));
+}
+
+/// Fused-equivalence check for one case: the temporally blocked T-step
+/// program verifies against T oracle steps on the simulator, the host
+/// interpreter reproduces the simulated fused run bitwise, and the
+/// compiling engine reproduces the interpreter bitwise at 1–4 threads.
+fn check_fused_case(cfg: &SimConfig, spec: StencilSpec, n: usize, method: Method, t: usize) {
+    let sim = run_method_fused(cfg, spec, n, method, false, t).unwrap();
+    assert!(
+        sim.verified(),
+        "{spec} N={n} {method} T={t}: sim max_err {}",
+        sim.max_err
+    );
+    assert_eq!(sim.steps, t);
+    let host = run_host_fused(cfg, spec, n, method, Engine::Interpret, t).unwrap();
+    assert!(
+        host.verified(),
+        "{spec} N={n} {method} T={t}: host max_err {}",
+        host.max_err
+    );
+    assert_eq!(
+        host.grid.data, sim.grid.data,
+        "{spec} N={n} {method} T={t}: fused host/sim outputs differ bitwise"
+    );
+    for threads in 1..=4usize {
+        let compiled =
+            run_host_fused_threads(cfg, spec, n, method, Engine::Compiled, t, threads).unwrap();
+        assert_eq!(
+            compiled.grid.data, host.grid.data,
+            "{spec} N={n} {method} T={t}: compiled engine diverged at {threads} thread(s)"
+        );
+        assert_eq!(compiled.steps, t);
+    }
+}
+
+#[test]
+fn fused_programs_match_across_backends_2d() {
+    let cfg = SimConfig::default();
+    cases(8, 0x7E51, |rng| {
+        let spec = random_spec(rng, 2);
+        let n = *rng.choose(&[16usize, 24]);
+        let mut method = random_method(rng, spec);
+        if !supports_fusion(method) {
+            method = Method::Scalar; // DLT/TV cannot be temporally blocked
+        }
+        let t = *rng.choose(&[2usize, 3, 4]);
+        check_fused_case(&cfg, spec, n, method, t);
+    });
+}
+
+#[test]
+fn fused_programs_match_across_backends_3d() {
+    let cfg = SimConfig::default();
+    cases(4, 0x7E3D, |rng| {
+        let spec = random_spec(rng, 3);
+        let mut method = random_method(rng, spec);
+        if !supports_fusion(method) {
+            method = Method::Outer(OuterParams::paper_best(spec));
+        }
+        let t = *rng.choose(&[2usize, 4]);
+        check_fused_case(&cfg, spec, 8, method, t);
+    });
+}
+
+#[test]
+fn fused_multi_pass_covers_keep_step_barriers() {
+    // the 3D orthogonal cover's second i-line pass (Phase barrier +
+    // read-modify-write row groups) inside every fused step is the
+    // hardest shape for the fuser: step barriers and phase barriers
+    // interleave
+    let cfg = SimConfig::default();
+    let orth3d = OuterParams { option: CoverOption::Orthogonal, ui: 4, uk: 1, scheduled: true };
+    check_fused_case(&cfg, StencilSpec::star3d(2), 8, Method::Outer(orth3d), 3);
+    let orth2d = OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 4, scheduled: true };
+    check_fused_case(&cfg, StencilSpec::star2d(2), 16, Method::Outer(orth2d), 4);
 }
 
 #[test]

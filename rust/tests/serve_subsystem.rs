@@ -182,6 +182,54 @@ fn outer_kernel_request_serves_the_kir_host_program() {
 }
 
 #[test]
+fn fused_requests_serve_bitwise_results_with_fewer_exchanges() {
+    // two identically configured servers, one temporally blocked at T=4:
+    // same grids bit for bit, but the fused one exchanges halos only
+    // every T steps — observable per request and in the metrics JSON
+    let spec = StencilSpec::star2d(2);
+    let base = ServeConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 8,
+        plan_cache: 16,
+        ..ServeConfig::default()
+    };
+    let plain = StencilServer::new(base.clone());
+    let fused = StencilServer::new(ServeConfig { fuse_steps: 4, ..base });
+    for (method, bitwise) in [(KernelMethod::Taps, true), (KernelMethod::Outer, false)] {
+        let mut r = req(spec, 24, 8, 11);
+        r.method = method;
+        let tp = plain.submit(r.clone()).unwrap();
+        plain.drain();
+        let tf = fused.submit(r).unwrap();
+        fused.drain();
+        let rp = tp.wait().unwrap();
+        let rf = tf.wait().unwrap();
+        assert_eq!(rp.grid, rf.grid, "{method}: fused serving diverged bitwise");
+        if bitwise {
+            assert_eq!(rf.report.max_err, Some(0.0));
+        } else {
+            assert!(rf.report.max_err.unwrap() < 1e-9);
+        }
+        assert_eq!(rp.report.fused_steps, 1);
+        assert_eq!(rp.report.halo_exchanges, 7);
+        assert!(rf.report.fused_steps > 1);
+        assert_eq!(
+            rf.report.halo_exchanges,
+            8usize.div_ceil(rf.report.fused_steps) - 1,
+            "{method}"
+        );
+    }
+    let m = Json::parse(&fused.metrics_json().to_string_compact()).unwrap();
+    let svc = m.get("service").unwrap();
+    let he = svc.get("halo_exchanges").unwrap();
+    assert_eq!(he.get("count").unwrap().as_usize(), Some(2));
+    assert!(he.get("p99").unwrap().as_f64().unwrap() <= 3.0);
+    let fs = svc.get("fused_steps").unwrap();
+    assert!(fs.get("p50").unwrap().as_f64().unwrap() > 1.0);
+}
+
+#[test]
 fn kernel_wall_clock_is_recorded_with_percentiles() {
     let server = StencilServer::new(ServeConfig {
         workers: 2,

@@ -162,6 +162,69 @@ fn outer_host_kernel_sharded_is_bitwise_unsharded_and_close_to_oracle() {
     }
 }
 
+/// Temporal-blocking property: for random specs, shapes, step counts,
+/// shard counts, worker counts and depths T, the fused evolution is
+/// **bitwise** equal to the unfused evolution of the same kernel (and,
+/// for the oracle-order kernels, to the scalar oracle), sharded or not.
+fn check_fused_case(dims: usize, seed: u64, rounds: usize) {
+    cases(rounds, seed, |rng| {
+        let spec = random_spec(rng, dims);
+        let lo = 2 * spec.order + 2;
+        let extent = if dims == 2 { 24 } else { 8 };
+        let shape: Vec<usize> = (0..dims).map(|_| rng.range(lo, lo + extent)).collect();
+        let steps = rng.range(1, 8);
+        let shards = rng.range(1, 6);
+        let workers = rng.range(1, 4);
+        let fuse = rng.range(2, 4);
+        let method = *rng.choose(&[
+            KernelMethod::Oracle,
+            KernelMethod::Taps,
+            KernelMethod::Outer,
+        ]);
+        let grid = DenseGrid::verification_input(&shape, rng.next_u64());
+        let ev = ShardedEvolver::new(workers);
+        let (unfused, _, fr1) = ev.evolve_fused(spec, &grid, steps, shards, method, 1).unwrap();
+        let (fused, shards_used, fr) =
+            ev.evolve_fused(spec, &grid, steps, shards, method, fuse).unwrap();
+        let ctx = format!(
+            "{spec} shape={shape:?} steps={steps} shards={shards} workers={workers} \
+             fuse={fuse} {method}"
+        );
+        assert_eq!(fused, unfused, "{ctx}: fused diverged bitwise from unfused");
+        assert_eq!(fr1.fuse_steps, 1);
+        assert!(fr.fuse_steps >= 1 && fr.fuse_steps <= fuse, "{ctx}");
+        if shards_used > 1 {
+            assert_eq!(
+                fr.halo_exchanges,
+                steps.div_ceil(fr.fuse_steps) - 1,
+                "{ctx}: exchanges must drop from steps-1 to ceil(steps/T)-1"
+            );
+        } else {
+            assert_eq!(fr.halo_exchanges, 0, "{ctx}");
+        }
+        // fused sharded == fused unsharded, bit for bit
+        let (single, _, _) = ShardedEvolver::new(1)
+            .evolve_fused(spec, &grid, steps, 1, method, fuse)
+            .unwrap();
+        assert_eq!(fused, single, "{ctx}: sharded vs unsharded fused");
+        // oracle-accumulation-order kernels stay bitwise vs the oracle
+        if method != KernelMethod::Outer {
+            let want = reference::evolve(&CoeffTensor::paper_default(spec), &grid, steps);
+            assert_eq!(fused, want, "{ctx}: fused vs scalar oracle");
+        }
+    });
+}
+
+#[test]
+fn fused_sharded_equals_unfused_bitwise_2d() {
+    check_fused_case(2, 0xF05E, 10);
+}
+
+#[test]
+fn fused_sharded_equals_unfused_bitwise_3d() {
+    check_fused_case(3, 0xF03D, 5);
+}
+
 #[test]
 fn many_steps_keep_halos_current() {
     // Longer evolutions amplify any stale-ghost bug: a single missed

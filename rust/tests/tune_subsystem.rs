@@ -37,6 +37,29 @@ fn temp_path(name: &str) -> PathBuf {
 }
 
 #[test]
+fn time_tile_axis_is_searched_and_db_compatible() {
+    let cfg = SimConfig::default();
+    // the exhaustive space includes temporally blocked candidates, all
+    // sim-measured and oracle-verified like every other plan
+    let out = tune(&cfg, StencilSpec::star2d(1), 16, 1, Strategy::Exhaustive).unwrap();
+    let fused: Vec<_> = out.measurements.iter().filter(|m| m.plan.steps > 1).collect();
+    assert!(!fused.is_empty(), "time-tile axis missing from the space");
+    for m in &fused {
+        assert!(m.max_err < 1e-9, "{}: unverified", m.plan.label(2));
+    }
+    // whatever wins, its depth survives the database round-trip
+    let path = temp_path("fused");
+    let mut db = TuneDb::new();
+    db.record(&out);
+    db.save(&path).unwrap();
+    let back = TuneDb::load(&path).unwrap();
+    let e = back.best_for(out.spec, &out.fingerprint).unwrap();
+    assert_eq!(e.plan, out.best().plan);
+    assert_eq!(e.plan.steps, out.best().plan.steps);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn tuned_plan_never_loses_to_paper_default_2d_star() {
     let cfg = SimConfig::default();
     let out = tune(&cfg, StencilSpec::star2d(2), 16, 8, Strategy::CostGuided).unwrap();
