@@ -1,8 +1,9 @@
-//! Machine-readable perf snapshot (`BENCH_5.json`): per-method simulated
+//! Machine-readable perf snapshot (`BENCH_6.json`): per-method simulated
 //! cycles *and* host wall-clock — compiled engine vs interpreter — for
 //! the Table-3 stencil rows at one representative size per
 //! dimensionality, plus a fused-vs-unfused serving measurement per row
-//! (temporal blocking at depth [`FUSE_STEPS`]).
+//! (temporal blocking at depth [`FUSE_STEPS`]) with a traced per-phase
+//! profile (embed / compute / freeze / exchange / extract seconds).
 //!
 //! This is the bench-trajectory artifact: small enough to regenerate on
 //! every CI run (`stencil-matrix bench-json`), complete enough to detect
@@ -25,8 +26,9 @@ use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 use std::time::Instant;
 
-/// Snapshot schema version (4: fused-vs-unfused serve columns).
-pub const SNAPSHOT_VERSION: u64 = 4;
+/// Snapshot schema version (5: per-phase profile on the fused serve
+/// cell).
+pub const SNAPSHOT_VERSION: u64 = 5;
 
 /// Time-tile depth of the snapshot's fused serving measurement.
 pub const FUSE_STEPS: usize = 4;
@@ -119,6 +121,13 @@ fn fused_serve(spec: crate::stencil::StencilSpec, n: usize) -> anyhow::Result<Js
         fused_g == unfused_g,
         "{spec}: fused serving diverged bitwise from unfused"
     );
+    // one traced fused run *after* the timed ones: the spans feed the
+    // per-phase profile without perturbing the advisory wall-clocks
+    let (traced, spans) = crate::obs::span::trace(|| {
+        ev.evolve_fused(spec, &grid, FUSE_TOTAL_STEPS, shards, method, FUSE_STEPS)
+    });
+    traced?;
+    let profile = crate::obs::profile::aggregate(&spans);
     let point_steps = (n.pow(spec.dims as u32) * FUSE_TOTAL_STEPS) as f64;
     Ok(obj(vec![
         ("steps", Json::Num(FUSE_TOTAL_STEPS as f64)),
@@ -130,6 +139,7 @@ fn fused_serve(spec: crate::stencil::StencilSpec, n: usize) -> anyhow::Result<Js
         ("unfused_mpts_per_s", Json::Num(point_steps / unfused_s.max(1e-12) / 1e6)),
         ("fused_mpts_per_s", Json::Num(point_steps / fused_s.max(1e-12) / 1e6)),
         ("fused_speedup", Json::Num(unfused_s / fused_s.max(1e-12))),
+        ("profile", profile.to_json()),
     ]))
 }
 
@@ -233,7 +243,7 @@ mod tests {
     fn snapshot_covers_every_table3_row() {
         // tiny sizes keep this test fast; CI regenerates at 64/16
         let j = run(&SimConfig::default(), 16, 8).unwrap();
-        assert_eq!(j.get("version").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(5));
         let results = j.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
         for r in results {
@@ -266,6 +276,10 @@ mod tests {
             assert_eq!(fused_x, 8usize.div_ceil(t) - 1);
             assert!(fs.get("fused_speedup").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(fs.get("fused_mpts_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+            // the traced per-phase profile rides on the fused serve cell
+            let prof = crate::obs::PhaseProfile::from_json(fs.get("profile").unwrap());
+            assert!(prof.spans > 0, "traced run recorded phase spans");
+            assert!(prof.total() > 0.0);
         }
         // round-trips through the parser
         let rt = Json::parse(&j.to_string_compact()).unwrap();

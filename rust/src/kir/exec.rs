@@ -28,8 +28,9 @@
 //! memory image. `rust/tests/kir_equivalence.rs` enforces
 //! Compiled == Interpret across methods, specs, sizes and 1–4 threads.
 
-use super::fuse::{fuse, Section};
+use super::fuse::{fuse, Section, SectionMeta};
 use super::ir::Op;
+use crate::obs::span::{span, span_arg};
 use crate::sim::SimConfig;
 use std::fmt;
 use std::str::FromStr;
@@ -117,6 +118,9 @@ pub struct ExecPlan {
     n_vregs: usize,
     n_mregs: usize,
     sections: Vec<PlanSection>,
+    /// Per-section phase/step labels (parallel to `sections`), carried
+    /// from the fuser so spans can name freeze phases and fused steps.
+    labels: Vec<SectionMeta>,
     /// Gather index tables (absolute element addresses), deduplicated.
     tables: Vec<Vec<u32>>,
     /// One past the highest element address any op touches.
@@ -155,6 +159,7 @@ impl ExecPlan {
             n_vregs,
             n_mregs,
             sections,
+            labels: fused.labels,
             tables: b.tables,
             mem_hwm: b.mem_hwm,
             ops: b.ops,
@@ -202,30 +207,46 @@ impl ExecPlan {
         let threads = self.effective_threads(threads);
         let shared = SharedMem { ptr: mem.as_mut_ptr(), len: mem.len() };
         let mut main_state = ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
-        for section in &self.sections {
+        for (si, section) in self.sections.iter().enumerate() {
+            let meta = self.labels.get(si).copied().unwrap_or_default();
+            let name =
+                if meta.phase == Some("freeze") { "kir.freeze" } else { "kir.compute" };
+            let _section_span = match meta.step {
+                Some((t, _)) => span_arg(name, "kir", ("step", t as f64)),
+                None => span(name, "kir"),
+            };
             match section {
                 PlanSection::Seq(block) => {
                     self.run_block(block, &shared, &mut main_state);
                 }
                 PlanSection::Par(blocks) => {
                     if threads <= 1 || blocks.len() <= 1 {
-                        for block in blocks {
+                        for (bi, block) in blocks.iter().enumerate() {
+                            let _g = span_arg("kir.row_group", "kir", ("block", bi as f64));
                             self.run_block(block, &shared, &mut main_state);
                         }
                     } else {
                         let next = AtomicUsize::new(0);
                         let workers = threads.min(blocks.len());
                         std::thread::scope(|scope| {
-                            for _ in 0..workers {
-                                scope.spawn(|| {
-                                    let mut state =
-                                        ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
-                                    loop {
-                                        let i = next.fetch_add(1, Ordering::Relaxed);
-                                        let Some(block) = blocks.get(i) else { break };
-                                        self.run_block(block, &shared, &mut state);
-                                    }
-                                });
+                            for w in 0..workers {
+                                std::thread::Builder::new()
+                                    .name(format!("kir-worker-{w}"))
+                                    .spawn_scoped(scope, || {
+                                        let mut state =
+                                            ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
+                                        loop {
+                                            let i = next.fetch_add(1, Ordering::Relaxed);
+                                            let Some(block) = blocks.get(i) else { break };
+                                            let _g = span_arg(
+                                                "kir.row_group",
+                                                "kir",
+                                                ("block", i as f64),
+                                            );
+                                            self.run_block(block, &shared, &mut state);
+                                        }
+                                    })
+                                    .expect("spawn kir worker thread");
                             }
                         });
                     }

@@ -45,11 +45,27 @@ pub enum Section {
     Seq(Vec<Op>),
 }
 
+/// Structural provenance of one section, captured from the `Phase` /
+/// `Step` barrier markers while the loop nest was reconstructed. Purely
+/// observational — execution ignores it, but the engine's tracing layer
+/// uses it to attribute a section's wall-clock to a named phase
+/// (`freeze`) and fused step without re-scanning the op stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SectionMeta {
+    /// Name of the enclosing `Marker::Phase`, if any (e.g. `"freeze"`).
+    pub phase: Option<&'static str>,
+    /// Enclosing fused step as `(t, of)`, if the program is temporally
+    /// blocked.
+    pub step: Option<(usize, usize)>,
+}
+
 /// A program reorganized into barrier-separated sections.
 #[derive(Debug, Clone)]
 pub struct FusedProgram {
     /// Sections in program order (barriers between them).
     pub sections: Vec<Section>,
+    /// Per-section provenance, parallel to `sections` (same length).
+    pub labels: Vec<SectionMeta>,
 }
 
 impl FusedProgram {
@@ -71,7 +87,10 @@ impl FusedProgram {
 /// generators), with loose computational ops between groups, or failing
 /// the register check collapse to one `Seq` section.
 pub fn fuse(ops: &[Op], vlen: usize) -> FusedProgram {
-    let whole_seq = || FusedProgram { sections: vec![Section::Seq(ops.to_vec())] };
+    let whole_seq = || FusedProgram {
+        sections: vec![Section::Seq(ops.to_vec())],
+        labels: vec![SectionMeta::default()],
+    };
     // row masks are u64 bitmaps; wider vectors fall back to the
     // interpreter-order section (none of the supported configs hit this)
     if vlen == 0 || vlen > 64 {
@@ -84,7 +103,7 @@ pub fn fuse(ops: &[Op], vlen: usize) -> FusedProgram {
         return whole_seq();
     }
     // check 1: every block everywhere must be register-self-contained
-    for run in &candidates {
+    for (run, _) in &candidates {
         for block in run {
             if !self_contained(block, vlen) {
                 return whole_seq();
@@ -92,28 +111,37 @@ pub fn fuse(ops: &[Op], vlen: usize) -> FusedProgram {
         }
     }
     // check 2: per candidate run, memory disjointness decides Par vs Seq
-    let sections = candidates
-        .into_iter()
-        .map(|run| {
-            if blocks_memory_disjoint(&run, vlen) {
-                Section::Par(run)
-            } else {
-                Section::Seq(run.concat())
-            }
-        })
-        .collect();
-    FusedProgram { sections }
+    let mut sections = Vec::with_capacity(candidates.len());
+    let mut labels = Vec::with_capacity(candidates.len());
+    for (run, meta) in candidates {
+        sections.push(if blocks_memory_disjoint(&run, vlen) {
+            Section::Par(run)
+        } else {
+            Section::Seq(run.concat())
+        });
+        labels.push(meta);
+    }
+    FusedProgram { sections, labels }
 }
 
 /// Split a marker-structured stream into runs of top-level tile-group
-/// blocks, with `Phase` markers acting as barriers between runs. Returns
-/// `None` when the stream has no groups at all or carries computational
-/// ops outside any group (those programs run as one `Seq`).
-fn split_into_group_runs(ops: &[Op]) -> Option<Vec<Vec<Vec<Op>>>> {
-    let mut runs: Vec<Vec<Vec<Op>>> = Vec::new();
+/// blocks, with `Phase` markers acting as barriers between runs; each
+/// run is labeled with the phase/step state it was collected under.
+/// Returns `None` when the stream has no groups at all or carries
+/// computational ops outside any group (those programs run as one
+/// `Seq`).
+fn split_into_group_runs(ops: &[Op]) -> Option<Vec<(Vec<Vec<Op>>, SectionMeta)>> {
+    let mut runs: Vec<(Vec<Vec<Op>>, SectionMeta)> = Vec::new();
     let mut current: Vec<Vec<Op>> = Vec::new();
+    let mut meta = SectionMeta::default();
     let mut saw_group = false;
     let mut i = 0;
+    let close =
+        |current: &mut Vec<Vec<Op>>, runs: &mut Vec<(Vec<Vec<Op>>, SectionMeta)>, meta: SectionMeta| {
+            if !current.is_empty() {
+                runs.push((std::mem::take(current), meta));
+            }
+        };
     while i < ops.len() {
         match ops[i] {
             Op::Begin(Marker::TileGroup { .. }) => {
@@ -123,23 +151,33 @@ fn split_into_group_runs(ops: &[Op]) -> Option<Vec<Vec<Vec<Op>>>> {
                 i = end + 1;
             }
             // phase and fused-step boundaries are barriers: close the
-            // current run (step t+1 reads what step t wrote)
-            Op::Begin(Marker::Phase(_))
-            | Op::End(Marker::Phase(_))
-            | Op::Begin(Marker::Step { .. })
-            | Op::End(Marker::Step { .. }) => {
-                if !current.is_empty() {
-                    runs.push(std::mem::take(&mut current));
-                }
+            // current run (step t+1 reads what step t wrote), then track
+            // the new phase/step state for the next run's label
+            Op::Begin(Marker::Phase(name)) => {
+                close(&mut current, &mut runs, meta);
+                meta.phase = Some(name);
+                i += 1;
+            }
+            Op::End(Marker::Phase(_)) => {
+                close(&mut current, &mut runs, meta);
+                meta.phase = None;
+                i += 1;
+            }
+            Op::Begin(Marker::Step { t, of }) => {
+                close(&mut current, &mut runs, meta);
+                meta.step = Some((t, of));
+                i += 1;
+            }
+            Op::End(Marker::Step { .. }) => {
+                close(&mut current, &mut runs, meta);
+                meta.step = None;
                 i += 1;
             }
             // a computational op outside any group: program order only
             _ => return None,
         }
     }
-    if !current.is_empty() {
-        runs.push(current);
-    }
+    close(&mut current, &mut runs, meta);
     saw_group.then_some(runs)
 }
 
@@ -394,6 +432,28 @@ mod tests {
         assert!(matches!(f.sections[0], Section::Par(ref b) if b.len() == 1));
         assert!(matches!(f.sections[1], Section::Par(ref b) if b.len() == 1));
         assert_eq!(f.par_blocks(), 2);
+    }
+
+    #[test]
+    fn section_labels_carry_phase_and_step() {
+        let mut ops = vec![Op::Begin(Marker::Step { t: 0, of: 2 })];
+        ops.extend(group(0, tile_body(1000)));
+        ops.push(Op::Begin(Marker::Phase("freeze")));
+        ops.extend(group(8, tile_body(2000)));
+        ops.push(Op::End(Marker::Phase("freeze")));
+        ops.push(Op::End(Marker::Step { t: 0, of: 2 }));
+        ops.push(Op::Begin(Marker::Step { t: 1, of: 2 }));
+        ops.extend(group(0, tile_body(3000)));
+        ops.push(Op::End(Marker::Step { t: 1, of: 2 }));
+        let f = fuse(&ops, 8);
+        assert_eq!(f.sections.len(), 3);
+        assert_eq!(f.labels.len(), f.sections.len());
+        assert_eq!(f.labels[0], SectionMeta { phase: None, step: Some((0, 2)) });
+        assert_eq!(f.labels[1], SectionMeta { phase: Some("freeze"), step: Some((0, 2)) });
+        assert_eq!(f.labels[2], SectionMeta { phase: None, step: Some((1, 2)) });
+        // degraded programs carry one default label
+        let d = fuse(&[Op::Zero { dst: VReg(0) }], 8);
+        assert_eq!(d.labels, vec![SectionMeta::default()]);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::ir::{Kernel, Marker, Op, VReg};
 use super::mem::PingPong;
 use crate::codegen::common::{CoeffTable, Layout};
 use crate::codegen::{outer, scalar, vectorize, Method};
+use crate::obs::span::span;
 use crate::scatter::build_cover;
 use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
@@ -255,14 +256,27 @@ impl HostKernel {
         match engine {
             Engine::Interpret => {
                 let mut m = self.template.clone();
-                self.embed(&mut m.mem, a);
-                m.run(&self.ops);
+                {
+                    let _e = span("kernel.embed", "kernel");
+                    self.embed(&mut m.mem, a);
+                }
+                {
+                    // the interpreter runs the whole program as one
+                    // compute region (no per-section plan to attribute)
+                    let _c = span("kir.compute", "kir");
+                    m.run(&self.ops);
+                }
+                let _x = span("kernel.extract", "kernel");
                 self.extract(&m.mem, a)
             }
             Engine::Compiled => {
                 let mut mem = self.template.mem.clone();
-                self.embed(&mut mem, a);
+                {
+                    let _e = span("kernel.embed", "kernel");
+                    self.embed(&mut mem, a);
+                }
                 self.plan.run(&mut mem, threads);
+                let _x = span("kernel.extract", "kernel");
                 self.extract(&mem, a)
             }
         }

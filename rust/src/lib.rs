@@ -28,6 +28,12 @@
 //!   *compiling* engine (fused loop nests, precomputed gather tables,
 //!   independent row groups threaded across cores, bitwise equal to the
 //!   interpreter at any thread count).
+//! - [`obs`] — the observability layer: low-overhead structured spans
+//!   (a compile-away no-op when disabled) threaded through serving,
+//!   kernels, the execution engine and the tuner; Chrome trace-event
+//!   export; Prometheus-style metrics exposition; and per-phase
+//!   profiles (embed / compute / freeze / exchange / extract) feeding
+//!   the bench snapshot.
 //! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executing them from Rust; Python never runs
 //!   at request time (gated behind the `pjrt` cargo feature; a stub
@@ -59,6 +65,7 @@ pub mod bench_harness;
 pub mod codegen;
 pub mod coordinator;
 pub mod kir;
+pub mod obs;
 pub mod runtime;
 pub mod scatter;
 pub mod serve;

@@ -10,15 +10,16 @@
 //!                            [--budget 12] [--strategy guided] \
 //!                            [--db target/tune/tune_db.json] [--out target/tune]
 //! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-//! stencil-matrix bench-json  [--out BENCH_5.json] [--size2d 64] [--size3d 16]
+//! stencil-matrix bench-json  [--out BENCH_6.json] [--size2d 64] [--size3d 16]
 //! stencil-matrix bench-compare [--baseline bench/baseline.json] \
-//!                            [--current BENCH_5.json] [--self-test]
+//!                            [--current BENCH_6.json] [--self-test]
 //! stencil-matrix engine-bench --stencil 2d-star --order 2 --size 512
 //! stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 \
 //!                            --method outer [--limit 120]
 //! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
-//!                            --size 256 --steps 4 --requests 32 \
+//!                            --size 256 --steps 8 --requests 32 \
 //!                            [--engine compiled|interpret] [--fuse-steps 4] \
+//!                            [--trace-out trace.json] [--metrics-out serve.prom] \
 //!                            [--kernel tuned --tune-db target/tune/tune_db.json]
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
@@ -42,6 +43,7 @@ use stencil_matrix::codegen::{
 };
 use stencil_matrix::coordinator::{run_experiment, EvolutionService, Experiment};
 use stencil_matrix::kir::Engine;
+use stencil_matrix::obs;
 use stencil_matrix::scatter::{analysis, build_cover, CoverOption};
 use stencil_matrix::serve::{
     KernelMethod, PlanCache, ServeConfig, ShardRequest, ShardedEvolver, StencilServer, WorkerPool,
@@ -303,7 +305,7 @@ fn run() -> anyhow::Result<()> {
             run_experiment(&cfg, which)?;
         }
         "bench-json" => {
-            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_5.json"));
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_6.json"));
             let n2d = args.usize_or("size2d", 64)?;
             let n3d = args.usize_or("size3d", 16)?;
             let snap = stencil_matrix::bench_harness::snapshot::run(&cfg, n2d, n3d)?;
@@ -375,7 +377,7 @@ fn run() -> anyhow::Result<()> {
 }
 
 /// `bench-compare`: the perf-regression gate — compare a fresh
-/// `BENCH_5.json` against `bench/baseline.json` and fail on >2% sim-cycle
+/// `BENCH_6.json` against `bench/baseline.json` and fail on >2% sim-cycle
 /// drift (`--self-test` proves the gate trips on an injected regression).
 fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::bench_harness::compare;
@@ -384,7 +386,7 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
         Some(s) => s.parse::<f64>()? / 100.0,
         None => compare::DEFAULT_TOLERANCE,
     };
-    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_5.json"));
+    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_6.json"));
     let current = Json::parse(&std::fs::read_to_string(&current_path)?)?;
     if args.has("self-test") {
         let cmp = compare::self_test(&current, tolerance)?;
@@ -531,9 +533,42 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
         ));
     }
     print!("{summary}");
+
+    // one extra traced run per configuration, after all timing, so span
+    // recording can never perturb the measured numbers above
+    let profile_of = |engine: Engine, fuse_steps: usize, t: usize| {
+        let (run, spans) = obs::span::trace(|| {
+            run_host_fused_threads(cfg, spec, n, method, engine, fuse_steps, t)
+        });
+        run.map(|_| (obs::profile::aggregate(&spans), spans))
+    };
+    let (interp_prof, _) = profile_of(Engine::Interpret, 1, 1)?;
+    let (compiled_prof, compiled_spans) = profile_of(Engine::Compiled, 1, threads)?;
+    let mut prof_rows = vec![
+        ("interpret".to_string(), interp_prof),
+        (format!("compiled x{}", compiled.threads), compiled_prof),
+    ];
+    let mut trace_spans = compiled_spans;
+    if let Some((_, fc)) = &fused {
+        let (fused_prof, fused_spans) = profile_of(Engine::Compiled, fuse, threads)?;
+        prof_rows.push((format!("compiled-fused T={} x{}", fuse, fc.threads), fused_prof));
+        trace_spans = fused_spans;
+    }
+    let prof_md = format!(
+        "\n## per-phase breakdown (one traced run per row)\n\n{}",
+        obs::profile::to_markdown(&prof_rows)
+    );
+    print!("{prof_md}");
+    if let Some(path) = args.get("trace-out") {
+        let doc = obs::chrome::to_chrome_json(&trace_spans);
+        obs::chrome::validate(&doc)?;
+        std::fs::write(path, doc.to_string_compact())?;
+        println!("trace → {path}");
+    }
+
     if let Some(out) = args.get("out") {
         let mut text = format!(
-            "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}{summary}"
+            "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}{summary}{prof_md}"
         );
         text.push_str(&format!(
             "\ninterpreter: {:.4}s · compiled: {:.4}s · host ops: {}\n",
@@ -624,17 +659,19 @@ fn serve_artifact(args: &Args) -> anyhow::Result<()> {
 fn serve_native(args: &Args) -> anyhow::Result<()> {
     let spec = parse_spec(args)?;
     let n = args.usize_or("size", 64)?;
-    let steps = args.usize_or("steps", 4)?;
+    let steps = args.usize_or("steps", 8)?;
     let workers = args.usize_or("workers", default_workers())?;
     let shards = args.usize_or("shards", 0)?; // 0 = one per worker
     let queue_depth = args.usize_or("queue-depth", 32)?.max(1);
     let requests = args.usize_or("requests", 16)?;
     let clients = args.usize_or("clients", 4)?.max(1);
     let distinct = args.usize_or("distinct", 4)?.max(1);
-    let method: KernelMethod = args.get("kernel").unwrap_or("taps").parse()?;
+    let method: KernelMethod = args.get("kernel").unwrap_or("outer").parse()?;
     let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
     let fuse_steps = args.usize_or("fuse-steps", 1)?.max(1);
     let verify = !args.has("no-verify");
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
 
     let serve_cfg =
         ServeConfig { workers, shards, queue_depth, plan_cache: 32, engine, fuse_steps };
@@ -658,46 +695,77 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
         server.effective_shards()
     );
 
-    let mut handles = Vec::new();
-    for c in 0..clients {
-        let server = Arc::clone(&server);
-        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
-            let mut served = 0usize;
-            let mut i = c;
-            while i < requests {
-                let req = ShardRequest {
-                    spec,
-                    n,
-                    steps,
-                    seed: (i % distinct) as u64,
-                    method,
-                    verify,
-                };
-                let resp = server.submit(req)?.wait()?;
-                if verify {
-                    // the server enforces the kernel's bar (bitwise for
-                    // oracle/taps, 1e-9 for the KIR host kernels); here we
-                    // only insist verification actually ran and passed it
-                    anyhow::ensure!(
-                        matches!(resp.report.max_err, Some(e) if e < 1e-9),
-                        "request {i} failed verification (max_err {:?})",
-                        resp.report.max_err
-                    );
+    let run_fleet = || -> anyhow::Result<usize> {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+                let mut served = 0usize;
+                let mut i = c;
+                while i < requests {
+                    let req = ShardRequest {
+                        spec,
+                        n,
+                        steps,
+                        seed: (i % distinct) as u64,
+                        method,
+                        verify,
+                    };
+                    let resp = server.submit(req)?.wait()?;
+                    if verify {
+                        // the server enforces the kernel's bar (bitwise for
+                        // oracle/taps, 1e-9 for the KIR host kernels); here we
+                        // only insist verification actually ran and passed it
+                        anyhow::ensure!(
+                            matches!(resp.report.max_err, Some(e) if e < 1e-9),
+                            "request {i} failed verification (max_err {:?})",
+                            resp.report.max_err
+                        );
+                    }
+                    served += 1;
+                    i += clients;
                 }
-                served += 1;
-                i += clients;
-            }
-            Ok(served)
-        }));
+                Ok(served)
+            }));
+        }
+        let mut served = 0usize;
+        for h in handles {
+            served += h
+                .join()
+                .map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+        }
+        // shutting down inside the (possibly traced) region joins the
+        // dispatcher thread, so every span guard has dropped before the
+        // trace session drains and the exported document stays balanced
+        server.shutdown();
+        Ok(served)
+    };
+    let (fleet, spans) = if trace_out.is_some() {
+        obs::span::trace(run_fleet)
+    } else {
+        (run_fleet(), Vec::new())
+    };
+    let served = fleet?;
+    let metrics = server.metrics_json();
+    println!("{}", metrics.to_string_compact());
+    if let Some(path) = &trace_out {
+        let doc = obs::chrome::to_chrome_json(&spans);
+        let counts = obs::chrome::validate(&doc)?;
+        std::fs::write(path, doc.to_string_compact())?;
+        let pairs: usize = counts.values().sum();
+        println!(
+            "trace: {pairs} span(s) across {} name(s) on {} thread track(s) → {}",
+            counts.len(),
+            spans.len(),
+            path.display()
+        );
+        let prof = obs::profile::aggregate(&spans);
+        print!("{}", obs::profile::to_markdown(&[(format!("serve {method}"), prof)]));
     }
-    let mut served = 0usize;
-    for h in handles {
-        served += h
-            .join()
-            .map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, obs::prom::render(&metrics, "stencil_serve"))?;
+        println!("metrics exposition → {}", path.display());
     }
-    server.shutdown();
-    println!("{}", server.metrics_json().to_string_compact());
     if verify {
         println!("served {served}/{requests} request(s), all verified against the scalar oracle");
     } else {
@@ -740,6 +808,7 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
     let mut table = Table::new(&["workers", "shards", "best", "Mpts/s", "speedup"]);
     let mut rows = Vec::new();
     let mut speedups = Vec::new();
+    let mut prof_rows: Vec<(String, obs::PhaseProfile)> = Vec::new();
     let mut base_secs = None;
     for &w in &workers_list {
         let mut cache = PlanCache::new(32);
@@ -763,6 +832,12 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
             format!("{:.1}", point_steps / best / 1e6),
             format!("{speedup:.2}x"),
         ]);
+        // one traced run after timing: spans feed the per-phase table
+        // without touching the measured wall-clocks above
+        let (traced, spans) =
+            obs::span::trace(|| ev.evolve_fused(spec, &grid, steps, shards, method, fuse));
+        traced?;
+        prof_rows.push((format!("w={w} s={shards}"), obs::profile::aggregate(&spans)));
         rows.push(obj(vec![
             ("workers", Json::Num(w as f64)),
             ("shards", Json::Num(shards as f64)),
@@ -772,6 +847,8 @@ fn shard_bench(args: &Args) -> anyhow::Result<()> {
         ]));
     }
     print!("{}", table.to_markdown());
+    println!("\n## per-phase breakdown (one traced run per row)\n");
+    print!("{}", obs::profile::to_markdown(&prof_rows));
     println!("{}", Json::Arr(rows).to_string_compact());
 
     let peak = speedups.iter().copied().fold(1.0f64, f64::max);
@@ -882,25 +959,27 @@ Reports land in target/bench-reports/ as markdown + JSON (default: all).",
     ),
     (
         "bench-json",
-        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_5.json)
+        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_6.json)
 
 Per-method simulated cycles, speedups, and KIR-host wall-clock on both
 engines (compiled + interpreter, with the engine speedup) for scalar,
 autovec, dlt, tv and outer on every Table-3 stencil row at one size per
 dimensionality, plus a fused-vs-unfused sharded-serving measurement per
-row (temporal blocking at T=4, bitwise-checked). Sim cycles and op
-counts are deterministic — they are what bench-compare gates against
-bench/baseline.json; wall-clock (including the fused columns) is
-advisory.
+row (temporal blocking at T=4, bitwise-checked). Each fused-serve row
+also carries a traced per-phase profile (embed/compute/freeze/exchange/
+extract seconds) so bench-compare can say which phase moved. Sim cycles
+and op counts are deterministic — they are what bench-compare gates
+against bench/baseline.json; wall-clock (including the fused columns
+and the profiles) is advisory.
 
 USAGE:
-  stencil-matrix bench-json [--out BENCH_5.json] [--size2d 64] [--size3d 16]",
+  stencil-matrix bench-json [--out BENCH_6.json] [--size2d 64] [--size3d 16]",
     ),
     (
         "bench-compare",
         "stencil-matrix bench-compare — the CI perf-regression gate
 
-Compares a fresh BENCH_5.json against the checked-in baseline and exits
+Compares a fresh BENCH_6.json against the checked-in baseline and exits
 non-zero when any method's simulated cycles regressed beyond the
 tolerance (default 2%). Host wall-clock is advisory and never gated.
 A baseline marked \"pending\": true makes the gate advisory until a CI
@@ -908,7 +987,7 @@ snapshot is promoted (see CONTRIBUTING.md).
 
 USAGE:
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                               [--current BENCH_5.json] [--tolerance-pct 2]
+                               [--current BENCH_6.json] [--tolerance-pct 2]
                                [--out bench_compare.md]
                                [--write-baseline] [--self-test]
 
@@ -923,17 +1002,21 @@ Runs one method on the KIR host backend with the op-by-op interpreter
 and the compiling engine (1 thread and --threads), verifies every run
 against the oracle, checks the outputs are bitwise identical, and
 reports wall-clock + Mpoints/s + speedup (what CI appends to the job
-summary).
+summary). After timing, one traced run per configuration feeds a
+per-phase breakdown table (embed/compute/freeze/exchange/extract), so
+spans never perturb the measured numbers.
 
 USAGE:
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
                               [--method outer] [--threads 0] [--reps 3]
                               [--fuse-steps 1] [--out engine_bench.md]
-                              [--min-speedup X]
+                              [--trace-out trace.json] [--min-speedup X]
 
   --threads      compiled-engine worker threads (0 = one per core)
   --fuse-steps   also measure the temporally blocked T-step program on
                  both engines (fused-vs-unfused rows, per-step columns)
+  --trace-out    write the traced run as Chrome trace-event JSON
+                 (validated structurally before the write)
   --min-speedup  fail unless compiled/interpret speedup reaches X",
     ),
     (
@@ -942,25 +1025,32 @@ USAGE:
 
 USAGE:
   stencil-matrix serve [--backend native] [--workers N] [--shards M]
-                       [--queue-depth D] [--size 256] [--steps 4]
+                       [--queue-depth D] [--size 256] [--steps 8]
                        [--requests 32] [--clients 4] [--distinct 4]
                        [--kernel taps|oracle|outer|tuned]
                        [--engine compiled|interpret] [--fuse-steps 1]
+                       [--trace-out trace.json] [--metrics-out serve.prom]
                        [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve --artifact evolve_2d5p_n256_t4 --executions 25
 
---kernel outer runs the paper's outer-product algorithm compiled through
-the kernel IR natively on the host (verified within 1e-9; oracle/taps
-stay bitwise). --engine picks the host execution engine for those
-kernels: 'compiled' (default; fused loop nests, threaded row groups) or
-'interpret' (the op-by-op reference twin, bitwise identical). With
---tune-db, the kernel LRU consults the tuning database before compiling
-shard kernels; --kernel tuned requests compile the matched plan to a
-real host kernel and report its label. --fuse-steps T enables temporal
-blocking: up to T time steps fused per kernel application behind
-order*T-deep ghosts, halo exchanges only every T steps (capped so deep
-halos never starve the shard count; results are bitwise independent of
-T, and the metrics JSON reports halo_exchanges / fused_steps).
+--kernel outer (the default) runs the paper's outer-product algorithm
+compiled through the kernel IR natively on the host (verified within
+1e-9; oracle/taps stay bitwise). --engine picks the host execution
+engine for those kernels: 'compiled' (default; fused loop nests,
+threaded row groups) or 'interpret' (the op-by-op reference twin,
+bitwise identical). With --tune-db, the kernel LRU consults the tuning
+database before compiling shard kernels; --kernel tuned requests
+compile the matched plan to a real host kernel and report its label.
+--fuse-steps T enables temporal blocking: up to T time steps fused per
+kernel application behind order*T-deep ghosts, halo exchanges only
+every T steps (capped so deep halos never starve the shard count;
+results are bitwise independent of T, and the metrics JSON reports
+halo_exchanges / fused_steps). --trace-out records the whole run as
+spans (enqueue → dispatch → shard kernels → halo exchanges → fused
+sections) and writes validated Chrome trace-event JSON plus a per-phase
+breakdown; traced outputs stay bitwise identical to untraced runs.
+--metrics-out writes the metrics snapshot as Prometheus text
+exposition.
 The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
     ),
     (
@@ -972,7 +1062,10 @@ USAGE:
                              [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
                              [--engine compiled|interpret]
-                             [--fuse-steps 1]",
+                             [--fuse-steps 1]
+
+Each worker-count row is timed untraced, then traced once more for the
+per-phase breakdown table (embed/compute/freeze/exchange/extract).",
     ),
     (
         "list",
@@ -1001,18 +1094,20 @@ USAGE:
   stencil-matrix tune        --stencil 2d-star --order 2 --size 64 [--budget 12]
                              [--strategy guided] [--db target/tune/tune_db.json]
   stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-  stencil-matrix bench-json  [--out BENCH_5.json] [--size2d 64] [--size3d 16]
+  stencil-matrix bench-json  [--out BENCH_6.json] [--size2d 64] [--size3d 16]
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                             [--current BENCH_5.json] [--tolerance-pct 2]
+                             [--current BENCH_6.json] [--tolerance-pct 2]
                              [--write-baseline] [--self-test]
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
-                             [--threads 0] [--fuse-steps 1] [--min-speedup X]
+                             [--threads 0] [--fuse-steps 1] [--trace-out t.json]
+                             [--min-speedup X]
   stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 --method outer
   stencil-matrix serve       [--backend native] [--workers N] [--shards M]
-                             [--queue-depth D] [--size 256] [--steps 4]
+                             [--queue-depth D] [--size 256] [--steps 8]
                              [--requests 32] [--clients 4] [--distinct 4]
                              [--kernel taps|oracle|outer|tuned]
                              [--engine compiled|interpret] [--fuse-steps 1]
+                             [--trace-out trace.json] [--metrics-out serve.prom]
                              [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
@@ -1131,9 +1226,12 @@ mod tests {
         assert!(usage_for("engine-bench").unwrap().contains("--fuse-steps"));
         assert!(usage_for("shard-bench").unwrap().contains("--fuse-steps"));
         assert!(usage_for("bench-json").unwrap().contains("fused"));
-        // the snapshot moved to BENCH_5.json with the engine columns
-        assert!(usage_for("bench-json").unwrap().contains("BENCH_5.json"));
-        assert!(!usage_for("bench-json").unwrap().contains("BENCH_4.json"));
+        // the snapshot moved to BENCH_6.json with the per-phase profiles
+        assert!(usage_for("bench-json").unwrap().contains("BENCH_6.json"));
+        assert!(!usage_for("bench-json").unwrap().contains("BENCH_5.json"));
+        assert!(usage_for("serve").unwrap().contains("--trace-out"));
+        assert!(usage_for("serve").unwrap().contains("--metrics-out"));
+        assert!(usage_for("engine-bench").unwrap().contains("--trace-out"));
         assert!(usage_for("bench-compare").unwrap().contains("--self-test"));
         assert!(usage_for("bench-compare").unwrap().contains("baseline"));
         assert!(usage_for("engine-bench").unwrap().contains("--min-speedup"));

@@ -1,0 +1,189 @@
+//! Chrome trace-event JSON export: render drained spans as a document
+//! `chrome://tracing` and Perfetto load directly.
+//!
+//! The format is the ["Trace Event Format"] JSON object flavour:
+//! `{"traceEvents": [...]}` where each span contributes a `"B"` (begin)
+//! and `"E"` (end) event with microsecond `ts` timestamps, and every
+//! thread gets an `"M"` (metadata) `thread_name` event so worker tracks
+//! are labeled (`stencil-worker-0`, `kir-worker-1`, …) instead of
+//! numbered. One process (`pid` 1), one track per recorded thread.
+//!
+//! ["Trace Event Format"]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! [`validate`] re-parses a document and checks the structural
+//! invariants exporters must uphold (balanced and properly nested B/E
+//! pairs per thread, non-decreasing timestamps) — the serve CLI runs it
+//! on every `--trace-out` write, so a malformed trace fails the smoke
+//! run instead of failing later in a viewer.
+
+use super::span::{Event, ThreadEvents};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+/// Process id stamped on every event (single-process traces).
+const PID: f64 = 1.0;
+
+/// Render drained spans as a Chrome trace-event document.
+pub fn to_chrome_json(threads: &[ThreadEvents]) -> Json {
+    let mut events = Vec::new();
+    for t in threads {
+        events.push(obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(PID)),
+            ("tid", Json::Num(t.tid as f64)),
+            ("args", obj(vec![("name", Json::Str(t.name.clone()))])),
+        ]));
+        for e in &t.events {
+            events.push(event_json(t.tid, e));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+fn event_json(tid: u64, e: &Event) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(e.name.to_string())),
+        ("cat", Json::Str(e.cat.to_string())),
+        ("ph", Json::Str(if e.begin { "B" } else { "E" }.to_string())),
+        ("pid", Json::Num(PID)),
+        ("tid", Json::Num(tid as f64)),
+        // trace-event timestamps are microseconds; fractional µs keep
+        // the full nanosecond resolution
+        ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+    ];
+    if let Some((k, v)) = e.arg {
+        pairs.push(("args", obj(vec![(k, Json::Num(v))])));
+    }
+    obj(pairs)
+}
+
+/// Validate a Chrome trace-event document structurally and return the
+/// span-name counts (completed B/E pairs per name).
+///
+/// Checks, per `tid`: every `"E"` closes the most recent open `"B"` of
+/// the same name (proper nesting), no unclosed spans remain, and
+/// timestamps never decrease. `"M"` metadata events are skipped.
+pub fn validate(doc: &Json) -> anyhow::Result<BTreeMap<String, usize>> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no traceEvents array"))?;
+    let mut open: BTreeMap<i64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        anyhow::ensure!(ph == "B" || ph == "E", "event {i} has unknown ph '{ph}'");
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no name"))?;
+        let tid = e
+            .get("tid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no tid"))? as i64;
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no ts"))?;
+        let prev = last_ts.entry(tid).or_insert(ts);
+        anyhow::ensure!(
+            ts >= *prev,
+            "event {i} ({name}): ts went backwards on tid {tid} ({ts} < {prev})"
+        );
+        *prev = ts;
+        let stack = open.entry(tid).or_default();
+        if ph == "B" {
+            stack.push(name.to_string());
+        } else {
+            let top = stack
+                .pop()
+                .ok_or_else(|| anyhow::anyhow!("event {i}: E '{name}' with no open B on tid {tid}"))?;
+            anyhow::ensure!(
+                top == name,
+                "event {i}: E '{name}' closes open span '{top}' on tid {tid} (bad nesting)"
+            );
+            *counts.entry(top).or_insert(0) += 1;
+        }
+    }
+    for (tid, stack) in &open {
+        anyhow::ensure!(
+            stack.is_empty(),
+            "tid {tid} has {} unclosed span(s): {stack:?}",
+            stack.len()
+        );
+    }
+    Ok(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span;
+
+    #[test]
+    fn export_roundtrips_and_validates() {
+        let ((), threads) = span::trace(|| {
+            let _a = span::span("alpha", "test");
+            let _b = span::span_arg("beta", "test", ("shard", 2.0));
+        });
+        let doc = to_chrome_json(&threads);
+        // survives a serialize → parse round trip
+        let back = Json::parse(&doc.to_string_compact()).unwrap();
+        let counts = validate(&back).unwrap();
+        assert_eq!(counts.get("alpha"), Some(&1));
+        assert_eq!(counts.get("beta"), Some(&1));
+        // thread metadata present
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("name").and_then(Json::as_str) == Some("thread_name")
+        }));
+        // the argument rides on the begin event
+        assert!(events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("beta")
+                && e.get("args").and_then(|a| a.get("shard")).and_then(Json::as_f64)
+                    == Some(2.0)
+        }));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        let ev = |name: &str, ph: &str, ts: f64| {
+            obj(vec![
+                ("name", Json::Str(name.into())),
+                ("ph", Json::Str(ph.into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(1.0)),
+                ("ts", Json::Num(ts)),
+            ])
+        };
+        // unbalanced: B with no E
+        let doc = obj(vec![("traceEvents", Json::Arr(vec![ev("a", "B", 0.0)]))]);
+        assert!(validate(&doc).unwrap_err().to_string().contains("unclosed"));
+        // bad nesting: E closes the wrong span
+        let doc = obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![ev("a", "B", 0.0), ev("b", "B", 1.0), ev("a", "E", 2.0)]),
+        )]);
+        assert!(validate(&doc).unwrap_err().to_string().contains("nesting"));
+        // time going backwards on one tid
+        let doc = obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![ev("a", "B", 5.0), ev("a", "E", 1.0)]),
+        )]);
+        assert!(validate(&doc).unwrap_err().to_string().contains("backwards"));
+        // not a trace document at all
+        assert!(validate(&Json::Num(3.0)).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! End-to-end observability: structured spans, Chrome-trace export,
+//! Prometheus-style metrics exposition, and per-phase profiles.
+//!
+//! The simulator side of this repo is perfectly observable — cycles are
+//! deterministic and attributable by construction. The host side (the
+//! compiled engine, sharded serving, fused time tiles) is real threads
+//! on real hardware, where until now only coarse JSON aggregates
+//! existed. This subsystem makes host time attributable:
+//!
+//! - [`span`] — the low-overhead span core: thread-local event buffers,
+//!   one monotonic process epoch, RAII guards, and a global switch.
+//!   Disabled (the default), an instrumented call site costs one relaxed
+//!   atomic load; enabled, recording a span is two `Instant` reads and
+//!   two buffer pushes behind an uncontended thread-local mutex.
+//!   [`span::trace`] wraps a closure in an enable→run→drain session,
+//!   serialized globally so concurrent sessions can't interleave;
+//! - [`chrome`] — exports drained spans as Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto), one named track per thread, with
+//!   a structural [`chrome::validate`] pass (balanced + nested B/E,
+//!   monotonic timestamps) run on every CLI trace write;
+//! - [`prom`] — Prometheus text exposition rendered generically from
+//!   the serve metrics JSON tree (counters → gauges, latency recorders
+//!   → `summary` families with quantile labels), so the exposition can
+//!   never drift from the JSON snapshot;
+//! - [`profile`] — aggregates spans into the per-phase breakdown
+//!   (embed / compute / freeze / exchange / extract seconds) rendered
+//!   in `engine-bench`/`shard-bench` summaries and embedded in the
+//!   `BENCH_6.json` snapshot so `bench-compare` can attribute host
+//!   regressions to a phase.
+//!
+//! # Span taxonomy
+//!
+//! | span                  | cat      | where                                   | arg        |
+//! |-----------------------|----------|-----------------------------------------|------------|
+//! | `serve.enqueue`       | `serve`  | request admission (`service::admit`)    | —          |
+//! | `serve.coalesce`      | `serve`  | merge into an identical queued request  | —          |
+//! | `serve.dispatch`      | `serve`  | dispatcher handling one request         | —          |
+//! | `serve.kernel`        | `serve`  | one shard's kernel application          | `shard`    |
+//! | `serve.halo_exchange` | `serve`  | one shard's ghost refresh               | `shard`    |
+//! | `pool.batch`          | `serve`  | one worker-pool batch barrier           | `jobs`     |
+//! | `kernel.embed`        | `kernel` | tile → padded-domain embedding          | —          |
+//! | `kernel.extract`      | `kernel` | padded domain → tile extraction         | —          |
+//! | `kir.compute`         | `kir`    | one compute section (either engine)     | `step`     |
+//! | `kir.freeze`          | `kir`    | one inter-step freeze section           | `step`     |
+//! | `kir.row_group`       | `kir`    | one independent block of a Par section  | `block`    |
+//! | `tune.measure`        | `tune`   | one candidate's simulator measurement   | `candidate`|
+//!
+//! Consumers: `serve --trace-out`/`--metrics-out`, `engine-bench
+//! --trace-out`, the `shard-bench`/`engine-bench` per-phase tables, the
+//! bench snapshot, and CI (which captures, validates, and uploads a
+//! serve trace on every build). The overhead budget and the checklist
+//! for adding a span live in CONTRIBUTING.md.
+
+pub mod chrome;
+pub mod profile;
+pub mod prom;
+pub mod span;
+
+pub use profile::PhaseProfile;
+pub use span::{SpanGuard, ThreadEvents};

@@ -1,0 +1,213 @@
+//! The profile model: aggregate drained spans into a per-phase
+//! wall-clock breakdown — embed vs compute vs freeze vs halo-exchange
+//! vs extract seconds.
+//!
+//! A span stream answers "what happened when"; benchmarks need "where
+//! did the time go". [`aggregate`] folds the five attributable phase
+//! spans into a [`PhaseProfile`]:
+//!
+//! | phase      | span                  | recorded in                 |
+//! |------------|-----------------------|-----------------------------|
+//! | `embed`    | `kernel.embed`        | `kir::kernel::apply_with`   |
+//! | `compute`  | `kir.compute`         | `kir::exec` / interpreter   |
+//! | `freeze`   | `kir.freeze`          | `kir::exec` freeze sections |
+//! | `exchange` | `serve.halo_exchange` | `serve::halo`               |
+//! | `extract`  | `kernel.extract`      | `kir::kernel::apply_with`   |
+//!
+//! Only these leaf-phase spans are summed — enclosing spans
+//! (`serve.kernel`, `serve.dispatch`) and finer-grained children
+//! (`kir.row_group`, which nests *inside* `kir.compute`) are excluded
+//! so no nanosecond is counted twice. Durations are summed across all
+//! threads, so on a parallel section the profile reports aggregate CPU
+//! seconds, not wall-clock.
+//!
+//! `shard-bench` and `engine-bench` render profiles as markdown job
+//! tables, and the bench snapshot (`BENCH_6.json`, v5) embeds them
+//! machine-readably so `bench-compare` can say *which phase* moved.
+
+use super::span::ThreadEvents;
+use crate::util::bench::{fmt_secs, Table};
+use crate::util::json::{obj, Json};
+
+/// Per-phase aggregate seconds over one traced region.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Tile → padded-domain embedding (`kernel.embed`).
+    pub embed_s: f64,
+    /// Kernel compute sections (`kir.compute`), both engines.
+    pub compute_s: f64,
+    /// Inter-step freeze phases of fused programs (`kir.freeze`).
+    pub freeze_s: f64,
+    /// Halo-exchange rounds (`serve.halo_exchange`).
+    pub exchange_s: f64,
+    /// Padded domain → tile extraction (`kernel.extract`).
+    pub extract_s: f64,
+    /// Completed spans that contributed to any phase.
+    pub spans: usize,
+}
+
+impl PhaseProfile {
+    /// Sum over the five phases.
+    pub fn total(&self) -> f64 {
+        self.embed_s + self.compute_s + self.freeze_s + self.exchange_s + self.extract_s
+    }
+
+    /// `(label, seconds)` per phase, in pipeline order.
+    pub fn phases(&self) -> [(&'static str, f64); 5] {
+        [
+            ("embed", self.embed_s),
+            ("compute", self.compute_s),
+            ("freeze", self.freeze_s),
+            ("exchange", self.exchange_s),
+            ("extract", self.extract_s),
+        ]
+    }
+
+    /// Machine-readable form for the bench snapshot.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = self
+            .phases()
+            .iter()
+            .map(|&(name, s)| (phase_key(name), Json::Num(s)))
+            .collect();
+        pairs.push(("spans", Json::Num(self.spans as f64)));
+        obj(pairs)
+    }
+
+    /// Parse the [`Self::to_json`] form (absent/malformed fields read
+    /// as zero so older snapshots degrade instead of erroring).
+    pub fn from_json(j: &Json) -> PhaseProfile {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        PhaseProfile {
+            embed_s: f("embed_s"),
+            compute_s: f("compute_s"),
+            freeze_s: f("freeze_s"),
+            exchange_s: f("exchange_s"),
+            extract_s: f("extract_s"),
+            spans: f("spans") as usize,
+        }
+    }
+}
+
+fn phase_key(name: &'static str) -> &'static str {
+    match name {
+        "embed" => "embed_s",
+        "compute" => "compute_s",
+        "freeze" => "freeze_s",
+        "exchange" => "exchange_s",
+        "extract" => "extract_s",
+        _ => unreachable!("unknown phase"),
+    }
+}
+
+/// Fold a drained span stream into per-phase seconds. Unmatched or
+/// foreign spans are ignored; per-thread streams are matched with a
+/// stack, so nested same-name spans pair correctly.
+pub fn aggregate(threads: &[ThreadEvents]) -> PhaseProfile {
+    let mut p = PhaseProfile::default();
+    for t in threads {
+        let mut stack: Vec<(&'static str, u64)> = Vec::new();
+        for e in &t.events {
+            if e.begin {
+                stack.push((e.name, e.ts_ns));
+            } else if let Some((name, t0)) = stack.pop() {
+                let secs = e.ts_ns.saturating_sub(t0) as f64 / 1e9;
+                let slot = match name {
+                    "kernel.embed" => Some(&mut p.embed_s),
+                    "kir.compute" => Some(&mut p.compute_s),
+                    "kir.freeze" => Some(&mut p.freeze_s),
+                    "serve.halo_exchange" => Some(&mut p.exchange_s),
+                    "kernel.extract" => Some(&mut p.extract_s),
+                    _ => None,
+                };
+                if let Some(slot) = slot {
+                    *slot += secs;
+                    p.spans += 1;
+                }
+            }
+        }
+    }
+    p
+}
+
+/// Render labeled profiles as a markdown breakdown table (the
+/// `engine-bench`/`shard-bench` job-summary form).
+pub fn to_markdown(rows: &[(String, PhaseProfile)]) -> String {
+    let mut table =
+        Table::new(&["config", "embed", "compute", "freeze", "exchange", "extract", "total"]);
+    for (label, p) in rows {
+        let mut cells = vec![label.clone()];
+        cells.extend(p.phases().iter().map(|&(_, s)| fmt_secs(s)));
+        cells.push(fmt_secs(p.total()));
+        table.row(cells);
+    }
+    table.to_markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Event, ThreadEvents};
+
+    fn ev(name: &'static str, begin: bool, ts_ns: u64) -> Event {
+        Event { name, cat: "test", begin, ts_ns, arg: None }
+    }
+
+    #[test]
+    fn aggregates_phase_spans_and_ignores_the_rest() {
+        let threads = vec![
+            ThreadEvents {
+                tid: 1,
+                name: "a".into(),
+                events: vec![
+                    ev("serve.kernel", true, 0),
+                    ev("kernel.embed", true, 100),
+                    ev("kernel.embed", false, 1_100),
+                    ev("kir.compute", true, 2_000),
+                    ev("kir.row_group", true, 2_100), // nested child: excluded
+                    ev("kir.row_group", false, 2_600),
+                    ev("kir.compute", false, 5_000),
+                    ev("kernel.extract", true, 5_000),
+                    ev("kernel.extract", false, 5_500),
+                    ev("serve.kernel", false, 6_000), // enclosing: excluded
+                ],
+            },
+            ThreadEvents {
+                tid: 2,
+                name: "b".into(),
+                events: vec![
+                    ev("serve.halo_exchange", true, 0),
+                    ev("serve.halo_exchange", false, 4_000),
+                ],
+            },
+        ];
+        let p = aggregate(&threads);
+        assert_eq!(p.spans, 4);
+        assert!((p.embed_s - 1e-6).abs() < 1e-12);
+        assert!((p.compute_s - 3e-6).abs() < 1e-12);
+        assert!((p.exchange_s - 4e-6).abs() < 1e-12);
+        assert!((p.extract_s - 0.5e-6).abs() < 1e-12);
+        assert_eq!(p.freeze_s, 0.0);
+        assert!((p.total() - 8.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_and_markdown() {
+        let p = PhaseProfile {
+            embed_s: 0.25,
+            compute_s: 1.5,
+            freeze_s: 0.125,
+            exchange_s: 0.5,
+            extract_s: 0.0625,
+            spans: 9,
+        };
+        let back = PhaseProfile::from_json(&p.to_json());
+        assert_eq!(back, p);
+        // degraded parse of a foreign object reads as zeros
+        assert_eq!(PhaseProfile::from_json(&Json::Null), PhaseProfile::default());
+        let md = to_markdown(&[("compiled T=4".into(), p)]);
+        assert!(md.contains("| config | embed | compute | freeze | exchange | extract | total |"));
+        assert!(md.contains("compiled T=4"), "{md}");
+        assert!(md.contains("1.50 s"), "{md}");
+    }
+}

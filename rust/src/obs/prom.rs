@@ -1,0 +1,158 @@
+//! Prometheus-style text exposition of the serve metrics snapshot.
+//!
+//! [`render`] walks the JSON tree `StencilServer::metrics_json` already
+//! produces and emits the [text exposition format]: nested object keys
+//! are flattened with `_` (`service.kernel_time` →
+//! `<prefix>_service_kernel_time`), plain numbers become gauges, and
+//! latency-recorder snapshots (recognized by their `count` + `p50`/
+//! `p50_s` keys) become `summary` families with `quantile` labels plus
+//! `_sum`/`_count` and a `_max` gauge — so the existing counters
+//! (`completed`, `coalesced`, `tuned_hits`, …) and histograms
+//! (`kernel_time`, `halo_exchanges`, `fused_steps`) are scrapeable
+//! without a second bookkeeping path that could drift from the JSON.
+//!
+//! [text exposition format]: https://prometheus.io/docs/instrumenting/exposition_formats/
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Render a metrics JSON tree as Prometheus text. `prefix` namespaces
+/// every family (e.g. `stencil_serve`).
+pub fn render(metrics: &Json, prefix: &str) -> String {
+    let mut out = String::new();
+    walk(metrics, &sanitize(prefix), &mut out);
+    out
+}
+
+fn walk(v: &Json, path: &str, out: &mut String) {
+    match v {
+        Json::Obj(m) => {
+            if let Some(rec) = recorder_fields(v) {
+                emit_summary(path, &rec, out);
+                return;
+            }
+            for (k, child) in m {
+                walk(child, &format!("{path}_{}", sanitize(k)), out);
+            }
+        }
+        Json::Num(n) => {
+            let _ = writeln!(out, "# TYPE {path} gauge\n{path} {}", fmt(*n));
+        }
+        Json::Bool(b) => {
+            let _ = writeln!(out, "# TYPE {path} gauge\n{path} {}", u8::from(*b));
+        }
+        Json::Str(s) => {
+            // strings (engine name, …) carry no numeric value; surface
+            // them as a comment so the exposition stays self-describing
+            let _ = writeln!(out, "# {path} = {s:?}");
+        }
+        Json::Null | Json::Arr(_) => {}
+    }
+}
+
+/// A latency-recorder snapshot's fields, normalized across the
+/// seconds-suffixed (`p50_s`) and unit-less (`p50`) JSON variants.
+struct Recorder {
+    count: f64,
+    mean: f64,
+    max: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    window_len: Option<f64>,
+}
+
+fn recorder_fields(v: &Json) -> Option<Recorder> {
+    let count = v.get("count")?.as_f64()?;
+    let suffix = if v.get("p50_s").is_some() { "_s" } else { "" };
+    let f = |k: &str| v.get(&format!("{k}{suffix}")).and_then(Json::as_f64);
+    Some(Recorder {
+        count,
+        mean: f("mean")?,
+        max: f("max")?,
+        p50: f("p50")?,
+        p95: f("p95")?,
+        p99: f("p99")?,
+        window_len: v.get("window_len").and_then(Json::as_f64),
+    })
+}
+
+fn emit_summary(path: &str, r: &Recorder, out: &mut String) {
+    let _ = writeln!(out, "# TYPE {path} summary");
+    for (q, v) in [("0.5", r.p50), ("0.95", r.p95), ("0.99", r.p99)] {
+        let _ = writeln!(out, "{path}{{quantile=\"{q}\"}} {}", fmt(v));
+    }
+    let _ = writeln!(out, "{path}_sum {}", fmt(r.mean * r.count));
+    let _ = writeln!(out, "{path}_count {}", fmt(r.count));
+    let _ = writeln!(out, "# TYPE {path}_max gauge\n{path}_max {}", fmt(r.max));
+    if let Some(w) = r.window_len {
+        let _ = writeln!(out, "# TYPE {path}_window_len gauge\n{path}_window_len {}", fmt(w));
+    }
+}
+
+/// Metric-name characters are `[a-zA-Z0-9_:]`; anything else becomes `_`.
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
+        .collect()
+}
+
+fn fmt(v: f64) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::LatencyRecorder;
+    use crate::util::json::obj;
+
+    #[test]
+    fn counters_and_recorders_expose() {
+        let mut rec = LatencyRecorder::default();
+        for v in [0.5, 1.5, 2.5] {
+            rec.record(v);
+        }
+        let metrics = obj(vec![
+            (
+                "service",
+                obj(vec![
+                    ("completed", Json::Num(64.0)),
+                    ("kernel_time", rec.to_json()),
+                    ("halo_exchanges", rec.to_json_counts()),
+                ]),
+            ),
+            ("config", obj(vec![("engine", Json::Str("compiled".into()))])),
+        ]);
+        let text = render(&metrics, "stencil_serve");
+        assert!(text.contains("# TYPE stencil_serve_service_completed gauge"), "{text}");
+        assert!(text.contains("stencil_serve_service_completed 64"), "{text}");
+        assert!(text.contains("# TYPE stencil_serve_service_kernel_time summary"), "{text}");
+        assert!(
+            text.contains("stencil_serve_service_kernel_time{quantile=\"0.5\"} 1.5"),
+            "{text}"
+        );
+        assert!(text.contains("stencil_serve_service_kernel_time_count 3"), "{text}");
+        assert!(text.contains("stencil_serve_service_kernel_time_sum 4.5"), "{text}");
+        // the unit-less recorder variant is recognized too
+        assert!(
+            text.contains("stencil_serve_service_halo_exchanges{quantile=\"0.99\"} 2.5"),
+            "{text}"
+        );
+        // strings surface as comments, not bogus samples
+        assert!(text.contains("# stencil_serve_config_engine = \"compiled\""), "{text}");
+        // every sample line is NAME VALUE (2 space-separated fields)
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad sample line: {line}");
+            let val = line.split(' ').nth(1).unwrap();
+            assert!(val.parse::<f64>().is_ok(), "unparseable value in: {line}");
+        }
+    }
+
+    #[test]
+    fn names_are_sanitized() {
+        let metrics = obj(vec![("queue-depth", Json::Num(32.0))]);
+        let text = render(&metrics, "x");
+        assert!(text.contains("x_queue_depth 32"), "{text}");
+    }
+}

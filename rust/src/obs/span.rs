@@ -1,0 +1,272 @@
+//! Low-overhead structured spans: thread-local event buffers, monotonic
+//! timestamps, and a global on/off switch.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled means free.** A `span()` call with recording off is one
+//!    relaxed atomic load returning an inert guard — no thread-local
+//!    access, no allocation, no timestamp read. Instrumented hot paths
+//!    (the compiled engine's row groups, the scheduler's per-shard jobs)
+//!    must stay within noise of their uninstrumented selves.
+//! 2. **Per-thread streams are well-formed by construction.** Every
+//!    thread buffers its own events behind a rarely-contended mutex
+//!    (only `drain` ever takes it from another thread), the begin event
+//!    is recorded at guard creation and the end event at guard drop, and
+//!    timestamps come from one process-wide monotonic epoch — so each
+//!    thread's stream is balanced, properly nested, and non-decreasing
+//!    in time without any exporter-side sorting or repair.
+//! 3. **No spooky cross-talk.** A guard created while recording was off
+//!    stays inert for its whole life (it does not record a dangling end
+//!    event after `enable`), and [`trace`] serializes whole sessions
+//!    behind a global mutex so concurrent callers (tests) never observe
+//!    each other's spans.
+//!
+//! Buffers belong to a process-wide registry and survive thread exit
+//! (the registry holds the owning `Arc`), so events recorded by a
+//! short-lived worker are still visible to a later [`drain`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Global recording switch. Off by default.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Dense trace-local thread ids, assigned on a thread's first recorded
+/// event and stable for the life of the process.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// One begin or end event. `ts_ns` is nanoseconds since the process
+/// trace epoch (a monotonic [`Instant`], so a thread's event stream is
+/// non-decreasing by construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Span name (e.g. `serve.halo_exchange`); `&'static` so recording
+    /// never allocates.
+    pub name: &'static str,
+    /// Category (the subsystem: `serve`, `kir`, `kernel`, `tune`, …).
+    pub cat: &'static str,
+    /// `true` for the begin event, `false` for the matching end.
+    pub begin: bool,
+    /// Nanoseconds since the trace epoch.
+    pub ts_ns: u64,
+    /// Optional numeric argument attached to the begin event (shard or
+    /// block index, fused-step number, …).
+    pub arg: Option<(&'static str, f64)>,
+}
+
+/// One thread's drained event stream.
+#[derive(Debug, Clone)]
+pub struct ThreadEvents {
+    /// Trace-local thread id (dense, assignment order).
+    pub tid: u64,
+    /// OS thread name at first event (workers are named; unnamed threads
+    /// get `thread-<tid>`).
+    pub name: String,
+    /// The events, in recording order (chronological per thread).
+    pub events: Vec<Event>,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    events: Mutex<Vec<Event>>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static BUF: Arc<ThreadBuf> = {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        let buf = Arc::new(ThreadBuf { tid, name, events: Mutex::new(Vec::new()) });
+        registry().lock().unwrap().push(Arc::clone(&buf));
+        buf
+    };
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn push(ev: Event) {
+    BUF.with(|b| b.events.lock().unwrap().push(ev));
+}
+
+/// Turn recording on (idempotent; pins the trace epoch on first use).
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Guards opened while recording was on still
+/// record their end events, keeping every stream balanced.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Whether spans are currently being recorded.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII span guard: begin event at creation, matching end event at
+/// drop. Created inert when recording is off (records nothing, ever).
+#[must_use = "a span measures the scope it is alive for"]
+pub struct SpanGuard {
+    live: bool,
+    name: &'static str,
+    cat: &'static str,
+}
+
+/// Open a span. One relaxed atomic load when recording is disabled.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    open(name, cat, None)
+}
+
+/// Open a span with one numeric argument attached to its begin event.
+#[inline]
+pub fn span_arg(name: &'static str, cat: &'static str, arg: (&'static str, f64)) -> SpanGuard {
+    open(name, cat, Some(arg))
+}
+
+#[inline]
+fn open(
+    name: &'static str,
+    cat: &'static str,
+    arg: Option<(&'static str, f64)>,
+) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: false, name, cat };
+    }
+    push(Event { name, cat, begin: true, ts_ns: now_ns(), arg });
+    SpanGuard { live: true, name, cat }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            push(Event { name: self.name, cat: self.cat, begin: false, ts_ns: now_ns(), arg: None });
+        }
+    }
+}
+
+/// Drain every thread's buffered events (clearing the buffers), ordered
+/// by thread id. Threads that recorded nothing are omitted.
+pub fn drain() -> Vec<ThreadEvents> {
+    let bufs = registry().lock().unwrap();
+    let mut out: Vec<ThreadEvents> = bufs
+        .iter()
+        .filter_map(|b| {
+            let events = std::mem::take(&mut *b.events.lock().unwrap());
+            if events.is_empty() {
+                None
+            } else {
+                Some(ThreadEvents { tid: b.tid, name: b.name.clone(), events })
+            }
+        })
+        .collect();
+    out.sort_by_key(|t| t.tid);
+    out
+}
+
+/// Run `f` with recording enabled and return its result together with
+/// the spans it recorded. Sessions are serialized behind a global
+/// mutex, so concurrent callers (e.g. parallel tests) never observe
+/// each other's spans; any stray events left over from an unserialized
+/// `enable`/`disable` pair are discarded at session start.
+pub fn trace<R>(f: impl FnOnce() -> R) -> (R, Vec<ThreadEvents>) {
+    static SESSION: OnceLock<Mutex<()>> = OnceLock::new();
+    let session = SESSION.get_or_init(|| Mutex::new(()));
+    let _guard = session.lock().unwrap_or_else(|p| p.into_inner());
+    let _ = drain();
+    enable();
+    let out = f();
+    disable();
+    (out, drain())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let ((), threads) = trace(|| {
+            disable(); // recording off inside the session
+            let g = span("quiet", "test");
+            drop(g);
+        });
+        assert!(threads.is_empty(), "disabled span left events: {threads:?}");
+    }
+
+    #[test]
+    fn spans_nest_and_balance_on_one_thread() {
+        let ((), threads) = trace(|| {
+            let outer = span("outer", "test");
+            {
+                let _inner = span_arg("inner", "test", ("k", 3.0));
+            }
+            drop(outer);
+        });
+        assert_eq!(threads.len(), 1);
+        let ev = &threads[0].events;
+        assert_eq!(ev.len(), 4);
+        let names: Vec<(&str, bool)> = ev.iter().map(|e| (e.name, e.begin)).collect();
+        assert_eq!(
+            names,
+            vec![("outer", true), ("inner", true), ("inner", false), ("outer", false)]
+        );
+        assert_eq!(ev[1].arg, Some(("k", 3.0)));
+        assert!(ev.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns), "timestamps decrease");
+    }
+
+    #[test]
+    fn threads_get_their_own_tracks() {
+        let ((), threads) = trace(|| {
+            let _a = span("main-side", "test");
+            std::thread::Builder::new()
+                .name("obs-test-worker".into())
+                .spawn(|| {
+                    let _b = span("worker-side", "test");
+                })
+                .unwrap()
+                .join()
+                .unwrap();
+        });
+        assert_eq!(threads.len(), 2);
+        let worker = threads
+            .iter()
+            .find(|t| t.events.iter().any(|e| e.name == "worker-side"))
+            .expect("worker track present");
+        assert_eq!(worker.name, "obs-test-worker");
+        assert_eq!(worker.events.len(), 2);
+    }
+
+    #[test]
+    fn guard_opened_while_disabled_stays_inert_across_enable() {
+        let ((), threads) = trace(|| {
+            disable();
+            let g = span("ghost", "test");
+            enable();
+            drop(g); // must not record a dangling end event
+            let _live = span("real", "test");
+        });
+        let all: Vec<&str> =
+            threads.iter().flat_map(|t| t.events.iter().map(|e| e.name)).collect();
+        assert_eq!(all, vec!["real", "real"]);
+    }
+}

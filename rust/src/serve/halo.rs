@@ -14,6 +14,7 @@
 //!   serial exchange.
 
 use super::partition::Partition;
+use crate::obs::span::span_arg;
 use crate::stencil::DenseGrid;
 use std::sync::Mutex;
 
@@ -43,6 +44,7 @@ pub fn exchange_serial(part: &Partition, tiles: &mut [DenseGrid]) {
 /// Refresh shard `s`'s ghost rows, locking one tile at a time.
 pub fn refresh_ghosts(part: &Partition, tiles: &[Mutex<DenseGrid>], s: usize) {
     assert_eq!(tiles.len(), part.len());
+    let _g = span_arg("serve.halo_exchange", "serve", ("shard", s as f64));
     let rest = part.row_elems();
     if let Some((src_range, dst_range)) = lower_ghost_copy(part, s, rest) {
         let buf = tiles[s - 1].lock().unwrap().data[src_range].to_vec();

@@ -53,10 +53,11 @@ impl LatencyRecorder {
         self.max
     }
 
-    /// The retained window, sorted ascending.
+    /// The retained window, sorted ascending (`total_cmp`, so a NaN
+    /// sample cannot panic the snapshot path).
     fn sorted_window(&self) -> Vec<f64> {
         let mut sorted = self.window.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         sorted
     }
 
@@ -89,6 +90,7 @@ impl LatencyRecorder {
                 (format!("p95{suffix}"), Json::Num(percentile_of(&sorted, 95.0))),
                 (format!("p99{suffix}"), Json::Num(percentile_of(&sorted, 99.0))),
                 (format!("max{suffix}"), Json::Num(self.max())),
+                ("window_len".to_string(), Json::Num(self.window.len() as f64)),
             ]
             .into_iter()
             .collect(),
@@ -96,12 +98,16 @@ impl LatencyRecorder {
     }
 }
 
+/// Nearest-rank percentile over an ascending-sorted slice: the value at
+/// 1-based rank `⌈p/100 · n⌉`, clamped to `[1, n]` so `p = 0` reads the
+/// minimum and `p = 100` the maximum; 0 when empty.
 fn percentile_of(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
+    let n = sorted.len();
+    if n == 0 {
         return 0.0;
     }
-    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
-    sorted[rank.min(sorted.len() - 1)]
+    let rank = (p / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 /// Aggregate serving counters; owned by the server behind a mutex.
@@ -229,6 +235,38 @@ mod tests {
         // the retained window holds only the most recent WINDOW samples
         assert_eq!(r.percentile(0.0), 100.0);
         assert_eq!(r.percentile(100.0), (n - 1) as f64);
+    }
+
+    #[test]
+    fn partially_filled_window_percentiles() {
+        let mut r = LatencyRecorder::default();
+        r.record(2.0);
+        // one sample: every percentile reads it
+        assert_eq!(r.percentile(0.0), 2.0);
+        assert_eq!(r.percentile(50.0), 2.0);
+        assert_eq!(r.percentile(99.0), 2.0);
+        r.record(4.0);
+        // two samples: p50 is the lower value, anything above it the upper
+        assert_eq!(r.percentile(50.0), 2.0);
+        assert_eq!(r.percentile(51.0), 4.0);
+        assert_eq!(r.percentile(100.0), 4.0);
+        assert_eq!(r.to_json().get("window_len").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn wraparound_at_exactly_window_plus_one() {
+        // the (WINDOW + 1)-th sample overwrites the oldest slot: the
+        // window holds 1..=WINDOW while count/max stay exact
+        let mut r = LatencyRecorder::default();
+        for i in 0..=super::WINDOW {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), (super::WINDOW + 1) as u64);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(100.0), super::WINDOW as f64);
+        let j = r.to_json_counts();
+        assert_eq!(j.get("window_len").unwrap().as_usize(), Some(super::WINDOW));
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(super::WINDOW + 1));
     }
 
     #[test]

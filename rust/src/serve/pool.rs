@@ -10,6 +10,7 @@
 //! job and surfaced as one error after the barrier, so a poisoned shard
 //! cannot deadlock the step.
 
+use crate::obs::span::span_arg;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -112,6 +113,7 @@ impl WorkerPool {
         if total == 0 {
             return Ok(());
         }
+        let _batch = span_arg("pool.batch", "serve", ("jobs", total as f64));
         let latch = Arc::new(Latch::new(total));
         let panics: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
         let wrapped: Vec<Job> = jobs

@@ -28,6 +28,7 @@ use super::partition::Partition;
 use super::pool::{Job, WorkerPool};
 use crate::codegen::{Method, OuterParams};
 use crate::kir::{Engine, HostKernel};
+use crate::obs::span::span_arg;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
 use crate::tune::{TuneDb, TunePlan};
@@ -635,6 +636,7 @@ impl ShardedEvolver {
                     let tiles = Arc::clone(&tiles);
                     let plan = Arc::clone(&plans[s]);
                     let job: Job = Box::new(move || {
+                        let _g = span_arg("serve.kernel", "serve", ("shard", s as f64));
                         let mut tile = tiles[s].lock().unwrap();
                         *tile = plan.apply_with(&tile, kernel_threads);
                     });

@@ -12,6 +12,7 @@
 use super::metrics::ServiceMetrics;
 use super::scheduler::{KernelMethod, ShardedEvolver};
 use crate::kir::Engine;
+use crate::obs::span::span;
 use crate::runtime::{PjrtRuntime, Registry, StencilEngine};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::util::json::{obj, Json};
@@ -195,7 +196,9 @@ impl ServerInner {
     /// Under the queue lock: coalesce onto an identical queued request,
     /// or enqueue, or give the request back if the queue is full.
     fn admit(&self, q: &mut QueueInner, req: ShardRequest) -> Result<Ticket, ShardRequest> {
+        let _g = span("serve.enqueue", "serve");
         if let Some(p) = q.entries.iter_mut().find(|p| p.req == req) {
+            let _c = span("serve.coalesce", "serve");
             p.waiters += 1;
             self.metrics.lock().unwrap().coalesced += 1;
             return Ok(Ticket { slot: Arc::clone(&p.slot) });
@@ -240,6 +243,7 @@ impl ServerInner {
     }
 
     fn handle(&self, pending: Pending) {
+        let _g = span("serve.dispatch", "serve");
         let queue_seconds = pending.enqueued.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let result = self.execute(&pending.req);

@@ -189,7 +189,8 @@ pub fn tune(
     // are verified against T oracle steps; cycles_per_point normalizes
     // per step, so depths compete fairly)
     let mut measurements = Vec::with_capacity(survivors.len());
-    for (plan, est) in survivors {
+    for (ci, (plan, est)) in survivors.into_iter().enumerate() {
+        let _m = crate::obs::span::span_arg("tune.measure", "tune", ("candidate", ci as f64));
         let res = run_method_fused(cfg, spec, n, plan.to_method(), true, plan.steps)?;
         anyhow::ensure!(
             res.verified(),

