@@ -1,13 +1,17 @@
 //! The CI perf-regression gate: compare a fresh `BENCH_6.json` snapshot
 //! against the checked-in `bench/baseline.json`.
 //!
-//! The gate keys on **simulated cycles**, which are fully deterministic
-//! (the simulator has no noise), so a >tolerance increase on any
-//! (stencil, method) cell is a real codegen/model regression, not
-//! machine jitter. Host wall-clock is never gated — it is reported as
-//! advisory context in the CI job summary. Op-count drifts are reported
-//! as notes (an op-count change with flat cycles is usually an
-//! intentional codegen change; refresh the baseline alongside it).
+//! The primary gate keys on **simulated cycles**, which are fully
+//! deterministic (the simulator has no noise), so a >tolerance increase
+//! on any (stencil, method) cell is a real codegen/model regression,
+//! not machine jitter. Host wall-clock is noisier, so it gets a wider,
+//! two-band gate: per-cell compiled-engine `host_seconds` and per-row
+//! serving throughput (`fused_serve.fused_mpts_per_s`) **fail** only
+//! beyond [`HOST_FAIL_TOLERANCE`] (10%) and are reported as advisory
+//! notes between [`HOST_ADVISORY_TOLERANCE`] (2%) and the failure
+//! band. Op-count drifts are reported as notes (an op-count change
+//! with flat cycles is usually an intentional codegen change; refresh
+//! the baseline alongside it).
 //!
 //! Bootstrap: a baseline with `"pending": true` (the state checked in
 //! before the first refresh) makes the gate advisory — the full
@@ -30,6 +34,15 @@ const METHODS: [&str; 5] = ["scalar", "autovec", "dlt", "tv", "outer"];
 /// cycles exceed the baseline by more than 2%.
 pub const DEFAULT_TOLERANCE: f64 = 0.02;
 
+/// Host wall-clock failure band: compiled-engine `host_seconds` (per
+/// cell) or serving `fused_mpts_per_s` (per row) moving more than this
+/// much in the slow direction fails the gate.
+pub const HOST_FAIL_TOLERANCE: f64 = 0.10;
+
+/// Host wall-clock advisory band: slow-direction drift beyond this (but
+/// within [`HOST_FAIL_TOLERANCE`]) is reported without failing.
+pub const HOST_ADVISORY_TOLERANCE: f64 = 0.02;
+
 /// One compared (stencil, method) cell.
 #[derive(Debug, Clone)]
 pub struct CellDelta {
@@ -45,6 +58,9 @@ pub struct CellDelta {
     pub delta: f64,
     /// Whether the cell fails the gate.
     pub regressed: bool,
+    /// Relative compiled-engine wall-clock change (positive = slower),
+    /// when both snapshots carry `host_seconds` for the cell.
+    pub host_delta: Option<f64>,
     /// Op-count drift note, when host_ops moved.
     pub ops_note: Option<String>,
 }
@@ -62,15 +78,25 @@ pub struct Comparison {
     /// Human-readable summaries of the failing cells (empty = gate
     /// passes).
     pub regressions: Vec<String>,
+    /// Host wall-clock regressions beyond [`HOST_FAIL_TOLERANCE`]
+    /// (compiled-engine seconds per cell, serving Mpts/s per row) —
+    /// these fail the gate.
+    pub host_regressions: Vec<String>,
+    /// Host wall-clock drift inside the advisory band
+    /// ([`HOST_ADVISORY_TOLERANCE`]..[`HOST_FAIL_TOLERANCE`]) —
+    /// reported, never failing.
+    pub host_advisories: Vec<String>,
     /// Advisory per-phase drift notes from the fused-serve profiles
     /// (wall-clock; never gated).
     pub phase_notes: Vec<String>,
 }
 
 impl Comparison {
-    /// True when the gate passes (no regression, or pending baseline).
+    /// True when the gate passes (no sim-cycle regression and no host
+    /// wall-clock regression beyond the failure band, or pending
+    /// baseline).
     pub fn passed(&self) -> bool {
-        self.pending || self.regressions.is_empty()
+        self.pending || (self.regressions.is_empty() && self.host_regressions.is_empty())
     }
 
     /// Render the comparison as a markdown report (what CI appends to
@@ -85,8 +111,15 @@ impl Comparison {
                  table below reports the current snapshot against itself.\n\n",
             );
         }
-        let mut table =
-            Table::new(&["stencil", "method", "baseline cyc", "current cyc", "delta", "status"]);
+        let mut table = Table::new(&[
+            "stencil",
+            "method",
+            "baseline cyc",
+            "current cyc",
+            "delta",
+            "host delta",
+            "status",
+        ]);
         for c in &self.cells {
             let status = if c.regressed {
                 "REGRESSED".to_string()
@@ -102,6 +135,10 @@ impl Comparison {
                 format!("{:.0}", c.base_cycles),
                 format!("{:.0}", c.cur_cycles),
                 format!("{:+.2}%", c.delta * 100.0),
+                match c.host_delta {
+                    Some(d) => format!("{:+.2}%", d * 100.0),
+                    None => "—".to_string(),
+                },
                 status,
             ]);
         }
@@ -126,6 +163,33 @@ impl Comparison {
             ));
             for r in &self.regressions {
                 out.push_str(&format!("- {r}\n"));
+            }
+        }
+        if !self.pending {
+            if self.host_regressions.is_empty() {
+                out.push_str(&format!(
+                    "host gate **passed**: no wall-clock regression beyond {:.0}%.\n",
+                    HOST_FAIL_TOLERANCE * 100.0
+                ));
+            } else {
+                out.push_str(&format!(
+                    "host gate **FAILED**: {} wall-clock regression(s) beyond {:.0}%:\n",
+                    self.host_regressions.len(),
+                    HOST_FAIL_TOLERANCE * 100.0
+                ));
+                for r in &self.host_regressions {
+                    out.push_str(&format!("- {r}\n"));
+                }
+            }
+        }
+        if !self.host_advisories.is_empty() {
+            out.push_str(&format!(
+                "\nadvisory host drift ({:.0}%–{:.0}% band; never failing):\n",
+                HOST_ADVISORY_TOLERANCE * 100.0,
+                HOST_FAIL_TOLERANCE * 100.0
+            ));
+            for n in &self.host_advisories {
+                out.push_str(&format!("- {n}\n"));
             }
         }
         if !self.phase_notes.is_empty() {
@@ -157,6 +221,8 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
             tolerance,
             cells,
             regressions: Vec::new(),
+            host_regressions: Vec::new(),
+            host_advisories: Vec::new(),
             phase_notes: Vec::new(),
         });
     }
@@ -179,6 +245,8 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
         .ok_or_else(|| anyhow::anyhow!("current snapshot has no results array"))?;
     let mut cells = Vec::new();
     let mut regressions = Vec::new();
+    let mut host_regressions = Vec::new();
+    let mut host_advisories = Vec::new();
     let mut phase_notes = Vec::new();
     for brow in base_rows {
         let stencil = brow
@@ -215,6 +283,29 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
                     delta * 100.0
                 ));
             }
+            // host wall-clock band: compiled-engine seconds per cell
+            // (positive delta = slower)
+            let host_delta = match (
+                cell_f64(bm, method, "host_seconds"),
+                cell_f64(cm, method, "host_seconds"),
+            ) {
+                (Some(b), Some(c)) if b > 0.0 => {
+                    let d = (c - b) / b;
+                    let note = format!(
+                        "{stencil}/{method}: host {:.2}ms → {:.2}ms ({:+.2}%)",
+                        b * 1e3,
+                        c * 1e3,
+                        d * 100.0
+                    );
+                    if d > HOST_FAIL_TOLERANCE {
+                        host_regressions.push(note);
+                    } else if d > HOST_ADVISORY_TOLERANCE {
+                        host_advisories.push(note);
+                    }
+                    Some(d)
+                }
+                _ => None,
+            };
             cells.push(CellDelta {
                 stencil: stencil.to_string(),
                 method: method.to_string(),
@@ -222,8 +313,28 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
                 cur_cycles,
                 delta,
                 regressed,
+                host_delta,
                 ops_note,
             });
+        }
+        // host band, serving side: fused throughput per row (positive
+        // delta = fewer Mpts/s = slower)
+        let mpts = |row: &Json| {
+            row.get("fused_serve").and_then(|f| f.get("fused_mpts_per_s")).and_then(Json::as_f64)
+        };
+        if let (Some(b), Some(c)) = (mpts(brow), mpts(crow)) {
+            if b > 0.0 {
+                let d = (b - c) / b;
+                let note = format!(
+                    "{stencil}: fused serve {b:.2} → {c:.2} Mpts/s ({:+.2}%)",
+                    -d * 100.0
+                );
+                if d > HOST_FAIL_TOLERANCE {
+                    host_regressions.push(note);
+                } else if d > HOST_ADVISORY_TOLERANCE {
+                    host_advisories.push(note);
+                }
+            }
         }
         // advisory: attribute fused-serve wall-clock drift to a phase
         // when both snapshots carry a traced profile (v5+)
@@ -244,7 +355,15 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
             }
         }
     }
-    Ok(Comparison { pending: false, tolerance, cells, regressions, phase_notes })
+    Ok(Comparison {
+        pending: false,
+        tolerance,
+        cells,
+        regressions,
+        host_regressions,
+        host_advisories,
+        phase_notes,
+    })
 }
 
 /// Every (stencil, method) cell of one snapshot, compared against
@@ -273,6 +392,7 @@ fn self_cells(snapshot: &Json) -> anyhow::Result<Vec<CellDelta>> {
                 cur_cycles: cycles,
                 delta: 0.0,
                 regressed: false,
+                host_delta: None,
                 ops_note: None,
             });
         }
@@ -280,34 +400,45 @@ fn self_cells(snapshot: &Json) -> anyhow::Result<Vec<CellDelta>> {
     Ok(cells)
 }
 
-/// Multiply every `cycles` field of a snapshot by `factor` (the
-/// self-test's injected regression).
-pub fn inflate_cycles(snapshot: &Json, factor: f64) -> Json {
+/// Multiply every `key` numeric field of a snapshot by `factor` (the
+/// self-test's injected perturbation). `round` quantizes the product to
+/// an integer — what the `cycles` fields expect.
+pub fn inflate_key(snapshot: &Json, key: &str, factor: f64, round: bool) -> Json {
     match snapshot {
         Json::Obj(m) => Json::Obj(
             m.iter()
                 .map(|(k, v)| {
-                    let v = if k == "cycles" {
+                    let v = if k == key {
                         match v {
-                            Json::Num(n) => Json::Num((n * factor).round()),
+                            Json::Num(n) => {
+                                let x = n * factor;
+                                Json::Num(if round { x.round() } else { x })
+                            }
                             other => other.clone(),
                         }
                     } else {
-                        inflate_cycles(v, factor)
+                        inflate_key(v, key, factor, round)
                     };
                     (k.clone(), v)
                 })
                 .collect(),
         ),
-        Json::Arr(a) => Json::Arr(a.iter().map(|v| inflate_cycles(v, factor)).collect()),
+        Json::Arr(a) => Json::Arr(a.iter().map(|v| inflate_key(v, key, factor, round)).collect()),
         other => other.clone(),
     }
 }
 
-/// Prove the gate trips: compare `current` against itself with an
-/// injected cycle inflation beyond tolerance, and error if no regression
-/// is reported. CI runs this every build so a silently vacuous gate
-/// cannot survive.
+/// Multiply every `cycles` field of a snapshot by `factor` (the
+/// self-test's injected regression).
+pub fn inflate_cycles(snapshot: &Json, factor: f64) -> Json {
+    inflate_key(snapshot, "cycles", factor, true)
+}
+
+/// Prove the gate trips: compare `current` against itself with injected
+/// regressions — cycle inflation beyond tolerance, host wall-clock
+/// inflation and serving-throughput deflation beyond
+/// [`HOST_FAIL_TOLERANCE`] — and error if any goes undetected. CI runs
+/// this every build so a silently vacuous gate cannot survive.
 pub fn self_test(current: &Json, tolerance: f64) -> anyhow::Result<Comparison> {
     anyhow::ensure!(
         current.get("pending").and_then(Json::as_bool) != Some(true),
@@ -317,7 +448,33 @@ pub fn self_test(current: &Json, tolerance: f64) -> anyhow::Result<Comparison> {
     let cmp = compare(current, &inflated, tolerance)?;
     anyhow::ensure!(
         !cmp.regressions.is_empty(),
-        "perf-gate self-test failed: injected regression was not detected"
+        "perf-gate self-test failed: injected cycle regression was not detected"
+    );
+    // host wall-clock band: +2× the failure tolerance must fail …
+    let slow = inflate_key(current, "host_seconds", 1.0 + 2.0 * HOST_FAIL_TOLERANCE, false);
+    let cmp_slow = compare(current, &slow, tolerance)?;
+    anyhow::ensure!(
+        !cmp_slow.host_regressions.is_empty() && !cmp_slow.passed(),
+        "perf-gate self-test failed: injected host wall-clock regression was not detected"
+    );
+    // … while drift inside the advisory band only advises
+    let mild = inflate_key(
+        current,
+        "host_seconds",
+        1.0 + (HOST_ADVISORY_TOLERANCE + HOST_FAIL_TOLERANCE) / 2.0,
+        false,
+    );
+    let cmp_mild = compare(current, &mild, tolerance)?;
+    anyhow::ensure!(
+        cmp_mild.passed() && !cmp_mild.host_advisories.is_empty(),
+        "perf-gate self-test failed: advisory-band host drift mis-gated"
+    );
+    // serving throughput: a >10% Mpts/s drop must fail
+    let starved = inflate_key(current, "fused_mpts_per_s", 1.0 - 2.0 * HOST_FAIL_TOLERANCE, false);
+    let cmp_starved = compare(current, &starved, tolerance)?;
+    anyhow::ensure!(
+        !cmp_starved.host_regressions.is_empty() && !cmp_starved.passed(),
+        "perf-gate self-test failed: injected serving-throughput regression was not detected"
     );
     // and the unperturbed comparison must pass
     let clean = compare(current, current, tolerance)?;
@@ -374,6 +531,34 @@ mod tests {
         let snap = tiny_snapshot();
         let cmp = self_test(snap, DEFAULT_TOLERANCE).unwrap();
         assert!(!cmp.regressions.is_empty());
+    }
+
+    #[test]
+    fn host_gate_has_two_bands() {
+        let snap = tiny_snapshot();
+        // +25% host wall-clock: beyond the 10% failure band
+        let slow = inflate_key(snap, "host_seconds", 1.25, false);
+        let cmp = compare(snap, &slow, DEFAULT_TOLERANCE).unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions.is_empty(), "sim cycles untouched");
+        assert!(!cmp.host_regressions.is_empty());
+        assert!(cmp.to_markdown().contains("host gate **FAILED**"));
+        // +5%: inside the 2%–10% advisory band — reported, not failing
+        let mild = inflate_key(snap, "host_seconds", 1.05, false);
+        let cmp = compare(snap, &mild, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.passed());
+        assert!(!cmp.host_advisories.is_empty());
+        assert!(cmp.to_markdown().contains("advisory host drift"));
+        // host improvements never fail or advise
+        let fast = inflate_key(snap, "host_seconds", 0.5, false);
+        let cmp = compare(snap, &fast, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.passed() && cmp.host_advisories.is_empty());
+        // serving throughput drop beyond 10% fails too
+        let starved = inflate_key(snap, "fused_mpts_per_s", 0.8, false);
+        let cmp = compare(snap, &starved, DEFAULT_TOLERANCE).unwrap();
+        assert!(!cmp.passed());
+        let mentions_mpts = cmp.host_regressions.iter().any(|r| r.contains("Mpts/s"));
+        assert!(mentions_mpts, "{:?}", cmp.host_regressions);
     }
 
     #[test]

@@ -30,11 +30,21 @@
 
 use super::fuse::{fuse, Section, SectionMeta};
 use super::ir::Op;
+use crate::obs::registry::{self, Counter};
 use crate::obs::span::{span, span_arg};
 use crate::sim::SimConfig;
 use std::fmt;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Live counter of row-group blocks dispatched by `Par` sections —
+/// together with `stencil_pool_jobs_total` this shows how much
+/// intra-shard parallelism the compiled engine actually exposes.
+fn row_groups_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| registry::global().counter("stencil_kir_row_groups_total"))
+}
 
 /// Which host execution engine to use for a KIR program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -220,6 +230,7 @@ impl ExecPlan {
                     self.run_block(block, &shared, &mut main_state);
                 }
                 PlanSection::Par(blocks) => {
+                    row_groups_counter().add(blocks.len() as u64);
                     if threads <= 1 || blocks.len() <= 1 {
                         for (bi, block) in blocks.iter().enumerate() {
                             let _g = span_arg("kir.row_group", "kir", ("block", bi as f64));
@@ -578,11 +589,15 @@ mod tests {
         let plan = ExecPlan::new(&k.ops, 8, 16, 2);
         assert_eq!(plan.par_blocks(), 2);
         assert_eq!(plan.op_count(), 18);
+        // registry counter is process-global: assert the delta across
+        // these three runs (one Par section × 2 blocks each)
+        let groups_before = row_groups_counter().get();
         for threads in [1usize, 2, 4] {
             let mut mem = host.mem.clone();
             plan.run(&mut mem, threads);
             assert_eq!(mem, interp.mem, "threads={threads}");
         }
+        assert!(row_groups_counter().get() >= groups_before + 6);
         assert_eq!(plan.effective_threads(2), 2);
         assert_eq!(plan.effective_threads(16), 2); // capped by par blocks
     }

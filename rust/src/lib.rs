@@ -31,9 +31,12 @@
 //! - [`obs`] — the observability layer: low-overhead structured spans
 //!   (a compile-away no-op when disabled) threaded through serving,
 //!   kernels, the execution engine and the tuner; Chrome trace-event
-//!   export; Prometheus-style metrics exposition; and per-phase
-//!   profiles (embed / compute / freeze / exchange / extract) feeding
-//!   the bench snapshot.
+//!   export; Prometheus-style metrics exposition; per-phase profiles
+//!   (embed / compute / freeze / exchange / extract) feeding the bench
+//!   snapshot; a live metrics registry (atomic counters / gauges /
+//!   streaming histograms) served over HTTP (`/metrics`, `/healthz`,
+//!   `/profile`); and a cost-model accuracy auditor recording predicted
+//!   vs measured performance per compiled plan.
 //! - [`runtime`] — the PJRT runtime loading AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executing them from Rust; Python never runs
 //!   at request time (gated behind the `pjrt` cargo feature; a stub

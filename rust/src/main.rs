@@ -20,6 +20,8 @@
 //!                            --size 256 --steps 8 --requests 32 \
 //!                            [--engine compiled|interpret] [--fuse-steps 4] \
 //!                            [--trace-out trace.json] [--metrics-out serve.prom] \
+//!                            [--listen-metrics 127.0.0.1:9184] [--linger-secs 0] \
+//!                            [--cost-audit cost-audit.json] \
 //!                            [--kernel tuned --tune-db target/tune/tune_db.json]
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
@@ -378,7 +380,8 @@ fn run() -> anyhow::Result<()> {
 
 /// `bench-compare`: the perf-regression gate — compare a fresh
 /// `BENCH_6.json` against `bench/baseline.json` and fail on >2% sim-cycle
-/// drift (`--self-test` proves the gate trips on an injected regression).
+/// drift or >10% host wall-clock / serving-throughput drift
+/// (`--self-test` proves the gate trips on injected regressions).
 fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::bench_harness::compare;
 
@@ -391,9 +394,10 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     if args.has("self-test") {
         let cmp = compare::self_test(&current, tolerance)?;
         println!(
-            "perf-gate self-test passed: an injected >{:.1}% cycle regression trips the gate \
-             on {} cell(s)",
+            "perf-gate self-test passed: injected cycle (>{:.1}%), host wall-clock and serving \
+             Mpts/s (>{:.0}%) regressions all trip the gate ({} cycle cell(s))",
             tolerance * 100.0,
+            compare::HOST_FAIL_TOLERANCE * 100.0,
             cmp.regressions.len()
         );
         return Ok(());
@@ -432,9 +436,12 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(
         cmp.passed(),
-        "perf gate failed: {} method(s) regressed more than {:.1}% in simulated cycles",
+        "perf gate failed: {} cell(s) regressed more than {:.1}% in simulated cycles, {} host \
+         wall-clock regression(s) beyond {:.0}%",
         cmp.regressions.len(),
-        tolerance * 100.0
+        tolerance * 100.0,
+        cmp.host_regressions.len(),
+        compare::HOST_FAIL_TOLERANCE * 100.0
     );
     Ok(())
 }
@@ -672,6 +679,9 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     let verify = !args.has("no-verify");
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let listen_metrics = args.get("listen-metrics").map(str::to_string);
+    let cost_audit_out = args.get("cost-audit").map(PathBuf::from);
+    let linger_secs = args.usize_or("linger-secs", 0)?;
 
     let serve_cfg =
         ServeConfig { workers, shards, queue_depth, plan_cache: 32, engine, fuse_steps };
@@ -695,10 +705,36 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
         server.effective_shards()
     );
 
+    // live observability listener: /metrics (global registry + the JSON
+    // snapshot rendered as Prometheus text), /healthz, /profile
+    let live = match &listen_metrics {
+        Some(addr) => {
+            let snap_server = Arc::clone(&server);
+            let health_server = Arc::clone(&server);
+            let sources = obs::live::LiveSources {
+                metrics_text: Arc::new(move || {
+                    obs::prom::render(&snap_server.metrics_json(), "stencil_serve")
+                }),
+                health_json: Arc::new(move || health_server.health_json()),
+                profile_json: Arc::new(obs::profile::latest_json),
+            };
+            let live = obs::live::serve(addr, sources)?;
+            println!("live metrics on http://{}", live.addr());
+            Some(live)
+        }
+        None => None,
+    };
+
+    // flush an atomic metrics snapshot every FLUSH_EVERY completions, so
+    // a crash or early exit still leaves a fresh exposition file behind
+    const FLUSH_EVERY: usize = 64;
+    let flushed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let run_fleet = || -> anyhow::Result<usize> {
         let mut handles = Vec::new();
         for c in 0..clients {
             let server = Arc::clone(&server);
+            let flushed = Arc::clone(&flushed);
+            let flush_path = metrics_out.clone();
             handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
                 let mut served = 0usize;
                 let mut i = c;
@@ -723,6 +759,13 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
                         );
                     }
                     served += 1;
+                    let done = flushed.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                    if done % FLUSH_EVERY == 0 {
+                        if let Some(path) = &flush_path {
+                            let text = obs::prom::render(&server.metrics_json(), "stencil_serve");
+                            let _ = stencil_matrix::util::fsx::write_atomic(path, &text);
+                        }
+                    }
                     i += clients;
                 }
                 Ok(served)
@@ -745,8 +788,27 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
     } else {
         (run_fleet(), Vec::new())
     };
-    let served = fleet?;
+    // flush once unconditionally before propagating a fleet error, so an
+    // early exit still leaves the latest snapshot on disk
     let metrics = server.metrics_json();
+    if let Some(path) = &metrics_out {
+        let text = obs::prom::render(&metrics, "stencil_serve");
+        stencil_matrix::util::fsx::write_atomic(path, &text)?;
+        println!("metrics exposition → {}", path.display());
+    }
+    if let Some(path) = &cost_audit_out {
+        let audit = obs::audit::global();
+        stencil_matrix::util::fsx::write_atomic(path, &audit.to_json().to_string_compact())?;
+        let s = audit.summary();
+        println!(
+            "cost-model audit: {} key(s), {} observation(s), mean rel err {:.1}% → {}",
+            s.keys,
+            s.observations,
+            s.mean_rel_error * 100.0,
+            path.display()
+        );
+    }
+    let served = fleet?;
     println!("{}", metrics.to_string_compact());
     if let Some(path) = &trace_out {
         let doc = obs::chrome::to_chrome_json(&spans);
@@ -760,16 +822,20 @@ fn serve_native(args: &Args) -> anyhow::Result<()> {
             path.display()
         );
         let prof = obs::profile::aggregate(&spans);
+        obs::profile::publish(&prof);
         print!("{}", obs::profile::to_markdown(&[(format!("serve {method}"), prof)]));
-    }
-    if let Some(path) = &metrics_out {
-        std::fs::write(path, obs::prom::render(&metrics, "stencil_serve"))?;
-        println!("metrics exposition → {}", path.display());
     }
     if verify {
         println!("served {served}/{requests} request(s), all verified against the scalar oracle");
     } else {
         println!("served {served}/{requests} request(s) (verification disabled)");
+    }
+    if let Some(mut live) = live {
+        if linger_secs > 0 {
+            println!("lingering {linger_secs}s for live scrapes on http://{}", live.addr());
+            std::thread::sleep(std::time::Duration::from_secs(linger_secs as u64));
+        }
+        live.shutdown();
     }
     Ok(())
 }
@@ -1030,6 +1096,8 @@ USAGE:
                        [--kernel taps|oracle|outer|tuned]
                        [--engine compiled|interpret] [--fuse-steps 1]
                        [--trace-out trace.json] [--metrics-out serve.prom]
+                       [--listen-metrics 127.0.0.1:9184] [--linger-secs 0]
+                       [--cost-audit cost-audit.json]
                        [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve --artifact evolve_2d5p_n256_t4 --executions 25
 
@@ -1050,7 +1118,17 @@ spans (enqueue → dispatch → shard kernels → halo exchanges → fused
 sections) and writes validated Chrome trace-event JSON plus a per-phase
 breakdown; traced outputs stay bitwise identical to untraced runs.
 --metrics-out writes the metrics snapshot as Prometheus text
-exposition.
+exposition (refreshed atomically every 64 completions and on exit, even
+early exits). --listen-metrics ADDR starts a live HTTP listener (port 0
+= ephemeral; the bound address is printed as 'live metrics on
+http://…') serving GET /metrics (Prometheus text: cumulative registry
+counters/gauges/histograms plus the snapshot), /healthz (queue depth,
+worker liveness, last-request age, shard-imbalance verdict) and
+/profile (per-phase breakdown of the most recent traced window);
+--linger-secs keeps it up after the fleet finishes so external scrapers
+can read the final state. --cost-audit PATH dumps the cost-model
+accuracy audit (predicted vs measured per (spec, size, plan) key) as
+JSON.
 The artifact form serves AOT PJRT artifacts (requires the pjrt feature).",
     ),
     (
@@ -1108,6 +1186,8 @@ USAGE:
                              [--kernel taps|oracle|outer|tuned]
                              [--engine compiled|interpret] [--fuse-steps 1]
                              [--trace-out trace.json] [--metrics-out serve.prom]
+                             [--listen-metrics 127.0.0.1:9184] [--linger-secs 0]
+                             [--cost-audit cost-audit.json]
                              [--no-verify] [--tune-db target/tune/tune_db.json]
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
@@ -1231,6 +1311,10 @@ mod tests {
         assert!(!usage_for("bench-json").unwrap().contains("BENCH_5.json"));
         assert!(usage_for("serve").unwrap().contains("--trace-out"));
         assert!(usage_for("serve").unwrap().contains("--metrics-out"));
+        assert!(usage_for("serve").unwrap().contains("--listen-metrics"));
+        assert!(usage_for("serve").unwrap().contains("--cost-audit"));
+        assert!(usage_for("serve").unwrap().contains("--linger-secs"));
+        assert!(usage_for("serve").unwrap().contains("/healthz"));
         assert!(usage_for("engine-bench").unwrap().contains("--trace-out"));
         assert!(usage_for("bench-compare").unwrap().contains("--self-test"));
         assert!(usage_for("bench-compare").unwrap().contains("baseline"));

@@ -1,0 +1,371 @@
+//! Cost-model accuracy auditor: predicted vs measured per-plan
+//! performance, closing the loop between `tune/cost.rs`'s analytic
+//! model and what the serving hot path actually measures.
+//!
+//! Every time the sharded scheduler runs a compiled plan it records one
+//! observation: the plan's predicted cycles/point and memory
+//! slots/point (computed once per key and memoized) next to the
+//! measured kernel CPU-seconds per point-step. The analytic model is
+//! *relative* — it ranks plans, it does not know the host's clock — so
+//! accuracy is judged after a single global calibration: the mean
+//! implied rate `predicted_cycles_per_point / measured_s_per_pt` over
+//! all keys scales predictions to seconds, and each key's relative
+//! error is how far its measurement sits from its calibrated
+//! prediction. A model that ranks plans consistently has near-zero
+//! errors after calibration; drift between the model and reality (the
+//! ROADMAP's online-autotuning prerequisite) shows up directly in
+//! `stencil_cost_model_mean_rel_error` / `_max_rel_error`.
+//!
+//! Keys are `(spec, n, plan, machine fingerprint)`; the whole audit
+//! dumps to / reloads from a `cost-audit.json` artifact.
+
+use super::registry;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Audit artifact schema version.
+pub const AUDIT_VERSION: u64 = 1;
+
+/// Accumulated statistics for one (spec, n, plan, fingerprint) key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyStats {
+    /// Stencil name (e.g. `2d9p-box-r1`).
+    pub spec: String,
+    /// Interior domain extent per dimension.
+    pub n: usize,
+    /// Plan label (tune-plan label, or the paper default for `outer`).
+    pub plan: String,
+    /// Machine fingerprint the prediction was made for.
+    pub fingerprint: String,
+    /// Model-predicted cycles per output point per step.
+    pub predicted_cycles_per_point: f64,
+    /// Model-predicted memory-pipe slots per output point per step.
+    pub predicted_mem_per_point: f64,
+    /// Observations recorded.
+    pub count: u64,
+    /// Mean measured kernel CPU-seconds per point-step.
+    pub mean_s_per_pt: f64,
+    /// Fastest observation.
+    pub min_s_per_pt: f64,
+    /// Slowest observation.
+    pub max_s_per_pt: f64,
+}
+
+impl KeyStats {
+    fn key(&self) -> String {
+        format!("{}|n{}|{}|{}", self.spec, self.n, self.plan, self.fingerprint)
+    }
+}
+
+/// Model-error summary over every audited key.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AuditSummary {
+    /// Distinct (spec, n, plan, fingerprint) keys audited.
+    pub keys: usize,
+    /// Observations across all keys.
+    pub observations: u64,
+    /// Calibrated prediction rate: mean implied
+    /// `predicted_cycles_per_point / measured_s_per_pt` (≈ effective Hz).
+    pub calibrated_hz: f64,
+    /// Mean per-key relative error of the calibrated prediction.
+    pub mean_rel_error: f64,
+    /// Worst per-key relative error.
+    pub max_rel_error: f64,
+}
+
+/// Thread-safe predicted-vs-measured store (see module docs).
+pub struct CostAudit {
+    inner: Mutex<BTreeMap<String, KeyStats>>,
+}
+
+impl Default for CostAudit {
+    fn default() -> CostAudit {
+        CostAudit::new()
+    }
+}
+
+fn rel_error(stats: &KeyStats, calibrated_hz: f64) -> f64 {
+    if stats.mean_s_per_pt <= 0.0 || calibrated_hz <= 0.0 {
+        return 0.0;
+    }
+    let predicted_s = stats.predicted_cycles_per_point / calibrated_hz;
+    (predicted_s / stats.mean_s_per_pt - 1.0).abs()
+}
+
+fn summarize(map: &BTreeMap<String, KeyStats>) -> AuditSummary {
+    let rated: Vec<&KeyStats> = map.values().filter(|k| k.mean_s_per_pt > 0.0).collect();
+    let observations = map.values().map(|k| k.count).sum();
+    if rated.is_empty() {
+        return AuditSummary { keys: map.len(), observations, ..AuditSummary::default() };
+    }
+    let calibrated_hz = rated
+        .iter()
+        .map(|k| k.predicted_cycles_per_point / k.mean_s_per_pt)
+        .sum::<f64>()
+        / rated.len() as f64;
+    let errors: Vec<f64> = rated.iter().map(|k| rel_error(k, calibrated_hz)).collect();
+    AuditSummary {
+        keys: map.len(),
+        observations,
+        calibrated_hz,
+        mean_rel_error: errors.iter().sum::<f64>() / errors.len() as f64,
+        max_rel_error: errors.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+impl CostAudit {
+    /// An empty audit (the process-wide one is [`global`]).
+    pub fn new() -> CostAudit {
+        CostAudit { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record one measured plan execution. `predict` supplies
+    /// `(cycles_per_point, mem_per_point)` and runs only the first time
+    /// a key is seen (predictions are memoized — it may be expensive);
+    /// returning `None` skips the observation (no model for this plan).
+    /// `measured_seconds` is the kernel CPU-time of the run,
+    /// `point_steps` the output points × time steps it covered.
+    pub fn observe(
+        &self,
+        spec: &str,
+        n: usize,
+        plan: &str,
+        fingerprint: &str,
+        predict: impl FnOnce() -> Option<(f64, f64)>,
+        measured_seconds: f64,
+        point_steps: f64,
+    ) {
+        if !(measured_seconds > 0.0) || !(point_steps > 0.0) {
+            return;
+        }
+        let s_per_pt = measured_seconds / point_steps;
+        let summary = {
+            let mut map = self.inner.lock().unwrap();
+            let key = format!("{spec}|n{n}|{plan}|{fingerprint}");
+            match map.get_mut(&key) {
+                Some(stats) => {
+                    stats.count += 1;
+                    stats.mean_s_per_pt +=
+                        (s_per_pt - stats.mean_s_per_pt) / stats.count as f64;
+                    stats.min_s_per_pt = stats.min_s_per_pt.min(s_per_pt);
+                    stats.max_s_per_pt = stats.max_s_per_pt.max(s_per_pt);
+                }
+                None => {
+                    let Some((cycles, mem)) = predict() else { return };
+                    map.insert(
+                        key,
+                        KeyStats {
+                            spec: spec.to_string(),
+                            n,
+                            plan: plan.to_string(),
+                            fingerprint: fingerprint.to_string(),
+                            predicted_cycles_per_point: cycles,
+                            predicted_mem_per_point: mem,
+                            count: 1,
+                            mean_s_per_pt: s_per_pt,
+                            min_s_per_pt: s_per_pt,
+                            max_s_per_pt: s_per_pt,
+                        },
+                    );
+                }
+            }
+            summarize(&map)
+        };
+        let reg = registry::global();
+        reg.counter("stencil_cost_model_observations_total").inc();
+        reg.gauge("stencil_cost_model_keys").set(summary.keys as f64);
+        reg.gauge("stencil_cost_model_calibrated_hz").set(summary.calibrated_hz);
+        reg.gauge("stencil_cost_model_mean_rel_error").set(summary.mean_rel_error);
+        reg.gauge("stencil_cost_model_max_rel_error").set(summary.max_rel_error);
+    }
+
+    /// Keys audited so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every key's statistics, sorted by key.
+    pub fn snapshot(&self) -> Vec<KeyStats> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+
+    /// The model-error summary over the current contents.
+    pub fn summary(&self) -> AuditSummary {
+        summarize(&self.inner.lock().unwrap())
+    }
+
+    /// Serialize the audit (the `cost-audit.json` artifact).
+    pub fn to_json(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        let summary = summarize(&map);
+        let entries: Vec<Json> = map
+            .values()
+            .map(|k| {
+                obj(vec![
+                    ("spec", Json::Str(k.spec.clone())),
+                    ("n", Json::Num(k.n as f64)),
+                    ("plan", Json::Str(k.plan.clone())),
+                    ("fingerprint", Json::Str(k.fingerprint.clone())),
+                    ("predicted_cycles_per_point", Json::Num(k.predicted_cycles_per_point)),
+                    ("predicted_mem_per_point", Json::Num(k.predicted_mem_per_point)),
+                    ("count", Json::Num(k.count as f64)),
+                    ("measured_s_per_pt_mean", Json::Num(k.mean_s_per_pt)),
+                    ("measured_s_per_pt_min", Json::Num(k.min_s_per_pt)),
+                    ("measured_s_per_pt_max", Json::Num(k.max_s_per_pt)),
+                    ("rel_error", Json::Num(rel_error(k, summary.calibrated_hz))),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(AUDIT_VERSION as f64)),
+            ("kind", Json::Str("cost-audit".into())),
+            ("keys", Json::Num(summary.keys as f64)),
+            ("observations", Json::Num(summary.observations as f64)),
+            ("calibrated_hz", Json::Num(summary.calibrated_hz)),
+            ("mean_rel_error", Json::Num(summary.mean_rel_error)),
+            ("max_rel_error", Json::Num(summary.max_rel_error)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild an audit from a dumped artifact ([`CostAudit::to_json`]).
+    pub fn from_json(json: &Json) -> anyhow::Result<CostAudit> {
+        anyhow::ensure!(
+            json.get("version").and_then(Json::as_usize) == Some(AUDIT_VERSION as usize),
+            "unsupported cost-audit version (want {AUDIT_VERSION})"
+        );
+        let entries = json
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("cost-audit has no entries array"))?;
+        let mut map = BTreeMap::new();
+        for e in entries {
+            let str_field = |f: &str| -> anyhow::Result<String> {
+                e.get(f)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("cost-audit entry missing '{f}'"))
+            };
+            let num_field = |f: &str| -> anyhow::Result<f64> {
+                e.get(f)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("cost-audit entry missing '{f}'"))
+            };
+            let stats = KeyStats {
+                spec: str_field("spec")?,
+                n: num_field("n")? as usize,
+                plan: str_field("plan")?,
+                fingerprint: str_field("fingerprint")?,
+                predicted_cycles_per_point: num_field("predicted_cycles_per_point")?,
+                predicted_mem_per_point: num_field("predicted_mem_per_point")?,
+                count: num_field("count")? as u64,
+                mean_s_per_pt: num_field("measured_s_per_pt_mean")?,
+                min_s_per_pt: num_field("measured_s_per_pt_min")?,
+                max_s_per_pt: num_field("measured_s_per_pt_max")?,
+            };
+            map.insert(stats.key(), stats);
+        }
+        Ok(CostAudit { inner: Mutex::new(map) })
+    }
+}
+
+/// The process-wide audit the serving scheduler records into.
+pub fn global() -> &'static CostAudit {
+    static GLOBAL: OnceLock<CostAudit> = OnceLock::new();
+    GLOBAL.get_or_init(CostAudit::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seed(audit: &CostAudit) {
+        // two keys whose measurements agree with the model's ratio (2:1)
+        // and one observation each of noise-free data
+        audit.observe("2d9p-box-r1", 64, "planA", "fp", || Some((2.0, 1.0)), 2e-3, 1e6);
+        audit.observe("2d25p-box-r2", 64, "planB", "fp", || Some((4.0, 2.0)), 4e-3, 1e6);
+    }
+
+    #[test]
+    fn consistent_model_has_zero_error_after_calibration() {
+        let audit = CostAudit::new();
+        seed(&audit);
+        let s = audit.summary();
+        assert_eq!(s.keys, 2);
+        assert_eq!(s.observations, 2);
+        // both keys imply the same rate: 2.0 cycles/pt over 2e-9 s/pt
+        assert!((s.calibrated_hz / 1e9 - 1.0).abs() < 1e-9, "{s:?}");
+        assert!(s.mean_rel_error < 1e-12, "{s:?}");
+        assert!(s.max_rel_error < 1e-12, "{s:?}");
+    }
+
+    #[test]
+    fn inconsistent_measurement_shows_up_as_error() {
+        let audit = CostAudit::new();
+        seed(&audit);
+        // a third key measured 4x slower than the model's ranking implies
+        audit.observe("3d27p-box-r1", 16, "planC", "fp", || Some((2.0, 1.0)), 8e-3, 1e6);
+        let s = audit.summary();
+        assert_eq!(s.keys, 3);
+        assert!(s.max_rel_error > 0.3, "{s:?}");
+        assert!(s.mean_rel_error > 0.05, "{s:?}");
+    }
+
+    #[test]
+    fn predictions_are_memoized_and_running_stats_update() {
+        let audit = CostAudit::new();
+        let mut calls = 0usize;
+        for ms in [2e-3, 4e-3, 6e-3] {
+            audit.observe(
+                "2d9p-box-r1",
+                64,
+                "planA",
+                "fp",
+                || {
+                    calls += 1;
+                    Some((2.0, 1.0))
+                },
+                ms,
+                1e6,
+            );
+        }
+        assert_eq!(calls, 1, "prediction must be computed once per key");
+        let snap = audit.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].count, 3);
+        assert!((snap[0].mean_s_per_pt / 4e-9 - 1.0).abs() < 1e-12);
+        assert!((snap[0].min_s_per_pt / 2e-9 - 1.0).abs() < 1e-12);
+        assert!((snap[0].max_s_per_pt / 6e-9 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unpredictable_plans_are_skipped() {
+        let audit = CostAudit::new();
+        audit.observe("2d9p-box-r1", 64, "oracle", "fp", || None, 1e-3, 1e6);
+        assert!(audit.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let audit = CostAudit::new();
+        seed(&audit);
+        audit.observe("2d9p-box-r1", 64, "planA", "fp", || Some((2.0, 1.0)), 3e-3, 1e6);
+        let dumped = audit.to_json();
+        let text = dumped.to_string_compact();
+        let reloaded = CostAudit::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reloaded.snapshot(), audit.snapshot());
+        assert_eq!(reloaded.to_json().to_string_compact(), text);
+        // version gate
+        let mut bad = dumped.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(CostAudit::from_json(&bad).is_err());
+    }
+}

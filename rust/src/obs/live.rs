@@ -1,0 +1,252 @@
+//! Live observability endpoint: a minimal blocking HTTP/1.1 listener
+//! (std-only — `TcpListener` + one short-lived thread per connection)
+//! serving the running process's telemetry:
+//!
+//! - `GET /metrics` — Prometheus text exposition: the global
+//!   [`crate::obs::registry`] (cumulative counters, gauges, streaming
+//!   `_bucket` histograms) plus whatever snapshot text the caller's
+//!   source closure appends (the server wires in
+//!   [`crate::obs::prom::render`] over its JSON metrics).
+//! - `GET /healthz` — JSON liveness verdict (queue depth, worker
+//!   liveness, last-request age, shard-imbalance verdict).
+//! - `GET /profile` — JSON per-phase breakdown of the most recent
+//!   traced window ([`crate::obs::profile::latest`]).
+//!
+//! Malformed requests get `400`, unknown paths `404`; each connection
+//! is handled on its own thread with read/write timeouts, so a slow or
+//! broken client can never wedge the accept loop. Bind to port `0` for
+//! an ephemeral port and read it back from [`LiveServer::addr`].
+
+use super::registry;
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Producer of the `/metrics` text body.
+pub type TextSource = Arc<dyn Fn() -> String + Send + Sync>;
+/// Producer of a JSON endpoint body (`/healthz`, `/profile`).
+pub type JsonSource = Arc<dyn Fn() -> Json + Send + Sync>;
+
+/// The three endpoint bodies, produced fresh per request.
+#[derive(Clone)]
+pub struct LiveSources {
+    /// `/metrics` body (Prometheus text). The global registry is
+    /// rendered *in addition* to this text.
+    pub metrics_text: TextSource,
+    /// `/healthz` body.
+    pub health_json: JsonSource,
+    /// `/profile` body.
+    pub profile_json: JsonSource,
+}
+
+impl LiveSources {
+    /// Sources exposing only the global registry, an `ok` health verdict
+    /// and the latest traced profile — enough for tools and tests that
+    /// have no serving state to wire in.
+    pub fn registry_only() -> LiveSources {
+        LiveSources {
+            metrics_text: Arc::new(String::new),
+            health_json: Arc::new(|| {
+                Json::Obj([("status".to_string(), Json::Str("ok".into()))].into_iter().collect())
+            }),
+            profile_json: Arc::new(super::profile::latest_json),
+        }
+    }
+}
+
+/// Handle to a running listener; shuts down on [`LiveServer::shutdown`]
+/// or drop.
+pub struct LiveServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl LiveServer {
+    /// The address actually bound (resolves an ephemeral `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent; also runs
+    /// on drop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LiveServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9184`, or port `0` for ephemeral) and
+/// serve `sources` until shutdown.
+pub fn serve(addr: &str, sources: LiveSources) -> anyhow::Result<LiveServer> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind metrics listener on {addr}: {e}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_accept = Arc::clone(&stop);
+    let accept = std::thread::Builder::new()
+        .name("stencil-live-accept".to_string())
+        .spawn(move || {
+            while !stop_accept.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let sources = sources.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("stencil-live-conn".to_string())
+                            .spawn(move || handle_conn(stream, &sources));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        })
+        .expect("failed to spawn live-metrics accept thread");
+    Ok(LiveServer { addr: local, stop, accept: Some(accept) })
+}
+
+fn handle_conn(mut stream: TcpStream, sources: &LiveSources) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let (status, content_type, body) = respond(&buf, sources);
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: \
+         {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Route one raw request to (status, content type, body).
+fn respond(raw: &[u8], sources: &LiveSources) -> (u16, &'static str, String) {
+    let text = String::from_utf8_lossy(raw);
+    let line = text.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return (400, "text/plain", "malformed request\n".to_string());
+    };
+    if method != "GET" || !version.starts_with("HTTP/") {
+        return (400, "text/plain", "only GET is supported\n".to_string());
+    }
+    let path = path.split('?').next().unwrap_or(path);
+    let scrape = |endpoint: &str| {
+        registry::global()
+            .counter_with("stencil_live_scrapes_total", &format!("path=\"{endpoint}\""))
+            .inc();
+    };
+    match path {
+        "/metrics" => {
+            scrape("metrics");
+            let mut body = registry::global().render();
+            body.push_str(&(sources.metrics_text)());
+            (200, "text/plain; version=0.0.4", body)
+        }
+        "/healthz" => {
+            scrape("healthz");
+            let mut body = (sources.health_json)().to_string_compact();
+            body.push('\n');
+            (200, "application/json", body)
+        }
+        "/profile" => {
+            scrape("profile");
+            let mut body = (sources.profile_json)().to_string_compact();
+            body.push('\n');
+            (200, "application/json", body)
+        }
+        _ => (404, "text/plain", "not found\n".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal HTTP client: send `request` verbatim, return (status,
+    /// body).
+    fn raw_request(addr: SocketAddr, request: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        let status: u16 =
+            response.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let body = response.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        raw_request(addr, &format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n"))
+    }
+
+    #[test]
+    fn endpoints_respond_and_errors_do_not_wedge() {
+        registry::global().counter("test_live_total").inc();
+        let mut srv = serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+        let addr = srv.addr();
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("test_live_total"), "{body}");
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).is_ok(), "{body}");
+        let (status, body) = get(addr, "/profile");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).is_ok(), "{body}");
+        // unknown path and malformed request line
+        assert_eq!(get(addr, "/nope").0, 404);
+        assert_eq!(raw_request(addr, "BLARG\r\n\r\n").0, 400);
+        assert_eq!(raw_request(addr, "PUT /metrics HTTP/1.1\r\n\r\n").0, 400);
+        // the listener survives the abuse
+        assert_eq!(get(addr, "/metrics").0, 200);
+        srv.shutdown();
+        assert!(TcpStream::connect(addr).is_err() || get_after_shutdown(addr));
+    }
+
+    /// After shutdown the accept thread is gone; a connection may still
+    /// be accepted by the OS backlog but never answered. Treat "no
+    /// response" as success.
+    fn get_after_shutdown(addr: SocketAddr) -> bool {
+        let Ok(mut stream) = TcpStream::connect(addr) else { return true };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let _ = stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).is_err() || out.is_empty()
+    }
+}

@@ -26,7 +26,25 @@
 //!   (embed / compute / freeze / exchange / extract seconds) rendered
 //!   in `engine-bench`/`shard-bench` summaries and embedded in the
 //!   `BENCH_6.json` snapshot so `bench-compare` can attribute host
-//!   regressions to a phase.
+//!   regressions to a phase; also holds the most recent traced window
+//!   for the live `/profile` endpoint;
+//! - [`registry`] — the global live-metrics registry: cumulative atomic
+//!   counters, gauges and fixed-bucket streaming histograms, fed
+//!   continuously by the serving hot paths (service counters, per-shard
+//!   kernel time, pool steal counts, halo-exchange waits, row-group
+//!   throughput) and rendered as scrape-aggregatable Prometheus text
+//!   (`_total` counters, `_bucket{le=...}` histograms);
+//! - [`live`] — a std-only blocking HTTP/1.1 listener
+//!   (`serve --listen-metrics <addr>`) serving `GET /metrics`
+//!   (registry + snapshot exposition), `GET /healthz` (queue depth,
+//!   worker liveness, last-request age, shard-imbalance verdict) and
+//!   `GET /profile` (the latest traced per-phase window);
+//! - [`audit`] — the cost-model accuracy auditor: for every compiled
+//!   plan the server runs, records measured kernel seconds per
+//!   point-step next to `tune/cost.rs`'s predicted cycles/traffic,
+//!   maintains per-(spec, shape, fingerprint) model-error statistics
+//!   under `stencil_cost_model_*`, and dumps the `cost-audit.json`
+//!   artifact.
 //!
 //! # Span taxonomy
 //!
@@ -45,15 +63,20 @@
 //! | `kir.row_group`       | `kir`    | one independent block of a Par section  | `block`    |
 //! | `tune.measure`        | `tune`   | one candidate's simulator measurement   | `candidate`|
 //!
-//! Consumers: `serve --trace-out`/`--metrics-out`, `engine-bench
-//! --trace-out`, the `shard-bench`/`engine-bench` per-phase tables, the
-//! bench snapshot, and CI (which captures, validates, and uploads a
-//! serve trace on every build). The overhead budget and the checklist
-//! for adding a span live in CONTRIBUTING.md.
+//! Consumers: `serve --trace-out`/`--metrics-out`/`--listen-metrics`,
+//! `engine-bench --trace-out`, the `shard-bench`/`engine-bench`
+//! per-phase tables, the bench snapshot, and CI (which captures,
+//! validates, and uploads a serve trace on every build, and live-scrapes
+//! `/metrics` + `/healthz` on every build). The overhead budget, the
+//! checklist for adding a span, and the metric naming/typing conventions
+//! for the registry live in CONTRIBUTING.md.
 
+pub mod audit;
 pub mod chrome;
+pub mod live;
 pub mod profile;
 pub mod prom;
+pub mod registry;
 pub mod span;
 
 pub use profile::PhaseProfile;

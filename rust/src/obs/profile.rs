@@ -130,6 +130,32 @@ pub fn aggregate(threads: &[ThreadEvents]) -> PhaseProfile {
     p
 }
 
+/// Publish `p` as the process's most recent traced window, served by
+/// the live `/profile` endpoint ([`crate::obs::live`]).
+pub fn publish(p: &PhaseProfile) {
+    *latest_slot().lock().unwrap() = Some(*p);
+}
+
+/// The most recently published profile, if any traced window ran.
+pub fn latest() -> Option<PhaseProfile> {
+    *latest_slot().lock().unwrap()
+}
+
+/// The `/profile` endpoint body: the latest profile's JSON, or a
+/// `status` stub when no traced window has run yet.
+pub fn latest_json() -> Json {
+    match latest() {
+        Some(p) => p.to_json(),
+        None => obj(vec![("status", Json::Str("no traced window yet".into()))]),
+    }
+}
+
+fn latest_slot() -> &'static std::sync::Mutex<Option<PhaseProfile>> {
+    static LATEST: std::sync::OnceLock<std::sync::Mutex<Option<PhaseProfile>>> =
+        std::sync::OnceLock::new();
+    LATEST.get_or_init(|| std::sync::Mutex::new(None))
+}
+
 /// Render labeled profiles as a markdown breakdown table (the
 /// `engine-bench`/`shard-bench` job-summary form).
 pub fn to_markdown(rows: &[(String, PhaseProfile)]) -> String {
@@ -209,5 +235,15 @@ mod tests {
         assert!(md.contains("| config | embed | compute | freeze | exchange | extract | total |"));
         assert!(md.contains("compiled T=4"), "{md}");
         assert!(md.contains("1.50 s"), "{md}");
+    }
+
+    #[test]
+    fn published_profile_is_served_as_latest() {
+        let p = PhaseProfile { compute_s: 2.0, spans: 3, ..PhaseProfile::default() };
+        publish(&p);
+        assert_eq!(latest(), Some(p));
+        let j = latest_json();
+        assert_eq!(j.get("compute_s").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("spans").and_then(Json::as_usize), Some(3));
     }
 }

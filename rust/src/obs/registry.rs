@@ -1,0 +1,368 @@
+//! Global metrics registry: cumulative counters, gauges, and fixed-bucket
+//! streaming histograms behind atomic handles, rendered in Prometheus
+//! text exposition format for the live `/metrics` endpoint
+//! ([`crate::obs::live`]).
+//!
+//! This complements the end-of-run JSON snapshot ([`crate::obs::prom`]
+//! over `serve/metrics.rs`): the snapshot summarizes one run after the
+//! fact, while the registry is fed *continuously* by the serving hot
+//! paths and is **aggregatable across scrapes** — counters are monotone
+//! totals and histograms expose cumulative `_bucket{le="..."}` counts
+//! plus `_sum`/`_count`, so `rate()` and `histogram_quantile()` work at
+//! any scrape interval. Everything is std-only: the record path is a
+//! handful of relaxed atomic operations on a pre-fetched handle; the
+//! only mutex guards registration and rendering.
+//!
+//! Conventions (see CONTRIBUTING.md): families are `stencil_*`,
+//! counters end in `_total`, second-valued histograms end in
+//! `_seconds`, and label strings are pre-rendered `key="value"` pairs
+//! with no spaces (the exposition's sample lines must stay
+//! `NAME VALUE`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default histogram bucket upper bounds for second-valued series
+/// (100 µs … 2.5 s; the `+Inf` bucket is implicit).
+pub const SECONDS_BUCKETS: [f64; 12] =
+    [1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.5, 2.5];
+
+/// A monotone cumulative counter.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge holding one `f64` (stored as bits in an atomic).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistogramCore {
+    /// Finite upper bounds, ascending; the `+Inf` bucket is derived from
+    /// `count` at render time.
+    bounds: Vec<f64>,
+    /// Per-bound (non-cumulative) observation counts.
+    buckets: Vec<AtomicU64>,
+    /// Sum of observed values, stored as `f64` bits (CAS-accumulated).
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A fixed-bucket streaming histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        if let Some(i) = c.bounds.iter().position(|&b| v <= b) {
+            c.buckets[i].fetch_add(1, Ordering::Relaxed);
+        }
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        c.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values so far.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Clone)]
+enum Series {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Series {
+    fn kind(&self) -> &'static str {
+        match self {
+            Series::Counter(_) => "counter",
+            Series::Gauge(_) => "gauge",
+            Series::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A named collection of metric series, keyed by (family, labels).
+///
+/// Handles returned by the getters are cheap to clone and record through
+/// relaxed atomics; fetching a handle takes the registry mutex once, so
+/// hot paths should fetch once and hold the handle.
+pub struct Registry {
+    inner: Mutex<BTreeMap<(String, String), Series>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// Keep metric names to the exposition alphabet (`[A-Za-z0-9_:]`), like
+/// [`crate::obs::prom`] does for snapshot keys.
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' }).collect()
+}
+
+/// `{labels}` or `{labels,extra}` or `{extra}` — never with spaces, so
+/// every rendered sample line stays `NAME VALUE`.
+fn braced(labels: &str, extra: &str) -> String {
+    match (labels.is_empty(), extra.is_empty()) {
+        (true, true) => String::new(),
+        (true, false) => format!("{{{extra}}}"),
+        (false, true) => format!("{{{labels}}}"),
+        (false, false) => format!("{{{labels},{extra}}}"),
+    }
+}
+
+fn sample(out: &mut String, name: &str, labels: &str, extra: &str, value: f64) {
+    out.push_str(name);
+    out.push_str(&braced(labels, extra));
+    out.push(' ');
+    out.push_str(&format!("{value}"));
+    out.push('\n');
+}
+
+impl Registry {
+    /// An empty registry (the process-wide one is [`global`]).
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn series(&self, family: &str, labels: &str, make: impl FnOnce() -> Series) -> Series {
+        let key = (sanitize(family), labels.replace(' ', ""));
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.entry(key).or_insert_with(make);
+        entry.clone()
+    }
+
+    /// Counter handle for `family` (no labels), registering on first use.
+    pub fn counter(&self, family: &str) -> Counter {
+        self.counter_with(family, "")
+    }
+
+    /// Counter handle for `family{labels}`, registering on first use.
+    pub fn counter_with(&self, family: &str, labels: &str) -> Counter {
+        match self.series(family, labels, || Series::Counter(Counter(Arc::new(AtomicU64::new(0)))))
+        {
+            Series::Counter(c) => c,
+            other => panic!("metric {family} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Gauge handle for `family` (no labels), registering on first use.
+    pub fn gauge(&self, family: &str) -> Gauge {
+        self.gauge_with(family, "")
+    }
+
+    /// Gauge handle for `family{labels}`, registering on first use.
+    pub fn gauge_with(&self, family: &str, labels: &str) -> Gauge {
+        match self.series(family, labels, || {
+            Series::Gauge(Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))))
+        }) {
+            Series::Gauge(g) => g,
+            other => panic!("metric {family} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Histogram handle for `family` (no labels), registering with
+    /// `bounds` on first use (later calls reuse the first bounds).
+    pub fn histogram(&self, family: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(family, "", bounds)
+    }
+
+    /// Histogram handle for `family{labels}`, registering with `bounds`
+    /// on first use (later calls reuse the first bounds).
+    pub fn histogram_with(&self, family: &str, labels: &str, bounds: &[f64]) -> Histogram {
+        match self.series(family, labels, || {
+            Series::Histogram(Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+                count: AtomicU64::new(0),
+            })))
+        }) {
+            Series::Histogram(h) => h,
+            other => panic!("metric {family} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Render every series in Prometheus text exposition format: one
+    /// `# TYPE` comment per family, then `NAME VALUE` sample lines
+    /// (histograms as cumulative `_bucket{le="..."}` + `_sum` +
+    /// `_count`).
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = "";
+        for ((family, labels), series) in inner.iter() {
+            if family != last_family {
+                out.push_str(&format!("# TYPE {family} {}\n", series.kind()));
+                last_family = family;
+            }
+            match series {
+                Series::Counter(c) => sample(&mut out, family, labels, "", c.get() as f64),
+                Series::Gauge(g) => sample(&mut out, family, labels, "", g.get()),
+                Series::Histogram(h) => {
+                    // reading buckets before `count` (and clamping) keeps
+                    // the invariant cumulative ≤ count = `+Inf` even when
+                    // an observation lands mid-render
+                    let core = &h.0;
+                    let bucket = format!("{family}_bucket");
+                    let mut cum = 0u64;
+                    let counts: Vec<u64> =
+                        core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+                    let count = core.count.load(Ordering::Relaxed);
+                    for (b, n) in core.bounds.iter().zip(counts) {
+                        cum = (cum + n).min(count);
+                        sample(&mut out, &bucket, labels, &format!("le=\"{b}\""), cum as f64);
+                    }
+                    sample(&mut out, &bucket, labels, "le=\"+Inf\"", count as f64);
+                    sample(&mut out, &format!("{family}_sum"), labels, "", h.sum());
+                    sample(&mut out, &format!("{family}_count"), labels, "", count as f64);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("test_requests_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // a second fetch of the same key shares the series
+        assert_eq!(r.counter("test_requests_total").get(), 5);
+        let g = r.gauge("test_depth");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        let text = r.render();
+        assert!(text.contains("# TYPE test_requests_total counter"), "{text}");
+        assert!(text.contains("test_requests_total 5"), "{text}");
+        assert!(text.contains("test_depth 2.5"), "{text}");
+    }
+
+    #[test]
+    fn labeled_series_stay_space_free() {
+        let r = Registry::new();
+        r.counter_with("test_jobs_total", "kind=\"own\"").add(3);
+        r.counter_with("test_jobs_total", "kind=\"stolen\"").inc();
+        let text = r.render();
+        assert!(text.contains("test_jobs_total{kind=\"own\"} 3"), "{text}");
+        assert!(text.contains("test_jobs_total{kind=\"stolen\"} 1"), "{text}");
+        // one TYPE line for the family, not one per series
+        assert_eq!(text.matches("# TYPE test_jobs_total").count(), 1, "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut parts = line.split(' ');
+            let (name, val) = (parts.next().unwrap(), parts.next().unwrap());
+            assert!(parts.next().is_none(), "bad sample line: {line}");
+            assert!(!name.is_empty() && val.parse::<f64>().is_ok(), "bad sample line: {line}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate_to_count() {
+        let r = Registry::new();
+        let h = r.histogram("test_latency_seconds", &[0.001, 0.01, 0.1]);
+        for v in [0.0005, 0.002, 0.05, 0.05, 7.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 7.1025).abs() < 1e-12);
+        let text = r.render();
+        assert!(text.contains("# TYPE test_latency_seconds histogram"), "{text}");
+        assert!(text.contains("test_latency_seconds_bucket{le=\"0.001\"} 1"), "{text}");
+        assert!(text.contains("test_latency_seconds_bucket{le=\"0.01\"} 2"), "{text}");
+        assert!(text.contains("test_latency_seconds_bucket{le=\"0.1\"} 4"), "{text}");
+        assert!(text.contains("test_latency_seconds_bucket{le=\"+Inf\"} 5"), "{text}");
+        assert!(text.contains("test_latency_seconds_count 5"), "{text}");
+    }
+
+    #[test]
+    fn concurrent_observations_are_all_counted() {
+        let r = std::sync::Arc::new(Registry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let r = std::sync::Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("test_concurrent_total");
+                    let h = r.histogram("test_concurrent_seconds", &SECONDS_BUCKETS);
+                    for i in 0..1000 {
+                        c.inc();
+                        h.observe((t * 1000 + i) as f64 * 1e-6);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("test_concurrent_total").get(), 4000);
+        assert_eq!(r.histogram("test_concurrent_seconds", &SECONDS_BUCKETS).count(), 4000);
+    }
+
+    #[test]
+    fn names_are_sanitized() {
+        let r = Registry::new();
+        r.counter("bad name-here_total").inc();
+        assert!(r.render().contains("bad_name_here_total 1"));
+    }
+}

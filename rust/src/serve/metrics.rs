@@ -1,6 +1,12 @@
 //! Serving metrics: per-request latency recorders and the aggregate
-//! counters the server reports as JSON (via the repo's own `util::json`).
+//! counters the server reports as JSON (via the repo's own `util::json`),
+//! plus the live-registry handles that mirror every record into the
+//! global [`crate::obs::registry`] so `/metrics` scrapes see cumulative
+//! `stencil_serve_*` counters and streaming latency histograms — the
+//! end-of-run JSON snapshot is a summary view, the registry is the
+//! continuously-fed source of truth.
 
+use crate::obs::registry::{self, Counter, Gauge, Histogram, SECONDS_BUCKETS};
 use crate::util::json::{obj, Json};
 use std::time::Instant;
 
@@ -110,10 +116,45 @@ fn percentile_of(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, n) - 1]
 }
 
+/// Pre-fetched global-registry handles, one per `stencil_serve_*`
+/// family. Fetched once at construction (the registry mutex is taken
+/// only then); every [`ServiceMetrics`] record mirrors into these with
+/// a few relaxed atomics.
+#[derive(Debug, Clone)]
+struct LiveHandles {
+    completed: Counter,
+    failed: Counter,
+    coalesced: Counter,
+    rejected: Counter,
+    point_steps: Counter,
+    queue_depth: Gauge,
+    queue_wait: Histogram,
+    service_time: Histogram,
+    kernel_time: Histogram,
+}
+
+impl Default for LiveHandles {
+    fn default() -> LiveHandles {
+        let r = registry::global();
+        LiveHandles {
+            completed: r.counter("stencil_serve_completed_total"),
+            failed: r.counter("stencil_serve_failed_total"),
+            coalesced: r.counter("stencil_serve_coalesced_total"),
+            rejected: r.counter("stencil_serve_rejected_total"),
+            point_steps: r.counter("stencil_serve_point_steps_total"),
+            queue_depth: r.gauge("stencil_serve_queue_depth"),
+            queue_wait: r.histogram("stencil_serve_queue_wait_seconds", &SECONDS_BUCKETS),
+            service_time: r.histogram("stencil_serve_service_seconds", &SECONDS_BUCKETS),
+            kernel_time: r.histogram("stencil_serve_kernel_seconds", &SECONDS_BUCKETS),
+        }
+    }
+}
+
 /// Aggregate serving counters; owned by the server behind a mutex.
 #[derive(Debug, Clone)]
 pub struct ServiceMetrics {
     started: Instant,
+    live: LiveHandles,
     /// Requests completed successfully.
     pub completed: u64,
     /// Requests that failed (evolution error or verification mismatch).
@@ -150,6 +191,7 @@ impl Default for ServiceMetrics {
     fn default() -> ServiceMetrics {
         ServiceMetrics {
             started: Instant::now(),
+            live: LiveHandles::default(),
             completed: 0,
             failed: 0,
             coalesced: 0,
@@ -174,6 +216,58 @@ impl ServiceMetrics {
     /// Aggregate throughput in point-steps per second of uptime.
     pub fn throughput(&self) -> f64 {
         self.point_steps as f64 / self.uptime().max(1e-12)
+    }
+
+    /// Record `waiters` completed submissions covering `point_steps`
+    /// grid-point time-steps (JSON counters + live registry).
+    pub fn record_completed(&mut self, waiters: u64, point_steps: u64) {
+        self.completed += waiters;
+        self.point_steps += point_steps;
+        self.live.completed.add(waiters);
+        self.live.point_steps.add(point_steps);
+    }
+
+    /// Record `waiters` failed submissions.
+    pub fn record_failed(&mut self, waiters: u64) {
+        self.failed += waiters;
+        self.live.failed.add(waiters);
+    }
+
+    /// Record one submission coalesced into a queued identical request.
+    pub fn record_coalesced(&mut self) {
+        self.coalesced += 1;
+        self.live.coalesced.inc();
+    }
+
+    /// Record one backpressure rejection.
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+        self.live.rejected.inc();
+    }
+
+    /// Record the current queue occupancy (high-water mark + live gauge).
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.max_queue_depth = self.max_queue_depth.max(depth);
+        self.live.queue_depth.set(depth as f64);
+    }
+
+    /// Record one request's queue wait (recorder + live histogram).
+    pub fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_wait.record(seconds);
+        self.live.queue_wait.observe(seconds);
+    }
+
+    /// Record one request's service time (recorder + live histogram).
+    pub fn record_service_time(&mut self, seconds: f64) {
+        self.service_time.record(seconds);
+        self.live.service_time.observe(seconds);
+    }
+
+    /// Record one request's kernel wall-clock (recorder + live
+    /// histogram).
+    pub fn record_kernel_time(&mut self, seconds: f64) {
+        self.kernel_time.record(seconds);
+        self.live.kernel_time.observe(seconds);
     }
 
     /// Snapshot as a JSON object.
@@ -281,6 +375,34 @@ mod tests {
         assert_eq!(j.get("max").unwrap().as_f64(), Some(7.0));
         assert!(j.get("p99").unwrap().as_f64().is_some());
         assert!(j.get("p50_s").is_none(), "count snapshots carry no seconds suffix");
+    }
+
+    #[test]
+    fn record_methods_mirror_into_the_live_registry() {
+        // the registry is process-global and other tests record into the
+        // same families concurrently, so assert deltas, not totals
+        let r = registry::global();
+        let before_completed = r.counter("stencil_serve_completed_total").get();
+        let before_kernel = r.histogram("stencil_serve_kernel_seconds", &SECONDS_BUCKETS).count();
+        let mut m = ServiceMetrics::default();
+        m.record_completed(2, 100);
+        m.record_failed(1);
+        m.record_coalesced();
+        m.record_rejected();
+        m.record_queue_depth(7);
+        m.record_queue_wait(0.001);
+        m.record_service_time(0.002);
+        m.record_kernel_time(0.0015);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.point_steps, 100);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.coalesced, 1);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.max_queue_depth, 7);
+        assert_eq!(m.kernel_time.count(), 1);
+        assert!(r.counter("stencil_serve_completed_total").get() >= before_completed + 2);
+        let after_kernel = r.histogram("stencil_serve_kernel_seconds", &SECONDS_BUCKETS).count();
+        assert!(after_kernel >= before_kernel + 1);
     }
 
     #[test]

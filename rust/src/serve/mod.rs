@@ -34,7 +34,10 @@
 //!   backpressure, coalescing of identical requests, dispatcher thread;
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
 //! - [`metrics`] — latency/throughput/traffic counters reported as JSON,
-//!   including per-request kernel wall-clock with p50/p99.
+//!   including per-request kernel wall-clock with p50/p99; every
+//!   recorder also mirrors into the process-global
+//!   [`crate::obs::registry`] (cumulative counters, gauges, streaming
+//!   histograms), the source behind the live `/metrics` endpoint.
 //!
 //! **Exactness guarantee**: with the oracle/taps kernels, sharded
 //! multi-threaded evolution is bitwise equal to

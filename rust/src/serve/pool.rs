@@ -10,6 +10,7 @@
 //! job and surfaced as one error after the barrier, so a poisoned shard
 //! cannot deadlock the step.
 
+use crate::obs::registry::{self, Counter};
 use crate::obs::span::span_arg;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -29,6 +30,12 @@ struct Shared {
     queues: Vec<Mutex<VecDeque<Job>>>,
     state: Mutex<State>,
     wake: Condvar,
+    /// Live registry handles (fetched once at pool construction): jobs a
+    /// worker popped from its own deque vs. jobs it stole — the
+    /// `stencil_pool_jobs_total{kind=...}` telemetry behind shard-balance
+    /// analysis.
+    own_jobs: Counter,
+    stolen_jobs: Counter,
 }
 
 /// Counts a batch down to zero and wakes the submitter.
@@ -73,6 +80,9 @@ impl WorkerPool {
             queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
             state: Mutex::new(State { pending: 0, shutdown: false }),
             wake: Condvar::new(),
+            own_jobs: registry::global().counter_with("stencil_pool_jobs_total", "kind=\"own\""),
+            stolen_jobs: registry::global()
+                .counter_with("stencil_pool_jobs_total", "kind=\"stolen\""),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -89,6 +99,13 @@ impl WorkerPool {
     /// Number of worker threads.
     pub fn workers(&self) -> usize {
         self.shared.queues.len()
+    }
+
+    /// Worker threads still running (a worker that panicked outside a
+    /// caught job, or exited, no longer counts) — the `/healthz` worker
+    /// liveness readout.
+    pub fn alive(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_finished()).count()
     }
 
     /// Distribute jobs round-robin over the worker deques and wake everyone.
@@ -192,12 +209,14 @@ fn pop(sh: &Shared, idx: usize) -> Option<Job> {
     let w = sh.queues.len();
     if let Some(job) = sh.queues[idx].lock().unwrap().pop_front() {
         sh.state.lock().unwrap().pending -= 1;
+        sh.own_jobs.inc();
         return Some(job);
     }
     for k in 1..w {
         let q = (idx + k) % w;
         if let Some(job) = sh.queues[q].lock().unwrap().pop_back() {
             sh.state.lock().unwrap().pending -= 1;
+            sh.stolen_jobs.inc();
             return Some(job);
         }
     }
@@ -292,6 +311,22 @@ mod tests {
         assert!(err.contains("shard 2 exploded"), "{err}");
         // pool still usable afterwards
         pool.run_batch(vec![Box::new(|| {}) as Job]).unwrap();
+    }
+
+    #[test]
+    fn job_counters_and_liveness_feed_the_registry() {
+        // counters are process-global (other pool tests feed the same
+        // families), so assert the delta across this batch only
+        let own = registry::global().counter_with("stencil_pool_jobs_total", "kind=\"own\"");
+        let stolen =
+            registry::global().counter_with("stencil_pool_jobs_total", "kind=\"stolen\"");
+        let before = own.get() + stolen.get();
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.alive(), 2);
+        let jobs: Vec<Job> = (0..8).map(|_| Box::new(|| {}) as Job).collect();
+        pool.run_batch(jobs).unwrap();
+        assert!(own.get() + stolen.get() >= before + 8);
+        assert_eq!(pool.alive(), 2, "workers survive the batch");
     }
 
     #[test]

@@ -29,13 +29,16 @@ use super::pool::{Job, WorkerPool};
 use crate::codegen::{Method, OuterParams};
 use crate::kir::{Engine, HostKernel};
 use crate::obs::span::span_arg;
+use crate::obs::{audit, registry};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
-use crate::tune::{TuneDb, TunePlan};
+use crate::tune::{cost, TuneDb, TunePlan};
 use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Which kernel a plan compiles to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -394,8 +397,16 @@ impl PlanCache {
     /// The tuned-plan label this cache resolves for a stencil (the same
     /// lookup plan compilation performs), if its database has one.
     pub fn tuned_label(&self, spec: StencilSpec) -> Option<String> {
+        self.tuned_info(spec).map(|i| i.label)
+    }
+
+    /// The full tuning-database match for a stencil (memoized, same
+    /// lookup plan compilation performs), if the database has one — the
+    /// cost-model auditor reads the matched plan from here without
+    /// compiling anything.
+    pub fn tuned_info(&self, spec: StencilSpec) -> Option<TunedInfo> {
         let mut inner = self.inner.lock().unwrap();
-        Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec).map(|i| i.label)
+        Self::resolve_tuned(&self.tune, &mut inner.tuned_memo, spec)
     }
 
     /// The time-tile depth the tuning database's plan for this stencil
@@ -615,6 +626,10 @@ impl ShardedEvolver {
         };
         let tiles: Arc<Vec<Mutex<DenseGrid>>> =
             Arc::new(part.extract(grid).into_iter().map(Mutex::new).collect());
+        // per-shard kernel CPU nanoseconds, accumulated across chunks —
+        // feeds the shard-imbalance gauge and the cost-model auditor
+        let shard_nanos: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_shards).map(|_| AtomicU64::new(0)).collect());
         // a single shard may drive every core through the compiled
         // engine's row-group threading; with multiple shards the pool's
         // shard-level parallelism owns the cores (results are bitwise
@@ -635,10 +650,14 @@ impl ShardedEvolver {
                 .map(|s| {
                     let tiles = Arc::clone(&tiles);
                     let plan = Arc::clone(&plans[s]);
+                    let shard_nanos = Arc::clone(&shard_nanos);
                     let job: Job = Box::new(move || {
                         let _g = span_arg("serve.kernel", "serve", ("shard", s as f64));
                         let mut tile = tiles[s].lock().unwrap();
+                        let t0 = Instant::now();
                         *tile = plan.apply_with(&tile, kernel_threads);
+                        shard_nanos[s]
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     });
                     job
                 })
@@ -662,6 +681,10 @@ impl ShardedEvolver {
             }
         }
 
+        let nanos: Vec<u64> = shard_nanos.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        record_shard_times(&nanos);
+        self.audit_observe(spec, grid, steps, method, t, &nanos);
+
         let guards: Vec<std::sync::MutexGuard<'_, DenseGrid>> =
             tiles.iter().map(|m| m.lock().unwrap()).collect();
         let refs: Vec<&DenseGrid> = guards.iter().map(|g| &**g).collect();
@@ -671,6 +694,85 @@ impl ShardedEvolver {
             FuseReport { fuse_steps: t, halo_exchanges },
         ))
     }
+
+    /// Feed one evolution into the cost-model auditor: measured per-shard
+    /// kernel CPU seconds against the analytic model's prediction for the
+    /// plan this request ran (`outer`, or a tuning-database match). The
+    /// oracle/taps kernels have no cost model — the auditor skips them.
+    fn audit_observe(
+        &self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        method: KernelMethod,
+        t: usize,
+        nanos: &[u64],
+    ) {
+        let measured_seconds = nanos.iter().sum::<u64>() as f64 / 1e9;
+        let interior: usize = grid.shape.iter().map(|&d| d - 2 * spec.order).product();
+        let point_steps = (interior * steps) as f64;
+        let n = grid.shape[0] - 2 * spec.order;
+        let tune_plan = match method {
+            KernelMethod::Outer => Some(TunePlan::paper_default(spec).fused(t)),
+            KernelMethod::Tuned => {
+                // predictions only make sense for DB matches the host
+                // backend actually ran; taps fallbacks are unmodelled
+                if self.cache.tuned_runs_host(spec) {
+                    self.cache.tuned_info(spec).map(|info| info.plan.fused(t))
+                } else {
+                    None
+                }
+            }
+            KernelMethod::Oracle | KernelMethod::Taps => None,
+        };
+        let plan_label = tune_plan
+            .as_ref()
+            .map(|p| p.label(spec.dims))
+            .unwrap_or_else(|| method.to_string());
+        audit::global().observe(
+            &spec.to_string(),
+            n,
+            &plan_label,
+            machine_fingerprint(),
+            || {
+                let p = tune_plan?;
+                let e = cost::estimate(&SimConfig::default(), spec, n, &p).ok()?;
+                Some((e.cycles_per_point, e.mem_per_point))
+            },
+            measured_seconds,
+            point_steps,
+        );
+    }
+}
+
+/// The machine fingerprint audit observations are keyed by (the default
+/// §5.1 simulated machine every host kernel is compiled against),
+/// computed once per process.
+fn machine_fingerprint() -> &'static str {
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| SimConfig::default().fingerprint())
+}
+
+/// Fold one evolution's per-shard kernel nanoseconds into the live
+/// registry: a `stencil_shard_kernel_seconds{shard="..."}` gauge per
+/// shard and the `stencil_shard_imbalance` gauge (max/mean shard kernel
+/// time — 1.0 is perfectly balanced, 2.0 means the slowest shard worked
+/// twice the average). Returns the imbalance ratio (0.0 when there was
+/// no measurable work).
+pub fn record_shard_times(nanos: &[u64]) -> f64 {
+    let secs: Vec<f64> = nanos.iter().map(|&ns| ns as f64 / 1e9).collect();
+    let max = secs.iter().cloned().fold(0.0f64, f64::max);
+    if secs.is_empty() || max == 0.0 {
+        return 0.0;
+    }
+    let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+    let r = registry::global();
+    for (s, &v) in secs.iter().enumerate() {
+        r.gauge_with("stencil_shard_kernel_seconds", &format!("shard=\"{s}\"")).set(v);
+    }
+    let imbalance = max / mean;
+    r.gauge("stencil_shard_imbalance").set(imbalance);
+    imbalance
 }
 
 /// Fusion accounting of one sharded evolution.
@@ -917,6 +1019,48 @@ mod tests {
                 assert!(shards_used >= 1);
             }
         }
+    }
+
+    #[test]
+    fn shard_time_recording_computes_imbalance() {
+        // induced skew: one shard worked 4 ms, two worked 1 ms →
+        // max/mean = 4 / 2 = 2.0
+        let imb = record_shard_times(&[4_000_000, 1_000_000, 1_000_000]);
+        assert!((imb - 2.0).abs() < 1e-12, "{imb}");
+        // perfectly balanced shards sit at 1.0
+        let bal = record_shard_times(&[5_000, 5_000]);
+        assert!((bal - 1.0).abs() < 1e-12, "{bal}");
+        // nothing measurable: no verdict, gauge untouched
+        assert_eq!(record_shard_times(&[]), 0.0);
+        assert_eq!(record_shard_times(&[0, 0]), 0.0);
+        // the per-shard gauges exist in the exposition (value raced by
+        // concurrent evolutions, so only presence is asserted)
+        let text = registry::global().render();
+        assert!(text.contains("stencil_shard_kernel_seconds{shard=\"0\"}"), "{text}");
+        assert!(text.contains("stencil_shard_imbalance"), "{text}");
+    }
+
+    #[test]
+    fn fused_evolution_feeds_the_cost_audit() {
+        let spec = StencilSpec::box2d(1);
+        let ev = ShardedEvolver::new(2);
+        let grid = DenseGrid::verification_input(&[20, 20], 77);
+        ev.evolve_fused(spec, &grid, 2, 2, KernelMethod::Outer, 1).unwrap();
+        let snap = audit::global().snapshot();
+        let entry = snap
+            .iter()
+            .find(|k| k.spec == spec.to_string() && k.n == 18)
+            .expect("outer evolution audited");
+        assert!(entry.predicted_cycles_per_point > 0.0);
+        assert!(entry.count >= 1);
+        assert!(entry.mean_s_per_pt > 0.0);
+        // taps runs are unmodelled and never audited
+        ev.evolve_fused(spec, &grid, 2, 2, KernelMethod::Taps, 1).unwrap();
+        let snap = audit::global().snapshot();
+        assert!(
+            !snap.iter().any(|k| k.plan == "taps"),
+            "taps must not be audited: {snap:?}"
+        );
     }
 
     #[test]

@@ -12,12 +12,14 @@
 use super::metrics::ServiceMetrics;
 use super::scheduler::{KernelMethod, ShardedEvolver};
 use crate::kir::Engine;
+use crate::obs::registry;
 use crate::obs::span::span;
 use crate::runtime::{PjrtRuntime, Registry, StencilEngine};
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::util::json::{obj, Json};
 use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -190,6 +192,11 @@ struct ServerInner {
     not_full: Condvar,
     not_empty: Condvar,
     metrics: Mutex<ServiceMetrics>,
+    /// Server construction time — the epoch `last_request_ns` counts from.
+    epoch: Instant,
+    /// Nanoseconds since `epoch` at which the most recent request
+    /// finished (0 = none yet); feeds the `/healthz` last-request age.
+    last_request_ns: AtomicU64,
 }
 
 impl ServerInner {
@@ -200,7 +207,7 @@ impl ServerInner {
         if let Some(p) = q.entries.iter_mut().find(|p| p.req == req) {
             let _c = span("serve.coalesce", "serve");
             p.waiters += 1;
-            self.metrics.lock().unwrap().coalesced += 1;
+            self.metrics.lock().unwrap().record_coalesced();
             return Ok(Ticket { slot: Arc::clone(&p.slot) });
         }
         if q.entries.len() >= self.cfg.queue_depth {
@@ -213,9 +220,7 @@ impl ServerInner {
             enqueued: Instant::now(),
             waiters: 1,
         });
-        let mut m = self.metrics.lock().unwrap();
-        m.max_queue_depth = m.max_queue_depth.max(q.entries.len());
-        drop(m);
+        self.metrics.lock().unwrap().record_queue_depth(q.entries.len());
         self.not_empty.notify_all();
         Ok(Ticket { slot })
     }
@@ -259,16 +264,19 @@ impl ServerInner {
                 let points = pending.req.n.pow(pending.req.spec.dims as u32);
                 {
                     let mut m = self.metrics.lock().unwrap();
-                    m.completed += waiters as u64;
                     // served work: each coalesced waiter received these
                     // point-steps, same as `completed` counts submissions
-                    m.point_steps += (points * pending.req.steps * waiters) as u64;
-                    m.queue_wait.record(queue_seconds);
-                    m.service_time.record(service_seconds);
-                    m.kernel_time.record(kernel_seconds);
+                    m.record_completed(
+                        waiters as u64,
+                        (points * pending.req.steps * waiters) as u64,
+                    );
+                    m.record_queue_wait(queue_seconds);
+                    m.record_service_time(service_seconds);
+                    m.record_kernel_time(kernel_seconds);
                     m.halo_exchanges.record(fuse.halo_exchanges as f64);
                     m.fused_steps.record(fuse.fuse_steps as f64);
                 }
+                self.touch();
                 let report = ShardReport {
                     queue_seconds,
                     service_seconds,
@@ -285,10 +293,17 @@ impl ServerInner {
                 pending.slot.fulfill(Ok(Arc::new(ShardResponse { grid, report })));
             }
             Err(e) => {
-                self.metrics.lock().unwrap().failed += waiters as u64;
+                self.metrics.lock().unwrap().record_failed(waiters as u64);
+                self.touch();
                 pending.slot.fulfill(Err(format!("{e:#}")));
             }
         }
+    }
+
+    /// Stamp "a request just finished" for the `/healthz` age readout.
+    fn touch(&self) {
+        let ns = self.epoch.elapsed().as_nanos() as u64;
+        self.last_request_ns.store(ns.max(1), Ordering::Relaxed);
     }
 
     /// Execute one request (no queue involved). Returns the grid, the
@@ -404,6 +419,8 @@ impl StencilServer {
                 not_full: Condvar::new(),
                 not_empty: Condvar::new(),
                 metrics: Mutex::new(ServiceMetrics::default()),
+                epoch: Instant::now(),
+                last_request_ns: AtomicU64::new(0),
             }),
             dispatcher: Mutex::new(None),
         }
@@ -444,7 +461,7 @@ impl StencilServer {
         match self.inner.admit(&mut q, req) {
             Ok(ticket) => Ok(ticket),
             Err(_) => {
-                self.inner.metrics.lock().unwrap().rejected += 1;
+                self.inner.metrics.lock().unwrap().record_rejected();
                 anyhow::bail!(
                     "queue full ({} pending, depth {})",
                     q.entries.len(),
@@ -505,6 +522,39 @@ impl StencilServer {
             p.slot
                 .fulfill(Err("server shut down before request was served".to_string()));
         }
+    }
+
+    /// Liveness verdict for the `/healthz` endpoint: queue depth, worker
+    /// liveness, age of the most recent completed request, and the
+    /// shard-imbalance verdict read from the live gauge.
+    pub fn health_json(&self) -> Json {
+        let workers = self.inner.evolver.pool().workers();
+        let alive = self.inner.evolver.pool().alive();
+        let last_ns = self.inner.last_request_ns.load(Ordering::Relaxed);
+        let last_request_age_s = if last_ns == 0 {
+            Json::Null
+        } else {
+            let age = self.inner.epoch.elapsed().as_secs_f64() - last_ns as f64 / 1e9;
+            Json::Num(age.max(0.0))
+        };
+        let imbalance = registry::global().gauge("stencil_shard_imbalance").get();
+        let balance = if imbalance == 0.0 {
+            "idle"
+        } else if imbalance <= 1.5 {
+            "balanced"
+        } else {
+            "skewed"
+        };
+        let status = if alive == workers { "ok" } else { "degraded" };
+        obj(vec![
+            ("status", Json::Str(status.to_string())),
+            ("queue_depth", Json::Num(self.queue_len() as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("workers_alive", Json::Num(alive as f64)),
+            ("last_request_age_s", last_request_age_s),
+            ("shard_imbalance", Json::Num(imbalance)),
+            ("shard_balance", Json::Str(balance.to_string())),
+        ])
     }
 
     /// Full metrics snapshot (service + plan cache + config) as JSON.
@@ -704,6 +754,27 @@ mod tests {
         assert!(Arc::ptr_eq(&ra, &rb));
         assert_eq!(rc.report.waiters, 1);
         assert_ne!(ra.grid, rc.grid);
+    }
+
+    #[test]
+    fn health_json_reports_liveness_and_last_request_age() {
+        let server = StencilServer::new(ServeConfig::default());
+        let h = server.health_json();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        // no request served yet: age is null
+        assert!(matches!(h.get("last_request_age_s"), Some(Json::Null)), "{h:?}");
+        let t = server.submit(small_req(11)).unwrap();
+        server.drain();
+        t.wait().unwrap();
+        let h = server.health_json();
+        assert!(h.get("last_request_age_s").unwrap().as_f64().unwrap() >= 0.0, "{h:?}");
+        assert_eq!(
+            h.get("workers").unwrap().as_f64(),
+            h.get("workers_alive").unwrap().as_f64()
+        );
+        let balance = h.get("shard_balance").unwrap().as_str().unwrap();
+        assert!(["idle", "balanced", "skewed"].contains(&balance), "{balance}");
+        assert_eq!(h.get("queue_depth").unwrap().as_usize(), Some(0));
     }
 
     #[test]

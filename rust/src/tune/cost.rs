@@ -31,6 +31,7 @@ use crate::kir::{HostMachine, OpStats};
 use crate::scatter::build_cover;
 use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
+use crate::util::json::{obj, Json};
 
 /// Modelled per-point cost of one candidate plan.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +45,20 @@ pub struct CostEstimate {
     pub mem_per_point: f64,
     /// True when the DRAM-bandwidth floor is the binding constraint.
     pub mem_bound: bool,
+}
+
+impl CostEstimate {
+    /// Machine-readable form — the cost-model accuracy auditor
+    /// ([`crate::obs::audit`]) stores these predictions next to measured
+    /// serving throughput in `cost-audit.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("cycles_per_point", Json::Num(self.cycles_per_point)),
+            ("fmopa_per_point", Json::Num(self.fmopa_per_point)),
+            ("mem_per_point", Json::Num(self.mem_per_point)),
+            ("mem_bound", Json::Bool(self.mem_bound)),
+        ])
+    }
 }
 
 /// Per-unit work accumulated per output point.
@@ -281,6 +296,17 @@ mod tests {
         assert!(!small.mem_bound);
         assert!(large.mem_bound);
         assert!(large.cycles_per_point >= small.cycles_per_point);
+    }
+
+    #[test]
+    fn estimate_json_carries_every_field() {
+        let spec = StencilSpec::box2d(1);
+        let e = est(spec, 64, &TunePlan::paper_default(spec));
+        let j = e.to_json();
+        assert_eq!(j.get("cycles_per_point").unwrap().as_f64(), Some(e.cycles_per_point));
+        assert_eq!(j.get("fmopa_per_point").unwrap().as_f64(), Some(e.fmopa_per_point));
+        assert_eq!(j.get("mem_per_point").unwrap().as_f64(), Some(e.mem_per_point));
+        assert_eq!(j.get("mem_bound").unwrap().as_bool(), Some(e.mem_bound));
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Filesystem helpers: atomic file replacement.
+//!
+//! The serving CLI flushes live metrics snapshots periodically while
+//! scrapers may read the same path concurrently; a plain
+//! `fs::write` would expose half-written JSON. [`write_atomic`]
+//! writes to a sibling `.tmp` file and renames it into place —
+//! `rename(2)` is atomic on POSIX filesystems within one mount, so a
+//! reader observes either the old complete file or the new one, never
+//! a prefix.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// Write `contents` to `path` atomically: write a sibling
+/// `<path>.tmp`, fsync-free flush, then rename over the target.
+/// The temp file is removed on failure.
+pub fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension(match path.extension() {
+        Some(ext) => format!("{}.tmp", ext.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    let result = (|| {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.flush()?;
+        drop(f);
+        fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rename_replaces_the_target_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("stencil-fsx-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.json");
+        write_atomic(&path, "{\"v\":1}\n").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "{\"v\":1}\n");
+        // overwrite: reader sees old or new, and afterwards only new
+        write_atomic(&path, "{\"v\":2}\n").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "{\"v\":2}\n");
+        // no .tmp residue next to the target
+        let residue: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(residue.is_empty(), "{residue:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn extensionless_targets_get_a_plain_tmp_suffix() {
+        let dir = std::env::temp_dir().join(format!("stencil-fsx-noext-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snapshot");
+        write_atomic(&path, "data").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "data");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,7 +1,8 @@
 //! Small utilities standing in for crates absent from the offline vendor
-//! set: JSON (serde_json), property testing (proptest), and benchmark
-//! timing (criterion).
+//! set: JSON (serde_json), property testing (proptest), benchmark
+//! timing (criterion), and atomic file replacement (tempfile+rename).
 
 pub mod bench;
+pub mod fsx;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,204 @@
+//! Integration tests for the live observability service: the
+//! `/metrics` / `/healthz` / `/profile` listener under concurrent
+//! scrapes, Prometheus exposition invariants (parseable sample lines,
+//! cumulative histogram buckets), the cost-model audit's JSON
+//! round-trip, and the guarantee that running the listener plus tracing
+//! never perturbs numerical results.
+//!
+//! Registry state is process-global and `cargo test` runs tests
+//! concurrently in one process, so every assertion here is about
+//! deltas, per-thread monotonicity, or structure — never exact global
+//! totals.
+
+use stencil_matrix::obs::audit::CostAudit;
+use stencil_matrix::obs::live::{self, LiveSources};
+use stencil_matrix::obs::registry::{self, SECONDS_BUCKETS};
+use stencil_matrix::serve::scheduler::record_shard_times;
+use stencil_matrix::serve::{KernelMethod, ShardedEvolver};
+use stencil_matrix::stencil::{DenseGrid, StencilSpec};
+use stencil_matrix::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Minimal HTTP GET: returns (status, body). Read timeout keeps a
+/// wedged listener from hanging the whole test binary.
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    raw(addr, &format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n"))
+}
+
+fn raw(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stream.write_all(request.as_bytes()).unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).unwrap();
+    let status: u16 =
+        response.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let body = response.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Every non-comment line of a Prometheus exposition must be exactly
+/// `NAME VALUE` with a f64-parseable value.
+fn assert_prometheus_lines(body: &str) {
+    for line in body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        assert_eq!(line.split(' ').count(), 2, "bad sample line: {line}");
+        let val = line.split(' ').nth(1).unwrap();
+        assert!(val.parse::<f64>().is_ok(), "unparseable value in: {line}");
+    }
+}
+
+/// The value of the sample whose name+labels field equals `series`.
+fn sample_value(body: &str, series: &str) -> Option<f64> {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(series)?.strip_prefix(' ')?.parse().ok())
+}
+
+#[test]
+fn concurrent_scrapes_parse_and_scrape_counter_is_monotonic() {
+    registry::global().counter("test_obs_live_seed_total").inc();
+    let srv = live::serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+    let addr = srv.addr();
+    let threads = 4;
+    let scrapes = 6;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || {
+                let mut last = 0.0f64;
+                for _ in 0..scrapes {
+                    let (status, body) = get(addr, "/metrics");
+                    assert_eq!(status, 200);
+                    assert_prometheus_lines(&body);
+                    assert!(body.contains("test_obs_live_seed_total"), "{body}");
+                    // the scrape counter only ever moves up: each render
+                    // happens after this thread's own increment, so
+                    // successive scrapes within a thread are monotonic
+                    let seen =
+                        sample_value(&body, "stencil_live_scrapes_total{path=\"metrics\"}")
+                            .expect("scrape counter present");
+                    assert!(seen >= last, "counter went backwards: {seen} < {last}");
+                    last = seen;
+                }
+                assert!(last >= scrapes as f64);
+            });
+        }
+    });
+}
+
+#[test]
+fn bad_requests_do_not_wedge_the_listener() {
+    let srv = live::serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+    let addr = srv.addr();
+    assert_eq!(get(addr, "/unknown").0, 404);
+    assert_eq!(raw(addr, "NOT-HTTP\r\n\r\n").0, 400);
+    assert_eq!(raw(addr, "POST /metrics HTTP/1.1\r\n\r\n").0, 400);
+    assert_eq!(raw(addr, "GET\r\n\r\n").0, 400);
+    // the listener still serves all three endpoints afterwards
+    assert_eq!(get(addr, "/metrics").0, 200);
+    let (status, health) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert!(Json::parse(&health).is_ok(), "{health}");
+    let (status, profile) = get(addr, "/profile");
+    assert_eq!(status, 200);
+    assert!(Json::parse(&profile).is_ok(), "{profile}");
+}
+
+#[test]
+fn histogram_buckets_are_cumulative_and_sum_to_count() {
+    // a family only this test observes, so the quiesced totals are exact
+    let h = registry::global().histogram("test_obs_live_latency_seconds", &SECONDS_BUCKETS);
+    let values = [0.00005, 0.003, 0.02, 0.7, 9.0]; // last beyond every finite bucket
+    for v in values {
+        h.observe(v);
+    }
+    let srv = live::serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+    let (status, body) = get(srv.addr(), "/metrics");
+    assert_eq!(status, 200);
+    let buckets: Vec<f64> = body
+        .lines()
+        .filter(|l| l.starts_with("test_obs_live_latency_seconds_bucket{"))
+        .map(|l| l.split(' ').nth(1).unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(buckets.len(), SECONDS_BUCKETS.len() + 1, "{body}");
+    assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "not cumulative: {buckets:?}");
+    let count = sample_value(&body, "test_obs_live_latency_seconds_count").unwrap();
+    assert_eq!(count, values.len() as f64);
+    assert_eq!(*buckets.last().unwrap(), count, "+Inf bucket equals _count");
+    let sum = sample_value(&body, "test_obs_live_latency_seconds_sum").unwrap();
+    assert!((sum - values.iter().sum::<f64>()).abs() < 1e-9);
+}
+
+#[test]
+fn cost_audit_round_trips_through_json() {
+    let audit = CostAudit::new();
+    for seed in 0..3u64 {
+        audit.observe(
+            "2d9p-box-r1",
+            32,
+            "u1x8-minimalaxis",
+            "test-fingerprint",
+            || Some((40.0, 16.0)),
+            1.5e-3 + seed as f64 * 1e-4,
+            1e6,
+        );
+    }
+    let predict = || Some((90.0, 48.0));
+    audit.observe("3d27p-box-r1", 16, "taps", "test-fingerprint", predict, 2e-3, 5e5);
+    let json = audit.to_json();
+    let restored = CostAudit::from_json(&json).unwrap();
+    assert_eq!(restored.snapshot(), audit.snapshot());
+    assert_eq!(restored.to_json(), json);
+    // unknown versions are rejected, not misread
+    let mut wrong = json.clone();
+    if let Json::Obj(m) = &mut wrong {
+        m.insert("version".into(), Json::Num(999.0));
+    }
+    assert!(CostAudit::from_json(&wrong).is_err());
+}
+
+#[test]
+fn induced_shard_skew_moves_the_imbalance_gauge() {
+    // one shard 3x slower than the rest: max/mean = 3 / ((3+1+1+1)/4)
+    let ratio = record_shard_times(&[3_000_000, 1_000_000, 1_000_000, 1_000_000]);
+    assert!((ratio - 2.0).abs() < 1e-12, "{ratio}");
+    let srv = live::serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+    let (status, body) = get(srv.addr(), "/metrics");
+    assert_eq!(status, 200);
+    // other tests race the gauge's value; presence of both families is
+    // the stable invariant here
+    assert!(body.contains("stencil_shard_imbalance"), "{body}");
+    assert!(body.contains("stencil_shard_kernel_seconds{shard=\"0\"}"), "{body}");
+}
+
+#[test]
+fn traced_run_with_live_listener_is_bitwise_identical() {
+    let spec = StencilSpec::box2d(1);
+    let grid = DenseGrid::verification_input(&[18, 18], 0xBEEF);
+    let ev = ShardedEvolver::new(2);
+    let want = ev.evolve(spec, &grid, 4, 2, KernelMethod::Outer).unwrap();
+
+    let srv = live::serve("127.0.0.1:0", LiveSources::registry_only()).unwrap();
+    let addr = srv.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_scraper = Arc::clone(&stop);
+    let scraper = std::thread::spawn(move || {
+        let mut scrapes = 0usize;
+        while !stop_scraper.load(Ordering::SeqCst) {
+            assert_eq!(get(addr, "/metrics").0, 200);
+            scrapes += 1;
+        }
+        scrapes
+    });
+    let (result, spans) =
+        stencil_matrix::obs::span::trace(|| ev.evolve(spec, &grid, 4, 2, KernelMethod::Outer));
+    stop.store(true, Ordering::SeqCst);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "scraper ran alongside the traced evolution");
+    assert!(!spans.is_empty(), "traced run recorded spans");
+    let got = result.unwrap();
+    assert_eq!(got, want, "tracing + live scraping must not perturb results");
+}
