@@ -1,13 +1,14 @@
-//! The CI perf-regression gate: compare a fresh `BENCH_6.json` snapshot
+//! The CI perf-regression gate: compare a fresh `BENCH_8.json` snapshot
 //! against the checked-in `bench/baseline.json`.
 //!
 //! The primary gate keys on **simulated cycles**, which are fully
 //! deterministic (the simulator has no noise), so a >tolerance increase
 //! on any (stencil, method) cell is a real codegen/model regression,
 //! not machine jitter. Host wall-clock is noisier, so it gets a wider,
-//! two-band gate: per-cell compiled-engine `host_seconds` and per-row
-//! serving throughput (`fused_serve.fused_mpts_per_s`) **fail** only
-//! beyond [`HOST_FAIL_TOLERANCE`] (10%) and are reported as advisory
+//! two-band gate: per-cell compiled-engine `host_seconds`, per-cell
+//! SIMD-engine `simd_seconds` and per-row serving throughput
+//! (`fused_serve.fused_mpts_per_s`) **fail** only beyond
+//! [`HOST_FAIL_TOLERANCE`] (10%) and are reported as advisory
 //! notes between [`HOST_ADVISORY_TOLERANCE`] (2%) and the failure
 //! band. Op-count drifts are reported as notes (an op-count change
 //! with flat cycles is usually an intentional codegen change; refresh
@@ -61,6 +62,9 @@ pub struct CellDelta {
     /// Relative compiled-engine wall-clock change (positive = slower),
     /// when both snapshots carry `host_seconds` for the cell.
     pub host_delta: Option<f64>,
+    /// Relative SIMD-engine wall-clock change (positive = slower), when
+    /// both snapshots carry `simd_seconds` for the cell.
+    pub simd_delta: Option<f64>,
     /// Op-count drift note, when host_ops moved.
     pub ops_note: Option<String>,
 }
@@ -79,8 +83,8 @@ pub struct Comparison {
     /// passes).
     pub regressions: Vec<String>,
     /// Host wall-clock regressions beyond [`HOST_FAIL_TOLERANCE`]
-    /// (compiled-engine seconds per cell, serving Mpts/s per row) —
-    /// these fail the gate.
+    /// (compiled- and SIMD-engine seconds per cell, serving Mpts/s per
+    /// row) — these fail the gate.
     pub host_regressions: Vec<String>,
     /// Host wall-clock drift inside the advisory band
     /// ([`HOST_ADVISORY_TOLERANCE`]..[`HOST_FAIL_TOLERANCE`]) —
@@ -107,7 +111,7 @@ impl Comparison {
         if self.pending {
             out.push_str(
                 "**baseline pending** — `bench/baseline.json` is a placeholder; the gate is \
-                 advisory until a CI `BENCH_6.json` is promoted (see CONTRIBUTING.md). The \
+                 advisory until a CI `BENCH_8.json` is promoted (see CONTRIBUTING.md). The \
                  table below reports the current snapshot against itself.\n\n",
             );
         }
@@ -118,6 +122,7 @@ impl Comparison {
             "current cyc",
             "delta",
             "host delta",
+            "simd delta",
             "status",
         ]);
         for c in &self.cells {
@@ -136,6 +141,10 @@ impl Comparison {
                 format!("{:.0}", c.cur_cycles),
                 format!("{:+.2}%", c.delta * 100.0),
                 match c.host_delta {
+                    Some(d) => format!("{:+.2}%", d * 100.0),
+                    None => "—".to_string(),
+                },
+                match c.simd_delta {
                     Some(d) => format!("{:+.2}%", d * 100.0),
                     None => "—".to_string(),
                 },
@@ -306,6 +315,29 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
                 }
                 _ => None,
             };
+            // same two bands for the SIMD engine's wall-clock (absent in
+            // pre-v6 baselines, so the comparison degrades gracefully)
+            let simd_delta = match (
+                cell_f64(bm, method, "simd_seconds"),
+                cell_f64(cm, method, "simd_seconds"),
+            ) {
+                (Some(b), Some(c)) if b > 0.0 => {
+                    let d = (c - b) / b;
+                    let note = format!(
+                        "{stencil}/{method}: simd {:.2}ms → {:.2}ms ({:+.2}%)",
+                        b * 1e3,
+                        c * 1e3,
+                        d * 100.0
+                    );
+                    if d > HOST_FAIL_TOLERANCE {
+                        host_regressions.push(note);
+                    } else if d > HOST_ADVISORY_TOLERANCE {
+                        host_advisories.push(note);
+                    }
+                    Some(d)
+                }
+                _ => None,
+            };
             cells.push(CellDelta {
                 stencil: stencil.to_string(),
                 method: method.to_string(),
@@ -314,6 +346,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> anyhow::Resul
                 delta,
                 regressed,
                 host_delta,
+                simd_delta,
                 ops_note,
             });
         }
@@ -393,6 +426,7 @@ fn self_cells(snapshot: &Json) -> anyhow::Result<Vec<CellDelta>> {
                 delta: 0.0,
                 regressed: false,
                 host_delta: None,
+                simd_delta: None,
                 ops_note: None,
             });
         }
@@ -468,6 +502,13 @@ pub fn self_test(current: &Json, tolerance: f64) -> anyhow::Result<Comparison> {
     anyhow::ensure!(
         cmp_mild.passed() && !cmp_mild.host_advisories.is_empty(),
         "perf-gate self-test failed: advisory-band host drift mis-gated"
+    );
+    // the SIMD engine's wall-clock sits behind the same two bands
+    let simd_slow = inflate_key(current, "simd_seconds", 1.0 + 2.0 * HOST_FAIL_TOLERANCE, false);
+    let cmp_simd = compare(current, &simd_slow, tolerance)?;
+    anyhow::ensure!(
+        !cmp_simd.host_regressions.is_empty() && !cmp_simd.passed(),
+        "perf-gate self-test failed: injected simd wall-clock regression was not detected"
     );
     // serving throughput: a >10% Mpts/s drop must fail
     let starved = inflate_key(current, "fused_mpts_per_s", 1.0 - 2.0 * HOST_FAIL_TOLERANCE, false);
@@ -559,11 +600,21 @@ mod tests {
         assert!(!cmp.passed());
         let mentions_mpts = cmp.host_regressions.iter().any(|r| r.contains("Mpts/s"));
         assert!(mentions_mpts, "{:?}", cmp.host_regressions);
+        // the simd engine's wall-clock sits behind the same bands
+        let simd_slow = inflate_key(snap, "simd_seconds", 1.25, false);
+        let cmp = compare(snap, &simd_slow, DEFAULT_TOLERANCE).unwrap();
+        assert!(!cmp.passed());
+        let mentions_simd = cmp.host_regressions.iter().any(|r| r.contains("simd"));
+        assert!(mentions_simd, "{:?}", cmp.host_regressions);
+        let simd_mild = inflate_key(snap, "simd_seconds", 1.05, false);
+        let cmp = compare(snap, &simd_mild, DEFAULT_TOLERANCE).unwrap();
+        assert!(cmp.passed());
+        assert!(!cmp.host_advisories.is_empty());
     }
 
     #[test]
     fn pending_baseline_is_advisory_but_renders_the_table() {
-        let baseline = Json::parse(r#"{"version":5,"kind":"table3-snapshot","pending":true,"results":[]}"#)
+        let baseline = Json::parse(r#"{"version":6,"kind":"table3-snapshot","pending":true,"results":[]}"#)
             .unwrap();
         let snap = tiny_snapshot();
         let cmp = compare(&baseline, snap, DEFAULT_TOLERANCE).unwrap();

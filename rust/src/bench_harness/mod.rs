@@ -7,7 +7,7 @@
 //! | [`fig5`] | Fig. 5 — autovec / DLT / TV / ours on r = 1 stencils |
 //! | [`table3`] | Table 3 — speedups over auto-vectorization, full matrix |
 //! | [`ablation`] | extra ablations (unroll, mregs, tuned-vs-default) |
-//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_6.json`: sim cycles + host wall-clock + fused-vs-unfused serving incl. per-phase profile) |
+//! | [`snapshot`] | machine-readable perf snapshot (`BENCH_8.json`: sim cycles + host wall-clock + fused-vs-unfused serving incl. per-phase profile) |
 //! | [`compare`] | the CI perf-regression gate (`bench-compare`): fresh snapshot vs `bench/baseline.json`; >2% sim-cycle or >10% host wall-clock / serving-Mpts/s drift fails |
 //!
 //! Absolute cycle counts come from our simulator, not the paper's

@@ -1,6 +1,6 @@
-//! Machine-readable perf snapshot (`BENCH_6.json`): per-method simulated
-//! cycles *and* host wall-clock — compiled engine vs interpreter — for
-//! the Table-3 stencil rows at one representative size per
+//! Machine-readable perf snapshot (`BENCH_8.json`): per-method simulated
+//! cycles *and* host wall-clock — interpreter vs compiled vs explicit
+//! SIMD — for the Table-3 stencil rows at one representative size per
 //! dimensionality, plus a fused-vs-unfused serving measurement per row
 //! (temporal blocking at depth [`FUSE_STEPS`]) with a traced per-phase
 //! profile (embed / compute / freeze / exchange / extract seconds).
@@ -13,7 +13,7 @@
 //! gate key on; host wall-clock (including the fused-serve columns) is
 //! advisory. Every simulated number passes through [`run_method`] and
 //! every host number through [`run_host`], so a snapshot can only
-//! contain oracle-verified runs — the two host engines are checked
+//! contain oracle-verified runs — all three host engines are checked
 //! bitwise-equal per cell, and the fused serve run is checked bitwise
 //! against the unfused one.
 
@@ -26,9 +26,8 @@ use crate::sim::SimConfig;
 use crate::util::json::{obj, Json};
 use std::time::Instant;
 
-/// Snapshot schema version (5: per-phase profile on the fused serve
-/// cell).
-pub const SNAPSHOT_VERSION: u64 = 5;
+/// Snapshot schema version (6: explicit-SIMD engine columns per cell).
+pub const SNAPSHOT_VERSION: u64 = 6;
 
 /// Time-tile depth of the snapshot's fused serving measurement.
 pub const FUSE_STEPS: usize = 4;
@@ -46,6 +45,7 @@ fn method_json(
     speedup: f64,
     interp: &HostRun,
     compiled: &HostRun,
+    simd: &HostRun,
     points: usize,
 ) -> Json {
     obj(vec![
@@ -63,19 +63,26 @@ fn method_json(
             "engine_speedup",
             Json::Num(interp.seconds / compiled.seconds.max(1e-12)),
         ),
+        // explicit-SIMD engine + its ratio over the compiled engine
+        ("simd_seconds", Json::Num(simd.seconds)),
+        ("simd_mpts_per_s", Json::Num(mpts(points, simd))),
+        (
+            "simd_speedup",
+            Json::Num(compiled.seconds / simd.seconds.max(1e-12)),
+        ),
         ("host_ops", Json::Num(compiled.ops as f64)),
     ])
 }
 
-/// Run both host engines for one cell, enforcing the same verification
-/// bar as the simulated run plus bitwise engine equality. Returns
-/// (interpreter, compiled).
+/// Run all three host engines for one cell, enforcing the same
+/// verification bar as the simulated run plus bitwise engine equality.
+/// Returns (interpreter, compiled, simd).
 fn host_cell(
     cfg: &SimConfig,
     spec: crate::stencil::StencilSpec,
     n: usize,
     method: Method,
-) -> anyhow::Result<(HostRun, HostRun)> {
+) -> anyhow::Result<(HostRun, HostRun, HostRun)> {
     let interp = run_host(cfg, spec, n, method, Engine::Interpret)?;
     anyhow::ensure!(interp.verified(), "{spec} {method} N={n} host: max_err {}", interp.max_err);
     let compiled = run_host(cfg, spec, n, method, Engine::Compiled)?;
@@ -84,7 +91,13 @@ fn host_cell(
         "{spec} {method} N={n}: engines disagree bitwise"
     );
     anyhow::ensure!(compiled.ops == interp.ops, "{spec} {method} N={n}: op counts diverge");
-    Ok((interp, compiled))
+    let simd = run_host(cfg, spec, n, method, Engine::Simd)?;
+    anyhow::ensure!(
+        simd.grid.data == interp.grid.data,
+        "{spec} {method} N={n}: simd engine disagrees bitwise with the interpreter"
+    );
+    anyhow::ensure!(simd.ops == interp.ops, "{spec} {method} N={n}: simd op count diverges");
+    Ok((interp, compiled, simd))
 }
 
 /// Fused-vs-unfused serving measurement for one stencil row: evolve the
@@ -146,8 +159,9 @@ fn fused_serve(spec: crate::stencil::StencilSpec, n: usize) -> anyhow::Result<Js
 /// Build the snapshot: every Table-3 spec at `n2d`² / `n3d`³, methods
 /// scalar / autovec / dlt / tv / outer (best Table-3 candidate per cell,
 /// with its plan label). Speedups are vs. auto-vectorization, the
-/// paper's baseline; each cell also carries both host engines'
-/// wall-clock next to the simulated cycles, and each row a
+/// paper's baseline; each cell also carries the host engines'
+/// wall-clock next to the simulated cycles (interpreter, compiled and
+/// simd — the last bitwise-checked against the first), and each row a
 /// fused-vs-unfused serving measurement ([`fused_serve`]).
 pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
     let mut results = Vec::new();
@@ -156,7 +170,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
         for spec in table3::rows(dims) {
             let base = run_method(cfg, spec, n, Method::AutoVec, true)?;
             anyhow::ensure!(base.verified(), "{spec} autovec N={n}: max_err {}", base.max_err);
-            let (base_i, base_c) = host_cell(cfg, spec, n, Method::AutoVec)?;
+            let (base_i, base_c, base_s) = host_cell(cfg, spec, n, Method::AutoVec)?;
             let mut methods: Vec<(&str, Json)> = Vec::new();
             methods.push((
                 "autovec",
@@ -166,6 +180,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                     1.0,
                     &base_i,
                     &base_c,
+                    &base_s,
                     base.points(),
                 ),
             ));
@@ -174,7 +189,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
             {
                 let res = run_method(cfg, spec, n, method, true)?;
                 anyhow::ensure!(res.verified(), "{spec} {method} N={n}: max_err {}", res.max_err);
-                let (hi, hc) = host_cell(cfg, spec, n, method)?;
+                let (hi, hc, hs) = host_cell(cfg, spec, n, method)?;
                 methods.push((
                     name,
                     method_json(
@@ -183,6 +198,7 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                         speedup(&base, &res),
                         &hi,
                         &hc,
+                        &hs,
                         res.points(),
                     ),
                 ));
@@ -201,13 +217,14 @@ pub fn run(cfg: &SimConfig, n2d: usize, n3d: usize) -> anyhow::Result<Json> {
                 }
             }
             let (bp, bres) = best.expect("candidate set is never empty");
-            let (bi, bc) = host_cell(cfg, spec, n, Method::Outer(bp))?;
+            let (bi, bc, bs) = host_cell(cfg, spec, n, Method::Outer(bp))?;
             let mut outer = method_json(
                 bres.stats.cycles,
                 bres.cycles_per_point(),
                 speedup(&base, &bres),
                 &bi,
                 &bc,
+                &bs,
                 bres.points(),
             );
             if let Json::Obj(m) = &mut outer {
@@ -243,7 +260,7 @@ mod tests {
     fn snapshot_covers_every_table3_row() {
         // tiny sizes keep this test fast; CI regenerates at 64/16
         let j = run(&SimConfig::default(), 16, 8).unwrap();
-        assert_eq!(j.get("version").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(6));
         let results = j.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 6 + 5); // 2D rows + 3D rows
         for r in results {
@@ -257,6 +274,10 @@ mod tests {
                 assert!(e.get("host_mpts_per_s").and_then(Json::as_f64).unwrap() >= 0.0);
                 assert!(e.get("host_interp_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
                 assert!(e.get("engine_speedup").and_then(Json::as_f64).unwrap() > 0.0);
+                // the simd engine rides along (bitwise-checked inside run)
+                assert!(e.get("simd_seconds").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("simd_mpts_per_s").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("simd_speedup").and_then(Json::as_f64).unwrap() > 0.0);
                 assert!(e.get("host_threads").and_then(Json::as_f64).unwrap() >= 1.0);
                 assert!(e.get("host_ops").and_then(Json::as_f64).unwrap() > 0.0);
             }

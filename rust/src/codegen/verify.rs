@@ -12,15 +12,17 @@
 //! - [`run_host`] — the host: the same generators emit the same program,
 //!   captured once and executed natively over flat f64 buffers by the
 //!   selected [`Engine`] — the op-by-op interpreter
-//!   ([`crate::kir::HostMachine`]) or the compiling engine
+//!   ([`crate::kir::HostMachine`]), the compiling engine
 //!   ([`crate::kir::ExecPlan`]: fused loop nests, gather index tables,
-//!   threaded row groups) — returning wall-clock seconds. Host output is
-//!   bitwise identical to the simulated output on either engine at any
-//!   thread count (`rust/tests/kir_equivalence.rs`).
+//!   threaded row groups) or the explicit-SIMD engine
+//!   ([`crate::kir::SimdPlan`]: runtime-dispatched vector microkernels)
+//!   — returning wall-clock seconds. Host output is bitwise identical
+//!   to the simulated output on every engine at any thread count
+//!   (`rust/tests/kir_equivalence.rs`).
 
 use super::common::{CoeffTable, Layout, OuterParams};
 use super::{dlt, outer, scalar, tv, vectorize};
-use crate::kir::{Engine, ExecPlan, HostMachine, Kernel, KirSink, Marker, Op, PingPong};
+use crate::kir::{Engine, ExecPlan, HostMachine, Kernel, KirSink, Marker, Op, PingPong, SimdPlan};
 use crate::scatter::build_cover;
 use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::{Machine, RunStats, SimConfig};
@@ -483,6 +485,14 @@ pub fn run_host_fused_threads(
             let t0 = std::time::Instant::now();
             plan.run(&mut p.machine.mem, threads);
             (t0.elapsed().as_secs_f64(), plan.op_count(), threads_used)
+        }
+        Engine::Simd => {
+            let plan = ExecPlan::from_config(cfg, &p.kernel.ops);
+            let splan = SimdPlan::new(&plan);
+            let threads_used = splan.effective_threads(threads);
+            let t0 = std::time::Instant::now();
+            splan.run(&mut p.machine.mem, threads);
+            (t0.elapsed().as_secs_f64(), splan.op_count(), threads_used)
         }
     };
     let got = match &p.dlt {

@@ -41,7 +41,7 @@ use std::sync::OnceLock;
 /// Live counter of row-group blocks dispatched by `Par` sections —
 /// together with `stencil_pool_jobs_total` this shows how much
 /// intra-shard parallelism the compiled engine actually exposes.
-fn row_groups_counter() -> &'static Counter {
+pub(crate) fn row_groups_counter() -> &'static Counter {
     static C: OnceLock<Counter> = OnceLock::new();
     C.get_or_init(|| registry::global().counter("stencil_kir_row_groups_total"))
 }
@@ -57,6 +57,12 @@ pub enum Engine {
     /// faster.
     #[default]
     Compiled,
+    /// Explicit vector microkernels with runtime ISA dispatch
+    /// ([`super::simd::SimdPlan`]): the compiled plan re-lowered to
+    /// AVX2 / NEON register-tile kernels, with a scalar fallback
+    /// byte-identical to `Compiled`. Bitwise equal to `Interpret` on
+    /// every dispatch target.
+    Simd,
 }
 
 impl fmt::Display for Engine {
@@ -64,6 +70,7 @@ impl fmt::Display for Engine {
         match self {
             Engine::Interpret => write!(f, "interpret"),
             Engine::Compiled => write!(f, "compiled"),
+            Engine::Simd => write!(f, "simd"),
         }
     }
 }
@@ -75,7 +82,8 @@ impl FromStr for Engine {
         Ok(match s.to_ascii_lowercase().as_str() {
             "interpret" | "interp" | "interpreter" => Engine::Interpret,
             "compiled" | "compile" | "fused" => Engine::Compiled,
-            other => anyhow::bail!("unknown engine '{other}' (interpret|compiled)"),
+            "simd" | "vector" => Engine::Simd,
+            other => anyhow::bail!("unknown engine '{other}' (interpret|compiled|simd)"),
         })
     }
 }
@@ -84,7 +92,7 @@ impl FromStr for Engine {
 /// (`d`/`s`/`a`/`b`/`acc` index the vector file, `m*` the tile file),
 /// addresses absolute, gathers redirected to index tables.
 #[derive(Debug, Clone, Copy)]
-enum FOp {
+pub(crate) enum FOp {
     Load { d: u32, addr: u32 },
     Store { s: u32, addr: u32 },
     Gather { d: u32, tbl: u32 },
@@ -109,12 +117,12 @@ enum FOp {
 
 /// A fused straight-line block.
 #[derive(Debug, Clone)]
-struct Block {
-    code: Vec<FOp>,
+pub(crate) struct Block {
+    pub(crate) code: Vec<FOp>,
 }
 
 #[derive(Debug, Clone)]
-enum PlanSection {
+pub(crate) enum PlanSection {
     /// Independent blocks, executed by a scoped thread pool.
     Par(Vec<Block>),
     /// One block executed in program order.
@@ -122,23 +130,26 @@ enum PlanSection {
 }
 
 /// A KIR program compiled into a host execution plan.
+///
+/// Internals are crate-visible so [`super::simd`] can re-lower the
+/// resolved stream into vector microkernels without a second builder.
 #[derive(Debug, Clone)]
 pub struct ExecPlan {
-    vlen: usize,
-    n_vregs: usize,
-    n_mregs: usize,
-    sections: Vec<PlanSection>,
+    pub(crate) vlen: usize,
+    pub(crate) n_vregs: usize,
+    pub(crate) n_mregs: usize,
+    pub(crate) sections: Vec<PlanSection>,
     /// Per-section phase/step labels (parallel to `sections`), carried
     /// from the fuser so spans can name freeze phases and fused steps.
-    labels: Vec<SectionMeta>,
+    pub(crate) labels: Vec<SectionMeta>,
     /// Gather index tables (absolute element addresses), deduplicated.
-    tables: Vec<Vec<u32>>,
+    pub(crate) tables: Vec<Vec<u32>>,
     /// One past the highest element address any op touches.
-    mem_hwm: usize,
+    pub(crate) mem_hwm: usize,
     /// Non-marker operations in the plan.
-    ops: u64,
+    pub(crate) ops: u64,
     /// Blocks eligible for parallel execution.
-    par_blocks: usize,
+    pub(crate) par_blocks: usize,
 }
 
 impl ExecPlan {
@@ -276,128 +287,148 @@ impl ExecPlan {
         let v = vregs.as_mut_slice();
         let t = mregs.as_mut_slice();
         for fop in &block.code {
-            match *fop {
-                FOp::Load { d, addr } => {
-                    let d = d as usize;
-                    v[d..d + n].copy_from_slice(mem.read(addr as usize, n));
-                }
-                FOp::Store { s, addr } => {
-                    let s = s as usize;
-                    mem.write(addr as usize, &v[s..s + n]);
-                }
-                FOp::Gather { d, tbl } => {
-                    let d = d as usize;
-                    for (k, &a) in self.tables[tbl as usize].iter().enumerate() {
-                        v[d + k] = mem.get(a as usize);
-                    }
-                }
-                FOp::Splat { d, addr } => {
-                    let d = d as usize;
-                    v[d..d + n].fill(mem.get(addr as usize));
-                }
-                FOp::StoreLane { sl, addr } => {
-                    mem.set(addr as usize, v[sl as usize]);
-                }
-                FOp::Ext { d, lo, hi, shift } => {
-                    let (d, lo, hi, sh) = (d as usize, lo as usize, hi as usize, shift as usize);
-                    let sc = &mut scratch[..n];
-                    sc[..n - sh].copy_from_slice(&v[lo + sh..lo + n]);
-                    sc[n - sh..].copy_from_slice(&v[hi..hi + sh]);
-                    v[d..d + n].copy_from_slice(sc);
-                }
-                FOp::Dup { d, sl } => {
-                    let d = d as usize;
-                    let x = v[sl as usize];
-                    v[d..d + n].fill(x);
-                }
-                FOp::Fma { acc, a, b } => {
-                    let (acc, a, b) = (acc as usize, a as usize, b as usize);
-                    for k in 0..n {
-                        let prod = v[a + k] * v[b + k];
-                        v[acc + k] += prod;
-                    }
-                }
-                FOp::FmaLane { acc, a, bl } => {
-                    let (acc, a) = (acc as usize, a as usize);
-                    let c = v[bl as usize];
-                    for k in 0..n {
-                        let prod = v[a + k] * c;
-                        v[acc + k] += prod;
-                    }
-                }
-                FOp::Add { d, a, b } => {
-                    let (d, a, b) = (d as usize, a as usize, b as usize);
-                    for k in 0..n {
-                        v[d + k] = v[a + k] + v[b + k];
-                    }
-                }
-                FOp::Mul { d, a, b } => {
-                    let (d, a, b) = (d as usize, a as usize, b as usize);
-                    for k in 0..n {
-                        v[d + k] = v[a + k] * v[b + k];
-                    }
-                }
-                FOp::Zero { d } => {
-                    let d = d as usize;
-                    v[d..d + n].fill(0.0);
-                }
-                FOp::TileZero { m } => {
-                    let m = m as usize;
-                    t[m..m + n * n].fill(0.0);
-                }
-                FOp::Outer { m, a, b } => {
-                    let (m, a, b) = (m as usize, a as usize, b as usize);
-                    let bv = &v[b..b + n];
-                    for i in 0..n {
-                        let ai = v[a + i];
-                        let row = &mut t[m + i * n..m + (i + 1) * n];
-                        for (r, &x) in row.iter_mut().zip(bv) {
-                            *r += ai * x;
-                        }
-                    }
-                }
-                FOp::RowIn { mr, s } => {
-                    let (mr, s) = (mr as usize, s as usize);
-                    t[mr..mr + n].copy_from_slice(&v[s..s + n]);
-                }
-                FOp::RowOut { d, mr } => {
-                    let (d, mr) = (d as usize, mr as usize);
-                    v[d..d + n].copy_from_slice(&t[mr..mr + n]);
-                }
-                FOp::ColIn { m, col, s } => {
-                    let (m, col, s) = (m as usize, col as usize, s as usize);
-                    for i in 0..n {
-                        t[m + i * n + col] = v[s + i];
-                    }
-                }
-                FOp::ColOut { d, m, col } => {
-                    let (d, m, col) = (d as usize, m as usize, col as usize);
-                    for i in 0..n {
-                        v[d + i] = t[m + i * n + col];
-                    }
-                }
-                FOp::RowLoad { mr, addr } => {
-                    let mr = mr as usize;
-                    t[mr..mr + n].copy_from_slice(mem.read(addr as usize, n));
-                }
-                FOp::RowStore { mr, addr } => {
-                    let mr = mr as usize;
-                    mem.write(addr as usize, &t[mr..mr + n]);
+            exec_fop(fop, &self.tables, n, mem, v, t, scratch);
+        }
+    }
+}
+
+/// Execute one resolved op with the interpreter's exact FP semantics
+/// (multiply then accumulate — two roundings — and the interpreter's
+/// loop orders).
+///
+/// Shared between the compiled engine's block loop and the SIMD
+/// engine's scalar fallback ([`super::simd`]), so "the fallback is
+/// byte-identical to the compiled path" holds by construction.
+#[inline(always)]
+pub(crate) fn exec_fop(
+    fop: &FOp,
+    tables: &[Vec<u32>],
+    n: usize,
+    mem: &SharedMem,
+    v: &mut [f64],
+    t: &mut [f64],
+    scratch: &mut [f64],
+) {
+    match *fop {
+        FOp::Load { d, addr } => {
+            let d = d as usize;
+            v[d..d + n].copy_from_slice(mem.read(addr as usize, n));
+        }
+        FOp::Store { s, addr } => {
+            let s = s as usize;
+            mem.write(addr as usize, &v[s..s + n]);
+        }
+        FOp::Gather { d, tbl } => {
+            let d = d as usize;
+            for (k, &a) in tables[tbl as usize].iter().enumerate() {
+                v[d + k] = mem.get(a as usize);
+            }
+        }
+        FOp::Splat { d, addr } => {
+            let d = d as usize;
+            v[d..d + n].fill(mem.get(addr as usize));
+        }
+        FOp::StoreLane { sl, addr } => {
+            mem.set(addr as usize, v[sl as usize]);
+        }
+        FOp::Ext { d, lo, hi, shift } => {
+            let (d, lo, hi, sh) = (d as usize, lo as usize, hi as usize, shift as usize);
+            let sc = &mut scratch[..n];
+            sc[..n - sh].copy_from_slice(&v[lo + sh..lo + n]);
+            sc[n - sh..].copy_from_slice(&v[hi..hi + sh]);
+            v[d..d + n].copy_from_slice(sc);
+        }
+        FOp::Dup { d, sl } => {
+            let d = d as usize;
+            let x = v[sl as usize];
+            v[d..d + n].fill(x);
+        }
+        FOp::Fma { acc, a, b } => {
+            let (acc, a, b) = (acc as usize, a as usize, b as usize);
+            for k in 0..n {
+                let prod = v[a + k] * v[b + k];
+                v[acc + k] += prod;
+            }
+        }
+        FOp::FmaLane { acc, a, bl } => {
+            let (acc, a) = (acc as usize, a as usize);
+            let c = v[bl as usize];
+            for k in 0..n {
+                let prod = v[a + k] * c;
+                v[acc + k] += prod;
+            }
+        }
+        FOp::Add { d, a, b } => {
+            let (d, a, b) = (d as usize, a as usize, b as usize);
+            for k in 0..n {
+                v[d + k] = v[a + k] + v[b + k];
+            }
+        }
+        FOp::Mul { d, a, b } => {
+            let (d, a, b) = (d as usize, a as usize, b as usize);
+            for k in 0..n {
+                v[d + k] = v[a + k] * v[b + k];
+            }
+        }
+        FOp::Zero { d } => {
+            let d = d as usize;
+            v[d..d + n].fill(0.0);
+        }
+        FOp::TileZero { m } => {
+            let m = m as usize;
+            t[m..m + n * n].fill(0.0);
+        }
+        FOp::Outer { m, a, b } => {
+            let (m, a, b) = (m as usize, a as usize, b as usize);
+            let bv = &v[b..b + n];
+            for i in 0..n {
+                let ai = v[a + i];
+                let row = &mut t[m + i * n..m + (i + 1) * n];
+                for (r, &x) in row.iter_mut().zip(bv) {
+                    *r += ai * x;
                 }
             }
+        }
+        FOp::RowIn { mr, s } => {
+            let (mr, s) = (mr as usize, s as usize);
+            t[mr..mr + n].copy_from_slice(&v[s..s + n]);
+        }
+        FOp::RowOut { d, mr } => {
+            let (d, mr) = (d as usize, mr as usize);
+            v[d..d + n].copy_from_slice(&t[mr..mr + n]);
+        }
+        FOp::ColIn { m, col, s } => {
+            let (m, col, s) = (m as usize, col as usize, s as usize);
+            for i in 0..n {
+                t[m + i * n + col] = v[s + i];
+            }
+        }
+        FOp::ColOut { d, m, col } => {
+            let (d, m, col) = (d as usize, m as usize, col as usize);
+            for i in 0..n {
+                v[d + i] = t[m + i * n + col];
+            }
+        }
+        FOp::RowLoad { mr, addr } => {
+            let mr = mr as usize;
+            t[mr..mr + n].copy_from_slice(mem.read(addr as usize, n));
+        }
+        FOp::RowStore { mr, addr } => {
+            let mr = mr as usize;
+            mem.write(addr as usize, &t[mr..mr + n]);
         }
     }
 }
 
 /// Per-thread register files (+ EXT scratch).
-struct ExecState {
-    vregs: Vec<f64>,
-    mregs: Vec<f64>,
-    scratch: Vec<f64>,
+pub(crate) struct ExecState {
+    pub(crate) vregs: Vec<f64>,
+    pub(crate) mregs: Vec<f64>,
+    pub(crate) scratch: Vec<f64>,
 }
 
 impl ExecState {
-    fn new(vlen: usize, n_vregs: usize, n_mregs: usize) -> ExecState {
+    pub(crate) fn new(vlen: usize, n_vregs: usize, n_mregs: usize) -> ExecState {
         ExecState {
             vregs: vec![0.0; vlen * n_vregs],
             mregs: vec![0.0; vlen * vlen * n_mregs],
@@ -415,9 +446,9 @@ impl ExecState {
 /// one `Par` section, whose blocks the fuser proved write-disjoint with
 /// no cross-block read-write overlap; the transient slices created here
 /// therefore never alias a concurrently written region.
-struct SharedMem {
-    ptr: *mut f64,
-    len: usize,
+pub(crate) struct SharedMem {
+    pub(crate) ptr: *mut f64,
+    pub(crate) len: usize,
 }
 
 unsafe impl Send for SharedMem {}
@@ -553,8 +584,11 @@ mod tests {
         assert_eq!(engine_roundtrip("interpret"), Engine::Interpret);
         assert_eq!(engine_roundtrip("compiled"), Engine::Compiled);
         assert_eq!(engine_roundtrip("fused"), Engine::Compiled);
+        assert_eq!(engine_roundtrip("simd"), Engine::Simd);
+        assert_eq!(engine_roundtrip("vector"), Engine::Simd);
         assert_eq!(Engine::Compiled.to_string(), "compiled");
         assert_eq!(Engine::Interpret.to_string(), "interpret");
+        assert_eq!(Engine::Simd.to_string(), "simd");
         assert_eq!(Engine::default(), Engine::Compiled);
         assert!("jit".parse::<Engine>().is_err());
     }

@@ -12,23 +12,27 @@
 //! is bitwise identical to single-shard execution of the same kernel
 //! (enforced in `rust/tests/shard_correctness.rs`).
 //!
-//! Two engines execute the program ([`Engine`]): the op-by-op
-//! interpreter ([`HostMachine`]) and the compiling engine
+//! Three engines execute the program ([`Engine`]): the op-by-op
+//! interpreter ([`HostMachine`]), the compiling engine
 //! ([`super::exec::ExecPlan`], the default), which fuses the unrolled
 //! loop nest into straight-line blocks and can split independent row
-//! groups across threads. Their outputs are bitwise identical at any
-//! thread count.
+//! groups across threads, and the explicit-SIMD engine
+//! ([`super::simd::SimdPlan`]), which re-lowers the compiled plan to
+//! runtime-dispatched vector microkernels. Their outputs are bitwise
+//! identical at any thread count.
 
 use super::exec::{Engine, ExecPlan};
 use super::host::HostMachine;
 use super::ir::{Kernel, Marker, Op, VReg};
 use super::mem::PingPong;
+use super::simd::SimdPlan;
 use crate::codegen::common::{CoeffTable, Layout};
 use crate::codegen::{outer, scalar, vectorize, Method};
 use crate::obs::span::span;
 use crate::scatter::build_cover;
 use crate::stencil::{CoeffTensor, DenseGrid, StencilSpec};
 use crate::sim::SimConfig;
+use std::sync::OnceLock;
 
 /// A host kernel compiled for one (spec, tile shape, method, time-tile
 /// depth).
@@ -52,6 +56,9 @@ pub struct HostKernel {
     template: HostMachine,
     /// Compiled execution plan for the (trimmed) program.
     plan: ExecPlan,
+    /// SIMD twin of `plan`, lowered lazily on the first `Engine::Simd`
+    /// application (clones carry the already-lowered value along).
+    simd: OnceLock<SimdPlan>,
     /// Engine `apply` uses (compiled by default).
     engine: Engine,
     /// Plan label (method + parameters) for reports.
@@ -184,6 +191,7 @@ impl HostKernel {
             pong,
             template,
             plan,
+            simd: OnceLock::new(),
             engine: Engine::default(),
             label,
         })
@@ -279,7 +287,23 @@ impl HostKernel {
                 let _x = span("kernel.extract", "kernel");
                 self.extract(&mem, a)
             }
+            Engine::Simd => {
+                let plan = self.simd_plan();
+                let mut mem = self.template.mem.clone();
+                {
+                    let _e = span("kernel.embed", "kernel");
+                    self.embed(&mut mem, a);
+                }
+                plan.run(&mut mem, threads);
+                let _x = span("kernel.extract", "kernel");
+                self.extract(&mem, a)
+            }
         }
+    }
+
+    /// The SIMD lowering of the compiled plan, built on first use.
+    fn simd_plan(&self) -> &SimdPlan {
+        self.simd.get_or_init(|| SimdPlan::new(&self.plan))
     }
 
     /// Embed the tile: tile storage index t maps to padded storage index

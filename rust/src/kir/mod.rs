@@ -39,6 +39,13 @@
 //!   gathers turned into precomputed index tables, and independent row
 //!   groups split across a scoped thread pool — bitwise equal to the
 //!   interpreter at any thread count, several times faster;
+//! - [`simd`] — the **explicit-SIMD host engine** ([`SimdPlan`],
+//!   selected by [`Engine::Simd`]): the compiled plan re-lowered to
+//!   runtime-dispatched vector microkernels (AVX2 on x86-64, NEON on
+//!   aarch64, scalar fallback elsewhere), with consecutive outer
+//!   products fused into register-tile runs — still bitwise equal to
+//!   the interpreter on every dispatch target, because accumulations
+//!   stay multiply-then-add (two roundings), never fused FMA;
 //! - [`kernel`] — [`HostKernel`]: a (spec, tile shape, method, time-tile
 //!   depth) compiled once into a KIR program + execution plan + memory
 //!   image, applied per tile by the serving subsystem (`serve --kernel
@@ -61,9 +68,11 @@ pub mod ir;
 pub mod kernel;
 pub mod lower;
 pub mod mem;
+pub mod simd;
 
 pub use exec::{Engine, ExecPlan};
 pub use host::HostMachine;
 pub use ir::{dump, step_stats, Kernel, KirSink, Marker, MReg, Op, OpStats, VReg};
 pub use kernel::HostKernel;
 pub use mem::{Arena, PingPong};
+pub use simd::{SimdIsa, SimdPlan};

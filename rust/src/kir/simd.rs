@@ -1,0 +1,1215 @@
+//! The explicit-SIMD host engine (`Engine::Simd`): resolved [`FOp`]
+//! streams re-lowered to vector microkernels dispatched at runtime.
+//!
+//! The compiled engine ([`ExecPlan`]) lowers every op to scalar slice
+//! loops and relies on auto-vectorization, which stops at the baseline
+//! target ISA (128-bit SSE2 on x86-64). This module lowers the same
+//! resolved stream once more, into:
+//!
+//! - **register-tile outer-product runs**: consecutive `Outer` ops on
+//!   the same tile register become one microkernel that loads each
+//!   accumulator chunk once, applies every broadcast × vector
+//!   multiply-add pair in program order, and stores once — cutting tile
+//!   traffic by the run length;
+//! - **vector ALU loops** for `Fma`/`FmaLane`/`Add`/`Mul` chunks;
+//! - everything else delegates to [`exec_fop`], the exact routine the
+//!   compiled engine executes, so the portable fallback is
+//!   byte-identical to `Engine::Compiled` by construction.
+//!
+//! **Dispatch** happens once per [`SimdPlan::run`]:
+//! `is_x86_feature_detected!` selects 256-bit AVX2 (requires the
+//! `avx2` and `fma` CPUID bits), aarch64 uses baseline NEON, and
+//! everything else — or a `STENCIL_SIMD=scalar` / [`force_scalar`]
+//! override — takes the scalar fallback. AVX-512F is detected and
+//! reported (metrics, `dump-ir`) but executed through the AVX2 path:
+//! the pinned stable toolchain does not yet expose AVX-512 intrinsics.
+//! Each dispatch bumps the `stencil_engine_dispatch_total{isa=...}`
+//! counter family so `/metrics` shows which ISA actually ran.
+//!
+//! **Bitwise contract**: the interpreter accumulates with a multiply
+//! *then* an add — two IEEE roundings per lane. The microkernels
+//! therefore issue separate vector multiply and add instructions
+//! (`vmulpd`+`vaddpd`, `fmul`+`fadd`) and never a fused multiply-add,
+//! whose single rounding would diverge. Per output element the
+//! operand sequence is exactly the interpreter's, threading reuses the
+//! fuser's disjointness proof, and the dispatch choice only selects how
+//! many lanes move per instruction — so Simd == Interpret bitwise at
+//! any thread count on any ISA (`rust/tests/kir_equivalence.rs`).
+//!
+//! **Unsafe boundary**: every `#[target_feature]` fn is `unsafe fn`
+//! (the module denies `unsafe_op_in_unsafe_fn`) and is only reachable
+//! through the safe [`SimdPlan::run`] dispatcher, which checked the
+//! CPUID bits. Register offsets are validated against the register
+//! file shape once at lowering time ([`SimdPlan::new`]), making the
+//! raw-pointer microkernels in-bounds by the same argument the
+//! compiled engine enforces with slice indexing.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use super::exec::{
+    exec_fop, row_groups_counter, Block, ExecPlan, ExecState, FOp, PlanSection, SharedMem,
+};
+use super::fuse::SectionMeta;
+use super::ir::Op;
+use crate::obs::registry;
+use crate::obs::span::{span, span_arg};
+use crate::sim::SimConfig;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Instruction set the SIMD engine dispatches to at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdIsa {
+    /// 256-bit AVX2 vectors (x86-64 with the `avx2`+`fma` CPUID bits).
+    Avx2,
+    /// 128-bit NEON vectors (aarch64 baseline).
+    Neon,
+    /// Portable scalar fallback, byte-identical to the compiled engine.
+    Scalar,
+}
+
+impl SimdIsa {
+    /// Label used in reports and in the
+    /// `stencil_engine_dispatch_total{isa=...}` counter family.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+            SimdIsa::Scalar => "scalar",
+        }
+    }
+}
+
+impl fmt::Display for SimdIsa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Process-global scalar-fallback override (see [`force_scalar`]).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Pin every subsequent SIMD-engine run to the scalar fallback (`true`)
+/// or restore runtime dispatch (`false`). Test/debug hook: the dispatch
+/// choice never changes results, which `rust/tests/kir_equivalence.rs`
+/// proves by flipping this around full equivalence sweeps.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Whether a `STENCIL_SIMD` value pins the scalar fallback
+/// (`scalar`/`off`/`0`; anything else keeps runtime dispatch).
+fn env_forces_scalar(value: Option<&str>) -> bool {
+    matches!(value.map(str::trim), Some("scalar") | Some("off") | Some("0"))
+}
+
+/// The ISA [`SimdPlan::run`] dispatches to right now: the strongest
+/// supported extension, unless the `STENCIL_SIMD` environment variable
+/// or [`force_scalar`] pins the portable fallback.
+pub fn active_isa() -> SimdIsa {
+    if FORCE_SCALAR.load(Ordering::SeqCst) {
+        return SimdIsa::Scalar;
+    }
+    let env = std::env::var("STENCIL_SIMD").ok().map(|v| v.to_ascii_lowercase());
+    if env_forces_scalar(env.as_deref()) {
+        return SimdIsa::Scalar;
+    }
+    detect()
+}
+
+/// Detect the strongest ISA this host supports.
+fn detect() -> SimdIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            SimdIsa::Avx2
+        } else {
+            SimdIsa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdIsa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdIsa::Scalar
+    }
+}
+
+/// Human-readable list of the vector features detected on this host,
+/// for CI logs and `dump-ir --engine simd`. AVX-512F shows up here when
+/// present even though execution goes through the AVX2 path.
+pub fn feature_summary() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, on) in [
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ] {
+            if on {
+                feats.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        feats.push("neon");
+    }
+    if feats.is_empty() {
+        feats.push("none");
+    }
+    feats.join(" ")
+}
+
+/// Bump the `stencil_engine_dispatch_total{isa=...}` counter family.
+fn count_dispatch(isa: SimdIsa) {
+    let labels = match isa {
+        SimdIsa::Avx2 => "isa=\"avx2\"",
+        SimdIsa::Neon => "isa=\"neon\"",
+        SimdIsa::Scalar => "isa=\"scalar\"",
+    };
+    registry::global().counter_with("stencil_engine_dispatch_total", labels).inc();
+}
+
+/// A lowered SIMD instruction: either a pass-through [`FOp`] or a fused
+/// run of consecutive outer products.
+#[derive(Debug, Clone)]
+enum SOp {
+    /// Executed by a vector ALU loop, or by the shared scalar helper.
+    Plain(FOp),
+    /// `pairs.len()` consecutive `Outer { m, .. }` ops on one tile
+    /// register: per accumulator chunk, load once, apply every `(a, b)`
+    /// broadcast × vector multiply-add pair in program order, store
+    /// once.
+    OuterRun { m: u32, pairs: Vec<(u32, u32)> },
+}
+
+/// A straight-line block of lowered SIMD instructions.
+#[derive(Debug, Clone)]
+struct SimdBlock {
+    code: Vec<SOp>,
+}
+
+#[derive(Debug, Clone)]
+enum SimdSection {
+    Par(Vec<SimdBlock>),
+    Seq(SimdBlock),
+}
+
+/// Fuse consecutive `Outer` ops on the same tile register into
+/// [`SOp::OuterRun`]s. Adjacency in program order means nothing
+/// executes between the fused ops, and the microkernel preserves the
+/// per-element pair order, so the fusion is bitwise-neutral.
+fn lower_block(block: &Block) -> SimdBlock {
+    let mut code: Vec<SOp> = Vec::with_capacity(block.code.len());
+    for fop in &block.code {
+        if let FOp::Outer { m, a, b } = *fop {
+            if let Some(SOp::OuterRun { m: prev, pairs }) = code.last_mut() {
+                if *prev == m {
+                    pairs.push((a, b));
+                    continue;
+                }
+            }
+            code.push(SOp::OuterRun { m, pairs: vec![(a, b)] });
+        } else {
+            code.push(SOp::Plain(*fop));
+        }
+    }
+    SimdBlock { code }
+}
+
+/// Per-plan lowering statistics (for [`SimdPlan::describe`]).
+#[derive(Debug, Default, Clone, Copy)]
+struct LowerStats {
+    /// Register-tile outer-product microkernels emitted.
+    runs: usize,
+    /// Original `Outer` ops covered by those runs.
+    outers: usize,
+    /// `Fma`/`FmaLane` ops lowered to vector multiply-add loops.
+    vfma: usize,
+    /// `Add`/`Mul` ops lowered to vector ALU loops.
+    valu: usize,
+    /// Bulk-move ops (loads, stores, shifts, broadcasts) left to the
+    /// compiler's vector memmove/memset.
+    vmov: usize,
+    /// Inherently lane-serial ops (strided gathers, column walks)
+    /// executed by the shared scalar helper.
+    scalar: usize,
+}
+
+impl LowerStats {
+    fn add_block(&mut self, block: &SimdBlock) {
+        for sop in &block.code {
+            match sop {
+                SOp::OuterRun { pairs, .. } => {
+                    self.runs += 1;
+                    self.outers += pairs.len();
+                }
+                SOp::Plain(fop) => match fop {
+                    FOp::Fma { .. } | FOp::FmaLane { .. } => self.vfma += 1,
+                    FOp::Add { .. } | FOp::Mul { .. } => self.valu += 1,
+                    FOp::Gather { .. }
+                    | FOp::StoreLane { .. }
+                    | FOp::ColIn { .. }
+                    | FOp::ColOut { .. } => self.scalar += 1,
+                    _ => self.vmov += 1,
+                },
+            }
+        }
+    }
+
+    fn accumulate(&mut self, other: &LowerStats) {
+        self.runs += other.runs;
+        self.outers += other.outers;
+        self.vfma += other.vfma;
+        self.valu += other.valu;
+        self.vmov += other.vmov;
+        self.scalar += other.scalar;
+    }
+
+    fn total_ops(&self) -> usize {
+        self.outers + self.vfma + self.valu + self.vmov + self.scalar
+    }
+
+    /// Ops executed by explicit vector microkernels.
+    fn vector_ops(&self) -> usize {
+        self.outers + self.vfma + self.valu
+    }
+
+    fn line(&self) -> String {
+        format!(
+            "{} op(s) -> {} outer-run ({} outers), {} vfma, {} valu, {} vmov, {} scalar",
+            self.total_ops(),
+            self.runs,
+            self.outers,
+            self.vfma,
+            self.valu,
+            self.vmov,
+            self.scalar
+        )
+    }
+}
+
+/// A compiled [`ExecPlan`] re-lowered for the SIMD engine.
+///
+/// Shares the plan's section structure (and therefore its threading
+/// and span behavior) but owns its own instruction stream with outer
+/// runs fused.
+#[derive(Debug, Clone)]
+pub struct SimdPlan {
+    vlen: usize,
+    n_vregs: usize,
+    n_mregs: usize,
+    sections: Vec<SimdSection>,
+    labels: Vec<SectionMeta>,
+    tables: Vec<Vec<u32>>,
+    mem_hwm: usize,
+    ops: u64,
+    par_blocks: usize,
+}
+
+impl SimdPlan {
+    /// Re-lower a compiled plan for SIMD execution.
+    ///
+    /// Panics if any register offset exceeds the register file the
+    /// plan was compiled for — the dynamic bounds check the compiled
+    /// engine gets from slice indexing, paid once here instead so the
+    /// microkernels can run on raw pointers.
+    pub fn new(plan: &ExecPlan) -> SimdPlan {
+        validate_register_extents(plan);
+        let sections = plan
+            .sections
+            .iter()
+            .map(|s| match s {
+                PlanSection::Par(blocks) => {
+                    SimdSection::Par(blocks.iter().map(lower_block).collect())
+                }
+                PlanSection::Seq(block) => SimdSection::Seq(lower_block(block)),
+            })
+            .collect();
+        SimdPlan {
+            vlen: plan.vlen,
+            n_vregs: plan.n_vregs,
+            n_mregs: plan.n_mregs,
+            sections,
+            labels: plan.labels.clone(),
+            tables: plan.tables.clone(),
+            mem_hwm: plan.mem_hwm,
+            ops: plan.ops,
+            par_blocks: plan.par_blocks,
+        }
+    }
+
+    /// Compile and re-lower `ops` for the machine shape of `cfg`.
+    pub fn from_config(cfg: &SimConfig, ops: &[Op]) -> SimdPlan {
+        SimdPlan::new(&ExecPlan::from_config(cfg, ops))
+    }
+
+    /// Non-marker operations in the plan.
+    pub fn op_count(&self) -> u64 {
+        self.ops
+    }
+
+    /// Blocks the fuser proved independent (0 ⇒ fully sequential plan).
+    pub fn par_blocks(&self) -> usize {
+        self.par_blocks
+    }
+
+    /// Threads `run` will actually use for `threads` requested (0 = all
+    /// available cores), given the plan's parallel structure.
+    pub fn effective_threads(&self, threads: usize) -> usize {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        t.min(self.par_blocks.max(1))
+    }
+
+    /// Execute the plan over `mem` with up to `threads` worker threads
+    /// (0 = one per available core). Dispatches once per call to
+    /// [`active_isa`]; the result in `mem` is bitwise independent of
+    /// both the thread count and the dispatch choice.
+    pub fn run(&self, mem: &mut [f64], threads: usize) {
+        assert!(
+            mem.len() >= self.mem_hwm,
+            "memory image too small for plan: {} < {}",
+            mem.len(),
+            self.mem_hwm
+        );
+        let isa = active_isa();
+        count_dispatch(isa);
+        let threads = self.effective_threads(threads);
+        let shared = SharedMem { ptr: mem.as_mut_ptr(), len: mem.len() };
+        let mut main_state = ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
+        for (si, section) in self.sections.iter().enumerate() {
+            let meta = self.labels.get(si).copied().unwrap_or_default();
+            let name = if meta.phase == Some("freeze") { "kir.freeze" } else { "kir.compute" };
+            let _section_span = match meta.step {
+                Some((t, _)) => span_arg(name, "kir", ("step", t as f64)),
+                None => span(name, "kir"),
+            };
+            match section {
+                SimdSection::Seq(block) => {
+                    self.run_block(block, &shared, &mut main_state, isa);
+                }
+                SimdSection::Par(blocks) => {
+                    row_groups_counter().add(blocks.len() as u64);
+                    if threads <= 1 || blocks.len() <= 1 {
+                        for (bi, block) in blocks.iter().enumerate() {
+                            let _g = span_arg("kir.row_group", "kir", ("block", bi as f64));
+                            self.run_block(block, &shared, &mut main_state, isa);
+                        }
+                    } else {
+                        let next = AtomicUsize::new(0);
+                        let workers = threads.min(blocks.len());
+                        std::thread::scope(|scope| {
+                            for w in 0..workers {
+                                std::thread::Builder::new()
+                                    .name(format!("kir-simd-{w}"))
+                                    .spawn_scoped(scope, || {
+                                        let mut state =
+                                            ExecState::new(self.vlen, self.n_vregs, self.n_mregs);
+                                        loop {
+                                            let i = next.fetch_add(1, Ordering::Relaxed);
+                                            let Some(block) = blocks.get(i) else { break };
+                                            let _g = span_arg(
+                                                "kir.row_group",
+                                                "kir",
+                                                ("block", i as f64),
+                                            );
+                                            self.run_block(block, &shared, &mut state, isa);
+                                        }
+                                    })
+                                    .expect("spawn kir simd worker thread");
+                            }
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Safe dispatch wrapper around the per-ISA block executors.
+    fn run_block(&self, block: &SimdBlock, mem: &SharedMem, st: &mut ExecState, isa: SimdIsa) {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            SimdIsa::Avx2 => {
+                // SAFETY: `isa` is Avx2 only when `detect` saw the
+                // avx2+fma CPUID bits on this host, and `SimdPlan::new`
+                // validated every register offset against the register
+                // file shape `ExecState::new` allocates.
+                unsafe { self.run_block_avx2(block, mem, st) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            SimdIsa::Neon => {
+                // SAFETY: NEON is part of the aarch64 baseline, and the
+                // register-extent argument above holds unchanged.
+                unsafe { self.run_block_neon(block, mem, st) }
+            }
+            _ => self.run_block_scalar(block, mem, st),
+        }
+    }
+
+    /// Portable fallback: every op goes through [`exec_fop`] — the
+    /// routine the compiled engine runs — so the fallback is
+    /// byte-identical to `Engine::Compiled` by construction. Outer runs
+    /// unfuse back into their original op sequence.
+    fn run_block_scalar(&self, block: &SimdBlock, mem: &SharedMem, st: &mut ExecState) {
+        let n = self.vlen;
+        let ExecState { vregs, mregs, scratch } = st;
+        let v = vregs.as_mut_slice();
+        let t = mregs.as_mut_slice();
+        for sop in &block.code {
+            match sop {
+                SOp::Plain(fop) => exec_fop(fop, &self.tables, n, mem, v, t, scratch),
+                SOp::OuterRun { m, pairs } => {
+                    for &(a, b) in pairs {
+                        let fop = FOp::Outer { m: *m, a, b };
+                        exec_fop(&fop, &self.tables, n, mem, v, t, scratch);
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 block executor.
+    ///
+    /// # Safety
+    /// The host must support avx2, and `st` must have the register file
+    /// shape this plan was validated against in [`SimdPlan::new`].
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn run_block_avx2(&self, block: &SimdBlock, mem: &SharedMem, st: &mut ExecState) {
+        let n = self.vlen;
+        let ExecState { vregs, mregs, scratch } = st;
+        let v = vregs.as_mut_slice();
+        let t = mregs.as_mut_slice();
+        for sop in &block.code {
+            match sop {
+                SOp::OuterRun { m, pairs } => {
+                    // SAFETY: tile `m + n*n` and every vector operand
+                    // `a/b + n` were validated in-bounds at lowering.
+                    unsafe { avx2::outer_run(v.as_ptr(), t.as_mut_ptr(), *m as usize, pairs, n) }
+                }
+                SOp::Plain(fop) => match *fop {
+                    FOp::Fma { acc, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: validated offsets; register ranges are
+                        // multiples of n apart, so they are identical or
+                        // disjoint, and each chunk loads before it
+                        // stores — matching the scalar read/write order.
+                        unsafe {
+                            avx2::fma(
+                                p.add(acc as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    FOp::FmaLane { acc, a, bl } => {
+                        let c = v[bl as usize];
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma; the lane operand is
+                        // latched before the loop, as the interpreter
+                        // does.
+                        unsafe {
+                            avx2::fma_lane(p.add(acc as usize), p.add(a as usize).cast_const(), c, n)
+                        }
+                    }
+                    FOp::Add { d, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma.
+                        unsafe {
+                            avx2::add(
+                                p.add(d as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    FOp::Mul { d, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma.
+                        unsafe {
+                            avx2::mul(
+                                p.add(d as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    ref other => exec_fop(other, &self.tables, n, mem, v, t, scratch),
+                },
+            }
+        }
+    }
+
+    /// NEON block executor.
+    ///
+    /// # Safety
+    /// NEON must be available (aarch64 baseline), and `st` must have
+    /// the register file shape this plan was validated against.
+    #[cfg(target_arch = "aarch64")]
+    #[target_feature(enable = "neon")]
+    unsafe fn run_block_neon(&self, block: &SimdBlock, mem: &SharedMem, st: &mut ExecState) {
+        let n = self.vlen;
+        let ExecState { vregs, mregs, scratch } = st;
+        let v = vregs.as_mut_slice();
+        let t = mregs.as_mut_slice();
+        for sop in &block.code {
+            match sop {
+                SOp::OuterRun { m, pairs } => {
+                    // SAFETY: tile `m + n*n` and every vector operand
+                    // `a/b + n` were validated in-bounds at lowering.
+                    unsafe { neon::outer_run(v.as_ptr(), t.as_mut_ptr(), *m as usize, pairs, n) }
+                }
+                SOp::Plain(fop) => match *fop {
+                    FOp::Fma { acc, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: validated offsets; register ranges are
+                        // multiples of n apart, so they are identical or
+                        // disjoint, and each chunk loads before it
+                        // stores — matching the scalar read/write order.
+                        unsafe {
+                            neon::fma(
+                                p.add(acc as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    FOp::FmaLane { acc, a, bl } => {
+                        let c = v[bl as usize];
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma; the lane operand is
+                        // latched before the loop, as the interpreter
+                        // does.
+                        unsafe {
+                            neon::fma_lane(p.add(acc as usize), p.add(a as usize).cast_const(), c, n)
+                        }
+                    }
+                    FOp::Add { d, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma.
+                        unsafe {
+                            neon::add(
+                                p.add(d as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    FOp::Mul { d, a, b } => {
+                        let p = v.as_mut_ptr();
+                        // SAFETY: as for Fma.
+                        unsafe {
+                            neon::mul(
+                                p.add(d as usize),
+                                p.add(a as usize).cast_const(),
+                                p.add(b as usize).cast_const(),
+                                n,
+                            )
+                        }
+                    }
+                    ref other => exec_fop(other, &self.tables, n, mem, v, t, scratch),
+                },
+            }
+        }
+    }
+
+    /// Render the lowering report `dump-ir --engine simd` prints: the
+    /// detected dispatch target and, per section, how many ops became
+    /// vector microkernels vs bulk moves vs the scalar helper.
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "simd plan: dispatch={} (features: {}), vlen={}, {} op(s), {} par block(s)",
+            active_isa(),
+            feature_summary(),
+            self.vlen,
+            self.ops,
+            self.par_blocks
+        );
+        let mut total = LowerStats::default();
+        for (si, section) in self.sections.iter().enumerate() {
+            let mut s = LowerStats::default();
+            let (kind, nblocks) = match section {
+                SimdSection::Seq(block) => {
+                    s.add_block(block);
+                    ("seq", 1)
+                }
+                SimdSection::Par(blocks) => {
+                    for block in blocks {
+                        s.add_block(block);
+                    }
+                    ("par", blocks.len())
+                }
+            };
+            let phase = match self.labels.get(si).and_then(|m| m.phase) {
+                Some(p) => format!(" [{p}]"),
+                None => String::new(),
+            };
+            let _ = writeln!(out, "  section {si} {kind}x{nblocks}{phase}: {}", s.line());
+            total.accumulate(&s);
+        }
+        let pct = 100.0 * total.vector_ops() as f64 / total.total_ops().max(1) as f64;
+        let _ = writeln!(
+            out,
+            "  totals: {}; vector-lowered {}/{} ({pct:.0}%)",
+            total.line(),
+            total.vector_ops(),
+            total.total_ops()
+        );
+        out
+    }
+}
+
+/// Check every register offset in `plan` against the register file
+/// shape its `ExecState` will allocate, so the raw-pointer microkernels
+/// are in-bounds without per-access checks.
+fn validate_register_extents(plan: &ExecPlan) {
+    let n = plan.vlen;
+    let mut vmax = 0usize;
+    let mut mmax = 0usize;
+    let mut blocks: Vec<&Block> = Vec::new();
+    for section in &plan.sections {
+        match section {
+            PlanSection::Par(bs) => blocks.extend(bs.iter()),
+            PlanSection::Seq(b) => blocks.push(b),
+        }
+    }
+    let mut vreg = |off: u32, len: usize| vmax = vmax.max(off as usize + len);
+    let mut mreg = |off: u32, len: usize| mmax = mmax.max(off as usize + len);
+    for block in blocks {
+        for fop in &block.code {
+            match *fop {
+                FOp::Load { d, .. } | FOp::Gather { d, .. } | FOp::Splat { d, .. } => vreg(d, n),
+                FOp::Store { s, .. } => vreg(s, n),
+                FOp::StoreLane { sl, .. } => vreg(sl, 1),
+                FOp::Ext { d, lo, hi, .. } => {
+                    vreg(d, n);
+                    vreg(lo, n);
+                    vreg(hi, n);
+                }
+                FOp::Dup { d, sl } => {
+                    vreg(d, n);
+                    vreg(sl, 1);
+                }
+                FOp::Fma { acc, a, b } => {
+                    vreg(acc, n);
+                    vreg(a, n);
+                    vreg(b, n);
+                }
+                FOp::FmaLane { acc, a, bl } => {
+                    vreg(acc, n);
+                    vreg(a, n);
+                    vreg(bl, 1);
+                }
+                FOp::Add { d, a, b } | FOp::Mul { d, a, b } => {
+                    vreg(d, n);
+                    vreg(a, n);
+                    vreg(b, n);
+                }
+                FOp::Zero { d } => vreg(d, n),
+                FOp::TileZero { m } => mreg(m, n * n),
+                FOp::Outer { m, a, b } => {
+                    vreg(a, n);
+                    vreg(b, n);
+                    mreg(m, n * n);
+                }
+                FOp::RowIn { mr, s } => {
+                    vreg(s, n);
+                    mreg(mr, n);
+                }
+                FOp::RowOut { d, mr } => {
+                    vreg(d, n);
+                    mreg(mr, n);
+                }
+                FOp::ColIn { m, s, .. } => {
+                    vreg(s, n);
+                    mreg(m, n * n);
+                }
+                FOp::ColOut { d, m, .. } => {
+                    vreg(d, n);
+                    mreg(m, n * n);
+                }
+                FOp::RowLoad { mr, .. } | FOp::RowStore { mr, .. } => mreg(mr, n),
+            }
+        }
+    }
+    assert!(
+        vmax <= n * plan.n_vregs,
+        "vector register offset out of range for plan: {} > {}",
+        vmax,
+        n * plan.n_vregs
+    );
+    assert!(
+        mmax <= n * n * plan.n_mregs,
+        "tile register offset out of range for plan: {} > {}",
+        mmax,
+        n * n * plan.n_mregs
+    );
+}
+
+/// AVX2 microkernels. Every fn is `unsafe` + `#[target_feature]` and
+/// reachable only through [`SimdPlan::run_block`]'s checked dispatch.
+///
+/// Accumulations issue a vector multiply followed by a vector add —
+/// two IEEE roundings per lane, exactly the interpreter's semantics —
+/// never a fused `vfmadd`, whose single rounding would diverge
+/// bitwise.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+    };
+
+    /// f64 lanes per 256-bit vector.
+    const LANES: usize = 4;
+
+    /// `acc[k] += a[k] * b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// avx2 available; all three `n`-element ranges in bounds. `acc`
+    /// may equal `a`/`b` (chunk loads precede the chunk store).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fma(acc: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = _mm256_loadu_pd(a.add(k));
+                let vb = _mm256_loadu_pd(b.add(k));
+                let vc = _mm256_loadu_pd(acc.add(k));
+                _mm256_storeu_pd(acc.add(k), _mm256_add_pd(vc, _mm256_mul_pd(va, vb)));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe {
+                let prod = *a.add(k) * *b.add(k);
+                *acc.add(k) += prod;
+            }
+            k += 1;
+        }
+    }
+
+    /// `acc[k] += a[k] * c` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`] (two ranges plus a broadcast scalar).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fma_lane(acc: *mut f64, a: *const f64, c: f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps both chunks in range.
+            unsafe {
+                let vcst = _mm256_set1_pd(c);
+                let va = _mm256_loadu_pd(a.add(k));
+                let vc = _mm256_loadu_pd(acc.add(k));
+                _mm256_storeu_pd(acc.add(k), _mm256_add_pd(vc, _mm256_mul_pd(va, vcst)));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe {
+                let prod = *a.add(k) * c;
+                *acc.add(k) += prod;
+            }
+            k += 1;
+        }
+    }
+
+    /// `d[k] = a[k] + b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add(d: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = _mm256_loadu_pd(a.add(k));
+                let vb = _mm256_loadu_pd(b.add(k));
+                _mm256_storeu_pd(d.add(k), _mm256_add_pd(va, vb));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe { *d.add(k) = *a.add(k) + *b.add(k) }
+            k += 1;
+        }
+    }
+
+    /// `d[k] = a[k] * b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`].
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul(d: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = _mm256_loadu_pd(a.add(k));
+                let vb = _mm256_loadu_pd(b.add(k));
+                _mm256_storeu_pd(d.add(k), _mm256_mul_pd(va, vb));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe { *d.add(k) = *a.add(k) * *b.add(k) }
+            k += 1;
+        }
+    }
+
+    /// Register-tile outer-product run:
+    /// `t[m + i*n + j] += v[a + i] * v[b + j]` for every `(a, b)` pair
+    /// in program order. Each accumulator chunk is loaded once per run
+    /// and stored once, so tile traffic shrinks by the run length; per
+    /// element the pair sequence matches the interpreter exactly.
+    ///
+    /// # Safety
+    /// avx2 available; `m + n*n` in bounds of `t`, every `a + n` /
+    /// `b + n` in bounds of `v`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn outer_run(
+        v: *const f64,
+        t: *mut f64,
+        m: usize,
+        pairs: &[(u32, u32)],
+        n: usize,
+    ) {
+        let mut j = 0;
+        while j + LANES <= n {
+            for i in 0..n {
+                // SAFETY: chunk `[j, j + LANES)` of tile row `i` and of
+                // every `b` vector is in range; all loads precede the
+                // single store.
+                unsafe {
+                    let row = t.add(m + i * n + j);
+                    let mut acc = _mm256_loadu_pd(row);
+                    for &(a, b) in pairs {
+                        let ai = _mm256_set1_pd(*v.add(a as usize + i));
+                        let vb = _mm256_loadu_pd(v.add(b as usize + j));
+                        acc = _mm256_add_pd(acc, _mm256_mul_pd(ai, vb));
+                    }
+                    _mm256_storeu_pd(row, acc);
+                }
+            }
+            j += LANES;
+        }
+        while j < n {
+            for i in 0..n {
+                // SAFETY: scalar tail element `(i, j)` is in range.
+                unsafe {
+                    let e = t.add(m + i * n + j);
+                    for &(a, b) in pairs {
+                        let prod = *v.add(a as usize + i) * *v.add(b as usize + j);
+                        *e += prod;
+                    }
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// NEON microkernels (aarch64 baseline). Same shapes and the same
+/// two-rounding multiply-then-add contract as the AVX2 set — `fmul` +
+/// `fadd`, never a fused `fmla`.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::{vaddq_f64, vdupq_n_f64, vld1q_f64, vmulq_f64, vst1q_f64};
+
+    /// f64 lanes per 128-bit vector.
+    const LANES: usize = 2;
+
+    /// `acc[k] += a[k] * b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// All three `n`-element ranges in bounds. `acc` may equal `a`/`b`
+    /// (chunk loads precede the chunk store).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn fma(acc: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = vld1q_f64(a.add(k));
+                let vb = vld1q_f64(b.add(k));
+                let vc = vld1q_f64(acc.add(k));
+                vst1q_f64(acc.add(k), vaddq_f64(vc, vmulq_f64(va, vb)));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe {
+                let prod = *a.add(k) * *b.add(k);
+                *acc.add(k) += prod;
+            }
+            k += 1;
+        }
+    }
+
+    /// `acc[k] += a[k] * c` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`].
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn fma_lane(acc: *mut f64, a: *const f64, c: f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps both chunks in range.
+            unsafe {
+                let vcst = vdupq_n_f64(c);
+                let va = vld1q_f64(a.add(k));
+                let vc = vld1q_f64(acc.add(k));
+                vst1q_f64(acc.add(k), vaddq_f64(vc, vmulq_f64(va, vcst)));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe {
+                let prod = *a.add(k) * c;
+                *acc.add(k) += prod;
+            }
+            k += 1;
+        }
+    }
+
+    /// `d[k] = a[k] + b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`].
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add(d: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = vld1q_f64(a.add(k));
+                let vb = vld1q_f64(b.add(k));
+                vst1q_f64(d.add(k), vaddq_f64(va, vb));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe { *d.add(k) = *a.add(k) + *b.add(k) }
+            k += 1;
+        }
+    }
+
+    /// `d[k] = a[k] * b[k]` for `k < n`.
+    ///
+    /// # Safety
+    /// As for [`fma`].
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mul(d: *mut f64, a: *const f64, b: *const f64, n: usize) {
+        let mut k = 0;
+        while k + LANES <= n {
+            // SAFETY: `k + LANES <= n` keeps all three chunks in range.
+            unsafe {
+                let va = vld1q_f64(a.add(k));
+                let vb = vld1q_f64(b.add(k));
+                vst1q_f64(d.add(k), vmulq_f64(va, vb));
+            }
+            k += LANES;
+        }
+        while k < n {
+            // SAFETY: `k < n`.
+            unsafe { *d.add(k) = *a.add(k) * *b.add(k) }
+            k += 1;
+        }
+    }
+
+    /// Register-tile outer-product run (see the AVX2 twin for the
+    /// traffic and ordering argument).
+    ///
+    /// # Safety
+    /// `m + n*n` in bounds of `t`, every `a + n` / `b + n` in bounds
+    /// of `v`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn outer_run(
+        v: *const f64,
+        t: *mut f64,
+        m: usize,
+        pairs: &[(u32, u32)],
+        n: usize,
+    ) {
+        let mut j = 0;
+        while j + LANES <= n {
+            for i in 0..n {
+                // SAFETY: chunk `[j, j + LANES)` of tile row `i` and of
+                // every `b` vector is in range; all loads precede the
+                // single store.
+                unsafe {
+                    let row = t.add(m + i * n + j);
+                    let mut acc = vld1q_f64(row);
+                    for &(a, b) in pairs {
+                        let ai = vdupq_n_f64(*v.add(a as usize + i));
+                        let vb = vld1q_f64(v.add(b as usize + j));
+                        acc = vaddq_f64(acc, vmulq_f64(ai, vb));
+                    }
+                    vst1q_f64(row, acc);
+                }
+            }
+            j += LANES;
+        }
+        while j < n {
+            for i in 0..n {
+                // SAFETY: scalar tail element `(i, j)` is in range.
+                unsafe {
+                    let e = t.add(m + i * n + j);
+                    for &(a, b) in pairs {
+                        let prod = *v.add(a as usize + i) * *v.add(b as usize + j);
+                        *e += prod;
+                    }
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::host::HostMachine;
+    use crate::kir::ir::{Kernel, KirSink, Marker, MReg, VReg};
+    use crate::kir::mem::Arena as _;
+
+    /// The two-group program the compiled-engine tests use, with
+    /// adjacent outer products so the run fusion has work to do.
+    fn marked_program() -> (HostMachine, Kernel) {
+        let mut host = HostMachine::new(8, 16, 2);
+        let a = host.alloc(64);
+        let b = host.alloc(64);
+        let input: Vec<f64> = (0..64).map(|x| 0.25 + x as f64 * 0.75).collect();
+        host.write_mem(a, &input);
+        let mut k = Kernel::default();
+        for g in 0..2usize {
+            let marker = Marker::TileGroup { i0: 8 * g as isize, j0: 0, k0: 0, ui: 1, uk: 1 };
+            k.emit(Op::Begin(marker));
+            k.emit(Op::TileZero { m: MReg(0) });
+            k.emit(Op::Load { dst: VReg(0), addr: a + 32 * g });
+            k.emit(Op::Load { dst: VReg(1), addr: a + 32 * g + 8 });
+            k.emit(Op::Outer { m: MReg(0), a: VReg(0), b: VReg(1) });
+            k.emit(Op::Outer { m: MReg(0), a: VReg(1), b: VReg(0) });
+            k.emit(Op::Ext { dst: VReg(2), lo: VReg(0), hi: VReg(1), shift: 3 });
+            k.emit(Op::Outer { m: MReg(0), a: VReg(2), b: VReg(1) });
+            k.emit(Op::Zero { dst: VReg(4) });
+            k.emit(Op::Fma { acc: VReg(4), a: VReg(0), b: VReg(1) });
+            k.emit(Op::FmaLane { acc: VReg(4), a: VReg(2), b: VReg(1), lane: 5 });
+            k.emit(Op::Add { dst: VReg(5), a: VReg(4), b: VReg(2) });
+            k.emit(Op::Mul { dst: VReg(5), a: VReg(5), b: VReg(0) });
+            k.emit(Op::Store { src: VReg(5), addr: b + 32 * g });
+            k.emit(Op::RowStore { m: MReg(0), row: 1, addr: b + 32 * g + 8 });
+            k.emit(Op::RowOut { dst: VReg(3), m: MReg(0), row: 2 });
+            k.emit(Op::Store { src: VReg(3), addr: b + 32 * g + 16 });
+            k.emit(Op::End(marker));
+        }
+        (host, k)
+    }
+
+    #[test]
+    fn lowering_fuses_consecutive_outer_runs() {
+        let (_, k) = marked_program();
+        let plan = SimdPlan::new(&ExecPlan::new(&k.ops, 8, 16, 2));
+        let SimdSection::Par(blocks) = &plan.sections[0] else {
+            panic!("expected a Par section");
+        };
+        let runs: Vec<usize> = blocks[0]
+            .code
+            .iter()
+            .filter_map(|sop| match sop {
+                SOp::OuterRun { pairs, .. } => Some(pairs.len()),
+                SOp::Plain(_) => None,
+            })
+            .collect();
+        // three Outer ops on MReg(0): two adjacent (fused) + one after
+        // an Ext (its own run)
+        assert_eq!(runs, vec![2, 1]);
+    }
+
+    #[test]
+    fn simd_matches_interpreter_on_marked_program_at_any_thread_count() {
+        let (host, k) = marked_program();
+        let mut interp = host.clone();
+        interp.run(&k.ops);
+        let plan = SimdPlan::new(&ExecPlan::new(&k.ops, 8, 16, 2));
+        assert_eq!(plan.par_blocks(), 2);
+        for threads in [1usize, 2, 4] {
+            let mut mem = host.mem.clone();
+            plan.run(&mut mem, threads);
+            assert_eq!(mem, interp.mem, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn forced_scalar_fallback_is_bitwise_identical() {
+        let (host, k) = marked_program();
+        let plan = SimdPlan::new(&ExecPlan::new(&k.ops, 8, 16, 2));
+        let mut native = host.mem.clone();
+        plan.run(&mut native, 2);
+        force_scalar(true);
+        assert_eq!(active_isa(), SimdIsa::Scalar);
+        let mut fallback = host.mem.clone();
+        plan.run(&mut fallback, 2);
+        force_scalar(false);
+        assert_eq!(native, fallback);
+    }
+
+    #[test]
+    fn dispatch_is_counted_per_isa() {
+        let (host, k) = marked_program();
+        let plan = SimdPlan::new(&ExecPlan::new(&k.ops, 8, 16, 2));
+        let isa = active_isa();
+        let labels = format!("isa=\"{isa}\"");
+        let counter = registry::global().counter_with("stencil_engine_dispatch_total", &labels);
+        let before = counter.get();
+        let mut mem = host.mem.clone();
+        plan.run(&mut mem, 1);
+        assert!(counter.get() >= before + 1);
+    }
+
+    #[test]
+    fn env_override_values_parse() {
+        assert!(env_forces_scalar(Some("scalar")));
+        assert!(env_forces_scalar(Some(" off ")));
+        assert!(env_forces_scalar(Some("0")));
+        assert!(!env_forces_scalar(Some("avx2")));
+        assert!(!env_forces_scalar(Some("")));
+        assert!(!env_forces_scalar(None));
+    }
+
+    #[test]
+    fn describe_reports_dispatch_and_coverage() {
+        let (_, k) = marked_program();
+        let plan = SimdPlan::new(&ExecPlan::new(&k.ops, 8, 16, 2));
+        let report = plan.describe();
+        assert!(report.contains("dispatch="), "{report}");
+        assert!(report.contains("outer-run"), "{report}");
+        assert!(report.contains("vector-lowered"), "{report}");
+        assert!(report.contains(&format!("dispatch={}", active_isa())), "{report}");
+    }
+}

@@ -10,15 +10,15 @@
 //!                            [--budget 12] [--strategy guided] \
 //!                            [--db target/tune/tune_db.json] [--out target/tune]
 //! stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-//! stencil-matrix bench-json  [--out BENCH_6.json] [--size2d 64] [--size3d 16]
+//! stencil-matrix bench-json  [--out BENCH_8.json] [--size2d 64] [--size3d 16]
 //! stencil-matrix bench-compare [--baseline bench/baseline.json] \
-//!                            [--current BENCH_6.json] [--self-test]
+//!                            [--current BENCH_8.json] [--self-test]
 //! stencil-matrix engine-bench --stencil 2d-star --order 2 --size 512
 //! stencil-matrix dump-ir     --stencil 2d-box --order 1 --size 16 \
 //!                            --method outer [--limit 120]
 //! stencil-matrix serve       --workers 4 --shards 8 --queue-depth 32 \
 //!                            --size 256 --steps 8 --requests 32 \
-//!                            [--engine compiled|interpret] [--fuse-steps 4] \
+//!                            [--engine compiled|interpret|simd] [--fuse-steps 4] \
 //!                            [--trace-out trace.json] [--metrics-out serve.prom] \
 //!                            [--listen-metrics 127.0.0.1:9184] [--linger-secs 0] \
 //!                            [--cost-audit cost-audit.json] \
@@ -296,6 +296,16 @@ fn run() -> anyhow::Result<()> {
                     );
                 }
             }
+            // `--engine simd`: append the SIMD lowering plan — per block,
+            // how many FOps became vector microkernels vs scalar
+            // fallback, and which ISA runtime dispatch selected
+            if let Some(engine) = args.get("engine") {
+                if engine.parse::<Engine>()? == Engine::Simd {
+                    let plan = stencil_matrix::kir::ExecPlan::from_config(&cfg, &kernel.ops);
+                    let splan = stencil_matrix::kir::SimdPlan::new(&plan);
+                    print!("{}", splan.describe());
+                }
+            }
         }
         "bench" => {
             let which = args
@@ -307,7 +317,7 @@ fn run() -> anyhow::Result<()> {
             run_experiment(&cfg, which)?;
         }
         "bench-json" => {
-            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_6.json"));
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_8.json"));
             let n2d = args.usize_or("size2d", 64)?;
             let n3d = args.usize_or("size3d", 16)?;
             let snap = stencil_matrix::bench_harness::snapshot::run(&cfg, n2d, n3d)?;
@@ -379,7 +389,7 @@ fn run() -> anyhow::Result<()> {
 }
 
 /// `bench-compare`: the perf-regression gate — compare a fresh
-/// `BENCH_6.json` against `bench/baseline.json` and fail on >2% sim-cycle
+/// `BENCH_8.json` against `bench/baseline.json` and fail on >2% sim-cycle
 /// drift or >10% host wall-clock / serving-throughput drift
 /// (`--self-test` proves the gate trips on injected regressions).
 fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
@@ -389,7 +399,7 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
         Some(s) => s.parse::<f64>()? / 100.0,
         None => compare::DEFAULT_TOLERANCE,
     };
-    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_6.json"));
+    let current_path = PathBuf::from(args.get("current").unwrap_or("BENCH_8.json"));
     let current = Json::parse(&std::fs::read_to_string(&current_path)?)?;
     if args.has("self-test") {
         let cmp = compare::self_test(&current, tolerance)?;
@@ -446,12 +456,13 @@ fn bench_compare_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `engine-bench`: compiled engine vs interpreter wall-clock on one
-/// stencil — the engine-vs-interpreter throughput CI puts in the job
-/// summary. With `--fuse-steps T > 1` the temporally blocked T-step
-/// program is measured alongside the unfused one (per-step-normalized
-/// columns). All runs are oracle-verified and checked bitwise-equal
-/// across engines and thread counts.
+/// `engine-bench`: interpreter vs compiled vs explicit-SIMD wall-clock
+/// on one stencil — the engine throughput table CI puts in the job
+/// summary (simd rows carry the runtime-dispatched ISA). With
+/// `--fuse-steps T > 1` the temporally blocked T-step program is
+/// measured alongside the unfused one (per-step-normalized columns).
+/// All runs are oracle-verified and checked bitwise-equal across
+/// engines and thread counts.
 fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::util::bench::Table;
 
@@ -462,6 +473,10 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let reps = args.usize_or("reps", 3)?.max(1);
     let fuse = args.usize_or("fuse-steps", 1)?.max(1);
     let min_speedup = match args.get("min-speedup") {
+        Some(s) => Some(s.parse::<f64>()?),
+        None => None,
+    };
+    let min_simd_speedup = match args.get("min-simd-speedup") {
         Some(s) => Some(s.parse::<f64>()?),
         None => None,
     };
@@ -480,7 +495,14 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let interp = best_of(Engine::Interpret, 1, 1)?;
     let compiled_1t = best_of(Engine::Compiled, 1, 1)?;
     let compiled = best_of(Engine::Compiled, 1, threads)?;
-    for (name, run) in [("compiled-1t", &compiled_1t), ("compiled", &compiled)] {
+    let simd_1t = best_of(Engine::Simd, 1, 1)?;
+    let simd = best_of(Engine::Simd, 1, threads)?;
+    for (name, run) in [
+        ("compiled-1t", &compiled_1t),
+        ("compiled", &compiled),
+        ("simd-1t", &simd_1t),
+        ("simd", &simd),
+    ] {
         anyhow::ensure!(
             run.grid.data == interp.grid.data,
             "{name} output diverged bitwise from the interpreter"
@@ -489,11 +511,16 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let fused = if fuse > 1 {
         let fi = best_of(Engine::Interpret, fuse, 1)?;
         let fc = best_of(Engine::Compiled, fuse, threads)?;
+        let fs = best_of(Engine::Simd, fuse, threads)?;
         anyhow::ensure!(
             fc.grid.data == fi.grid.data,
             "fused compiled output diverged bitwise from the fused interpreter"
         );
-        Some((fi, fc))
+        anyhow::ensure!(
+            fs.grid.data == fi.grid.data,
+            "fused simd output diverged bitwise from the fused interpreter"
+        );
+        Some((fi, fc, fs))
     } else {
         None
     };
@@ -506,16 +533,25 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
         "# engine-bench — {spec} N={n} {method} (best of {reps}, {} host op(s))\n",
         interp.ops
     );
-    let mut rows: Vec<(&str, &HostRun)> =
-        vec![("interpret", &interp), ("compiled", &compiled_1t), ("compiled", &compiled)];
-    if let Some((fi, fc)) = &fused {
-        rows.push(("interpret-fused", fi));
-        rows.push(("compiled-fused", fc));
+    let isa = stencil_matrix::kir::simd::active_isa();
+    let mut rows: Vec<(&str, &str, &HostRun)> = vec![
+        ("interpret", "—", &interp),
+        ("compiled", "—", &compiled_1t),
+        ("compiled", "—", &compiled),
+        ("simd", isa.as_str(), &simd_1t),
+        ("simd", isa.as_str(), &simd),
+    ];
+    if let Some((fi, fc, fs)) = &fused {
+        rows.push(("interpret-fused", "—", fi));
+        rows.push(("compiled-fused", "—", fc));
+        rows.push(("simd-fused", isa.as_str(), fs));
     }
-    let mut table = Table::new(&["engine", "T", "threads", "s/step", "Mpts/s", "vs interpret"]);
-    for &(name, run) in &rows {
+    let mut table =
+        Table::new(&["engine", "ISA", "T", "threads", "s/step", "Mpts/s", "vs interpret"]);
+    for &(name, row_isa, run) in &rows {
         table.row(vec![
             name.to_string(),
+            row_isa.to_string(),
             run.steps.to_string(),
             run.threads.to_string(),
             format!("{:.4}", per_step(run)),
@@ -526,17 +562,27 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let md = table.to_markdown();
     print!("{md}");
     let speedup = interp.seconds / compiled.seconds.max(1e-12);
+    let simd_speedup = compiled_1t.seconds / simd_1t.seconds.max(1e-12);
     let mut summary = format!(
         "\ncompiled engine: {speedup:.2}x the interpreter at {} thread(s) \
          (bitwise-identical output)\n",
         compiled.threads
     );
-    if let Some((_, fc)) = &fused {
+    summary.push_str(&format!(
+        "simd engine ({isa}): {simd_speedup:.2}x the compiled engine single-thread \
+         (bitwise-identical output)\n"
+    ));
+    if let Some((_, fc, fs)) = &fused {
         summary.push_str(&format!(
             "temporal blocking: fused T={} compiled runs at {:.2}x the unfused compiled \
              per-step throughput (bitwise-identical across engines)\n",
             fc.steps,
             per_step(&compiled) / per_step(fc).max(1e-12)
+        ));
+        summary.push_str(&format!(
+            "fused simd T={}: {:.2}x the fused compiled per-step throughput\n",
+            fs.steps,
+            per_step(fc) / per_step(fs).max(1e-12)
         ));
     }
     print!("{summary}");
@@ -555,8 +601,10 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
         ("interpret".to_string(), interp_prof),
         (format!("compiled x{}", compiled.threads), compiled_prof),
     ];
+    let (simd_prof, _) = profile_of(Engine::Simd, 1, threads)?;
+    prof_rows.push((format!("simd[{isa}] x{}", simd.threads), simd_prof));
     let mut trace_spans = compiled_spans;
-    if let Some((_, fc)) = &fused {
+    if let Some((_, fc, _)) = &fused {
         let (fused_prof, fused_spans) = profile_of(Engine::Compiled, fuse, threads)?;
         prof_rows.push((format!("compiled-fused T={} x{}", fuse, fc.threads), fused_prof));
         trace_spans = fused_spans;
@@ -578,8 +626,8 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
             "# engine-bench — {spec} N={n} {method} (best of {reps})\n\n{md}{summary}{prof_md}"
         );
         text.push_str(&format!(
-            "\ninterpreter: {:.4}s · compiled: {:.4}s · host ops: {}\n",
-            interp.seconds, compiled.seconds, interp.ops
+            "\ninterpreter: {:.4}s · compiled: {:.4}s · simd[{isa}]: {:.4}s · host ops: {}\n",
+            interp.seconds, compiled.seconds, simd.seconds, interp.ops
         ));
         std::fs::write(out, text)?;
     }
@@ -587,6 +635,13 @@ fn engine_bench_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(
             speedup >= min,
             "compiled engine speedup {speedup:.2}x is below the required {min:.2}x"
+        );
+    }
+    if let Some(min) = min_simd_speedup {
+        anyhow::ensure!(
+            simd_speedup >= min,
+            "simd engine speedup {simd_speedup:.2}x over the single-thread compiled engine is \
+             below the required {min:.2}x"
         );
     }
     Ok(())
@@ -600,10 +655,11 @@ fn tune_cmd(cfg: &SimConfig, args: &Args) -> anyhow::Result<()> {
     let n = args.usize_or("size", default_n)?;
     let budget = args.usize_or("budget", 12)?;
     let strategy: tune::Strategy = args.get("strategy").unwrap_or("guided").parse()?;
+    let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
     let db_path = PathBuf::from(args.get("db").unwrap_or("target/tune/tune_db.json"));
     let out_dir = PathBuf::from(args.get("out").unwrap_or("target/tune"));
 
-    let outcome = tune::tune(cfg, spec, n, budget, strategy)?;
+    let outcome = tune::tune_with_engine(cfg, spec, n, budget, strategy, engine)?;
     let md = tune::report::to_markdown(&outcome);
     print!("{md}");
     std::fs::create_dir_all(&out_dir)?;
@@ -990,11 +1046,16 @@ USAGE:
                          [--method outer|autovec|dlt|tv|scalar]
                          [--option parallel] [--ui 1] [--uk 8]
                          [--no-sched] [--limit 120] [--fuse-steps 1]
+                         [--engine simd]
 
   --fuse-steps T  dump the temporally blocked T-step program: fused
                   steps are delimited by '==== step t/T ====' barrier
                   markers (distinct from the unroll-group markers) and
-                  per-step op subtotals are appended",
+                  per-step op subtotals are appended
+  --engine simd   append the SIMD lowering plan: per block, how many
+                  resolved ops became vector microkernels (outer-product
+                  runs, vector FMA/ALU loops) vs scalar fallback, plus
+                  the ISA runtime dispatch selected on this machine",
     ),
     (
         "tune",
@@ -1008,9 +1069,13 @@ machine fingerprint). The tuned plan is never worse than the paper default.
 USAGE:
   stencil-matrix tune [--stencil 2d-box] [--order 1] [--size 64]
                       [--budget 12] [--strategy guided|exhaustive]
+                      [--engine compiled|interpret|simd]
                       [--db target/tune/tune_db.json] [--out target/tune]
 
   --budget    simulator runs the guided strategy may spend (default 12)
+  --engine    host engine for the advisory wall-clock columns in the
+              report (default compiled; the simulated ranking itself is
+              engine-independent)
   --db        tuning-database path (created/updated; versioned JSON)
   --out       report directory (markdown + JSON per run)",
     ),
@@ -1025,10 +1090,11 @@ Reports land in target/bench-reports/ as markdown + JSON (default: all).",
     ),
     (
         "bench-json",
-        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_6.json)
+        "stencil-matrix bench-json — machine-readable perf snapshot (BENCH_8.json)
 
-Per-method simulated cycles, speedups, and KIR-host wall-clock on both
-engines (compiled + interpreter, with the engine speedup) for scalar,
+Per-method simulated cycles, speedups, and KIR-host wall-clock on all
+three engines (interpreter + compiled + simd, with the engine speedups
+and simd bitwise-checked against the interpreter) for scalar,
 autovec, dlt, tv and outer on every Table-3 stencil row at one size per
 dimensionality, plus a fused-vs-unfused sharded-serving measurement per
 row (temporal blocking at T=4, bitwise-checked). Each fused-serve row
@@ -1039,13 +1105,13 @@ against bench/baseline.json; wall-clock (including the fused columns
 and the profiles) is advisory.
 
 USAGE:
-  stencil-matrix bench-json [--out BENCH_6.json] [--size2d 64] [--size3d 16]",
+  stencil-matrix bench-json [--out BENCH_8.json] [--size2d 64] [--size3d 16]",
     ),
     (
         "bench-compare",
         "stencil-matrix bench-compare — the CI perf-regression gate
 
-Compares a fresh BENCH_6.json against the checked-in baseline and exits
+Compares a fresh BENCH_8.json against the checked-in baseline and exits
 non-zero when any method's simulated cycles regressed beyond the
 tolerance (default 2%). Host wall-clock is advisory and never gated.
 A baseline marked \"pending\": true makes the gate advisory until a CI
@@ -1053,7 +1119,7 @@ snapshot is promoted (see CONTRIBUTING.md).
 
 USAGE:
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                               [--current BENCH_6.json] [--tolerance-pct 2]
+                               [--current BENCH_8.json] [--tolerance-pct 2]
                                [--out bench_compare.md]
                                [--write-baseline] [--self-test]
 
@@ -1062,28 +1128,34 @@ USAGE:
     ),
     (
         "engine-bench",
-        "stencil-matrix engine-bench — compiled engine vs interpreter throughput
+        "stencil-matrix engine-bench — interpret vs compiled vs simd throughput
 
-Runs one method on the KIR host backend with the op-by-op interpreter
-and the compiling engine (1 thread and --threads), verifies every run
-against the oracle, checks the outputs are bitwise identical, and
-reports wall-clock + Mpoints/s + speedup (what CI appends to the job
-summary). After timing, one traced run per configuration feeds a
-per-phase breakdown table (embed/compute/freeze/exchange/extract), so
-spans never perturb the measured numbers.
+Runs one method on the KIR host backend with the op-by-op interpreter,
+the compiling engine, and the explicit-SIMD engine (1 thread and
+--threads each), verifies every run against the oracle, checks the
+outputs are bitwise identical across engines, and reports wall-clock +
+Mpoints/s + speedup with an ISA column showing what runtime dispatch
+selected for the simd rows (what CI appends to the job summary). After
+timing, one traced run per configuration feeds a per-phase breakdown
+table (embed/compute/freeze/exchange/extract), so spans never perturb
+the measured numbers.
 
 USAGE:
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
                               [--method outer] [--threads 0] [--reps 3]
                               [--fuse-steps 1] [--out engine_bench.md]
                               [--trace-out trace.json] [--min-speedup X]
+                              [--min-simd-speedup X]
 
-  --threads      compiled-engine worker threads (0 = one per core)
+  --threads      worker threads for the threaded rows (0 = one per core)
   --fuse-steps   also measure the temporally blocked T-step program on
-                 both engines (fused-vs-unfused rows, per-step columns)
+                 every engine (fused-vs-unfused rows, per-step columns)
   --trace-out    write the traced run as Chrome trace-event JSON
                  (validated structurally before the write)
-  --min-speedup  fail unless compiled/interpret speedup reaches X",
+  --min-speedup  fail unless compiled/interpret speedup reaches X
+  --min-simd-speedup
+                 fail unless the single-thread simd/compiled speedup
+                 reaches X",
     ),
     (
         "serve",
@@ -1094,7 +1166,7 @@ USAGE:
                        [--queue-depth D] [--size 256] [--steps 8]
                        [--requests 32] [--clients 4] [--distinct 4]
                        [--kernel taps|oracle|outer|tuned]
-                       [--engine compiled|interpret] [--fuse-steps 1]
+                       [--engine compiled|interpret|simd] [--fuse-steps 1]
                        [--trace-out trace.json] [--metrics-out serve.prom]
                        [--listen-metrics 127.0.0.1:9184] [--linger-secs 0]
                        [--cost-audit cost-audit.json]
@@ -1105,8 +1177,10 @@ USAGE:
 compiled through the kernel IR natively on the host (verified within
 1e-9; oracle/taps stay bitwise). --engine picks the host execution
 engine for those kernels: 'compiled' (default; fused loop nests,
-threaded row groups) or 'interpret' (the op-by-op reference twin,
-bitwise identical). With --tune-db, the kernel LRU consults the tuning
+threaded row groups), 'interpret' (the op-by-op reference twin, bitwise
+identical) or 'simd' (explicit vector microkernels behind runtime ISA
+dispatch — AVX2, NEON or scalar fallback — still bitwise identical).
+With --tune-db, the kernel LRU consults the tuning
 database before compiling shard kernels; --kernel tuned requests
 compile the matched plan to a real host kernel and report its label.
 --fuse-steps T enables temporal blocking: up to T time steps fused per
@@ -1139,7 +1213,7 @@ USAGE:
   stencil-matrix shard-bench [--stencil 2d-box] [--order 1] [--size 512]
                              [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
-                             [--engine compiled|interpret]
+                             [--engine compiled|interpret|simd]
                              [--fuse-steps 1]
 
 Each worker-count row is timed untraced, then traced once more for the
@@ -1172,9 +1246,9 @@ USAGE:
   stencil-matrix tune        --stencil 2d-star --order 2 --size 64 [--budget 12]
                              [--strategy guided] [--db target/tune/tune_db.json]
   stencil-matrix bench       fig3|fig4|fig5|table3|ablations|all
-  stencil-matrix bench-json  [--out BENCH_6.json] [--size2d 64] [--size3d 16]
+  stencil-matrix bench-json  [--out BENCH_8.json] [--size2d 64] [--size3d 16]
   stencil-matrix bench-compare [--baseline bench/baseline.json]
-                             [--current BENCH_6.json] [--tolerance-pct 2]
+                             [--current BENCH_8.json] [--tolerance-pct 2]
                              [--write-baseline] [--self-test]
   stencil-matrix engine-bench [--stencil 2d-star] [--order 2] [--size 512]
                              [--threads 0] [--fuse-steps 1] [--trace-out t.json]
@@ -1184,7 +1258,7 @@ USAGE:
                              [--queue-depth D] [--size 256] [--steps 8]
                              [--requests 32] [--clients 4] [--distinct 4]
                              [--kernel taps|oracle|outer|tuned]
-                             [--engine compiled|interpret] [--fuse-steps 1]
+                             [--engine compiled|interpret|simd] [--fuse-steps 1]
                              [--trace-out trace.json] [--metrics-out serve.prom]
                              [--listen-metrics 127.0.0.1:9184] [--linger-secs 0]
                              [--cost-audit cost-audit.json]
@@ -1192,7 +1266,7 @@ USAGE:
   stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
   stencil-matrix shard-bench [--size 512] [--steps 8] [--max-workers 4]
                              [--kernel taps|oracle|outer]
-                             [--engine compiled|interpret] [--fuse-steps 1]
+                             [--engine compiled|interpret|simd] [--fuse-steps 1]
   stencil-matrix list        [--artifacts-dir artifacts]
 
 Run 'stencil-matrix help <subcommand>' (or '<subcommand> --help') for
@@ -1306,9 +1380,16 @@ mod tests {
         assert!(usage_for("engine-bench").unwrap().contains("--fuse-steps"));
         assert!(usage_for("shard-bench").unwrap().contains("--fuse-steps"));
         assert!(usage_for("bench-json").unwrap().contains("fused"));
-        // the snapshot moved to BENCH_6.json with the per-phase profiles
-        assert!(usage_for("bench-json").unwrap().contains("BENCH_6.json"));
+        // the snapshot moved to BENCH_8.json with the simd columns
+        assert!(usage_for("bench-json").unwrap().contains("BENCH_8.json"));
         assert!(!usage_for("bench-json").unwrap().contains("BENCH_5.json"));
+        assert!(!usage_for("bench-json").unwrap().contains("BENCH_6.json"));
+        // the simd engine is selectable everywhere compiled|interpret is
+        assert!(usage_for("serve").unwrap().contains("simd"));
+        assert!(usage_for("shard-bench").unwrap().contains("simd"));
+        assert!(usage_for("engine-bench").unwrap().contains("--min-simd-speedup"));
+        assert!(usage_for("dump-ir").unwrap().contains("--engine simd"));
+        assert!(usage_for("tune").unwrap().contains("--engine"));
         assert!(usage_for("serve").unwrap().contains("--trace-out"));
         assert!(usage_for("serve").unwrap().contains("--metrics-out"));
         assert!(usage_for("serve").unwrap().contains("--listen-metrics"));

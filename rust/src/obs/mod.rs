@@ -25,7 +25,7 @@
 //! - [`profile`] — aggregates spans into the per-phase breakdown
 //!   (embed / compute / freeze / exchange / extract seconds) rendered
 //!   in `engine-bench`/`shard-bench` summaries and embedded in the
-//!   `BENCH_6.json` snapshot so `bench-compare` can attribute host
+//!   `BENCH_8.json` snapshot so `bench-compare` can attribute host
 //!   regressions to a phase; also holds the most recent traced window
 //!   for the live `/profile` endpoint;
 //! - [`registry`] — the global live-metrics registry: cumulative atomic

@@ -22,7 +22,7 @@
 //! seconds, not wall-clock.
 //!
 //! `shard-bench` and `engine-bench` render profiles as markdown job
-//! tables, and the bench snapshot (`BENCH_6.json`, v5) embeds them
+//! tables, and the bench snapshot (`BENCH_8.json`, v6) embeds them
 //! machine-readably so `bench-compare` can say *which phase* moved.
 
 use super::span::ThreadEvents;

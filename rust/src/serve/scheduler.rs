@@ -932,16 +932,23 @@ mod tests {
         assert_eq!(interp_cache.engine(), Engine::Interpret);
         let compiled_cache = PlanCache::new(4);
         assert_eq!(compiled_cache.engine(), Engine::Compiled);
+        let mut simd_cache = PlanCache::new(4);
+        simd_cache.set_engine(Engine::Simd);
+        assert_eq!(simd_cache.engine(), Engine::Simd);
         let key = PlanKey::single(spec, shape.clone(), KernelMethod::Outer);
         let pi = interp_cache.get(key.clone());
-        let pc = compiled_cache.get(key);
+        let pc = compiled_cache.get(key.clone());
+        let ps = simd_cache.get(key);
         assert_eq!(pi.host_engine(), Some(Engine::Interpret));
         assert_eq!(pc.host_engine(), Some(Engine::Compiled));
-        // both engines, any thread budget: bitwise identical tiles
+        assert_eq!(ps.host_engine(), Some(Engine::Simd));
+        // all engines, any thread budget: bitwise identical tiles
         let want = pi.apply(&a);
         assert_eq!(pc.apply(&a), want);
         assert_eq!(pc.apply_with(&a, 4), want);
         assert_eq!(pc.apply_with(&a, 0), want);
+        assert_eq!(ps.apply(&a), want);
+        assert_eq!(ps.apply_with(&a, 4), want);
     }
 
     #[test]

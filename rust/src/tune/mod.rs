@@ -83,5 +83,5 @@ pub mod space;
 
 pub use cost::{estimate, CostEstimate};
 pub use db::{TuneDb, TuneEntry, TUNE_DB_VERSION};
-pub use search::{tune, Measurement, Strategy, TuneOutcome};
+pub use search::{tune, tune_with_engine, Measurement, Strategy, TuneOutcome};
 pub use space::{enumerate, TunePlan};

@@ -132,13 +132,29 @@ impl TuneOutcome {
 ///
 /// `budget` bounds the number of simulator runs under
 /// [`Strategy::CostGuided`] (the paper-default plan is always measured,
-/// even if the model would prune it).
+/// even if the model would prune it). The advisory host wall-clock
+/// columns use the compiled engine; [`tune_with_engine`] selects a
+/// different one.
 pub fn tune(
     cfg: &SimConfig,
     spec: StencilSpec,
     n: usize,
     budget: usize,
     strategy: Strategy,
+) -> anyhow::Result<TuneOutcome> {
+    tune_with_engine(cfg, spec, n, budget, strategy, Engine::Compiled)
+}
+
+/// [`tune`] with an explicit host engine for the advisory wall-clock
+/// measurement (the simulated ranking itself is engine-independent —
+/// only the real-CPU columns in the report change).
+pub fn tune_with_engine(
+    cfg: &SimConfig,
+    spec: StencilSpec,
+    n: usize,
+    budget: usize,
+    strategy: Strategy,
+    host_engine: Engine,
 ) -> anyhow::Result<TuneOutcome> {
     anyhow::ensure!(
         n >= cfg.vlen && n % cfg.vlen == 0,
@@ -221,16 +237,16 @@ pub fn tune(
         .iter()
         .position(|m| m.plan == default_plan)
         .expect("paper default is always measured");
-    // advisory: compiled-engine host wall-clock for the winner and the
-    // baseline, so the report shows real CPU throughput next to the
-    // simulated ranking
+    // advisory: host wall-clock on the selected engine for the winner
+    // and the baseline, so the report shows real CPU throughput next to
+    // the simulated ranking
     let mut host_idx = vec![best_idx];
     if default_idx != best_idx {
         host_idx.push(default_idx);
     }
     for idx in host_idx {
         let method = measurements[idx].plan.to_method();
-        let host = run_host_fused(cfg, spec, n, method, Engine::Compiled, measurements[idx].plan.steps)?;
+        let host = run_host_fused(cfg, spec, n, method, host_engine, measurements[idx].plan.steps)?;
         anyhow::ensure!(
             host.verified(),
             "host run of {} failed verification (max_err {:.3e})",

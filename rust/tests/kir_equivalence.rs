@@ -12,7 +12,12 @@
 //!   precomputed gather tables, threaded row groups) is bitwise
 //!   identical to the interpreting host backend — and hence to the
 //!   simulator — across random specs/sizes × all five methods × 1–4
-//!   worker threads.
+//!   worker threads;
+//! - the **explicit-SIMD engine** (ISSUE 8: runtime-dispatched vector
+//!   microkernels) is bitwise identical to the interpreter under the
+//!   same sweep — every case, fused and unfused, at 1–4 threads — and
+//!   stays so when dispatch is forced onto the scalar fallback path,
+//!   proving the ISA choice never changes results.
 
 // Lint policy for the blocking CI clippy job: `-D warnings` keeps the
 // bug-finding groups (correctness, suspicious) and plain rustc warnings
@@ -93,6 +98,16 @@ fn check_case(cfg: &SimConfig, spec: StencilSpec, n: usize, method: Method) {
         );
         assert_eq!(compiled.ops, host.ops, "{spec} N={n} {method}: op counts diverge");
         assert_eq!(compiled.steps, host.steps);
+    }
+    // so is the explicit-SIMD engine, whatever ISA dispatch selected
+    for threads in 1..=4usize {
+        let simd = run_host_threads(cfg, spec, n, method, Engine::Simd, threads).unwrap();
+        assert_eq!(
+            simd.grid.data, host.grid.data,
+            "{spec} N={n} {method}: simd engine diverged at {threads} thread(s)"
+        );
+        assert_eq!(simd.ops, host.ops, "{spec} N={n} {method}: simd op count diverges");
+        assert_eq!(simd.steps, host.steps);
     }
 }
 
@@ -187,6 +202,14 @@ fn check_fused_case(cfg: &SimConfig, spec: StencilSpec, n: usize, method: Method
         );
         assert_eq!(compiled.steps, t);
     }
+    for threads in 1..=4usize {
+        let simd = run_host_fused_threads(cfg, spec, n, method, Engine::Simd, t, threads).unwrap();
+        assert_eq!(
+            simd.grid.data, host.grid.data,
+            "{spec} N={n} {method} T={t}: simd engine diverged at {threads} thread(s)"
+        );
+        assert_eq!(simd.steps, t);
+    }
 }
 
 #[test]
@@ -229,6 +252,38 @@ fn fused_multi_pass_covers_keep_step_barriers() {
     check_fused_case(&cfg, StencilSpec::star3d(2), 8, Method::Outer(orth3d), 3);
     let orth2d = OuterParams { option: CoverOption::Orthogonal, ui: 1, uk: 4, scheduled: true };
     check_fused_case(&cfg, StencilSpec::star2d(2), 16, Method::Outer(orth2d), 4);
+}
+
+#[test]
+fn forced_scalar_fallback_never_changes_results() {
+    // force dispatch onto the portable scalar path and prove the engine
+    // still reproduces the interpreter bitwise — the dispatch choice is
+    // a pure performance decision, never a semantic one. (While the
+    // override is set, concurrently running simd cases also take the
+    // scalar path; they assert the same bitwise contract, so the sweep
+    // stays sound either way.)
+    let cfg = SimConfig::default();
+    stencil_matrix::kir::simd::force_scalar(true);
+    assert_eq!(stencil_matrix::kir::simd::active_isa(), stencil_matrix::kir::SimdIsa::Scalar);
+    let star2 = StencilSpec::star2d(2);
+    let box3 = StencilSpec::box3d(1);
+    for (spec, method, t) in [
+        (star2, Method::Outer(OuterParams::paper_best(star2)), 1),
+        (StencilSpec::box2d(1), Method::AutoVec, 2),
+        (box3, Method::Outer(OuterParams::paper_best(box3)), 4),
+    ] {
+        let n = if spec.dims == 2 { 16 } else { 8 };
+        let host = run_host_fused(&cfg, spec, n, method, Engine::Interpret, t).unwrap();
+        for threads in [1usize, 4] {
+            let simd =
+                run_host_fused_threads(&cfg, spec, n, method, Engine::Simd, t, threads).unwrap();
+            assert_eq!(
+                simd.grid.data, host.grid.data,
+                "{spec} {method} T={t}: forced-scalar simd diverged at {threads} thread(s)"
+            );
+        }
+    }
+    stencil_matrix::kir::simd::force_scalar(false);
 }
 
 #[test]
