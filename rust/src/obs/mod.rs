@@ -62,6 +62,9 @@
 //! | `kir.freeze`          | `kir`    | one inter-step freeze section           | `step`     |
 //! | `kir.row_group`       | `kir`    | one independent block of a Par section  | `block`    |
 //! | `tune.measure`        | `tune`   | one candidate's simulator measurement   | `candidate`|
+//! | `cluster.round`       | `cluster`| one fleet chunk round (T fused steps)   | `steps`    |
+//! | `cluster.rpc`         | `cluster`| draining one node's pipelined replies   | `chunks`   |
+//! | `cluster.exchange`    | `cluster`| coordinator-mediated deep-halo exchange | —          |
 //!
 //! Consumers: `serve --trace-out`/`--metrics-out`/`--listen-metrics`,
 //! `engine-bench --trace-out`, the `shard-bench`/`engine-bench`

@@ -1,0 +1,431 @@
+//! The cluster coordinator: places grid slabs on worker nodes, drives
+//! fused T-step evolution with coordinator-mediated deep-halo exchange,
+//! and re-places work when a node dies mid-evolution.
+//!
+//! The evolution loop is a line-for-line mirror of
+//! [`ShardedEvolver::evolve_fused`](crate::serve::ShardedEvolver::evolve_fused)
+//! with the pool batch replaced by RPCs:
+//!
+//! 1. cap the time-tile depth `T` with [`Partition::max_fuse`] (deep
+//!    halos must not starve the shard count) and build the one
+//!    partition with ghosts of depth `order × T`;
+//! 2. per chunk of `T` steps, send every shard's tile to a node
+//!    (round-robin, pipelined per connection) and collect the evolved
+//!    tiles;
+//! 3. between chunks, run [`halo::exchange_serial`] over the collected
+//!    tiles — one exchange per `T` steps, so cross-node traffic
+//!    amortizes exactly like the in-process fused path;
+//! 4. assemble the owned rows.
+//!
+//! Because the partition, chunking, exchange, and assembly are the same
+//! code the in-process evolver uses, and a node's tile evolution is
+//! bitwise equal to a local fused plan application (see
+//! [`super::node`]), the fleet result is **bitwise identical** to the
+//! single-process sharded evolver — which is itself bitwise identical
+//! to the scalar oracle for the oracle/taps kernels.
+//!
+//! **Node loss.** The coordinator keeps every input tile of the current
+//! round until its evolved reply lands, so losing a node is recoverable
+//! by construction: dead nodes are dropped, their unanswered chunks are
+//! re-placed on the surviving nodes, and the round re-runs until every
+//! chunk is in (or no nodes remain). Re-sent chunks are idempotent —
+//! evolution is a pure function of the tile.
+
+use super::node::NodeHandle;
+use super::proto::{self, ChunkRequest, Msg, MsgRecv, NodeStatus};
+use crate::kir::Engine;
+use crate::obs::registry::{self, Counter, Gauge, Histogram, SECONDS_BUCKETS};
+use crate::obs::span::{span, span_arg};
+use crate::serve::scheduler::{FuseReport, KernelMethod};
+use crate::serve::{halo, Partition};
+use crate::stencil::{DenseGrid, StencilSpec};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeSet;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Per-RPC reply timeout: how long the coordinator waits for one node's
+/// chunk replies before declaring the node dead and re-placing.
+pub const DEFAULT_RPC_TIMEOUT: Duration = Duration::from_secs(60);
+
+struct NodeConn {
+    addr: SocketAddr,
+    /// `None` once the node is declared dead.
+    stream: Option<TcpStream>,
+    up: Gauge,
+    chunks: Counter,
+}
+
+impl NodeConn {
+    fn mark_dead(&mut self) {
+        self.stream = None;
+        self.up.set(0.0);
+    }
+}
+
+/// Accounting of one fleet evolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterReport {
+    /// Nodes connected when the evolution started.
+    pub nodes: usize,
+    /// Nodes still alive when it finished.
+    pub nodes_alive: usize,
+    /// Shards (slabs) the grid was split into.
+    pub shards: usize,
+    /// Fusion accounting (same meaning as the in-process evolver's).
+    pub fuse: FuseReport,
+    /// Chunk RPCs that completed successfully.
+    pub chunks: usize,
+    /// Chunks re-placed after a node loss.
+    pub replacements: usize,
+    /// Request bytes put on the wire (frames included).
+    pub bytes_sent: usize,
+    /// Reply bytes taken off the wire (frames included).
+    pub bytes_recv: usize,
+}
+
+/// A connected fleet of worker nodes.
+pub struct Coordinator {
+    nodes: Vec<NodeConn>,
+    engine: Engine,
+    rpc_timeout: Duration,
+    replacements: Counter,
+    bytes_sent: Counter,
+    bytes_recv: Counter,
+    rpc_seconds: Histogram,
+}
+
+impl Coordinator {
+    /// Connect to every node address (e.g. `["127.0.0.1:7401",
+    /// "10.0.0.2:7401"]`) and health-check each with a `Ping`. Fails if
+    /// any node is unreachable or does not speak protocol version
+    /// [`super::frame::VERSION`]; `engine` must match what the nodes
+    /// compile (checked per chunk node-side).
+    pub fn connect(addrs: &[String], engine: Engine) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(!addrs.is_empty(), "a cluster needs at least one node address");
+        let r = registry::global();
+        let mut nodes = Vec::with_capacity(addrs.len());
+        for (i, a) in addrs.iter().enumerate() {
+            let addr = a
+                .to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("bad node address '{a}': {e}"))?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("node address '{a}' resolved to nothing"))?;
+            let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+                .map_err(|e| anyhow::anyhow!("cannot connect to cluster node {addr}: {e}"))?;
+            stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+            stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+            stream.set_nodelay(true)?;
+            let up = r.gauge_with("stencil_cluster_node_up", &format!("node=\"{i}\""));
+            up.set(1.0);
+            nodes.push(NodeConn {
+                addr,
+                stream: Some(stream),
+                up,
+                chunks: r.counter_with("stencil_cluster_chunks_total", &format!("node=\"{i}\"")),
+            });
+        }
+        let mut c = Coordinator {
+            nodes,
+            engine,
+            rpc_timeout: DEFAULT_RPC_TIMEOUT,
+            replacements: r.counter("stencil_cluster_replacements_total"),
+            bytes_sent: r.counter("stencil_cluster_bytes_sent_total"),
+            bytes_recv: r.counter("stencil_cluster_bytes_recv_total"),
+            rpc_seconds: r.histogram("stencil_cluster_rpc_seconds", &SECONDS_BUCKETS),
+        };
+        for i in 0..c.nodes.len() {
+            let addr = c.nodes[i].addr;
+            c.ping_node(i)?
+                .ok_or_else(|| anyhow::anyhow!("cluster node {addr} did not answer the ping"))?;
+        }
+        Ok(c)
+    }
+
+    /// Convenience for tests and `cluster-bench`: connect to in-process
+    /// nodes spawned with [`super::node::spawn_local`].
+    pub fn connect_local(handles: &[NodeHandle], engine: Engine) -> anyhow::Result<Coordinator> {
+        let addrs: Vec<String> = handles.iter().map(|h| h.addr().to_string()).collect();
+        Coordinator::connect(&addrs, engine)
+    }
+
+    /// Override the per-node reply timeout (tests use a short one so a
+    /// killed node is detected quickly).
+    pub fn set_rpc_timeout(&mut self, t: Duration) {
+        self.rpc_timeout = t;
+    }
+
+    /// Nodes still considered alive.
+    pub fn nodes_alive(&self) -> usize {
+        self.nodes.iter().filter(|n| n.stream.is_some()).count()
+    }
+
+    /// Total nodes this coordinator was built with.
+    pub fn nodes_total(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Ping one node; `Ok(None)` means it is (now) dead.
+    fn ping_node(&mut self, i: usize) -> anyhow::Result<Option<NodeStatus>> {
+        let node = &mut self.nodes[i];
+        let Some(stream) = node.stream.as_mut() else { return Ok(None) };
+        if proto::send_msg(stream, &Msg::Ping).is_err() {
+            node.mark_dead();
+            return Ok(None);
+        }
+        let start = Instant::now();
+        loop {
+            match proto::recv_msg(stream, Duration::from_secs(5)) {
+                Ok(MsgRecv::Msg(Msg::Pong(st), _)) => return Ok(Some(st)),
+                Ok(MsgRecv::Msg(other, _)) => {
+                    anyhow::bail!("node {} answered ping with {other:?}", node.addr)
+                }
+                Ok(MsgRecv::Idle) => {
+                    if start.elapsed() > Duration::from_secs(5) {
+                        node.mark_dead();
+                        return Ok(None);
+                    }
+                }
+                Ok(MsgRecv::Eof) | Err(_) => {
+                    node.mark_dead();
+                    return Ok(None);
+                }
+            }
+        }
+    }
+
+    /// Health-check every node; the fleet analogue of `/healthz`.
+    pub fn health_json(&mut self) -> Json {
+        let mut statuses = Vec::new();
+        for i in 0..self.nodes.len() {
+            let addr = self.nodes[i].addr;
+            let st = self.ping_node(i).ok().flatten();
+            statuses.push(obj(vec![
+                ("addr", Json::Str(addr.to_string())),
+                ("up", Json::Bool(st.is_some())),
+                ("workers", Json::Num(st.as_ref().map(|s| s.workers as f64).unwrap_or(0.0))),
+                (
+                    "chunks_served",
+                    Json::Num(st.as_ref().map(|s| s.chunks_served as f64).unwrap_or(0.0)),
+                ),
+            ]));
+        }
+        let alive = self.nodes_alive();
+        obj(vec![
+            (
+                "status",
+                Json::Str(
+                    if alive == self.nodes.len() {
+                        "ok"
+                    } else if alive > 0 {
+                        "degraded"
+                    } else {
+                        "down"
+                    }
+                    .to_string(),
+                ),
+            ),
+            ("nodes", Json::Num(self.nodes.len() as f64)),
+            ("nodes_alive", Json::Num(alive as f64)),
+            ("node_status", Json::Arr(statuses)),
+        ])
+    }
+
+    /// Ask every live node to exit its serve loop (used when the
+    /// coordinator owns the fleet's lifecycle, e.g. `cluster-bench`).
+    pub fn shutdown_nodes(&mut self) {
+        for node in &mut self.nodes {
+            if let Some(stream) = node.stream.as_mut() {
+                let _ = proto::send_msg(stream, &Msg::Shutdown);
+            }
+            node.mark_dead();
+        }
+    }
+
+    /// Distributed temporally-blocked evolution — the fleet twin of
+    /// [`ShardedEvolver::evolve_fused`](crate::serve::ShardedEvolver::evolve_fused),
+    /// bitwise identical to it (and so, for the oracle/taps kernels, to
+    /// [`crate::stencil::reference::evolve`]).
+    pub fn evolve_fused(
+        &mut self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+        fuse: usize,
+    ) -> anyhow::Result<(DenseGrid, ClusterReport)> {
+        anyhow::ensure!(
+            grid.shape.len() == spec.dims,
+            "grid shape {:?} does not match {spec}",
+            grid.shape
+        );
+        anyhow::ensure!(
+            grid.shape.iter().all(|&n| n > 2 * spec.order),
+            "grid {:?} too small for order-{} stencil",
+            grid.shape,
+            spec.order
+        );
+        let t = Partition::max_fuse(grid.shape[0], spec.order, shards, fuse).min(steps.max(1));
+        let part = Partition::new(&grid.shape, shards, spec.order * t)?;
+        let n_shards = part.len();
+        let mut report = ClusterReport {
+            nodes: self.nodes.len(),
+            nodes_alive: self.nodes_alive(),
+            shards: n_shards,
+            fuse: FuseReport { fuse_steps: t, halo_exchanges: 0 },
+            chunks: 0,
+            replacements: 0,
+            bytes_sent: 0,
+            bytes_recv: 0,
+        };
+        if steps == 0 {
+            return Ok((grid.clone(), report));
+        }
+        let mut tiles = part.extract(grid);
+        let mut remaining = steps;
+        while remaining > 0 {
+            let chunk = t.min(remaining);
+            let _g = span_arg("cluster.round", "cluster", ("steps", chunk as f64));
+            self.run_round(&mut tiles, spec, method, chunk, &mut report)?;
+            remaining -= chunk;
+            if remaining > 0 && n_shards > 1 {
+                let _g = span("cluster.exchange", "cluster");
+                halo::exchange_serial(&part, &mut tiles);
+                report.fuse.halo_exchanges += 1;
+            }
+        }
+        report.nodes_alive = self.nodes_alive();
+        let refs: Vec<&DenseGrid> = tiles.iter().collect();
+        Ok((part.assemble(&refs)?, report))
+    }
+
+    /// One chunk round: evolve every tile by `chunk` fused steps on the
+    /// fleet, pipelined per node, re-placing on node loss until every
+    /// tile is in or no nodes remain.
+    fn run_round(
+        &mut self,
+        tiles: &mut [DenseGrid],
+        spec: StencilSpec,
+        method: KernelMethod,
+        chunk: usize,
+        report: &mut ClusterReport,
+    ) -> anyhow::Result<()> {
+        let mut pending: BTreeSet<usize> = (0..tiles.len()).collect();
+        let mut first_attempt = true;
+        while !pending.is_empty() {
+            let live: Vec<usize> =
+                (0..self.nodes.len()).filter(|&i| self.nodes[i].stream.is_some()).collect();
+            anyhow::ensure!(
+                !live.is_empty(),
+                "all cluster nodes lost with {} chunk(s) outstanding",
+                pending.len()
+            );
+            if !first_attempt {
+                report.replacements += pending.len();
+                self.replacements.add(pending.len() as u64);
+            }
+            first_attempt = false;
+
+            // place pending shards round-robin over the live nodes
+            let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+            for (i, &s) in pending.iter().enumerate() {
+                assignment[live[i % live.len()]].push(s);
+            }
+
+            // send phase: pipeline every chunk of a node's assignment
+            // onto its connection before reading anything back
+            for &ni in &live {
+                if assignment[ni].is_empty() {
+                    continue;
+                }
+                for idx in 0..assignment[ni].len() {
+                    let s = assignment[ni][idx];
+                    let req = Msg::EvolveChunk(ChunkRequest {
+                        id: s as u64,
+                        spec,
+                        method,
+                        engine: self.engine,
+                        steps: chunk,
+                        local_shards: 0,
+                        tile: tiles[s].clone(),
+                    });
+                    let node = &mut self.nodes[ni];
+                    let Some(stream) = node.stream.as_mut() else { break };
+                    match proto::send_msg(stream, &req) {
+                        Ok(n) => {
+                            report.bytes_sent += n;
+                            self.bytes_sent.add(n as u64);
+                        }
+                        Err(_) => {
+                            node.mark_dead();
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // receive phase: drain each node's replies; a timeout, EOF,
+            // or IO error marks the node dead and leaves its unanswered
+            // chunks pending for the next placement round
+            for &ni in &live {
+                if assignment[ni].is_empty() || self.nodes[ni].stream.is_none() {
+                    continue;
+                }
+                let mut expected: BTreeSet<usize> = assignment[ni].iter().copied().collect();
+                let _g = span_arg("cluster.rpc", "cluster", ("chunks", expected.len() as f64));
+                let start = Instant::now();
+                while !expected.is_empty() {
+                    if start.elapsed() > self.rpc_timeout {
+                        self.nodes[ni].mark_dead();
+                        break;
+                    }
+                    let node = &mut self.nodes[ni];
+                    let Some(stream) = node.stream.as_mut() else { break };
+                    match proto::recv_msg(stream, Duration::from_secs(10)) {
+                        Ok(MsgRecv::Msg(Msg::ChunkOk(rep), n)) => {
+                            let s = rep.id as usize;
+                            anyhow::ensure!(
+                                expected.remove(&s),
+                                "node {} answered chunk {s} it was not asked for",
+                                node.addr
+                            );
+                            anyhow::ensure!(
+                                rep.tile.shape == tiles[s].shape,
+                                "node {} returned tile shape {:?} for shard {s} (expected {:?})",
+                                node.addr,
+                                rep.tile.shape,
+                                tiles[s].shape
+                            );
+                            tiles[s] = rep.tile;
+                            pending.remove(&s);
+                            report.bytes_recv += n;
+                            self.bytes_recv.add(n as u64);
+                            self.rpc_seconds.observe(start.elapsed().as_secs_f64());
+                            node.chunks.inc();
+                            report.chunks += 1;
+                        }
+                        Ok(MsgRecv::Msg(Msg::ChunkErr { id, error }, _)) => {
+                            // a node-side *computation* error is not a
+                            // node loss: every node would fail the same
+                            // way, so surface it instead of re-placing
+                            anyhow::bail!("node {} failed chunk {id}: {error}", node.addr);
+                        }
+                        Ok(MsgRecv::Msg(other, _)) => {
+                            anyhow::bail!(
+                                "protocol violation from node {}: unexpected {other:?}",
+                                node.addr
+                            );
+                        }
+                        Ok(MsgRecv::Idle) => continue,
+                        Ok(MsgRecv::Eof) | Err(_) => {
+                            node.mark_dead();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

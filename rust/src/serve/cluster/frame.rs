@@ -1,0 +1,246 @@
+//! Length-prefixed binary framing for the cluster protocol (std-only).
+//!
+//! Every message on a cluster connection is one *frame*:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"STCF"
+//! 4       2     protocol version, little-endian (currently 1)
+//! 6       2     message kind, little-endian (see `proto::Msg`)
+//! 8       4     payload length in bytes, little-endian
+//! 12      len   payload
+//! ```
+//!
+//! The decoder is defensive by contract, not by luck:
+//!
+//! - **Bad magic / wrong version / oversized length** are rejected with a
+//!   clean error as soon as the 12-byte header is in — the payload is
+//!   never read, so a peer speaking a future protocol (or not speaking
+//!   this protocol at all) cannot make the reader allocate or block.
+//! - **Truncated frames** (peer closed, or stalled mid-frame past the
+//!   read deadline) produce a clean error instead of blocking forever:
+//!   the caller sets a short OS read timeout on the stream, and
+//!   [`recv_frame`] converts "partial frame + deadline exceeded" into an
+//!   error while "no bytes at a frame boundary" stays a benign
+//!   [`Recv::Idle`] (so accept loops can poll a stop flag between
+//!   frames).
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Frame magic: every frame starts with these four bytes.
+pub const MAGIC: [u8; 4] = *b"STCF";
+/// Protocol version carried in (and required of) every frame header.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Hard cap on payload length. Large enough for any grid this repo
+/// serves (a 2048³ f64 grid is 64 GiB and is *not* a cluster tile;
+/// tiles are slabs of much smaller serving grids), small enough that a
+/// corrupt or hostile length field cannot drive an allocation.
+pub const MAX_FRAME_LEN: usize = 256 * 1024 * 1024;
+
+/// A validated frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Message kind (dispatched by `proto::Msg::decode`).
+    pub kind: u16,
+    /// Payload length in bytes (already checked against
+    /// [`MAX_FRAME_LEN`]).
+    pub len: u32,
+}
+
+/// Encode a frame header. Fails if `len` exceeds [`MAX_FRAME_LEN`] —
+/// the sender enforces the same cap the receiver does.
+pub fn encode_header(kind: u16, len: usize) -> anyhow::Result<[u8; HEADER_LEN]> {
+    anyhow::ensure!(
+        len <= MAX_FRAME_LEN,
+        "frame payload of {len} byte(s) exceeds the {MAX_FRAME_LEN}-byte frame cap"
+    );
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[6..8].copy_from_slice(&kind.to_le_bytes());
+    h[8..12].copy_from_slice(&(len as u32).to_le_bytes());
+    Ok(h)
+}
+
+/// Decode and validate a frame header: magic, version, and length cap.
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> anyhow::Result<FrameHeader> {
+    anyhow::ensure!(
+        h[0..4] == MAGIC,
+        "bad frame magic {:02x?} (expected {:02x?}: not a cluster-protocol peer?)",
+        &h[0..4],
+        MAGIC
+    );
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported protocol version {version} (this build speaks version {VERSION})"
+    );
+    let kind = u16::from_le_bytes([h[6], h[7]]);
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    anyhow::ensure!(
+        (len as usize) <= MAX_FRAME_LEN,
+        "oversized frame: {len} byte(s) exceeds the {MAX_FRAME_LEN}-byte frame cap"
+    );
+    Ok(FrameHeader { kind, len })
+}
+
+/// Write one frame (header + payload).
+pub fn send_frame(w: &mut impl Write, kind: u16, payload: &[u8]) -> anyhow::Result<()> {
+    let header = encode_header(kind, payload.len())?;
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Outcome of one [`recv_frame`] poll.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Recv {
+    /// A complete, validated frame: (kind, payload).
+    Frame(u16, Vec<u8>),
+    /// The peer closed the connection cleanly at a frame boundary.
+    Eof,
+    /// No bytes arrived before the stream's read timeout while at a
+    /// frame boundary — not an error; poll a stop flag and call again.
+    Idle,
+}
+
+/// Read one frame from `r`, which should carry a short OS read timeout
+/// (e.g. [`std::net::TcpStream::set_read_timeout`]) so reads surface
+/// `WouldBlock`/`TimedOut` instead of blocking indefinitely.
+///
+/// Semantics:
+/// - zero bytes buffered + timeout → [`Recv::Idle`] (benign);
+/// - clean close at a frame boundary → [`Recv::Eof`];
+/// - close or stall (past `deadline`) *inside* a frame → error
+///   ("truncated frame" / "read deadline exceeded");
+/// - bad magic, wrong version, oversized length → error before any
+///   payload byte is read.
+pub fn recv_frame(r: &mut impl Read, deadline: Duration) -> anyhow::Result<Recv> {
+    let start = Instant::now();
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(Recv::Eof);
+                }
+                anyhow::bail!(
+                    "truncated frame: peer closed after {got} of {HEADER_LEN} header byte(s)"
+                );
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                if got == 0 {
+                    return Ok(Recv::Idle);
+                }
+                anyhow::ensure!(
+                    start.elapsed() < deadline,
+                    "read deadline exceeded mid-frame: got {got} of {HEADER_LEN} header byte(s) \
+                     in {deadline:?}"
+                );
+            }
+            Err(e) => return Err(anyhow::anyhow!("frame header read failed: {e}")),
+        }
+    }
+    let h = decode_header(&header)?;
+    let mut payload = vec![0u8; h.len as usize];
+    let mut got = 0usize;
+    while got < payload.len() {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => anyhow::bail!(
+                "truncated frame: peer closed after {got} of {} payload byte(s)",
+                payload.len()
+            ),
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                anyhow::ensure!(
+                    start.elapsed() < deadline,
+                    "read deadline exceeded mid-frame: got {got} of {} payload byte(s) in \
+                     {deadline:?}",
+                    payload.len()
+                );
+            }
+            Err(e) => return Err(anyhow::anyhow!("frame payload read failed: {e}")),
+        }
+    }
+    Ok(Recv::Frame(h.kind, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = encode_header(7, 4096).unwrap();
+        assert_eq!(decode_header(&h).unwrap(), FrameHeader { kind: 7, len: 4096 });
+        assert_eq!(encode_header(0, 0).map(|h| decode_header(&h).unwrap().len), Ok(0));
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        send_frame(&mut buf, 3, b"hello cluster").unwrap();
+        let mut cur = Cursor::new(buf);
+        match recv_frame(&mut cur, Duration::from_secs(1)).unwrap() {
+            Recv::Frame(kind, payload) => {
+                assert_eq!(kind, 3);
+                assert_eq!(payload, b"hello cluster");
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        // the stream is now at a clean frame boundary: EOF, not an error
+        assert_eq!(recv_frame(&mut cur, Duration::from_secs(1)).unwrap(), Recv::Eof);
+    }
+
+    #[test]
+    fn bad_magic_version_and_oversize_are_clean_errors() {
+        let mut h = encode_header(1, 8).unwrap();
+        h[0] = b'X';
+        let err = decode_header(&h).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut h = encode_header(1, 8).unwrap();
+        h[4..6].copy_from_slice(&99u16.to_le_bytes());
+        let err = decode_header(&h).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+
+        let mut h = encode_header(1, 8).unwrap();
+        h[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = decode_header(&h).unwrap_err().to_string();
+        assert!(err.contains("oversized"), "{err}");
+
+        assert!(encode_header(1, MAX_FRAME_LEN + 1).is_err());
+    }
+
+    #[test]
+    fn truncated_frames_error_instead_of_blocking() {
+        // header cut short
+        let mut buf = Vec::new();
+        send_frame(&mut buf, 2, b"payload").unwrap();
+        let mut cur = Cursor::new(buf[..HEADER_LEN - 3].to_vec());
+        let err = recv_frame(&mut cur, Duration::from_secs(1)).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // payload cut short
+        let mut buf = Vec::new();
+        send_frame(&mut buf, 2, b"payload").unwrap();
+        let mut cur = Cursor::new(buf[..HEADER_LEN + 3].to_vec());
+        let err = recv_frame(&mut cur, Duration::from_secs(1)).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Distributed serving: a fleet of worker **nodes** (OS processes)
+//! driven by one **coordinator**, std-only over TCP.
+//!
+//! This scales PR 5's in-process deep-halo machinery across processes.
+//! The pieces, bottom-up:
+//!
+//! - [`frame`] — length-prefixed binary framing with a versioned header
+//!   (magic `STCF`, version, kind, length). The decoder rejects bad
+//!   magic, wrong versions, oversized lengths, and truncated/stalled
+//!   frames with clean errors instead of blocking.
+//! - [`proto`] — the seven protocol messages and their codec. Grid data
+//!   travels as f64 **bit patterns**, so the wire never costs a ulp.
+//! - [`node`] — a worker: accept loop + the existing
+//!   [`ShardedEvolver`](crate::serve::ShardedEvolver) doing the actual
+//!   stencil math.
+//! - [`coordinator`] — slab placement, fused T-step rounds,
+//!   coordinator-mediated `order·T`-deep halo exchange once per T
+//!   steps, node health checks, and re-placement on node loss.
+//!
+//! **The contract:** a fleet evolution is bitwise identical to the
+//! single-process sharded evolver (and therefore, for the oracle/taps
+//! kernels, to the scalar oracle). The coordinator reuses the very
+//! same [`Partition`](crate::serve::Partition) / halo-exchange /
+//! assembly code the in-process path runs; nodes reuse the very same
+//! evolver. Nothing is approximated in transit.
+//!
+//! Observability: `stencil_cluster_*` metric families (per-node chunk
+//! counters, liveness gauges, replacement counter, byte counters, an
+//! RPC latency histogram) plus `cluster.round` / `cluster.rpc` /
+//! `cluster.exchange` spans — see the taxonomy in [`crate::obs`].
+
+pub mod coordinator;
+pub mod frame;
+pub mod node;
+pub mod proto;
+
+pub use coordinator::{ClusterReport, Coordinator, DEFAULT_RPC_TIMEOUT};
+pub use node::{spawn_local, NodeConfig, NodeHandle};
+pub use proto::{Msg, NodeStatus};

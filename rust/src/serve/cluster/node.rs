@@ -1,0 +1,364 @@
+//! A cluster worker node: a TCP server that evolves slab tiles with the
+//! in-process [`ShardedEvolver`] and speaks the framed cluster protocol.
+//!
+//! The node is deliberately thin — all stencil correctness lives in the
+//! evolver it wraps. One accept loop (non-blocking listener polling a
+//! stop flag, exactly like `obs::live`) hands each connection to its own
+//! thread; a connection is a sequence of frames handled strictly in
+//! order, so a coordinator that pipelines several `EvolveChunk` requests
+//! on one connection gets replies in request order.
+//!
+//! **Bitwise contract.** For a chunk request the node runs
+//! `evolve_fused(spec, tile, steps, local_shards, method, fuse = steps)`
+//! on the tile. By the scheduler's invariants (fused == unfused ==
+//! reference bitwise for oracle/taps; sharded == single-shard bitwise
+//! for the KIR host kernels; fused plan == repeated single applications
+//! bitwise) the reply is bitwise identical to applying one
+//! `steps`-deep fused plan to the tile on the coordinator's own thread —
+//! whatever local shard count the node picks. Degenerate tiles (any
+//! dim ≤ 2·order) are identity copies, mirroring
+//! [`crate::serve::CompiledPlan::apply`].
+
+use super::proto::{self, ChunkReply, Msg, MsgRecv, NodeStatus};
+use crate::kir::Engine;
+use crate::obs::registry;
+use crate::serve::scheduler::ShardedEvolver;
+use crate::serve::{PlanCache, WorkerPool};
+use crate::stencil::DenseGrid;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How a node is provisioned.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// Worker threads in the node's pool (0 = one per core).
+    pub workers: usize,
+    /// Default local shard count per tile when a request leaves the
+    /// choice to the node (0 = one per worker). Results are bitwise
+    /// independent of this value.
+    pub shards: usize,
+    /// Host engine for KIR shard kernels.
+    pub engine: Engine,
+    /// Fault injection for tests and smoke runs: after serving this many
+    /// chunks the node drops the connection without replying and stops
+    /// accepting — simulating a node lost mid-evolution.
+    pub fail_after: Option<usize>,
+}
+
+impl Default for NodeConfig {
+    fn default() -> NodeConfig {
+        NodeConfig { workers: 0, shards: 0, engine: Engine::default(), fail_after: None }
+    }
+}
+
+struct NodeState {
+    evolver: ShardedEvolver,
+    cfg: NodeConfig,
+    stop: Arc<AtomicBool>,
+    chunks_served: AtomicU64,
+    requests_total: registry::Counter,
+    chunks_total: registry::Counter,
+}
+
+/// Handle to a running node; stops on [`NodeHandle::shutdown`] or drop.
+pub struct NodeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NodeHandle {
+    /// The address actually bound (resolves an ephemeral `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True until [`NodeHandle::shutdown`] (or a `fail_after` trip)
+    /// stopped the accept loop.
+    pub fn is_running(&self) -> bool {
+        !self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent; also runs
+    /// on drop. In-flight connections notice the flag at their next
+    /// frame boundary.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits (external shutdown, a
+    /// `Shutdown` frame, or a `fail_after` trip).
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7401`, port `0` for ephemeral) and serve
+/// the cluster protocol until shutdown.
+pub fn serve(addr: &str, cfg: NodeConfig) -> anyhow::Result<NodeHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind cluster node on {addr}: {e}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+    } else {
+        cfg.workers
+    };
+    let mut cache = PlanCache::new(32);
+    cache.set_engine(cfg.engine);
+    let r = registry::global();
+    let state = Arc::new(NodeState {
+        evolver: ShardedEvolver::with_parts(Arc::new(WorkerPool::new(workers)), Arc::new(cache)),
+        cfg,
+        stop: Arc::clone(&stop),
+        chunks_served: AtomicU64::new(0),
+        requests_total: r.counter("stencil_cluster_node_requests_total"),
+        chunks_total: r.counter("stencil_cluster_node_chunks_total"),
+    });
+    let stop_accept = Arc::clone(&stop);
+    let accept = std::thread::Builder::new()
+        .name("stencil-cluster-node".to_string())
+        .spawn(move || {
+            while !stop_accept.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let state = Arc::clone(&state);
+                        let _ = std::thread::Builder::new()
+                            .name("stencil-cluster-conn".to_string())
+                            .spawn(move || handle_conn(stream, &state));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("failed to spawn cluster accept thread: {e}"))?;
+    Ok(NodeHandle { addr: local, stop, accept: Some(accept) })
+}
+
+/// Spawn an in-process node on a loopback ephemeral port — what
+/// `cluster-bench` and the subsystem tests use: real sockets, real
+/// frames, no extra OS processes to babysit.
+pub fn spawn_local(cfg: NodeConfig) -> anyhow::Result<NodeHandle> {
+    serve("127.0.0.1:0", cfg)
+}
+
+fn handle_conn(mut stream: TcpStream, state: &NodeState) {
+    // short read timeout: recv turns it into Idle so the loop can poll
+    // the stop flag; a peer stalled mid-frame errors out at the deadline
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let frame_deadline = Duration::from_secs(10);
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let msg = match proto::recv_msg(&mut stream, frame_deadline) {
+            Ok(MsgRecv::Msg(msg, _)) => msg,
+            Ok(MsgRecv::Idle) => continue,
+            Ok(MsgRecv::Eof) | Err(_) => return,
+        };
+        state.requests_total.inc();
+        match msg {
+            Msg::Ping => {
+                let status = NodeStatus {
+                    workers: state.evolver.pool().workers(),
+                    engine: state.evolver.cache().engine(),
+                    chunks_served: state.chunks_served.load(Ordering::Relaxed),
+                };
+                if proto::send_msg(&mut stream, &Msg::Pong(status)).is_err() {
+                    return;
+                }
+            }
+            Msg::EvolveChunk(req) => {
+                // fault injection: past the trip point the node goes
+                // silent and stops accepting, like a process that died
+                if let Some(limit) = state.cfg.fail_after {
+                    if state.chunks_served.load(Ordering::Relaxed) >= limit as u64 {
+                        state.stop.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                }
+                let id = req.id;
+                let reply = match evolve_tile(state, req) {
+                    Ok(tile) => {
+                        state.chunks_served.fetch_add(1, Ordering::Relaxed);
+                        state.chunks_total.inc();
+                        Msg::ChunkOk(ChunkReply { id, tile })
+                    }
+                    Err(e) => Msg::ChunkErr { id, error: format!("{e:#}") },
+                };
+                if proto::send_msg(&mut stream, &reply).is_err() {
+                    return;
+                }
+            }
+            Msg::Shutdown => {
+                let _ = proto::send_msg(&mut stream, &Msg::ShutdownAck);
+                state.stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            // node-bound protocol only; a peer sending coordinator-bound
+            // messages is confused — drop it
+            Msg::Pong(_) | Msg::ChunkOk(_) | Msg::ChunkErr { .. } | Msg::ShutdownAck => return,
+        }
+    }
+}
+
+/// Evolve one tile. Degenerate tiles (any dim ≤ 2·order) are identity
+/// copies, exactly like [`crate::serve::CompiledPlan::apply`] — the
+/// evolver itself rejects them as whole grids.
+fn evolve_tile(state: &NodeState, req: proto::ChunkRequest) -> anyhow::Result<DenseGrid> {
+    let r = req.spec.order;
+    if req.tile.shape.iter().any(|&n| n <= 2 * r) {
+        return Ok(req.tile);
+    }
+    anyhow::ensure!(
+        req.engine == state.evolver.cache().engine(),
+        "engine mismatch: request wants {}, node compiles {}",
+        req.engine,
+        state.evolver.cache().engine()
+    );
+    let shards = match (req.local_shards, state.cfg.shards) {
+        (0, 0) => state.evolver.pool().workers(),
+        (0, s) => s,
+        (s, _) => s,
+    };
+    let (out, _, _) = state.evolver.evolve_fused(
+        req.spec,
+        &req.tile,
+        req.steps,
+        shards,
+        req.method,
+        req.steps.max(1),
+    )?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::KernelMethod;
+    use crate::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+
+    fn connect(addr: SocketAddr) -> TcpStream {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        s
+    }
+
+    fn rpc(stream: &mut TcpStream, msg: &Msg) -> Msg {
+        proto::send_msg(stream, msg).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            match proto::recv_msg(stream, Duration::from_secs(30)).unwrap() {
+                MsgRecv::Msg(m, _) => return m,
+                MsgRecv::Idle => assert!(std::time::Instant::now() < deadline, "rpc timed out"),
+                MsgRecv::Eof => panic!("node closed the connection"),
+            }
+        }
+    }
+
+    #[test]
+    fn node_answers_ping_and_evolves_a_tile_bitwise() {
+        let mut node =
+            spawn_local(NodeConfig { workers: 2, ..NodeConfig::default() }).unwrap();
+        let mut stream = connect(node.addr());
+
+        match rpc(&mut stream, &Msg::Ping) {
+            Msg::Pong(st) => assert_eq!(st.workers, 2),
+            other => panic!("expected Pong, got {other:?}"),
+        }
+
+        let spec = StencilSpec::box2d(1);
+        let tile = DenseGrid::verification_input(&[12, 10], 7);
+        let req = proto::ChunkRequest {
+            id: 5,
+            spec,
+            method: KernelMethod::Taps,
+            engine: Engine::default(),
+            steps: 2,
+            local_shards: 0,
+            tile: tile.clone(),
+        };
+        let reply = rpc(&mut stream, &Msg::EvolveChunk(req));
+        let coeffs = CoeffTensor::paper_default(spec);
+        let want = reference::apply(&coeffs, &reference::apply(&coeffs, &tile));
+        match reply {
+            Msg::ChunkOk(rep) => {
+                assert_eq!(rep.id, 5);
+                assert_eq!(rep.tile, want, "node tile evolution diverged from the oracle");
+            }
+            other => panic!("expected ChunkOk, got {other:?}"),
+        }
+
+        // degenerate tile: identity, not an error
+        let tiny = DenseGrid::verification_input(&[2, 9], 1);
+        let req = proto::ChunkRequest {
+            id: 6,
+            spec,
+            method: KernelMethod::Taps,
+            engine: Engine::default(),
+            steps: 3,
+            local_shards: 0,
+            tile: tiny.clone(),
+        };
+        match rpc(&mut stream, &Msg::EvolveChunk(req)) {
+            Msg::ChunkOk(rep) => assert_eq!(rep.tile, tiny),
+            other => panic!("expected ChunkOk, got {other:?}"),
+        }
+
+        match rpc(&mut stream, &Msg::Shutdown) {
+            Msg::ShutdownAck => {}
+            other => panic!("expected ShutdownAck, got {other:?}"),
+        }
+        node.join();
+        assert!(!node.is_running());
+    }
+
+    #[test]
+    fn engine_mismatch_is_a_chunk_error_not_a_hang() {
+        let mut node = spawn_local(NodeConfig {
+            workers: 1,
+            engine: Engine::Interpret,
+            ..NodeConfig::default()
+        })
+        .unwrap();
+        let mut stream = connect(node.addr());
+        let req = proto::ChunkRequest {
+            id: 1,
+            spec: StencilSpec::box2d(1),
+            method: KernelMethod::Outer,
+            engine: Engine::Compiled,
+            steps: 1,
+            local_shards: 0,
+            tile: DenseGrid::verification_input(&[8, 8], 0),
+        };
+        match rpc(&mut stream, &Msg::EvolveChunk(req)) {
+            Msg::ChunkErr { id, error } => {
+                assert_eq!(id, 1);
+                assert!(error.contains("engine mismatch"), "{error}");
+            }
+            other => panic!("expected ChunkErr, got {other:?}"),
+        }
+        node.shutdown();
+    }
+}

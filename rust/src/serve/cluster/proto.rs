@@ -1,0 +1,489 @@
+//! Cluster message payloads and their std-only wire codec.
+//!
+//! Payload encoding is deliberately dumb: little-endian fixed-width
+//! integers, length-prefixed byte strings, and **f64 bit patterns** for
+//! grid data — bit patterns, not decimal round-trips, because the whole
+//! point of the fleet is that a distributed evolution stays *bitwise*
+//! equal to the single-process evolver. Enums with existing
+//! `Display`/`FromStr` impls ([`KernelMethod`], [`Engine`]) travel as
+//! strings so the wire form can never drift from the CLI's vocabulary.
+//!
+//! Message kinds (the `kind` field of the frame header):
+//!
+//! | kind | message       | direction            | payload                          |
+//! |------|---------------|----------------------|----------------------------------|
+//! | 1    | `Ping`        | coordinator → node   | empty                            |
+//! | 2    | `Pong`        | node → coordinator   | [`NodeStatus`]                   |
+//! | 3    | `EvolveChunk` | coordinator → node   | [`ChunkRequest`] (spec + tile)   |
+//! | 4    | `ChunkOk`     | node → coordinator   | [`ChunkReply`] (evolved tile)    |
+//! | 5    | `ChunkErr`    | node → coordinator   | id + error string                |
+//! | 6    | `Shutdown`    | coordinator → node   | empty                            |
+//! | 7    | `ShutdownAck` | node → coordinator   | empty                            |
+//!
+//! Versioning policy (see CONTRIBUTING.md): any change to these
+//! payloads or kinds bumps [`super::frame::VERSION`]; a node and
+//! coordinator of different versions refuse each other at the first
+//! frame header.
+
+use super::frame;
+use crate::kir::Engine;
+use crate::serve::scheduler::KernelMethod;
+use crate::stencil::{DenseGrid, StencilKind, StencilSpec};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Message-kind constants (frame header `kind` field).
+pub const KIND_PING: u16 = 1;
+/// See [`KIND_PING`].
+pub const KIND_PONG: u16 = 2;
+/// See [`KIND_PING`].
+pub const KIND_EVOLVE_CHUNK: u16 = 3;
+/// See [`KIND_PING`].
+pub const KIND_CHUNK_OK: u16 = 4;
+/// See [`KIND_PING`].
+pub const KIND_CHUNK_ERR: u16 = 5;
+/// See [`KIND_PING`].
+pub const KIND_SHUTDOWN: u16 = 6;
+/// See [`KIND_PING`].
+pub const KIND_SHUTDOWN_ACK: u16 = 7;
+
+/// Append-only payload writer (little-endian throughout).
+#[derive(Default)]
+pub struct WireWriter {
+    /// The encoded payload so far.
+    pub buf: Vec<u8>,
+}
+
+impl WireWriter {
+    /// Fresh empty writer.
+    pub fn new() -> WireWriter {
+        WireWriter::default()
+    }
+
+    /// Append a `u8`.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16` (LE).
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32` (LE).
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (LE).
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its IEEE-754 bit pattern (LE) — exact.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Append a length-prefixed byte string.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Append a grid: dims, shape (u64 each), then data as f64 bits.
+    pub fn grid(&mut self, g: &DenseGrid) {
+        self.u8(g.shape.len() as u8);
+        for &n in &g.shape {
+            self.u64(n as u64);
+        }
+        for &v in &g.data {
+            self.f64(v);
+        }
+    }
+}
+
+/// Cursor-style payload reader with bounds-checked accessors.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// Reader over a payload.
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "short payload: wanted {n} byte(s) at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u16` (LE).
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    /// Read a `u32` (LE).
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a `u64` (LE).
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a length-prefixed byte string.
+    pub fn bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> anyhow::Result<String> {
+        Ok(String::from_utf8(self.bytes()?.to_vec())
+            .map_err(|e| anyhow::anyhow!("non-UTF-8 string in payload: {e}"))?)
+    }
+
+    /// Read a grid written by [`WireWriter::grid`].
+    pub fn grid(&mut self) -> anyhow::Result<DenseGrid> {
+        let dims = self.u8()? as usize;
+        anyhow::ensure!(dims == 2 || dims == 3, "grid dims {dims} not in {{2, 3}}");
+        let mut shape = Vec::with_capacity(dims);
+        for _ in 0..dims {
+            let n = self.u64()? as usize;
+            anyhow::ensure!(n >= 1, "empty grid dimension");
+            shape.push(n);
+        }
+        let len: usize = shape.iter().product();
+        // guard the allocation against a forged shape before reading
+        anyhow::ensure!(
+            len.checked_mul(8).map(|b| b <= frame::MAX_FRAME_LEN).unwrap_or(false),
+            "grid shape {shape:?} larger than a frame can carry"
+        );
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(self.f64()?);
+        }
+        Ok(DenseGrid { shape, data })
+    }
+
+    /// Error unless the whole payload was consumed (catches trailing
+    /// garbage from a confused encoder).
+    pub fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "payload has {} unread trailing byte(s)",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn encode_spec(w: &mut WireWriter, spec: StencilSpec) {
+    w.u8(spec.dims as u8);
+    w.u8(spec.order as u8);
+    w.u8(match spec.kind {
+        StencilKind::Box => 0,
+        StencilKind::Star => 1,
+        StencilKind::Diagonal => 2,
+    });
+}
+
+fn decode_spec(r: &mut WireReader<'_>) -> anyhow::Result<StencilSpec> {
+    let dims = r.u8()? as usize;
+    let order = r.u8()? as usize;
+    let kind = match r.u8()? {
+        0 => StencilKind::Box,
+        1 => StencilKind::Star,
+        2 => StencilKind::Diagonal,
+        other => anyhow::bail!("unknown stencil kind tag {other}"),
+    };
+    StencilSpec::new(dims, order, kind)
+}
+
+/// A worker node's self-description (the `Pong` payload) — the cluster
+/// analogue of the `/healthz` fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeStatus {
+    /// Worker threads in the node's pool.
+    pub workers: usize,
+    /// Host engine the node compiles shard kernels for.
+    pub engine: Engine,
+    /// Chunks this node has evolved since it started.
+    pub chunks_served: u64,
+}
+
+/// One slab-evolution RPC: evolve `tile` by `steps` fused time steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkRequest {
+    /// Correlation id (the coordinator uses the shard index).
+    pub id: u64,
+    /// The stencil.
+    pub spec: StencilSpec,
+    /// Kernel flavour.
+    pub method: KernelMethod,
+    /// Host execution engine for KIR kernels.
+    pub engine: Engine,
+    /// Fused time steps to advance (the tile carries `order × steps`
+    /// ghosts).
+    pub steps: usize,
+    /// Local shard hint for the node's in-process evolver (0 = let the
+    /// node decide). Results are bitwise independent of this value.
+    pub local_shards: usize,
+    /// The slab tile (owned rows + ghosts).
+    pub tile: DenseGrid,
+}
+
+/// A successful chunk evolution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkReply {
+    /// Correlation id echoed from the request.
+    pub id: u64,
+    /// The evolved tile (same shape as the request's).
+    pub tile: DenseGrid,
+}
+
+/// Every message the cluster protocol speaks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Health probe.
+    Ping,
+    /// Health reply.
+    Pong(NodeStatus),
+    /// Evolve one slab tile.
+    EvolveChunk(ChunkRequest),
+    /// Slab evolved.
+    ChunkOk(ChunkReply),
+    /// Slab evolution failed node-side.
+    ChunkErr {
+        /// Correlation id echoed from the request.
+        id: u64,
+        /// The node-side error rendering.
+        error: String,
+    },
+    /// Ask the node to stop accepting and exit its serve loop.
+    Shutdown,
+    /// Shutdown acknowledged (sent before the node closes).
+    ShutdownAck,
+}
+
+impl Msg {
+    /// Encode to (frame kind, payload bytes).
+    pub fn encode(&self) -> (u16, Vec<u8>) {
+        let mut w = WireWriter::new();
+        let kind = match self {
+            Msg::Ping => KIND_PING,
+            Msg::Pong(st) => {
+                w.u64(st.workers as u64);
+                w.str(&st.engine.to_string());
+                w.u64(st.chunks_served);
+                KIND_PONG
+            }
+            Msg::EvolveChunk(req) => {
+                w.u64(req.id);
+                encode_spec(&mut w, req.spec);
+                w.str(&req.method.to_string());
+                w.str(&req.engine.to_string());
+                w.u64(req.steps as u64);
+                w.u64(req.local_shards as u64);
+                w.grid(&req.tile);
+                KIND_EVOLVE_CHUNK
+            }
+            Msg::ChunkOk(rep) => {
+                w.u64(rep.id);
+                w.grid(&rep.tile);
+                KIND_CHUNK_OK
+            }
+            Msg::ChunkErr { id, error } => {
+                w.u64(*id);
+                w.str(error);
+                KIND_CHUNK_ERR
+            }
+            Msg::Shutdown => KIND_SHUTDOWN,
+            Msg::ShutdownAck => KIND_SHUTDOWN_ACK,
+        };
+        (kind, w.buf)
+    }
+
+    /// Decode from a frame's (kind, payload).
+    pub fn decode(kind: u16, payload: &[u8]) -> anyhow::Result<Msg> {
+        let mut r = WireReader::new(payload);
+        let msg = match kind {
+            KIND_PING => Msg::Ping,
+            KIND_PONG => {
+                let workers = r.u64()? as usize;
+                let engine: Engine = r.str()?.parse()?;
+                let chunks_served = r.u64()?;
+                Msg::Pong(NodeStatus { workers, engine, chunks_served })
+            }
+            KIND_EVOLVE_CHUNK => {
+                let id = r.u64()?;
+                let spec = decode_spec(&mut r)?;
+                let method: KernelMethod = r.str()?.parse()?;
+                let engine: Engine = r.str()?.parse()?;
+                let steps = r.u64()? as usize;
+                let local_shards = r.u64()? as usize;
+                let tile = r.grid()?;
+                Msg::EvolveChunk(ChunkRequest {
+                    id,
+                    spec,
+                    method,
+                    engine,
+                    steps,
+                    local_shards,
+                    tile,
+                })
+            }
+            KIND_CHUNK_OK => {
+                let id = r.u64()?;
+                let tile = r.grid()?;
+                Msg::ChunkOk(ChunkReply { id, tile })
+            }
+            KIND_CHUNK_ERR => {
+                let id = r.u64()?;
+                let error = r.str()?;
+                Msg::ChunkErr { id, error }
+            }
+            KIND_SHUTDOWN => Msg::Shutdown,
+            KIND_SHUTDOWN_ACK => Msg::ShutdownAck,
+            other => anyhow::bail!("unknown message kind {other}"),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Send one message as a frame.
+pub fn send_msg(w: &mut impl Write, msg: &Msg) -> anyhow::Result<usize> {
+    let (kind, payload) = msg.encode();
+    let n = frame::HEADER_LEN + payload.len();
+    frame::send_frame(w, kind, &payload)?;
+    Ok(n)
+}
+
+/// Outcome of one [`recv_msg`] poll (mirrors [`frame::Recv`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MsgRecv {
+    /// A decoded message and its total wire size in bytes.
+    Msg(Msg, usize),
+    /// Peer closed at a frame boundary.
+    Eof,
+    /// No bytes before the stream's read timeout.
+    Idle,
+}
+
+/// Receive and decode one message (see [`frame::recv_frame`] for the
+/// deadline/idle semantics).
+pub fn recv_msg(r: &mut impl Read, deadline: Duration) -> anyhow::Result<MsgRecv> {
+    Ok(match frame::recv_frame(r, deadline)? {
+        frame::Recv::Frame(kind, payload) => {
+            let n = frame::HEADER_LEN + payload.len();
+            MsgRecv::Msg(Msg::decode(kind, &payload)?, n)
+        }
+        frame::Recv::Eof => MsgRecv::Eof,
+        frame::Recv::Idle => MsgRecv::Idle,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let (kind, payload) = msg.encode();
+        Msg::decode(kind, &payload).unwrap()
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let tile = DenseGrid::verification_input(&[6, 5], 42);
+        let msgs = [
+            Msg::Ping,
+            Msg::Pong(NodeStatus { workers: 4, engine: Engine::Simd, chunks_served: 17 }),
+            Msg::EvolveChunk(ChunkRequest {
+                id: 9,
+                spec: StencilSpec::star2d(2),
+                method: KernelMethod::Outer,
+                engine: Engine::Compiled,
+                steps: 3,
+                local_shards: 2,
+                tile: tile.clone(),
+            }),
+            Msg::ChunkOk(ChunkReply { id: 9, tile }),
+            Msg::ChunkErr { id: 3, error: "tile too small".to_string() },
+            Msg::Shutdown,
+            Msg::ShutdownAck,
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn grid_payloads_are_bitwise_exact() {
+        // values that decimal round-trips would mangle: subnormals,
+        // negative zero, and full-precision irrationals
+        let g = DenseGrid {
+            shape: vec![2, 3],
+            data: vec![f64::MIN_POSITIVE / 2.0, -0.0, std::f64::consts::PI, 1e-300, -3.5, 0.1],
+        };
+        let mut w = WireWriter::new();
+        w.grid(&g);
+        let mut r = WireReader::new(&w.buf);
+        let back = r.grid().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.shape, g.shape);
+        for (a, b) in back.data.iter().zip(&g.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Msg::decode(999, &[]).is_err());
+        // trailing garbage after a valid Ping payload
+        assert!(Msg::decode(KIND_PING, &[0xFF]).is_err());
+        // truncated chunk payload
+        let (kind, payload) = Msg::ChunkOk(ChunkReply {
+            id: 1,
+            tile: DenseGrid::verification_input(&[4, 4], 1),
+        })
+        .encode();
+        assert!(Msg::decode(kind, &payload[..payload.len() - 5]).is_err());
+        // forged giant shape must refuse before allocating
+        let mut w = WireWriter::new();
+        w.u64(1); // id
+        w.u8(2);
+        w.u64(u32::MAX as u64);
+        w.u64(u32::MAX as u64);
+        assert!(Msg::decode(KIND_CHUNK_OK, &w.buf).is_err());
+    }
+}

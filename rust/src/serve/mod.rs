@@ -33,6 +33,12 @@
 //! - [`service`] — the batched front-end: bounded queue with
 //!   backpressure, coalescing of identical requests, dispatcher thread;
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
+//! - [`cluster`] — the same machinery scaled from one process to a
+//!   fleet: a std-only framed TCP protocol, worker nodes wrapping this
+//!   module's [`ShardedEvolver`], and a coordinator that places slabs,
+//!   mediates `order × T`-deep halo exchange once per T steps, and
+//!   re-places work on node loss — bitwise identical to the
+//!   single-process path.
 //! - [`metrics`] — latency/throughput/traffic counters reported as JSON,
 //!   including per-request kernel wall-clock with p50/p99; every
 //!   recorder also mirrors into the process-global
@@ -49,6 +55,7 @@
 //! sharded execution is bitwise equal to single-shard execution of the
 //! same kernel (see `rust/tests/shard_correctness.rs`).
 
+pub mod cluster;
 pub mod halo;
 pub mod metrics;
 pub mod partition;
@@ -56,6 +63,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod service;
 
+pub use cluster::{ClusterReport, Coordinator, NodeConfig, NodeHandle};
 pub use metrics::{LatencyRecorder, ServiceMetrics};
 pub use partition::{Partition, Slab};
 pub use pool::WorkerPool;

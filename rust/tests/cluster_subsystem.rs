@@ -1,0 +1,355 @@
+//! Integration tests for the distributed serving fleet: frame-codec
+//! round-trips and fuzz over random payloads, decoder rejection of
+//! truncated/stalled/wrong-version/oversized frames over real TCP
+//! streams, fleet-vs-single-process bitwise equality, and the node-loss
+//! property: kill a worker mid-evolution and the coordinator re-places
+//! its slabs and still produces the oracle's bits.
+//!
+//! Registry state is process-global and `cargo test` runs tests
+//! concurrently in one process, so metric assertions here are about
+//! deltas, never absolute totals.
+
+use stencil_matrix::kir::Engine;
+use stencil_matrix::serve::cluster::{frame, node, proto};
+use stencil_matrix::serve::{
+    Coordinator, KernelMethod, NodeConfig, PlanCache, ShardedEvolver, WorkerPool,
+};
+use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
+use std::io::{Cursor, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic xorshift64* — the same generator the property tests
+/// elsewhere in this repo use for reproducible fuzz.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+}
+
+fn twin_evolver(engine: Engine) -> ShardedEvolver {
+    let mut cache = PlanCache::new(32);
+    cache.set_engine(engine);
+    ShardedEvolver::with_parts(Arc::new(WorkerPool::new(2)), Arc::new(cache))
+}
+
+#[test]
+fn frame_codec_fuzz_roundtrips_random_payloads() {
+    let mut rng = Rng(0x5EED_CAFE);
+    for _ in 0..200 {
+        let kind = (rng.next() % 7 + 1) as u16;
+        let len = (rng.next() % 4096) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| (rng.next() & 0xFF) as u8).collect();
+        let mut buf = Vec::new();
+        frame::send_frame(&mut buf, kind, &payload).unwrap();
+        assert_eq!(buf.len(), frame::HEADER_LEN + len);
+        let mut cur = Cursor::new(buf);
+        match frame::recv_frame(&mut cur, Duration::from_secs(1)).unwrap() {
+            frame::Recv::Frame(k, p) => {
+                assert_eq!(k, kind);
+                assert_eq!(p, payload);
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        assert_eq!(
+            frame::recv_frame(&mut cur, Duration::from_secs(1)).unwrap(),
+            frame::Recv::Eof
+        );
+    }
+}
+
+#[test]
+fn frame_codec_fuzz_rejects_random_truncations() {
+    let mut rng = Rng(0xBAD_F00D);
+    for _ in 0..200 {
+        let len = (rng.next() % 512 + 1) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| (rng.next() & 0xFF) as u8).collect();
+        let mut buf = Vec::new();
+        frame::send_frame(&mut buf, 3, &payload).unwrap();
+        // cut anywhere strictly inside the frame: always a clean error,
+        // never a hang and never a bogus success
+        let cut = (rng.next() as usize) % (buf.len() - 1) + 1;
+        let mut cur = Cursor::new(buf[..cut].to_vec());
+        let err = frame::recv_frame(&mut cur, Duration::from_secs(1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "cut at {cut}: {err}");
+    }
+}
+
+/// A peer that stalls mid-frame must hit the read deadline, and a peer
+/// that writes a partial frame and disconnects must produce a clean
+/// truncation error — over a real TCP stream, not a cursor.
+#[test]
+fn decoder_deadline_and_truncation_over_tcp() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // stall: client sends 5 of 12 header bytes and keeps the socket open
+    let client = TcpStream::connect(addr).unwrap();
+    let (mut server, _) = listener.accept().unwrap();
+    server.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+    let header = frame::encode_header(1, 0).unwrap();
+    (&client).write_all(&header[..5]).unwrap();
+    let err = frame::recv_frame(&mut server, Duration::from_millis(200))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("deadline"), "{err}");
+    drop(client);
+
+    // truncation: client sends a partial frame and disconnects
+    let client = TcpStream::connect(addr).unwrap();
+    let (mut server, _) = listener.accept().unwrap();
+    server.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+    let mut buf = Vec::new();
+    frame::send_frame(&mut buf, 2, b"payload-that-gets-cut").unwrap();
+    (&client).write_all(&buf[..buf.len() - 7]).unwrap();
+    drop(client);
+    let err = loop {
+        match frame::recv_frame(&mut server, Duration::from_secs(2)) {
+            Ok(frame::Recv::Idle) => continue, // bytes may still be in flight
+            Ok(other) => panic!("expected an error, got {other:?}"),
+            Err(e) => break e.to_string(),
+        }
+    };
+    assert!(err.contains("truncated"), "{err}");
+
+    // idle: an open, silent connection is Idle, not an error
+    let _client = TcpStream::connect(addr).unwrap();
+    let (mut server, _) = listener.accept().unwrap();
+    server.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+    assert_eq!(
+        frame::recv_frame(&mut server, Duration::from_secs(1)).unwrap(),
+        frame::Recv::Idle
+    );
+}
+
+/// A node receiving a wrong-version or oversized frame drops the
+/// connection cleanly instead of blocking or crashing, and keeps
+/// serving fresh connections afterwards.
+#[test]
+fn node_rejects_bad_frames_and_survives() {
+    let mut handle = node::spawn_local(NodeConfig::default()).unwrap();
+
+    // wrong protocol version
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let mut h = frame::encode_header(1, 0).unwrap();
+    h[4..6].copy_from_slice(&99u16.to_le_bytes());
+    stream.write_all(&h).unwrap();
+    assert_connection_closes(&mut stream);
+
+    // oversized length field
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let mut h = frame::encode_header(1, 0).unwrap();
+    h[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    stream.write_all(&h).unwrap();
+    assert_connection_closes(&mut stream);
+
+    // the node is still healthy for a well-formed peer
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    proto::send_msg(&mut stream, &proto::Msg::Ping).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        match proto::recv_msg(&mut stream, Duration::from_secs(10)).unwrap() {
+            proto::MsgRecv::Msg(proto::Msg::Pong(_), _) => break,
+            proto::MsgRecv::Idle => {
+                assert!(std::time::Instant::now() < deadline, "ping timed out")
+            }
+            other => panic!("expected Pong, got {other:?}"),
+        }
+    }
+    handle.shutdown();
+}
+
+fn assert_connection_closes(stream: &mut TcpStream) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        match frame::recv_frame(stream, Duration::from_secs(10)) {
+            Ok(frame::Recv::Eof) | Err(_) => return,
+            Ok(frame::Recv::Idle) => {
+                assert!(std::time::Instant::now() < deadline, "node never dropped the connection")
+            }
+            Ok(frame::Recv::Frame(k, _)) => panic!("unexpected frame kind {k}"),
+        }
+    }
+}
+
+/// The tentpole contract: a 2-node fleet evolution is bitwise identical
+/// to the single-process sharded evolver and (taps) to the scalar
+/// oracle, across fused and unfused chunking.
+#[test]
+fn two_node_fleet_is_bitwise_identical_to_single_process() {
+    let engine = Engine::default();
+    let spec = StencilSpec::box2d(1);
+    let n = 32;
+    let steps = 6;
+    let grid = DenseGrid::verification_input(&[n + 2, n + 2], 0xFEED);
+    let ev = twin_evolver(engine);
+
+    let mut handles = vec![
+        node::spawn_local(NodeConfig { workers: 2, engine, ..NodeConfig::default() }).unwrap(),
+        node::spawn_local(NodeConfig { workers: 2, engine, ..NodeConfig::default() }).unwrap(),
+    ];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+    assert_eq!(cluster.nodes_alive(), 2);
+
+    for (method, fuse, shards) in [
+        (KernelMethod::Taps, 1, 4),
+        (KernelMethod::Taps, 3, 4),
+        (KernelMethod::Oracle, 2, 3),
+        (KernelMethod::Outer, 3, 4),
+    ] {
+        let (fleet, report) =
+            cluster.evolve_fused(spec, &grid, steps, shards, method, fuse).unwrap();
+        let (twin, _, fr) = ev.evolve_fused(spec, &grid, steps, shards, method, fuse).unwrap();
+        assert_eq!(
+            fleet.data, twin.data,
+            "{method} T={fuse}: fleet diverged bitwise from the single-process evolver"
+        );
+        assert_eq!(report.fuse, fr, "{method} T={fuse}: fusion accounting diverged");
+        assert_eq!(report.replacements, 0);
+        assert!(report.chunks >= report.shards);
+        if matches!(method, KernelMethod::Taps | KernelMethod::Oracle) {
+            let coeffs = CoeffTensor::paper_default(spec);
+            let want = reference::evolve(&coeffs, &grid, steps);
+            assert_eq!(
+                fleet.data, want.data,
+                "{method} T={fuse}: fleet diverged bitwise from the scalar oracle"
+            );
+        }
+    }
+
+    // steps = 0 is the identity, like the in-process evolver
+    let (same, report) =
+        cluster.evolve_fused(spec, &grid, 0, 4, KernelMethod::Taps, 2).unwrap();
+    assert_eq!(same.data, grid.data);
+    assert_eq!(report.chunks, 0);
+
+    let health = cluster.health_json();
+    assert_eq!(health.get("status").and_then(|j| j.as_str()), Some("ok"));
+    assert_eq!(health.get("nodes_alive").and_then(|j| j.as_f64()), Some(2.0));
+
+    cluster.shutdown_nodes();
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
+
+/// The node-loss property: a worker that dies mid-evolution (goes
+/// silent after its first chunk) costs nothing but re-placement — the
+/// coordinator detects the loss, re-places the orphaned slabs on the
+/// survivors, and the final grid is still bitwise equal to the oracle.
+#[test]
+fn killing_a_node_mid_evolution_replaces_its_slabs_bitwise() {
+    let engine = Engine::default();
+    let spec = StencilSpec::star2d(1);
+    let n = 36;
+    let steps = 6;
+    let shards = 6; // two slabs per node, so the dying node leaves an orphan
+    let grid = DenseGrid::verification_input(&[n + 2, n + 2], 0xDEAD);
+
+    let mut handles = vec![
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+        node::spawn_local(NodeConfig {
+            workers: 1,
+            engine,
+            fail_after: Some(1),
+            ..NodeConfig::default()
+        })
+        .unwrap(),
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+    ];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+    cluster.set_rpc_timeout(Duration::from_secs(10));
+    assert_eq!(cluster.nodes_alive(), 3);
+
+    let (fleet, report) =
+        cluster.evolve_fused(spec, &grid, steps, shards, KernelMethod::Taps, 2).unwrap();
+
+    assert!(report.replacements >= 1, "the dying node never forced a re-placement: {report:?}");
+    assert!(report.nodes_alive < 3, "the fault-injected node still counts as alive");
+    assert_eq!(cluster.nodes_alive(), report.nodes_alive);
+
+    let coeffs = CoeffTensor::paper_default(spec);
+    let want = reference::evolve(&coeffs, &grid, steps);
+    assert_eq!(
+        fleet.data, want.data,
+        "evolution with a node lost mid-run diverged bitwise from the oracle"
+    );
+    let ev = twin_evolver(engine);
+    let (twin, _, _) = ev.evolve_fused(spec, &grid, steps, shards, KernelMethod::Taps, 2).unwrap();
+    assert_eq!(fleet.data, twin.data);
+
+    // degraded but answering: the health endpoint reflects the loss
+    let health = cluster.health_json();
+    assert_eq!(health.get("status").and_then(|j| j.as_str()), Some("degraded"));
+
+    cluster.shutdown_nodes();
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
+
+/// Losing every node is a clean error, not a hang.
+#[test]
+fn losing_all_nodes_fails_cleanly() {
+    let engine = Engine::default();
+    let spec = StencilSpec::box2d(1);
+    let grid = DenseGrid::verification_input(&[18, 18], 3);
+    let mut handles = vec![node::spawn_local(NodeConfig {
+        workers: 1,
+        engine,
+        fail_after: Some(0),
+        ..NodeConfig::default()
+    })
+    .unwrap()];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+    cluster.set_rpc_timeout(Duration::from_secs(5));
+    let err = cluster
+        .evolve_fused(spec, &grid, 2, 2, KernelMethod::Taps, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("all cluster nodes lost"), "{err}");
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
+
+/// Pipelining across one connection: many chunks sent back-to-back on a
+/// single node still come back correct and in request order.
+#[test]
+fn single_node_pipelined_chunks_stay_ordered_and_bitwise() {
+    let engine = Engine::default();
+    let spec = StencilSpec::box2d(2);
+    let grid = DenseGrid::verification_input(&[44, 40], 11);
+    let mut handles =
+        vec![node::spawn_local(NodeConfig { workers: 2, engine, ..NodeConfig::default() })
+            .unwrap()];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+
+    // 8 shards on one node: the coordinator pipelines all 8 requests on
+    // the single connection before draining replies
+    let (fleet, report) =
+        cluster.evolve_fused(spec, &grid, 4, 8, KernelMethod::Taps, 2).unwrap();
+    assert_eq!(report.nodes, 1);
+    assert!(report.shards > 1);
+    let coeffs = CoeffTensor::paper_default(spec);
+    let want = reference::evolve(&coeffs, &grid, 4);
+    assert_eq!(fleet.data, want.data);
+
+    cluster.shutdown_nodes();
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
