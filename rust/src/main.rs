@@ -26,7 +26,8 @@
 //! stencil-matrix serve       --artifact evolve_2d5p_n256_t4 --executions 25
 //! stencil-matrix shard-bench --size 512 --steps 8 --max-workers 4
 //! stencil-matrix serve-node  --listen 127.0.0.1:0 [--workers 0] [--max-secs 0]
-//! stencil-matrix serve-cluster --nodes HOST:PORT,HOST:PORT --size 64 --steps 8
+//! stencil-matrix serve-cluster --nodes HOST:PORT,HOST:PORT --size 64 \
+//!                            --steps 8 [--exchange peer|mediated]
 //! stencil-matrix cluster-bench --max-nodes 2 [--out cluster_bench.json]
 //! stencil-matrix list        [--artifacts-dir artifacts]
 //! ```
@@ -1024,12 +1025,14 @@ fn serve_node_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `serve-cluster`: drive one fused fleet evolution, then run the
-/// single-process twin with identical parameters and assert the results
-/// are bitwise identical (plus the scalar oracle for bitwise kernels).
+/// `serve-cluster`: drive one fleet evolution on the requested exchange
+/// path (peer-to-peer bands by default, coordinator-mediated otherwise),
+/// then run the single-process twin with identical parameters and assert
+/// the results are bitwise identical (plus the scalar oracle for bitwise
+/// kernels).
 fn serve_cluster_cmd(args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::serve::cluster::node;
-    use stencil_matrix::serve::{Coordinator, NodeConfig};
+    use stencil_matrix::serve::{Coordinator, ExchangeMode, NodeConfig};
 
     let spec = parse_spec(args)?;
     let n = args.usize_or("size", 64)?;
@@ -1039,6 +1042,7 @@ fn serve_cluster_cmd(args: &Args) -> anyhow::Result<()> {
     let engine: Engine = args.get("engine").unwrap_or("compiled").parse()?;
     let fuse = args.usize_or("fuse-steps", 4)?.max(1);
     let seed = args.usize_or("seed", 0xC0FFEE)? as u64;
+    let mode: ExchangeMode = args.get("exchange").unwrap_or("peer").parse()?;
 
     // the fleet: remote addresses via --nodes, or --local-nodes
     // in-process nodes on loopback ephemeral ports
@@ -1068,7 +1072,7 @@ fn serve_cluster_cmd(args: &Args) -> anyhow::Result<()> {
 
     let shape = vec![n + 2 * spec.order; spec.dims];
     let grid = DenseGrid::verification_input(&shape, seed);
-    let (fleet, report) = cluster.evolve_fused(spec, &grid, steps, shards, method, fuse)?;
+    let (fleet, report) = cluster.evolve_exchange(mode, spec, &grid, steps, shards, method, fuse)?;
 
     // the single-process twin, identical parameters — the tentpole's
     // non-negotiable: the fleet result must be bitwise equal
@@ -1120,6 +1124,30 @@ fn serve_cluster_cmd(args: &Args) -> anyhow::Result<()> {
         report.bytes_sent,
         report.bytes_recv
     );
+    // exact line the CI cluster smoke parses for the exchange path and
+    // fallback status
+    println!(
+        "exchange: path={} fell-back={} band-bytes={}B exchange-seconds={:.6} \
+         hidden-seconds={:.6} overlap-ratio={:.3}",
+        report.path,
+        if report.fell_back { "yes" } else { "no" },
+        report.band_bytes,
+        report.exchange_seconds(),
+        report.exchange_hidden_us as f64 / 1e6,
+        report.overlap_ratio()
+    );
+    // the coordinator-side exchange metric families, Prometheus text —
+    // CI asserts the path=\"peer\" family is nonzero after a peer run
+    for line in stencil_matrix::obs::registry::global().render().lines() {
+        if (line.starts_with("stencil_cluster_exchange_seconds_count")
+            || line.starts_with("stencil_cluster_exchange_bytes_total")
+            || line.starts_with("stencil_cluster_overlap_ratio")
+            || line.starts_with("stencil_cluster_peer_fallbacks_total"))
+            && !line.starts_with("# ")
+        {
+            println!("{line}");
+        }
+    }
     // only tear the fleet down when this process owns it
     if !local.is_empty() {
         cluster.shutdown_nodes();
@@ -1131,11 +1159,14 @@ fn serve_cluster_cmd(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `cluster-bench`: multi-node scaling of fleet evolution over in-process
-/// loopback nodes (real sockets, real frames), each row verified bitwise
-/// against the single-process evolver; markdown table + JSON artifact.
+/// loopback nodes (real sockets, real frames), each node count measured
+/// on both exchange paths (coordinator-mediated and peer-to-peer), each
+/// row verified bitwise against the single-process evolver; markdown
+/// table + JSON artifact with per-path exchange seconds, bytes moved,
+/// and the compute/communication overlap ratio.
 fn cluster_bench_cmd(args: &Args) -> anyhow::Result<()> {
     use stencil_matrix::serve::cluster::node;
-    use stencil_matrix::serve::{Coordinator, NodeConfig};
+    use stencil_matrix::serve::{Coordinator, ExchangeMode, NodeConfig};
     use stencil_matrix::util::bench::{fmt_secs, time_it, Table};
 
     let spec = parse_spec(args)?;
@@ -1161,7 +1192,19 @@ fn cluster_bench_cmd(args: &Args) -> anyhow::Result<()> {
     let ev =
         ShardedEvolver::with_parts(Arc::new(WorkerPool::new(default_workers())), Arc::new(cache));
 
-    let mut table = Table::new(&["nodes", "shards", "T", "best", "Mpts/s", "vs 1 node"]);
+    let mut table = Table::new(&[
+        "nodes",
+        "path",
+        "shards",
+        "T",
+        "best",
+        "Mpts/s",
+        "coord bytes",
+        "band bytes",
+        "exch",
+        "overlap",
+        "vs base",
+    ]);
     let mut rows = Vec::new();
     let mut base_secs = None;
     for nodes in 1..=max_nodes {
@@ -1174,40 +1217,60 @@ fn cluster_bench_cmd(args: &Args) -> anyhow::Result<()> {
             0 => 2 * nodes, // two slabs per node so re-placement has room
             s => s,
         };
-        // verify the row bitwise against the single-process twin, warm
-        // every node's plan cache along the way
-        let (fleet, report) = cluster.evolve_fused(spec, &grid, steps, shards, method, fuse)?;
-        let (twin, _, _) = ev.evolve_fused(spec, &grid, steps, shards, method, fuse)?;
-        anyhow::ensure!(
-            fleet.data == twin.data,
-            "{nodes}-node cluster evolution diverged bitwise from the single-process evolver"
-        );
-        let (best, _) = time_it(reps, || {
-            cluster.evolve_fused(spec, &grid, steps, shards, method, fuse).unwrap();
-        });
-        let base = *base_secs.get_or_insert(best);
-        table.row(vec![
-            nodes.to_string(),
-            shards.to_string(),
-            report.fuse.fuse_steps.to_string(),
-            fmt_secs(best),
-            format!("{:.1}", point_steps / best / 1e6),
-            format!("{:.2}x", base / best),
-        ]);
-        rows.push(obj(vec![
-            ("nodes", Json::Num(nodes as f64)),
-            ("shards", Json::Num(shards as f64)),
-            ("fuse_steps", Json::Num(report.fuse.fuse_steps as f64)),
-            ("halo_exchanges", Json::Num(report.fuse.halo_exchanges as f64)),
-            ("chunks", Json::Num(report.chunks as f64)),
-            ("replacements", Json::Num(report.replacements as f64)),
-            ("bytes_sent", Json::Num(report.bytes_sent as f64)),
-            ("bytes_recv", Json::Num(report.bytes_recv as f64)),
-            ("seconds", Json::Num(best)),
-            ("mpts_per_s", Json::Num(point_steps / best / 1e6)),
-            ("speedup", Json::Num(base / best)),
-            ("bitwise_vs_single_process", Json::Bool(true)),
-        ]));
+        // mediated first: its 1-node row is the speedup baseline
+        for mode in [ExchangeMode::Mediated, ExchangeMode::Peer] {
+            // verify the row bitwise against the single-process twin,
+            // warm every node's plan cache along the way
+            let (fleet, report) =
+                cluster.evolve_exchange(mode, spec, &grid, steps, shards, method, fuse)?;
+            let (twin, _, _) = ev.evolve_fused(spec, &grid, steps, shards, method, fuse)?;
+            anyhow::ensure!(
+                fleet.data == twin.data,
+                "{nodes}-node {mode} cluster evolution diverged bitwise from the \
+                 single-process evolver"
+            );
+            anyhow::ensure!(
+                !report.fell_back,
+                "{nodes}-node peer exchange fell back to mediated on a healthy fleet"
+            );
+            let (best, _) = time_it(reps, || {
+                cluster.evolve_exchange(mode, spec, &grid, steps, shards, method, fuse).unwrap();
+            });
+            let base = *base_secs.get_or_insert(best);
+            let coord_bytes = report.bytes_sent + report.bytes_recv;
+            table.row(vec![
+                nodes.to_string(),
+                mode.to_string(),
+                shards.to_string(),
+                report.fuse.fuse_steps.to_string(),
+                fmt_secs(best),
+                format!("{:.1}", point_steps / best / 1e6),
+                format!("{coord_bytes}B"),
+                format!("{}B", report.band_bytes),
+                fmt_secs(report.exchange_seconds()),
+                format!("{:.2}", report.overlap_ratio()),
+                format!("{:.2}x", base / best),
+            ]);
+            rows.push(obj(vec![
+                ("nodes", Json::Num(nodes as f64)),
+                ("path", Json::Str(mode.to_string())),
+                ("shards", Json::Num(shards as f64)),
+                ("fuse_steps", Json::Num(report.fuse.fuse_steps as f64)),
+                ("halo_exchanges", Json::Num(report.fuse.halo_exchanges as f64)),
+                ("chunks", Json::Num(report.chunks as f64)),
+                ("replacements", Json::Num(report.replacements as f64)),
+                ("bytes_sent", Json::Num(report.bytes_sent as f64)),
+                ("bytes_recv", Json::Num(report.bytes_recv as f64)),
+                ("coordinator_bytes", Json::Num(coord_bytes as f64)),
+                ("band_bytes", Json::Num(report.band_bytes as f64)),
+                ("exchange_seconds", Json::Num(report.exchange_seconds())),
+                ("overlap_ratio", Json::Num(report.overlap_ratio())),
+                ("seconds", Json::Num(best)),
+                ("mpts_per_s", Json::Num(point_steps / best / 1e6)),
+                ("speedup", Json::Num(base / best)),
+                ("bitwise_vs_single_process", Json::Bool(true)),
+            ]));
+        }
         cluster.shutdown_nodes();
         for h in &mut handles {
             h.shutdown();
@@ -1473,7 +1536,9 @@ per-phase breakdown table (embed/compute/freeze/exchange/extract).",
         "stencil-matrix serve-node — run one distributed-serving worker node
 
 Binds a TCP listener speaking the framed cluster protocol (STCF frames,
-version 1) and evolves slab tiles with the in-process sharded evolver.
+version 2) and evolves slab tiles with the in-process sharded evolver.
+Nodes serve both exchange paths: coordinator-mediated chunk RPCs and
+peer-to-peer halo band exchange (HaloPush/HaloAck between nodes).
 The bound address is printed as 'cluster node listening on <addr>'
 (port 0 picks an ephemeral port). The node runs until a coordinator
 sends Shutdown, --max-secs elapses, or the process is killed.
@@ -1497,11 +1562,19 @@ USAGE:
 
 Connects to worker nodes (remote --nodes, or --local-nodes in-process
 nodes on loopback), places grid slabs across them, and drives a fused
-T-step evolution: tiles carry order*T-deep ghosts, nodes evolve chunks
-of T steps locally, and the coordinator mediates one deep-halo exchange
-per chunk — cross-node traffic amortizes exactly like the in-process
-fused path. A node lost mid-evolution is detected by reply deadline and
-its slabs are re-placed on the survivors.
+T-step evolution on one of two data paths (--exchange):
+
+  peer      (default) the coordinator distributes one exchange plan up
+            front, then drops out of the per-round loop: each round,
+            nodes compute their slab interiors while pushing order*T-deep
+            boundary bands directly to neighbour nodes (HaloPush), then
+            finish the boundary rows once bands arrive — the exchange
+            hides behind compute. Any peer failure or plan rejection
+            falls back automatically to the mediated path.
+  mediated  tiles round-trip through the coordinator each fused round,
+            which runs the deep-halo exchange itself. A node lost
+            mid-evolution is detected by reply deadline and its slabs
+            are re-placed on the survivors.
 
 After the fleet run, the single-process sharded evolver runs the same
 evolution with identical parameters and the outputs are asserted
@@ -1516,21 +1589,33 @@ USAGE:
                                [--kernel taps|oracle|outer|tuned]
                                [--engine compiled|interpret|simd]
                                [--fuse-steps 4] [--seed 12648430]
+                               [--exchange peer|mediated]
 
   --nodes        comma-separated worker addresses (from serve-node logs)
   --local-nodes  spawn N in-process loopback nodes instead (default 2)
-  --fuse-steps   T, halo depth order*T; capped so shards keep interior",
+  --fuse-steps   T, halo depth order*T; capped so shards keep interior
+  --exchange     data path: peer (default, overlapped node-to-node bands)
+                 or mediated (coordinator round-trips every tile)
+
+The 'exchange:' stats line reports the path taken, whether the run fell
+back to mediated, band bytes moved node-to-node, exchange seconds, and
+the compute/communication overlap ratio (hidden / total exchange time).",
     ),
     (
         "cluster-bench",
         "stencil-matrix cluster-bench — multi-node scaling of fleet evolution
 
 Spawns 1..=--max-nodes in-process loopback worker nodes (real sockets,
-real frames), verifies each node count's evolution bitwise against the
-single-process evolver, then times it. Reports a markdown table and a
+real frames) and measures every node count on BOTH exchange paths —
+mediated (coordinator round-trips tiles) and peer (direct node-to-node
+bands overlapped with compute) — verifying each row bitwise against the
+single-process evolver before timing it. Reports a markdown table and a
 JSON artifact (per-row seconds, Mpts/s, speedup, chunks, replacements,
-halo exchanges, wire bytes). Loopback nodes share one host's cores, so
-the numbers measure protocol + placement overhead, not extra hardware.
+halo exchanges, coordinator wire bytes, peer band bytes,
+exchange_seconds, overlap_ratio). Loopback nodes share one host's
+cores, so the numbers measure protocol + placement overhead, not extra
+hardware; peer rows should still move strictly fewer coordinator bytes
+and hide most exchange time behind compute (overlap_ratio).
 
 USAGE:
   stencil-matrix cluster-bench [--stencil 2d-box] [--order 1] [--size 128]
@@ -1594,6 +1679,7 @@ USAGE:
   stencil-matrix serve-node  [--listen 127.0.0.1:0] [--workers 0] [--max-secs 0]
   stencil-matrix serve-cluster [--nodes HOST:PORT,... | --local-nodes 2]
                              [--size 64] [--steps 8] [--shards 4] [--fuse-steps 4]
+                             [--exchange peer|mediated]
   stencil-matrix cluster-bench [--max-nodes 2] [--size 128] [--steps 8]
                              [--out cluster_bench.json]
   stencil-matrix list        [--artifacts-dir artifacts]
@@ -1740,7 +1826,12 @@ mod tests {
         assert!(usage_for("serve-cluster").unwrap().contains("--nodes"));
         assert!(usage_for("serve-cluster").unwrap().contains("--local-nodes"));
         assert!(usage_for("serve-cluster").unwrap().contains("bitwise"));
+        assert!(usage_for("serve-cluster").unwrap().contains("--exchange"));
+        assert!(usage_for("serve-cluster").unwrap().contains("mediated"));
+        assert!(usage_for("serve-node").unwrap().contains("version 2"));
         assert!(usage_for("cluster-bench").unwrap().contains("--max-nodes"));
         assert!(usage_for("cluster-bench").unwrap().contains("cluster_bench.json"));
+        assert!(usage_for("cluster-bench").unwrap().contains("overlap_ratio"));
+        assert!(usage_for("cluster-bench").unwrap().contains("peer"));
     }
 }

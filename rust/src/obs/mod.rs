@@ -65,6 +65,7 @@
 //! | `cluster.round`       | `cluster`| one fleet chunk round (T fused steps)   | `steps`    |
 //! | `cluster.rpc`         | `cluster`| draining one node's pipelined replies   | `chunks`   |
 //! | `cluster.exchange`    | `cluster`| coordinator-mediated deep-halo exchange | —          |
+//! | `cluster.peer_exchange` | `cluster`| node-side band waits + ghost refresh + boundary finish | — |
 //!
 //! Consumers: `serve --trace-out`/`--metrics-out`/`--listen-metrics`,
 //! `engine-bench --trace-out`, the `shard-bench`/`engine-bench`

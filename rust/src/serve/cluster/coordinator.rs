@@ -1,6 +1,23 @@
 //! The cluster coordinator: places grid slabs on worker nodes, drives
-//! fused T-step evolution with coordinator-mediated deep-halo exchange,
-//! and re-places work when a node dies mid-evolution.
+//! fused T-step evolution, and recovers when a node dies mid-evolution.
+//!
+//! Two data paths share the same partition, band geometry, and assembly:
+//!
+//! - **Peer** ([`ExchangeMode::Peer`], the steady-state default): the
+//!   coordinator distributes one [`proto::ExchangePlan`] per evolution
+//!   (placement, neighbour addresses, band extents, epoch tags) plus
+//!   each node's tiles, waits for every `PlanReady` (staging registered
+//!   everywhere before any band can fly), fires `PlanStart`, and then
+//!   drops out of the per-round loop entirely — nodes exchange
+//!   `order·T`-deep boundary bands directly and overlap them with
+//!   interior compute (see [`super::peer`]). The coordinator only
+//!   collects `PlanDone` tiles and stats at the end. Any peer failure —
+//!   a lost node, a band timeout, a `PlanErr` — invalidates the plan
+//!   and the evolution restarts on the coordinator-mediated path from
+//!   the original grid (evolution is a pure function, so the retry is
+//!   bitwise identical).
+//! - **Mediated** ([`ExchangeMode::Mediated`], the PR 9 path and the
+//!   fallback): every round-trip goes through the coordinator.
 //!
 //! The evolution loop is a line-for-line mirror of
 //! [`ShardedEvolver::evolve_fused`](crate::serve::ShardedEvolver::evolve_fused)
@@ -31,8 +48,11 @@
 //! chunk is in (or no nodes remain). Re-sent chunks are idempotent —
 //! evolution is a pure function of the tile.
 
+use super::frame::VersionMismatch;
 use super::node::NodeHandle;
-use super::proto::{self, ChunkRequest, Msg, MsgRecv, NodeStatus};
+use super::proto::{
+    self, ChunkRequest, ExchangePlan, Msg, MsgRecv, NodeStatus, PlanRequest, PlanStats,
+};
 use crate::kir::Engine;
 use crate::obs::registry::{self, Counter, Gauge, Histogram, SECONDS_BUCKETS};
 use crate::obs::span::{span, span_arg};
@@ -42,7 +62,8 @@ use crate::stencil::{DenseGrid, StencilSpec};
 use crate::util::json::{obj, Json};
 use std::collections::BTreeSet;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant, SystemTime};
 
 /// Per-RPC reply timeout: how long the coordinator waits for one node's
 /// chunk replies before declaring the node dead and re-placing.
@@ -63,6 +84,40 @@ impl NodeConn {
     }
 }
 
+/// Which data path carries halo bands between rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExchangeMode {
+    /// Nodes push boundary bands directly to each other, overlapped
+    /// with interior compute; the coordinator only distributes the plan
+    /// and collects the result. The steady-state default.
+    #[default]
+    Peer,
+    /// Every tile round-trips through the coordinator each round and
+    /// the coordinator runs the halo exchange itself (the PR 9 path;
+    /// also the automatic fallback when a peer plan fails).
+    Mediated,
+}
+
+impl std::fmt::Display for ExchangeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExchangeMode::Peer => "peer",
+            ExchangeMode::Mediated => "mediated",
+        })
+    }
+}
+
+impl std::str::FromStr for ExchangeMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<ExchangeMode> {
+        match s {
+            "peer" => Ok(ExchangeMode::Peer),
+            "mediated" => Ok(ExchangeMode::Mediated),
+            other => anyhow::bail!("unknown exchange mode '{other}' (choose peer|mediated)"),
+        }
+    }
+}
+
 /// Accounting of one fleet evolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ClusterReport {
@@ -74,7 +129,8 @@ pub struct ClusterReport {
     pub shards: usize,
     /// Fusion accounting (same meaning as the in-process evolver's).
     pub fuse: FuseReport,
-    /// Chunk RPCs that completed successfully.
+    /// Chunk RPCs that completed successfully. On the peer path this
+    /// counts shard-rounds executed node-side (same unit of work).
     pub chunks: usize,
     /// Chunks re-placed after a node loss.
     pub replacements: usize,
@@ -82,6 +138,53 @@ pub struct ClusterReport {
     pub bytes_sent: usize,
     /// Reply bytes taken off the wire (frames included).
     pub bytes_recv: usize,
+    /// Data path that produced the result.
+    pub path: ExchangeMode,
+    /// True when a peer plan failed and the evolution was re-run on the
+    /// mediated path (`path` is then [`ExchangeMode::Mediated`]).
+    pub fell_back: bool,
+    /// Halo-band bytes moved node↔node (peer path only; bands between
+    /// two shards on the same node never touch the wire).
+    pub band_bytes: usize,
+    /// Exchange time hidden behind interior compute, microseconds
+    /// (summed over nodes and rounds; peer path only).
+    pub exchange_hidden_us: u64,
+    /// Exchange time on the critical path, microseconds: band
+    /// extraction, waits, and application (peer), or the coordinator's
+    /// serial exchange (mediated).
+    pub exchange_visible_us: u64,
+}
+
+impl ClusterReport {
+    /// Fraction of exchange time hidden behind compute, in `[0, 1]`.
+    /// `1.0` when there was no exchange work at all (single shard, or
+    /// every band landed before it was needed).
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.exchange_hidden_us + self.exchange_visible_us;
+        if total == 0 {
+            1.0
+        } else {
+            self.exchange_hidden_us as f64 / total as f64
+        }
+    }
+
+    /// Total exchange seconds (hidden + visible).
+    pub fn exchange_seconds(&self) -> f64 {
+        (self.exchange_hidden_us + self.exchange_visible_us) as f64 / 1e6
+    }
+}
+
+/// Epoch tags for peer exchange plans: unique per coordinator process
+/// (counter) and across restarts (wall-clock salt), so a stale band
+/// from an abandoned plan can never be mistaken for a live one.
+fn next_epoch() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let now = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    now ^ n.rotate_left(32)
 }
 
 /// A connected fleet of worker nodes.
@@ -93,6 +196,12 @@ pub struct Coordinator {
     bytes_sent: Counter,
     bytes_recv: Counter,
     rpc_seconds: Histogram,
+    exchange_seconds_peer: Histogram,
+    exchange_seconds_mediated: Histogram,
+    exchange_bytes_peer: Counter,
+    exchange_bytes_mediated: Counter,
+    overlap_ratio: Gauge,
+    peer_fallbacks: Counter,
 }
 
 impl Coordinator {
@@ -133,6 +242,22 @@ impl Coordinator {
             bytes_sent: r.counter("stencil_cluster_bytes_sent_total"),
             bytes_recv: r.counter("stencil_cluster_bytes_recv_total"),
             rpc_seconds: r.histogram("stencil_cluster_rpc_seconds", &SECONDS_BUCKETS),
+            exchange_seconds_peer: r.histogram_with(
+                "stencil_cluster_exchange_seconds",
+                "path=\"peer\"",
+                &SECONDS_BUCKETS,
+            ),
+            exchange_seconds_mediated: r.histogram_with(
+                "stencil_cluster_exchange_seconds",
+                "path=\"mediated\"",
+                &SECONDS_BUCKETS,
+            ),
+            exchange_bytes_peer: r
+                .counter_with("stencil_cluster_exchange_bytes_total", "path=\"peer\""),
+            exchange_bytes_mediated: r
+                .counter_with("stencil_cluster_exchange_bytes_total", "path=\"mediated\""),
+            overlap_ratio: r.gauge("stencil_cluster_overlap_ratio"),
+            peer_fallbacks: r.counter("stencil_cluster_peer_fallbacks_total"),
         };
         for i in 0..c.nodes.len() {
             let addr = c.nodes[i].addr;
@@ -165,9 +290,13 @@ impl Coordinator {
         self.nodes.len()
     }
 
-    /// Ping one node; `Ok(None)` means it is (now) dead.
+    /// Ping one node; `Ok(None)` means it is (now) dead. A peer
+    /// answering with a different protocol version is a hard error (not
+    /// a dead node): version skew is an operator mistake that re-placing
+    /// slabs can never fix, so it must surface as its own message.
     fn ping_node(&mut self, i: usize) -> anyhow::Result<Option<NodeStatus>> {
         let node = &mut self.nodes[i];
+        let addr = node.addr;
         let Some(stream) = node.stream.as_mut() else { return Ok(None) };
         if proto::send_msg(stream, &Msg::Ping).is_err() {
             node.mark_dead();
@@ -178,13 +307,19 @@ impl Coordinator {
             match proto::recv_msg(stream, Duration::from_secs(5)) {
                 Ok(MsgRecv::Msg(Msg::Pong(st), _)) => return Ok(Some(st)),
                 Ok(MsgRecv::Msg(other, _)) => {
-                    anyhow::bail!("node {} answered ping with {other:?}", node.addr)
+                    anyhow::bail!("node {addr} answered ping with {other:?}")
                 }
                 Ok(MsgRecv::Idle) => {
                     if start.elapsed() > Duration::from_secs(5) {
                         node.mark_dead();
                         return Ok(None);
                     }
+                }
+                Err(e) if e.downcast_ref::<VersionMismatch>().is_some() => {
+                    node.mark_dead();
+                    return Err(e.context(format!(
+                        "cluster node {addr} failed the protocol handshake"
+                    )));
                 }
                 Ok(MsgRecv::Eof) | Err(_) => {
                     node.mark_dead();
@@ -278,6 +413,11 @@ impl Coordinator {
             replacements: 0,
             bytes_sent: 0,
             bytes_recv: 0,
+            path: ExchangeMode::Mediated,
+            fell_back: false,
+            band_bytes: 0,
+            exchange_hidden_us: 0,
+            exchange_visible_us: 0,
         };
         if steps == 0 {
             return Ok((grid.clone(), report));
@@ -291,13 +431,349 @@ impl Coordinator {
             remaining -= chunk;
             if remaining > 0 && n_shards > 1 {
                 let _g = span("cluster.exchange", "cluster");
+                let t0 = Instant::now();
                 halo::exchange_serial(&part, &mut tiles);
+                let dt = t0.elapsed();
+                self.exchange_seconds_mediated.observe(dt.as_secs_f64());
+                report.exchange_visible_us += dt.as_micros() as u64;
                 report.fuse.halo_exchanges += 1;
             }
         }
         report.nodes_alive = self.nodes_alive();
+        // on the mediated path every exchanged byte rides the
+        // coordinator's connections, so the per-path wire accounting is
+        // the coordinator's own traffic
+        self.exchange_bytes_mediated.add((report.bytes_sent + report.bytes_recv) as u64);
         let refs: Vec<&DenseGrid> = tiles.iter().collect();
         Ok((part.assemble(&refs)?, report))
+    }
+
+    /// Evolve on the requested data path. The peer path falls back to
+    /// the mediated path on *any* plan failure — a dead node, a band
+    /// timeout, a version skew — by re-running the whole evolution from
+    /// the original grid on the surviving nodes (evolution is a pure
+    /// function of the input grid, so the retry is bitwise identical to
+    /// what the peer path would have produced).
+    #[allow(clippy::too_many_arguments)]
+    pub fn evolve_exchange(
+        &mut self,
+        mode: ExchangeMode,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+        fuse: usize,
+    ) -> anyhow::Result<(DenseGrid, ClusterReport)> {
+        match mode {
+            ExchangeMode::Mediated => self.evolve_fused(spec, grid, steps, shards, method, fuse),
+            ExchangeMode::Peer => match self.evolve_peer(spec, grid, steps, shards, method, fuse) {
+                Ok(done) => Ok(done),
+                Err(peer_err) => {
+                    self.peer_fallbacks.inc();
+                    let (out, mut report) = self
+                        .evolve_fused(spec, grid, steps, shards, method, fuse)
+                        .map_err(|med_err| {
+                            anyhow::anyhow!(
+                                "peer exchange failed ({peer_err:#}) and the mediated \
+                                 fallback also failed: {med_err:#}"
+                            )
+                        })?;
+                    report.fell_back = true;
+                    Ok((out, report))
+                }
+            },
+        }
+    }
+
+    /// The peer-to-peer data path: distribute one exchange plan, let
+    /// the nodes run every round among themselves, collect the evolved
+    /// tiles. Any failure aborts the plan (callers fall back via
+    /// [`Coordinator::evolve_exchange`]).
+    fn evolve_peer(
+        &mut self,
+        spec: StencilSpec,
+        grid: &DenseGrid,
+        steps: usize,
+        shards: usize,
+        method: KernelMethod,
+        fuse: usize,
+    ) -> anyhow::Result<(DenseGrid, ClusterReport)> {
+        anyhow::ensure!(
+            grid.shape.len() == spec.dims,
+            "grid shape {:?} does not match {spec}",
+            grid.shape
+        );
+        anyhow::ensure!(
+            grid.shape.iter().all(|&n| n > 2 * spec.order),
+            "grid {:?} too small for order-{} stencil",
+            grid.shape,
+            spec.order
+        );
+        let t = Partition::max_fuse(grid.shape[0], spec.order, shards, fuse).min(steps.max(1));
+        let part = Partition::new(&grid.shape, shards, spec.order * t)?;
+        let n_shards = part.len();
+        let mut report = ClusterReport {
+            nodes: self.nodes.len(),
+            nodes_alive: self.nodes_alive(),
+            shards: n_shards,
+            fuse: FuseReport { fuse_steps: t, halo_exchanges: 0 },
+            chunks: 0,
+            replacements: 0,
+            bytes_sent: 0,
+            bytes_recv: 0,
+            path: ExchangeMode::Peer,
+            fell_back: false,
+            band_bytes: 0,
+            exchange_hidden_us: 0,
+            exchange_visible_us: 0,
+        };
+        if steps == 0 {
+            return Ok((grid.clone(), report));
+        }
+        let live: Vec<usize> =
+            (0..self.nodes.len()).filter(|&i| self.nodes[i].stream.is_some()).collect();
+        anyhow::ensure!(!live.is_empty(), "no live nodes to run an exchange plan on");
+
+        let epoch = next_epoch();
+        let total_rounds = steps.div_ceil(t);
+        // owner indices are positions in the plan's peer list, which
+        // holds the *live* nodes in order; alternating placement keeps
+        // neighbouring shards on different nodes whenever possible, so
+        // the overlap machinery is exercised even by two-node fleets
+        let owners: Vec<usize> = (0..n_shards).map(|s| s % live.len()).collect();
+        let peers: Vec<String> = live.iter().map(|&ni| self.nodes[ni].addr.to_string()).collect();
+        let band_timeout_ms = self.band_timeout().as_millis().max(1) as u64;
+
+        let tiles = part.extract(grid);
+        let mut assignment: Vec<Vec<(u64, DenseGrid)>> = vec![Vec::new(); live.len()];
+        for (s, tile) in tiles.into_iter().enumerate() {
+            assignment[owners[s]].push((s as u64, tile));
+        }
+
+        // phase 1: ship plan + tiles to every live node, pipelined
+        for (li, &ni) in live.iter().enumerate() {
+            let req = Msg::EvolvePlan(PlanRequest {
+                plan: ExchangePlan {
+                    epoch,
+                    spec,
+                    method,
+                    engine: self.engine,
+                    steps,
+                    fuse: t,
+                    local_shards: 0,
+                    band_timeout_ms,
+                    part: part.clone(),
+                    owners: owners.clone(),
+                    peers: peers.clone(),
+                    self_node: li,
+                },
+                tiles: std::mem::take(&mut assignment[li]),
+            });
+            let node = &mut self.nodes[ni];
+            let Some(stream) = node.stream.as_mut() else {
+                anyhow::bail!("node {} died while the plan was being distributed", node.addr)
+            };
+            match proto::send_msg(stream, &req) {
+                Ok(n) => {
+                    report.bytes_sent += n;
+                    self.bytes_sent.add(n as u64);
+                }
+                Err(e) => {
+                    let addr = node.addr;
+                    node.mark_dead();
+                    anyhow::bail!("node {addr} lost while receiving the exchange plan: {e}");
+                }
+            }
+        }
+
+        // phase 2: wait until *every* node has registered its band
+        // staging (PlanReady), then release them all (PlanStart) — no
+        // band can arrive at a node that is not ready for it
+        for &ni in &live {
+            self.wait_plan_ready(ni, epoch, &mut report)?;
+        }
+        for &ni in &live {
+            let node = &mut self.nodes[ni];
+            let Some(stream) = node.stream.as_mut() else {
+                anyhow::bail!("node {} died between PlanReady and PlanStart", node.addr)
+            };
+            match proto::send_msg(stream, &Msg::PlanStart { epoch }) {
+                Ok(n) => {
+                    report.bytes_sent += n;
+                    self.bytes_sent.add(n as u64);
+                }
+                Err(e) => {
+                    let addr = node.addr;
+                    node.mark_dead();
+                    anyhow::bail!("node {addr} lost at PlanStart: {e}");
+                }
+            }
+        }
+
+        // phase 3: the nodes run every round among themselves; collect
+        // the evolved tiles and per-node stats. Keep draining the other
+        // nodes after a failure so every surviving connection returns
+        // to a frame boundary before the mediated fallback reuses it.
+        let mut out_tiles: Vec<Option<DenseGrid>> = vec![None; n_shards];
+        let mut stats = PlanStats::default();
+        let mut first_err: Option<anyhow::Error> = None;
+        for &ni in &live {
+            if let Err(e) =
+                self.wait_plan_done(ni, epoch, &part, &mut out_tiles, &mut stats, &mut report)
+            {
+                first_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut evolved = Vec::with_capacity(n_shards);
+        for (s, tile) in out_tiles.into_iter().enumerate() {
+            evolved.push(tile.ok_or_else(|| anyhow::anyhow!("shard {s} never came back"))?);
+        }
+
+        report.nodes_alive = self.nodes_alive();
+        report.chunks = n_shards * total_rounds;
+        report.fuse.halo_exchanges =
+            if n_shards > 1 { total_rounds.saturating_sub(1) } else { 0 };
+        report.band_bytes = stats.band_bytes_sent as usize;
+        report.exchange_hidden_us = (stats.exchange_hidden_seconds * 1e6) as u64;
+        report.exchange_visible_us = (stats.exchange_visible_seconds * 1e6) as u64;
+        self.exchange_seconds_peer
+            .observe(stats.exchange_hidden_seconds + stats.exchange_visible_seconds);
+        self.exchange_bytes_peer.add(stats.band_bytes_sent);
+        self.overlap_ratio.set(report.overlap_ratio());
+
+        let refs: Vec<&DenseGrid> = evolved.iter().collect();
+        Ok((part.assemble(&refs)?, report))
+    }
+
+    /// How long a node may block waiting for one peer band before it
+    /// declares the peer lost (distributed in the exchange plan).
+    fn band_timeout(&self) -> Duration {
+        self.rpc_timeout.min(Duration::from_secs(10))
+    }
+
+    /// Wait for one node's `PlanReady` (phase 2 of the peer handshake).
+    fn wait_plan_ready(
+        &mut self,
+        ni: usize,
+        epoch: u64,
+        report: &mut ClusterReport,
+    ) -> anyhow::Result<()> {
+        let start = Instant::now();
+        let addr = self.nodes[ni].addr;
+        loop {
+            let node = &mut self.nodes[ni];
+            let Some(stream) = node.stream.as_mut() else {
+                anyhow::bail!("node {addr} died before acknowledging the exchange plan")
+            };
+            match proto::recv_msg(stream, Duration::from_secs(10)) {
+                Ok(MsgRecv::Msg(Msg::PlanReady { epoch: e }, n)) if e == epoch => {
+                    report.bytes_recv += n;
+                    self.bytes_recv.add(n as u64);
+                    return Ok(());
+                }
+                Ok(MsgRecv::Msg(Msg::PlanErr { error, .. }, _)) => {
+                    anyhow::bail!("node {addr} rejected the exchange plan: {error}");
+                }
+                Ok(MsgRecv::Msg(other, _)) => {
+                    anyhow::bail!("protocol violation from node {addr}: unexpected {other:?}");
+                }
+                Ok(MsgRecv::Idle) => {
+                    if start.elapsed() > self.rpc_timeout {
+                        node.mark_dead();
+                        anyhow::bail!(
+                            "node {addr} did not acknowledge the exchange plan within {:?}",
+                            self.rpc_timeout
+                        );
+                    }
+                }
+                Ok(MsgRecv::Eof) | Err(_) => {
+                    node.mark_dead();
+                    anyhow::bail!("node {addr} lost during the plan handshake");
+                }
+            }
+        }
+    }
+
+    /// Wait for one node's `PlanDone` (or `PlanErr`) and fold its tiles
+    /// and stats into the evolution result.
+    fn wait_plan_done(
+        &mut self,
+        ni: usize,
+        epoch: u64,
+        part: &Partition,
+        out_tiles: &mut [Option<DenseGrid>],
+        stats: &mut PlanStats,
+        report: &mut ClusterReport,
+    ) -> anyhow::Result<()> {
+        let start = Instant::now();
+        let addr = self.nodes[ni].addr;
+        // a healthy node may block one full band timeout on a lost peer
+        // before it can report PlanErr — give it that long on top of the
+        // usual reply budget, or the coordinator would declare survivors
+        // dead moments before their failure reports arrive and leave the
+        // mediated fallback with no fleet to run on
+        let deadline = self.rpc_timeout + self.band_timeout();
+        loop {
+            let node = &mut self.nodes[ni];
+            let Some(stream) = node.stream.as_mut() else {
+                anyhow::bail!("node {addr} died mid-exchange")
+            };
+            match proto::recv_msg(stream, Duration::from_secs(10)) {
+                Ok(MsgRecv::Msg(Msg::PlanDone(done), n)) if done.epoch == epoch => {
+                    report.bytes_recv += n;
+                    self.bytes_recv.add(n as u64);
+                    for (shard, tile) in done.tiles {
+                        let s = shard as usize;
+                        anyhow::ensure!(
+                            s < out_tiles.len(),
+                            "node {addr} returned unknown shard {s}"
+                        );
+                        anyhow::ensure!(
+                            out_tiles[s].is_none(),
+                            "node {addr} returned shard {s} twice"
+                        );
+                        let want = part.tile_shape(s);
+                        anyhow::ensure!(
+                            tile.shape == want,
+                            "node {addr} returned tile shape {:?} for shard {s} (expected {want:?})",
+                            tile.shape
+                        );
+                        out_tiles[s] = Some(tile);
+                        node.chunks.inc();
+                    }
+                    stats.rounds = stats.rounds.max(done.stats.rounds);
+                    stats.bands_sent += done.stats.bands_sent;
+                    stats.band_bytes_sent += done.stats.band_bytes_sent;
+                    stats.band_bytes_recv += done.stats.band_bytes_recv;
+                    stats.exchange_hidden_seconds += done.stats.exchange_hidden_seconds;
+                    stats.exchange_visible_seconds += done.stats.exchange_visible_seconds;
+                    stats.compute_seconds += done.stats.compute_seconds;
+                    return Ok(());
+                }
+                Ok(MsgRecv::Msg(Msg::PlanErr { error, .. }, _)) => {
+                    anyhow::bail!("node {addr} failed the exchange plan: {error}");
+                }
+                Ok(MsgRecv::Msg(other, _)) => {
+                    anyhow::bail!("protocol violation from node {addr}: unexpected {other:?}");
+                }
+                Ok(MsgRecv::Idle) => {
+                    if start.elapsed() > deadline {
+                        node.mark_dead();
+                        anyhow::bail!(
+                            "node {addr} did not finish the exchange plan within {deadline:?}"
+                        );
+                    }
+                }
+                Ok(MsgRecv::Eof) | Err(_) => {
+                    node.mark_dead();
+                    anyhow::bail!("node {addr} lost mid-exchange");
+                }
+            }
+        }
     }
 
     /// One chunk round: evolve every tile by `chunk` fused steps on the

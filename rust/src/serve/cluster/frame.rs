@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"STCF"
-//! 4       2     protocol version, little-endian (currently 1)
+//! 4       2     protocol version, little-endian (currently 2)
 //! 6       2     message kind, little-endian (see `proto::Msg`)
 //! 8       4     payload length in bytes, little-endian
 //! 12      len   payload
@@ -31,7 +31,10 @@ use std::time::{Duration, Instant};
 /// Frame magic: every frame starts with these four bytes.
 pub const MAGIC: [u8; 4] = *b"STCF";
 /// Protocol version carried in (and required of) every frame header.
-pub const VERSION: u16 = 1;
+/// History: 1 = PR 9 coordinator-mediated protocol (kinds 1–7);
+/// 2 = peer-to-peer halo exchange (kinds 8–14: exchange plans and
+/// `HaloPush`/`HaloAck` band frames).
+pub const VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 12;
 /// Hard cap on payload length. Large enough for any grid this repo
@@ -39,6 +42,29 @@ pub const HEADER_LEN: usize = 12;
 /// tiles are slabs of much smaller serving grids), small enough that a
 /// corrupt or hostile length field cannot drive an allocation.
 pub const MAX_FRAME_LEN: usize = 256 * 1024 * 1024;
+
+/// A peer spoke a different protocol version. Typed (rather than a
+/// plain message) so the coordinator's connect handshake can surface a
+/// version skew as its own clear error instead of a generic
+/// dead-node/decode failure — see `Coordinator::connect`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VersionMismatch {
+    /// The version the peer's frame header carried.
+    pub theirs: u16,
+}
+
+impl std::fmt::Display for VersionMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unsupported protocol version {} (this build speaks version {VERSION}); \
+             coordinator and nodes must run the same build",
+            self.theirs
+        )
+    }
+}
+
+impl std::error::Error for VersionMismatch {}
 
 /// A validated frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,10 +100,9 @@ pub fn decode_header(h: &[u8; HEADER_LEN]) -> anyhow::Result<FrameHeader> {
         MAGIC
     );
     let version = u16::from_le_bytes([h[4], h[5]]);
-    anyhow::ensure!(
-        version == VERSION,
-        "unsupported protocol version {version} (this build speaks version {VERSION})"
-    );
+    if version != VERSION {
+        return Err(anyhow::Error::new(VersionMismatch { theirs: version }));
+    }
     let kind = u16::from_le_bytes([h[6], h[7]]);
     let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
     anyhow::ensure!(
@@ -225,6 +250,20 @@ mod tests {
         assert!(err.contains("oversized"), "{err}");
 
         assert!(encode_header(1, MAX_FRAME_LEN + 1).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_a_typed_error() {
+        // a version-1 (PR 9) peer against this version-2 build: the
+        // error is downcastable so handshakes can tell skew from noise,
+        // and the message says what to do about it
+        let mut h = encode_header(1, 8).unwrap();
+        h[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let err = decode_header(&h).unwrap_err();
+        let vm = err.downcast_ref::<VersionMismatch>().expect("typed version error");
+        assert_eq!(vm.theirs, 1);
+        assert!(err.to_string().contains("unsupported protocol version 1"), "{err}");
+        assert!(err.to_string().contains("must run the same build"), "{err}");
     }
 
     #[test]

@@ -8,32 +8,45 @@
 //!   (magic `STCF`, version, kind, length). The decoder rejects bad
 //!   magic, wrong versions, oversized lengths, and truncated/stalled
 //!   frames with clean errors instead of blocking.
-//! - [`proto`] — the seven protocol messages and their codec. Grid data
-//!   travels as f64 **bit patterns**, so the wire never costs a ulp.
+//! - [`proto`] — the protocol messages and their codec: the mediated
+//!   chunk RPCs (kinds 1–7, protocol v1) plus the peer-exchange plan
+//!   handshake and `HaloPush`/`HaloAck` band frames (kinds 8–14,
+//!   protocol v2). Grid data travels as f64 **bit patterns**, so the
+//!   wire never costs a ulp.
 //! - [`node`] — a worker: accept loop + the existing
 //!   [`ShardedEvolver`](crate::serve::ShardedEvolver) doing the actual
 //!   stencil math.
-//! - [`coordinator`] — slab placement, fused T-step rounds,
-//!   coordinator-mediated `order·T`-deep halo exchange once per T
-//!   steps, node health checks, and re-placement on node loss.
+//! - [`peer`] — node-side peer-to-peer halo exchange: band staging,
+//!   outbound peer links with an ack barrier, and the overlapped
+//!   interior/boundary round loop.
+//! - [`coordinator`] — slab placement, node health checks, and the two
+//!   data paths: **peer** (distribute one exchange plan, nodes trade
+//!   `order·T`-deep bands directly, overlapped with compute) and
+//!   **mediated** (tiles round-trip through the coordinator each fused
+//!   round; also the automatic fallback when a peer plan fails).
 //!
 //! **The contract:** a fleet evolution is bitwise identical to the
 //! single-process sharded evolver (and therefore, for the oracle/taps
-//! kernels, to the scalar oracle). The coordinator reuses the very
-//! same [`Partition`](crate::serve::Partition) / halo-exchange /
-//! assembly code the in-process path runs; nodes reuse the very same
-//! evolver. Nothing is approximated in transit.
+//! kernels, to the scalar oracle) — on *either* data path. The
+//! coordinator reuses the very same
+//! [`Partition`](crate::serve::Partition) / halo-exchange / assembly
+//! code the in-process path runs; nodes reuse the very same evolver;
+//! peer bands carry exactly the rows the serial exchange would copy.
+//! Nothing is approximated in transit.
 //!
 //! Observability: `stencil_cluster_*` metric families (per-node chunk
 //! counters, liveness gauges, replacement counter, byte counters, an
-//! RPC latency histogram) plus `cluster.round` / `cluster.rpc` /
-//! `cluster.exchange` spans — see the taxonomy in [`crate::obs`].
+//! RPC latency histogram, per-path exchange histograms and wire-byte
+//! counters, an overlap-ratio gauge, a peer-fallback counter) plus
+//! `cluster.round` / `cluster.rpc` / `cluster.exchange` /
+//! `cluster.peer_exchange` spans — see the taxonomy in [`crate::obs`].
 
 pub mod coordinator;
 pub mod frame;
 pub mod node;
+pub mod peer;
 pub mod proto;
 
-pub use coordinator::{ClusterReport, Coordinator, DEFAULT_RPC_TIMEOUT};
+pub use coordinator::{ClusterReport, Coordinator, ExchangeMode, DEFAULT_RPC_TIMEOUT};
 pub use node::{spawn_local, NodeConfig, NodeHandle};
 pub use proto::{Msg, NodeStatus};

@@ -19,7 +19,8 @@
 //! dim ≤ 2·order) are identity copies, mirroring
 //! [`crate::serve::CompiledPlan::apply`].
 
-use super::proto::{self, ChunkReply, Msg, MsgRecv, NodeStatus};
+use super::peer;
+use super::proto::{self, ChunkReply, Msg, MsgRecv, NodeStatus, PlanDoneMsg, PlanRequest};
 use crate::kir::Engine;
 use crate::obs::registry;
 use crate::serve::scheduler::ShardedEvolver;
@@ -43,7 +44,8 @@ pub struct NodeConfig {
     /// Host engine for KIR shard kernels.
     pub engine: Engine,
     /// Fault injection for tests and smoke runs: after serving this many
-    /// chunks the node drops the connection without replying and stops
+    /// chunks (mediated path) or fused rounds of a peer plan (peer
+    /// path), the node drops the connection without replying and stops
     /// accepting — simulating a node lost mid-evolution.
     pub fail_after: Option<usize>,
 }
@@ -168,12 +170,16 @@ fn handle_conn(mut stream: TcpStream, state: &NodeState) {
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_nodelay(true);
     let frame_deadline = Duration::from_secs(10);
+    // an exchange plan parks here between EvolvePlan and PlanStart; the
+    // staging guard keeps band staging registered (and deregisters it if
+    // the connection dies before the plan runs)
+    let mut pending: Option<(PlanRequest, peer::StagingGuard)> = None;
     loop {
         if state.stop.load(Ordering::SeqCst) {
             return;
         }
-        let msg = match proto::recv_msg(&mut stream, frame_deadline) {
-            Ok(MsgRecv::Msg(msg, _)) => msg,
+        let (msg, wire) = match proto::recv_msg(&mut stream, frame_deadline) {
+            Ok(MsgRecv::Msg(msg, n)) => (msg, n),
             Ok(MsgRecv::Idle) => continue,
             Ok(MsgRecv::Eof) | Err(_) => return,
         };
@@ -216,9 +222,99 @@ fn handle_conn(mut stream: TcpStream, state: &NodeState) {
                 state.stop.store(true, Ordering::SeqCst);
                 return;
             }
+            Msg::EvolvePlan(req) => {
+                let epoch = req.plan.epoch;
+                if req.plan.engine != state.evolver.cache().engine() {
+                    let err = Msg::PlanErr {
+                        epoch,
+                        error: format!(
+                            "engine mismatch: plan wants {}, node compiles {}",
+                            req.plan.engine,
+                            state.evolver.cache().engine()
+                        ),
+                    };
+                    if proto::send_msg(&mut stream, &err).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                // register staging *before* PlanReady goes out, so no
+                // peer's band can beat the registration
+                let guard = peer::register(epoch);
+                pending = Some((req, guard));
+                if proto::send_msg(&mut stream, &Msg::PlanReady { epoch }).is_err() {
+                    return;
+                }
+            }
+            Msg::PlanStart { epoch } => {
+                // PlanStart without a matching parked plan is a protocol
+                // violation — drop the connection
+                let Some((req, guard)) = pending.take() else { return };
+                if req.plan.epoch != epoch {
+                    return;
+                }
+                let shards = match (req.plan.local_shards, state.cfg.shards) {
+                    (0, 0) => state.evolver.pool().workers(),
+                    (0, s) => s,
+                    (s, _) => s,
+                };
+                let result = peer::run_plan(
+                    &state.evolver,
+                    shards,
+                    &req,
+                    guard.staging(),
+                    &state.stop,
+                    state.cfg.fail_after,
+                );
+                drop(guard);
+                match result {
+                    Ok((tiles, stats)) => {
+                        let evolved = tiles.len() as u64 * stats.rounds;
+                        state.chunks_served.fetch_add(evolved, Ordering::Relaxed);
+                        state.chunks_total.add(evolved);
+                        let done = Msg::PlanDone(PlanDoneMsg { epoch, tiles, stats });
+                        if proto::send_msg(&mut stream, &done).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        if state.stop.load(Ordering::SeqCst) {
+                            // killed (shutdown or fault injection): go
+                            // silent like a dead process — the
+                            // coordinator sees EOF, not a clean error
+                            return;
+                        }
+                        let err = Msg::PlanErr { epoch, error: format!("{e:#}") };
+                        if proto::send_msg(&mut stream, &err).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            Msg::HaloPush(band) => {
+                let ack = Msg::HaloAck {
+                    epoch: band.epoch,
+                    round: band.round,
+                    shard: band.shard,
+                    side: band.side,
+                };
+                // bands for unknown epochs (stale or failed plans) are
+                // dropped; the sender's plan fails via band timeouts
+                peer::deposit(band, wire as u64);
+                if proto::send_msg(&mut stream, &ack).is_err() {
+                    return;
+                }
+            }
             // node-bound protocol only; a peer sending coordinator-bound
-            // messages is confused — drop it
-            Msg::Pong(_) | Msg::ChunkOk(_) | Msg::ChunkErr { .. } | Msg::ShutdownAck => return,
+            // (or ack-channel) messages is confused — drop it
+            Msg::Pong(_)
+            | Msg::ChunkOk(_)
+            | Msg::ChunkErr { .. }
+            | Msg::ShutdownAck
+            | Msg::PlanReady { .. }
+            | Msg::PlanDone(_)
+            | Msg::PlanErr { .. }
+            | Msg::HaloAck { .. } => return,
         }
     }
 }

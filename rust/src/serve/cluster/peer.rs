@@ -1,0 +1,631 @@
+//! Node-side peer-to-peer halo exchange with compute/communication
+//! overlap — the steady-state data path of the fleet.
+//!
+//! After the coordinator distributes an exchange plan
+//! ([`proto::ExchangePlan`]) and every node acknowledges with
+//! `PlanReady` — so band staging is registered before any band can
+//! arrive — each node runs every fused round locally:
+//!
+//! 1. at the end of round `k`, extract the `order·T`-deep boundary
+//!    bands from the freshly computed owned rows and enqueue them on the
+//!    peer links (or deposit them straight into local staging when the
+//!    neighbour shard is co-located) — the link threads put them on the
+//!    wire while the node moves on;
+//! 2. at round `k + 1`, first compute the slab **interior** (a sub-grid
+//!    of exactly the owned rows) while the bands are in flight;
+//! 3. then wait for the expected bands, apply them to the ghost rows,
+//!    and finish the two boundary regions with small sub-grid evolves.
+//!
+//! **Bitwise contract.** Every sub-evolve here is the same
+//! [`ShardedEvolver::evolve_fused`] call the mediated path makes, and a
+//! sub-grid evolution is bitwise identical to the full-tile evolution
+//! for every output row whose dependency cone (depth `order·chunk`)
+//! avoids the sub-grid's cut edges — rows nearer a cut edge are
+//! recomputed by the boundary sub-evolves, whose cones stay inside the
+//! fresh ghost rows plus pre-round owned rows. Where a sub-grid edge
+//! coincides with a *global* edge the frozen-boundary band coincides
+//! too, so validity extends to the edge. The union of the three valid
+//! regions is exactly the owned rows, so each round's owned rows equal
+//! the mediated path's bitwise; ghost rows are refreshed from the same
+//! band contents the serial exchange copies ([`halo::extract_band`] /
+//! [`halo::apply_band`] are shared by both paths). Tiles too short for
+//! the split (`rows < 2·order·chunk`) fall back to wait-then-evolve —
+//! still peer exchange, just no overlap for that shard.
+
+use super::proto::{self, BandSide, HaloBand, Msg, MsgRecv, PlanRequest, PlanStats};
+use crate::obs::span::span;
+use crate::serve::halo;
+use crate::serve::partition::Partition;
+use crate::serve::scheduler::ShardedEvolver;
+use crate::stencil::DenseGrid;
+use std::collections::HashMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Band payloads (data, arrival instant, wire bytes) keyed by
+/// (round, destination shard, side).
+type StagedBands = HashMap<(u64, u64, BandSide), (Vec<f64>, Instant, u64)>;
+
+/// One node's staging area for bands arriving for one plan epoch.
+/// Connection threads deposit, the plan runner takes; a [`Condvar`]
+/// wakes waiters the moment their band lands.
+pub struct BandStaging {
+    inner: Mutex<StagedBands>,
+    cv: Condvar,
+}
+
+impl BandStaging {
+    fn new() -> BandStaging {
+        BandStaging { inner: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Deposit a band (keyed by round, destination shard, and side) with
+    /// its wire size; zero bytes for locally deposited bands.
+    pub fn deposit(&self, round: u64, shard: u64, side: BandSide, data: Vec<f64>, wire: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.insert((round, shard, side), (data, Instant::now(), wire));
+        self.cv.notify_all();
+    }
+
+    /// Take one band, blocking until it arrives or `deadline` passes.
+    /// Returns the band data, its arrival instant, and its wire bytes.
+    fn take(
+        &self,
+        round: u64,
+        shard: u64,
+        side: BandSide,
+        deadline: Instant,
+    ) -> anyhow::Result<(Vec<f64>, Instant, u64)> {
+        let mut m = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = m.remove(&(round, shard, side)) {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "timed out waiting for halo band (round {round}, shard {shard}, {side:?}): \
+                 peer node lost or stalled"
+            );
+            let (guard, _) = self.cv.wait_timeout(m, deadline - now).unwrap();
+            m = guard;
+        }
+    }
+}
+
+fn staging_registry() -> &'static Mutex<HashMap<u64, Arc<BandStaging>>> {
+    static R: OnceLock<Mutex<HashMap<u64, Arc<BandStaging>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Keeps one epoch's staging registered; deregisters on drop so a
+/// failed or finished plan cannot leak staged bands.
+pub struct StagingGuard {
+    epoch: u64,
+    staging: Arc<BandStaging>,
+}
+
+impl StagingGuard {
+    /// The staging area this guard keeps registered.
+    pub fn staging(&self) -> &Arc<BandStaging> {
+        &self.staging
+    }
+}
+
+impl Drop for StagingGuard {
+    fn drop(&mut self) {
+        staging_registry().lock().unwrap().remove(&self.epoch);
+    }
+}
+
+/// Register staging for a plan epoch — must happen *before* `PlanReady`
+/// is sent, so no peer's band can arrive unregistered.
+pub fn register(epoch: u64) -> StagingGuard {
+    let staging = Arc::new(BandStaging::new());
+    staging_registry().lock().unwrap().insert(epoch, Arc::clone(&staging));
+    StagingGuard { epoch, staging }
+}
+
+/// Deposit an incoming band into its epoch's staging. Returns false when
+/// the epoch is unknown (stale or failed plan) — the band is dropped and
+/// failure propagates through the sender's plan via band-wait timeouts.
+pub fn deposit(band: HaloBand, wire: u64) -> bool {
+    let staging = staging_registry().lock().unwrap().get(&band.epoch).cloned();
+    match staging {
+        Some(s) => {
+            s.deposit(band.round, band.shard, band.side, band.data, wire);
+            true
+        }
+        None => false,
+    }
+}
+
+/// One outbound connection to a peer node: a sender thread drains an
+/// unbounded queue of bands onto the wire (so enqueueing never blocks
+/// the compute loop) and counts `HaloAck`s back; at shutdown it holds an
+/// ack barrier so the link only reports clean once every pushed band was
+/// acknowledged.
+struct PeerLink {
+    tx: Option<mpsc::Sender<HaloBand>>,
+    handle: Option<JoinHandle<(u64, u64)>>,
+    error: Arc<Mutex<Option<String>>>,
+    addr: String,
+}
+
+impl PeerLink {
+    fn connect(addr: &str, ack_deadline: Duration) -> anyhow::Result<PeerLink> {
+        let sock = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow::anyhow!("bad peer address '{addr}': {e}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("peer address '{addr}' resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&sock, Duration::from_secs(5))
+            .map_err(|e| anyhow::anyhow!("cannot connect to peer node {addr}: {e}"))?;
+        stream.set_read_timeout(Some(Duration::from_millis(5)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        let error = Arc::new(Mutex::new(None));
+        let err = Arc::clone(&error);
+        let (tx, rx) = mpsc::channel::<HaloBand>();
+        let handle = std::thread::Builder::new()
+            .name("stencil-cluster-peer".to_string())
+            .spawn(move || link_thread(stream, rx, err, ack_deadline))
+            .map_err(|e| anyhow::anyhow!("failed to spawn peer link thread: {e}"))?;
+        Ok(PeerLink { tx: Some(tx), handle: Some(handle), error, addr: addr.to_string() })
+    }
+
+    fn push(&self, band: HaloBand) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(band);
+        }
+    }
+
+    fn error(&self) -> Option<String> {
+        self.error.lock().unwrap().clone()
+    }
+
+    /// Close the queue, wait for the ack barrier, and return
+    /// (bands pushed, wire bytes) — or the link's error.
+    fn finish(mut self) -> anyhow::Result<(u64, u64)> {
+        self.tx = None;
+        let handle = self.handle.take().expect("peer link finished twice");
+        let counts = handle.join().map_err(|_| anyhow::anyhow!("peer link thread panicked"))?;
+        if let Some(e) = self.error.lock().unwrap().clone() {
+            anyhow::bail!("peer link to {}: {e}", self.addr);
+        }
+        Ok(counts)
+    }
+}
+
+impl Drop for PeerLink {
+    fn drop(&mut self) {
+        // close the queue; the link thread exits on its own (bounded by
+        // the ack deadline), so an erroring plan never blocks here
+        self.tx = None;
+    }
+}
+
+fn link_thread(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<HaloBand>,
+    error: Arc<Mutex<Option<String>>>,
+    ack_deadline: Duration,
+) -> (u64, u64) {
+    let mut pending_acks: u64 = 0;
+    let mut bands: u64 = 0;
+    let mut bytes: u64 = 0;
+    let fail = |e: String| {
+        let mut g = error.lock().unwrap();
+        if g.is_none() {
+            *g = Some(e);
+        }
+    };
+    loop {
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(band) => match proto::send_msg(&mut stream, &Msg::HaloPush(band)) {
+                Ok(n) => {
+                    bands += 1;
+                    bytes += n as u64;
+                    pending_acks += 1;
+                }
+                Err(e) => {
+                    fail(format!("halo push failed: {e}"));
+                    return (bands, bytes);
+                }
+            },
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        if !drain_acks(&mut stream, &mut pending_acks, &fail) {
+            return (bands, bytes);
+        }
+    }
+    // queue closed: ack barrier so "done" means "delivered"
+    let deadline = Instant::now() + ack_deadline;
+    while pending_acks > 0 {
+        if Instant::now() > deadline {
+            fail(format!("timed out waiting for {pending_acks} halo ack(s)"));
+            break;
+        }
+        if !drain_acks(&mut stream, &mut pending_acks, &fail) {
+            break;
+        }
+    }
+    (bands, bytes)
+}
+
+/// Drain whatever acks are buffered on the link; false on a link error.
+fn drain_acks(
+    stream: &mut TcpStream,
+    pending: &mut u64,
+    fail: &impl Fn(String),
+) -> bool {
+    loop {
+        match proto::recv_msg(stream, Duration::from_secs(10)) {
+            Ok(MsgRecv::Msg(Msg::HaloAck { .. }, _)) => *pending = pending.saturating_sub(1),
+            Ok(MsgRecv::Idle) => return true,
+            Ok(MsgRecv::Eof) => {
+                fail("peer closed the link".to_string());
+                return false;
+            }
+            Ok(MsgRecv::Msg(other, _)) => {
+                fail(format!("protocol violation on peer link: unexpected {other:?}"));
+                return false;
+            }
+            Err(e) => {
+                fail(format!("peer link read failed: {e}"));
+                return false;
+            }
+        }
+    }
+}
+
+/// Rows `[a, b)` of `tile` as a standalone sub-grid.
+fn sub_rows(tile: &DenseGrid, a: usize, b: usize, rest: usize) -> DenseGrid {
+    let mut shape = tile.shape.clone();
+    shape[0] = b - a;
+    DenseGrid { shape, data: tile.data[a * rest..b * rest].to_vec() }
+}
+
+/// Copy `count` rows from `src` (starting `src_row`) into `dst`
+/// (starting `dst_row`).
+fn copy_rows(
+    dst: &mut DenseGrid,
+    dst_row: usize,
+    src: &DenseGrid,
+    src_row: usize,
+    count: usize,
+    rest: usize,
+) {
+    dst.data[dst_row * rest..(dst_row + count) * rest]
+        .copy_from_slice(&src.data[src_row * rest..(src_row + count) * rest]);
+}
+
+/// The same per-tile evolution the mediated path runs node-side:
+/// degenerate tiles are identity, everything else goes through the
+/// sharded evolver (bitwise independent of the shard count).
+fn evolve_local(
+    evolver: &ShardedEvolver,
+    req: &PlanRequest,
+    shards: usize,
+    grid: &DenseGrid,
+    chunk: usize,
+) -> anyhow::Result<DenseGrid> {
+    let r = req.plan.spec.order;
+    if grid.shape.iter().any(|&n| n <= 2 * r) {
+        return Ok(grid.clone());
+    }
+    let (out, _, _) =
+        evolver.evolve_fused(req.plan.spec, grid, chunk, shards, req.plan.method, chunk.max(1))?;
+    Ok(out)
+}
+
+/// Extract round-`round` outgoing bands from every local tile and route
+/// them: straight into local staging for co-located neighbours, onto the
+/// peer links otherwise. Returns the number of remote pushes enqueued.
+#[allow(clippy::too_many_arguments)]
+fn push_bands(
+    part: &Partition,
+    req: &PlanRequest,
+    mine: &[(usize, DenseGrid)],
+    links: &HashMap<usize, PeerLink>,
+    staging: &BandStaging,
+    rest: usize,
+    round: u64,
+    stats: &mut PlanStats,
+) {
+    let plan = &req.plan;
+    let mut route = |dest: usize, side: BandSide, data: Vec<f64>| {
+        let owner = plan.owners[dest];
+        if owner == plan.self_node {
+            staging.deposit(round, dest as u64, side, data, 0);
+        } else {
+            stats.bands_sent += 1;
+            if let Some(link) = links.get(&owner) {
+                link.push(HaloBand {
+                    epoch: plan.epoch,
+                    round,
+                    shard: dest as u64,
+                    side,
+                    data,
+                });
+            }
+        }
+    };
+    for (s, tile) in mine {
+        if let Some(band) = halo::outgoing_band_to_lower(part, *s) {
+            route(*s - 1, BandSide::FromUpper, halo::extract_band(tile, band, rest));
+        }
+        if let Some(band) = halo::outgoing_band_to_upper(part, *s) {
+            route(*s + 1, BandSide::FromLower, halo::extract_band(tile, band, rest));
+        }
+    }
+}
+
+/// Run every fused round of one exchange plan on this node. Returns the
+/// evolved tiles (same shards and shapes as assigned) plus the node's
+/// exchange accounting. `fail_after_rounds` is the node's fault
+/// injection: at that round index the node sets `stop` and errors out,
+/// simulating a node killed mid-exchange (the caller closes the
+/// connection without replying).
+pub fn run_plan(
+    evolver: &ShardedEvolver,
+    local_shards: usize,
+    req: &PlanRequest,
+    staging: &Arc<BandStaging>,
+    stop: &AtomicBool,
+    fail_after_rounds: Option<usize>,
+) -> anyhow::Result<(Vec<(u64, DenseGrid)>, PlanStats)> {
+    let plan = &req.plan;
+    let part = &plan.part;
+    let rest = part.row_elems();
+    let n_shards = part.len();
+    let order = plan.spec.order;
+    anyhow::ensure!(plan.steps >= 1 && plan.fuse >= 1, "plan with no steps");
+    anyhow::ensure!(
+        part.halo == order * plan.fuse,
+        "plan halo {} does not match order {} × fuse {}",
+        part.halo,
+        order,
+        plan.fuse
+    );
+    let mut mine: Vec<(usize, DenseGrid)> = Vec::with_capacity(req.tiles.len());
+    for (shard, tile) in &req.tiles {
+        let s = *shard as usize;
+        anyhow::ensure!(s < n_shards, "assigned shard {s} out of range for {n_shards} slab(s)");
+        anyhow::ensure!(
+            tile.shape == part.tile_shape(s),
+            "assigned tile {s} shape {:?} does not match partition {:?}",
+            tile.shape,
+            part.tile_shape(s)
+        );
+        mine.push((s, tile.clone()));
+    }
+    let band_timeout = Duration::from_millis(plan.band_timeout_ms.max(1));
+
+    // one link per distinct remote neighbour-owning node
+    let mut links: HashMap<usize, PeerLink> = HashMap::new();
+    for (s, _) in &mine {
+        for nb in [s.checked_sub(1), Some(s + 1)].into_iter().flatten() {
+            if nb >= n_shards {
+                continue;
+            }
+            let owner = plan.owners[nb];
+            if owner != plan.self_node && !links.contains_key(&owner) {
+                links.insert(owner, PeerLink::connect(&plan.peers[owner], band_timeout)?);
+            }
+        }
+    }
+
+    let total_rounds = plan.steps.div_ceil(plan.fuse);
+    let mut stats = PlanStats::default();
+    let mut remaining = plan.steps;
+    let mut sends_done = Instant::now();
+    for round in 0..total_rounds {
+        anyhow::ensure!(!stop.load(Ordering::SeqCst), "node stopping mid-plan");
+        if let Some(limit) = fail_after_rounds {
+            if round >= limit {
+                stop.store(true, Ordering::SeqCst);
+                anyhow::bail!("fault injection: node killed before round {round}");
+            }
+        }
+        for link in links.values() {
+            if let Some(e) = link.error() {
+                anyhow::bail!("peer link failed: {e}");
+            }
+        }
+        let chunk = plan.fuse.min(remaining);
+        let h = order * chunk;
+
+        if round == 0 {
+            // fresh ghosts straight from extraction: plain full-tile
+            // evolve, exactly one mediated round
+            let t0 = Instant::now();
+            for (_, tile) in mine.iter_mut() {
+                *tile = evolve_local(evolver, req, local_shards, tile, chunk)?;
+            }
+            stats.compute_seconds += t0.elapsed().as_secs_f64();
+        } else {
+            // interior first, while round-(k-1) bands are in flight
+            let interior_start = Instant::now();
+            let mut interiors: Vec<Option<(DenseGrid, usize, usize)>> = Vec::new();
+            for (s, cur) in mine.iter() {
+                let slab = part.slabs[*s];
+                let rows = slab.rows();
+                let degenerate = cur.shape.iter().any(|&n| n <= 2 * order);
+                let split = !degenerate && rows >= 2 * h;
+                if !split {
+                    interiors.push(None);
+                    continue;
+                }
+                let sub = sub_rows(cur, slab.ghost_lo, slab.ghost_lo + rows, rest);
+                let evolved = evolve_local(evolver, req, local_shards, &sub, chunk)?;
+                // valid sub-local rows: depth-h cones must avoid a cut
+                // edge; a coincident global edge is not a cut
+                let lo_v = if slab.ghost_lo > 0 { h } else { 0 };
+                let hi_v = if slab.ghost_hi > 0 { rows - h } else { rows };
+                interiors.push(Some((evolved, lo_v, hi_v)));
+            }
+            let interior_end = Instant::now();
+            stats.compute_seconds += (interior_end - interior_start).as_secs_f64();
+
+            // wait for the bands, refresh ghosts, finish the boundaries
+            let _g = span("cluster.peer_exchange", "cluster");
+            let mut last_arrival: Option<Instant> = None;
+            let mut wait_s = 0.0;
+            let mut visible_s = 0.0;
+            for (i, (s, cur)) in mine.iter_mut().enumerate() {
+                let deadline = Instant::now() + band_timeout;
+                let t0 = Instant::now();
+                for (side, band) in [
+                    (BandSide::FromLower, halo::incoming_band_from_lower(part, *s)),
+                    (BandSide::FromUpper, halo::incoming_band_from_upper(part, *s)),
+                ] {
+                    let Some(band) = band else { continue };
+                    let w0 = Instant::now();
+                    let (data, arrived, wire) =
+                        staging.take((round - 1) as u64, *s as u64, side, deadline)?;
+                    wait_s += w0.elapsed().as_secs_f64();
+                    anyhow::ensure!(
+                        data.len() == band.count * rest,
+                        "halo band for shard {s} has {} value(s), expected {}",
+                        data.len(),
+                        band.count * rest
+                    );
+                    stats.band_bytes_recv += wire;
+                    if wire > 0 {
+                        last_arrival =
+                            Some(last_arrival.map_or(arrived, |a: Instant| a.max(arrived)));
+                    }
+                    halo::apply_band(cur, band, rest, &data);
+                }
+                visible_s += t0.elapsed().as_secs_f64();
+
+                // boundary regions from fresh ghosts + pre-round rows
+                let slab = part.slabs[*s];
+                let rows = slab.rows();
+                let c0 = Instant::now();
+                match interiors[i].take() {
+                    Some((evolved, lo_v, hi_v)) => {
+                        let mut next = cur.clone();
+                        if hi_v > lo_v {
+                            copy_rows(
+                                &mut next,
+                                slab.ghost_lo + lo_v,
+                                &evolved,
+                                lo_v,
+                                hi_v - lo_v,
+                                rest,
+                            );
+                        }
+                        if slab.ghost_lo > 0 {
+                            let sub = sub_rows(cur, 0, slab.ghost_lo + 2 * h, rest);
+                            let ev = evolve_local(evolver, req, local_shards, &sub, chunk)?;
+                            copy_rows(&mut next, slab.ghost_lo, &ev, slab.ghost_lo, h, rest);
+                        }
+                        if slab.ghost_hi > 0 {
+                            let base = slab.ghost_lo + rows - 2 * h;
+                            let sub = sub_rows(cur, base, slab.tile_rows(), rest);
+                            let ev = evolve_local(evolver, req, local_shards, &sub, chunk)?;
+                            copy_rows(&mut next, slab.ghost_lo + rows - h, &ev, h, h, rest);
+                        }
+                        *cur = next;
+                    }
+                    // too short to split: ghosts are fresh now, evolve
+                    // the whole tile (no overlap for this shard)
+                    None => *cur = evolve_local(evolver, req, local_shards, cur, chunk)?,
+                }
+                stats.compute_seconds += c0.elapsed().as_secs_f64();
+            }
+            // hidden = band flight time not spent blocked; visible =
+            // extraction + waits + application
+            let flight = last_arrival
+                .map(|a| a.saturating_duration_since(sends_done).as_secs_f64())
+                .unwrap_or(0.0);
+            stats.exchange_hidden_seconds += (flight - wait_s).max(0.0);
+            stats.exchange_visible_seconds += visible_s;
+        }
+
+        remaining -= chunk;
+        stats.rounds += 1;
+        if remaining > 0 && n_shards > 1 {
+            let t0 = Instant::now();
+            push_bands(part, req, &mine, &links, staging, rest, round as u64, &mut stats);
+            sends_done = Instant::now();
+            stats.exchange_visible_seconds += (sends_done - t0).as_secs_f64();
+        }
+    }
+
+    // ack barrier: every pushed band must be delivered before we report
+    // done (a lost peer surfaces here even if our own waits all passed)
+    for (_, link) in links.drain() {
+        let (_, bytes) = link.finish()?;
+        stats.band_bytes_sent += bytes;
+    }
+    Ok((mine.into_iter().map(|(s, t)| (s as u64, t)).collect(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staging_take_blocks_until_deposit_and_times_out() {
+        let guard = register(42);
+        let staging = Arc::clone(guard.staging());
+        // timeout path
+        let err = staging
+            .take(0, 0, BandSide::FromLower, Instant::now() + Duration::from_millis(20))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timed out waiting for halo band"), "{err}");
+        // deposit from another thread unblocks a waiter
+        let s2 = Arc::clone(&staging);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            s2.deposit(3, 1, BandSide::FromUpper, vec![1.0, 2.0], 64);
+        });
+        let (data, _, wire) = staging
+            .take(3, 1, BandSide::FromUpper, Instant::now() + Duration::from_secs(5))
+            .unwrap();
+        t.join().unwrap();
+        assert_eq!(data, vec![1.0, 2.0]);
+        assert_eq!(wire, 64);
+    }
+
+    #[test]
+    fn deposit_routes_by_epoch_and_unknown_epochs_are_dropped() {
+        let band = |epoch| HaloBand {
+            epoch,
+            round: 0,
+            shard: 0,
+            side: BandSide::FromLower,
+            data: vec![5.0],
+        };
+        let guard = register(7);
+        assert!(deposit(band(7), 32));
+        assert!(!deposit(band(8), 32), "unknown epoch must be dropped");
+        let (data, _, _) = guard
+            .staging()
+            .take(0, 0, BandSide::FromLower, Instant::now() + Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(data, vec![5.0]);
+        drop(guard);
+        assert!(!deposit(band(7), 32), "deregistered epoch must be dropped");
+    }
+
+    #[test]
+    fn sub_rows_and_copy_rows_are_exact() {
+        let g = DenseGrid::verification_input(&[6, 4], 1);
+        let sub = sub_rows(&g, 2, 5, 4);
+        assert_eq!(sub.shape, vec![3, 4]);
+        assert_eq!(sub.data, g.data[8..20]);
+        let mut dst = DenseGrid::zeros(&[6, 4]);
+        copy_rows(&mut dst, 1, &sub, 0, 3, 4);
+        assert_eq!(dst.data[4..16], g.data[8..20]);
+        assert!(dst.data[..4].iter().all(|&v| v == 0.0));
+    }
+}

@@ -19,6 +19,20 @@
 //! | 5    | `ChunkErr`    | node → coordinator   | id + error string                |
 //! | 6    | `Shutdown`    | coordinator → node   | empty                            |
 //! | 7    | `ShutdownAck` | node → coordinator   | empty                            |
+//! | 8    | `EvolvePlan`  | coordinator → node   | [`PlanRequest`] (plan + tiles)   |
+//! | 9    | `PlanReady`   | node → coordinator   | epoch                            |
+//! | 10   | `PlanStart`   | coordinator → node   | epoch                            |
+//! | 11   | `PlanDone`    | node → coordinator   | [`PlanDoneMsg`] (tiles + stats)  |
+//! | 12   | `PlanErr`     | node → coordinator   | epoch + error string             |
+//! | 13   | `HaloPush`    | node → node          | [`HaloBand`] (one boundary band) |
+//! | 14   | `HaloAck`     | node → node          | band tags echoed                 |
+//!
+//! Kinds 8–14 (protocol version 2) carry the peer-to-peer exchange path:
+//! the coordinator distributes one [`ExchangePlan`] per evolution, waits
+//! for every node's `PlanReady` (so band staging is registered before any
+//! band can arrive), fires `PlanStart`, and nodes then run every fused
+//! round locally — pushing only the `order·T`-deep boundary bands to
+//! neighbour nodes while computing slab interiors.
 //!
 //! Versioning policy (see CONTRIBUTING.md): any change to these
 //! payloads or kinds bumps [`super::frame::VERSION`]; a node and
@@ -27,6 +41,7 @@
 
 use super::frame;
 use crate::kir::Engine;
+use crate::serve::partition::{Partition, Slab};
 use crate::serve::scheduler::KernelMethod;
 use crate::stencil::{DenseGrid, StencilKind, StencilSpec};
 use std::io::{Read, Write};
@@ -46,6 +61,20 @@ pub const KIND_CHUNK_ERR: u16 = 5;
 pub const KIND_SHUTDOWN: u16 = 6;
 /// See [`KIND_PING`].
 pub const KIND_SHUTDOWN_ACK: u16 = 7;
+/// See [`KIND_PING`].
+pub const KIND_EVOLVE_PLAN: u16 = 8;
+/// See [`KIND_PING`].
+pub const KIND_PLAN_READY: u16 = 9;
+/// See [`KIND_PING`].
+pub const KIND_PLAN_START: u16 = 10;
+/// See [`KIND_PING`].
+pub const KIND_PLAN_DONE: u16 = 11;
+/// See [`KIND_PING`].
+pub const KIND_PLAN_ERR: u16 = 12;
+/// See [`KIND_PING`].
+pub const KIND_HALO_PUSH: u16 = 13;
+/// See [`KIND_PING`].
+pub const KIND_HALO_ACK: u16 = 14;
 
 /// Append-only payload writer (little-endian throughout).
 #[derive(Default)]
@@ -271,6 +300,291 @@ pub struct ChunkReply {
     pub tile: DenseGrid,
 }
 
+/// Which side of the *receiving* shard a halo band fills.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BandSide {
+    /// The band fills the receiver's lower ghost rows (it was extracted
+    /// from the receiver's lower neighbour).
+    FromLower,
+    /// The band fills the receiver's upper ghost rows.
+    FromUpper,
+}
+
+impl BandSide {
+    fn to_u8(self) -> u8 {
+        match self {
+            BandSide::FromLower => 0,
+            BandSide::FromUpper => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> anyhow::Result<BandSide> {
+        match v {
+            0 => Ok(BandSide::FromLower),
+            1 => Ok(BandSide::FromUpper),
+            other => anyhow::bail!("unknown band side tag {other}"),
+        }
+    }
+}
+
+/// The per-evolution exchange plan the coordinator distributes once at
+/// placement time: everything a node needs to run every fused round
+/// locally and exchange halo bands directly with peer nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExchangePlan {
+    /// Unique id of this evolution; tags every band so frames from a
+    /// stale or concurrent plan can never be misapplied.
+    pub epoch: u64,
+    /// The stencil.
+    pub spec: StencilSpec,
+    /// Kernel flavour.
+    pub method: KernelMethod,
+    /// Host execution engine for KIR kernels.
+    pub engine: Engine,
+    /// Total time steps of the evolution.
+    pub steps: usize,
+    /// Fused steps per round `T` (the last round may be shorter); the
+    /// partition's halo is `order · T`.
+    pub fuse: usize,
+    /// Local shard hint for each node's in-process evolver (0 = let the
+    /// node decide). Results are bitwise independent of this value.
+    pub local_shards: usize,
+    /// How long a node waits for an expected band before declaring the
+    /// plan failed.
+    pub band_timeout_ms: u64,
+    /// The slab decomposition (identical on every node).
+    pub part: Partition,
+    /// Owning node index per shard (`owners[s]` indexes `peers`).
+    pub owners: Vec<usize>,
+    /// Peer listen address per node index (the same listeners the
+    /// coordinator dialed).
+    pub peers: Vec<String>,
+    /// The receiving node's own index into `peers`/`owners`.
+    pub self_node: usize,
+}
+
+/// `EvolvePlan` payload: the shared plan plus the receiving node's
+/// assigned `(shard, tile)` pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRequest {
+    /// The shared exchange plan (with `self_node` set per recipient).
+    pub plan: ExchangePlan,
+    /// This node's slab tiles (owned rows + ghosts), keyed by shard.
+    pub tiles: Vec<(u64, DenseGrid)>,
+}
+
+/// Node-side accounting for one completed plan, reported in `PlanDone`
+/// and aggregated by the coordinator into the overlap metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PlanStats {
+    /// Fused rounds executed.
+    pub rounds: u64,
+    /// Halo bands pushed to peer nodes (locally deposited bands excluded).
+    pub bands_sent: u64,
+    /// Wire bytes of pushed bands (headers included).
+    pub band_bytes_sent: u64,
+    /// Wire bytes of bands received from peer nodes.
+    pub band_bytes_recv: u64,
+    /// Exchange time hidden behind interior compute (bands in flight
+    /// while the node was computing).
+    pub exchange_hidden_seconds: f64,
+    /// Exchange time *not* hidden: band extraction/send, blocked waits,
+    /// and band application.
+    pub exchange_visible_seconds: f64,
+    /// Time spent in the sharded evolver (interior + boundary compute).
+    pub compute_seconds: f64,
+}
+
+/// `PlanDone` payload: the node's evolved tiles plus its exchange stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanDoneMsg {
+    /// Plan epoch echoed back.
+    pub epoch: u64,
+    /// Evolved `(shard, tile)` pairs (same shapes as assigned).
+    pub tiles: Vec<(u64, DenseGrid)>,
+    /// Node-side exchange accounting.
+    pub stats: PlanStats,
+}
+
+/// One boundary band in flight between peer nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HaloBand {
+    /// Plan epoch.
+    pub epoch: u64,
+    /// Fused round the band belongs to (0-based).
+    pub round: u64,
+    /// Destination shard.
+    pub shard: u64,
+    /// Which ghost rows of the destination tile the band fills.
+    pub side: BandSide,
+    /// Band values, row-major, exactly `count · row_elems` f64s.
+    pub data: Vec<f64>,
+}
+
+fn encode_f64s(w: &mut WireWriter, data: &[f64]) {
+    w.u64(data.len() as u64);
+    for &v in data {
+        w.f64(v);
+    }
+}
+
+fn decode_f64s(r: &mut WireReader<'_>) -> anyhow::Result<Vec<f64>> {
+    let len = r.u64()? as usize;
+    // guard the allocation against a forged length before reading
+    anyhow::ensure!(
+        len.checked_mul(8).map(|b| b <= frame::MAX_FRAME_LEN).unwrap_or(false),
+        "f64 run of {len} value(s) larger than a frame can carry"
+    );
+    let mut data = Vec::with_capacity(len);
+    for _ in 0..len {
+        data.push(r.f64()?);
+    }
+    Ok(data)
+}
+
+fn encode_tiles(w: &mut WireWriter, tiles: &[(u64, DenseGrid)]) {
+    w.u64(tiles.len() as u64);
+    for (shard, tile) in tiles {
+        w.u64(*shard);
+        w.grid(tile);
+    }
+}
+
+fn decode_tiles(r: &mut WireReader<'_>) -> anyhow::Result<Vec<(u64, DenseGrid)>> {
+    let n = r.u64()? as usize;
+    let mut tiles = Vec::new();
+    for _ in 0..n {
+        let shard = r.u64()?;
+        let tile = r.grid()?;
+        tiles.push((shard, tile));
+    }
+    Ok(tiles)
+}
+
+fn encode_plan(w: &mut WireWriter, plan: &ExchangePlan) {
+    w.u64(plan.epoch);
+    encode_spec(w, plan.spec);
+    w.str(&plan.method.to_string());
+    w.str(&plan.engine.to_string());
+    w.u64(plan.steps as u64);
+    w.u64(plan.fuse as u64);
+    w.u64(plan.local_shards as u64);
+    w.u64(plan.band_timeout_ms);
+    w.u8(plan.part.shape.len() as u8);
+    for &n in &plan.part.shape {
+        w.u64(n as u64);
+    }
+    w.u64(plan.part.halo as u64);
+    w.u64(plan.part.slabs.len() as u64);
+    for slab in &plan.part.slabs {
+        w.u64(slab.lo as u64);
+        w.u64(slab.hi as u64);
+        w.u64(slab.ghost_lo as u64);
+        w.u64(slab.ghost_hi as u64);
+    }
+    w.u64(plan.owners.len() as u64);
+    for &o in &plan.owners {
+        w.u64(o as u64);
+    }
+    w.u64(plan.peers.len() as u64);
+    for p in &plan.peers {
+        w.str(p);
+    }
+    w.u64(plan.self_node as u64);
+}
+
+fn decode_plan(r: &mut WireReader<'_>) -> anyhow::Result<ExchangePlan> {
+    let epoch = r.u64()?;
+    let spec = decode_spec(r)?;
+    let method: KernelMethod = r.str()?.parse()?;
+    let engine: Engine = r.str()?.parse()?;
+    let steps = r.u64()? as usize;
+    let fuse = r.u64()? as usize;
+    let local_shards = r.u64()? as usize;
+    let band_timeout_ms = r.u64()?;
+    let dims = r.u8()? as usize;
+    anyhow::ensure!(dims == 2 || dims == 3, "plan shape dims {dims} not in {{2, 3}}");
+    let mut shape = Vec::with_capacity(dims);
+    for _ in 0..dims {
+        shape.push(r.u64()? as usize);
+    }
+    let halo = r.u64()? as usize;
+    let n_slabs = r.u64()? as usize;
+    anyhow::ensure!(n_slabs >= 1, "plan with no slabs");
+    let mut slabs = Vec::new();
+    for _ in 0..n_slabs {
+        let lo = r.u64()? as usize;
+        let hi = r.u64()? as usize;
+        let ghost_lo = r.u64()? as usize;
+        let ghost_hi = r.u64()? as usize;
+        anyhow::ensure!(lo < hi, "plan slab with empty row range [{lo}, {hi})");
+        slabs.push(Slab { lo, hi, ghost_lo, ghost_hi });
+    }
+    let part = Partition { shape, halo, slabs };
+    let n_owners = r.u64()? as usize;
+    anyhow::ensure!(
+        n_owners == part.slabs.len(),
+        "plan has {n_owners} owner(s) for {} slab(s)",
+        part.slabs.len()
+    );
+    let mut owners = Vec::new();
+    for _ in 0..n_owners {
+        owners.push(r.u64()? as usize);
+    }
+    let n_peers = r.u64()? as usize;
+    let mut peers = Vec::new();
+    for _ in 0..n_peers {
+        peers.push(r.str()?);
+    }
+    let self_node = r.u64()? as usize;
+    anyhow::ensure!(
+        self_node < peers.len(),
+        "plan self_node {self_node} out of range for {} peer(s)",
+        peers.len()
+    );
+    anyhow::ensure!(
+        owners.iter().all(|&o| o < peers.len()),
+        "plan owner index out of range for {} peer(s)",
+        peers.len()
+    );
+    Ok(ExchangePlan {
+        epoch,
+        spec,
+        method,
+        engine,
+        steps,
+        fuse,
+        local_shards,
+        band_timeout_ms,
+        part,
+        owners,
+        peers,
+        self_node,
+    })
+}
+
+fn encode_stats(w: &mut WireWriter, st: &PlanStats) {
+    w.u64(st.rounds);
+    w.u64(st.bands_sent);
+    w.u64(st.band_bytes_sent);
+    w.u64(st.band_bytes_recv);
+    w.f64(st.exchange_hidden_seconds);
+    w.f64(st.exchange_visible_seconds);
+    w.f64(st.compute_seconds);
+}
+
+fn decode_stats(r: &mut WireReader<'_>) -> anyhow::Result<PlanStats> {
+    Ok(PlanStats {
+        rounds: r.u64()?,
+        bands_sent: r.u64()?,
+        band_bytes_sent: r.u64()?,
+        band_bytes_recv: r.u64()?,
+        exchange_hidden_seconds: r.f64()?,
+        exchange_visible_seconds: r.f64()?,
+        compute_seconds: r.f64()?,
+    })
+}
+
 /// Every message the cluster protocol speaks.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -293,6 +607,42 @@ pub enum Msg {
     Shutdown,
     /// Shutdown acknowledged (sent before the node closes).
     ShutdownAck,
+    /// Distribute one evolution's exchange plan plus the recipient's
+    /// tiles.
+    EvolvePlan(PlanRequest),
+    /// The node has registered band staging for the plan's epoch and is
+    /// ready to receive pushes.
+    PlanReady {
+        /// Plan epoch echoed back.
+        epoch: u64,
+    },
+    /// All nodes are ready: run the plan's rounds.
+    PlanStart {
+        /// Plan epoch.
+        epoch: u64,
+    },
+    /// The node finished every round of the plan.
+    PlanDone(PlanDoneMsg),
+    /// The plan failed node-side (band timeout, peer loss, …).
+    PlanErr {
+        /// Plan epoch echoed back.
+        epoch: u64,
+        /// The node-side error rendering.
+        error: String,
+    },
+    /// One boundary band, node → node.
+    HaloPush(HaloBand),
+    /// Band receipt acknowledged (tags echoed).
+    HaloAck {
+        /// Plan epoch echoed from the push.
+        epoch: u64,
+        /// Round echoed from the push.
+        round: u64,
+        /// Destination shard echoed from the push.
+        shard: u64,
+        /// Side echoed from the push.
+        side: BandSide,
+    },
 }
 
 impl Msg {
@@ -329,6 +679,45 @@ impl Msg {
             }
             Msg::Shutdown => KIND_SHUTDOWN,
             Msg::ShutdownAck => KIND_SHUTDOWN_ACK,
+            Msg::EvolvePlan(req) => {
+                encode_plan(&mut w, &req.plan);
+                encode_tiles(&mut w, &req.tiles);
+                KIND_EVOLVE_PLAN
+            }
+            Msg::PlanReady { epoch } => {
+                w.u64(*epoch);
+                KIND_PLAN_READY
+            }
+            Msg::PlanStart { epoch } => {
+                w.u64(*epoch);
+                KIND_PLAN_START
+            }
+            Msg::PlanDone(done) => {
+                w.u64(done.epoch);
+                encode_tiles(&mut w, &done.tiles);
+                encode_stats(&mut w, &done.stats);
+                KIND_PLAN_DONE
+            }
+            Msg::PlanErr { epoch, error } => {
+                w.u64(*epoch);
+                w.str(error);
+                KIND_PLAN_ERR
+            }
+            Msg::HaloPush(band) => {
+                w.u64(band.epoch);
+                w.u64(band.round);
+                w.u64(band.shard);
+                w.u8(band.side.to_u8());
+                encode_f64s(&mut w, &band.data);
+                KIND_HALO_PUSH
+            }
+            Msg::HaloAck { epoch, round, shard, side } => {
+                w.u64(*epoch);
+                w.u64(*round);
+                w.u64(*shard);
+                w.u8(side.to_u8());
+                KIND_HALO_ACK
+            }
         };
         (kind, w.buf)
     }
@@ -374,6 +763,39 @@ impl Msg {
             }
             KIND_SHUTDOWN => Msg::Shutdown,
             KIND_SHUTDOWN_ACK => Msg::ShutdownAck,
+            KIND_EVOLVE_PLAN => {
+                let plan = decode_plan(&mut r)?;
+                let tiles = decode_tiles(&mut r)?;
+                Msg::EvolvePlan(PlanRequest { plan, tiles })
+            }
+            KIND_PLAN_READY => Msg::PlanReady { epoch: r.u64()? },
+            KIND_PLAN_START => Msg::PlanStart { epoch: r.u64()? },
+            KIND_PLAN_DONE => {
+                let epoch = r.u64()?;
+                let tiles = decode_tiles(&mut r)?;
+                let stats = decode_stats(&mut r)?;
+                Msg::PlanDone(PlanDoneMsg { epoch, tiles, stats })
+            }
+            KIND_PLAN_ERR => {
+                let epoch = r.u64()?;
+                let error = r.str()?;
+                Msg::PlanErr { epoch, error }
+            }
+            KIND_HALO_PUSH => {
+                let epoch = r.u64()?;
+                let round = r.u64()?;
+                let shard = r.u64()?;
+                let side = BandSide::from_u8(r.u8()?)?;
+                let data = decode_f64s(&mut r)?;
+                Msg::HaloPush(HaloBand { epoch, round, shard, side, data })
+            }
+            KIND_HALO_ACK => {
+                let epoch = r.u64()?;
+                let round = r.u64()?;
+                let shard = r.u64()?;
+                let side = BandSide::from_u8(r.u8()?)?;
+                Msg::HaloAck { epoch, round, shard, side }
+            }
             other => anyhow::bail!("unknown message kind {other}"),
         };
         r.finish()?;
@@ -445,6 +867,99 @@ mod tests {
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg);
         }
+    }
+
+    #[test]
+    fn peer_messages_roundtrip() {
+        let tile = DenseGrid::verification_input(&[8, 5], 3);
+        let plan = ExchangePlan {
+            epoch: 0xDEAD_BEEF,
+            spec: StencilSpec::box2d(2),
+            method: KernelMethod::Taps,
+            engine: Engine::Compiled,
+            steps: 12,
+            fuse: 3,
+            local_shards: 2,
+            band_timeout_ms: 10_000,
+            part: Partition::new(&[24, 5], 3, 6).unwrap(),
+            owners: vec![0, 1, 0],
+            peers: vec!["127.0.0.1:9001".to_string(), "127.0.0.1:9002".to_string()],
+            self_node: 1,
+        };
+        let msgs = [
+            Msg::EvolvePlan(PlanRequest {
+                plan: plan.clone(),
+                tiles: vec![(0, tile.clone()), (2, tile.clone())],
+            }),
+            Msg::PlanReady { epoch: 7 },
+            Msg::PlanStart { epoch: 7 },
+            Msg::PlanDone(PlanDoneMsg {
+                epoch: 7,
+                tiles: vec![(1, tile)],
+                stats: PlanStats {
+                    rounds: 4,
+                    bands_sent: 8,
+                    band_bytes_sent: 4096,
+                    band_bytes_recv: 4096,
+                    exchange_hidden_seconds: 0.25,
+                    exchange_visible_seconds: 0.01,
+                    compute_seconds: 0.5,
+                },
+            }),
+            Msg::PlanErr { epoch: 7, error: "band timeout".to_string() },
+            Msg::HaloPush(HaloBand {
+                epoch: 7,
+                round: 2,
+                shard: 1,
+                side: BandSide::FromUpper,
+                data: vec![1.5, -0.0, f64::MIN_POSITIVE, 3.25],
+            }),
+            Msg::HaloAck { epoch: 7, round: 2, shard: 1, side: BandSide::FromLower },
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn plan_decode_rejects_inconsistent_payloads() {
+        // self_node out of range
+        let plan = ExchangePlan {
+            epoch: 1,
+            spec: StencilSpec::box2d(1),
+            method: KernelMethod::Taps,
+            engine: Engine::Compiled,
+            steps: 2,
+            fuse: 1,
+            local_shards: 0,
+            band_timeout_ms: 1000,
+            part: Partition::new(&[8, 4], 2, 1).unwrap(),
+            owners: vec![0, 0],
+            peers: vec!["127.0.0.1:1".to_string()],
+            self_node: 5,
+        };
+        let (kind, payload) =
+            Msg::EvolvePlan(PlanRequest { plan: plan.clone(), tiles: vec![] }).encode();
+        let err = Msg::decode(kind, &payload).unwrap_err().to_string();
+        assert!(err.contains("self_node"), "{err}");
+
+        // owner index out of range
+        let mut bad = plan.clone();
+        bad.owners = vec![0, 3];
+        bad.self_node = 0;
+        let (kind, payload) = Msg::EvolvePlan(PlanRequest { plan: bad, tiles: vec![] }).encode();
+        let err = Msg::decode(kind, &payload).unwrap_err().to_string();
+        assert!(err.contains("owner index"), "{err}");
+
+        // forged giant band length must refuse before allocating
+        let mut w = WireWriter::new();
+        w.u64(1); // epoch
+        w.u64(0); // round
+        w.u64(0); // shard
+        w.u8(0); // side
+        w.u64(u64::MAX / 2); // band length
+        let err = Msg::decode(KIND_HALO_PUSH, &w.buf).unwrap_err().to_string();
+        assert!(err.contains("larger than a frame"), "{err}");
     }
 
     #[test]

@@ -36,6 +36,85 @@ fn row_range(row: usize, count: usize, rest: usize) -> std::ops::Range<usize> {
     row * rest..(row + count) * rest
 }
 
+/// A contiguous band of tile-local rows: the unit of halo traffic. Both
+/// exchange paths (coordinator-mediated copies and peer-to-peer
+/// `HaloPush` frames) move exactly these bands, so their contents are
+/// identical by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Band {
+    /// First tile-local row of the band.
+    pub row: usize,
+    /// Number of rows.
+    pub count: usize,
+}
+
+impl Band {
+    /// Linear element range of the band within a tile with `rest`
+    /// elements per row.
+    pub fn range(&self, rest: usize) -> std::ops::Range<usize> {
+        row_range(self.row, self.count, rest)
+    }
+}
+
+/// The band of shard `s`'s tile that its *lower* neighbour `s - 1` needs
+/// as upper ghost rows, or `None` when there is no such neighbour (or it
+/// has no upper ghosts).
+pub fn outgoing_band_to_lower(part: &Partition, s: usize) -> Option<Band> {
+    if s == 0 {
+        return None;
+    }
+    let count = part.slabs[s - 1].ghost_hi;
+    if count == 0 {
+        return None;
+    }
+    Some(Band { row: part.slabs[s].ghost_lo, count })
+}
+
+/// The band of shard `s`'s tile that its *upper* neighbour `s + 1` needs
+/// as lower ghost rows, or `None`.
+pub fn outgoing_band_to_upper(part: &Partition, s: usize) -> Option<Band> {
+    if s + 1 >= part.len() {
+        return None;
+    }
+    let count = part.slabs[s + 1].ghost_lo;
+    if count == 0 {
+        return None;
+    }
+    let slab = &part.slabs[s];
+    Some(Band { row: slab.ghost_lo + slab.rows() - count, count })
+}
+
+/// Where shard `s`'s tile stores ghost rows arriving *from* its lower
+/// neighbour, or `None` when it has none.
+pub fn incoming_band_from_lower(part: &Partition, s: usize) -> Option<Band> {
+    let count = part.slabs[s].ghost_lo;
+    if count == 0 {
+        return None;
+    }
+    Some(Band { row: 0, count })
+}
+
+/// Where shard `s`'s tile stores ghost rows arriving *from* its upper
+/// neighbour, or `None` when it has none.
+pub fn incoming_band_from_upper(part: &Partition, s: usize) -> Option<Band> {
+    let slab = &part.slabs[s];
+    let count = slab.ghost_hi;
+    if count == 0 {
+        return None;
+    }
+    Some(Band { row: slab.ghost_lo + slab.rows(), count })
+}
+
+/// Copy a band out of a tile into a fresh buffer.
+pub fn extract_band(tile: &DenseGrid, band: Band, rest: usize) -> Vec<f64> {
+    tile.data[band.range(rest)].to_vec()
+}
+
+/// Copy a previously extracted band into a tile.
+pub fn apply_band(tile: &mut DenseGrid, band: Band, rest: usize, data: &[f64]) {
+    tile.data[band.range(rest)].copy_from_slice(data);
+}
+
 /// Serially refresh every tile's ghost rows from its neighbours' owned
 /// rows. `tiles[s]` must have shape `part.tile_shape(s)`.
 pub fn exchange_serial(part: &Partition, tiles: &mut [DenseGrid]) {
@@ -88,45 +167,32 @@ fn timed_ghost_copy(
 }
 
 /// Source range (in tile `s - 1`) and destination range (in tile `s`) for
-/// shard `s`'s lower ghost rows, or `None` when it has none.
+/// shard `s`'s lower ghost rows, or `None` when it has none. Shard s's
+/// lower ghosts are global rows [lo - ghost_lo, lo), i.e. the last
+/// ghost_lo owned rows of shard s-1 (heights >= halo guarantee they all
+/// belong to that one neighbour).
 fn lower_ghost_copy(
     part: &Partition,
     s: usize,
     rest: usize,
 ) -> Option<(std::ops::Range<usize>, std::ops::Range<usize>)> {
-    let slab = &part.slabs[s];
-    if slab.ghost_lo == 0 {
-        return None;
-    }
-    let prev = &part.slabs[s - 1];
-    // shard s's lower ghosts are global rows [lo - ghost_lo, lo), i.e. the
-    // last ghost_lo owned rows of shard s-1 (heights >= halo guarantee
-    // they all belong to that one neighbour)
-    let src_row = prev.ghost_lo + prev.rows() - slab.ghost_lo;
-    Some((
-        row_range(src_row, slab.ghost_lo, rest),
-        row_range(0, slab.ghost_lo, rest),
-    ))
+    let dst = incoming_band_from_lower(part, s)?;
+    let src = outgoing_band_to_upper(part, s - 1)?;
+    Some((src.range(rest), dst.range(rest)))
 }
 
 /// Source range (in tile `s + 1`) and destination range (in tile `s`) for
-/// shard `s`'s upper ghost rows, or `None` when it has none.
+/// shard `s`'s upper ghost rows, or `None` when it has none. Shard s's
+/// upper ghosts are global rows [hi, hi + ghost_hi), i.e. the first
+/// ghost_hi owned rows of shard s+1.
 fn upper_ghost_copy(
     part: &Partition,
     s: usize,
     rest: usize,
 ) -> Option<(std::ops::Range<usize>, std::ops::Range<usize>)> {
-    let slab = &part.slabs[s];
-    if slab.ghost_hi == 0 {
-        return None;
-    }
-    let next = &part.slabs[s + 1];
-    // shard s's upper ghosts are global rows [hi, hi + ghost_hi), i.e. the
-    // first ghost_hi owned rows of shard s+1
-    Some((
-        row_range(next.ghost_lo, slab.ghost_hi, rest),
-        row_range(slab.ghost_lo + slab.rows(), slab.ghost_hi, rest),
-    ))
+    let dst = incoming_band_from_upper(part, s)?;
+    let src = outgoing_band_to_lower(part, s + 1)?;
+    Some((src.range(rest), dst.range(rest)))
 }
 
 #[cfg(test)]
@@ -263,5 +329,76 @@ mod tests {
             refresh_ghosts(&part, &locked, s);
         }
         assert!(wait_histogram().count() >= before + 2);
+    }
+
+    #[test]
+    fn band_extents_mirror_ghost_geometry() {
+        let part = Partition::new(&[24, 5], 3, 2).unwrap();
+        // edge shards have one neighbour, the middle shard two
+        assert_eq!(outgoing_band_to_lower(&part, 0), None);
+        assert_eq!(incoming_band_from_lower(&part, 0), None);
+        assert_eq!(outgoing_band_to_upper(&part, 2), None);
+        assert_eq!(incoming_band_from_upper(&part, 2), None);
+        // shard 1's outgoing band to shard 0 covers exactly what shard 0
+        // stores as upper ghosts, and vice versa
+        for s in 0..part.len() {
+            if let Some(out) = outgoing_band_to_lower(&part, s) {
+                let inc = incoming_band_from_upper(&part, s - 1).unwrap();
+                assert_eq!(out.count, inc.count, "shard {s} -> lower");
+            }
+            if let Some(out) = outgoing_band_to_upper(&part, s) {
+                let inc = incoming_band_from_lower(&part, s + 1).unwrap();
+                assert_eq!(out.count, inc.count, "shard {s} -> upper");
+            }
+        }
+        // the outgoing band is always within the sender's owned rows
+        for s in 0..part.len() {
+            let slab = &part.slabs[s];
+            for band in [outgoing_band_to_lower(&part, s), outgoing_band_to_upper(&part, s)]
+                .into_iter()
+                .flatten()
+            {
+                assert!(band.row >= slab.ghost_lo, "shard {s}");
+                assert!(band.row + band.count <= slab.ghost_lo + slab.rows(), "shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn extract_apply_band_roundtrips_through_peer_geometry() {
+        // moving every band through extract/apply reproduces the serial
+        // exchange bit-for-bit — the peer path's correctness in miniature
+        let grid = DenseGrid::verification_input(&[18, 6], 11);
+        for (shards, halo) in [(2usize, 1usize), (3, 2), (4, 3)] {
+            let part = Partition::new(&grid.shape, shards, halo).unwrap();
+            let rest = part.row_elems();
+            let mut want = part.extract(&grid);
+            // perturb ghosts so the exchange has something to fix
+            let mut got = want.clone();
+            for (s, t) in got.iter_mut().enumerate() {
+                if let Some(b) = incoming_band_from_lower(&part, s) {
+                    t.data[b.range(rest)].fill(-1.0);
+                }
+                if let Some(b) = incoming_band_from_upper(&part, s) {
+                    t.data[b.range(rest)].fill(-2.0);
+                }
+            }
+            exchange_serial(&part, &mut want);
+            // peer path: extract each outgoing band, apply at the receiver
+            let src = got.clone();
+            for s in 0..part.len() {
+                if let Some(out) = outgoing_band_to_lower(&part, s) {
+                    let data = extract_band(&src[s], out, rest);
+                    let inc = incoming_band_from_upper(&part, s - 1).unwrap();
+                    apply_band(&mut got[s - 1], inc, rest, &data);
+                }
+                if let Some(out) = outgoing_band_to_upper(&part, s) {
+                    let data = extract_band(&src[s], out, rest);
+                    let inc = incoming_band_from_lower(&part, s + 1).unwrap();
+                    apply_band(&mut got[s + 1], inc, rest, &data);
+                }
+            }
+            assert_eq!(got, want, "x{shards} halo {halo}");
+        }
     }
 }

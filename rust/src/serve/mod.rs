@@ -35,10 +35,13 @@
 //!   also hosts the PJRT artifact service absorbed from `coordinator`.
 //! - [`cluster`] — the same machinery scaled from one process to a
 //!   fleet: a std-only framed TCP protocol, worker nodes wrapping this
-//!   module's [`ShardedEvolver`], and a coordinator that places slabs,
-//!   mediates `order × T`-deep halo exchange once per T steps, and
-//!   re-places work on node loss — bitwise identical to the
-//!   single-process path.
+//!   module's [`ShardedEvolver`], and a coordinator that places slabs
+//!   and re-places work on node loss. Two exchange paths, both bitwise
+//!   identical to the single-process path: **peer** (steady-state
+//!   default — nodes push `order × T`-deep boundary bands directly to
+//!   each other once per T steps, overlapped with interior compute)
+//!   and **mediated** (tiles round-trip through the coordinator; the
+//!   automatic fallback when a peer plan fails).
 //! - [`metrics`] — latency/throughput/traffic counters reported as JSON,
 //!   including per-request kernel wall-clock with p50/p99; every
 //!   recorder also mirrors into the process-global
@@ -63,7 +66,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod service;
 
-pub use cluster::{ClusterReport, Coordinator, NodeConfig, NodeHandle};
+pub use cluster::{ClusterReport, Coordinator, ExchangeMode, NodeConfig, NodeHandle};
 pub use metrics::{LatencyRecorder, ServiceMetrics};
 pub use partition::{Partition, Slab};
 pub use pool::WorkerPool;

@@ -1,9 +1,13 @@
 //! Integration tests for the distributed serving fleet: frame-codec
 //! round-trips and fuzz over random payloads, decoder rejection of
 //! truncated/stalled/wrong-version/oversized frames over real TCP
-//! streams, fleet-vs-single-process bitwise equality, and the node-loss
+//! streams, fleet-vs-single-process bitwise equality on both exchange
+//! paths (coordinator-mediated and peer-to-peer), the node-loss
 //! property: kill a worker mid-evolution and the coordinator re-places
-//! its slabs and still produces the oracle's bits.
+//! its slabs and still produces the oracle's bits, the peer-loss
+//! property: kill a worker mid-*peer*-exchange and the coordinator
+//! falls back to the mediated path and still produces the oracle's
+//! bits, and the cross-version handshake error.
 //!
 //! Registry state is process-global and `cargo test` runs tests
 //! concurrently in one process, so metric assertions here are about
@@ -12,10 +16,10 @@
 use stencil_matrix::kir::Engine;
 use stencil_matrix::serve::cluster::{frame, node, proto};
 use stencil_matrix::serve::{
-    Coordinator, KernelMethod, NodeConfig, PlanCache, ShardedEvolver, WorkerPool,
+    Coordinator, ExchangeMode, KernelMethod, NodeConfig, PlanCache, ShardedEvolver, WorkerPool,
 };
 use stencil_matrix::stencil::{reference, CoeffTensor, DenseGrid, StencilSpec};
-use std::io::{Cursor, Write};
+use std::io::{Cursor, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
@@ -324,6 +328,196 @@ fn losing_all_nodes_fails_cleanly() {
     for h in &mut handles {
         h.shutdown();
     }
+}
+
+/// The PR 10 tentpole contract, property-tested: peer-to-peer exchange
+/// (nodes trading `order·T`-deep boundary bands directly, interior
+/// computed while bands are in flight) is bitwise identical to the
+/// single-process sharded evolver — across random specs, grid sizes,
+/// step counts, fuse depths, node counts, and shard counts.
+#[test]
+fn peer_exchange_is_bitwise_identical_across_random_configs() {
+    let engine = Engine::default();
+    let ev = twin_evolver(engine);
+    let mut rng = Rng(0x0DD5_EED5);
+    for case in 0..6 {
+        let spec = match rng.next() % 4 {
+            0 => StencilSpec::box2d(1),
+            1 => StencilSpec::star2d(1),
+            2 => StencilSpec::box2d(2),
+            _ => StencilSpec::star2d(2),
+        };
+        let n = 24 + (rng.next() % 16) as usize;
+        let steps = 1 + (rng.next() % 7) as usize;
+        let fuse = 1 + (rng.next() % 3) as usize;
+        let nodes = 1 + (rng.next() % 3) as usize;
+        let shards = nodes + (rng.next() as usize) % (nodes + 2);
+        let grid = DenseGrid::verification_input(&[n + 2 * spec.order; 2], rng.next());
+
+        let mut handles = Vec::new();
+        for _ in 0..nodes {
+            handles.push(
+                node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() })
+                    .unwrap(),
+            );
+        }
+        let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+        let (fleet, report) = cluster
+            .evolve_exchange(
+                ExchangeMode::Peer,
+                spec,
+                &grid,
+                steps,
+                shards,
+                KernelMethod::Taps,
+                fuse,
+            )
+            .unwrap();
+        assert_eq!(report.path, ExchangeMode::Peer, "case {case}: wrong path taken");
+        assert!(!report.fell_back, "case {case}: peer exchange fell back on a healthy fleet");
+
+        let (twin, _, _) =
+            ev.evolve_fused(spec, &grid, steps, shards, KernelMethod::Taps, fuse).unwrap();
+        assert_eq!(
+            fleet.data, twin.data,
+            "case {case} ({spec} n={n} steps={steps} T={fuse} nodes={nodes} shards={shards}): \
+             peer exchange diverged bitwise from the single-process evolver"
+        );
+        let coeffs = CoeffTensor::paper_default(spec);
+        let want = reference::evolve(&coeffs, &grid, steps);
+        assert_eq!(
+            fleet.data, want.data,
+            "case {case}: peer exchange diverged bitwise from the scalar oracle"
+        );
+
+        cluster.shutdown_nodes();
+        for h in &mut handles {
+            h.shutdown();
+        }
+    }
+}
+
+/// Peer exchange on a multi-node fleet actually moves bands node-to-node
+/// (nonzero band bytes), performs the same number of logical halo
+/// exchanges as the in-process fused path, and reports a sane overlap
+/// accounting.
+#[test]
+fn peer_exchange_moves_bands_and_reports_overlap() {
+    let engine = Engine::default();
+    let spec = StencilSpec::box2d(1);
+    let grid = DenseGrid::verification_input(&[34, 34], 0xBAD5);
+    let mut handles = vec![
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+    ];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+
+    // steps=8, T=2 → 4 rounds → 3 inter-round exchanges; alternating
+    // placement puts neighbouring slabs on different nodes, so bands
+    // must cross the wire
+    let (fleet, report) = cluster
+        .evolve_exchange(ExchangeMode::Peer, spec, &grid, 8, 4, KernelMethod::Taps, 2)
+        .unwrap();
+    assert_eq!(report.path, ExchangeMode::Peer);
+    assert!(!report.fell_back);
+    assert_eq!(report.fuse.halo_exchanges, 3, "{report:?}");
+    assert!(report.band_bytes > 0, "no bands crossed the wire: {report:?}");
+    let ratio = report.overlap_ratio();
+    assert!((0.0..=1.0).contains(&ratio), "overlap ratio {ratio} out of range");
+
+    let ev = twin_evolver(engine);
+    let (twin, _, _) = ev.evolve_fused(spec, &grid, 8, 4, KernelMethod::Taps, 2).unwrap();
+    assert_eq!(fleet.data, twin.data);
+
+    cluster.shutdown_nodes();
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
+
+/// The peer-loss property: a node that dies mid-peer-exchange (goes
+/// silent partway through the round loop) makes the coordinator fall
+/// back to the coordinator-mediated path — and the final grid is still
+/// bitwise equal to the oracle and the single-process evolver.
+#[test]
+fn killing_a_node_mid_peer_exchange_falls_back_to_mediated_bitwise() {
+    let engine = Engine::default();
+    let spec = StencilSpec::star2d(1);
+    let n = 36;
+    let steps = 6;
+    let shards = 6;
+    let grid = DenseGrid::verification_input(&[n + 2, n + 2], 0xD1ED);
+
+    let mut handles = vec![
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+        // dies at peer round 1 of 3 (steps=6, T=2), after bands from
+        // round 0 are already in flight
+        node::spawn_local(NodeConfig {
+            workers: 1,
+            engine,
+            fail_after: Some(1),
+            ..NodeConfig::default()
+        })
+        .unwrap(),
+        node::spawn_local(NodeConfig { workers: 1, engine, ..NodeConfig::default() }).unwrap(),
+    ];
+    let mut cluster = Coordinator::connect_local(&handles, engine).unwrap();
+    // band timeout tracks this, so survivors report the lost peer fast
+    cluster.set_rpc_timeout(Duration::from_secs(5));
+    assert_eq!(cluster.nodes_alive(), 3);
+
+    let (fleet, report) = cluster
+        .evolve_exchange(ExchangeMode::Peer, spec, &grid, steps, shards, KernelMethod::Taps, 2)
+        .unwrap();
+    assert!(report.fell_back, "the dying node never forced a fallback: {report:?}");
+    assert_eq!(report.path, ExchangeMode::Mediated, "fallback must land on the mediated path");
+    assert!(report.nodes_alive < 3, "the fault-injected node still counts as alive");
+
+    let coeffs = CoeffTensor::paper_default(spec);
+    let want = reference::evolve(&coeffs, &grid, steps);
+    assert_eq!(
+        fleet.data, want.data,
+        "peer exchange with a node lost mid-run diverged bitwise from the oracle"
+    );
+    let ev = twin_evolver(engine);
+    let (twin, _, _) = ev.evolve_fused(spec, &grid, steps, shards, KernelMethod::Taps, 2).unwrap();
+    assert_eq!(fleet.data, twin.data);
+
+    cluster.shutdown_nodes();
+    for h in &mut handles {
+        h.shutdown();
+    }
+}
+
+/// Version skew between coordinator and node is a clear, actionable
+/// handshake error naming both versions — not a decode error, not a
+/// silent dead node.
+#[test]
+fn version_skew_fails_the_handshake_with_a_clear_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake_old_node = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // absorb the coordinator's Ping, then answer with a version-1
+        // frame header, as a stale PR 9 build would
+        let mut buf = [0u8; 64];
+        let _ = s.read(&mut buf);
+        let mut h = frame::encode_header(2, 0).unwrap();
+        h[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let _ = s.write_all(&h);
+        let _ = s.flush();
+        // keep the socket open long enough for the error to be about
+        // the version, not a reset
+        std::thread::sleep(Duration::from_millis(200));
+    });
+
+    let err =
+        Coordinator::connect(&[addr.to_string()], Engine::default()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("failed the protocol handshake"), "{msg}");
+    assert!(msg.contains("unsupported protocol version 1"), "{msg}");
+    assert!(msg.contains("must run the same build"), "{msg}");
+    fake_old_node.join().unwrap();
 }
 
 /// Pipelining across one connection: many chunks sent back-to-back on a
